@@ -1,0 +1,110 @@
+//! Interactive chat over the speculative-decoding stack: type SynthChat
+//! instructions (in-vocab words), watch the draft+target pair answer, with
+//! per-turn speculation statistics.
+//!
+//! ```sh
+//! cargo run --release --example chat
+//! > tell me about <topic word>     (see `--list-words`)
+//! ```
+
+use std::io::{BufRead, Write};
+use std::sync::Arc;
+
+use specd::artifacts::Manifest;
+use specd::cli::Args;
+use specd::config::SamplingConfig;
+use specd::rng::Pcg64;
+use specd::runtime::Runtime;
+use specd::spec::SpecDecoder;
+use specd::tokenizer::{Tokenizer, EOS};
+
+fn main() -> specd::Result<()> {
+    let args = Args::new("chat", "interactive speculative-decoding chat")
+        .opt("artifacts", "artifacts", "artifact bundle directory")
+        .opt("draft", "", "draft model (default: best tvdpp checkpoint)")
+        .opt("gamma", "3", "speculation depth")
+        .opt("temperature", "0.6", "sampling temperature")
+        .opt("top-p", "0.9", "nucleus mass")
+        .opt("max-new", "48", "max new tokens per turn")
+        .flag("list-words", "print the vocabulary and exit")
+        .parse()?;
+
+    let manifest = Manifest::load(args.str("artifacts"))?;
+    let tokenizer = Tokenizer::load(&manifest.vocab_path())?;
+
+    if args.flag("list-words") {
+        let mut words: Vec<&str> =
+            (5..tokenizer.vocab_size() as u32).map(|i| tokenizer.word(i)).collect();
+        words.sort_unstable();
+        for chunk in words.chunks(10) {
+            println!("{}", chunk.join(" "));
+        }
+        return Ok(());
+    }
+
+    let rt = Arc::new(Runtime::new()?);
+    let draft_arch = rt.load_arch(&manifest, "draft")?;
+    let target_arch = rt.load_arch(&manifest, "target")?;
+    let target = rt.load_model(&manifest, &target_arch, "target")?;
+    let draft_name = if args.str("draft").is_empty() {
+        manifest
+            .draft_models()
+            .into_iter()
+            .filter(|n| n.contains("tvdpp")).max()
+            .unwrap_or_else(|| "draft_base".to_string())
+    } else {
+        args.str("draft").to_string()
+    };
+    let draft = rt.load_model(&manifest, &draft_arch, &draft_name)?;
+    let gamma = args.usize("gamma")?;
+    let decoder = SpecDecoder::new(&draft, &target, gamma)?;
+    let cfg = SamplingConfig::random(
+        args.f64("temperature")? as f32,
+        args.f64("top-p")? as f32,
+        1,
+    );
+
+    println!("specd chat — draft {draft_name}, gamma {gamma}. Ctrl-D to exit.");
+    println!("(SynthChat is a synthetic language; try `--list-words` for vocabulary)");
+    let stdin = std::io::stdin();
+    let mut turn = 0u64;
+    loop {
+        print!("> ");
+        std::io::stdout().flush().ok();
+        let mut line = String::new();
+        if stdin.lock().read_line(&mut line).unwrap_or(0) == 0 {
+            println!();
+            break;
+        }
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let instr = match tokenizer.encode(line) {
+            Ok(t) => t,
+            Err(e) => {
+                println!("  (cannot tokenize: {e})");
+                continue;
+            }
+        };
+        let prompt = tokenizer.chat_prompt(&instr);
+        let mut rng = Pcg64::new(0xC4A7 + turn);
+        turn += 1;
+        let t0 = std::time::Instant::now();
+        match decoder.generate(&prompt, args.usize("max-new")?, &cfg, &mut rng) {
+            Ok((out, stats)) => {
+                let shown: Vec<u32> = out.iter().copied().filter(|&t| t != EOS).collect();
+                println!("{}", tokenizer.decode(&shown));
+                println!(
+                    "  [{} tok in {:.2}s | tau {:.2} | acceptance {:.2}]",
+                    shown.len(),
+                    t0.elapsed().as_secs_f64(),
+                    stats.block_efficiency(),
+                    stats.acceptance_rate()
+                );
+            }
+            Err(e) => println!("  (generation failed: {e})"),
+        }
+    }
+    Ok(())
+}

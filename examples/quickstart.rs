@@ -1,0 +1,79 @@
+//! Quickstart: load the artifact bundle, run one prompt through
+//! speculative decoding, and compare with the autoregressive baseline.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use specd::artifacts::Manifest;
+use specd::baseline::ArDecoder;
+use specd::config::SamplingConfig;
+use specd::metrics::mbsu;
+use specd::rng::Pcg64;
+use specd::runtime::Runtime;
+use specd::spec::SpecDecoder;
+use specd::tokenizer::Tokenizer;
+use specd::workload::EvalSuite;
+
+fn main() -> specd::Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".to_string());
+    let manifest = Manifest::load(&dir)?;
+
+    // 1. Bring up the PJRT runtime and compile the two architectures.
+    let rt = Arc::new(Runtime::new()?);
+    println!("PJRT platform: {}", rt.platform());
+    let draft_arch = rt.load_arch(&manifest, "draft")?;
+    let target_arch = rt.load_arch(&manifest, "target")?;
+
+    // 2. Load weights: the chat-tuned target + the TVD++-aligned draft.
+    let target = rt.load_model(&manifest, &target_arch, "target")?;
+    let draft_name = manifest
+        .draft_models()
+        .into_iter()
+        .filter(|n| n.contains("tvdpp")).max()
+        .unwrap_or_else(|| "draft_base".to_string());
+    let draft = rt.load_model(&manifest, &draft_arch, &draft_name)?;
+    println!(
+        "target: {} params | draft: {} ({} params, c = {:.3}%)",
+        target.params,
+        draft.name,
+        draft.params,
+        draft.c_ratio * 100.0
+    );
+
+    // 3. Pick an open-ended prompt and decode speculatively (gamma = 3).
+    let tokenizer = Tokenizer::load(&manifest.vocab_path())?;
+    let suite = EvalSuite::load(&manifest.root.join("eval_prompts.json"))?;
+    let ex = &suite.take("dolly", 1)?[0];
+    let cfg = SamplingConfig::for_task("dolly", 42);
+    let gamma = 3;
+
+    println!("\nprompt: {}", tokenizer.decode(&ex.prompt));
+
+    let spec = SpecDecoder::new(&draft, &target, gamma)?;
+    let mut rng = Pcg64::new(42);
+    let t0 = std::time::Instant::now();
+    let (out, stats) = spec.generate(&ex.prompt, 48, &cfg, &mut rng)?;
+    let sd_secs = t0.elapsed().as_secs_f64();
+    println!("speculative output: {}", tokenizer.decode(&out));
+
+    // 4. Baseline for comparison.
+    let ar = ArDecoder::new(&target);
+    let mut rng = Pcg64::new(42);
+    let (ar_out, _, ar_rate) = ar.generate(&ex.prompt, 48, &cfg, &mut rng)?;
+    println!("baseline output:    {}", tokenizer.decode(&ar_out));
+
+    let tau = stats.block_efficiency();
+    println!("\nblock efficiency tau = {tau:.3} (max {})", gamma + 1);
+    println!("acceptance rate      = {:.3}", stats.acceptance_rate());
+    println!("MBSU                 = {:.3}", mbsu(tau, draft.c_ratio, gamma));
+    println!(
+        "token rate           = {:.1} tok/s SD vs {:.1} tok/s AR ({:.2}x)",
+        out.len() as f64 / sd_secs,
+        ar_rate.tokens_per_sec(),
+        (out.len() as f64 / sd_secs) / ar_rate.tokens_per_sec()
+    );
+    Ok(())
+}

@@ -1,0 +1,167 @@
+//! End-to-end serving driver (the repository's headline validation run):
+//! replays a Poisson-arrival trace of chat requests through the
+//! coordinator with speculative decoding, then replays the identical trace
+//! with autoregressive decoding, and reports latency/throughput for both.
+//!
+//! ```sh
+//! cargo run --release --example serve_benchmark -- \
+//!     --requests 32 --rate 2.0 --max-batch 4 --gamma 3
+//! ```
+//!
+//! The numbers from this binary are recorded in EXPERIMENTS.md.
+
+use std::sync::Arc;
+
+use specd::artifacts::Manifest;
+use specd::baseline::ArDecoder;
+use specd::cli::Args;
+use specd::config::{RunConfig, SamplingConfig};
+use specd::coordinator::{Coordinator, Request, Response};
+use specd::exec;
+use specd::metrics::ServeMetrics;
+use specd::rng::Pcg64;
+use specd::runtime::Runtime;
+use specd::spec::SpecDecoder;
+use specd::workload::{build_trace, EvalSuite, TraceConfig, TraceRequest};
+
+fn main() -> specd::Result<()> {
+    let args = Args::new("serve_benchmark", "trace-replay serving benchmark")
+        .opt("artifacts", "artifacts", "artifact bundle directory")
+        .opt("draft", "", "draft model (default: best tvdpp checkpoint)")
+        .opt("gamma", "3", "speculation depth")
+        .opt("requests", "32", "number of requests")
+        .opt("rate", "2.0", "Poisson arrival rate, req/s")
+        .opt("max-batch", "4", "max concurrent sequences")
+        .opt("max-new", "32", "max new tokens per request")
+        .opt("seed", "0", "trace seed")
+        .opt("mix", "chat", "workload mix: chat (dolly-only) | paper (dolly/cnndm/xsum)")
+        .flag("skip-baseline", "skip the autoregressive replay")
+        .parse()?;
+
+    let manifest = Manifest::load(args.str("artifacts"))?;
+    let rt = Arc::new(Runtime::new()?);
+    let draft_arch = rt.load_arch(&manifest, "draft")?;
+    let target_arch = rt.load_arch(&manifest, "target")?;
+    let target = rt.load_model(&manifest, &target_arch, "target")?;
+    let draft_name = if args.str("draft").is_empty() {
+        manifest
+            .draft_models()
+            .into_iter()
+            .filter(|n| n.contains("tvdpp")).max()
+            .unwrap_or_else(|| "draft_base".to_string())
+    } else {
+        args.str("draft").to_string()
+    };
+    let draft = rt.load_model(&manifest, &draft_arch, &draft_name)?;
+    let suite = EvalSuite::load(&manifest.root.join("eval_prompts.json"))?;
+
+    // "chat" = the paper's motivating deployment (open-ended dialogue, the
+    // distribution the draft is aligned to); "paper" = the Figure 1 task mix.
+    let mix = match args.str("mix") {
+        "paper" => TraceConfig::default().mix,
+        _ => vec![("dolly".to_string(), 1.0)],
+    };
+    let trace_cfg = TraceConfig {
+        rate: args.f64("rate")?,
+        n_requests: args.usize("requests")?,
+        max_new: args.usize("max-new")?,
+        seed: args.u64("seed")?,
+        mix,
+    };
+    let trace = build_trace(&suite, &trace_cfg)?;
+    println!(
+        "trace: {} requests @ {:.1} req/s over {:?} (draft {}, gamma {})",
+        trace.len(),
+        trace_cfg.rate,
+        trace.last().map(|r| r.arrival).unwrap_or_default(),
+        draft_name,
+        args.usize("gamma")?
+    );
+
+    // --- speculative serving run -----------------------------------------
+    let gamma = args.usize("gamma")?;
+    let decoder = SpecDecoder::new(&draft, &target, gamma)?;
+    let cfg = RunConfig {
+        gamma,
+        max_batch: args.usize("max-batch")?,
+        max_new_tokens: trace_cfg.max_new,
+        ..RunConfig::default()
+    };
+    let coord = Coordinator::new(decoder, cfg)?;
+    let sd = replay(&coord, &trace)?;
+    println!("\n== speculative decoding ==\n{}", sd.report());
+
+    // --- autoregressive replay (sequential engine, same prompts) ---------
+    if !args.flag("skip-baseline") {
+        let ar = ar_replay(&target, &trace)?;
+        println!("\n== autoregressive baseline ==\n{}", ar.report());
+        let ratio = sd.throughput_tok_s() / ar.throughput_tok_s().max(1e-9);
+        let p50 = |m: &ServeMetrics| m.latency_stats().map(|s| s.p50).unwrap_or(0.0);
+        println!(
+            "\nSD/AR: throughput x{ratio:.2}, p50 latency {:.0}ms -> {:.0}ms",
+            p50(&ar) * 1e3,
+            p50(&sd) * 1e3
+        );
+    }
+    Ok(())
+}
+
+/// Feed the trace through the coordinator with real arrival timing.
+fn replay(coord: &Coordinator, trace: &[TraceRequest]) -> specd::Result<ServeMetrics> {
+    let (req_tx, req_rx) = exec::bounded::<Request>(64);
+    let (resp_tx, resp_rx) = exec::bounded::<Response>(256);
+    let trace_owned: Vec<TraceRequest> = trace.to_vec();
+    let client = std::thread::spawn(move || {
+        let t0 = std::time::Instant::now();
+        for (i, r) in trace_owned.into_iter().enumerate() {
+            if let Some(wait) = r.arrival.checked_sub(t0.elapsed()) {
+                std::thread::sleep(wait);
+            }
+            let _ = req_tx.send(Request {
+                id: i as u64,
+                prompt: r.prompt,
+                max_new: r.max_new,
+                sampling: SamplingConfig::for_task(&r.task, i as u64),
+            });
+        }
+    });
+    let metrics = coord.serve(req_rx, resp_tx)?;
+    client.join().expect("client thread");
+    let mut failures = 0;
+    while let Some(r) = resp_rx.try_recv() {
+        if r.error.is_some() {
+            failures += 1;
+        }
+    }
+    if failures > 0 {
+        eprintln!("warning: {failures} failed requests");
+    }
+    Ok(metrics)
+}
+
+/// Sequential autoregressive replay (the no-draft deployment).
+fn ar_replay(target: &specd::runtime::Model, trace: &[TraceRequest]) -> specd::Result<ServeMetrics> {
+    let decoder = ArDecoder::new(target);
+    let mut metrics = ServeMetrics::default();
+    let wall0 = std::time::Instant::now();
+    // Arrivals matter for latency: requests queue behind the sequential decoder.
+    for (i, r) in trace.iter().enumerate() {
+        if let Some(wait) = r.arrival.checked_sub(wall0.elapsed()) {
+            std::thread::sleep(wait);
+        }
+        let cfg = SamplingConfig::for_task(&r.task, i as u64);
+        let mut rng = Pcg64::with_stream(cfg.seed ^ i as u64, 0x5e0e);
+        let (out, _stats, _rate) = decoder.generate(&r.prompt, r.max_new, &cfg, &mut rng)?;
+        // Latency from the request's *scheduled arrival*: a sequential
+        // decoder makes later requests queue behind earlier ones, and that
+        // wait is part of the user-visible latency (the coordinator's
+        // numbers include the analogous interleaving delay).
+        let latency = (wall0.elapsed() - r.arrival).as_secs_f64().max(0.0);
+        metrics.total_requests += 1;
+        metrics.total_new_tokens += out.len();
+        metrics.request_latency.push(latency);
+        metrics.ttft.push(latency / out.len().max(1) as f64); // first AR token
+    }
+    metrics.wall_seconds = wall0.elapsed().as_secs_f64();
+    Ok(metrics)
+}

@@ -1,0 +1,1 @@
+"""specd build-time python package: L1 kernels, L2 model, training, AOT export."""

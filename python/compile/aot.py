@@ -1,0 +1,297 @@
+"""AOT export: lower the L2/L1 stack to HLO text + pack weights for Rust.
+
+Interchange contract with the Rust runtime (rust/src/runtime, rust/src/weights):
+
+- HLO **text**, not serialized HloModuleProto: jax >= 0.5 emits protos with
+  64-bit instruction ids that the crate's xla_extension 0.5.1 rejects; the
+  text parser reassigns ids (see /opt/xla-example/README.md).
+- Weights are *runtime arguments*, not HLO constants. Consequence: every
+  draft variant (base + 3 losses x 4 checkpoints) shares ONE compiled
+  executable per entry point; swapping models is swapping device buffers.
+- Three entry points per architecture, all instances of
+  forward_cached(params, kv, tokens[T], pos) -> (logits[T, V], kv'):
+      prefill  T = 32   (prompt ingestion, chunked)
+      verify   T = 8    (target-side scoring of gamma+1 <= 8 tokens)
+      decode   T = 1    (draft autoregression + AR baseline)
+  Argument order = sorted parameter names, then kv, tokens, pos — recorded
+  in manifest.json and asserted by the Rust loader.
+- weights .bin format "SPCD1": per tensor, name + dims + raw f32 LE bytes.
+- golden.json: input/output probes for every exported (model, entry) pair so
+  the Rust integration tests can pin end-to-end numerics bit-for-bit-ish
+  (1e-4 tolerance; CPU PJRT on both sides).
+
+Run: cd python && python -m compile.aot --train-dir ../artifacts/train --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import struct
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .config import (DECODE_BLOCK, DRAFT_CONFIG, PREFILL_BLOCK, TARGET_CONFIG,
+                     VERIFY_BLOCK, ModelConfig)
+from .data import TASKS, SynthChat, build_vocab
+
+ENTRY_POINTS = {"prefill": PREFILL_BLOCK, "verify": VERIFY_BLOCK, "decode": DECODE_BLOCK}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange).
+
+    return_tuple=False: every entry point returns exactly ONE array (the
+    state vector), so PJRT hands back a plain (non-tuple) device buffer that
+    can be fed straight into the next execute_b call — the KV cache never
+    crosses the device boundary (see `state layout` below).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def kv_len(cfg: ModelConfig) -> int:
+    return cfg.n_layers * 2 * cfg.max_seq * cfg.n_heads * cfg.head_dim
+
+
+def state_len(cfg: ModelConfig) -> int:
+    """State layout: [ kv (kv_len) | logits region (PREFILL_BLOCK * V) ].
+
+    All three entry points share this shape so a sequence's device buffer
+    threads through prefill -> decode/verify without reshaping. An entry
+    with block T writes its [T, V] logits at offset kv_len; the Rust side
+    reads exactly that slice via copy_raw_to_host_sync(offset=kv_len).
+    """
+    return kv_len(cfg) + PREFILL_BLOCK * cfg.vocab_size
+
+
+def lower_entry(cfg: ModelConfig, block: int, use_pallas: bool = True) -> str:
+    """Lower forward_cached at a fixed block size to HLO text."""
+    names = model.param_names(cfg)
+    kvn = kv_len(cfg)
+    sl = state_len(cfg)
+
+    def fn(flat_params: List[jax.Array], state, tokens, pos):
+        params = dict(zip(names, flat_params))
+        kv = state[:kvn].reshape(
+            (cfg.n_layers, 2, cfg.max_seq, cfg.n_heads, cfg.head_dim)
+        )
+        logits, kv2 = model.forward_cached(params, cfg, tokens, kv, pos, use_pallas=use_pallas)
+        tail = state[kvn + block * cfg.vocab_size :]
+        return jnp.concatenate([kv2.reshape(-1), logits.reshape(-1), tail])
+
+    p_specs = [
+        jax.ShapeDtypeStruct(model.param_shape(cfg, n), jnp.float32) for n in names
+    ]
+    state_spec = jax.ShapeDtypeStruct((sl,), jnp.float32)
+    tok_spec = jax.ShapeDtypeStruct((block,), jnp.int32)
+    pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    # NOT donated: input-output aliasing survives the HLO-text roundtrip
+    # (`input_output_alias=...`), but measured 15-40% SLOWER on the TFRT CPU
+    # client — the Rust side's buffer handle keeps a reference alive, so
+    # PJRT copies defensively on every donated call. See EXPERIMENTS.md
+    # §Perf iteration log.
+    lowered = jax.jit(fn).lower(p_specs, state_spec, tok_spec, pos_spec)
+    return to_hlo_text(lowered)
+
+
+def lower_extract(cfg: ModelConfig) -> str:
+    """Logits-extraction entry: `fn(state) -> logits_region`.
+
+    The TFRT CPU PJRT client implements neither partial raw reads nor cheap
+    literal slicing, so reading logits out of a step's output would cost a
+    full state-sized device->host copy (1.6MB for the target, per call).
+    Instead this 2-op executable slices the [PREFILL_BLOCK * V] logits
+    region on device; the host then downloads only ~48KB. §Perf iteration 2
+    in EXPERIMENTS.md: -24% target decode latency.
+    """
+    kvn = kv_len(cfg)
+    n = PREFILL_BLOCK * cfg.vocab_size
+
+    def fn(state):
+        return jax.lax.dynamic_slice(state, (kvn,), (n,))
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((state_len(cfg),), jnp.float32))
+    return to_hlo_text(lowered)
+
+
+# ---------------------------------------------------------------------------
+# Weights binary format ("SPCD1")
+# ---------------------------------------------------------------------------
+
+MAGIC = b"SPCD1\x00"
+
+
+def write_weights(path: str, params: Dict[str, np.ndarray]) -> None:
+    """Canonical order = sorted names (must match lower_entry's flat order)."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        names = sorted(params.keys())
+        f.write(struct.pack("<I", len(names)))
+        for name in names:
+            arr = np.ascontiguousarray(np.asarray(params[name], dtype=np.float32))
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes(order="C"))
+
+
+def load_npz(path: str) -> Dict[str, np.ndarray]:
+    with np.load(path) as z:
+        return {k: z[k] for k in z.files}
+
+
+# ---------------------------------------------------------------------------
+# Golden probes for the Rust integration tests
+# ---------------------------------------------------------------------------
+
+
+def golden_probe(cfg: ModelConfig, params: Dict[str, np.ndarray], entry: str, block: int):
+    """Deterministic probe: fixed tokens/pos through the pallas path."""
+    rng = np.random.default_rng(42)
+    names = model.param_names(cfg)
+    jparams = {k: jnp.asarray(v) for k, v in params.items()}
+    kv = model.init_kv(cfg)
+    tokens = jnp.asarray(rng.integers(5, cfg.vocab_size, size=block).astype(np.int32))
+    pos = jnp.asarray(0, jnp.int32)
+    logits, kv2 = model.forward_cached(jparams, cfg, tokens, kv, pos, use_pallas=True)
+    # Second call continuing at pos=block exercises cache reuse.
+    tokens2 = jnp.asarray(rng.integers(5, cfg.vocab_size, size=block).astype(np.int32))
+    logits2, _ = model.forward_cached(jparams, cfg, tokens2, kv2, jnp.asarray(block, jnp.int32),
+                                      use_pallas=True)
+    return {
+        "entry": entry,
+        "tokens": np.asarray(tokens).tolist(),
+        "tokens2": np.asarray(tokens2).tolist(),
+        # Store a slice of each logits row (full rows would bloat the file).
+        "logits_head": np.asarray(logits[:, :8]).round(5).tolist(),
+        "logits2_head": np.asarray(logits2[:, :8]).round(5).tolist(),
+        "logits_last_argmax": int(np.argmax(np.asarray(logits)[-1])),
+        "logits2_last_argmax": int(np.argmax(np.asarray(logits2)[-1])),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def export_eval_prompts(out_dir: str, per_task: int = 48, seed: int = 20240601) -> None:
+    """Evaluation prompt sets for the Rust benches (Figures 1-3).
+
+    Drawn from the same SynthChat task distributions as training/distillation
+    but with a held-out seed, so the Rust evaluator measures the exact task
+    families the paper evaluates (dolly/xsum/cnndm + the OOD wmt task)."""
+    synth = SynthChat()
+    out = {}
+    for task in TASKS:
+        exs = synth.seed_prompts(seed + hash(task) % 1000, per_task, (task,))
+        out[task] = [
+            {"prompt": ex.prompt, "reference": ex.response, "topic": ex.topic}
+            for ex in exs
+        ]
+    with open(os.path.join(out_dir, "eval_prompts.json"), "w") as f:
+        json.dump(out, f)
+    print(f"[aot] eval prompts: {per_task}/task x {len(TASKS)} tasks", flush=True)
+
+
+def export(train_dir: str, out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    vocab = build_vocab()
+    with open(os.path.join(out_dir, "vocab.json"), "w") as f:
+        json.dump(vocab.to_json(), f)
+    export_eval_prompts(out_dir)
+
+    # --- HLO per architecture (shared across weight variants) -------------
+    for cfg in (TARGET_CONFIG, DRAFT_CONFIG):
+        hlo_dir = os.path.join(out_dir, "hlo", cfg.name)
+        os.makedirs(hlo_dir, exist_ok=True)
+        for entry, block in ENTRY_POINTS.items():
+            path = os.path.join(hlo_dir, f"{entry}.hlo.txt")
+            print(f"[aot] lowering {cfg.name}/{entry} (T={block})", flush=True)
+            text = lower_entry(cfg, block)
+            with open(path, "w") as f:
+                f.write(text)
+        with open(os.path.join(hlo_dir, "extract.hlo.txt"), "w") as f:
+            f.write(lower_extract(cfg))
+
+    # --- weights + golden probes per trained model -------------------------
+    wdir = os.path.join(out_dir, "weights")
+    os.makedirs(wdir, exist_ok=True)
+    models = {}
+    golden = {}
+    train_meta_path = os.path.join(train_dir, "meta.json")
+    train_meta = json.load(open(train_meta_path)) if os.path.exists(train_meta_path) else {}
+    for fname in sorted(os.listdir(train_dir)):
+        if not fname.endswith(".npz"):
+            continue
+        name = fname[:-4]
+        cfg = TARGET_CONFIG if name == "target" else DRAFT_CONFIG
+        params = load_npz(os.path.join(train_dir, fname))
+        write_weights(os.path.join(wdir, f"{name}.bin"), params)
+        models[name] = {
+            "arch": cfg.name,
+            "weights": f"weights/{name}.bin",
+            "params": int(sum(int(np.prod(v.shape)) for v in params.values())),
+        }
+        golden[name] = golden_probe(cfg, params, "verify", VERIFY_BLOCK)
+        print(f"[aot] packed {name} ({models[name]['params']} params)", flush=True)
+
+    n_target = models["target"]["params"]
+    for name, m in models.items():
+        m["c_ratio"] = m["params"] / n_target
+
+    manifest = {
+        "format": "specd-artifacts-v1",
+        "vocab": {"file": "vocab.json", "size": TARGET_CONFIG.vocab_size,
+                  "hash": vocab.content_hash()},
+        "entry_points": {k: {"block": v} for k, v in ENTRY_POINTS.items()},
+        "arch": {
+            cfg.name: {
+                "hlo_dir": f"hlo/{cfg.name}",
+                "n_layers": cfg.n_layers,
+                "n_heads": cfg.n_heads,
+                "hidden": cfg.hidden,
+                "intermediate": cfg.intermediate,
+                "head_dim": cfg.head_dim,
+                "max_seq": cfg.max_seq,
+                "vocab_size": cfg.vocab_size,
+                "kv_len": kv_len(cfg),
+                "state_len": state_len(cfg),
+                "param_order": model.param_names(cfg),
+            }
+            for cfg in (TARGET_CONFIG, DRAFT_CONFIG)
+        },
+        "models": models,
+        "train_meta": train_meta,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump(golden, f)
+    print(f"[aot] manifest with {len(models)} models -> {out_dir}", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--train-dir", default="../artifacts/train")
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    export(args.train_dir, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Model / training configuration for the specd reproduction.
+
+Mirrors paper Table 1 (Llama 2-Chat 7B target vs 115M drafter) scaled to a
+CPU-trainable size while preserving the architecture family (RMSNorm + RoPE +
+SiLU MLP, Llama-2 style) and — approximately — the draft:target parameter
+ratio c that enters the paper's MBSU metric. The *actual* ratio is computed
+from realized parameter counts at export time and recorded in the artifact
+manifest; the Rust side reads c from there rather than hard-coding 1.64%.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Llama-2-family decoder-only transformer configuration."""
+
+    name: str
+    vocab_size: int = 512
+    n_layers: int = 8
+    n_heads: int = 8
+    hidden: int = 128
+    intermediate: int = 384
+    max_seq: int = 256
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden % self.n_heads == 0
+        return self.hidden // self.n_heads
+
+    def param_count(self) -> int:
+        """Exact parameter count of init_params for this config."""
+        embed = self.vocab_size * self.hidden
+        unembed = 0 if self.tie_embeddings else self.vocab_size * self.hidden
+        per_layer = (
+            4 * self.hidden * self.hidden  # wq wk wv wo
+            + 3 * self.hidden * self.intermediate  # w1 w3 w2
+            + 2 * self.hidden  # attn_norm, mlp_norm
+        )
+        final_norm = self.hidden
+        return embed + unembed + self.n_layers * per_layer + final_norm
+
+
+# Paper Table 1, scaled. Target plays the role of Llama 2-Chat 7B; draft the
+# role of Llama 2-Chat-Drafter 115M (1.64% of target). Realized ratio here is
+# ~1.7% (tied draft embeddings); the manifest records the exact value and the
+# Rust MBSU metric consumes it from there.
+VOCAB_SIZE = 384  # SynthChat vocabulary (see data.build_vocab; <= 384 words)
+
+TARGET_CONFIG = ModelConfig(
+    name="target",
+    vocab_size=VOCAB_SIZE,
+    n_layers=6,
+    n_heads=8,
+    hidden=128,
+    intermediate=384,
+    tie_embeddings=False,
+)
+
+DRAFT_CONFIG = ModelConfig(
+    name="draft",
+    vocab_size=VOCAB_SIZE,
+    n_layers=2,
+    n_heads=3,
+    hidden=24,
+    intermediate=64,
+    tie_embeddings=True,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """Hyper-parameters for the three training phases (paper §A.3, scaled)."""
+
+    seed: int = 0
+    batch_size: int = 16
+    seq_len: int = 128
+    # Phase 1: pretraining (next-token prediction on SynthChat corpus).
+    pretrain_steps_draft: int = 3000
+    pretrain_steps_target: int = 3000
+    # Chat finetuning of the *target* (to make it "chat-fine-tuned").
+    target_sft_steps: int = 1500
+    # Phase 2: distillation dataset generation.
+    distill_prompts: int = 384
+    distill_temperatures: tuple = (0.0, 0.3, 0.7, 1.0)
+    distill_top_p: float = 0.95
+    distill_max_new: int = 48
+    # Phase 3: draft finetuning via white-box KD.
+    finetune_steps: int = 1200
+    n_checkpoints: int = 4  # evenly spaced ckpt1..ckpt4 (ckpt0 = base draft)
+    distill_mix_ratio: float = 0.9  # 9:1 distillation:pretraining per batch
+    # AdamW + warmup-decay (paper §A.3, scaled down).
+    lr_max: float = 1e-3
+    lr_min: float = 1e-5
+    warmup_frac: float = 0.1
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+
+
+TRAIN_CONFIG = TrainConfig()
+
+# AOT export block sizes (fixed shapes — PJRT executables are static).
+PREFILL_BLOCK = 32
+# Covers gamma+1 for gamma <= 5 (the paper sweeps {3, 5}). Was 8; shrinking
+# to 6 cut verify latency ~12% since the executable always computes the
+# full block (§Perf iteration 4).
+VERIFY_BLOCK = 6
+DECODE_BLOCK = 1

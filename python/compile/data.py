@@ -1,0 +1,300 @@
+"""SynthChat — the synthetic language substrate.
+
+The paper pretrains on a 600B-token English corpus and distills with seed
+instructions from OIG-small-chip2 / OpenAssistant; none of that is usable at
+CPU scale, so we build a stochastic language with the same *structure*:
+
+- a ~512-token word vocabulary split into shared function words, topic
+  content words (8 topics, "English" side) and a disjoint "German-like"
+  vocabulary with a bijective word mapping (for the WMT-like OOD task);
+- a first-order Markov topic grammar generating documents;
+- four instruction task families mirroring the paper's evaluation suite:
+    dolly  — open-ended generation about a topic,
+    xsum   — extreme summarization (doc -> ~1 sentence of topic keywords),
+    cnndm  — news summarization (longer doc -> multi-sentence summary),
+    wmt    — translation de->en (OOD: excluded from distillation seeds).
+
+Determinism: everything is driven by numpy Generators seeded explicitly, so
+the corpus, the tasks and the vocab are reproducible bit-for-bit. The vocab
+is exported to artifacts/vocab.json and re-implemented by the Rust
+`tokenizer` + `workload` modules; python/tests/test_data.py pins hashes that
+the Rust side property-tests against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Vocabulary layout (fixed, index-stable)
+# ---------------------------------------------------------------------------
+
+PAD, BOS, EOS, USER, ASST = 0, 1, 2, 3, 4
+SPECIAL_TOKENS = ["<pad>", "<bos>", "<eos>", "<user>", "<asst>"]
+
+N_TOPICS = 8
+WORDS_PER_TOPIC = 28
+N_FUNCTION_WORDS = 24
+N_TEMPLATE_WORDS = 16
+N_DE_WORDS = 96  # German-like, bijectively mapped onto the first EN words
+
+_CONSONANTS = "bdfgklmnprstvz"
+_VOWELS = "aeiou"
+
+
+def _synth_word(rng: np.random.Generator, syllables: int) -> str:
+    return "".join(
+        _CONSONANTS[rng.integers(len(_CONSONANTS))] + _VOWELS[rng.integers(len(_VOWELS))]
+        for _ in range(syllables)
+    )
+
+
+@dataclasses.dataclass
+class Vocab:
+    """Word-level vocabulary shared between python training and rust serving."""
+
+    words: List[str]
+    topic_ranges: List[Tuple[int, int]]  # [lo, hi) token-id range per topic
+    function_range: Tuple[int, int]
+    template_range: Tuple[int, int]
+    de_range: Tuple[int, int]
+    de_to_en: List[int]  # de token id -> en token id (bijective)
+
+    @property
+    def size(self) -> int:
+        return len(self.words)
+
+    def encode(self, text: str) -> List[int]:
+        index = self._index()
+        return [index[w] for w in text.split()]
+
+    def decode(self, ids: Sequence[int]) -> str:
+        return " ".join(self.words[i] for i in ids)
+
+    def _index(self):
+        if not hasattr(self, "_idx"):
+            self._idx = {w: i for i, w in enumerate(self.words)}
+        return self._idx
+
+    def to_json(self) -> dict:
+        return {
+            "words": self.words,
+            "topic_ranges": self.topic_ranges,
+            "function_range": list(self.function_range),
+            "template_range": list(self.template_range),
+            "de_range": list(self.de_range),
+            "de_to_en": self.de_to_en,
+            "special": {"pad": PAD, "bos": BOS, "eos": EOS, "user": USER, "asst": ASST},
+        }
+
+    def content_hash(self) -> str:
+        return hashlib.sha256(json.dumps(self.to_json(), sort_keys=True).encode()).hexdigest()[:16]
+
+
+def build_vocab(seed: int = 7) -> Vocab:
+    """Deterministically build the SynthChat vocabulary (size <= 512)."""
+    rng = np.random.default_rng(seed)
+    words = list(SPECIAL_TOKENS)
+    seen = set(words)
+
+    def add(n: int, syllables: int, prefix: str = "") -> Tuple[int, int]:
+        lo = len(words)
+        while len(words) < lo + n:
+            w = prefix + _synth_word(rng, syllables)
+            if w not in seen:
+                seen.add(w)
+                words.append(w)
+        return (lo, lo + n)
+
+    function_range = add(N_FUNCTION_WORDS, 1)
+    template_range = add(N_TEMPLATE_WORDS, 2)
+    topic_ranges = [add(WORDS_PER_TOPIC, 2) for _ in range(N_TOPICS)]
+    de_range = add(N_DE_WORDS, 3, prefix="x")
+
+    # de word k maps to the k-th English content word (topic words flattened).
+    en_flat = [i for lo, hi in topic_ranges for i in range(lo, hi)]
+    de_to_en = [en_flat[k % len(en_flat)] for k in range(N_DE_WORDS)]
+
+    return Vocab(
+        words=words,
+        topic_ranges=topic_ranges,
+        function_range=function_range,
+        template_range=template_range,
+        de_range=de_range,
+        de_to_en=de_to_en,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Topic grammar: first-order Markov chains with shared function words
+# ---------------------------------------------------------------------------
+
+
+class TopicGrammar:
+    """Per-topic Markov chain over (topic content words + function words).
+
+    Transition matrices are themselves deterministic functions of the seed, so
+    python and any re-implementation agree on the *distribution*; samples are
+    reproducible given the generator state.
+    """
+
+    def __init__(self, vocab: Vocab, seed: int = 11):
+        self.vocab = vocab
+        rng = np.random.default_rng(seed)
+        self.chains = []  # (token_ids, transition[ n, n ], init[ n ])
+        flo, fhi = vocab.function_range
+        func = list(range(flo, fhi))
+        for t, (lo, hi) in enumerate(vocab.topic_ranges):
+            ids = np.array(list(range(lo, hi)) + func, dtype=np.int64)
+            n = len(ids)
+            # Sparse-ish rows: concentrate mass on ~6 successors per word.
+            trans = np.full((n, n), 1e-3)
+            for i in range(n):
+                succ = rng.choice(n, size=6, replace=False)
+                trans[i, succ] += rng.dirichlet(np.ones(6)) * 1.0
+            trans /= trans.sum(axis=1, keepdims=True)
+            init = rng.dirichlet(np.ones(n) * 0.5)
+            self.chains.append((ids, trans, init))
+
+    def sample_sentence(self, rng: np.random.Generator, topic: int, length: int) -> List[int]:
+        ids, trans, init = self.chains[topic]
+        out = [int(rng.choice(len(ids), p=init))]
+        for _ in range(length - 1):
+            out.append(int(rng.choice(len(ids), p=trans[out[-1]])))
+        return [int(ids[i]) for i in out]
+
+    def topic_keywords(self, topic: int, k: int = 6) -> List[int]:
+        """Deterministic 'summary' keywords: the k most likely initial words."""
+        ids, _, init = self.chains[topic]
+        order = np.argsort(-init)[:k]
+        return [int(ids[i]) for i in order]
+
+
+# ---------------------------------------------------------------------------
+# Corpus + task generation
+# ---------------------------------------------------------------------------
+
+TASKS = ("dolly", "xsum", "cnndm", "wmt")
+
+
+@dataclasses.dataclass
+class Example:
+    task: str
+    prompt: List[int]  # [BOS] <user> ... <asst>
+    response: List[int]  # reference response tokens (no EOS)
+    topic: int
+
+
+class SynthChat:
+    """Corpus + instruction-task sampler over the SynthChat language."""
+
+    def __init__(self, vocab: Optional[Vocab] = None, seed: int = 13):
+        self.vocab = vocab or build_vocab()
+        self.grammar = TopicGrammar(self.vocab, seed=seed)
+        self._seed = seed
+        # Template word ids used as fixed task markers.
+        tlo, _ = self.vocab.template_range
+        self.m_tell, self.m_about, self.m_sum, self.m_brief, self.m_news, self.m_trans = (
+            tlo, tlo + 1, tlo + 2, tlo + 3, tlo + 4, tlo + 5
+        )
+
+    # -- pretraining corpus --------------------------------------------------
+
+    def corpus_stream(self, seed: int, include_parallel: bool = True) -> Iterator[List[int]]:
+        """Infinite stream of documents for next-token pretraining.
+
+        Mixture: topic documents (70%), German-like documents (15%), parallel
+        de<sep>en fragments (15%). The latter two give the *base* draft its
+        translation competence — the ingredient behind the paper's Figure 3
+        OOD inversion (finetuning on chat data erodes it).
+        """
+        rng = np.random.default_rng(seed)
+        while True:
+            u = rng.random()
+            if u < 0.70 or not include_parallel:
+                topic = int(rng.integers(N_TOPICS))
+                doc: List[int] = []
+                for _ in range(int(rng.integers(2, 6))):
+                    doc += self.grammar.sample_sentence(rng, topic, int(rng.integers(6, 14)))
+                yield doc + [EOS]
+            elif u < 0.85:
+                yield self._de_sentence(rng, int(rng.integers(5, 12))) + [EOS]
+            else:
+                de = self._de_sentence(rng, int(rng.integers(4, 9)))
+                en = [self.vocab.de_to_en[t - self.vocab.de_range[0]] for t in de]
+                yield de + [self.m_trans] + en + [EOS]
+
+    def _de_sentence(self, rng: np.random.Generator, length: int) -> List[int]:
+        lo, hi = self.vocab.de_range
+        # Random-walk with locality so the 'language' has bigram structure.
+        cur = int(rng.integers(lo, hi))
+        out = [cur]
+        for _ in range(length - 1):
+            cur = lo + (cur - lo + int(rng.integers(1, 7))) % (hi - lo)
+            out.append(cur)
+        return out
+
+    # -- instruction tasks ---------------------------------------------------
+
+    def sample_example(self, rng: np.random.Generator, task: str) -> Example:
+        topic = int(rng.integers(N_TOPICS))
+        g = self.grammar
+        if task == "dolly":
+            kw = g.topic_keywords(topic, 2)
+            instr = [self.m_tell, self.m_about] + kw
+            resp = g.sample_sentence(rng, topic, int(rng.integers(16, 32)))
+        elif task == "xsum":
+            doc = []
+            for _ in range(3):
+                doc += g.sample_sentence(rng, topic, int(rng.integers(8, 14)))
+            instr = [self.m_sum, self.m_brief] + doc
+            resp = g.topic_keywords(topic, 6)
+        elif task == "cnndm":
+            doc = []
+            for _ in range(5):
+                doc += g.sample_sentence(rng, topic, int(rng.integers(8, 14)))
+            instr = [self.m_news, self.m_sum] + doc
+            resp = g.topic_keywords(topic, 6) + g.sample_sentence(rng, topic, 10)
+        elif task == "wmt":
+            de = self._de_sentence(rng, int(rng.integers(6, 12)))
+            instr = [self.m_trans] + de
+            resp = [self.vocab.de_to_en[t - self.vocab.de_range[0]] for t in de]
+        else:
+            raise ValueError(f"unknown task {task!r}")
+        prompt = [BOS, USER] + instr + [ASST]
+        return Example(task=task, prompt=prompt, response=resp, topic=topic)
+
+    def sft_stream(self, seed: int, tasks: Sequence[str] = TASKS) -> Iterator[List[int]]:
+        """Chat-SFT stream for the *target* model: prompt+reference response."""
+        rng = np.random.default_rng(seed)
+        while True:
+            ex = self.sample_example(rng, tasks[int(rng.integers(len(tasks)))])
+            yield ex.prompt + ex.response + [EOS]
+
+    def seed_prompts(self, seed: int, n: int, tasks: Sequence[str]) -> List[Example]:
+        """Distillation seed instructions (paper §2.2). `tasks` normally
+        excludes 'wmt' — that is exactly what makes WMT OOD in Figure 3."""
+        rng = np.random.default_rng(seed)
+        return [self.sample_example(rng, tasks[i % len(tasks)]) for i in range(n)]
+
+
+def pack_stream(stream: Iterator[List[int]], seq_len: int) -> Iterator[np.ndarray]:
+    """Concatenate documents into fixed-length chunks (paper §A.4: sequences
+    concatenated into 2048-token chunks, no padding)."""
+    buf: List[int] = []
+    for doc in stream:
+        buf.extend(doc)
+        while len(buf) >= seq_len + 1:
+            yield np.array(buf[: seq_len + 1], dtype=np.int32)
+            buf = buf[seq_len:]
+
+
+def batch_stream(stream: Iterator[List[int]], seq_len: int, batch: int) -> Iterator[np.ndarray]:
+    packed = pack_stream(stream, seq_len)
+    while True:
+        yield np.stack([next(packed) for _ in range(batch)])

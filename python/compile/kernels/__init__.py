@@ -1,0 +1,3 @@
+"""L1 Pallas kernels (interpret-mode) + pure-jnp oracles (ref)."""
+
+from . import accept, attention, dist_loss, ref, rmsnorm, swiglu  # noqa: F401

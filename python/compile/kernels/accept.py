@@ -1,0 +1,67 @@
+"""Pallas speculative-acceptance kernel (Leviathan et al. rejection rule).
+
+Given a drafted block — draft distributions p[G, V], target distributions
+q[G, V], drafted tokens and U(0,1) samples — compute per-position acceptance
+indicators and the (unnormalized) residual distributions max(q - p, 0).
+
+Used by the python-side offline SD simulator (train.py checkpoint selection)
+and as the golden reference for the Rust `sampling::rejection` hot path:
+python/tests/test_accept.py writes golden vectors that
+rust/tests/ integration tests replay bit-for-bit.
+
+Token-probability lookup is done MXU-style with a one-hot contraction
+(gather is hostile to the TPU vector unit; a [G, V] one-hot matmul is free
+at these shapes and stays in VMEM).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET
+
+
+def _accept_kernel(p_ref, q_ref, tok_ref, u_ref, acc_ref, resid_ref):
+    p = p_ref[...]
+    q = q_ref[...]
+    g, v = p.shape
+    onehot = (jax.lax.iota(jnp.int32, v)[None, :] == tok_ref[...][:, None]).astype(p.dtype)
+    p_tok = jnp.sum(p * onehot, axis=-1)
+    q_tok = jnp.sum(q * onehot, axis=-1)
+    ratio = jnp.minimum(1.0, q_tok / jnp.maximum(p_tok, 1e-20))
+    acc_ref[...] = (u_ref[...] < ratio).astype(p.dtype)
+    resid_ref[...] = jnp.maximum(q - p, 0.0)
+
+
+@jax.jit
+def sd_accept_parts(p: jax.Array, q: jax.Array, tokens: jax.Array, uniforms: jax.Array):
+    """p, q: [G, V]; tokens: [G] int32; uniforms: [G] -> (accept[G], resid[G, V])."""
+    g, v = p.shape
+    spec2 = pl.BlockSpec((g, v), lambda: (0, 0))
+    spec1 = pl.BlockSpec((g,), lambda: (0,))
+    return pl.pallas_call(
+        _accept_kernel,
+        grid=(),
+        in_specs=[spec2, spec2, spec1, spec1],
+        out_specs=[spec1, spec2],
+        out_shape=[
+            jax.ShapeDtypeStruct((g,), p.dtype),
+            jax.ShapeDtypeStruct((g, v), p.dtype),
+        ],
+        interpret=INTERPRET,
+    )(p, q, tokens.astype(jnp.int32), uniforms)
+
+
+def sd_accept(p, q, tokens, uniforms):
+    """Full acceptance decision; matches ref.sd_accept exactly."""
+    accept, resid_all = sd_accept_parts(p, q, tokens, uniforms)
+    g = p.shape[0]
+    rejected = accept < 0.5
+    n_accept = jnp.argmax(jnp.concatenate([rejected, jnp.array([True])]))
+    idx = jnp.minimum(n_accept, g - 1)
+    resid = resid_all[idx]
+    z = jnp.sum(resid)
+    resid = jnp.where(z > 0, resid / jnp.maximum(z, 1e-20), q[idx])
+    return n_accept, resid

@@ -1,0 +1,88 @@
+"""Pallas flash-style position-masked attention kernel.
+
+This is the serving hot-spot: both the draft decode step (T=1) and the
+target verify step (T=gamma+1) run it against a fixed-capacity KV cache of
+S rows where only rows with absolute position <= current position are live.
+
+TPU adaptation of the GPU flash pattern (DESIGN.md §Hardware-Adaptation):
+  - grid axis over heads; per program the [T, D] query tile sits in VMEM,
+  - K/V are streamed in [BLOCK_S, D] tiles (the BlockSpec expresses the
+    HBM->VMEM schedule a CUDA kernel would do with threadblocks + smem),
+  - online softmax: running max m, running denominator l, accumulator acc —
+    one pass over the cache, no [T, S] logits matrix ever materialized,
+  - masking is by *absolute position* (row j visible to query i iff
+    j <= q_pos0 + i), which is what makes KV rollback in the Rust
+    coordinator a pure length-bookkeeping operation: stale rows beyond the
+    current length are simply never visible.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, ceil_div
+
+BLOCK_S = 64
+NEG_INF = -1e30
+
+
+def _attn_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *, block_s: int, s_total: int):
+    """One head. q_ref: [T, D]; k_ref/v_ref: [S, D]; pos_ref: [1] int32."""
+    t, d = q_ref.shape
+    q = q_ref[...]
+    pos0 = pos_ref[0]
+    scale = 1.0 / jnp.sqrt(jnp.array(d, q.dtype))
+    qpos = pos0 + jax.lax.iota(jnp.int32, t)  # absolute query positions
+
+    m = jnp.full((t, 1), NEG_INF, q.dtype)  # running max
+    l = jnp.zeros((t, 1), q.dtype)  # running denominator
+    acc = jnp.zeros((t, d), q.dtype)
+
+    def body(sb, carry):
+        m, l, acc = carry
+        kblk = k_ref[pl.dslice(sb * block_s, block_s), :]
+        vblk = v_ref[pl.dslice(sb * block_s, block_s), :]
+        logits = (q @ kblk.T) * scale  # [T, BLOCK_S]
+        kpos = sb * block_s + jax.lax.iota(jnp.int32, block_s)
+        visible = kpos[None, :] <= qpos[:, None]
+        logits = jnp.where(visible, logits, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1, keepdims=True))
+        correction = jnp.exp(m - m_new)
+        pexp = jnp.exp(logits - m_new)
+        l_new = l * correction + jnp.sum(pexp, axis=-1, keepdims=True)
+        acc_new = acc * correction + pexp @ vblk
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, ceil_div(s_total, block_s), body, (m, l, acc))
+    o_ref[...] = acc / jnp.maximum(l, 1e-20)
+
+
+@jax.jit
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, q_pos0: jax.Array) -> jax.Array:
+    """q: [T, H, D]; k, v: [S, H, D]; q_pos0: int32 scalar. Matches ref.attention."""
+    t, h, d = q.shape
+    s = k.shape[0]
+    block_s = min(BLOCK_S, s)
+    pos = jnp.reshape(q_pos0.astype(jnp.int32), (1,))
+    # Head-major layout so each grid program owns one head's tiles.
+    qh = jnp.transpose(q, (1, 0, 2))  # [H, T, D]
+    kh = jnp.transpose(k, (1, 0, 2))
+    vh = jnp.transpose(v, (1, 0, 2))
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, block_s=block_s, s_total=s),
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((None, t, d), lambda i: (i, 0, 0)),  # None squeezes the head axis
+            pl.BlockSpec((None, s, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, t, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, t, d), q.dtype),
+        interpret=INTERPRET,
+    )(pos, qh, kh, vh)
+    return jnp.transpose(out, (1, 0, 2))  # back to [T, H, D]

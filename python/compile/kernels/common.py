@@ -1,0 +1,21 @@
+"""Shared helpers for the Pallas kernels.
+
+All kernels run with interpret=True: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so the interpret path is both the correctness vehicle
+(pytest/hypothesis vs ref.py) and what lowers into the AOT-exported HLO.
+The BlockSpec tilings are nevertheless written as they would be for a real
+TPU: VMEM-resident blocks, last dim padded toward lane width where shapes
+allow; DESIGN.md §Hardware-Adaptation records the production tiling.
+"""
+
+from __future__ import annotations
+
+INTERPRET = True  # flip only on a real TPU backend
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return ceil_div(a, b) * b

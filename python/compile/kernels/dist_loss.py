@@ -1,0 +1,94 @@
+"""Pallas fused distillation-loss kernel (KLD / TVD / TVD++ in one pass).
+
+The distillation hot-spot is a reduction over [N, V] draft and target logit
+matrices (N = batch*seq token positions). A naive implementation makes four
+separate passes (softmax p, softmax q, each loss); this kernel fuses them:
+one pass over vocab tiles per token block, producing the five per-token
+scalars from which every loss and the TVD++ moments are assembled:
+
+    a_i   = sum_x p_i(x) * r_i(x)              (E_p[r], r = 1{q > p})
+    c_i   = sum_x p_i(x) * r_i(x) * log p_i(x)
+    d_i   = sum_x p_i(x) * log p_i(x)          (negative entropy)
+    kld_i = sum_x q_i(x) * (log q_i(x) - log p_i(x))
+    tvd_i = 0.5 * sum_x |p_i(x) - q_i(x)|
+
+Host-side combination (see `tvdpp_from_parts`):
+    mu      = mean(a),  sigma^2 = mu - mu^2   (Bernoulli under p-weighting —
+              an identity the tests pin against ref.tvdpp_stats)
+    tvd++_i = -(c_i - mu * d_i) / (sigma + eps)
+
+The two softmaxes are computed inside the tile pass with the standard
+max-shift; V fits one VMEM tile at our scale (512 * 4B rows), so the grid is
+over token blocks only. At production vocab sizes a second grid axis over
+vocab tiles with SMEM accumulators does the same reduction.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, ceil_div
+
+BLOCK_N = 64
+
+
+def _dist_loss_kernel(p_ref, q_ref, a_ref, c_ref, d_ref, kld_ref, tvd_ref):
+    pl_logits = p_ref[...]
+    ql_logits = q_ref[...]
+    logp = jax.nn.log_softmax(pl_logits, axis=-1)
+    logq = jax.nn.log_softmax(ql_logits, axis=-1)
+    p = jnp.exp(logp)
+    q = jnp.exp(logq)
+    r = (q > p).astype(p.dtype)
+    a_ref[...] = jnp.sum(p * r, axis=-1)
+    c_ref[...] = jnp.sum(p * r * logp, axis=-1)
+    d_ref[...] = jnp.sum(p * logp, axis=-1)
+    kld_ref[...] = jnp.sum(q * (logq - logp), axis=-1)
+    tvd_ref[...] = 0.5 * jnp.sum(jnp.abs(p - q), axis=-1)
+
+
+@jax.jit
+def dist_loss_parts(p_logits: jax.Array, q_logits: jax.Array):
+    """Fused per-token loss parts. p/q_logits: [N, V] -> five [N] vectors."""
+    n, v = p_logits.shape
+    block = min(BLOCK_N, n)
+    grid = (ceil_div(n, block),)
+    vec = lambda: jax.ShapeDtypeStruct((n,), p_logits.dtype)  # noqa: E731
+    spec2 = pl.BlockSpec((block, v), lambda i: (i, 0))
+    spec1 = pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        _dist_loss_kernel,
+        grid=grid,
+        in_specs=[spec2, spec2],
+        out_specs=[spec1, spec1, spec1, spec1, spec1],
+        out_shape=[vec(), vec(), vec(), vec(), vec()],
+        interpret=INTERPRET,
+    )(p_logits, q_logits)
+
+
+def tvdpp_from_parts(a, c, d, eps: float = 1e-6):
+    """Assemble the TVD++ surrogate from the fused per-token parts."""
+    mu = jnp.mean(a)
+    sigma = jnp.sqrt(jnp.maximum(mu - mu * mu, 0.0))
+    return -jnp.mean((c - mu * d) / (sigma + eps))
+
+
+def kld(p_logits, q_logits):
+    _, _, _, k, _ = dist_loss_parts(p_logits, q_logits)
+    return jnp.mean(k)
+
+
+def tvd(p_logits, q_logits):
+    _, _, _, _, t = dist_loss_parts(p_logits, q_logits)
+    return jnp.mean(t)
+
+
+def tvdpp_surrogate(p_logits, q_logits, eps: float = 1e-6):
+    """Forward value of the TVD++ surrogate (gradient path lives in the ref
+    implementation used for training; tests pin kernel == ref forward)."""
+    a, c, d, _, _ = dist_loss_parts(p_logits, q_logits)
+    return tvdpp_from_parts(a, c, d, eps)

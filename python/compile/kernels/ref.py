@@ -1,0 +1,142 @@
+"""Pure-jnp oracles for every Pallas kernel (L1 correctness ground truth).
+
+Each function here is the mathematical definition; the Pallas kernels in the
+sibling modules must match these to float tolerance under hypothesis sweeps
+(python/tests/test_kernels.py). These references are also the implementations
+used on the *training* path (use_pallas=False) where interpret-mode Pallas
+would be needlessly slow — the AOT export path uses the real kernels, and the
+test suite pins kernel == ref so the two paths are interchangeable.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm over the last axis: x * w / rms(x)."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * w
+
+
+def swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array) -> jax.Array:
+    """Llama MLP: (silu(x@w1) * (x@w3)) @ w2."""
+    a = x @ w1
+    return (jax.nn.silu(a) * (x @ w3)) @ w2
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, q_pos0) -> jax.Array:
+    """Position-masked multi-head attention.
+
+    q: [T, H, D] queries for absolute positions q_pos0 .. q_pos0+T-1
+    k, v: [S, H, D] cache buffers; row j holds the key/value for absolute
+        position j (rows beyond the current sequence length contain stale
+        garbage and are masked out by the position rule below).
+    Visibility: query i attends to cache row j iff j <= q_pos0 + i.
+    """
+    T, H, D = q.shape
+    S = k.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.array(D, q.dtype))
+    logits = jnp.einsum("thd,shd->hts", q, k) * scale
+    qpos = q_pos0 + jnp.arange(T)[:, None]
+    mask = jnp.arange(S)[None, :] <= qpos  # [T, S]
+    logits = jnp.where(mask[None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("hts,shd->thd", probs, v)
+
+
+# ---------------------------------------------------------------------------
+# Distillation losses (paper §2.3). Convention: `p_logits` is the DRAFT
+# (student, trainable), `q_logits` the TARGET (teacher, stop-gradient).
+# All losses are means over the N token positions.
+# ---------------------------------------------------------------------------
+
+
+def kld(p_logits: jax.Array, q_logits: jax.Array) -> jax.Array:
+    """Forward KL(q || p): the mass the teacher puts where the student doesn't."""
+    logp = jax.nn.log_softmax(p_logits, axis=-1)
+    logq = jax.nn.log_softmax(q_logits, axis=-1)
+    q = jnp.exp(logq)
+    return jnp.mean(jnp.sum(q * (logq - logp), axis=-1))
+
+
+def tvd(p_logits: jax.Array, q_logits: jax.Array) -> jax.Array:
+    """Total variation distance 0.5 * sum |p - q| (Leviathan et al.: 1 - TVD
+    equals the expected SD acceptance probability)."""
+    p = jax.nn.softmax(p_logits, axis=-1)
+    q = jax.nn.softmax(q_logits, axis=-1)
+    return jnp.mean(0.5 * jnp.sum(jnp.abs(p - q), axis=-1))
+
+
+def tvdpp_stats(p_logits: jax.Array, q_logits: jax.Array):
+    """Reward moments for TVD++ (paper Eq. 1).
+
+    Reward r(x) = 1{q(x) > p(x)} (Lemma 1). The paper computes mean/variance
+    "over the input sequences and the entire vocabulary"; in the white-box
+    (exact expectation) setting the natural weighting is the draft
+    distribution p itself, since the policy-gradient expectation is under p:
+        mu    = (1/N) sum_i sum_x p_i(x) r_i(x)
+        sigma = sqrt((1/N) sum_i sum_x p_i(x) (r_i(x) - mu)^2)
+    Returns (r, mu, sigma) with r of shape [N, V].
+    """
+    p = jax.nn.softmax(p_logits, axis=-1)
+    q = jax.nn.softmax(q_logits, axis=-1)
+    r = (q > p).astype(p.dtype)
+    mu = jnp.mean(jnp.sum(p * r, axis=-1))
+    var = jnp.mean(jnp.sum(p * jnp.square(r - mu), axis=-1))
+    return r, mu, jnp.sqrt(var)
+
+
+def tvdpp_surrogate(p_logits: jax.Array, q_logits: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """TVD++ surrogate loss whose gradient is paper Eq. 1 (exact-expectation
+    form): grad = E_{x~p}[ grad log p(x) * (-(r(x)-mu)/sigma) ].
+
+    Implemented as -(1/N) sum_i sum_x sg(p_i(x) * A_i(x)) * log p_i(x) with
+    A = (r - mu)/(sigma + eps) and sg() = stop_gradient, so autodiff yields
+    exactly the policy gradient with normalized advantage.
+    """
+    logp = jax.nn.log_softmax(p_logits, axis=-1)
+    r, mu, sigma = tvdpp_stats(p_logits, q_logits)
+    adv = (r - mu) / (sigma + eps)
+    weight = jax.lax.stop_gradient(jnp.exp(logp) * adv)
+    return -jnp.mean(jnp.sum(weight * logp, axis=-1))
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token cross entropy; labels [N] int, logits [N, V]."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# Speculative decoding acceptance (Leviathan et al. modified rejection
+# sampling) — reference for the Pallas accept kernel AND for the Rust
+# `sampling::rejection` implementation (pinned via golden vectors).
+# ---------------------------------------------------------------------------
+
+
+def sd_accept(p: jax.Array, q: jax.Array, tokens: jax.Array, uniforms: jax.Array):
+    """Vectorized acceptance of a draft block.
+
+    p: [G, V] draft distributions, q: [G, V] target distributions,
+    tokens: [G] drafted token ids, uniforms: [G] U(0,1) samples.
+    Returns (n_accept, residual) where n_accept is the number of accepted
+    draft tokens (0..G) and residual is norm(max(q-p, 0)) at the first
+    rejected position (or q[G-1] placeholder if everything was accepted —
+    callers then sample the bonus token from the *next* target distribution).
+    """
+    G, V = p.shape
+    p_tok = jnp.take_along_axis(p, tokens[:, None], axis=-1)[:, 0]
+    q_tok = jnp.take_along_axis(q, tokens[:, None], axis=-1)[:, 0]
+    accept = uniforms < jnp.minimum(1.0, q_tok / jnp.maximum(p_tok, 1e-20))
+    # First rejection index; G if none.
+    rejected = jnp.logical_not(accept)
+    n_accept = jnp.argmax(jnp.concatenate([rejected, jnp.array([True])]))
+    idx = jnp.minimum(n_accept, G - 1)
+    resid = jnp.maximum(q[idx] - p[idx], 0.0)
+    z = jnp.sum(resid)
+    resid = jnp.where(z > 0, resid / jnp.maximum(z, 1e-20), q[idx])
+    return n_accept, resid

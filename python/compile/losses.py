@@ -1,0 +1,74 @@
+"""L2 training objectives (masked variants of the kernel losses).
+
+The kernels/ref.py losses operate on flat [N, V] logits; training needs
+per-position masking (loss only on response tokens of distillation
+sequences, paper §2.3) and the TVD++ moments taken over exactly the masked
+token set ("over the input sequences and the entire vocabulary", Eq. 1).
+The implementations here are the gradient path; tests pin them against the
+unmasked kernel forwards on all-ones masks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LOSS_NAMES = ("kld", "tvd", "tvdpp")
+
+
+def _wmean(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.sum(x * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def masked_kld(p_logits, q_logits, w):
+    """Forward KL(q || p), masked mean. p/q: [..., V], w: [...] weights."""
+    logp = jax.nn.log_softmax(p_logits, axis=-1)
+    logq = jax.nn.log_softmax(q_logits, axis=-1)
+    per = jnp.sum(jnp.exp(logq) * (logq - logp), axis=-1)
+    return _wmean(per, w)
+
+
+def masked_tvd(p_logits, q_logits, w):
+    p = jax.nn.softmax(p_logits, axis=-1)
+    q = jax.nn.softmax(q_logits, axis=-1)
+    per = 0.5 * jnp.sum(jnp.abs(p - q), axis=-1)
+    return _wmean(per, w)
+
+
+def masked_tvdpp(p_logits, q_logits, w, eps: float = 1e-6):
+    """TVD++ (paper Eq. 1): policy gradient with advantage normalization.
+
+    mu/sigma are the p-weighted reward moments over the masked positions and
+    the whole vocabulary; the surrogate's gradient is
+    E_{x~p}[grad log p(x) * (-(r(x)-mu)/sigma)] averaged over masked tokens.
+    """
+    logp = jax.nn.log_softmax(p_logits, axis=-1)
+    p = jnp.exp(logp)
+    q = jax.nn.softmax(q_logits, axis=-1)
+    r = (q > p).astype(p.dtype)
+    ep_r = jnp.sum(p * r, axis=-1)  # [...]: E_p[r] per position
+    mu = _wmean(ep_r, w)
+    var = _wmean(jnp.sum(p * jnp.square(r - mu), axis=-1), w)
+    sigma = jnp.sqrt(jnp.maximum(var, 0.0))
+    adv = (r - mu) / (sigma + eps)
+    weight = jax.lax.stop_gradient(p * adv)
+    per = -jnp.sum(weight * logp, axis=-1)
+    return _wmean(per, w)
+
+
+def distill_loss(name: str, p_logits, q_logits, w):
+    q_logits = jax.lax.stop_gradient(q_logits)
+    if name == "kld":
+        return masked_kld(p_logits, q_logits, w)
+    if name == "tvd":
+        return masked_tvd(p_logits, q_logits, w)
+    if name == "tvdpp":
+        return masked_tvdpp(p_logits, q_logits, w)
+    raise ValueError(f"unknown distillation loss {name!r}")
+
+
+def next_token_loss(logits, labels, w):
+    """Masked mean cross entropy. logits: [..., V], labels/w: [...]."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return _wmean(-ll, w)

@@ -1,0 +1,198 @@
+"""L2 — Llama-2-family decoder-only transformer in JAX.
+
+Two forward paths over the same parameters:
+
+- `forward_train(params, cfg, tokens[B, T])` — batched, no KV cache, causal
+  mask; used by all three training phases. Runs the pure-jnp reference ops
+  (kernels/ref.py) for speed on CPU.
+- `forward_cached(params, cfg, tokens[T], kv, pos)` — single-sequence,
+  fixed-capacity KV cache, *position-masked* attention; this is the function
+  AOT-exported to HLO for the Rust runtime (prefill / decode / verify entry
+  points differ only in T). With use_pallas=True the attention / rmsnorm /
+  swiglu bodies are the L1 Pallas kernels, so the exported HLO is lowered
+  through the kernel path. Tests pin the two paths equal.
+
+Parameters live in a *flat dict* with lexicographically sortable keys so the
+AOT export, the weights file and the Rust loader all agree on one canonical
+ordering (see aot.py manifest).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .kernels import attention as k_attention
+from .kernels import ref
+from .kernels import rmsnorm as k_rmsnorm
+from .kernels import swiglu as k_swiglu
+
+Params = Dict[str, jax.Array]
+
+
+def param_names(cfg: ModelConfig):
+    """Canonical (sorted) parameter name list for this config."""
+    names = ["embed", "final_norm"]
+    if not cfg.tie_embeddings:
+        names.append("unembed")
+    for l in range(cfg.n_layers):
+        for p in ("attn_norm", "wq", "wk", "wv", "wo", "mlp_norm", "w1", "w3", "w2"):
+            names.append(f"layer{l:02d}.{p}")
+    return sorted(names)
+
+
+def param_shape(cfg: ModelConfig, name: str) -> Tuple[int, ...]:
+    h, i, v = cfg.hidden, cfg.intermediate, cfg.vocab_size
+    if name == "embed":
+        return (v, h)
+    if name == "unembed":
+        return (h, v)
+    if name == "final_norm":
+        return (h,)
+    base = name.split(".")[1]
+    return {
+        "attn_norm": (h,),
+        "mlp_norm": (h,),
+        "wq": (h, h),
+        "wk": (h, h),
+        "wv": (h, h),
+        "wo": (h, h),
+        "w1": (h, i),
+        "w3": (h, i),
+        "w2": (i, h),
+    }[base]
+
+
+def init_params(cfg: ModelConfig, seed: int) -> Params:
+    """Deterministic scaled-normal init (norm gains at 1)."""
+    rng = np.random.default_rng(seed)
+    params: Params = {}
+    for name in param_names(cfg):
+        shape = param_shape(cfg, name)
+        if name.endswith("norm"):
+            arr = np.ones(shape, np.float32)
+        else:
+            fan_in = shape[0] if len(shape) == 2 else cfg.hidden
+            std = 1.0 / np.sqrt(fan_in)
+            if name.split(".")[-1] in ("wo", "w2"):  # residual-branch scaling
+                std /= np.sqrt(2.0 * cfg.n_layers)
+            arr = rng.normal(0.0, std, shape).astype(np.float32)
+        params[name] = jnp.asarray(arr)
+    return params
+
+
+def count_params(params: Params) -> int:
+    return int(sum(int(np.prod(p.shape)) for p in params.values()))
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding, half-split (NeoX) convention.
+
+    x: [..., T, H, D]; positions: [T] absolute positions.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # [T, half]
+    cos = jnp.cos(ang)[..., None, :]  # [T, 1, half] broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _unembed(params: Params, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        return h @ params["embed"].T
+    return h @ params["unembed"]
+
+
+# ---------------------------------------------------------------------------
+# Training path (batched, no cache)
+# ---------------------------------------------------------------------------
+
+
+def forward_train(params: Params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    """tokens: [B, T] int32 -> logits [B, T, V]. Causal, from position 0."""
+    b, t = tokens.shape
+    pos = jnp.arange(t)
+    x = params["embed"][tokens]  # [B, T, H]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    scale = 1.0 / jnp.sqrt(jnp.array(cfg.head_dim, jnp.float32))
+    for l in range(cfg.n_layers):
+        pre = f"layer{l:02d}."
+        xn = ref.rmsnorm(x, params[pre + "attn_norm"], cfg.norm_eps)
+        q = (xn @ params[pre + "wq"]).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        k = (xn @ params[pre + "wk"]).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        v = (xn @ params[pre + "wv"]).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+        logits = jnp.einsum("bthd,bshd->bhts", q, k) * scale
+        logits = jnp.where(mask[None, None], logits, ref.NEG_INF)
+        att = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("bhts,bshd->bthd", att, v).reshape(b, t, cfg.hidden)
+        x = x + o @ params[pre + "wo"]
+        xn = ref.rmsnorm(x, params[pre + "mlp_norm"], cfg.norm_eps)
+        x = x + ref.swiglu(xn, params[pre + "w1"], params[pre + "w3"], params[pre + "w2"])
+    x = ref.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return _unembed(params, cfg, x)
+
+
+# ---------------------------------------------------------------------------
+# Serving path (single sequence, KV cache, position-masked) — AOT-exported
+# ---------------------------------------------------------------------------
+
+
+def init_kv(cfg: ModelConfig) -> jax.Array:
+    """KV cache buffer [L, 2, S, heads, head_dim], zeros."""
+    return jnp.zeros(
+        (cfg.n_layers, 2, cfg.max_seq, cfg.n_heads, cfg.head_dim), jnp.float32
+    )
+
+
+def forward_cached(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # [T] int32
+    kv: jax.Array,  # [L, 2, S, heads, head_dim]
+    pos: jax.Array,  # scalar int32: absolute position of tokens[0]
+    use_pallas: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits [T, V], updated kv).
+
+    Rows pos..pos+T-1 of the cache are overwritten; attention sees exactly
+    rows <= query position (stale higher rows are invisible), which is what
+    lets the Rust coordinator roll back speculation by decrementing a length.
+    """
+    t = tokens.shape[0]
+    positions = pos + jnp.arange(t)
+    x = params["embed"][tokens]  # [T, H]
+
+    rms = k_rmsnorm.rmsnorm if use_pallas else (lambda a, w: ref.rmsnorm(a, w, cfg.norm_eps))
+    mlp = k_swiglu.swiglu if use_pallas else ref.swiglu
+    attn = k_attention.attention if use_pallas else ref.attention
+
+    for l in range(cfg.n_layers):
+        pre = f"layer{l:02d}."
+        xn = rms(x, params[pre + "attn_norm"])
+        q = (xn @ params[pre + "wq"]).reshape(t, cfg.n_heads, cfg.head_dim)
+        k = (xn @ params[pre + "wk"]).reshape(t, cfg.n_heads, cfg.head_dim)
+        v = (xn @ params[pre + "wv"]).reshape(t, cfg.n_heads, cfg.head_dim)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        kv = jax.lax.dynamic_update_slice(kv, k[None, None], (l, 0, pos, 0, 0))
+        kv = jax.lax.dynamic_update_slice(kv, v[None, None], (l, 1, pos, 0, 0))
+        o = attn(q, kv[l, 0], kv[l, 1], pos)  # [T, heads, head_dim]
+        x = x + o.reshape(t, cfg.hidden) @ params[pre + "wo"]
+        xn = rms(x, params[pre + "mlp_norm"])
+        x = x + mlp(xn, params[pre + "w1"], params[pre + "w3"], params[pre + "w2"])
+    x = rms(x, params["final_norm"])
+    return _unembed(params, cfg, x), kv

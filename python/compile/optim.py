@@ -1,0 +1,61 @@
+"""AdamW + WarmupDecay LR schedule (paper §A.3), implemented from scratch
+(no optax in this environment). Pytree-generic over flat param dicts.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def warmup_decay_lr(step, total_steps: int, lr_max: float, lr_min: float, warmup: int):
+    """Linear warmup to lr_max, then linear decay to lr_min (WarmUpDecayLR)."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = lr_max * step / jnp.maximum(warmup, 1)
+    frac = (step - warmup) / jnp.maximum(total_steps - warmup, 1)
+    decay = lr_max + (lr_min - lr_max) * jnp.clip(frac, 0.0, 1.0)
+    return jnp.where(step < warmup, warm, decay)
+
+
+def adamw_init(params) -> Dict:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in leaves))
+
+
+def adamw_update(
+    params,
+    grads,
+    state,
+    *,
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+    grad_clip: float = 1.0,
+) -> Tuple[Dict, Dict]:
+    """One AdamW step with global-norm clipping. Norm gains (1-D params) are
+    excluded from weight decay, matching standard LLM practice."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+    grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        update = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+        wd = weight_decay if p.ndim > 1 else 0.0
+        return p - lr * (update + wd * p)
+
+    new_params = jax.tree_util.tree_map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "step": step}

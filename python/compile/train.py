@@ -1,0 +1,358 @@
+"""The paper's three-phase draft training pipeline (§2, §A.3), build-time.
+
+Phase 1  pretraining           — target AND draft pretrained on the SynthChat
+                                 corpus with next-token loss; the target is
+                                 then chat-SFT'd on instruction tasks so it
+                                 plays the role of "Llama 2 Chat" (a chat-
+                                 fine-tuned target whose SFT data the draft
+                                 trainer is NOT allowed to reuse).
+Phase 2  distillation dataset  — seed instructions (dolly/xsum/cnndm; wmt is
+                                 deliberately excluded => Figure 3 OOD) are
+                                 answered BY THE TARGET at temperatures
+                                 {0, 0.3, 0.7, 1.0}, top-p 0.95 (§3).
+Phase 3  finetune via KD       — white-box distillation of the draft on the
+                                 phase-2 set, mixed 9:1 with pretraining
+                                 chunks, one run per loss in {KLD, TVD,
+                                 TVD++}, with evenly spaced checkpoints for
+                                 the Figure 2 sweep.
+
+Run:  cd python && python -m compile.train --out ../artifacts/train [--profile smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import losses, model, optim
+from .config import DRAFT_CONFIG, TARGET_CONFIG, TRAIN_CONFIG, ModelConfig, TrainConfig
+from .data import ASST, BOS, EOS, USER, Example, SynthChat, batch_stream
+
+# ---------------------------------------------------------------------------
+# Generic next-token training loop (phase 1 + target SFT)
+# ---------------------------------------------------------------------------
+
+
+def make_pretrain_step(cfg: ModelConfig, tc: TrainConfig, total_steps: int):
+    warmup = max(1, int(tc.warmup_frac * total_steps))
+
+    @jax.jit
+    def step(params, opt_state, chunk):
+        """chunk: [B, T+1] int32; next-token loss over all positions."""
+        inputs, labels = chunk[:, :-1], chunk[:, 1:]
+        weights = (labels != data_mod.PAD).astype(jnp.float32)
+
+        def loss_fn(p):
+            logits = model.forward_train(p, cfg, inputs)
+            return losses.next_token_loss(logits, labels, weights)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        lr = optim.warmup_decay_lr(opt_state["step"], total_steps, tc.lr_max, tc.lr_min, warmup)
+        params, opt_state = optim.adamw_update(
+            params, grads, opt_state, lr=lr,
+            weight_decay=tc.weight_decay, grad_clip=tc.grad_clip,
+        )
+        return params, opt_state, loss
+
+    return step
+
+
+def train_next_token(params, cfg: ModelConfig, tc: TrainConfig, stream, steps: int, tag: str):
+    opt_state = optim.adamw_init(params)
+    step_fn = make_pretrain_step(cfg, tc, steps)
+    batches = batch_stream(stream, tc.seq_len, tc.batch_size)
+    t0 = time.time()
+    loss = float("nan")
+    for i in range(steps):
+        params, opt_state, loss = step_fn(params, opt_state, jnp.asarray(next(batches)))
+        if i % 100 == 0 or i == steps - 1:
+            print(f"[{tag}] step {i:5d}/{steps} loss={float(loss):.4f} "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+    return params, float(loss)
+
+
+# ---------------------------------------------------------------------------
+# Batched KV-cache generation (phase 2): vmap over sequences
+# ---------------------------------------------------------------------------
+
+
+def _batched_cached_forward(cfg: ModelConfig):
+    def fwd(params, tokens, kv, pos):
+        return model.forward_cached(params, cfg, tokens, kv, pos, use_pallas=False)
+
+    return jax.jit(jax.vmap(fwd, in_axes=(None, 0, 0, 0)))
+
+
+def _top_p_sample(rng: np.random.Generator, probs: np.ndarray, top_p: float) -> np.ndarray:
+    """Nucleus sampling, rowwise. probs: [B, V] -> tokens [B]."""
+    out = np.empty(probs.shape[0], np.int64)
+    for b in range(probs.shape[0]):
+        order = np.argsort(-probs[b])
+        csum = np.cumsum(probs[b][order])
+        keep = csum - probs[b][order] < top_p  # always keeps the top token
+        p = np.where(keep, probs[b][order], 0.0)
+        p /= p.sum()
+        out[b] = order[rng.choice(len(p), p=p)]
+    return out
+
+
+def generate_batch(
+    params,
+    cfg: ModelConfig,
+    prompts: List[List[int]],
+    max_new: int,
+    temperature: float,
+    top_p: float,
+    seed: int,
+) -> List[List[int]]:
+    """Autoregressive batched generation with per-sequence KV caches.
+
+    Right-padded prefill writes garbage K/V rows beyond each prompt's length,
+    but those rows sit at positions > the sequence's current length and the
+    position-masked attention never sees them before they are overwritten —
+    the same invariant the Rust KV manager relies on.
+    """
+    rng = np.random.default_rng(seed)
+    fwd = _batched_cached_forward(cfg)
+    bsz = len(prompts)
+    lens = np.array([len(p) for p in prompts])
+    pmax = int(lens.max())
+    toks = np.zeros((bsz, pmax), np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, : len(p)] = p
+    kv = jnp.zeros((bsz, cfg.n_layers, 2, cfg.max_seq, cfg.n_heads, cfg.head_dim), jnp.float32)
+    logits, kv = fwd(params, jnp.asarray(toks), kv, jnp.zeros(bsz, jnp.int32))
+    logits = np.asarray(logits)[np.arange(bsz), lens - 1]  # next-token logits
+
+    seqs = [list(p) for p in prompts]
+    done = np.zeros(bsz, bool)
+    pos = lens.copy()
+    for _ in range(max_new):
+        if temperature <= 0.0:
+            nxt = np.argmax(logits, axis=-1)
+        else:
+            z = logits / temperature
+            z -= z.max(axis=-1, keepdims=True)
+            probs = np.exp(z)
+            probs /= probs.sum(axis=-1, keepdims=True)
+            nxt = _top_p_sample(rng, probs, top_p)
+        for b in range(bsz):
+            if not done[b]:
+                seqs[b].append(int(nxt[b]))
+                if nxt[b] == EOS or pos[b] + 1 >= cfg.max_seq - 1:
+                    done[b] = True
+        if done.all():
+            break
+        logits, kv = fwd(
+            params,
+            jnp.asarray(nxt[:, None].astype(np.int32)),
+            kv,
+            jnp.asarray(pos.astype(np.int32)),
+        )
+        logits = np.asarray(logits)[:, 0]
+        pos += 1
+    return seqs
+
+
+def build_distill_dataset(
+    target_params,
+    synth: SynthChat,
+    tc: TrainConfig,
+    tasks: Sequence[str],
+    seed: int,
+) -> List[Tuple[List[int], int]]:
+    """Phase 2. Returns [(tokens, prompt_len)]: target-generated responses to
+    seed instructions across the temperature grid. prompt_len marks where the
+    distillation loss mask starts (we distill on response tokens only)."""
+    seeds = synth.seed_prompts(seed, tc.distill_prompts, tasks)
+    out: List[Tuple[List[int], int]] = []
+    chunk = 32
+    for ti, temp in enumerate(tc.distill_temperatures):
+        for lo in range(0, len(seeds), chunk):
+            batch = seeds[lo : lo + chunk]
+            gen = generate_batch(
+                target_params,
+                TARGET_CONFIG,
+                [ex.prompt for ex in batch],
+                tc.distill_max_new,
+                temp,
+                tc.distill_top_p,
+                seed=seed * 1000 + ti * 100 + lo,
+            )
+            out.extend((g, len(ex.prompt)) for g, ex in zip(gen, batch))
+        print(f"[distill-gen] temp={temp} -> {len(out)} sequences", flush=True)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Phase 3: draft finetuning via white-box KD (teacher in the loop)
+# ---------------------------------------------------------------------------
+
+
+def make_finetune_step(loss_name: str, tc: TrainConfig, total_steps: int):
+    warmup = max(1, int(tc.warmup_frac * total_steps))
+
+    @jax.jit
+    def step(draft_params, target_params, opt_state, tokens, dist_w, lm_w):
+        """tokens: [B, T+1]; dist_w masks distill-response positions (on the
+        *label* grid), lm_w masks pretraining-row positions."""
+        inputs, labels = tokens[:, :-1], tokens[:, 1:]
+
+        def loss_fn(p):
+            p_logits = model.forward_train(p, DRAFT_CONFIG, inputs)
+            q_logits = model.forward_train(target_params, TARGET_CONFIG, inputs)
+            l_dist = losses.distill_loss(loss_name, p_logits, q_logits, dist_w)
+            l_lm = losses.next_token_loss(p_logits, labels, lm_w)
+            return l_dist + l_lm, (l_dist, l_lm)
+
+        (loss, (l_dist, l_lm)), grads = jax.value_and_grad(loss_fn, has_aux=True)(draft_params)
+        lr = optim.warmup_decay_lr(opt_state["step"], total_steps, tc.lr_max, tc.lr_min, warmup)
+        draft_params, opt_state = optim.adamw_update(
+            draft_params, grads, opt_state, lr=lr,
+            weight_decay=tc.weight_decay, grad_clip=tc.grad_clip,
+        )
+        return draft_params, opt_state, loss, l_dist, l_lm
+
+    return step
+
+
+def finetune_draft(
+    draft_params,
+    target_params,
+    distill_set: List[Tuple[List[int], int]],
+    synth: SynthChat,
+    tc: TrainConfig,
+    loss_name: str,
+    ckpt_hook,
+):
+    """Phase 3 for one loss. `ckpt_hook(ckpt_index, params)` is called at the
+    n_checkpoints evenly spaced points (paper Figure 2's x-axis)."""
+    rng = np.random.default_rng(hash(loss_name) % 2**31)
+    step_fn = make_finetune_step(loss_name, tc, tc.finetune_steps)
+    opt_state = optim.adamw_init(draft_params)
+    pre_batches = batch_stream(synth.corpus_stream(seed=999), tc.seq_len, tc.batch_size)
+    n_dist_rows = max(1, int(round(tc.distill_mix_ratio * tc.batch_size)))
+    t_len = tc.seq_len
+
+    def sample_rows():
+        tokens = np.zeros((tc.batch_size, t_len + 1), np.int32)
+        dist_w = np.zeros((tc.batch_size, t_len), np.float32)
+        lm_w = np.zeros((tc.batch_size, t_len), np.float32)
+        # distillation rows (loss vs teacher on response positions)
+        for b in range(n_dist_rows):
+            seq, plen = distill_set[int(rng.integers(len(distill_set)))]
+            seq = seq[: t_len + 1]
+            tokens[b, : len(seq)] = seq
+            # label index j predicts token j+1: response tokens start at plen
+            dist_w[b, max(plen - 1, 0) : max(len(seq) - 1, 0)] = 1.0
+        # pretraining rows (regularization, plain next-token loss)
+        pre = next(pre_batches)
+        for b in range(n_dist_rows, tc.batch_size):
+            tokens[b] = pre[b - n_dist_rows]
+            lm_w[b, :] = 1.0
+        return jnp.asarray(tokens), jnp.asarray(dist_w), jnp.asarray(lm_w)
+
+    ckpt_every = max(1, tc.finetune_steps // tc.n_checkpoints)
+    t0 = time.time()
+    for i in range(tc.finetune_steps):
+        tokens, dist_w, lm_w = sample_rows()
+        draft_params, opt_state, loss, l_dist, l_lm = step_fn(
+            draft_params, target_params, opt_state, tokens, dist_w, lm_w
+        )
+        if i % 50 == 0 or i == tc.finetune_steps - 1:
+            print(f"[finetune:{loss_name}] step {i:4d}/{tc.finetune_steps} "
+                  f"loss={float(loss):.4f} dist={float(l_dist):.4f} "
+                  f"lm={float(l_lm):.4f} ({time.time()-t0:.0f}s)", flush=True)
+        if (i + 1) % ckpt_every == 0:
+            ckpt_hook((i + 1) // ckpt_every, draft_params)
+    return draft_params
+
+
+# ---------------------------------------------------------------------------
+# Orchestration
+# ---------------------------------------------------------------------------
+
+
+def save_params(path: str, params) -> None:
+    np.savez(path, **{k: np.asarray(v) for k, v in params.items()})
+
+
+def load_params(path: str) -> Dict[str, jnp.ndarray]:
+    with np.load(path) as z:
+        return {k: jnp.asarray(z[k]) for k in z.files}
+
+
+def smoke_config() -> TrainConfig:
+    """Tiny profile for CI / pytest smoke runs."""
+    return TrainConfig(
+        batch_size=4, seq_len=48,
+        pretrain_steps_draft=8, pretrain_steps_target=8, target_sft_steps=8,
+        distill_prompts=8, distill_max_new=8, finetune_steps=8, n_checkpoints=2,
+    )
+
+
+def run_pipeline(out_dir: str, tc: TrainConfig, include_wmt: bool = False, seed: int = 0):
+    os.makedirs(out_dir, exist_ok=True)
+    synth = SynthChat()
+    meta = {"include_wmt": include_wmt, "seed": seed, "losses": list(losses.LOSS_NAMES)}
+
+    # --- Phase 1: pretraining --------------------------------------------
+    target_params = model.init_params(TARGET_CONFIG, seed + 1)
+    draft_params = model.init_params(DRAFT_CONFIG, seed + 2)
+    target_params, l_t = train_next_token(
+        target_params, TARGET_CONFIG, tc,
+        synth.corpus_stream(seed=101), tc.pretrain_steps_target, "pretrain:target")
+    draft_params, l_d = train_next_token(
+        draft_params, DRAFT_CONFIG, tc,
+        synth.corpus_stream(seed=202), tc.pretrain_steps_draft, "pretrain:draft")
+    # Chat-SFT the target on ALL tasks (incl. wmt) => the chat-capable target.
+    target_params, l_sft = train_next_token(
+        target_params, TARGET_CONFIG, tc,
+        synth.sft_stream(seed=303), tc.target_sft_steps, "sft:target")
+    save_params(os.path.join(out_dir, "target.npz"), target_params)
+    save_params(os.path.join(out_dir, "draft_base.npz"), draft_params)
+    meta["pretrain_loss"] = {"target": l_t, "draft": l_d, "target_sft": l_sft}
+
+    # --- Phase 2: distillation dataset from the target --------------------
+    tasks = ("dolly", "xsum", "cnndm") + (("wmt",) if include_wmt else ())
+    distill_set = build_distill_dataset(target_params, synth, tc, tasks, seed=404)
+    meta["distill_sequences"] = len(distill_set)
+    meta["distill_tasks"] = list(tasks)
+
+    # --- Phase 3: finetune one draft per loss ------------------------------
+    for loss_name in losses.LOSS_NAMES:
+        def hook(ck, p, loss_name=loss_name):
+            save_params(os.path.join(out_dir, f"draft_{loss_name}_ckpt{ck}.npz"), p)
+        print(f"=== finetune loss={loss_name} ===", flush=True)
+        finetune_draft(dict(draft_params), target_params, distill_set, synth, tc,
+                       loss_name, hook)
+
+    meta["n_checkpoints"] = tc.n_checkpoints
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"pipeline complete -> {out_dir}", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/train")
+    ap.add_argument("--profile", choices=("full", "smoke"), default="full")
+    ap.add_argument("--include-wmt", action="store_true",
+                    help="ablation: add wmt to the distillation seeds (§A.5)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    tc = TRAIN_CONFIG if args.profile == "full" else smoke_config()
+    run_pipeline(args.out, tc, include_wmt=args.include_wmt, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""AOT export contract: HLO lowering, the state-vector layout, the SPCD1
+weights format and the golden probes — everything the Rust loader trusts."""
+
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.config import ModelConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+TINY = ModelConfig(name="tiny", vocab_size=48, n_layers=1, n_heads=2, hidden=8,
+                   intermediate=16, max_seq=32)
+
+
+def test_state_layout_lengths():
+    kvn = aot.kv_len(TINY)
+    assert kvn == 1 * 2 * 32 * 2 * 4
+    assert aot.state_len(TINY) == kvn + aot.PREFILL_BLOCK * TINY.vocab_size
+
+
+def test_lower_entry_emits_hlo_text():
+    text = aot.lower_entry(TINY, block=2, use_pallas=False)
+    assert "ENTRY" in text and "HloModule" in text
+    # One output: the state vector (non-tuple root) — the Rust contract.
+    assert f"f32[{aot.state_len(TINY)}]" in text
+
+
+def test_lowered_fn_matches_forward_cached():
+    """Execute the state-layout function in JAX and compare against a direct
+    forward_cached call: the layout plumbing must be value-preserving."""
+    params = model.init_params(TINY, seed=0)
+    names = model.param_names(TINY)
+    kvn = aot.kv_len(TINY)
+    block = 4
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, TINY.vocab_size, block).astype(np.int32))
+    pos = jnp.asarray(0, jnp.int32)
+
+    def fn(flat_params, state, tokens, pos):
+        p = dict(zip(names, flat_params))
+        kv = state[:kvn].reshape((TINY.n_layers, 2, TINY.max_seq, TINY.n_heads, TINY.head_dim))
+        logits, kv2 = model.forward_cached(p, TINY, tokens, kv, pos, use_pallas=False)
+        tail = state[kvn + block * TINY.vocab_size:]
+        return jnp.concatenate([kv2.reshape(-1), logits.reshape(-1), tail])
+
+    state0 = jnp.zeros(aot.state_len(TINY), jnp.float32)
+    out = fn([params[n] for n in names], state0, toks, pos)
+    logits_state = out[kvn:kvn + block * TINY.vocab_size].reshape(block, TINY.vocab_size)
+
+    kv0 = model.init_kv(TINY)
+    logits_direct, kv_direct = model.forward_cached(params, TINY, toks, kv0, pos, use_pallas=False)
+    np.testing.assert_allclose(logits_state, logits_direct, rtol=1e-5)
+    np.testing.assert_allclose(out[:kvn].reshape(kv_direct.shape), kv_direct, rtol=1e-5)
+
+
+def test_weights_roundtrip(tmp_path):
+    params = model.init_params(TINY, seed=1)
+    path = os.path.join(tmp_path, "w.bin")
+    aot.write_weights(path, {k: np.asarray(v) for k, v in params.items()})
+    raw = open(path, "rb").read()
+    assert raw[:6] == b"SPCD1\x00"
+    (count,) = struct.unpack("<I", raw[6:10])
+    assert count == len(params)
+    # Names must appear in sorted order (the canonical arg order).
+    off = 10
+    prev = ""
+    total = 0
+    for _ in range(count):
+        (nlen,) = struct.unpack("<H", raw[off:off + 2])
+        off += 2
+        name = raw[off:off + nlen].decode()
+        off += nlen
+        assert name > prev
+        prev = name
+        ndim = raw[off]
+        off += 1
+        dims = struct.unpack("<" + "I" * ndim, raw[off:off + 4 * ndim])
+        off += 4 * ndim
+        n = int(np.prod(dims)) if ndim else 1
+        vals = np.frombuffer(raw[off:off + 4 * n], np.float32).reshape(dims)
+        np.testing.assert_array_equal(vals, np.asarray(params[name]))
+        off += 4 * n
+        total += n
+    assert off == len(raw)
+    assert total == model.count_params(params)
+
+
+def test_golden_probe_deterministic():
+    params = {k: np.asarray(v) for k, v in model.init_params(TINY, seed=2).items()}
+    a = aot.golden_probe(TINY, params, "verify", 4)
+    b = aot.golden_probe(TINY, params, "verify", 4)
+    assert a == b
+    assert len(a["tokens"]) == 4
+    assert len(a["logits_head"]) == 4 and len(a["logits_head"][0]) == 8
+
+
+@pytest.mark.slow
+def test_export_smoke(tmp_path):
+    """Full export over a smoke-trained directory (exercises manifest and
+    eval prompt generation)."""
+    train_dir = os.path.join(tmp_path, "train")
+    os.makedirs(train_dir)
+    from compile.config import DRAFT_CONFIG, TARGET_CONFIG
+    from compile.train import save_params
+    save_params(os.path.join(train_dir, "target.npz"),
+                model.init_params(TARGET_CONFIG, 0))
+    save_params(os.path.join(train_dir, "draft_base.npz"),
+                model.init_params(DRAFT_CONFIG, 1))
+    out = os.path.join(tmp_path, "artifacts")
+    aot.export(train_dir, out)
+    manifest = json.load(open(os.path.join(out, "manifest.json")))
+    assert manifest["format"] == "specd-artifacts-v1"
+    assert set(manifest["models"]) == {"target", "draft_base"}
+    assert manifest["models"]["draft_base"]["c_ratio"] < 0.05
+    for arch in ("target", "draft"):
+        for entry in ("prefill", "verify", "decode"):
+            assert os.path.exists(os.path.join(out, "hlo", arch, f"{entry}.hlo.txt"))
+    prompts = json.load(open(os.path.join(out, "eval_prompts.json")))
+    assert set(prompts) == {"dolly", "xsum", "cnndm", "wmt"}

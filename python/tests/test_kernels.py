@@ -1,0 +1,212 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle (ref.py),
+swept over shapes and value regimes with hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import accept, attention, dist_loss, ref, rmsnorm, swiglu
+
+jax.config.update("jax_platform_name", "cpu")
+
+F32 = np.float32
+
+
+def arr(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(0, scale, shape).astype(F32))
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.integers(1, 300),
+    h=st.sampled_from([8, 24, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rmsnorm_matches_ref(n, h, seed):
+    rng = np.random.default_rng(seed)
+    x, w = arr(rng, n, h), arr(rng, h)
+    np.testing.assert_allclose(rmsnorm.rmsnorm(x, w), ref.rmsnorm(x, w), rtol=1e-5, atol=1e-5)
+
+
+def test_rmsnorm_extreme_values():
+    rng = np.random.default_rng(0)
+    x = arr(rng, 4, 32, scale=1e4)
+    w = arr(rng, 32)
+    np.testing.assert_allclose(rmsnorm.rmsnorm(x, w), ref.rmsnorm(x, w), rtol=1e-4)
+
+
+def test_rmsnorm_unit_gain_preserves_rms():
+    rng = np.random.default_rng(1)
+    x = arr(rng, 16, 64)
+    y = np.asarray(rmsnorm.rmsnorm(x, jnp.ones(64)))
+    rms = np.sqrt((y**2).mean(axis=-1))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# swiglu
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(1, 130),
+    h=st.sampled_from([16, 24, 128]),
+    i=st.sampled_from([48, 64, 384]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_swiglu_matches_ref(n, h, i, seed):
+    rng = np.random.default_rng(seed)
+    x = arr(rng, n, h)
+    w1, w3 = arr(rng, h, i, scale=0.1), arr(rng, h, i, scale=0.1)
+    w2 = arr(rng, i, h, scale=0.1)
+    np.testing.assert_allclose(
+        swiglu.swiglu(x, w1, w3, w2), ref.swiglu(x, w1, w3, w2), rtol=2e-4, atol=2e-4
+    )
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    t=st.sampled_from([1, 2, 5, 8, 32]),
+    s=st.sampled_from([64, 128, 256]),
+    h=st.sampled_from([1, 3, 8]),
+    d=st.sampled_from([8, 16]),
+    pos_frac=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(t, s, h, d, pos_frac, seed):
+    rng = np.random.default_rng(seed)
+    pos = int(pos_frac * (s - t))
+    q = arr(rng, t, h, d)
+    k, v = arr(rng, s, h, d), arr(rng, s, h, d)
+    got = attention.attention(q, k, v, jnp.asarray(pos, jnp.int32))
+    want = ref.attention(q, k, v, pos)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_attention_ignores_stale_future_rows():
+    """Rows beyond the query position must not affect the output — the
+    invariant KV rollback relies on."""
+    rng = np.random.default_rng(2)
+    t, s, h, d = 2, 64, 3, 8
+    q = arr(rng, t, h, d)
+    k, v = arr(rng, s, h, d), arr(rng, s, h, d)
+    pos = 10
+    out1 = attention.attention(q, k, v, jnp.asarray(pos, jnp.int32))
+    # Scribble garbage into rows pos+t.. (stale speculation).
+    k2 = k.at[pos + t :].set(999.0)
+    v2 = v.at[pos + t :].set(-999.0)
+    out2 = attention.attention(q, k2, v2, jnp.asarray(pos, jnp.int32))
+    np.testing.assert_allclose(out1, out2, rtol=1e-6)
+
+
+def test_attention_pos0_single_token_attends_self_only():
+    rng = np.random.default_rng(3)
+    q = arr(rng, 1, 2, 8)
+    k, v = arr(rng, 32, 2, 8), arr(rng, 32, 2, 8)
+    out = attention.attention(q, k, v, jnp.asarray(0, jnp.int32))
+    # With only row 0 visible, output must equal v[0] exactly.
+    np.testing.assert_allclose(out[0], v[0], rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused distillation losses
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.integers(1, 80),
+    v=st.sampled_from([32, 384]),
+    scale=st.sampled_from([0.5, 2.0, 8.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dist_losses_match_ref(n, v, scale, seed):
+    rng = np.random.default_rng(seed)
+    p, q = arr(rng, n, v, scale=scale), arr(rng, n, v, scale=scale)
+    np.testing.assert_allclose(dist_loss.kld(p, q), ref.kld(p, q), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(dist_loss.tvd(p, q), ref.tvd(p, q), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(
+        dist_loss.tvdpp_surrogate(p, q), ref.tvdpp_surrogate(p, q), rtol=1e-3, atol=1e-4
+    )
+
+
+def test_losses_vanish_when_p_equals_q():
+    rng = np.random.default_rng(4)
+    p = arr(rng, 10, 64)
+    assert float(dist_loss.kld(p, p)) == pytest.approx(0.0, abs=1e-5)
+    assert float(dist_loss.tvd(p, p)) == pytest.approx(0.0, abs=1e-5)
+
+
+def test_tvd_in_unit_interval():
+    rng = np.random.default_rng(5)
+    p, q = arr(rng, 20, 64, scale=5.0), arr(rng, 20, 64, scale=5.0)
+    t = float(dist_loss.tvd(p, q))
+    assert 0.0 <= t <= 1.0
+
+
+def test_tvdpp_sigma_identity():
+    """With p-weighted moments and a {0,1} reward, sigma^2 == mu(1-mu)
+    exactly (Bernoulli) — pins the kernel's moment assembly."""
+    rng = np.random.default_rng(6)
+    p, q = arr(rng, 30, 128), arr(rng, 30, 128)
+    _, mu, sigma = ref.tvdpp_stats(p, q)
+    np.testing.assert_allclose(float(sigma) ** 2, float(mu) * (1 - float(mu)), rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# speculative acceptance
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    g=st.integers(1, 7),
+    v=st.sampled_from([16, 384]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_accept_matches_ref(g, v, seed):
+    rng = np.random.default_rng(seed)
+    p = jax.nn.softmax(arr(rng, g, v, scale=3.0))
+    q = jax.nn.softmax(arr(rng, g, v, scale=3.0))
+    toks = jnp.asarray(rng.integers(0, v, g), jnp.int32)
+    us = jnp.asarray(rng.random(g), F32)
+    na1, r1 = accept.sd_accept(p, q, toks, us)
+    na2, r2 = ref.sd_accept(p, q, toks, us)
+    assert int(na1) == int(na2)
+    np.testing.assert_allclose(r1, r2, rtol=1e-5, atol=1e-6)
+
+
+def test_accept_identical_distributions_accepts_all():
+    rng = np.random.default_rng(7)
+    g, v = 5, 32
+    p = jax.nn.softmax(arr(rng, g, v))
+    toks = jnp.asarray(rng.integers(0, v, g), jnp.int32)
+    us = jnp.asarray(rng.random(g), F32)
+    na, _ = accept.sd_accept(p, p, toks, us)
+    assert int(na) == g
+
+
+def test_accept_residual_is_distribution():
+    rng = np.random.default_rng(8)
+    g, v = 4, 64
+    p = jax.nn.softmax(arr(rng, g, v, scale=4.0))
+    q = jax.nn.softmax(arr(rng, g, v, scale=4.0))
+    toks = jnp.asarray(rng.integers(0, v, g), jnp.int32)
+    us = jnp.ones(g, F32) * 0.999  # force rejection quickly
+    _, resid = accept.sd_accept(p, q, toks, us)
+    resid = np.asarray(resid)
+    assert resid.sum() == pytest.approx(1.0, abs=1e-5)
+    assert (resid >= 0).all()

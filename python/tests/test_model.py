@@ -1,0 +1,159 @@
+"""L2 model invariants: cached vs batched forward parity, pallas vs ref
+parity, KV-cache incremental consistency, rollback safety, param counting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.config import DRAFT_CONFIG, TARGET_CONFIG, ModelConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+TINY = ModelConfig(name="tiny", vocab_size=64, n_layers=2, n_heads=2, hidden=16,
+                   intermediate=32, max_seq=64)
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return model.init_params(TINY, seed=0)
+
+
+def tokens(rng, n, cfg=TINY):
+    return jnp.asarray(rng.integers(5, cfg.vocab_size, n).astype(np.int32))
+
+
+def test_param_count_matches_config():
+    for cfg in (TINY, DRAFT_CONFIG, TARGET_CONFIG):
+        params = model.init_params(cfg, seed=1)
+        assert model.count_params(params) == cfg.param_count()
+
+
+def test_param_names_sorted_and_complete(tiny_params):
+    names = model.param_names(TINY)
+    assert names == sorted(names)
+    assert set(names) == set(tiny_params.keys())
+    for n in names:
+        assert tiny_params[n].shape == model.param_shape(TINY, n)
+
+
+def test_draft_target_ratio_near_paper():
+    c = DRAFT_CONFIG.param_count() / TARGET_CONFIG.param_count()
+    # Paper: 1.64%. Ours: within [1%, 3%].
+    assert 0.01 < c < 0.03, c
+
+
+def test_cached_equals_train_forward(tiny_params):
+    rng = np.random.default_rng(0)
+    toks = tokens(rng, 12)
+    logits_train = model.forward_train(tiny_params, TINY, toks[None])[0]
+    kv = model.init_kv(TINY)
+    logits_cached, _ = model.forward_cached(
+        tiny_params, TINY, toks, kv, jnp.asarray(0, jnp.int32), use_pallas=False
+    )
+    np.testing.assert_allclose(logits_cached, logits_train, rtol=2e-4, atol=2e-4)
+
+
+def test_pallas_path_equals_ref_path(tiny_params):
+    rng = np.random.default_rng(1)
+    toks = tokens(rng, 8)
+    kv = model.init_kv(TINY)
+    pos = jnp.asarray(0, jnp.int32)
+    lp, kvp = model.forward_cached(tiny_params, TINY, toks, kv, pos, use_pallas=True)
+    lr, kvr = model.forward_cached(tiny_params, TINY, toks, kv, pos, use_pallas=False)
+    np.testing.assert_allclose(lp, lr, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(kvp, kvr, rtol=2e-4, atol=2e-4)
+
+
+def test_incremental_decode_equals_full_prefill(tiny_params):
+    """Prefill(a+b) == Prefill(a) then decode(b) token by token."""
+    rng = np.random.default_rng(2)
+    full = tokens(rng, 10)
+    kv = model.init_kv(TINY)
+    logits_full, _ = model.forward_cached(
+        tiny_params, TINY, full, kv, jnp.asarray(0, jnp.int32), use_pallas=False
+    )
+    kv = model.init_kv(TINY)
+    logits_inc, kv = model.forward_cached(
+        tiny_params, TINY, full[:4], kv, jnp.asarray(0, jnp.int32), use_pallas=False
+    )
+    rows = [np.asarray(logits_inc)]
+    for i in range(4, 10):
+        li, kv = model.forward_cached(
+            tiny_params, TINY, full[i : i + 1], kv, jnp.asarray(i, jnp.int32), use_pallas=False
+        )
+        rows.append(np.asarray(li))
+    got = np.concatenate(rows, axis=0)
+    np.testing.assert_allclose(got, logits_full, rtol=5e-4, atol=5e-4)
+
+
+def test_rollback_by_position_is_safe(tiny_params):
+    """Speculation writes rows then gets rejected: recomputing from the
+    accepted length must give identical logits, stale rows untouched."""
+    rng = np.random.default_rng(3)
+    prefix = tokens(rng, 6)
+    spec = tokens(rng, 3)  # speculative continuation, will be rejected
+    corrected = tokens(rng, 1)
+
+    kv = model.init_kv(TINY)
+    _, kv = model.forward_cached(
+        tiny_params, TINY, prefix, kv, jnp.asarray(0, jnp.int32), use_pallas=False
+    )
+    # Write speculation at 6..8, then "reject all" and feed the corrected
+    # token at position 6 (overwrites row 6; rows 7,8 stay stale).
+    _, kv_spec = model.forward_cached(
+        tiny_params, TINY, spec, kv, jnp.asarray(6, jnp.int32), use_pallas=False
+    )
+    logits_after_rollback, _ = model.forward_cached(
+        tiny_params, TINY, corrected, kv_spec, jnp.asarray(6, jnp.int32), use_pallas=False
+    )
+    # Ground truth: clean cache, same sequence.
+    kv2 = model.init_kv(TINY)
+    _, kv2 = model.forward_cached(
+        tiny_params, TINY, prefix, kv2, jnp.asarray(0, jnp.int32), use_pallas=False
+    )
+    logits_clean, _ = model.forward_cached(
+        tiny_params, TINY, corrected, kv2, jnp.asarray(6, jnp.int32), use_pallas=False
+    )
+    np.testing.assert_allclose(logits_after_rollback, logits_clean, rtol=5e-4, atol=5e-4)
+
+
+def test_rope_position_dependence(tiny_params):
+    """Same token at different positions must produce different logits
+    (RoPE is actually applied)."""
+    rng = np.random.default_rng(4)
+    seq = tokens(rng, 5)
+    kv = model.init_kv(TINY)
+    _, kv = model.forward_cached(
+        tiny_params, TINY, seq, kv, jnp.asarray(0, jnp.int32), use_pallas=False
+    )
+    tok = tokens(rng, 1)
+    l5, _ = model.forward_cached(
+        tiny_params, TINY, tok, kv, jnp.asarray(5, jnp.int32), use_pallas=False
+    )
+    # Re-use the same cache but place the token at position 3 (overwrite).
+    l3, _ = model.forward_cached(
+        tiny_params, TINY, tok, kv, jnp.asarray(3, jnp.int32), use_pallas=False
+    )
+    assert not np.allclose(np.asarray(l5), np.asarray(l3), atol=1e-5)
+
+
+def test_rope_rotation_preserves_norm():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(7, 2, 16)).astype(np.float32))
+    y = model.rope(x, jnp.arange(7), theta=10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-5,
+    )
+
+
+def test_init_deterministic():
+    a = model.init_params(TINY, seed=7)
+    b = model.init_params(TINY, seed=7)
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+    c = model.init_params(TINY, seed=8)
+    assert any(not np.allclose(np.asarray(a[k]), np.asarray(c[k])) for k in a)

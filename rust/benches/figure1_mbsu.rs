@@ -1,0 +1,103 @@
+//! Figure 1 — MBSU and relative token rate for draft models fine-tuned
+//! with {KLD, TVD, TVD++}, across tasks {Dolly, CNN-DM, XSum} and draft
+//! lengths gamma in {3, 5}.
+//!
+//! Regenerates the paper's 2x2 figure grid as tables:
+//!   * MBSU per (task, loss) at gamma = 3 and gamma = 5;
+//!   * token-rate ratio (SD / autoregressive) per (task, loss).
+//!
+//! Paper shape to reproduce: MBSU > 1 everywhere, TVD++ best-or-tied,
+//! Dolly the strongest task; absolute values differ (simulated substrate).
+//!
+//! Run: cargo bench --bench figure1_mbsu  [-- --prompts 16 --max-new 32]
+
+use std::sync::Arc;
+
+use specd::artifacts::Manifest;
+use specd::cli::Args;
+use specd::eval::{eval_cell, render_cells, ArBaselineCache, CellResult, EvalOptions};
+use specd::runtime::Runtime;
+use specd::workload::{EvalSuite, TASKS};
+
+fn main() -> specd::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let args = Args::new("figure1_mbsu", "paper Figure 1: MBSU + token-rate grid")
+        .opt("artifacts", "artifacts", "artifact bundle directory")
+        .opt("prompts", "12", "prompts per cell")
+        .opt("max-new", "32", "max new tokens")
+        .opt("gammas", "3,5", "comma-separated draft lengths")
+        .parse_from(&argv)?;
+
+    if !specd::artifacts::bundle_exists(args.str("artifacts")) {
+        println!("figure1_mbsu: no artifact bundle — run `make artifacts` first");
+        return Ok(());
+    }
+    let manifest = Manifest::load(args.str("artifacts"))?;
+    let rt = Arc::new(Runtime::new()?);
+    let draft_arch = rt.load_arch(&manifest, "draft")?;
+    let target_arch = rt.load_arch(&manifest, "target")?;
+    let target = rt.load_model(&manifest, &target_arch, "target")?;
+    let suite = EvalSuite::load(&manifest.root.join("eval_prompts.json"))?;
+    let opts = EvalOptions {
+        n_prompts: args.usize("prompts")?,
+        max_new: args.usize("max-new")?,
+        seed: 0,
+    };
+
+    // Final checkpoint per loss (the models Figure 1 evaluates).
+    let all = manifest.draft_models();
+    let model_for = |loss: &str| -> Option<String> {
+        all.iter().filter(|n| n.contains(&format!("_{loss}_"))).max().cloned()
+    };
+
+    let mut ar_cache = ArBaselineCache::default();
+    let gammas: Vec<usize> =
+        args.list("gammas").iter().map(|g| g.parse().unwrap_or(3)).collect();
+    let mut cells: Vec<CellResult> = Vec::new();
+    for &gamma in &gammas {
+        for task in TASKS {
+            for loss in ["kld", "tvd", "tvdpp"] {
+                let Some(name) = model_for(loss) else { continue };
+                let draft = rt.load_model(&manifest, &draft_arch, &name)?;
+                let cell = eval_cell(&draft, &target, &suite, task, gamma, &opts, &mut ar_cache)?;
+                println!(
+                    "cell done: {task} gamma={gamma} {loss}: tau={:.3} mbsu={:.3} ratio={:.2}",
+                    cell.tau, cell.mbsu, cell.rate_ratio
+                );
+                cells.push(cell);
+            }
+        }
+    }
+
+    render_cells("Figure 1 — MBSU & token-rate grid", &cells, true);
+
+    // Paper-style per-gamma summaries.
+    for &gamma in &gammas {
+        println!("\nFigure 1 summary (gamma = {gamma}):");
+        for task in TASKS {
+            let row: Vec<String> = ["kld", "tvd", "tvdpp"]
+                .iter()
+                .filter_map(|loss| {
+                    cells
+                        .iter()
+                        .find(|c| {
+                            c.task == task
+                                && c.gamma == gamma
+                                && c.draft_model.contains(&format!("_{loss}_"))
+                        })
+                        .map(|c| format!("{}={:.3}", loss.to_uppercase(), c.mbsu))
+                })
+                .collect();
+            println!("  {task:<6} MBSU: {}", row.join("  "));
+        }
+    }
+    let best = cells.iter().cloned().reduce(|a, b| if a.mbsu >= b.mbsu { a } else { b });
+    if let Some(b) = best {
+        println!(
+            "\nheadline: best MBSU {:.3} / tau {:.3} / rate ratio {:.2} ({} on {}, gamma {})",
+            b.mbsu, b.tau, b.rate_ratio, b.draft_model, b.task, b.gamma
+        );
+        println!("(paper headline: up to 2.3 block efficiency, 2.4x speed-up)");
+    }
+    Ok(())
+}

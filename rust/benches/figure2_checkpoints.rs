@@ -1,0 +1,81 @@
+//! Figure 2 — block efficiency (gamma = 3) across fine-tuning checkpoints,
+//! per task and per loss, with the pretrained base draft as ckpt 0.
+//!
+//! Paper shape to reproduce: block efficiency improves with fine-tuning on
+//! every in-distribution task (~+21% on Dolly in the paper), for all three
+//! losses, with TVD++ best-or-tied.
+//!
+//! Run: cargo bench --bench figure2_checkpoints
+
+use std::sync::Arc;
+
+use specd::artifacts::Manifest;
+use specd::benchkit::Table;
+use specd::cli::Args;
+use specd::eval::{eval_block_efficiency, EvalOptions};
+use specd::runtime::Runtime;
+use specd::workload::TASKS;
+
+fn main() -> specd::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let args = Args::new("figure2_checkpoints", "paper Figure 2: tau vs checkpoint")
+        .opt("artifacts", "artifacts", "artifact bundle directory")
+        .opt("prompts", "12", "prompts per cell")
+        .opt("max-new", "32", "max new tokens")
+        .opt("gamma", "3", "draft length (paper uses 3)")
+        .parse_from(&argv)?;
+
+    if !specd::artifacts::bundle_exists(args.str("artifacts")) {
+        println!("figure2_checkpoints: no artifact bundle — run `make artifacts` first");
+        return Ok(());
+    }
+    let manifest = Manifest::load(args.str("artifacts"))?;
+    let rt = Arc::new(Runtime::new()?);
+    let draft_arch = rt.load_arch(&manifest, "draft")?;
+    let target_arch = rt.load_arch(&manifest, "target")?;
+    let target = rt.load_model(&manifest, &target_arch, "target")?;
+    let suite = specd::workload::EvalSuite::load(&manifest.root.join("eval_prompts.json"))?;
+    let opts = EvalOptions {
+        n_prompts: args.usize("prompts")?,
+        max_new: args.usize("max-new")?,
+        seed: 0,
+    };
+    let gamma = args.usize("gamma")?;
+
+    // Checkpoints per loss, ordered; ckpt0 = base draft for every loss.
+    let all = manifest.draft_models();
+    let ckpts = |loss: &str| -> Vec<String> {
+        let mut v: Vec<String> =
+            all.iter().filter(|n| n.contains(&format!("_{loss}_ckpt"))).cloned().collect();
+        v.sort();
+        v
+    };
+
+    for task in TASKS {
+        println!("\nFigure 2 — task {task}, gamma {gamma} (tau per checkpoint)");
+        let n_ck = ckpts("kld").len();
+        let mut headers = vec!["loss".to_string(), "ckpt0(base)".to_string()];
+        headers.extend((1..=n_ck).map(|i| format!("ckpt{i}")));
+        let headers_ref: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut table = Table::new(&headers_ref);
+
+        let base = rt.load_model(&manifest, &draft_arch, "draft_base")?;
+        let base_cell = eval_block_efficiency(&base, &target, &suite, task, gamma, &opts)?;
+
+        for loss in ["kld", "tvd", "tvdpp"] {
+            let mut row = vec![loss.to_uppercase(), format!("{:.3}", base_cell.tau)];
+            for name in ckpts(loss) {
+                let draft = rt.load_model(&manifest, &draft_arch, &name)?;
+                let cell = eval_block_efficiency(&draft, &target, &suite, task, gamma, &opts)?;
+                row.push(format!("{:.3}", cell.tau));
+            }
+            while row.len() < headers.len() {
+                row.push("-".to_string());
+            }
+            table.row(&row);
+        }
+        table.print();
+        println!("(paper: fine-tuning improves tau over base on in-distribution tasks)");
+    }
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! Figure 3 / §A.5 — block efficiency on the out-of-distribution WMT-like
+//! translation task for the base draft vs all fine-tuned drafts.
+//!
+//! Paper shape to reproduce: every fine-tuned draft is *outperformed by
+//! the base draft* on translation, because wmt was excluded from the
+//! distillation seeds. The §A.5 remedy ("add in-distribution samples") is
+//! reproducible by retraining with `python -m compile.train --include-wmt`
+//! and re-running this bench.
+//!
+//! Run: cargo bench --bench figure3_ood
+
+use std::sync::Arc;
+
+use specd::artifacts::Manifest;
+use specd::benchkit::Table;
+use specd::cli::Args;
+use specd::eval::{eval_block_efficiency, EvalOptions};
+use specd::runtime::Runtime;
+use specd::workload::OOD_TASK;
+
+fn main() -> specd::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let args = Args::new("figure3_ood", "paper Figure 3: OOD translation task")
+        .opt("artifacts", "artifacts", "artifact bundle directory")
+        .opt("prompts", "16", "prompts per cell")
+        .opt("max-new", "24", "max new tokens")
+        .opt("gamma", "3", "draft length")
+        .parse_from(&argv)?;
+
+    if !specd::artifacts::bundle_exists(args.str("artifacts")) {
+        println!("figure3_ood: no artifact bundle — run `make artifacts` first");
+        return Ok(());
+    }
+    let manifest = Manifest::load(args.str("artifacts"))?;
+    let rt = Arc::new(Runtime::new()?);
+    let draft_arch = rt.load_arch(&manifest, "draft")?;
+    let target_arch = rt.load_arch(&manifest, "target")?;
+    let target = rt.load_model(&manifest, &target_arch, "target")?;
+    let suite = specd::workload::EvalSuite::load(&manifest.root.join("eval_prompts.json"))?;
+    let opts = EvalOptions {
+        n_prompts: args.usize("prompts")?,
+        max_new: args.usize("max-new")?,
+        seed: 0,
+    };
+    let gamma = args.usize("gamma")?;
+
+    println!("Figure 3 — OOD task '{OOD_TASK}' (gamma {gamma})");
+    let mut table = Table::new(&["draft model", "tau (wmt)", "acceptance", "vs base"]);
+    let base = rt.load_model(&manifest, &draft_arch, "draft_base")?;
+    let base_cell = eval_block_efficiency(&base, &target, &suite, OOD_TASK, gamma, &opts)?;
+    table.row(&[
+        "draft_base".to_string(),
+        format!("{:.3}", base_cell.tau),
+        format!("{:.3}", base_cell.acceptance),
+        "1.000".to_string(),
+    ]);
+
+    let mut inversions = 0usize;
+    let mut finetuned = 0usize;
+    for name in manifest.draft_models() {
+        if name == "draft_base" {
+            continue;
+        }
+        let draft = rt.load_model(&manifest, &draft_arch, &name)?;
+        let cell = eval_block_efficiency(&draft, &target, &suite, OOD_TASK, gamma, &opts)?;
+        finetuned += 1;
+        inversions += (cell.tau < base_cell.tau) as usize;
+        table.row(&[
+            name,
+            format!("{:.3}", cell.tau),
+            format!("{:.3}", cell.acceptance),
+            format!("{:.3}", cell.tau / base_cell.tau.max(1e-9)),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nOOD inversion: {inversions}/{finetuned} fine-tuned drafts fall below base \
+         (paper: all fine-tuned drafts underperform base on WMT)"
+    );
+    Ok(())
+}

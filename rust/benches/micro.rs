@@ -1,0 +1,117 @@
+//! Microbenchmarks of the L3 hot path: per-entry execute latency, logits
+//! post-processing, rejection sampling, channel throughput. These are the
+//! profiling probes for the EXPERIMENTS.md §Perf iteration log.
+//!
+//! Run: cargo bench --bench micro
+
+use std::sync::Arc;
+
+use specd::artifacts::Manifest;
+use specd::benchkit::Bench;
+use specd::config::SamplingConfig;
+use specd::rng::Pcg64;
+use specd::runtime::{Entry, Runtime};
+use specd::sampling::{logits_to_probs, verify_block};
+
+fn main() -> specd::Result<()> {
+    // --- host-side primitives (no artifacts needed) ------------------------
+    let mut rng = Pcg64::new(0);
+    let v = 384;
+    let logits: Vec<f32> = (0..v).map(|_| rng.next_normal() as f32).collect();
+    let cfg = SamplingConfig::random(0.6, 0.9, 0);
+
+    Bench::new("host/logits_to_probs(v=384,topp)").iters(2000).run(|| {
+        std::hint::black_box(logits_to_probs(std::hint::black_box(&logits), &cfg));
+    });
+    let greedy = SamplingConfig::greedy();
+    Bench::new("host/logits_to_probs(v=384,greedy)").iters(2000).run(|| {
+        std::hint::black_box(logits_to_probs(std::hint::black_box(&logits), &greedy));
+    });
+
+    let gamma = 5;
+    let p: Vec<Vec<f32>> = (0..gamma).map(|_| logits_to_probs(&logits, &cfg)).collect();
+    let q: Vec<Vec<f32>> = (0..=gamma).map(|_| logits_to_probs(&logits, &cfg)).collect();
+    let toks: Vec<u32> = (0..gamma as u32).collect();
+    Bench::new("host/verify_block(gamma=5,v=384)").iters(2000).run(|| {
+        let mut r = Pcg64::new(1);
+        std::hint::black_box(verify_block(&p, &q, &toks, &mut r));
+    });
+
+    Bench::new("host/channel send+recv").iters(500).run(|| {
+        let (tx, rx) = specd::exec::bounded(64);
+        for i in 0..64 {
+            tx.send(i).unwrap();
+        }
+        for _ in 0..64 {
+            rx.recv().unwrap();
+        }
+    });
+
+    // --- device-side entry points (need artifacts) -------------------------
+    let dir = "artifacts";
+    if !specd::artifacts::bundle_exists(dir) {
+        println!("micro: no artifact bundle — device benches skipped");
+        return Ok(());
+    }
+    let manifest = Manifest::load(dir)?;
+    let rt = Arc::new(Runtime::new()?);
+    let draft_arch = rt.load_arch(&manifest, "draft")?;
+    let target_arch = rt.load_arch(&manifest, "target")?;
+    let target = rt.load_model(&manifest, &target_arch, "target")?;
+    let draft_name = manifest
+        .draft_models()
+        .into_iter()
+        .next()
+        .unwrap_or_else(|| "draft_base".to_string());
+    let draft = rt.load_model(&manifest, &draft_arch, &draft_name)?;
+
+    let prompt: Vec<u32> = (0..24).map(|i| 5 + (i * 3) % 300).collect();
+
+    for (label, model) in [("draft", &draft), ("target", &target)] {
+        let mut state = Some(model.new_state()?);
+        let mut pos = 0usize;
+        {
+            let (s, _) = model.prefill_prompt(&prompt)?;
+            state = Some(s);
+            pos = prompt.len();
+        }
+        Bench::new(format!("device/{label}/decode1")).iters(100).run(|| {
+            let s = state.take().unwrap();
+            let (s, l) = model.run(Entry::Decode, s, &[7], pos).unwrap();
+            std::hint::black_box(&l);
+            state = Some(s);
+            pos += 1;
+            if pos + 2 >= model.max_seq() {
+                let (s2, _) = model.prefill_prompt(&prompt).unwrap();
+                state = Some(s2);
+                pos = prompt.len();
+            }
+        });
+
+        let mut state2 = Some(model.prefill_prompt(&prompt)?.0);
+        let mut pos2 = prompt.len();
+        let block: Vec<u32> = (0..6u32).map(|i| 5 + i).collect();
+        Bench::new(format!("device/{label}/verify6")).iters(100).run(|| {
+            let s = state2.take().unwrap();
+            let (s, l) = model.run(Entry::Verify, s, &block, pos2).unwrap();
+            std::hint::black_box(&l);
+            state2 = Some(s);
+            pos2 += block.len();
+            if pos2 + 8 >= model.max_seq() {
+                let (s2, _) = model.prefill_prompt(&prompt).unwrap();
+                state2 = Some(s2);
+                pos2 = prompt.len();
+            }
+        });
+
+        Bench::new(format!("device/{label}/prefill24")).iters(50).run(|| {
+            let (s, l) = model.prefill_prompt(&prompt).unwrap();
+            std::hint::black_box((&s, &l));
+        });
+
+        Bench::new(format!("device/{label}/new_state")).iters(50).run(|| {
+            std::hint::black_box(model.new_state().unwrap());
+        });
+    }
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Table 1 — draft and target model configurations, regenerated from the
+//! artifact manifest (the scaled analogue of the paper's Llama 2-Chat 7B
+//! vs Llama 2-Chat-Drafter 115M table), plus the realized parameter ratio
+//! c that enters MBSU.
+//!
+//! Run: cargo bench --bench table1_configs
+
+use specd::artifacts::Manifest;
+use specd::benchkit::Table;
+
+fn main() -> specd::Result<()> {
+    let dir = std::env::args()
+        .skip(1)
+        .filter(|a| a != "--bench")
+        .next()
+        .unwrap_or_else(|| "artifacts".to_string());
+    if !specd::artifacts::bundle_exists(&dir) {
+        println!("table1_configs: no artifact bundle — run `make artifacts` first");
+        return Ok(());
+    }
+    let manifest = Manifest::load(&dir)?;
+
+    println!("Table 1 — model configurations (paper-scaled)");
+    let mut t = Table::new(&["", "target (Llama2-Chat-7B role)", "draft (Drafter-115M role)"]);
+    let tgt = manifest.arch("target")?;
+    let drf = manifest.arch("draft")?;
+    let row = |name: &str, a: usize, b: usize| [name.to_string(), a.to_string(), b.to_string()];
+    t.row(&row("Layers", tgt.n_layers, drf.n_layers));
+    t.row(&row("Attention heads", tgt.n_heads, drf.n_heads));
+    t.row(&row("Hidden dim", tgt.hidden, drf.hidden));
+    t.row(&row("Head dim", tgt.head_dim, drf.head_dim));
+    t.row(&row("Vocab", tgt.vocab_size, drf.vocab_size));
+    t.row(&row("Max seq", tgt.max_seq, drf.max_seq));
+    t.row(&["Activation".to_string(), "SiLU".to_string(), "SiLU".to_string()]);
+    t.print();
+
+    println!("\nTrained models in bundle:");
+    let mut t2 = Table::new(&["model", "arch", "params", "c = params/target"]);
+    for (name, m) in &manifest.models {
+        t2.row(&[
+            name.clone(),
+            m.arch.clone(),
+            m.params.to_string(),
+            format!("{:.4} ({:.2}%)", m.c_ratio, m.c_ratio * 100.0),
+        ]);
+    }
+    t2.print();
+    let c = manifest.model("draft_base").map(|m| m.c_ratio).unwrap_or(0.0);
+    println!("\n(paper: draft = 1.64% of target; this bundle: {:.2}%)", c * 100.0);
+    Ok(())
+}

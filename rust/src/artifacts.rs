@@ -1,0 +1,253 @@
+//! Artifact bundle loading: `manifest.json`, `vocab.json`, HLO paths and
+//! weight files produced by `make artifacts` (python/compile/aot.py).
+//!
+//! The manifest is the single source of truth the Rust side trusts about
+//! the build-time world: architecture dims, KV/state vector lengths, the
+//! canonical parameter order, per-model parameter counts and the measured
+//! draft:target ratio `c` that enters the MBSU metric.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::json::Value;
+
+/// One exported architecture (shared by all weight variants of that shape).
+#[derive(Debug, Clone)]
+pub struct ArchInfo {
+    pub name: String,
+    pub hlo_dir: String,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub hidden: usize,
+    pub head_dim: usize,
+    pub max_seq: usize,
+    pub vocab_size: usize,
+    /// f32 elements of the KV region at the front of the state vector.
+    pub kv_len: usize,
+    /// total f32 elements of the state vector (kv + logits region).
+    pub state_len: usize,
+    pub param_order: Vec<String>,
+}
+
+/// One trained model (weights variant).
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub arch: String,
+    pub weights_rel: String,
+    pub params: usize,
+    /// params(model) / params(target) — the paper's relative latency proxy.
+    pub c_ratio: f64,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub vocab_file: String,
+    pub vocab_size: usize,
+    pub vocab_hash: String,
+    /// entry point name -> token block size.
+    pub entry_blocks: BTreeMap<String, usize>,
+    pub archs: BTreeMap<String, ArchInfo>,
+    pub models: BTreeMap<String, ModelInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let root = PathBuf::from(dir);
+        let text = std::fs::read_to_string(root.join("manifest.json")).map_err(|e| {
+            Error::Manifest(format!(
+                "cannot read {}/manifest.json (run `make artifacts` first): {e}",
+                dir
+            ))
+        })?;
+        let v = Value::parse(&text)?;
+        Self::from_value(root, &v)
+    }
+
+    pub fn from_value(root: PathBuf, v: &Value) -> Result<Manifest> {
+        if v.req_str("format")? != "specd-artifacts-v1" {
+            return Err(Error::Manifest(format!(
+                "unsupported artifact format {:?}",
+                v.get("format")
+            )));
+        }
+        let vocab = v.get("vocab");
+        let mut entry_blocks = BTreeMap::new();
+        for (name, ep) in v
+            .get("entry_points")
+            .as_obj()
+            .ok_or_else(|| Error::Manifest("missing entry_points".into()))?
+        {
+            entry_blocks.insert(name.clone(), ep.req_usize("block")?);
+        }
+        let mut archs = BTreeMap::new();
+        for (name, a) in
+            v.get("arch").as_obj().ok_or_else(|| Error::Manifest("missing arch".into()))?
+        {
+            let param_order = a
+                .get("param_order")
+                .as_arr()
+                .ok_or_else(|| Error::Manifest("missing param_order".into()))?
+                .iter()
+                .map(|x| x.as_str().unwrap_or("").to_string())
+                .collect();
+            archs.insert(
+                name.clone(),
+                ArchInfo {
+                    name: name.clone(),
+                    hlo_dir: a.req_str("hlo_dir")?.to_string(),
+                    n_layers: a.req_usize("n_layers")?,
+                    n_heads: a.req_usize("n_heads")?,
+                    hidden: a.req_usize("hidden")?,
+                    head_dim: a.req_usize("head_dim")?,
+                    max_seq: a.req_usize("max_seq")?,
+                    vocab_size: a.req_usize("vocab_size")?,
+                    kv_len: a.req_usize("kv_len")?,
+                    state_len: a.req_usize("state_len")?,
+                    param_order,
+                },
+            );
+        }
+        let mut models = BTreeMap::new();
+        for (name, m) in
+            v.get("models").as_obj().ok_or_else(|| Error::Manifest("missing models".into()))?
+        {
+            let arch = m.req_str("arch")?.to_string();
+            if !archs.contains_key(&arch) {
+                return Err(Error::Manifest(format!("model {name} references unknown arch {arch}")));
+            }
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    name: name.clone(),
+                    arch,
+                    weights_rel: m.req_str("weights")?.to_string(),
+                    params: m.req_usize("params")?,
+                    c_ratio: m.req_f64("c_ratio")?,
+                },
+            );
+        }
+        Ok(Manifest {
+            root,
+            vocab_file: vocab.req_str("file")?.to_string(),
+            vocab_size: vocab.req_usize("size")?,
+            vocab_hash: vocab.req_str("hash")?.to_string(),
+            entry_blocks,
+            archs,
+            models,
+        })
+    }
+
+    pub fn arch(&self, name: &str) -> Result<&ArchInfo> {
+        self.archs
+            .get(name)
+            .ok_or_else(|| Error::Manifest(format!("unknown architecture '{name}'")))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models.get(name).ok_or_else(|| {
+            Error::Manifest(format!(
+                "unknown model '{name}' (available: {})",
+                self.models.keys().cloned().collect::<Vec<_>>().join(", ")
+            ))
+        })
+    }
+
+    pub fn hlo_path(&self, arch: &str, entry: &str) -> Result<PathBuf> {
+        let a = self.arch(arch)?;
+        if !self.entry_blocks.contains_key(entry) {
+            return Err(Error::Manifest(format!("unknown entry point '{entry}'")));
+        }
+        Ok(self.root.join(&a.hlo_dir).join(format!("{entry}.hlo.txt")))
+    }
+
+    pub fn weights_path(&self, model: &str) -> Result<PathBuf> {
+        Ok(self.root.join(&self.model(model)?.weights_rel))
+    }
+
+    pub fn vocab_path(&self) -> PathBuf {
+        self.root.join(&self.vocab_file)
+    }
+
+    /// All draft model names (everything that is not the target arch),
+    /// sorted — the checkpoint sweep in the Figure 2 bench iterates this.
+    pub fn draft_models(&self) -> Vec<String> {
+        self.models
+            .values()
+            .filter(|m| m.arch == "draft")
+            .map(|m| m.name.clone())
+            .collect()
+    }
+}
+
+/// Convenience: does this path look like a complete artifact bundle?
+pub fn bundle_exists(dir: &str) -> bool {
+    Path::new(dir).join("manifest.json").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> Value {
+        Value::parse(
+            r#"{
+            "format": "specd-artifacts-v1",
+            "vocab": {"file": "vocab.json", "size": 384, "hash": "abc"},
+            "entry_points": {"prefill": {"block": 32}, "verify": {"block": 8}, "decode": {"block": 1}},
+            "arch": {
+                "target": {"hlo_dir": "hlo/target", "n_layers": 6, "n_heads": 8,
+                           "hidden": 128, "intermediate": 384, "head_dim": 16,
+                           "max_seq": 256, "vocab_size": 384, "kv_len": 393216,
+                           "state_len": 405504, "param_order": ["embed", "final_norm"]},
+                "draft": {"hlo_dir": "hlo/draft", "n_layers": 2, "n_heads": 3,
+                          "hidden": 24, "intermediate": 64, "head_dim": 8,
+                          "max_seq": 256, "vocab_size": 384, "kv_len": 24576,
+                          "state_len": 36864, "param_order": ["embed", "final_norm"]}
+            },
+            "models": {
+                "target": {"arch": "target", "weights": "weights/target.bin",
+                           "params": 1377920, "c_ratio": 1.0},
+                "draft_base": {"arch": "draft", "weights": "weights/draft_base.bin",
+                               "params": 23160, "c_ratio": 0.0168}
+            }
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::from_value(PathBuf::from("/tmp/x"), &sample_manifest()).unwrap();
+        assert_eq!(m.entry_blocks["verify"], 8);
+        assert_eq!(m.arch("draft").unwrap().kv_len, 24576);
+        assert!((m.model("draft_base").unwrap().c_ratio - 0.0168).abs() < 1e-9);
+        assert_eq!(m.draft_models(), vec!["draft_base".to_string()]);
+    }
+
+    #[test]
+    fn paths_resolve() {
+        let m = Manifest::from_value(PathBuf::from("/a"), &sample_manifest()).unwrap();
+        assert_eq!(
+            m.hlo_path("draft", "decode").unwrap(),
+            PathBuf::from("/a/hlo/draft/decode.hlo.txt")
+        );
+        assert_eq!(m.weights_path("target").unwrap(), PathBuf::from("/a/weights/target.bin"));
+    }
+
+    #[test]
+    fn unknown_names_fail() {
+        let m = Manifest::from_value(PathBuf::from("/a"), &sample_manifest()).unwrap();
+        assert!(m.model("nope").is_err());
+        assert!(m.arch("nope").is_err());
+        assert!(m.hlo_path("draft", "nope").is_err());
+    }
+
+    #[test]
+    fn wrong_format_rejected() {
+        let v = Value::parse(r#"{"format": "v999"}"#).unwrap();
+        assert!(Manifest::from_value(PathBuf::from("/a"), &v).is_err());
+    }
+}

@@ -1,0 +1,106 @@
+//! Autoregressive baseline decoder — the comparator for every figure.
+//!
+//! One target-model decode call per emitted token; same sampling pipeline
+//! as the speculative engine so token-rate ratios isolate the decoding
+//! strategy, not the sampler.
+
+use crate::config::SamplingConfig;
+use crate::error::Result;
+use crate::kvcache::SeqCache;
+use crate::metrics::RateMeasurement;
+use crate::rng::Pcg64;
+use crate::runtime::{Entry, Model, SeqState};
+use crate::sampling::{logits_to_probs, sample_token};
+use crate::tokenizer::EOS;
+
+/// Counters for an autoregressive run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ArStats {
+    pub generated: usize,
+    pub target_calls: usize,
+}
+
+pub struct ArSession {
+    pub seq: Vec<u32>,
+    pub prompt_len: usize,
+    cache: SeqCache<SeqState>,
+    last_logits: Vec<f32>,
+    pub stats: ArStats,
+    pub finished: bool,
+}
+
+impl ArSession {
+    pub fn generated(&self) -> &[u32] {
+        &self.seq[self.prompt_len..]
+    }
+}
+
+/// Plain autoregressive decoding with the target model.
+pub struct ArDecoder<'a> {
+    pub target: &'a Model,
+}
+
+impl<'a> ArDecoder<'a> {
+    pub fn new(target: &'a Model) -> Self {
+        ArDecoder { target }
+    }
+
+    pub fn start(&self, prompt: &[u32]) -> Result<ArSession> {
+        let (state, last_logits) = self.target.prefill_prompt(prompt)?;
+        let mut cache = SeqCache::new(state, self.target.max_seq());
+        cache.advance(prompt.len())?;
+        let pf = self.target.arch.block(Entry::Prefill);
+        Ok(ArSession {
+            seq: prompt.to_vec(),
+            prompt_len: prompt.len(),
+            cache,
+            last_logits,
+            stats: ArStats { generated: 0, target_calls: prompt.len().div_ceil(pf) },
+            finished: false,
+        })
+    }
+
+    /// Emit one token.
+    pub fn step(&self, s: &mut ArSession, cfg: &SamplingConfig, rng: &mut Pcg64) -> Result<Option<u32>> {
+        if s.finished || s.seq.len() + 1 >= self.target.max_seq() {
+            s.finished = true;
+            return Ok(None);
+        }
+        let probs = logits_to_probs(&s.last_logits, cfg);
+        let tok = sample_token(&probs, cfg, rng);
+        s.seq.push(tok);
+        s.stats.generated += 1;
+        if tok == EOS {
+            s.finished = true;
+            return Ok(Some(tok));
+        }
+        let state = s.cache.take_state()?;
+        let (state, logits) = self.target.run(Entry::Decode, state, &[tok], s.cache.len())?;
+        s.cache.put_state(state);
+        s.cache.advance(1)?;
+        s.stats.target_calls += 1;
+        s.last_logits = logits;
+        Ok(Some(tok))
+    }
+
+    /// Generate up to `max_new` tokens; returns tokens + wall-clock rate.
+    pub fn generate(
+        &self,
+        prompt: &[u32],
+        max_new: usize,
+        cfg: &SamplingConfig,
+        rng: &mut Pcg64,
+    ) -> Result<(Vec<u32>, ArStats, RateMeasurement)> {
+        let t0 = std::time::Instant::now();
+        let mut s = self.start(prompt)?;
+        for _ in 0..max_new {
+            if self.step(&mut s, cfg, rng)?.is_none() {
+                break;
+            }
+        }
+        let elapsed = t0.elapsed();
+        let out = s.generated().to_vec();
+        let rate = RateMeasurement { new_tokens: out.len(), elapsed };
+        Ok((out, s.stats, rate))
+    }
+}

@@ -1,0 +1,222 @@
+//! Benchmark statistics harness substrate (criterion is unavailable offline).
+//!
+//! Provides warmup, timed iteration batches, robust statistics (median, MAD,
+//! IQR outlier trimming) and a compact report format. The figure benches in
+//! `rust/benches/` use [`Bench`] for wall-clock rows and [`Stats`] directly
+//! for derived metrics (block efficiency, MBSU).
+
+use std::time::{Duration, Instant};
+
+/// Robust summary statistics over a sample of f64 measurements.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn from(mut xs: Vec<f64>) -> Stats {
+        assert!(!xs.is_empty(), "stats over empty sample");
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Stats {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: xs[0],
+            p50: percentile(&xs, 0.50),
+            p90: percentile(&xs, 0.90),
+            p99: percentile(&xs, 0.99),
+            max: xs[n - 1],
+        }
+    }
+
+    /// Drop samples outside 1.5 IQR (criterion-style outlier trimming).
+    pub fn from_trimmed(mut xs: Vec<f64>) -> Stats {
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q1 = percentile(&xs, 0.25);
+        let q3 = percentile(&xs, 0.75);
+        let iqr = q3 - q1;
+        let (lo, hi) = (q1 - 1.5 * iqr, q3 + 1.5 * iqr);
+        let kept: Vec<f64> = xs.iter().copied().filter(|&x| x >= lo && x <= hi).collect();
+        Stats::from(if kept.is_empty() { xs } else { kept })
+    }
+}
+
+/// Sorted-input percentile with linear interpolation.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// A named wall-clock benchmark with warmup and trimmed statistics.
+pub struct Bench {
+    pub name: String,
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Self {
+        Bench { name: name.into(), warmup_iters: 3, measure_iters: 10 }
+    }
+
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup_iters = n;
+        self
+    }
+
+    pub fn iters(mut self, n: usize) -> Self {
+        self.measure_iters = n;
+        self
+    }
+
+    /// Run `f` (one logical iteration per call) and report trimmed stats.
+    pub fn run<F: FnMut()>(&self, mut f: F) -> Stats {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.measure_iters);
+        for _ in 0..self.measure_iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let stats = Stats::from_trimmed(samples);
+        println!(
+            "bench {:<42} n={:<3} p50={:>10} mean={:>10} p90={:>10}",
+            self.name,
+            stats.n,
+            fmt_duration(stats.p50),
+            fmt_duration(stats.mean),
+            fmt_duration(stats.p90),
+        );
+        stats
+    }
+}
+
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.3}ms", secs * 1e3)
+    } else {
+        format!("{secs:.3}s")
+    }
+}
+
+/// Measure a single closure's wall time.
+pub fn time_it<R>(f: impl FnOnce() -> R) -> (R, Duration) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed())
+}
+
+/// Fixed-width table printer for the figure benches: the paper's rows.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", widths.iter().map(|w| "-".repeat(*w + 2)).collect::<String>());
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let s = Stats::from(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = vec![0.0, 10.0];
+        assert!((percentile(&xs, 0.5) - 5.0).abs() < 1e-12);
+        assert!((percentile(&xs, 0.9) - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trimming_removes_outliers() {
+        let mut xs = vec![1.0; 20];
+        xs.push(1000.0);
+        let s = Stats::from_trimmed(xs);
+        assert!(s.max < 10.0, "outlier survived: {}", s.max);
+    }
+
+    #[test]
+    fn bench_runs_and_counts() {
+        let mut count = 0;
+        let b = Bench::new("noop").warmup(1).iters(5);
+        let s = b.run(|| count += 1);
+        assert_eq!(count, 6);
+        assert!(s.n >= 1);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert!(fmt_duration(2e-9).ends_with("ns"));
+        assert!(fmt_duration(2e-6).ends_with("µs"));
+        assert!(fmt_duration(2e-3).ends_with("ms"));
+        assert!(fmt_duration(2.0).ends_with('s'));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".to_string()]);
+    }
+}

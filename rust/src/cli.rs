@@ -1,0 +1,250 @@
+//! Declarative CLI argument parser substrate (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! defaults, required flags, and generated `--help` text. Used by the
+//! `specd` launcher, the examples and the bench harnesses.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+#[derive(Clone)]
+struct Spec {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    takes_value: bool,
+    required: bool,
+}
+
+/// Builder-style argument parser.
+pub struct Args {
+    program: &'static str,
+    about: &'static str,
+    specs: Vec<Spec>,
+    values: BTreeMap<&'static str, String>,
+    flags: BTreeMap<&'static str, bool>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        Args {
+            program,
+            about,
+            specs: Vec::new(),
+            values: BTreeMap::new(),
+            flags: BTreeMap::new(),
+            positional: Vec::new(),
+        }
+    }
+
+    /// `--name <value>` with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.specs.push(Spec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            takes_value: true,
+            required: false,
+        });
+        self
+    }
+
+    /// `--name <value>`, required.
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(Spec { name, help, default: None, takes_value: true, required: true });
+        self
+    }
+
+    /// Boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(Spec { name, help, default: None, takes_value: false, required: false });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} [OPTIONS]\n\nOPTIONS:\n",
+                            self.program, self.about, self.program);
+        for spec in &self.specs {
+            let left = if spec.takes_value {
+                format!("--{} <value>", spec.name)
+            } else {
+                format!("--{}", spec.name)
+            };
+            let dflt = match &spec.default {
+                Some(d) => format!(" [default: {d}]"),
+                None if spec.required => " [required]".to_string(),
+                None => String::new(),
+            };
+            s.push_str(&format!("  {left:<28} {}{dflt}\n", spec.help));
+        }
+        s.push_str("  --help                       print this help\n");
+        s
+    }
+
+    /// Parse from process args (exits on --help).
+    pub fn parse(self) -> Result<Parsed> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        self.parse_from(&argv)
+    }
+
+    pub fn parse_from(mut self, argv: &[String]) -> Result<Parsed> {
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if arg == "--help" || arg == "-h" {
+                print!("{}", self.help_text());
+                std::process::exit(0);
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| Error::Cli(format!("unknown option --{name}")))?
+                    .clone();
+                if spec.takes_value {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| Error::Cli(format!("--{name} needs a value")))?
+                        }
+                    };
+                    self.values.insert(spec.name, value);
+                } else {
+                    if inline.is_some() {
+                        return Err(Error::Cli(format!("--{name} takes no value")));
+                    }
+                    self.flags.insert(spec.name, true);
+                }
+            } else {
+                self.positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        // Defaults + required check.
+        for spec in &self.specs {
+            if spec.takes_value && !self.values.contains_key(spec.name) {
+                match &spec.default {
+                    Some(d) => {
+                        self.values.insert(spec.name, d.clone());
+                    }
+                    None if spec.required => {
+                        return Err(Error::Cli(format!("missing required --{}", spec.name)));
+                    }
+                    None => {}
+                }
+            }
+        }
+        Ok(Parsed { values: self.values, flags: self.flags, positional: self.positional })
+    }
+}
+
+/// Result of parsing; typed getters panic-free via Result.
+pub struct Parsed {
+    values: BTreeMap<&'static str, String>,
+    flags: BTreeMap<&'static str, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> &str {
+        self.get(name).unwrap_or("")
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize> {
+        self.str(name)
+            .parse()
+            .map_err(|_| Error::Cli(format!("--{name}: expected integer, got '{}'", self.str(name))))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64> {
+        self.str(name)
+            .parse()
+            .map_err(|_| Error::Cli(format!("--{name}: expected number, got '{}'", self.str(name))))
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64> {
+        self.str(name)
+            .parse()
+            .map_err(|_| Error::Cli(format!("--{name}: expected integer, got '{}'", self.str(name))))
+    }
+
+    /// Comma-separated list.
+    pub fn list(&self, name: &str) -> Vec<String> {
+        self.str(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().to_string())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let p = Args::new("t", "test")
+            .opt("gamma", "5", "draft length")
+            .opt("task", "dolly", "task")
+            .parse_from(&argv(&["--gamma", "3"]))
+            .unwrap();
+        assert_eq!(p.usize("gamma").unwrap(), 3);
+        assert_eq!(p.str("task"), "dolly");
+    }
+
+    #[test]
+    fn equals_syntax_and_flags() {
+        let p = Args::new("t", "test")
+            .opt("n", "1", "count")
+            .flag("verbose", "talk more")
+            .parse_from(&argv(&["--n=42", "--verbose", "pos0"]))
+            .unwrap();
+        assert_eq!(p.usize("n").unwrap(), 42);
+        assert!(p.flag("verbose"));
+        assert_eq!(p.positional, vec!["pos0"]);
+    }
+
+    #[test]
+    fn required_enforced() {
+        let r = Args::new("t", "test").req("model", "path").parse_from(&argv(&[]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let r = Args::new("t", "test").parse_from(&argv(&["--nope"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let p = Args::new("t", "test")
+            .opt("losses", "kld,tvd,tvdpp", "losses")
+            .parse_from(&argv(&[]))
+            .unwrap();
+        assert_eq!(p.list("losses"), vec!["kld", "tvd", "tvdpp"]);
+    }
+}

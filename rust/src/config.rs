@@ -1,0 +1,161 @@
+//! Typed run configuration for the serving stack.
+//!
+//! A [`RunConfig`] is assembled from CLI flags (see `main.rs` / examples)
+//! or parsed from a JSON file; it selects the artifact directory, the draft
+//! model variant, the speculation depth gamma and the sampling regime per
+//! task (the paper random-samples dolly at T=0.6/top-p 0.9 and greedy-
+//! samples the summarization tasks, §3).
+
+use crate::error::{Error, Result};
+use crate::json::Value;
+
+/// Sampling regime for one generation run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SamplingConfig {
+    /// Softmax temperature; `0.0` = greedy.
+    pub temperature: f32,
+    /// Nucleus mass; `1.0` disables top-p.
+    pub top_p: f32,
+    pub seed: u64,
+}
+
+impl SamplingConfig {
+    pub fn greedy() -> Self {
+        SamplingConfig { temperature: 0.0, top_p: 1.0, seed: 0 }
+    }
+
+    pub fn random(temperature: f32, top_p: f32, seed: u64) -> Self {
+        SamplingConfig { temperature, top_p, seed }
+    }
+
+    /// The paper's per-task regimes (§3 Evaluation): dolly sampled at
+    /// T=0.6/top-p=0.9, summarization + translation greedy.
+    pub fn for_task(task: &str, seed: u64) -> Self {
+        match task {
+            "dolly" => SamplingConfig::random(0.6, 0.9, seed),
+            _ => SamplingConfig { seed, ..SamplingConfig::greedy() },
+        }
+    }
+}
+
+/// Full serving run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Artifact directory produced by `make artifacts`.
+    pub artifacts_dir: String,
+    /// Draft model name in the manifest (e.g. "draft_tvdpp_ckpt4").
+    pub draft_model: String,
+    /// Target model name in the manifest.
+    pub target_model: String,
+    /// Speculation depth gamma (the paper sweeps {3, 5}).
+    pub gamma: usize,
+    /// Max new tokens per request.
+    pub max_new_tokens: usize,
+    pub sampling: SamplingConfig,
+    /// Scheduler: max sequences resident at once.
+    pub max_batch: usize,
+    /// Scheduler: bounded admission queue length (backpressure).
+    pub queue_depth: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            artifacts_dir: "artifacts".to_string(),
+            draft_model: "draft_tvdpp_ckpt4".to_string(),
+            target_model: "target".to_string(),
+            gamma: 3,
+            max_new_tokens: 48,
+            sampling: SamplingConfig::greedy(),
+            max_batch: 4,
+            queue_depth: 64,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.gamma == 0 || self.gamma > 5 {
+            return Err(Error::msg(format!(
+                "gamma={} outside the exported verify block (1..=5)",
+                self.gamma
+            )));
+        }
+        if self.max_batch == 0 {
+            return Err(Error::msg("max_batch must be >= 1"));
+        }
+        if !(0.0..=1.0).contains(&self.sampling.top_p) {
+            return Err(Error::msg(format!("top_p={} not in [0,1]", self.sampling.top_p)));
+        }
+        if self.sampling.temperature < 0.0 {
+            return Err(Error::msg("temperature must be >= 0"));
+        }
+        Ok(())
+    }
+
+    /// Parse from a JSON object (file-based deployment configs).
+    pub fn from_json(v: &Value) -> Result<RunConfig> {
+        let d = RunConfig::default();
+        let cfg = RunConfig {
+            artifacts_dir: v
+                .get("artifacts_dir")
+                .as_str()
+                .unwrap_or(&d.artifacts_dir)
+                .to_string(),
+            draft_model: v.get("draft_model").as_str().unwrap_or(&d.draft_model).to_string(),
+            target_model: v.get("target_model").as_str().unwrap_or(&d.target_model).to_string(),
+            gamma: v.get("gamma").as_usize().unwrap_or(d.gamma),
+            max_new_tokens: v.get("max_new_tokens").as_usize().unwrap_or(d.max_new_tokens),
+            sampling: SamplingConfig {
+                temperature: v.get("temperature").as_f64().unwrap_or(0.0) as f32,
+                top_p: v.get("top_p").as_f64().unwrap_or(1.0) as f32,
+                seed: v.get("seed").as_i64().unwrap_or(0) as u64,
+            },
+            max_batch: v.get("max_batch").as_usize().unwrap_or(d.max_batch),
+            queue_depth: v.get("queue_depth").as_usize().unwrap_or(d.queue_depth),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn gamma_bounds_enforced() {
+        let mut c = RunConfig::default();
+        c.gamma = 8;
+        assert!(c.validate().is_err());
+        c.gamma = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn task_sampling_matches_paper() {
+        let dolly = SamplingConfig::for_task("dolly", 1);
+        assert!((dolly.temperature - 0.6).abs() < 1e-6);
+        assert!((dolly.top_p - 0.9).abs() < 1e-6);
+        assert_eq!(SamplingConfig::for_task("xsum", 1).temperature, 0.0);
+        assert_eq!(SamplingConfig::for_task("cnndm", 1).temperature, 0.0);
+        assert_eq!(SamplingConfig::for_task("wmt", 1).temperature, 0.0);
+    }
+
+    #[test]
+    fn from_json_overrides() {
+        let v = Value::parse(
+            r#"{"gamma": 5, "temperature": 0.6, "top_p": 0.9, "draft_model": "draft_base"}"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&v).unwrap();
+        assert_eq!(c.gamma, 5);
+        assert_eq!(c.draft_model, "draft_base");
+        assert!((c.sampling.temperature - 0.6).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,44 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("xla: {0}")]
+    Xla(#[from] xla::Error),
+
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("json parse error at byte {offset}: {msg}")]
+    Json { offset: usize, msg: String },
+
+    #[error("manifest: {0}")]
+    Manifest(String),
+
+    #[error("weights file: {0}")]
+    Weights(String),
+
+    #[error("tokenizer: {0}")]
+    Tokenizer(String),
+
+    #[error("kv cache: {0}")]
+    KvCache(String),
+
+    #[error("scheduler: {0}")]
+    Scheduler(String),
+
+    #[error("cli: {0}")]
+    Cli(String),
+
+    #[error("{0}")]
+    Msg(String),
+}
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Self {
+        Error::Msg(m.into())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,203 @@
+//! Figure/table harness: runs (draft model, task, gamma) cells and emits
+//! the rows the paper's evaluation reports (Figures 1-3, Table 1).
+//!
+//! Conventions copied from §3 of the paper:
+//! * per-task sampling regimes via [`SamplingConfig::for_task`];
+//! * block efficiency is aggregated as total generated / total blocks over
+//!   the prompt set (a per-task scalar, like the paper's bar charts);
+//! * MBSU uses the *measured* parameter ratio `c` from the manifest;
+//! * token-rate ratio compares wall-clock SD vs autoregressive decoding on
+//!   the same prompts/sampler (the AR baseline is cached per task since it
+//!   is draft-independent).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::baseline::ArDecoder;
+use crate::config::SamplingConfig;
+use crate::error::Result;
+use crate::metrics::{mbsu, RateMeasurement, SpecStats};
+use crate::rng::Pcg64;
+use crate::runtime::Model;
+use crate::spec::SpecDecoder;
+use crate::workload::EvalSuite;
+
+/// One cell of a figure.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub draft_model: String,
+    pub task: String,
+    pub gamma: usize,
+    pub n_prompts: usize,
+    pub tau: f64,
+    pub acceptance: f64,
+    pub mbsu: f64,
+    pub sd_tok_s: f64,
+    pub ar_tok_s: f64,
+    pub rate_ratio: f64,
+    pub stats: SpecStats,
+}
+
+/// Evaluation options.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalOptions {
+    pub n_prompts: usize,
+    pub max_new: usize,
+    pub seed: u64,
+}
+
+impl Default for EvalOptions {
+    fn default() -> Self {
+        EvalOptions { n_prompts: 16, max_new: 32, seed: 0 }
+    }
+}
+
+/// Cached autoregressive baselines keyed by (task, n_prompts, max_new).
+#[derive(Default)]
+pub struct ArBaselineCache {
+    cache: BTreeMap<(String, usize, usize), RateMeasurement>,
+}
+
+impl ArBaselineCache {
+    pub fn get_or_run(
+        &mut self,
+        target: &Model,
+        suite: &EvalSuite,
+        task: &str,
+        opts: &EvalOptions,
+    ) -> Result<RateMeasurement> {
+        let key = (task.to_string(), opts.n_prompts, opts.max_new);
+        if let Some(m) = self.cache.get(&key) {
+            return Ok(*m);
+        }
+        let decoder = ArDecoder::new(target);
+        let examples = suite.take(task, opts.n_prompts)?;
+        let mut tokens = 0usize;
+        let mut elapsed = std::time::Duration::ZERO;
+        for (i, ex) in examples.iter().enumerate() {
+            let cfg = SamplingConfig::for_task(task, opts.seed + i as u64);
+            let mut rng = Pcg64::with_stream(cfg.seed, 0xba5e);
+            let (out, _stats, rate) = decoder.generate(&ex.prompt, opts.max_new, &cfg, &mut rng)?;
+            tokens += out.len();
+            elapsed += rate.elapsed;
+        }
+        let m = RateMeasurement { new_tokens: tokens, elapsed };
+        self.cache.insert(key, m);
+        Ok(m)
+    }
+}
+
+/// Run one (draft, task, gamma) cell: SD over the prompt set + cached AR.
+pub fn eval_cell(
+    draft: &Model,
+    target: &Model,
+    suite: &EvalSuite,
+    task: &str,
+    gamma: usize,
+    opts: &EvalOptions,
+    ar_cache: &mut ArBaselineCache,
+) -> Result<CellResult> {
+    let decoder = SpecDecoder::new(draft, target, gamma)?;
+    let examples = suite.take(task, opts.n_prompts)?;
+    let mut stats = SpecStats::default();
+    let mut sd_tokens = 0usize;
+    let t0 = Instant::now();
+    for (i, ex) in examples.iter().enumerate() {
+        // Same per-prompt sampler seeds as the AR baseline: the comparison
+        // isolates the decoding strategy.
+        let cfg = SamplingConfig::for_task(task, opts.seed + i as u64);
+        let mut rng = Pcg64::with_stream(cfg.seed, 0x5bec);
+        let (out, s) = decoder.generate(&ex.prompt, opts.max_new, &cfg, &mut rng)?;
+        sd_tokens += out.len();
+        stats.merge(&s);
+    }
+    let sd_rate = RateMeasurement { new_tokens: sd_tokens, elapsed: t0.elapsed() };
+    let ar_rate = ar_cache.get_or_run(target, suite, task, opts)?;
+
+    let tau = stats.block_efficiency();
+    Ok(CellResult {
+        draft_model: draft.name.clone(),
+        task: task.to_string(),
+        gamma,
+        n_prompts: examples.len(),
+        tau,
+        acceptance: stats.acceptance_rate(),
+        mbsu: mbsu(tau, draft.c_ratio, gamma),
+        sd_tok_s: sd_rate.tokens_per_sec(),
+        ar_tok_s: ar_rate.tokens_per_sec(),
+        rate_ratio: crate::metrics::token_rate_ratio(&sd_rate, &ar_rate),
+        stats,
+    })
+}
+
+/// Block-efficiency-only cell (Figure 2/3 sweeps — no AR timing needed).
+pub fn eval_block_efficiency(
+    draft: &Model,
+    target: &Model,
+    suite: &EvalSuite,
+    task: &str,
+    gamma: usize,
+    opts: &EvalOptions,
+) -> Result<CellResult> {
+    let decoder = SpecDecoder::new(draft, target, gamma)?;
+    let examples = suite.take(task, opts.n_prompts)?;
+    let mut stats = SpecStats::default();
+    for (i, ex) in examples.iter().enumerate() {
+        let cfg = SamplingConfig::for_task(task, opts.seed + i as u64);
+        let mut rng = Pcg64::with_stream(cfg.seed, 0x5bec);
+        let (_out, s) = decoder.generate(&ex.prompt, opts.max_new, &cfg, &mut rng)?;
+        stats.merge(&s);
+    }
+    let tau = stats.block_efficiency();
+    Ok(CellResult {
+        draft_model: draft.name.clone(),
+        task: task.to_string(),
+        gamma,
+        n_prompts: examples.len(),
+        tau,
+        acceptance: stats.acceptance_rate(),
+        mbsu: mbsu(tau, draft.c_ratio, gamma),
+        sd_tok_s: 0.0,
+        ar_tok_s: 0.0,
+        rate_ratio: 0.0,
+        stats,
+    })
+}
+
+/// Render cells as a figure table (one row per cell).
+pub fn render_cells(title: &str, cells: &[CellResult], with_rates: bool) {
+    println!("\n=== {title} ===");
+    let mut headers = vec!["draft", "task", "gamma", "tau", "accept", "MBSU"];
+    if with_rates {
+        headers.extend_from_slice(&["SD tok/s", "AR tok/s", "ratio"]);
+    }
+    let mut table = crate::benchkit::Table::new(&headers);
+    for c in cells {
+        let mut row = vec![
+            c.draft_model.clone(),
+            c.task.clone(),
+            c.gamma.to_string(),
+            format!("{:.3}", c.tau),
+            format!("{:.3}", c.acceptance),
+            format!("{:.3}", c.mbsu),
+        ];
+        if with_rates {
+            row.push(format!("{:.1}", c.sd_tok_s));
+            row.push(format!("{:.1}", c.ar_tok_s));
+            row.push(format!("{:.2}", c.rate_ratio));
+        }
+        table.row(&row);
+    }
+    table.print();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_options_sane() {
+        let o = EvalOptions::default();
+        assert!(o.n_prompts > 0 && o.max_new > 0);
+    }
+}

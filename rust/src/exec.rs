@@ -1,0 +1,331 @@
+//! Threaded execution substrate (tokio is unavailable offline).
+//!
+//! Provides the two primitives the coordinator needs:
+//!
+//! - [`ThreadPool`]: fixed worker pool with graceful shutdown, used for
+//!   request handling off the scheduler thread.
+//! - [`bounded`]: a bounded MPSC channel with blocking send — the
+//!   backpressure mechanism for request admission (when the queue is full,
+//!   producers block rather than piling up unbounded memory).
+//!
+//! Everything is std-only: `Mutex` + `Condvar` underneath.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+// ---------------------------------------------------------------------------
+// Bounded channel
+// ---------------------------------------------------------------------------
+
+struct ChannelInner<T> {
+    queue: Mutex<ChannelState<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+struct ChannelState<T> {
+    items: VecDeque<T>,
+    capacity: usize,
+    senders: usize,
+    receiver_alive: bool,
+}
+
+/// Sending half; cloneable. Dropping the last sender closes the channel.
+pub struct Sender<T>(Arc<ChannelInner<T>>);
+
+/// Receiving half (single consumer).
+pub struct Receiver<T>(Arc<ChannelInner<T>>);
+
+/// Error returned when the other side is gone.
+#[derive(Debug, PartialEq, Eq)]
+pub struct Closed;
+
+pub fn bounded<T>(capacity: usize) -> (Sender<T>, Receiver<T>) {
+    assert!(capacity > 0);
+    let inner = Arc::new(ChannelInner {
+        queue: Mutex::new(ChannelState {
+            items: VecDeque::new(),
+            capacity,
+            senders: 1,
+            receiver_alive: true,
+        }),
+        not_full: Condvar::new(),
+        not_empty: Condvar::new(),
+    });
+    (Sender(inner.clone()), Receiver(inner))
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.0.queue.lock().unwrap().senders += 1;
+        Sender(self.0.clone())
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut st = self.0.queue.lock().unwrap();
+        st.senders -= 1;
+        if st.senders == 0 {
+            self.0.not_empty.notify_all();
+        }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        self.0.queue.lock().unwrap().receiver_alive = false;
+        self.0.not_full.notify_all();
+    }
+}
+
+impl<T> Sender<T> {
+    /// Blocking send — this is the admission backpressure.
+    pub fn send(&self, item: T) -> Result<(), Closed> {
+        let mut st = self.0.queue.lock().unwrap();
+        loop {
+            if !st.receiver_alive {
+                return Err(Closed);
+            }
+            if st.items.len() < st.capacity {
+                st.items.push_back(item);
+                self.0.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.0.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking send; gives the item back when full.
+    pub fn try_send(&self, item: T) -> Result<(), TrySendError<T>> {
+        let mut st = self.0.queue.lock().unwrap();
+        if !st.receiver_alive {
+            return Err(TrySendError::Closed(item));
+        }
+        if st.items.len() >= st.capacity {
+            return Err(TrySendError::Full(item));
+        }
+        st.items.push_back(item);
+        self.0.not_empty.notify_one();
+        Ok(())
+    }
+}
+
+#[derive(Debug)]
+pub enum TrySendError<T> {
+    Full(T),
+    Closed(T),
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive; Err(Closed) after all senders dropped and drained.
+    pub fn recv(&self) -> Result<T, Closed> {
+        let mut st = self.0.queue.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.0.not_full.notify_one();
+                return Ok(item);
+            }
+            if st.senders == 0 {
+                return Err(Closed);
+            }
+            st = self.0.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Option<T> {
+        let mut st = self.0.queue.lock().unwrap();
+        let item = st.items.pop_front();
+        if item.is_some() {
+            self.0.not_full.notify_one();
+        }
+        item
+    }
+
+    /// Drain whatever is currently queued (scheduler batch pickup).
+    pub fn drain(&self) -> Vec<T> {
+        let mut st = self.0.queue.lock().unwrap();
+        let out: Vec<T> = st.items.drain(..).collect();
+        if !out.is_empty() {
+            self.0.not_full.notify_all();
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.queue.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Thread pool
+// ---------------------------------------------------------------------------
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool with graceful shutdown on drop.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    shutting_down: Arc<AtomicBool>,
+}
+
+impl ThreadPool {
+    pub fn new(n_workers: usize, queue_cap: usize) -> Self {
+        let (tx, rx) = bounded::<Job>(queue_cap.max(1));
+        let rx = Arc::new(rx);
+        let shutting_down = Arc::new(AtomicBool::new(false));
+        let workers = (0..n_workers.max(1))
+            .map(|i| {
+                let rx = rx.clone();
+                std::thread::Builder::new()
+                    .name(format!("specd-worker-{i}"))
+                    .spawn(move || {
+                        while let Ok(job) = rx.recv() {
+                            job();
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, shutting_down }
+    }
+
+    /// Submit a job; blocks when the queue is full (backpressure).
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        if self.shutting_down.load(Ordering::SeqCst) {
+            return;
+        }
+        let _ = self.tx.as_ref().expect("pool alive").send(Box::new(f));
+    }
+
+    /// Run `f` over each item, in parallel, returning results in order.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let n = items.len();
+        let results = Arc::new(Mutex::new((0..n).map(|_| None).collect::<Vec<Option<R>>>()));
+        let done = Arc::new((Mutex::new(0usize), Condvar::new()));
+        for (i, item) in items.into_iter().enumerate() {
+            let f = f.clone();
+            let results = results.clone();
+            let done = done.clone();
+            self.execute(move || {
+                let r = f(item);
+                results.lock().unwrap()[i] = Some(r);
+                let (lock, cv) = &*done;
+                *lock.lock().unwrap() += 1;
+                cv.notify_one();
+            });
+        }
+        let (lock, cv) = &*done;
+        let mut count = lock.lock().unwrap();
+        while *count < n {
+            count = cv.wait(count).unwrap();
+        }
+        drop(count);
+        Arc::try_unwrap(results)
+            .unwrap_or_else(|_| panic!("map results still shared"))
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.expect("job completed"))
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shutting_down.store(true, Ordering::SeqCst);
+        drop(self.tx.take()); // close the channel; workers drain then exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn channel_fifo() {
+        let (tx, rx) = bounded(4);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        assert_eq!(rx.recv(), Ok(1));
+        assert_eq!(rx.recv(), Ok(2));
+    }
+
+    #[test]
+    fn channel_close_on_sender_drop() {
+        let (tx, rx) = bounded::<i32>(1);
+        drop(tx);
+        assert_eq!(rx.recv(), Err(Closed));
+    }
+
+    #[test]
+    fn try_send_full() {
+        let (tx, _rx) = bounded(1);
+        tx.try_send(1).unwrap();
+        assert!(matches!(tx.try_send(2), Err(TrySendError::Full(2))));
+    }
+
+    #[test]
+    fn backpressure_blocks_until_recv() {
+        let (tx, rx) = bounded(1);
+        tx.send(0u32).unwrap();
+        let t = std::thread::spawn(move || {
+            tx.send(1).unwrap(); // blocks until main recv()s
+            tx.send(2).unwrap();
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(rx.recv(), Ok(0));
+        assert_eq!(rx.recv(), Ok(1));
+        assert_eq!(rx.recv(), Ok(2));
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn drain_picks_up_everything() {
+        let (tx, rx) = bounded(8);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        assert_eq!(rx.drain(), vec![0, 1, 2, 3, 4]);
+        assert!(rx.is_empty());
+    }
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(3, 16);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..50 {
+            let c = counter.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // graceful shutdown waits for all jobs
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn pool_map_preserves_order() {
+        let pool = ThreadPool::new(4, 16);
+        let out = pool.map((0..20).collect::<Vec<usize>>(), |x| x * x);
+        assert_eq!(out, (0..20).map(|x| x * x).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,277 @@
+//! KV-cache management: slot pool + per-sequence length bookkeeping with
+//! rollback semantics.
+//!
+//! The AOT contract makes rollback free: attention is masked by *absolute
+//! position* (`row j visible to query i iff j <= i`), so rows past the
+//! tracked valid length are unreachable no matter what stale speculation
+//! wrote there. Rolling back after a rejected draft is therefore just
+//! "set the length" — this module owns that invariant and the pool of
+//! cache slots the coordinator draws from.
+//!
+//! The pool is generic over the stored state `S` (the real engine stores a
+//! device-resident [`runtime::SeqState`]; tests store unit) so the
+//! allocator invariants are property-tested without PJRT.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Identifier of an allocated cache slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SlotId(pub usize);
+
+/// One sequence's cache bookkeeping for one model.
+#[derive(Debug)]
+pub struct SeqCache<S> {
+    /// Device state (consumed/replaced around each execute).
+    pub state: Option<S>,
+    /// Number of *valid* positions the model has processed for this
+    /// sequence. Rows >= len are stale and masked out.
+    len: usize,
+    /// Fixed capacity (the arch's max_seq).
+    capacity: usize,
+}
+
+impl<S> SeqCache<S> {
+    pub fn new(state: S, capacity: usize) -> Self {
+        SeqCache { state: Some(state), len: 0, capacity }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.capacity - self.len
+    }
+
+    /// Record that `n` new positions were processed and are valid.
+    pub fn advance(&mut self, n: usize) -> Result<()> {
+        if self.len + n > self.capacity {
+            return Err(Error::KvCache(format!(
+                "advance past capacity: {} + {n} > {}",
+                self.len, self.capacity
+            )));
+        }
+        self.len += n;
+        Ok(())
+    }
+
+    /// Roll speculation back: keep only the first `new_len` positions.
+    /// Never grows — rollback cannot fabricate validity.
+    pub fn rollback_to(&mut self, new_len: usize) -> Result<()> {
+        if new_len > self.len {
+            return Err(Error::KvCache(format!(
+                "rollback_to({new_len}) exceeds current length {}",
+                self.len
+            )));
+        }
+        self.len = new_len;
+        Ok(())
+    }
+
+    /// Take the device state for an execute call (must be restored with
+    /// [`SeqCache::put_state`]).
+    pub fn take_state(&mut self) -> Result<S> {
+        self.state.take().ok_or_else(|| Error::KvCache("state already taken".into()))
+    }
+
+    pub fn put_state(&mut self, s: S) {
+        debug_assert!(self.state.is_none(), "state put twice");
+        self.state = Some(s);
+    }
+}
+
+/// Fixed-capacity pool of cache slots (the memory budget of the server).
+pub struct SlotPool<S> {
+    slots: BTreeMap<SlotId, SeqCache<S>>,
+    free_ids: Vec<SlotId>,
+    max_slots: usize,
+    next_id: usize,
+    /// High-water mark, reported by metrics.
+    pub peak_live: usize,
+}
+
+impl<S> SlotPool<S> {
+    pub fn new(max_slots: usize) -> Self {
+        SlotPool {
+            slots: BTreeMap::new(),
+            free_ids: Vec::new(),
+            max_slots,
+            next_id: 0,
+            peak_live: 0,
+        }
+    }
+
+    pub fn live(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn available(&self) -> usize {
+        self.max_slots - self.slots.len()
+    }
+
+    /// Allocate a slot holding `state`; fails when the pool is exhausted
+    /// (the scheduler treats that as "defer admission").
+    pub fn alloc(&mut self, state: S, capacity: usize) -> Result<SlotId> {
+        if self.slots.len() >= self.max_slots {
+            return Err(Error::KvCache(format!("slot pool exhausted ({} live)", self.max_slots)));
+        }
+        let id = self.free_ids.pop().unwrap_or_else(|| {
+            let id = SlotId(self.next_id);
+            self.next_id += 1;
+            id
+        });
+        let prev = self.slots.insert(id, SeqCache::new(state, capacity));
+        debug_assert!(prev.is_none(), "slot id reused while live");
+        self.peak_live = self.peak_live.max(self.slots.len());
+        Ok(id)
+    }
+
+    pub fn get(&self, id: SlotId) -> Result<&SeqCache<S>> {
+        self.slots.get(&id).ok_or_else(|| Error::KvCache(format!("slot {id:?} not live")))
+    }
+
+    pub fn get_mut(&mut self, id: SlotId) -> Result<&mut SeqCache<S>> {
+        self.slots.get_mut(&id).ok_or_else(|| Error::KvCache(format!("slot {id:?} not live")))
+    }
+
+    /// Free a slot, returning its state for reuse/drop.
+    pub fn free(&mut self, id: SlotId) -> Result<Option<S>> {
+        let cache = self
+            .slots
+            .remove(&id)
+            .ok_or_else(|| Error::KvCache(format!("double free of {id:?}")))?;
+        self.free_ids.push(id);
+        Ok(cache.state)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{self, Check};
+
+    #[test]
+    fn advance_and_rollback() {
+        let mut c: SeqCache<()> = SeqCache::new((), 16);
+        c.advance(10).unwrap();
+        assert_eq!(c.len(), 10);
+        c.rollback_to(7).unwrap();
+        assert_eq!(c.len(), 7);
+        assert!(c.rollback_to(8).is_err(), "rollback cannot grow");
+        assert!(c.advance(10).is_err(), "capacity enforced");
+        c.advance(9).unwrap();
+        assert_eq!(c.remaining(), 0);
+    }
+
+    #[test]
+    fn state_take_put() {
+        let mut c = SeqCache::new(42u32, 4);
+        let s = c.take_state().unwrap();
+        assert_eq!(s, 42);
+        assert!(c.take_state().is_err(), "double take");
+        c.put_state(7);
+        assert_eq!(c.take_state().unwrap(), 7);
+    }
+
+    #[test]
+    fn pool_alloc_free_cycle() {
+        let mut pool: SlotPool<u32> = SlotPool::new(2);
+        let a = pool.alloc(1, 8).unwrap();
+        let b = pool.alloc(2, 8).unwrap();
+        assert_ne!(a, b);
+        assert!(pool.alloc(3, 8).is_err(), "pool capacity enforced");
+        assert_eq!(pool.free(a).unwrap(), Some(1));
+        assert!(pool.free(a).is_err(), "double free detected");
+        let c = pool.alloc(3, 8).unwrap();
+        assert_eq!(pool.live(), 2);
+        assert_eq!(pool.peak_live, 2);
+        pool.free(b).unwrap();
+        pool.free(c).unwrap();
+        assert_eq!(pool.live(), 0);
+    }
+
+    /// Property: under a random alloc/free/advance/rollback workload, live
+    /// slots are always distinct, lengths never exceed capacity, and
+    /// rollback never grows a sequence.
+    #[test]
+    fn pool_invariants_under_random_workload() {
+        let ops = prop::vec_of(prop::usize_in(0, 99), 1, 200);
+        prop::check("slot-pool-invariants", &ops, 200, 0xC0FFEE, |script| {
+            let mut pool: SlotPool<u64> = SlotPool::new(8);
+            let mut live: Vec<(SlotId, usize)> = Vec::new(); // (id, len mirror)
+            let mut counter = 0u64;
+            for &op in script {
+                match op % 4 {
+                    0 => {
+                        counter += 1;
+                        if let Ok(id) = pool.alloc(counter, 32) {
+                            for (other, _) in &live {
+                                if *other == id {
+                                    return Check::Fail(format!("live id {id:?} reissued"));
+                                }
+                            }
+                            live.push((id, 0));
+                        } else if pool.live() < 8 {
+                            return Check::Fail("alloc failed below capacity".into());
+                        }
+                    }
+                    1 => {
+                        if !live.is_empty() {
+                            let (id, _) = live.remove(op % live.len());
+                            if pool.free(id).is_err() {
+                                return Check::Fail(format!("free of live {id:?} failed"));
+                            }
+                        }
+                    }
+                    2 => {
+                        if !live.is_empty() {
+                            let i = op % live.len();
+                            let (id, len) = live[i];
+                            let n = op % 7;
+                            let c = pool.get_mut(id).unwrap();
+                            let ok = c.advance(n).is_ok();
+                            if ok != (len + n <= 32) {
+                                return Check::Fail("advance bound mismatch".into());
+                            }
+                            if ok {
+                                live[i].1 += n;
+                            }
+                        }
+                    }
+                    _ => {
+                        if !live.is_empty() {
+                            let i = op % live.len();
+                            let (id, len) = live[i];
+                            let to = op % 40;
+                            let c = pool.get_mut(id).unwrap();
+                            let ok = c.rollback_to(to).is_ok();
+                            if ok != (to <= len) {
+                                return Check::Fail("rollback bound mismatch".into());
+                            }
+                            if ok {
+                                live[i].1 = to;
+                            }
+                        }
+                    }
+                }
+                for (id, len) in &live {
+                    let c = pool.get(*id).unwrap();
+                    if c.len() != *len {
+                        return Check::Fail(format!("{id:?} len drift: {} vs {len}", c.len()));
+                    }
+                }
+            }
+            Check::Pass
+        });
+    }
+}

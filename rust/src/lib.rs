@@ -1,0 +1,57 @@
+//! # specd — speculative decoding with direct-aligned draft models
+//!
+//! Rust serving coordinator (L3) for the three-layer reproduction of
+//! *"Direct Alignment of Draft Model for Speculative Decoding with
+//! Chat-Fine-Tuned LLMs"* (Goel et al., 2024).
+//!
+//! The request path is pure Rust: AOT-compiled HLO executables (lowered at
+//! build time from the JAX/Pallas stack in `python/compile/`) are loaded via
+//! the PJRT C API and driven by the speculative-decoding engine ([`spec`]),
+//! the autoregressive baseline ([`baseline`]) and the continuous-batching
+//! coordinator ([`coordinator`]).
+//!
+//! ## Layer map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`runtime`] | PJRT client wrapper: load HLO text, compile, execute |
+//! | [`weights`] | `SPCD1` named-tensor weight files -> device buffers |
+//! | [`artifacts`] | manifest/vocab loading, artifact path resolution |
+//! | [`tokenizer`] | SynthChat word-level tokenizer (shared vocab artifact) |
+//! | [`kvcache`] | KV-slot pool with rollback-by-length semantics |
+//! | [`sampling`] | temperature/top-p + Leviathan-style rejection sampling |
+//! | [`spec`] | the draft-gamma-then-verify speculative decoding engine |
+//! | [`baseline`] | plain autoregressive decoding (the paper's baseline) |
+//! | [`coordinator`] | request queue, continuous batcher, scheduler |
+//! | [`metrics`] | block efficiency, MBSU, token rate, latency histograms |
+//! | [`workload`] | synthetic task generators (dolly/xsum/cnndm/wmt) |
+//! | [`eval`] | figure/table harness used by `rust/benches/` |
+//!
+//! ## Substrates (crates unavailable offline, rebuilt in-repo)
+//!
+//! [`json`] (serde_json), [`cli`] (clap), [`rng`] (rand), [`exec`] (tokio's
+//! threaded runtime), [`benchkit`] (criterion), [`prop`] (proptest).
+
+pub mod artifacts;
+pub mod baseline;
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod eval;
+pub mod exec;
+pub mod json;
+pub mod kvcache;
+pub mod metrics;
+pub mod prop;
+pub mod rng;
+pub mod runtime;
+pub mod sampling;
+pub mod spec;
+pub mod tensor;
+pub mod tokenizer;
+pub mod weights;
+pub mod workload;
+
+pub use error::{Error, Result};

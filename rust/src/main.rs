@@ -1,0 +1,222 @@
+//! `specd` — launcher for the speculative-decoding serving stack.
+//!
+//! Subcommands:
+//!   info      print the artifact manifest summary (models, ratios, arch)
+//!   generate  run one prompt through speculative decoding (or --baseline)
+//!   serve     run a Poisson serving trace through the coordinator
+//!   eval      evaluate one (draft, task, gamma) figure cell
+//!
+//! Examples:
+//!   specd info --artifacts artifacts
+//!   specd generate --draft draft_tvdpp_ckpt4 --task dolly --gamma 5
+//!   specd serve --requests 32 --rate 2.0 --max-batch 4
+//!   specd eval --draft draft_kld_ckpt4 --task xsum --gamma 3
+
+use std::sync::Arc;
+
+use specd::artifacts::Manifest;
+use specd::cli::Args;
+use specd::config::{RunConfig, SamplingConfig};
+use specd::coordinator::{Coordinator, Request};
+use specd::error::Result;
+use specd::eval::{eval_cell, render_cells, ArBaselineCache, EvalOptions};
+use specd::exec;
+use specd::rng::Pcg64;
+use specd::runtime::Runtime;
+use specd::spec::SpecDecoder;
+use specd::tokenizer::Tokenizer;
+use specd::workload::{build_trace, EvalSuite, TraceConfig};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("specd: error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::new("specd", "speculative decoding serving stack")
+        .opt("artifacts", "artifacts", "artifact bundle directory")
+        .opt("draft", "draft_tvdpp_ckpt4", "draft model name")
+        .opt("target", "target", "target model name")
+        .opt("gamma", "3", "speculation depth (1..=5)")
+        .opt("task", "dolly", "task: dolly|xsum|cnndm|wmt")
+        .opt("prompt-index", "0", "eval prompt index for `generate`")
+        .opt("max-new", "48", "max new tokens")
+        .opt("prompts", "16", "prompts per eval cell")
+        .opt("requests", "32", "serve: number of requests in the trace")
+        .opt("rate", "2.0", "serve: Poisson arrival rate (req/s)")
+        .opt("max-batch", "4", "serve: max concurrent sequences")
+        .opt("seed", "0", "random seed")
+        .flag("baseline", "generate: use autoregressive decoding instead")
+        .parse()?;
+
+    let command = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
+    let manifest = Manifest::load(args.str("artifacts"))?;
+
+    match command {
+        "info" => info(&manifest),
+        "generate" => generate(&manifest, &args),
+        "serve" => serve(&manifest, &args),
+        "eval" => eval(&manifest, &args),
+        other => Err(specd::Error::Cli(format!(
+            "unknown command '{other}' (expected info|generate|serve|eval)"
+        ))),
+    }
+}
+
+fn info(manifest: &Manifest) -> Result<()> {
+    println!("artifact bundle: {}", manifest.root.display());
+    println!("vocab: {} tokens (hash {})", manifest.vocab_size, manifest.vocab_hash);
+    for (name, a) in &manifest.archs {
+        println!(
+            "arch {name}: {} layers, {} heads, hidden {}, max_seq {}, state {} f32",
+            a.n_layers, a.n_heads, a.hidden, a.max_seq, a.state_len
+        );
+    }
+    println!("models:");
+    for (name, m) in &manifest.models {
+        println!(
+            "  {name:<24} arch={:<7} params={:>9} c={:.4}",
+            m.arch, m.params, m.c_ratio
+        );
+    }
+    Ok(())
+}
+
+struct Loaded {
+    _rt: Arc<Runtime>,
+    draft: specd::runtime::Model,
+    target: specd::runtime::Model,
+    tokenizer: Tokenizer,
+    suite: EvalSuite,
+}
+
+fn load(manifest: &Manifest, draft_name: &str, target_name: &str) -> Result<Loaded> {
+    let rt = Arc::new(Runtime::new()?);
+    eprintln!("[specd] PJRT platform: {}", rt.platform());
+    let draft_arch = rt.load_arch(manifest, "draft")?;
+    let target_arch = rt.load_arch(manifest, "target")?;
+    let draft = rt.load_model(manifest, &draft_arch, draft_name)?;
+    let target = rt.load_model(manifest, &target_arch, target_name)?;
+    let tokenizer = Tokenizer::load(&manifest.vocab_path())?;
+    let suite = EvalSuite::load(&manifest.root.join("eval_prompts.json"))?;
+    Ok(Loaded { _rt: rt, draft, target, tokenizer, suite })
+}
+
+fn generate(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
+    let l = load(manifest, args.str("draft"), args.str("target"))?;
+    let task = args.str("task");
+    let idx = args.usize("prompt-index")?;
+    let examples = l.suite.task(task)?;
+    let ex = &examples[idx % examples.len()];
+    let cfg = SamplingConfig::for_task(task, args.u64("seed")?);
+    let mut rng = Pcg64::with_stream(cfg.seed, 0x9e4);
+    println!("prompt: {}", l.tokenizer.decode(&ex.prompt));
+
+    if args.flag("baseline") {
+        let decoder = specd::baseline::ArDecoder::new(&l.target);
+        let (out, stats, rate) =
+            decoder.generate(&ex.prompt, args.usize("max-new")?, &cfg, &mut rng)?;
+        println!("output: {}", l.tokenizer.decode(&out));
+        println!(
+            "autoregressive: {} tokens, {} target calls, {:.1} tok/s",
+            out.len(),
+            stats.target_calls,
+            rate.tokens_per_sec()
+        );
+    } else {
+        let decoder = SpecDecoder::new(&l.draft, &l.target, args.usize("gamma")?)?;
+        let t0 = std::time::Instant::now();
+        let (out, stats) = decoder.generate(&ex.prompt, args.usize("max-new")?, &cfg, &mut rng)?;
+        let dt = t0.elapsed().as_secs_f64();
+        println!("output: {}", l.tokenizer.decode(&out));
+        println!(
+            "speculative: {} tokens in {:.2}s ({:.1} tok/s), tau={:.3}, acceptance={:.3}",
+            out.len(),
+            dt,
+            out.len() as f64 / dt,
+            stats.block_efficiency(),
+            stats.acceptance_rate()
+        );
+    }
+    Ok(())
+}
+
+fn serve(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
+    let l = load(manifest, args.str("draft"), args.str("target"))?;
+    let run_cfg = RunConfig {
+        artifacts_dir: args.str("artifacts").to_string(),
+        draft_model: args.str("draft").to_string(),
+        target_model: args.str("target").to_string(),
+        gamma: args.usize("gamma")?,
+        max_new_tokens: args.usize("max-new")?,
+        sampling: SamplingConfig::for_task(args.str("task"), args.u64("seed")?),
+        max_batch: args.usize("max-batch")?,
+        queue_depth: 64,
+    };
+    let trace_cfg = TraceConfig {
+        rate: args.f64("rate")?,
+        n_requests: args.usize("requests")?,
+        max_new: args.usize("max-new")?,
+        seed: args.u64("seed")?,
+        ..Default::default()
+    };
+    let trace = build_trace(&l.suite, &trace_cfg)?;
+
+    let decoder = SpecDecoder::new(&l.draft, &l.target, run_cfg.gamma)?;
+    let coord = Coordinator::new(decoder, run_cfg.clone())?;
+    let (req_tx, req_rx) = exec::bounded::<Request>(run_cfg.queue_depth);
+    let (resp_tx, resp_rx) = exec::bounded(run_cfg.queue_depth);
+
+    // Client thread replays the trace with real arrival timing.
+    let client = std::thread::spawn(move || {
+        let t0 = std::time::Instant::now();
+        for (i, r) in trace.into_iter().enumerate() {
+            if let Some(wait) = r.arrival.checked_sub(t0.elapsed()) {
+                std::thread::sleep(wait);
+            }
+            let _ = req_tx.send(Request {
+                id: i as u64,
+                prompt: r.prompt,
+                max_new: r.max_new,
+                sampling: SamplingConfig::for_task(&r.task, i as u64),
+            });
+        }
+    });
+
+    let metrics = coord.serve(req_rx, resp_tx)?;
+    client.join().expect("client thread");
+    let mut errors = 0;
+    while let Some(resp) = resp_rx.try_recv() {
+        if resp.error.is_some() {
+            errors += 1;
+        }
+    }
+    println!("{}", metrics.report());
+    if errors > 0 {
+        println!("errors: {errors}");
+    }
+    Ok(())
+}
+
+fn eval(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
+    let l = load(manifest, args.str("draft"), args.str("target"))?;
+    let opts = EvalOptions {
+        n_prompts: args.usize("prompts")?,
+        max_new: args.usize("max-new")?,
+        seed: args.u64("seed")?,
+    };
+    let mut cache = ArBaselineCache::default();
+    let cell = eval_cell(
+        &l.draft,
+        &l.target,
+        &l.suite,
+        args.str("task"),
+        args.usize("gamma")?,
+        &opts,
+        &mut cache,
+    )?;
+    render_cells("eval cell", &[cell], true);
+    Ok(())
+}

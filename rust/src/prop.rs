@@ -1,0 +1,235 @@
+//! Property-testing mini-framework substrate (proptest is unavailable
+//! offline).
+//!
+//! Closure-based generators over a seeded [`Pcg64`], a case runner that
+//! reports the seed of a failing case, and greedy shrinking for the shapes
+//! we actually test (integers shrink toward the low bound, vectors by
+//! chunk removal then element shrinking). Used by the coordinator, kvcache,
+//! sampling and tokenizer property tests.
+
+use crate::rng::Pcg64;
+
+/// A generator: produces a value from RNG, and knows how to shrink it.
+pub struct Gen<T> {
+    gen_fn: Box<dyn Fn(&mut Pcg64) -> T>,
+    shrink_fn: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: Clone + 'static> Gen<T> {
+    pub fn new(
+        gen_fn: impl Fn(&mut Pcg64) -> T + 'static,
+        shrink_fn: impl Fn(&T) -> Vec<T> + 'static,
+    ) -> Self {
+        Gen { gen_fn: Box::new(gen_fn), shrink_fn: Box::new(shrink_fn) }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg64) -> T {
+        (self.gen_fn)(rng)
+    }
+
+    pub fn shrinks(&self, v: &T) -> Vec<T> {
+        (self.shrink_fn)(v)
+    }
+
+    /// Map the generated value (shrinking degrades to no-op: mapping is not
+    /// invertible in general).
+    pub fn map<U: Clone + 'static>(self, f: impl Fn(T) -> U + 'static) -> Gen<U> {
+        let g = self.gen_fn;
+        Gen::new(move |rng| f(g(rng)), |_| Vec::new())
+    }
+}
+
+/// usize in [lo, hi] inclusive; shrinks toward lo.
+pub fn usize_in(lo: usize, hi: usize) -> Gen<usize> {
+    assert!(hi >= lo);
+    Gen::new(
+        move |rng| rng.gen_range(lo, hi + 1),
+        move |&v| {
+            let mut out = Vec::new();
+            if v > lo {
+                out.push(lo);
+                out.push(lo + (v - lo) / 2);
+                out.push(v - 1);
+            }
+            out.sort_unstable();
+            out.dedup();
+            out.retain(|&x| x != v);
+            out
+        },
+    )
+}
+
+/// f32 in [lo, hi); shrinks toward lo and the midpoint.
+pub fn f32_in(lo: f32, hi: f32) -> Gen<f32> {
+    Gen::new(
+        move |rng| lo + rng.next_f32() * (hi - lo),
+        move |&v| {
+            let mid = lo + (v - lo) / 2.0;
+            let mut out = vec![lo, mid];
+            out.retain(|&x| (x - v).abs() > f32::EPSILON);
+            out
+        },
+    )
+}
+
+/// Vector of length in [min_len, max_len], elements from `elem`.
+pub fn vec_of<T: Clone + 'static>(elem: Gen<T>, min_len: usize, max_len: usize) -> Gen<Vec<T>> {
+    let elem = std::rc::Rc::new(elem);
+    let elem_g = elem.clone();
+    Gen::new(
+        move |rng| {
+            let n = rng.gen_range(min_len, max_len + 1);
+            (0..n).map(|_| elem_g.sample(rng)).collect()
+        },
+        move |v: &Vec<T>| {
+            let mut out: Vec<Vec<T>> = Vec::new();
+            // Shrink by removing chunks (halves, then single elements).
+            if v.len() > min_len {
+                let half = (v.len() / 2).max(min_len);
+                out.push(v[..half].to_vec());
+                if v.len() > min_len {
+                    out.push(v[..v.len() - 1].to_vec());
+                    out.push(v[1..].to_vec());
+                }
+            }
+            // Shrink one element at a time (first few positions).
+            for i in 0..v.len().min(4) {
+                for cand in elem.shrinks(&v[i]) {
+                    let mut w = v.clone();
+                    w[i] = cand;
+                    out.push(w);
+                }
+            }
+            out
+        },
+    )
+}
+
+/// Distribution over `n` outcomes: non-negative weights summing to 1.
+/// The workhorse generator for the rejection-sampling properties.
+pub fn distribution(n: usize) -> Gen<Vec<f32>> {
+    Gen::new(
+        move |rng| {
+            // Dirichlet-ish via exp(normal) normalization; occasionally spiky.
+            let spiky = rng.next_f64() < 0.3;
+            let mut w: Vec<f32> = (0..n)
+                .map(|_| {
+                    let z = rng.next_normal() * if spiky { 4.0 } else { 1.0 };
+                    (z as f32).exp()
+                })
+                .collect();
+            let s: f32 = w.iter().sum();
+            for x in &mut w {
+                *x /= s;
+            }
+            w
+        },
+        move |v| {
+            // Shrink toward uniform.
+            let uniform = vec![1.0 / n as f32; n];
+            if v.iter().zip(&uniform).any(|(a, b)| (a - b).abs() > 1e-6) {
+                vec![uniform]
+            } else {
+                Vec::new()
+            }
+        },
+    )
+}
+
+/// Outcome of a property check.
+pub enum Check {
+    Pass,
+    Fail(String),
+}
+
+impl Check {
+    pub fn that(cond: bool, msg: impl Into<String>) -> Check {
+        if cond {
+            Check::Pass
+        } else {
+            Check::Fail(msg.into())
+        }
+    }
+}
+
+/// Run `prop` over `cases` generated inputs; on failure, shrink greedily and
+/// panic with the minimal counterexample found.
+pub fn check<T: Clone + std::fmt::Debug + 'static>(
+    name: &str,
+    gen: &Gen<T>,
+    cases: usize,
+    seed: u64,
+    prop: impl Fn(&T) -> Check,
+) {
+    let mut rng = Pcg64::new(seed);
+    for case in 0..cases {
+        let input = gen.sample(&mut rng);
+        if let Check::Fail(msg) = prop(&input) {
+            // Greedy shrink.
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut budget = 200;
+            'outer: while budget > 0 {
+                for cand in gen.shrinks(&best) {
+                    budget -= 1;
+                    if let Check::Fail(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed}):\n  {best_msg}\n  minimal input: {best:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", &usize_in(0, 100), 200, 1, |&x| {
+            Check::that(x + 1 > x, "increment grows")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal input: 51")]
+    fn shrinks_to_boundary() {
+        // Fails for x > 50; the minimal failing input is 51.
+        check("le-50", &usize_in(0, 1000), 500, 2, |&x| {
+            Check::that(x <= 50, format!("{x} > 50"))
+        });
+    }
+
+    #[test]
+    fn distribution_sums_to_one() {
+        let g = distribution(32);
+        let mut rng = Pcg64::new(3);
+        for _ in 0..50 {
+            let d = g.sample(&mut rng);
+            let s: f32 = d.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4);
+            assert!(d.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn vec_gen_respects_bounds() {
+        let g = vec_of(usize_in(0, 9), 2, 6);
+        let mut rng = Pcg64::new(4);
+        for _ in 0..100 {
+            let v = g.sample(&mut rng);
+            assert!(v.len() >= 2 && v.len() <= 6);
+            assert!(v.iter().all(|&x| x < 10));
+        }
+    }
+}

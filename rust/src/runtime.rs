@@ -1,0 +1,319 @@
+//! PJRT runtime: load AOT-compiled HLO text, compile once, execute on the
+//! request path with device-resident sequence state.
+//!
+//! ## Execution contract (mirrors python/compile/aot.py)
+//!
+//! Every entry point is `fn(params.., state, tokens[T], pos) -> state'`
+//! where `state = [ kv (kv_len f32) | logits region (32 * V f32) ]` is one
+//! flat f32 vector. Because the output is a single non-tuple array, PJRT
+//! hands back a device buffer that threads directly into the next call:
+//! **the KV cache never crosses the device boundary**. After a call with
+//! block T, the host reads exactly `T * V` floats at offset `kv_len`
+//! (`copy_raw_to_host_sync`) — the logits — and nothing else.
+//!
+//! Weights are uploaded once per model as device buffers and shared by all
+//! sequences; all weight variants of an architecture share the same three
+//! compiled executables (prefill/verify/decode), so swapping draft
+//! checkpoints costs one weight upload, not a recompile.
+
+use std::sync::Arc;
+
+use crate::artifacts::{ArchInfo, Manifest};
+use crate::error::{Error, Result};
+use crate::weights::WeightsFile;
+
+/// Above this state size (f32 elements) the on-device logits-extract
+/// executable beats a full-state download (measured crossover; §Perf).
+const EXTRACT_THRESHOLD_ELEMS: usize = 128 * 1024;
+
+/// Entry points exported per architecture.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Entry {
+    Prefill,
+    Verify,
+    Decode,
+}
+
+impl Entry {
+    pub fn name(self) -> &'static str {
+        match self {
+            Entry::Prefill => "prefill",
+            Entry::Verify => "verify",
+            Entry::Decode => "decode",
+        }
+    }
+}
+
+/// Shared PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Runtime> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile the three entry points of one architecture.
+    pub fn load_arch(self: &Arc<Self>, manifest: &Manifest, arch_name: &str) -> Result<Arc<CompiledArch>> {
+        let arch = manifest.arch(arch_name)?.clone();
+        let compile = |rel: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = manifest.root.join(&arch.hlo_dir).join(rel);
+            let path_str = path
+                .to_str()
+                .ok_or_else(|| Error::msg("non-utf8 artifact path"))?;
+            let proto = xla::HloModuleProto::from_text_file(path_str)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(self.client.compile(&comp)?)
+        };
+        let prefill = compile("prefill.hlo.txt")?;
+        let verify = compile("verify.hlo.txt")?;
+        let decode = compile("decode.hlo.txt")?;
+        // Optional logits-extraction entry (older bundles lack it; the
+        // runtime then falls back to full-state downloads).
+        let extract = if manifest.root.join(&arch.hlo_dir).join("extract.hlo.txt").exists() {
+            Some(compile("extract.hlo.txt")?)
+        } else {
+            None
+        };
+        Ok(Arc::new(CompiledArch {
+            rt: self.clone(),
+            arch,
+            prefill,
+            verify,
+            decode,
+            extract,
+            blocks: [
+                manifest.entry_blocks["prefill"],
+                manifest.entry_blocks["verify"],
+                manifest.entry_blocks["decode"],
+            ],
+        }))
+    }
+
+    /// Load a weight variant for a compiled architecture.
+    pub fn load_model(
+        &self,
+        manifest: &Manifest,
+        arch: &Arc<CompiledArch>,
+        model_name: &str,
+    ) -> Result<Model> {
+        let info = manifest.model(model_name)?.clone();
+        if info.arch != arch.arch.name {
+            return Err(Error::Manifest(format!(
+                "model {model_name} has arch {}, loaded arch is {}",
+                info.arch, arch.arch.name
+            )));
+        }
+        let path = manifest.weights_path(model_name)?;
+        let wf = WeightsFile::load(path.to_str().unwrap())?;
+        wf.check_order(&arch.arch.param_order)?;
+        let mut weight_bufs = Vec::with_capacity(wf.len());
+        for t in wf.tensors_in_order() {
+            weight_bufs.push(self.client.buffer_from_host_buffer::<f32>(
+                t.data(),
+                t.shape(),
+                None,
+            )?);
+        }
+        Ok(Model {
+            name: model_name.to_string(),
+            arch: arch.clone(),
+            weight_bufs,
+            params: info.params,
+            c_ratio: info.c_ratio,
+            scratch: std::cell::RefCell::new(vec![0f32; arch.arch.state_len]),
+        })
+    }
+}
+
+/// The three compiled executables of one architecture.
+pub struct CompiledArch {
+    rt: Arc<Runtime>,
+    pub arch: ArchInfo,
+    prefill: xla::PjRtLoadedExecutable,
+    verify: xla::PjRtLoadedExecutable,
+    decode: xla::PjRtLoadedExecutable,
+    /// On-device logits slicer: avoids downloading the full state vector
+    /// per step (§Perf iteration 2).
+    extract: Option<xla::PjRtLoadedExecutable>,
+    /// block sizes in Entry order [prefill, verify, decode].
+    blocks: [usize; 3],
+}
+
+impl CompiledArch {
+    pub fn block(&self, entry: Entry) -> usize {
+        match entry {
+            Entry::Prefill => self.blocks[0],
+            Entry::Verify => self.blocks[1],
+            Entry::Decode => self.blocks[2],
+        }
+    }
+
+    fn exe(&self, entry: Entry) -> &xla::PjRtLoadedExecutable {
+        match entry {
+            Entry::Prefill => &self.prefill,
+            Entry::Verify => &self.verify,
+            Entry::Decode => &self.decode,
+        }
+    }
+}
+
+/// A loaded weight variant (shares its arch's executables).
+pub struct Model {
+    pub name: String,
+    pub arch: Arc<CompiledArch>,
+    weight_bufs: Vec<xla::PjRtBuffer>,
+    pub params: usize,
+    pub c_ratio: f64,
+    /// Host staging buffer for reading logits out of the state vector.
+    /// The TFRT CPU PJRT client does not implement partial raw reads
+    /// (`CopyRawToHost`), so each call materializes the output literal and
+    /// copies it here once; the logits slice is then carved out without a
+    /// per-call allocation. RefCell is safe: PJRT handles are !Send and the
+    /// scheduler is single-threaded by design (see coordinator docs).
+    scratch: std::cell::RefCell<Vec<f32>>,
+}
+
+/// Device-resident per-sequence state (KV cache + logits region).
+pub struct SeqState {
+    buf: xla::PjRtBuffer,
+}
+
+impl Model {
+    pub fn vocab_size(&self) -> usize {
+        self.arch.arch.vocab_size
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.arch.arch.max_seq
+    }
+
+    /// Fresh zeroed sequence state on device.
+    pub fn new_state(&self) -> Result<SeqState> {
+        let zeros = vec![0f32; self.arch.arch.state_len];
+        let buf = self.arch.rt.client.buffer_from_host_buffer::<f32>(
+            &zeros,
+            &[self.arch.arch.state_len],
+            None,
+        )?;
+        Ok(SeqState { buf })
+    }
+
+    /// Run one entry point.
+    ///
+    /// `tokens.len()` must be <= block; short inputs are PAD-padded (the
+    /// padded rows write stale KV beyond `pos + tokens.len()`, which the
+    /// position-masked attention never exposes — callers simply do not
+    /// advance past the real length). Returns the new state and the logits
+    /// rows for the *real* tokens: `tokens.len() * vocab` floats.
+    pub fn run(
+        &self,
+        entry: Entry,
+        state: SeqState,
+        tokens: &[u32],
+        pos: usize,
+    ) -> Result<(SeqState, Vec<f32>)> {
+        let block = self.arch.block(entry);
+        let v = self.arch.arch.vocab_size;
+        if tokens.is_empty() || tokens.len() > block {
+            return Err(Error::msg(format!(
+                "{}: got {} tokens for block {}",
+                entry.name(),
+                tokens.len(),
+                block
+            )));
+        }
+        if pos + tokens.len() > self.arch.arch.max_seq {
+            return Err(Error::KvCache(format!(
+                "sequence overflow: pos {pos} + {} > max_seq {}",
+                tokens.len(),
+                self.arch.arch.max_seq
+            )));
+        }
+        let mut tok_i32 = vec![0i32; block];
+        for (i, &t) in tokens.iter().enumerate() {
+            tok_i32[i] = t as i32;
+        }
+        let client = &self.arch.rt.client;
+        let tok_buf = client.buffer_from_host_buffer::<i32>(&tok_i32, &[block], None)?;
+        let pos_buf = client.buffer_from_host_buffer::<i32>(&[pos as i32], &[], None)?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.weight_bufs.len() + 3);
+        args.extend(self.weight_bufs.iter());
+        args.push(&state.buf);
+        args.push(&tok_buf);
+        args.push(&pos_buf);
+
+        let mut out = self.arch.exe(entry).execute_b(&args)?;
+        let buf = out
+            .get_mut(0)
+            .and_then(|r| (!r.is_empty()).then(|| r.remove(0)))
+            .ok_or_else(|| Error::msg("executable returned no output"))?;
+
+        // Read the logits region. The returned device buffer itself is kept
+        // and threaded into the next call. Fast path: a 2-op on-device
+        // slice executable so the host downloads only the logits region;
+        // fallback: full-state download (TFRT CPU lacks partial
+        // CopyRawToHost). See EXPERIMENTS.md §Perf.
+        // The extra dispatch only pays off when the avoided copy is large:
+        // for the draft arch (state ~147KB) the fallback full-state download
+        // is faster than a second executable launch (§Perf iteration 3).
+        let use_extract = self.arch.arch.state_len > EXTRACT_THRESHOLD_ELEMS;
+        let logits = if let Some(extract) = self.arch.extract.as_ref().filter(|_| use_extract) {
+            let mut out = extract.execute_b(&[&buf])?;
+            let lbuf = out
+                .get_mut(0)
+                .and_then(|r| (!r.is_empty()).then(|| r.remove(0)))
+                .ok_or_else(|| Error::msg("extract returned no output"))?;
+            let lit = lbuf.to_literal_sync()?;
+            let mut scratch = self.scratch.borrow_mut();
+            let region = &mut scratch[..self.arch.arch.state_len - self.arch.arch.kv_len];
+            lit.copy_raw_to::<f32>(region)?;
+            region[..tokens.len() * v].to_vec()
+        } else {
+            let lit = buf.to_literal_sync()?;
+            let mut scratch = self.scratch.borrow_mut();
+            lit.copy_raw_to::<f32>(&mut scratch)?;
+            let kvn = self.arch.arch.kv_len;
+            scratch[kvn..kvn + tokens.len() * v].to_vec()
+        };
+        Ok((SeqState { buf }, logits))
+    }
+
+    /// Prefill an arbitrary-length prompt by chunking through the prefill
+    /// entry. Returns (state, last-token logits row, prompt length).
+    pub fn prefill_prompt(&self, prompt: &[u32]) -> Result<(SeqState, Vec<f32>)> {
+        let block = self.arch.block(Entry::Prefill);
+        let v = self.arch.arch.vocab_size;
+        let mut state = self.new_state()?;
+        let mut last = Vec::new();
+        let mut pos = 0usize;
+        for chunk in prompt.chunks(block) {
+            let (s2, logits) = self.run(Entry::Prefill, state, chunk, pos)?;
+            state = s2;
+            pos += chunk.len();
+            let off = (chunk.len() - 1) * v;
+            last = logits[off..off + v].to_vec();
+        }
+        Ok((state, last))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entry_names() {
+        assert_eq!(Entry::Prefill.name(), "prefill");
+        assert_eq!(Entry::Verify.name(), "verify");
+        assert_eq!(Entry::Decode.name(), "decode");
+    }
+    // Integration tests that exercise real PJRT execution live in
+    // rust/tests/runtime_integration.rs (they need `make artifacts`).
+}

@@ -1,0 +1,245 @@
+//! Sampling: logits post-processing and the Leviathan et al. modified
+//! rejection rule — the correctness core of speculative decoding.
+//!
+//! The guarantee (property-tested in `rust/tests/spec_equivalence.rs` and
+//! unit-tested here): for any draft distribution p and target distribution
+//! q, the token emitted by `verify_block` is marginally distributed as q —
+//! speculative decoding is *lossless* with respect to the target model.
+//!
+//! Greedy decoding (temperature 0) falls out as the one-hot limit: a draft
+//! token is accepted iff it equals the target argmax, and the residual
+//! collapses to the target argmax — no special-casing.
+
+use crate::config::SamplingConfig;
+use crate::rng::Pcg64;
+use crate::tensor::{argmax, softmax_inplace, top_p_filter};
+
+/// Convert a logits row to a probability vector under a sampling regime.
+/// This must be applied identically to draft and target logits: the SD
+/// correctness theorem is about the *post-processing-adjusted* distributions.
+pub fn logits_to_probs(logits: &[f32], cfg: &SamplingConfig) -> Vec<f32> {
+    let mut p = logits.to_vec();
+    softmax_inplace(&mut p, cfg.temperature);
+    top_p_filter(&mut p, cfg.top_p);
+    p
+}
+
+/// Sample a token id from a probability vector.
+pub fn sample_token(probs: &[f32], cfg: &SamplingConfig, rng: &mut Pcg64) -> u32 {
+    if cfg.temperature <= 0.0 {
+        argmax(probs) as u32
+    } else {
+        rng.categorical(probs) as u32
+    }
+}
+
+/// Outcome of verifying one drafted block.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VerifyOutcome {
+    /// Number of draft tokens accepted (0..=gamma).
+    pub accepted: usize,
+    /// The token emitted *after* the accepted prefix: residual-sampled on
+    /// rejection, or bonus-sampled from the gamma+1-th target distribution
+    /// when everything was accepted.
+    pub next_token: u32,
+    /// True when all gamma draft tokens were accepted (next_token is the
+    /// free bonus token).
+    pub all_accepted: bool,
+}
+
+/// Modified rejection sampling over a drafted block (Leviathan et al. 2023).
+///
+/// * `draft_probs[j]` — p_j, the draft distribution the j-th token was
+///   sampled from (post temperature/top-p).
+/// * `target_probs[j]` — q_j for j in 0..gamma, plus `target_probs[gamma]`
+///   = the bonus distribution used when every draft token is accepted.
+/// * `tokens[j]` — the drafted token ids.
+///
+/// Accept t_j with probability min(1, q_j(t_j) / p_j(t_j)); at the first
+/// rejection emit a token from the residual norm(max(q_j - p_j, 0)).
+pub fn verify_block(
+    draft_probs: &[Vec<f32>],
+    target_probs: &[Vec<f32>],
+    tokens: &[u32],
+    rng: &mut Pcg64,
+) -> VerifyOutcome {
+    let gamma = tokens.len();
+    assert_eq!(draft_probs.len(), gamma, "draft probs arity");
+    assert!(target_probs.len() >= gamma + 1, "need gamma+1 target distributions");
+
+    for j in 0..gamma {
+        let t = tokens[j] as usize;
+        let p = draft_probs[j][t].max(1e-20);
+        let q = target_probs[j][t];
+        let ratio = (q / p).min(1.0);
+        if (rng.next_f64() as f32) < ratio {
+            continue; // accepted
+        }
+        // Rejected at j: residual sample.
+        let residual = residual_distribution(&draft_probs[j], &target_probs[j]);
+        let next = rng.categorical(&residual) as u32;
+        return VerifyOutcome { accepted: j, next_token: next, all_accepted: false };
+    }
+    // All accepted: bonus token from the gamma+1-th target distribution.
+    let bonus = rng.categorical(&target_probs[gamma]) as u32;
+    VerifyOutcome { accepted: gamma, next_token: bonus, all_accepted: true }
+}
+
+/// norm(max(q - p, 0)); falls back to q if the positive part has no mass
+/// (p == q), matching kernels/ref.py::sd_accept.
+pub fn residual_distribution(p: &[f32], q: &[f32]) -> Vec<f32> {
+    let mut r: Vec<f32> = q.iter().zip(p).map(|(&qi, &pi)| (qi - pi).max(0.0)).collect();
+    let z: f32 = r.iter().sum();
+    if z > 1e-12 {
+        for x in &mut r {
+            *x /= z;
+        }
+        r
+    } else {
+        q.to_vec()
+    }
+}
+
+/// Theoretical per-token acceptance probability 1 - TVD(p, q) — used by the
+/// analytical-vs-empirical consistency test and the eval harness.
+pub fn acceptance_probability(p: &[f32], q: &[f32]) -> f64 {
+    p.iter().zip(q).map(|(&pi, &qi)| pi.min(qi) as f64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uniform(n: usize) -> Vec<f32> {
+        vec![1.0 / n as f32; n]
+    }
+
+    fn onehot(n: usize, i: usize) -> Vec<f32> {
+        let mut v = vec![0.0; n];
+        v[i] = 1.0;
+        v
+    }
+
+    #[test]
+    fn identical_distributions_always_accept() {
+        let mut rng = Pcg64::new(1);
+        let p = uniform(16);
+        for _ in 0..200 {
+            let tok = rng.next_below(16) as u32;
+            let out = verify_block(
+                &[p.clone(), p.clone()],
+                &[p.clone(), p.clone(), p.clone()],
+                &[tok, tok],
+                &mut rng,
+            );
+            assert!(out.all_accepted);
+            assert_eq!(out.accepted, 2);
+        }
+    }
+
+    #[test]
+    fn disjoint_supports_always_reject_and_emit_target() {
+        let mut rng = Pcg64::new(2);
+        let p = onehot(8, 0);
+        let q = onehot(8, 5);
+        for _ in 0..100 {
+            let out = verify_block(&[p.clone()], &[q.clone(), q.clone()], &[0], &mut rng);
+            assert_eq!(out.accepted, 0);
+            assert_eq!(out.next_token, 5);
+        }
+    }
+
+    #[test]
+    fn greedy_limit_accepts_iff_argmax_matches() {
+        let mut rng = Pcg64::new(3);
+        // One-hots as produced by temperature-0 post-processing.
+        let p = onehot(8, 3);
+        let q_same = onehot(8, 3);
+        let q_diff = onehot(8, 6);
+        let a = verify_block(&[p.clone()], &[q_same.clone(), q_same], &[3], &mut rng);
+        assert!(a.all_accepted);
+        let b = verify_block(&[p], &[q_diff.clone(), q_diff], &[3], &mut rng);
+        assert_eq!(b.accepted, 0);
+        assert_eq!(b.next_token, 6);
+    }
+
+    #[test]
+    fn residual_is_valid_distribution() {
+        let p = vec![0.7, 0.2, 0.1];
+        let q = vec![0.2, 0.5, 0.3];
+        let r = residual_distribution(&p, &q);
+        assert!((r.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert_eq!(r[0], 0.0); // q < p there
+        assert!(r.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn residual_p_equals_q_falls_back_to_q() {
+        let p = vec![0.5, 0.5];
+        let r = residual_distribution(&p, &p);
+        assert_eq!(r, p);
+    }
+
+    /// The lossless-ness theorem, empirically: marginal of emitted first
+    /// token == q, regardless of p.
+    #[test]
+    fn output_distribution_matches_target() {
+        let mut rng = Pcg64::new(4);
+        let p = vec![0.6, 0.3, 0.1];
+        let q = vec![0.1, 0.3, 0.6];
+        let n = 60_000;
+        let mut counts = [0usize; 3];
+        for _ in 0..n {
+            // Draft samples from p; verify emits the first post-verification
+            // token: accepted draft token, or the residual token.
+            let tok = rng.categorical(&p) as u32;
+            let out = verify_block(&[p.clone()], &[q.clone(), q.clone()], &[tok], &mut rng);
+            let first = if out.accepted >= 1 { tok } else { out.next_token };
+            counts[first as usize] += 1;
+        }
+        for i in 0..3 {
+            let emp = counts[i] as f64 / n as f64;
+            assert!(
+                (emp - q[i] as f64).abs() < 0.01,
+                "token {i}: empirical {emp:.3} vs target {:.3}",
+                q[i]
+            );
+        }
+    }
+
+    #[test]
+    fn acceptance_rate_matches_one_minus_tvd() {
+        let mut rng = Pcg64::new(5);
+        let p = vec![0.5, 0.4, 0.1];
+        let q = vec![0.3, 0.3, 0.4];
+        let expected = acceptance_probability(&p, &q); // 0.3+0.3+0.1 = 0.7
+        assert!((expected - 0.7).abs() < 1e-6);
+        let n = 60_000;
+        let mut acc = 0usize;
+        for _ in 0..n {
+            let tok = rng.categorical(&p) as u32;
+            let out = verify_block(&[p.clone()], &[q.clone(), q.clone()], &[tok], &mut rng);
+            acc += (out.accepted == 1) as usize;
+        }
+        let emp = acc as f64 / n as f64;
+        assert!((emp - expected).abs() < 0.01, "empirical {emp} vs 1-TVD {expected}");
+    }
+
+    #[test]
+    fn logits_pipeline_greedy_is_argmax_onehot() {
+        let cfg = SamplingConfig::greedy();
+        let p = logits_to_probs(&[0.0, 3.0, 1.0], &cfg);
+        assert_eq!(p, vec![0.0, 1.0, 0.0]);
+        let mut rng = Pcg64::new(6);
+        assert_eq!(sample_token(&p, &cfg, &mut rng), 1);
+    }
+
+    #[test]
+    fn top_p_pipeline_restricts_support() {
+        let cfg = SamplingConfig::random(1.0, 0.5, 0);
+        let p = logits_to_probs(&[2.0, 2.0, -10.0, -10.0], &cfg);
+        assert_eq!(p[2], 0.0);
+        assert_eq!(p[3], 0.0);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+}

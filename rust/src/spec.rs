@@ -1,0 +1,259 @@
+//! The speculative decoding engine: draft-γ-then-verify with KV rollback.
+//!
+//! Per block (one target run), following Leviathan et al. as deployed in
+//! the paper's evaluation:
+//!
+//! 1. **draft sync** — feed the tokens the draft hasn't processed yet
+//!    (1-2 tokens after the first block) in ONE draft call; its last
+//!    logits row is the basis for proposal 0.
+//! 2. **draft proposals** — sample γ tokens autoregressively; only γ-1
+//!    decode calls are needed because proposal j's basis is the decode of
+//!    t_{j-1} and the last proposed token is *not* pre-processed (if it
+//!    survives verification the next block's sync ingests it). Total draft
+//!    calls per block = γ, exactly the paper's c·γ cost model.
+//! 3. **target verify** — one call processing [pending ++ drafted] (≤ γ+1
+//!    ≤ the exported verify block of 8) yielding the γ+1 target
+//!    distributions q_0..q_γ.
+//! 4. **rejection sampling** — [`sampling::verify_block`]; on rejection the
+//!    caches *roll back by length only* (the position-masked attention
+//!    contract makes stale rows unreachable).
+//!
+//! The engine is single-sequence; the [`crate::coordinator`] interleaves
+//! many sessions over it (iteration-level scheduling).
+
+use crate::config::SamplingConfig;
+use crate::error::{Error, Result};
+use crate::kvcache::SeqCache;
+use crate::metrics::SpecStats;
+use crate::rng::Pcg64;
+use crate::runtime::{Entry, Model, SeqState};
+use crate::sampling::{logits_to_probs, sample_token, verify_block};
+use crate::tokenizer::EOS;
+
+/// Engine configuration + model handles.
+pub struct SpecDecoder<'a> {
+    pub draft: &'a Model,
+    pub target: &'a Model,
+    pub gamma: usize,
+}
+
+/// One in-flight sequence.
+pub struct SpecSession {
+    /// prompt ++ generated tokens (ground truth sequence).
+    pub seq: Vec<u32>,
+    pub prompt_len: usize,
+    d_cache: SeqCache<SeqState>,
+    t_cache: SeqCache<SeqState>,
+    /// Last target logits row (prediction for position seq.len()) — only
+    /// consulted when the target has no pending tokens (right after prefill).
+    t_last_logits: Vec<f32>,
+    /// Last draft logits row — consulted when the draft has no pending
+    /// tokens (right after prefill, before the first speculation block).
+    d_last_logits: Vec<f32>,
+    pub stats: SpecStats,
+    pub finished: bool,
+}
+
+impl SpecSession {
+    pub fn generated(&self) -> &[u32] {
+        &self.seq[self.prompt_len..]
+    }
+}
+
+impl<'a> SpecDecoder<'a> {
+    pub fn new(draft: &'a Model, target: &'a Model, gamma: usize) -> Result<Self> {
+        let verify_block_size = target.arch.block(Entry::Verify);
+        if gamma + 1 > verify_block_size {
+            return Err(Error::msg(format!(
+                "gamma {gamma} needs verify block >= {} (exported: {verify_block_size})",
+                gamma + 1
+            )));
+        }
+        if gamma == 0 {
+            return Err(Error::msg("gamma must be >= 1"));
+        }
+        Ok(SpecDecoder { draft, target, gamma })
+    }
+
+    /// Prefill both models on the prompt.
+    pub fn start(&self, prompt: &[u32]) -> Result<SpecSession> {
+        if prompt.is_empty() {
+            return Err(Error::msg("empty prompt"));
+        }
+        let mut stats = SpecStats::default();
+        let (t_state, t_logits) = self.target.prefill_prompt(prompt)?;
+        let (d_state, d_logits) = self.draft.prefill_prompt(prompt)?;
+        let pf_block = self.target.arch.block(Entry::Prefill);
+        stats.target_calls += prompt.len().div_ceil(pf_block);
+        stats.draft_calls += prompt.len().div_ceil(self.draft.arch.block(Entry::Prefill));
+
+        let mut t_cache = SeqCache::new(t_state, self.target.max_seq());
+        t_cache.advance(prompt.len())?;
+        let mut d_cache = SeqCache::new(d_state, self.draft.max_seq());
+        d_cache.advance(prompt.len())?;
+
+        Ok(SpecSession {
+            seq: prompt.to_vec(),
+            prompt_len: prompt.len(),
+            d_cache,
+            t_cache,
+            t_last_logits: t_logits,
+            d_last_logits: d_logits,
+            stats,
+            finished: false,
+        })
+    }
+
+    /// Feed the draft everything it hasn't processed and return its last
+    /// logits row (the proposal-0 basis). At most one model call; zero
+    /// right after prefill, when the stored prefill row is the basis.
+    fn sync_draft(&self, s: &mut SpecSession) -> Result<Vec<f32>> {
+        let l = s.seq.len();
+        let d_len = s.d_cache.len();
+        if d_len == l {
+            return Ok(s.d_last_logits.clone());
+        }
+        let pending = &s.seq[d_len..l];
+        let vb = self.draft.arch.block(Entry::Verify);
+        debug_assert!(pending.len() <= vb, "draft pending {} > verify block {vb}", pending.len());
+        let entry = if pending.len() == 1 { Entry::Decode } else { Entry::Verify };
+        let state = s.d_cache.take_state()?;
+        let (state, logits) = self.draft.run(entry, state, pending, d_len)?;
+        s.d_cache.put_state(state);
+        s.d_cache.advance(pending.len())?;
+        s.stats.draft_calls += 1;
+        let v = self.draft.vocab_size();
+        let off = (pending.len() - 1) * v;
+        s.d_last_logits = logits[off..off + v].to_vec();
+        Ok(s.d_last_logits.clone())
+    }
+
+    /// Run one speculation block; returns the tokens emitted (1..=gamma+1).
+    pub fn step(
+        &self,
+        s: &mut SpecSession,
+        cfg: &SamplingConfig,
+        rng: &mut Pcg64,
+    ) -> Result<Vec<u32>> {
+        if s.finished {
+            return Ok(Vec::new());
+        }
+        let gamma = self.gamma;
+        let l = s.seq.len();
+        let v = self.target.vocab_size();
+
+        // Capacity guard: a block can add gamma+1 tokens and the models
+        // must be able to process them next round.
+        if l + 2 * (gamma + 1) >= self.target.max_seq() {
+            s.finished = true;
+            return Ok(Vec::new());
+        }
+
+        // 1. + 2. — draft sync and proposals (gamma draft calls in total).
+        let mut basis = self.sync_draft(s)?;
+        let mut drafted: Vec<u32> = Vec::with_capacity(gamma);
+        let mut draft_probs: Vec<Vec<f32>> = Vec::with_capacity(gamma);
+        for j in 0..gamma {
+            let p = logits_to_probs(&basis, cfg);
+            let t = sample_token(&p, cfg, rng);
+            drafted.push(t);
+            draft_probs.push(p);
+            if j + 1 < gamma {
+                let state = s.d_cache.take_state()?;
+                let (state, logits) = self.draft.run(Entry::Decode, state, &[t], s.d_cache.len())?;
+                s.d_cache.put_state(state);
+                s.d_cache.advance(1)?;
+                s.stats.draft_calls += 1;
+                basis = logits[..v].to_vec();
+            }
+        }
+        s.stats.drafted += gamma;
+
+        // 3. — one target verify over [pending ++ drafted].
+        let t_len = s.t_cache.len();
+        let pending_t: Vec<u32> = s.seq[t_len..l].to_vec();
+        let mut fed = pending_t.clone();
+        fed.extend_from_slice(&drafted);
+        debug_assert!(fed.len() <= self.target.arch.block(Entry::Verify));
+        let state = s.t_cache.take_state()?;
+        let (state, t_logits) = self.target.run(Entry::Verify, state, &fed, t_len)?;
+        s.t_cache.put_state(state);
+        s.t_cache.advance(fed.len())?;
+        s.stats.target_calls += 1;
+        s.stats.blocks += 1;
+
+        // Assemble q_0..q_gamma.
+        let np = pending_t.len();
+        let row = |i: usize| -> &[f32] { &t_logits[i * v..(i + 1) * v] };
+        let mut target_probs: Vec<Vec<f32>> = Vec::with_capacity(gamma + 1);
+        for j in 0..=gamma {
+            let probs = if j == 0 && np == 0 {
+                logits_to_probs(&s.t_last_logits, cfg)
+            } else {
+                logits_to_probs(row(np + j - 1), cfg)
+            };
+            target_probs.push(probs);
+        }
+
+        // 4. — rejection sampling + rollback.
+        let out = verify_block(&draft_probs, &target_probs, &drafted, rng);
+        let k = out.accepted;
+        s.stats.accepted += k;
+
+        // Valid processed positions: target saw pending + all gamma drafted,
+        // but only the first k drafted survive; the draft processed only the
+        // first gamma-1 drafted tokens.
+        s.t_cache.rollback_to(l + k)?;
+        s.d_cache.rollback_to(l + k.min(gamma.saturating_sub(1)))?;
+
+        let mut emitted: Vec<u32> = drafted[..k].to_vec();
+        emitted.push(out.next_token);
+        s.stats.generated += emitted.len();
+
+        // EOS: truncate at the first EOS (inclusive) and finish.
+        if let Some(eos_at) = emitted.iter().position(|&t| t == EOS) {
+            emitted.truncate(eos_at + 1);
+            // Roll validity back to the kept prefix.
+            let keep = l + emitted.len();
+            s.t_cache.rollback_to(s.t_cache.len().min(keep))?;
+            s.d_cache.rollback_to(s.d_cache.len().min(keep))?;
+            s.finished = true;
+        }
+        s.seq.extend_from_slice(&emitted);
+        Ok(emitted)
+    }
+
+    /// Convenience driver: generate until EOS / max_new / capacity.
+    pub fn generate(
+        &self,
+        prompt: &[u32],
+        max_new: usize,
+        cfg: &SamplingConfig,
+        rng: &mut Pcg64,
+    ) -> Result<(Vec<u32>, SpecStats)> {
+        let mut session = self.start(prompt)?;
+        while !session.finished && session.generated().len() < max_new {
+            let emitted = self.step(&mut session, cfg, rng)?;
+            if emitted.is_empty() {
+                break;
+            }
+        }
+        let mut out = session.generated().to_vec();
+        out.truncate(max_new);
+        Ok((out, session.stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // The engine needs compiled artifacts; its integration tests live in
+    // rust/tests/spec_equivalence.rs. Here we pin the pure bookkeeping.
+    use crate::metrics::SpecStats;
+
+    #[test]
+    fn stats_default_zero() {
+        let s = SpecStats::default();
+        assert_eq!(s.block_efficiency(), 0.0);
+        assert_eq!(s.acceptance_rate(), 0.0);
+    }
+}

@@ -1,0 +1,208 @@
+//! Small host-side f32 tensor used by sampling, eval and the weight loader.
+//!
+//! Not a linear-algebra library — the device math lives in the AOT-compiled
+//! HLO. This type only needs shape bookkeeping, row views and a couple of
+//! reductions for the logits post-processing on the host hot path.
+
+use crate::error::{Error, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::msg(format!(
+                "tensor shape {shape:?} needs {n} elements, got {}",
+                data.len()
+            )));
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.shape.len(), 2, "row() on non-matrix");
+        let w = self.shape[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    pub fn argmax_row(&self, i: usize) -> usize {
+        argmax(self.row(i))
+    }
+}
+
+/// Index of the maximum element (first on ties).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best
+}
+
+/// In-place numerically-stable softmax with temperature. `temp == 0` is the
+/// greedy limit: a one-hot on the argmax (matching the python evaluator).
+pub fn softmax_inplace(xs: &mut [f32], temp: f32) {
+    if temp <= 0.0 {
+        let am = argmax(xs);
+        for x in xs.iter_mut() {
+            *x = 0.0;
+        }
+        xs[am] = 1.0;
+        return;
+    }
+    let mut max = f32::NEG_INFINITY;
+    for &x in xs.iter() {
+        max = max.max(x);
+    }
+    let mut sum = 0.0f32;
+    for x in xs.iter_mut() {
+        *x = ((*x - max) / temp).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum;
+    for x in xs.iter_mut() {
+        *x *= inv;
+    }
+}
+
+/// Zero out everything outside the top-p nucleus and renormalize, matching
+/// the build-time python sampler: sort descending, keep tokens while the
+/// cumulative mass *before* a token is < top_p (always keeps the top token).
+pub fn top_p_filter(probs: &mut [f32], top_p: f32) {
+    if top_p >= 1.0 {
+        return;
+    }
+    let mut order: Vec<usize> = (0..probs.len()).collect();
+    order.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+    let mut csum = 0.0f32;
+    let mut keep = vec![false; probs.len()];
+    for &i in &order {
+        if csum < top_p {
+            keep[i] = true;
+            csum += probs[i];
+        } else {
+            break;
+        }
+    }
+    let mut total = 0.0f32;
+    for (i, p) in probs.iter_mut().enumerate() {
+        if !keep[i] {
+            *p = 0.0;
+        } else {
+            total += *p;
+        }
+    }
+    if total > 0.0 {
+        let inv = 1.0 / total;
+        for p in probs.iter_mut() {
+            *p *= inv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checked() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn rows_and_argmax() {
+        let t = Tensor::new(vec![2, 3], vec![1.0, 5.0, 2.0, 9.0, 0.0, 3.0]).unwrap();
+        assert_eq!(t.row(1), &[9.0, 0.0, 3.0]);
+        assert_eq!(t.argmax_row(0), 1);
+        assert_eq!(t.argmax_row(1), 0);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut xs = vec![1.0, 2.0, 3.0];
+        softmax_inplace(&mut xs, 1.0);
+        let s: f32 = xs.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(xs[2] > xs[1] && xs[1] > xs[0]);
+    }
+
+    #[test]
+    fn softmax_temperature_sharpens() {
+        let mut cold = vec![1.0, 2.0];
+        let mut hot = vec![1.0, 2.0];
+        softmax_inplace(&mut cold, 0.5);
+        softmax_inplace(&mut hot, 2.0);
+        assert!(cold[1] > hot[1]);
+    }
+
+    #[test]
+    fn softmax_zero_temp_is_onehot_argmax() {
+        let mut xs = vec![0.1, 3.0, 2.0];
+        softmax_inplace(&mut xs, 0.0);
+        assert_eq!(xs, vec![0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn top_p_keeps_top_token_always() {
+        let mut p = vec![0.9f32, 0.05, 0.05];
+        top_p_filter(&mut p, 0.1);
+        assert!((p[0] - 1.0).abs() < 1e-6);
+        assert_eq!(p[1], 0.0);
+    }
+
+    #[test]
+    fn top_p_renormalizes() {
+        let mut p = vec![0.5f32, 0.3, 0.2];
+        top_p_filter(&mut p, 0.8);
+        let s: f32 = p.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert_eq!(p[2], 0.0); // cumsum before third token = 0.8, not < 0.8
+    }
+
+    #[test]
+    fn softmax_handles_extremes() {
+        let mut xs = vec![-1e30f32, 0.0, -1e30];
+        softmax_inplace(&mut xs, 1.0);
+        assert!((xs[1] - 1.0).abs() < 1e-6);
+    }
+}

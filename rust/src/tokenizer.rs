@@ -1,0 +1,215 @@
+//! SynthChat word-level tokenizer over the shared `vocab.json` artifact.
+//!
+//! The vocabulary is built deterministically by `python/compile/data.py`
+//! (topic content words, function words, template markers, a German-like
+//! block with a bijective mapping to English words) and exported with a
+//! content hash; the Rust side loads the same file so both halves of the
+//! system agree token-for-token. `decode(encode(x)) == x` for in-vocab
+//! text is property-tested.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+use crate::json::Value;
+
+/// Special token ids (fixed layout, asserted at load).
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const EOS: u32 = 2;
+pub const USER: u32 = 3;
+pub const ASST: u32 = 4;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    words: Vec<String>,
+    index: HashMap<String, u32>,
+    /// [lo, hi) id range per topic.
+    pub topic_ranges: Vec<(u32, u32)>,
+    pub function_range: (u32, u32),
+    pub template_range: (u32, u32),
+    pub de_range: (u32, u32),
+    /// de token id (offset into de_range) -> en token id.
+    pub de_to_en: Vec<u32>,
+}
+
+impl Tokenizer {
+    pub fn load(path: &std::path::Path) -> Result<Tokenizer> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Tokenizer(format!("cannot read {}: {e}", path.display())))?;
+        Self::from_json(&Value::parse(&text)?)
+    }
+
+    pub fn from_json(v: &Value) -> Result<Tokenizer> {
+        let words: Vec<String> = v
+            .get("words")
+            .as_arr()
+            .ok_or_else(|| Error::Tokenizer("missing words".into()))?
+            .iter()
+            .map(|w| w.as_str().unwrap_or("").to_string())
+            .collect();
+        if words.len() < 5 {
+            return Err(Error::Tokenizer("vocab too small".into()));
+        }
+        // Fixed special layout.
+        let special = v.get("special");
+        for (name, expect) in
+            [("pad", PAD), ("bos", BOS), ("eos", EOS), ("user", USER), ("asst", ASST)]
+        {
+            let got = special.req_usize(name)? as u32;
+            if got != expect {
+                return Err(Error::Tokenizer(format!(
+                    "special token '{name}' at id {got}, expected {expect}"
+                )));
+            }
+        }
+        let range = |key: &str| -> Result<(u32, u32)> {
+            let arr = v
+                .get(key)
+                .as_arr()
+                .ok_or_else(|| Error::Tokenizer(format!("missing {key}")))?;
+            Ok((arr[0].as_usize().unwrap_or(0) as u32, arr[1].as_usize().unwrap_or(0) as u32))
+        };
+        let topic_ranges = v
+            .get("topic_ranges")
+            .as_arr()
+            .ok_or_else(|| Error::Tokenizer("missing topic_ranges".into()))?
+            .iter()
+            .map(|r| {
+                (
+                    r.idx(0).as_usize().unwrap_or(0) as u32,
+                    r.idx(1).as_usize().unwrap_or(0) as u32,
+                )
+            })
+            .collect();
+        let de_to_en = v
+            .get("de_to_en")
+            .as_arr()
+            .ok_or_else(|| Error::Tokenizer("missing de_to_en".into()))?
+            .iter()
+            .map(|x| x.as_usize().unwrap_or(0) as u32)
+            .collect();
+        let index = words
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), i as u32))
+            .collect();
+        Ok(Tokenizer {
+            words,
+            index,
+            topic_ranges,
+            function_range: range("function_range")?,
+            template_range: range("template_range")?,
+            de_range: range("de_range")?,
+            de_to_en,
+        })
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.words.len()
+    }
+
+    /// Encode whitespace-separated in-vocab words.
+    pub fn encode(&self, text: &str) -> Result<Vec<u32>> {
+        text.split_whitespace()
+            .map(|w| {
+                self.index
+                    .get(w)
+                    .copied()
+                    .ok_or_else(|| Error::Tokenizer(format!("out-of-vocab word '{w}'")))
+            })
+            .collect()
+    }
+
+    /// Decode ids to words; specials render as their `<...>` forms.
+    pub fn decode(&self, ids: &[u32]) -> String {
+        ids.iter()
+            .map(|&id| self.words.get(id as usize).map(|s| s.as_str()).unwrap_or("<unk>"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    pub fn word(&self, id: u32) -> &str {
+        self.words.get(id as usize).map(|s| s.as_str()).unwrap_or("<unk>")
+    }
+
+    /// Translate a German-block token to its English counterpart.
+    pub fn de_to_en_token(&self, de_id: u32) -> Option<u32> {
+        let (lo, hi) = self.de_range;
+        if de_id < lo || de_id >= hi {
+            return None;
+        }
+        self.de_to_en.get((de_id - lo) as usize).copied()
+    }
+
+    /// Wrap instruction tokens in the chat template:
+    /// `[BOS] <user> instr.. <asst>` (matches data.py sample_example).
+    pub fn chat_prompt(&self, instruction: &[u32]) -> Vec<u32> {
+        let mut out = Vec::with_capacity(instruction.len() + 3);
+        out.push(BOS);
+        out.push(USER);
+        out.extend_from_slice(instruction);
+        out.push(ASST);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn tiny_vocab_json() -> Value {
+        Value::parse(
+            r#"{
+            "words": ["<pad>", "<bos>", "<eos>", "<user>", "<asst>",
+                      "ba", "do", "ka", "xana", "xbebe"],
+            "topic_ranges": [[5, 7]],
+            "function_range": [7, 8],
+            "template_range": [7, 8],
+            "de_range": [8, 10],
+            "de_to_en": [5, 6],
+            "special": {"pad": 0, "bos": 1, "eos": 2, "user": 3, "asst": 4}
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let t = Tokenizer::from_json(&tiny_vocab_json()).unwrap();
+        let ids = t.encode("ba do ka").unwrap();
+        assert_eq!(ids, vec![5, 6, 7]);
+        assert_eq!(t.decode(&ids), "ba do ka");
+    }
+
+    #[test]
+    fn oov_rejected() {
+        let t = Tokenizer::from_json(&tiny_vocab_json()).unwrap();
+        assert!(t.encode("nonexistent").is_err());
+    }
+
+    #[test]
+    fn de_mapping() {
+        let t = Tokenizer::from_json(&tiny_vocab_json()).unwrap();
+        assert_eq!(t.de_to_en_token(8), Some(5));
+        assert_eq!(t.de_to_en_token(9), Some(6));
+        assert_eq!(t.de_to_en_token(5), None);
+    }
+
+    #[test]
+    fn chat_template_shape() {
+        let t = Tokenizer::from_json(&tiny_vocab_json()).unwrap();
+        assert_eq!(t.chat_prompt(&[5, 6]), vec![BOS, USER, 5, 6, ASST]);
+    }
+
+    #[test]
+    fn special_layout_enforced() {
+        let mut v = tiny_vocab_json();
+        if let Value::Obj(o) = &mut v {
+            o.insert(
+                "special".into(),
+                Value::parse(r#"{"pad": 1, "bos": 0, "eos": 2, "user": 3, "asst": 4}"#).unwrap(),
+            );
+        }
+        assert!(Tokenizer::from_json(&v).is_err());
+    }
+}

@@ -1,0 +1,225 @@
+//! Reader for the `SPCD1` named-tensor weight format written by
+//! `python/compile/aot.py::write_weights`.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic   6 bytes  "SPCD1\0"
+//! count   u32      number of tensors
+//! repeat count times:
+//!   name_len u16, name bytes (utf-8)
+//!   ndim     u8,  dims u32 * ndim
+//!   data     f32 * prod(dims)
+//! ```
+//! Tensors appear in sorted-name order — the same canonical order the AOT
+//! export flattens parameters with, so `tensors_in_order` can be handed
+//! straight to the runtime as executable arguments.
+
+use std::io::Read;
+
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 6] = b"SPCD1\x00";
+
+#[derive(Debug)]
+pub struct WeightsFile {
+    names: Vec<String>,
+    tensors: Vec<Tensor>,
+}
+
+impl WeightsFile {
+    pub fn load(path: &str) -> Result<WeightsFile> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| Error::Weights(format!("cannot read {path}: {e}")))?;
+        Self::parse(&bytes).map_err(|e| match e {
+            Error::Weights(m) => Error::Weights(format!("{path}: {m}")),
+            other => other,
+        })
+    }
+
+    pub fn parse(bytes: &[u8]) -> Result<WeightsFile> {
+        let mut r = Cursor { bytes, pos: 0 };
+        let magic = r.take(6)?;
+        if magic != MAGIC {
+            return Err(Error::Weights("bad magic (not an SPCD1 file)".into()));
+        }
+        let count = r.u32()? as usize;
+        let mut names = Vec::with_capacity(count);
+        let mut tensors = Vec::with_capacity(count);
+        for _ in 0..count {
+            let name_len = r.u16()? as usize;
+            let name = String::from_utf8(r.take(name_len)?.to_vec())
+                .map_err(|_| Error::Weights("non-utf8 tensor name".into()))?;
+            let ndim = r.u8()? as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(r.u32()? as usize);
+            }
+            let n: usize = dims.iter().product();
+            let raw = r.take(n * 4)?;
+            let mut data = vec![0f32; n];
+            for (i, chunk) in raw.chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+            }
+            names.push(name);
+            tensors.push(Tensor::new(dims, data)?);
+        }
+        if r.pos != bytes.len() {
+            return Err(Error::Weights(format!(
+                "{} trailing bytes after last tensor",
+                bytes.len() - r.pos
+            )));
+        }
+        // Canonical order check: names must be sorted (the AOT contract).
+        if !names.windows(2).all(|w| w[0] < w[1]) {
+            return Err(Error::Weights("tensor names not in sorted order".into()));
+        }
+        Ok(WeightsFile { names, tensors })
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.names.iter().position(|n| n == name).map(|i| &self.tensors[i])
+    }
+
+    /// Tensors in the canonical (sorted-name) order used as executable args.
+    pub fn tensors_in_order(&self) -> &[Tensor] {
+        &self.tensors
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Assert the file matches the manifest's `param_order`.
+    pub fn check_order(&self, expected: &[String]) -> Result<()> {
+        if self.names != expected {
+            return Err(Error::Weights(format!(
+                "parameter order mismatch: file has {:?}..., manifest expects {:?}...",
+                &self.names[..self.names.len().min(3)],
+                &expected[..expected.len().min(3)],
+            )));
+        }
+        Ok(())
+    }
+}
+
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.bytes.len() {
+            return Err(Error::Weights("unexpected end of file".into()));
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+}
+
+/// In-memory writer (tests + tooling parity with the python writer).
+pub fn write(tensors: &[(String, Tensor)]) -> Vec<u8> {
+    let mut sorted: Vec<&(String, Tensor)> = tensors.iter().collect();
+    sorted.sort_by(|a, b| a.0.cmp(&b.0));
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&(sorted.len() as u32).to_le_bytes());
+    for (name, t) in sorted {
+        out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        out.extend_from_slice(name.as_bytes());
+        out.push(t.shape().len() as u8);
+        for &d in t.shape() {
+            out.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        for &x in t.data() {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Read a whole file through any reader (used by tests with in-memory data).
+pub fn parse_reader<R: Read>(mut r: R) -> Result<WeightsFile> {
+    let mut bytes = Vec::new();
+    r.read_to_end(&mut bytes)?;
+    WeightsFile::parse(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<(String, Tensor)> {
+        vec![
+            ("b.w".to_string(), Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap()),
+            ("a.norm".to_string(), Tensor::new(vec![3], vec![0.5, -0.5, 7.0]).unwrap()),
+        ]
+    }
+
+    #[test]
+    fn roundtrip() {
+        let bytes = write(&sample());
+        let wf = WeightsFile::parse(&bytes).unwrap();
+        assert_eq!(wf.len(), 2);
+        assert_eq!(wf.names(), &["a.norm".to_string(), "b.w".to_string()]);
+        assert_eq!(wf.get("a.norm").unwrap().data(), &[0.5, -0.5, 7.0]);
+        assert_eq!(wf.get("b.w").unwrap().shape(), &[2, 2]);
+        assert_eq!(wf.param_count(), 7);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut bytes = write(&sample());
+        bytes[0] = b'X';
+        assert!(WeightsFile::parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let bytes = write(&sample());
+        assert!(WeightsFile::parse(&bytes[..bytes.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut bytes = write(&sample());
+        bytes.extend_from_slice(&[0, 1, 2]);
+        assert!(WeightsFile::parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn order_check() {
+        let bytes = write(&sample());
+        let wf = WeightsFile::parse(&bytes).unwrap();
+        assert!(wf.check_order(&["a.norm".into(), "b.w".into()]).is_ok());
+        assert!(wf.check_order(&["b.w".into(), "a.norm".into()]).is_err());
+    }
+}

@@ -1,0 +1,208 @@
+//! Workloads: the paper's evaluation task families + serving load shapes.
+//!
+//! Prompt sets are exported at build time (`artifacts/eval_prompts.json`)
+//! from the same SynthChat distributions the target was chat-tuned on —
+//! dolly (open-ended), xsum (extreme summarization), cnndm (news
+//! summarization) and the held-out wmt translation task that drives the
+//! paper's Figure 3 OOD result. For load testing, a Poisson arrival
+//! process and a prompt mixer are provided.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::json::Value;
+use crate::rng::Pcg64;
+
+/// Paper task names, in the order figures present them.
+pub const TASKS: [&str; 3] = ["dolly", "cnndm", "xsum"];
+/// The OOD task (Figure 3 / §A.5).
+pub const OOD_TASK: &str = "wmt";
+
+/// One evaluation example.
+#[derive(Debug, Clone)]
+pub struct EvalExample {
+    pub prompt: Vec<u32>,
+    /// Reference response from the task generator (quality checks only —
+    /// SD correctness never depends on it).
+    pub reference: Vec<u32>,
+    pub topic: usize,
+}
+
+/// All exported task prompt sets.
+#[derive(Debug)]
+pub struct EvalSuite {
+    tasks: BTreeMap<String, Vec<EvalExample>>,
+}
+
+impl EvalSuite {
+    pub fn load(path: &std::path::Path) -> Result<EvalSuite> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Manifest(format!("cannot read {}: {e}", path.display())))?;
+        Self::from_json(&Value::parse(&text)?)
+    }
+
+    pub fn from_json(v: &Value) -> Result<EvalSuite> {
+        let obj = v.as_obj().ok_or_else(|| Error::Manifest("eval_prompts: not an object".into()))?;
+        let mut tasks = BTreeMap::new();
+        for (task, arr) in obj {
+            let examples = arr
+                .as_arr()
+                .ok_or_else(|| Error::Manifest(format!("task {task}: not an array")))?
+                .iter()
+                .map(|e| {
+                    let toks = |key: &str| -> Vec<u32> {
+                        e.get(key)
+                            .as_arr()
+                            .map(|a| a.iter().map(|x| x.as_usize().unwrap_or(0) as u32).collect())
+                            .unwrap_or_default()
+                    };
+                    EvalExample {
+                        prompt: toks("prompt"),
+                        reference: toks("reference"),
+                        topic: e.get("topic").as_usize().unwrap_or(0),
+                    }
+                })
+                .collect();
+            tasks.insert(task.clone(), examples);
+        }
+        if tasks.is_empty() {
+            return Err(Error::Manifest("eval_prompts: no tasks".into()));
+        }
+        Ok(EvalSuite { tasks })
+    }
+
+    pub fn task(&self, name: &str) -> Result<&[EvalExample]> {
+        self.tasks
+            .get(name)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| Error::Manifest(format!("no eval prompts for task '{name}'")))
+    }
+
+    pub fn task_names(&self) -> Vec<&str> {
+        self.tasks.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// First `n` examples of a task (deterministic eval subsets).
+    pub fn take(&self, name: &str, n: usize) -> Result<Vec<EvalExample>> {
+        let all = self.task(name)?;
+        Ok(all.iter().take(n).cloned().collect())
+    }
+}
+
+/// A request in a serving trace.
+#[derive(Debug, Clone)]
+pub struct TraceRequest {
+    /// Offset from trace start.
+    pub arrival: std::time::Duration,
+    pub task: String,
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+}
+
+/// Poisson-arrival serving trace over a task mixture — the workload for
+/// `examples/serve_benchmark.rs`.
+pub struct TraceConfig {
+    /// Mean arrival rate, requests/second.
+    pub rate: f64,
+    pub n_requests: usize,
+    pub max_new: usize,
+    /// (task, weight) mixture.
+    pub mix: Vec<(String, f64)>,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            rate: 2.0,
+            n_requests: 32,
+            max_new: 32,
+            mix: vec![
+                ("dolly".to_string(), 0.5),
+                ("cnndm".to_string(), 0.25),
+                ("xsum".to_string(), 0.25),
+            ],
+            seed: 0,
+        }
+    }
+}
+
+pub fn build_trace(suite: &EvalSuite, cfg: &TraceConfig) -> Result<Vec<TraceRequest>> {
+    let mut rng = Pcg64::with_stream(cfg.seed, 0x7ace);
+    let weights: Vec<f32> = cfg.mix.iter().map(|(_, w)| *w as f32).collect();
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(cfg.n_requests);
+    let mut cursors: BTreeMap<&str, usize> = BTreeMap::new();
+    for _ in 0..cfg.n_requests {
+        // Exponential inter-arrival.
+        t += -(1.0 - rng.next_f64()).ln() / cfg.rate;
+        let ti = rng.categorical(&weights);
+        let task = cfg.mix[ti].0.as_str();
+        let examples = suite.task(task)?;
+        let cursor = cursors.entry(task).or_insert(0);
+        let ex = &examples[*cursor % examples.len()];
+        *cursor += 1;
+        out.push(TraceRequest {
+            arrival: std::time::Duration::from_secs_f64(t),
+            task: task.to_string(),
+            prompt: ex.prompt.clone(),
+            max_new: cfg.max_new,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn tiny_suite() -> EvalSuite {
+        EvalSuite::from_json(
+            &Value::parse(
+                r#"{
+                "dolly": [{"prompt": [1,3,9,4], "reference": [7,7], "topic": 0},
+                          {"prompt": [1,3,8,4], "reference": [6], "topic": 1}],
+                "xsum":  [{"prompt": [1,3,5,5,4], "reference": [9], "topic": 2}],
+                "cnndm": [{"prompt": [1,3,5,6,4], "reference": [9], "topic": 2}],
+                "wmt":   [{"prompt": [1,3,8,8,4], "reference": [5,5], "topic": 0}]
+            }"#,
+            )
+            .unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn loads_tasks() {
+        let s = tiny_suite();
+        assert_eq!(s.task("dolly").unwrap().len(), 2);
+        assert_eq!(s.task("dolly").unwrap()[0].prompt, vec![1, 3, 9, 4]);
+        assert!(s.task("nope").is_err());
+        assert_eq!(s.task_names(), vec!["cnndm", "dolly", "wmt", "xsum"]);
+    }
+
+    #[test]
+    fn trace_is_sorted_and_mixed() {
+        let s = tiny_suite();
+        let cfg = TraceConfig { n_requests: 50, ..Default::default() };
+        let trace = build_trace(&s, &cfg).unwrap();
+        assert_eq!(trace.len(), 50);
+        for w in trace.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival, "arrivals must be monotone");
+        }
+        let dolly = trace.iter().filter(|r| r.task == "dolly").count();
+        assert!(dolly > 10 && dolly < 40, "mixture off: {dolly}/50 dolly");
+    }
+
+    #[test]
+    fn trace_deterministic_per_seed() {
+        let s = tiny_suite();
+        let cfg = TraceConfig { n_requests: 10, ..Default::default() };
+        let a = build_trace(&s, &cfg).unwrap();
+        let b = build_trace(&s, &cfg).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.task, y.task);
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Artifact-bundle consistency: vocab round-trips, eval prompts are
+//! well-formed chat prompts, manifest cross-references hold. (Needs
+//! `make artifacts`; guarded otherwise.)
+
+mod common;
+
+use specd::tokenizer::{Tokenizer, ASST, BOS, USER};
+use specd::weights::WeightsFile;
+use specd::workload::{EvalSuite, OOD_TASK, TASKS};
+
+#[test]
+fn vocab_roundtrip_and_structure() {
+    require_artifacts!();
+    let manifest = specd::artifacts::Manifest::load(&common::artifacts_dir()).unwrap();
+    let tok = Tokenizer::load(&manifest.vocab_path()).unwrap();
+    assert!(tok.vocab_size() <= manifest.vocab_size);
+
+    // decode(encode(x)) == x over every non-special word.
+    for id in 5..tok.vocab_size() as u32 {
+        let w = tok.word(id).to_string();
+        let ids = tok.encode(&w).unwrap();
+        assert_eq!(ids, vec![id], "word '{w}'");
+    }
+    let sentence: Vec<u32> = (5..25).collect();
+    let text = tok.decode(&sentence);
+    assert_eq!(tok.encode(&text).unwrap(), sentence);
+
+    // German block maps into the vocabulary.
+    let (lo, hi) = tok.de_range;
+    assert!(hi > lo);
+    for de in lo..hi {
+        let en = tok.de_to_en_token(de).expect("mapped");
+        assert!((en as usize) < tok.vocab_size());
+        assert!(en >= 5, "de word must map to a content word");
+    }
+}
+
+#[test]
+fn eval_prompts_are_chat_formatted() {
+    require_artifacts!();
+    let manifest = specd::artifacts::Manifest::load(&common::artifacts_dir()).unwrap();
+    let suite = EvalSuite::load(&manifest.root.join("eval_prompts.json")).unwrap();
+    let mut names = suite.task_names();
+    names.sort_unstable();
+    for task in TASKS.iter().chain([&OOD_TASK]) {
+        assert!(names.contains(task), "missing task {task}");
+        let examples = suite.task(task).unwrap();
+        assert!(examples.len() >= 16, "{task}: too few prompts");
+        for ex in examples {
+            assert_eq!(ex.prompt[0], BOS);
+            assert_eq!(ex.prompt[1], USER);
+            assert_eq!(*ex.prompt.last().unwrap(), ASST);
+            assert!(ex.prompt.len() < manifest.arch("target").unwrap().max_seq / 2);
+            assert!(!ex.reference.is_empty());
+        }
+    }
+}
+
+#[test]
+fn weights_files_match_manifest() {
+    require_artifacts!();
+    let manifest = specd::artifacts::Manifest::load(&common::artifacts_dir()).unwrap();
+    for (name, info) in &manifest.models {
+        let wf = WeightsFile::load(manifest.weights_path(name).unwrap().to_str().unwrap())
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(wf.param_count(), info.params, "{name}: param count");
+        let arch = manifest.arch(&info.arch).unwrap();
+        wf.check_order(&arch.param_order).unwrap_or_else(|e| panic!("{name}: {e}"));
+    }
+    // c ratios: target exactly 1, drafts well under 10%.
+    assert!((manifest.model("target").unwrap().c_ratio - 1.0).abs() < 1e-9);
+    for d in manifest.draft_models() {
+        let c = manifest.model(&d).unwrap().c_ratio;
+        assert!(c > 0.0 && c < 0.1, "{d}: c={c}");
+    }
+}
+
+#[test]
+fn checkpoint_families_complete() {
+    require_artifacts!();
+    let manifest = specd::artifacts::Manifest::load(&common::artifacts_dir()).unwrap();
+    let drafts = manifest.draft_models();
+    assert!(drafts.contains(&"draft_base".to_string()));
+    for loss in ["kld", "tvd", "tvdpp"] {
+        let n = drafts.iter().filter(|d| d.contains(&format!("_{loss}_ckpt"))).count();
+        assert!(n >= 2, "loss {loss}: only {n} checkpoints exported");
+    }
+}

@@ -1,0 +1,68 @@
+//! Shared fixtures for the integration tests: artifact loading with a
+//! skip-if-absent guard (the tests need `make artifacts` to have run).
+#![allow(dead_code)] // each test binary uses a different fixture subset
+
+use std::sync::Arc;
+
+use specd::artifacts::Manifest;
+use specd::runtime::{CompiledArch, Model, Runtime};
+use specd::workload::EvalSuite;
+
+pub const ARTIFACTS: &str = env!("CARGO_MANIFEST_DIR");
+
+pub fn artifacts_dir() -> String {
+    format!("{}/artifacts", ARTIFACTS)
+}
+
+/// Whether the artifact bundle exists (tests no-op politely otherwise — the
+/// Makefile runs `make artifacts` before `cargo test`).
+pub fn have_artifacts() -> bool {
+    specd::artifacts::bundle_exists(&artifacts_dir())
+}
+
+pub struct Fixture {
+    pub rt: Arc<Runtime>,
+    pub manifest: Manifest,
+    pub draft_arch: Arc<CompiledArch>,
+    pub target_arch: Arc<CompiledArch>,
+    pub target: Model,
+    pub suite: EvalSuite,
+}
+
+impl Fixture {
+    pub fn load() -> Fixture {
+        let manifest = Manifest::load(&artifacts_dir()).expect("manifest");
+        let rt = Arc::new(Runtime::new().expect("pjrt client"));
+        let draft_arch = rt.load_arch(&manifest, "draft").expect("compile draft");
+        let target_arch = rt.load_arch(&manifest, "target").expect("compile target");
+        let target = rt.load_model(&manifest, &target_arch, "target").expect("target weights");
+        let suite = EvalSuite::load(&manifest.root.join("eval_prompts.json")).expect("prompts");
+        Fixture { rt, manifest, draft_arch, target_arch, target, suite }
+    }
+
+    pub fn draft(&self, name: &str) -> Model {
+        self.rt.load_model(&self.manifest, &self.draft_arch, name).expect("draft weights")
+    }
+
+    /// Any available draft model, preferring the final TVD++ checkpoint.
+    pub fn default_draft(&self) -> Model {
+        let names = self.manifest.draft_models();
+        let pick = names
+            .iter()
+            .filter(|n| n.contains("tvdpp")).max()
+            .or_else(|| names.first())
+            .expect("at least one draft model");
+        self.draft(pick)
+    }
+}
+
+/// Macro: skip the test (with a note) when artifacts are missing.
+#[macro_export]
+macro_rules! require_artifacts {
+    () => {
+        if !common::have_artifacts() {
+            eprintln!("skipping: no artifact bundle (run `make artifacts`)");
+            return;
+        }
+    };
+}

@@ -1,0 +1,141 @@
+//! Coordinator end-to-end: all admitted requests terminate, batching bounds
+//! hold, results match direct engine output, backpressure doesn't deadlock.
+
+mod common;
+
+use std::collections::BTreeMap;
+
+use specd::config::{RunConfig, SamplingConfig};
+use specd::coordinator::{Coordinator, Request, Response};
+use specd::exec;
+use specd::rng::Pcg64;
+use specd::spec::SpecDecoder;
+
+fn run_requests(
+    f: &common::Fixture,
+    draft: &specd::runtime::Model,
+    reqs: Vec<Request>,
+    max_batch: usize,
+) -> (Vec<Response>, specd::metrics::ServeMetrics) {
+    let decoder = SpecDecoder::new(draft, &f.target, 3).unwrap();
+    let cfg = RunConfig { max_batch, ..RunConfig::default() };
+    let coord = Coordinator::new(decoder, cfg).unwrap();
+    let n = reqs.len();
+    let (req_tx, req_rx) = exec::bounded::<Request>(4); // small: exercises backpressure
+    let (resp_tx, resp_rx) = exec::bounded::<Response>(64);
+    let feeder = std::thread::spawn(move || {
+        for r in reqs {
+            req_tx.send(r).unwrap();
+        }
+    });
+    let metrics = coord.serve(req_rx, resp_tx).unwrap();
+    feeder.join().unwrap();
+    let mut out = Vec::new();
+    while let Some(r) = resp_rx.try_recv() {
+        out.push(r);
+    }
+    assert_eq!(out.len(), n, "every admitted request must get a response");
+    (out, metrics)
+}
+
+#[test]
+fn all_requests_complete_and_match_direct_engine() {
+    require_artifacts!();
+    let f = common::Fixture::load();
+    let draft = f.default_draft();
+    let cfg = SamplingConfig::greedy();
+    let examples = f.suite.take("xsum", 6).unwrap();
+    let reqs: Vec<Request> = examples
+        .iter()
+        .enumerate()
+        .map(|(i, ex)| Request {
+            id: i as u64,
+            prompt: ex.prompt.clone(),
+            max_new: 16,
+            sampling: cfg,
+        })
+        .collect();
+    let (responses, metrics) = run_requests(&f, &draft, reqs, 3);
+
+    // Greedy coordinator output == greedy direct-engine output per prompt
+    // (interleaving must not change any sequence's tokens).
+    let spec = SpecDecoder::new(&draft, &f.target, 3).unwrap();
+    let by_id: BTreeMap<u64, &Response> = responses.iter().map(|r| (r.id, r)).collect();
+    for (i, ex) in examples.iter().enumerate() {
+        let mut rng = Pcg64::new(0);
+        let (want, _) = spec.generate(&ex.prompt, 16, &cfg, &mut rng).unwrap();
+        let got = &by_id[&(i as u64)];
+        assert!(got.error.is_none(), "request {i} failed: {:?}", got.error);
+        assert_eq!(got.tokens, want, "request {i} diverged under batching");
+    }
+    assert_eq!(metrics.total_requests, 6);
+    assert!(metrics.spec.blocks > 0);
+    assert!(metrics.throughput_tok_s() > 0.0);
+}
+
+#[test]
+fn respects_max_new_tokens() {
+    require_artifacts!();
+    let f = common::Fixture::load();
+    let draft = f.default_draft();
+    let ex = &f.suite.take("dolly", 1).unwrap()[0];
+    let reqs = vec![Request {
+        id: 0,
+        prompt: ex.prompt.clone(),
+        max_new: 5,
+        sampling: SamplingConfig::for_task("dolly", 0),
+    }];
+    let (responses, _) = run_requests(&f, &draft, reqs, 1);
+    assert!(responses[0].tokens.len() <= 5);
+    assert!(responses[0].ttft <= responses[0].latency);
+}
+
+#[test]
+fn bad_request_reports_error_without_stalling_others() {
+    require_artifacts!();
+    let f = common::Fixture::load();
+    let draft = f.default_draft();
+    let good = &f.suite.take("cnndm", 1).unwrap()[0];
+    let reqs = vec![
+        Request { id: 0, prompt: Vec::new(), max_new: 8, sampling: SamplingConfig::greedy() },
+        Request {
+            id: 1,
+            prompt: good.prompt.clone(),
+            max_new: 8,
+            sampling: SamplingConfig::greedy(),
+        },
+    ];
+    let (responses, metrics) = run_requests(&f, &draft, reqs, 2);
+    let by_id: BTreeMap<u64, &Response> = responses.iter().map(|r| (r.id, r)).collect();
+    assert!(by_id[&0].error.is_some(), "empty prompt must fail");
+    assert!(by_id[&1].error.is_none(), "good request must succeed");
+    assert_eq!(metrics.total_requests, 1, "failed admissions don't count");
+}
+
+#[test]
+fn many_requests_through_small_batch_terminate() {
+    require_artifacts!();
+    // 12 requests through max_batch=2 with a queue of 4: exercises
+    // admission backpressure + slot turnover; must fully drain.
+    let f = common::Fixture::load();
+    let draft = f.default_draft();
+    let examples = f.suite.take("dolly", 12).unwrap();
+    let reqs: Vec<Request> = examples
+        .iter()
+        .enumerate()
+        .map(|(i, ex)| Request {
+            id: i as u64,
+            prompt: ex.prompt.clone(),
+            max_new: 8,
+            sampling: SamplingConfig::for_task("dolly", i as u64),
+        })
+        .collect();
+    let (responses, metrics) = run_requests(&f, &draft, reqs, 2);
+    assert_eq!(responses.len(), 12);
+    assert!(responses.iter().all(|r| r.error.is_none()));
+    assert_eq!(metrics.total_requests, 12);
+    // Latency ordering sanity: every request has ttft <= latency.
+    for r in &responses {
+        assert!(r.ttft <= r.latency + 1e-9);
+    }
+}

@@ -1,0 +1,140 @@
+//! Runtime integration: HLO load + compile + execute against the golden
+//! probes exported by python (end-to-end numerics of the AOT bridge).
+
+mod common;
+
+use specd::json::Value;
+use specd::runtime::Entry;
+use specd::tensor::argmax;
+
+#[test]
+fn golden_probes_match_python() {
+    require_artifacts!();
+    let f = common::Fixture::load();
+    let golden_text =
+        std::fs::read_to_string(f.manifest.root.join("golden.json")).expect("golden.json");
+    let golden = Value::parse(&golden_text).expect("golden parse");
+    let verify_block = f.manifest.entry_blocks["verify"];
+
+    let mut checked = 0;
+    for (model_name, probe) in golden.as_obj().expect("golden object") {
+        let info = f.manifest.model(model_name).expect("model in manifest");
+        let model = if info.arch == "target" {
+            f.rt.load_model(&f.manifest, &f.target_arch, model_name).unwrap()
+        } else {
+            f.rt.load_model(&f.manifest, &f.draft_arch, model_name).unwrap()
+        };
+        let v = model.vocab_size();
+        let toks = |key: &str| -> Vec<u32> {
+            probe.get(key).as_arr().unwrap().iter().map(|x| x.as_usize().unwrap() as u32).collect()
+        };
+        let tokens = toks("tokens");
+        let tokens2 = toks("tokens2");
+        assert_eq!(tokens.len(), verify_block);
+
+        // Call 1 at pos 0, call 2 continuing at pos = block (cache reuse).
+        let state = model.new_state().unwrap();
+        let (state, logits1) = model.run(Entry::Verify, state, &tokens, 0).unwrap();
+        let (_state, logits2) =
+            model.run(Entry::Verify, state, &tokens2, tokens.len()).unwrap();
+
+        for (key, logits) in [("logits_head", &logits1), ("logits2_head", &logits2)] {
+            let rows = probe.get(key).as_arr().unwrap();
+            for (r, row) in rows.iter().enumerate() {
+                for (c, want) in row.as_arr().unwrap().iter().enumerate() {
+                    let got = logits[r * v + c] as f64;
+                    let want = want.as_f64().unwrap();
+                    assert!(
+                        (got - want).abs() < 2e-3 + 1e-3 * want.abs(),
+                        "{model_name} {key}[{r}][{c}]: rust {got} vs python {want}"
+                    );
+                }
+            }
+        }
+        let am1 = argmax(&logits1[(tokens.len() - 1) * v..tokens.len() * v]);
+        let am2 = argmax(&logits2[(tokens2.len() - 1) * v..tokens2.len() * v]);
+        assert_eq!(am1, probe.get("logits_last_argmax").as_usize().unwrap(), "{model_name}");
+        assert_eq!(am2, probe.get("logits2_last_argmax").as_usize().unwrap(), "{model_name}");
+        checked += 1;
+    }
+    assert!(checked >= 2, "golden file should cover target + drafts");
+}
+
+#[test]
+fn prefill_chunking_matches_single_shot() {
+    require_artifacts!();
+    let f = common::Fixture::load();
+    let model = &f.target;
+    let v = model.vocab_size();
+    // 40 tokens forces two prefill chunks (block 32).
+    let prompt: Vec<u32> = (0..40).map(|i| 5 + (i * 7) % 300).collect();
+    let (_s1, last1) = model.prefill_prompt(&prompt).unwrap();
+
+    // Same prompt via verify-block-sized increments.
+    let vb = f.manifest.entry_blocks["verify"];
+    let mut state = model.new_state().unwrap();
+    let mut pos = 0usize;
+    let mut last2 = vec![0f32; v];
+    for chunk in prompt.chunks(vb) {
+        let (s2, logits) = model.run(Entry::Verify, state, chunk, pos).unwrap();
+        state = s2;
+        pos += chunk.len();
+        last2.copy_from_slice(&logits[(chunk.len() - 1) * v..chunk.len() * v]);
+    }
+    for i in 0..v {
+        assert!(
+            (last1[i] - last2[i]).abs() < 1e-3,
+            "logit {i}: prefill {} vs chunked {}",
+            last1[i],
+            last2[i]
+        );
+    }
+}
+
+#[test]
+fn decode_after_prefill_continues_sequence() {
+    require_artifacts!();
+    let f = common::Fixture::load();
+    let model = &f.target;
+    let v = model.vocab_size();
+    let prompt: Vec<u32> = vec![1, 3, 20, 21, 22, 4];
+    let (state, last) = model.prefill_prompt(&prompt).unwrap();
+    let next = argmax(&last) as u32;
+    let (_state, logits) = model.run(Entry::Decode, state, &[next], prompt.len()).unwrap();
+    assert_eq!(logits.len(), v);
+    assert!(logits.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn run_rejects_overflow_and_bad_block() {
+    require_artifacts!();
+    let f = common::Fixture::load();
+    let model = &f.target;
+    let state = model.new_state().unwrap();
+    // Too many tokens for the decode entry (block 1).
+    let err = model.run(Entry::Decode, state, &[1, 2], 0);
+    assert!(err.is_err());
+    let state = model.new_state().unwrap();
+    // Position overflow beyond max_seq.
+    let err = model.run(Entry::Decode, state, &[1], model.max_seq());
+    assert!(err.is_err());
+}
+
+#[test]
+fn weight_swap_changes_logits_but_not_arch() {
+    require_artifacts!();
+    let f = common::Fixture::load();
+    let drafts = f.manifest.draft_models();
+    if drafts.len() < 2 {
+        eprintln!("skipping: need >= 2 draft variants");
+        return;
+    }
+    let a = f.draft(&drafts[0]);
+    let b = f.draft(&drafts[drafts.len() - 1]);
+    let prompt = vec![1u32, 3, 30, 4];
+    let (_sa, la) = a.prefill_prompt(&prompt).unwrap();
+    let (_sb, lb) = b.prefill_prompt(&prompt).unwrap();
+    // Same executable, different weights => different outputs.
+    let diff: f32 = la.iter().zip(&lb).map(|(x, y)| (x - y).abs()).sum();
+    assert!(diff > 1e-3, "weight variants produced identical logits");
+}

@@ -1,0 +1,154 @@
+//! Property tests of the rejection-sampling core over randomized
+//! distributions (no artifacts needed): the SD correctness theorem and its
+//! corollaries from Leviathan et al., which the paper's TVD/TVD++ analysis
+//! builds on.
+
+use specd::prop::{self, distribution, Check};
+use specd::rng::Pcg64;
+use specd::sampling::{acceptance_probability, residual_distribution, verify_block};
+
+const V: usize = 24;
+
+/// Corollary 3.6 territory: E[accept] == 1 - TVD(p, q), for random p, q.
+#[test]
+fn prop_acceptance_rate_equals_one_minus_tvd() {
+    let gen = distribution(V);
+    prop::check("accept==1-TVD", &gen, 12, 11, |p| {
+        let mut rng = Pcg64::new(99);
+        let q = gen.sample(&mut rng);
+        let expected = acceptance_probability(p, &q);
+        let n = 30_000;
+        let mut acc = 0usize;
+        let mut sampler = Pcg64::new(7);
+        for _ in 0..n {
+            let tok = sampler.categorical(p) as u32;
+            let out = verify_block(
+                &[p.clone()],
+                &[q.clone(), q.clone()],
+                &[tok],
+                &mut sampler,
+            );
+            acc += (out.accepted == 1) as usize;
+        }
+        let emp = acc as f64 / n as f64;
+        Check::that(
+            (emp - expected).abs() < 0.015,
+            format!("empirical {emp:.4} vs 1-TVD {expected:.4}"),
+        )
+    });
+}
+
+/// The lossless-ness theorem: emitted-token marginal == q for random p, q.
+#[test]
+fn prop_output_marginal_is_target() {
+    let gen = distribution(V);
+    prop::check("output~q", &gen, 8, 13, |p| {
+        let mut rng = Pcg64::new(5);
+        let q = gen.sample(&mut rng);
+        let n = 40_000;
+        let mut counts = vec![0usize; V];
+        let mut sampler = Pcg64::new(3);
+        for _ in 0..n {
+            let tok = sampler.categorical(p) as u32;
+            let out = verify_block(
+                &[p.clone()],
+                &[q.clone(), q.clone()],
+                &[tok],
+                &mut sampler,
+            );
+            let emitted = if out.accepted == 1 { tok } else { out.next_token };
+            counts[emitted as usize] += 1;
+        }
+        // L1 distance between empirical marginal and q.
+        let l1: f64 = counts
+            .iter()
+            .zip(&q)
+            .map(|(&c, &qi)| (c as f64 / n as f64 - qi as f64).abs())
+            .sum();
+        Check::that(l1 < 0.05, format!("L1(empirical, q) = {l1:.4}"))
+    });
+}
+
+/// Residual distributions are valid distributions for arbitrary p, q.
+#[test]
+fn prop_residual_validity() {
+    let gen = distribution(V);
+    prop::check("residual-valid", &gen, 300, 17, |p| {
+        let mut rng = Pcg64::new(23);
+        let q = gen.sample(&mut rng);
+        let r = residual_distribution(p, &q);
+        let sum: f32 = r.iter().sum();
+        if (sum - 1.0).abs() > 1e-4 {
+            return Check::Fail(format!("residual sums to {sum}"));
+        }
+        if r.iter().any(|&x| x < 0.0) {
+            return Check::Fail("negative residual mass".into());
+        }
+        // Residual must be zero wherever p >= q (given positive part exists).
+        let pos_mass: f32 = q.iter().zip(p).map(|(&qi, &pi)| (qi - pi).max(0.0)).sum();
+        if pos_mass > 1e-6 {
+            for i in 0..V {
+                if p[i] >= q[i] && r[i] > 1e-6 {
+                    return Check::Fail(format!("mass {} at non-positive coord {i}", r[i]));
+                }
+            }
+        }
+        Check::Pass
+    });
+}
+
+/// Multi-position blocks: accepted counts respect prefix semantics — the
+/// positions before the first rejection are exactly the accepted ones.
+#[test]
+fn prop_block_prefix_semantics() {
+    let gen = distribution(V);
+    prop::check("block-prefix", &gen, 100, 29, |p0| {
+        let mut rng = Pcg64::new(31);
+        let gamma = 4;
+        let ps: Vec<Vec<f32>> = (0..gamma).map(|i| if i == 0 { p0.clone() } else { gen.sample(&mut rng) }).collect();
+        let qs: Vec<Vec<f32>> = (0..=gamma).map(|_| gen.sample(&mut rng)).collect();
+        let toks: Vec<u32> = ps.iter().map(|p| rng.categorical(p) as u32).collect();
+        let out = verify_block(&ps, &qs, &toks, &mut rng);
+        if out.accepted > gamma {
+            return Check::Fail(format!("accepted {} > gamma {gamma}", out.accepted));
+        }
+        if out.all_accepted != (out.accepted == gamma) {
+            return Check::Fail("all_accepted flag inconsistent".into());
+        }
+        if (out.next_token as usize) >= V {
+            return Check::Fail("next_token out of vocab".into());
+        }
+        // If q_j == p_j for all j the whole block must be accepted.
+        let out2 = verify_block(&ps, &[ps.clone(), vec![ps[0].clone()]].concat(), &toks, &mut rng);
+        if !out2.all_accepted {
+            return Check::Fail("p==q block not fully accepted".into());
+        }
+        Check::Pass
+    });
+}
+
+/// Greedy one-hots: acceptance is exactly argmax agreement; deterministic.
+#[test]
+fn prop_greedy_onehot_agreement() {
+    let idx_gen = prop::usize_in(0, V - 1);
+    prop::check("greedy-agreement", &idx_gen, 200, 37, |&i| {
+        let mut rng = Pcg64::new(41);
+        let j = rng.gen_range(0, V);
+        let onehot = |k: usize| {
+            let mut v = vec![0.0f32; V];
+            v[k] = 1.0;
+            v
+        };
+        let p = onehot(i);
+        let q = onehot(j);
+        let out = verify_block(&[p], &[q.clone(), q], &[i as u32], &mut rng);
+        let want_accept = i == j;
+        if (out.accepted == 1) != want_accept {
+            return Check::Fail(format!("i={i} j={j}: accepted={}", out.accepted));
+        }
+        if !want_accept && out.next_token != j as u32 {
+            return Check::Fail(format!("correction {} != target argmax {j}", out.next_token));
+        }
+        Check::Pass
+    });
+}

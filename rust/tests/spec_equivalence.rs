@@ -1,0 +1,129 @@
+//! Speculative decoding correctness: the SD engine must be *lossless* —
+//! greedy SD output identical to greedy autoregressive target output, and
+//! bookkeeping invariants (block efficiency bounds, call counts) must hold.
+
+mod common;
+
+use specd::baseline::ArDecoder;
+use specd::config::SamplingConfig;
+use specd::rng::Pcg64;
+use specd::spec::SpecDecoder;
+
+#[test]
+fn greedy_sd_equals_greedy_ar_exactly() {
+    require_artifacts!();
+    let f = common::Fixture::load();
+    let draft = f.default_draft();
+    let cfg = SamplingConfig::greedy();
+
+    for task in ["xsum", "cnndm", "dolly"] {
+        let examples = f.suite.take(task, 4).unwrap();
+        for gamma in [3usize, 5] {
+            let spec = SpecDecoder::new(&draft, &f.target, gamma).unwrap();
+            let ar = ArDecoder::new(&f.target);
+            for ex in &examples {
+                let mut rng1 = Pcg64::new(0);
+                let mut rng2 = Pcg64::new(0);
+                let (sd_out, stats) = spec.generate(&ex.prompt, 24, &cfg, &mut rng1).unwrap();
+                let (ar_out, _, _) = ar.generate(&ex.prompt, 24, &cfg, &mut rng2).unwrap();
+                assert_eq!(
+                    sd_out, ar_out,
+                    "greedy SD diverged from AR on {task} gamma={gamma} \
+                     (prompt {:?}..., stats {stats:?})",
+                    &ex.prompt[..ex.prompt.len().min(6)]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn block_efficiency_within_bounds() {
+    require_artifacts!();
+    let f = common::Fixture::load();
+    let draft = f.default_draft();
+    for gamma in [1usize, 3, 5] {
+        let spec = SpecDecoder::new(&draft, &f.target, gamma).unwrap();
+        let ex = &f.suite.take("dolly", 1).unwrap()[0];
+        let cfg = SamplingConfig::for_task("dolly", 0);
+        let mut rng = Pcg64::new(1);
+        let (_out, stats) = spec.generate(&ex.prompt, 24, &cfg, &mut rng).unwrap();
+        let tau = stats.block_efficiency();
+        assert!(
+            tau >= 1.0 - 1e-9 && tau <= (gamma + 1) as f64 + 1e-9,
+            "tau {tau} outside [1, gamma+1] for gamma {gamma}"
+        );
+        assert!(stats.accepted <= stats.drafted);
+        assert_eq!(stats.drafted, stats.blocks * gamma);
+    }
+}
+
+#[test]
+fn draft_call_count_matches_cost_model() {
+    require_artifacts!();
+    // The paper's MBSU assumes c*gamma draft cost per block: the engine
+    // must make exactly gamma draft calls per block after prefill.
+    let f = common::Fixture::load();
+    let draft = f.default_draft();
+    let gamma = 3usize;
+    let spec = SpecDecoder::new(&draft, &f.target, gamma).unwrap();
+    let ex = &f.suite.take("xsum", 1).unwrap()[0];
+    let cfg = SamplingConfig::greedy();
+    let mut rng = Pcg64::new(2);
+    let (_out, stats) = spec.generate(&ex.prompt, 24, &cfg, &mut rng).unwrap();
+    let prefill_block = f.manifest.entry_blocks["prefill"];
+    let prefill_calls = ex.prompt.len().div_ceil(prefill_block);
+    // gamma calls per block, except the first block after prefill which
+    // reuses the prefill logits row and saves its sync call.
+    assert_eq!(
+        stats.draft_calls,
+        prefill_calls + stats.blocks * gamma - 1,
+        "draft calls per block != gamma (stats {stats:?})"
+    );
+    assert_eq!(stats.target_calls, prefill_calls + stats.blocks);
+}
+
+#[test]
+fn sampled_sd_output_is_plausible_target_text() {
+    require_artifacts!();
+    // With temperature sampling SD is stochastic-equal to the target, not
+    // token-equal to an AR run; sanity: tokens in-vocab, finite stats,
+    // non-trivial acceptance on in-distribution tasks.
+    let f = common::Fixture::load();
+    let draft = f.default_draft();
+    let spec = SpecDecoder::new(&draft, &f.target, 3).unwrap();
+    let cfg = SamplingConfig::for_task("dolly", 7);
+    let mut rng = Pcg64::new(7);
+    let examples = f.suite.take("dolly", 6).unwrap();
+    let mut total_acc = 0.0;
+    for ex in &examples {
+        let (out, stats) = spec.generate(&ex.prompt, 24, &cfg, &mut rng).unwrap();
+        assert!(!out.is_empty());
+        assert!(out.iter().all(|&t| (t as usize) < f.target.vocab_size()));
+        total_acc += stats.acceptance_rate();
+    }
+    let mean_acc = total_acc / examples.len() as f64;
+    assert!(
+        mean_acc > 0.15,
+        "acceptance {mean_acc:.3} suspiciously low for a trained draft"
+    );
+}
+
+#[test]
+fn sessions_are_reusable_across_prompts() {
+    require_artifacts!();
+    // Running many prompts through one decoder must not leak state between
+    // sessions (fresh SeqState per start()).
+    let f = common::Fixture::load();
+    let draft = f.default_draft();
+    let spec = SpecDecoder::new(&draft, &f.target, 3).unwrap();
+    let cfg = SamplingConfig::greedy();
+    let ex = &f.suite.take("cnndm", 1).unwrap()[0];
+    let mut rng = Pcg64::new(3);
+    let (a, _) = spec.generate(&ex.prompt, 16, &cfg, &mut rng).unwrap();
+    // Interleave a different prompt, then repeat the first.
+    let other = &f.suite.take("dolly", 1).unwrap()[0];
+    let (_b, _) = spec.generate(&other.prompt, 16, &cfg, &mut rng).unwrap();
+    let (c, _) = spec.generate(&ex.prompt, 16, &cfg, &mut rng).unwrap();
+    assert_eq!(a, c, "same greedy prompt must reproduce identical output");
+}
