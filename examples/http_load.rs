@@ -1,0 +1,205 @@
+//! Poisson-arrival HTTP load generator for the `specd serve` subsystem.
+//!
+//! Fires open-loop Poisson arrivals (like the trace replay in
+//! `serve_benchmark`, but over real TCP against a running server) from a
+//! pool of client threads, then reports status counts, latency/TTFT
+//! percentiles and token throughput.
+//!
+//! ```sh
+//! # terminal 1
+//! cargo run --release -- serve --addr 127.0.0.1:8080 --max-batch 4
+//! # terminal 2
+//! cargo run --release --example http_load -- \
+//!     --addr 127.0.0.1:8080 --requests 64 --rate 4.0 --stream
+//! ```
+//!
+//! The numbers from this binary are recorded in EXPERIMENTS.md.
+
+use std::io::{BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use specd::benchkit::Stats;
+use specd::cli::Args;
+use specd::http;
+use specd::json::{ObjWriter, Value};
+use specd::rng::Pcg64;
+
+#[derive(Debug)]
+struct Outcome {
+    code: u16,
+    /// Client-observed end-to-end latency, seconds.
+    latency: f64,
+    /// Client-observed time to first streamed chunk (stream mode only).
+    ttft: Option<f64>,
+    tokens: usize,
+}
+
+fn main() -> specd::Result<()> {
+    let args = Args::new("http_load", "Poisson HTTP load generator for specd serve")
+        .opt("addr", "127.0.0.1:8080", "server address")
+        .opt("requests", "64", "total requests")
+        .opt("rate", "4.0", "Poisson arrival rate, req/s")
+        .opt("clients", "16", "client threads")
+        .opt("max-new", "32", "max new tokens per request")
+        .opt("tokens", "1,3,5,6,7,4", "prompt token ids (comma-separated)")
+        .opt("prompt", "", "prompt text (overrides --tokens; server-side encode)")
+        .opt("task", "dolly", "sampling regime task name")
+        .opt("timeout-ms", "0", "per-request deadline sent to the server (0 = none)")
+        .opt("seed", "0", "arrival-schedule seed")
+        .flag("stream", "use ?stream=1 chunked streaming")
+        .parse()?;
+
+    let addr = args.str("addr").to_string();
+    let n = args.usize("requests")?;
+    let rate = args.f64("rate")?;
+    let stream = args.flag("stream");
+    let max_new = args.usize("max-new")?;
+
+    // Request body (shared by every request; seed varies server-side by id).
+    let mut body = ObjWriter::new()
+        .num("max_new", max_new as f64)
+        .str("task", args.str("task"));
+    if !args.str("prompt").is_empty() {
+        body = body.str("prompt", args.str("prompt"));
+    } else {
+        let toks: Vec<u32> = args
+            .list("tokens")
+            .iter()
+            .map(|t| t.parse::<u32>().map_err(|_| specd::Error::Cli(format!("bad token '{t}'"))))
+            .collect::<specd::Result<_>>()?;
+        body = body.u32_arr("tokens", &toks);
+    }
+    if let Some(d) = args.ms_opt("timeout-ms")? {
+        body = body.num("timeout_ms", d.as_millis() as f64);
+    }
+    let body = Arc::new(body.finish());
+
+    // Poisson schedule: exponential inter-arrival offsets from t0.
+    let mut rng = Pcg64::with_stream(args.u64("seed")?, 0x10ad);
+    let mut t = 0.0f64;
+    let schedule: Arc<Vec<Duration>> = Arc::new(
+        (0..n)
+            .map(|_| {
+                t += -(1.0 - rng.next_f64()).ln() / rate;
+                Duration::from_secs_f64(t)
+            })
+            .collect(),
+    );
+
+    println!(
+        "firing {n} requests at {rate:.1} req/s over {:?} ({} clients, stream={stream})",
+        schedule.last().copied().unwrap_or_default(),
+        args.usize("clients")?
+    );
+
+    let cursor = Arc::new(AtomicUsize::new(0));
+    let outcomes: Arc<Mutex<Vec<Outcome>>> = Arc::new(Mutex::new(Vec::with_capacity(n)));
+    let t0 = Instant::now();
+    let mut workers = Vec::new();
+    for _ in 0..args.usize("clients")?.max(1) {
+        let (addr, body, schedule, cursor, outcomes) =
+            (addr.clone(), body.clone(), schedule.clone(), cursor.clone(), outcomes.clone());
+        workers.push(std::thread::spawn(move || loop {
+            let i = cursor.fetch_add(1, Ordering::SeqCst);
+            if i >= schedule.len() {
+                break;
+            }
+            if let Some(wait) = schedule[i].checked_sub(t0.elapsed()) {
+                std::thread::sleep(wait);
+            }
+            let out = fire(&addr, &body, stream).unwrap_or(Outcome {
+                code: 0,
+                latency: 0.0,
+                ttft: None,
+                tokens: 0,
+            });
+            outcomes.lock().unwrap().push(out);
+        }));
+    }
+    for w in workers {
+        let _ = w.join();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    // ---- report -----------------------------------------------------------
+    let outcomes = outcomes.lock().unwrap();
+    let mut by_code: std::collections::BTreeMap<u16, usize> = Default::default();
+    for o in outcomes.iter() {
+        *by_code.entry(o.code).or_default() += 1;
+    }
+    let codes: Vec<String> = by_code.iter().map(|(c, k)| format!("{c}:{k}")).collect();
+    let ok: Vec<&Outcome> = outcomes.iter().filter(|o| o.code == 200).collect();
+    let total_tokens: usize = ok.iter().map(|o| o.tokens).sum();
+    println!("status: [{}]  wall={wall:.2}s", codes.join(" "));
+    println!(
+        "throughput: {:.1} tok/s, {:.2} ok-req/s",
+        total_tokens as f64 / wall,
+        ok.len() as f64 / wall
+    );
+    if !ok.is_empty() {
+        let lat = Stats::from(ok.iter().map(|o| o.latency).collect());
+        println!(
+            "latency: p50={:.0}ms p90={:.0}ms p99={:.0}ms max={:.0}ms",
+            lat.p50 * 1e3,
+            lat.p90 * 1e3,
+            lat.p99 * 1e3,
+            lat.max * 1e3
+        );
+        let ttfts: Vec<f64> = ok.iter().filter_map(|o| o.ttft).collect();
+        if !ttfts.is_empty() {
+            let tt = Stats::from(ttfts);
+            println!("ttft (streamed): p50={:.0}ms p90={:.0}ms", tt.p50 * 1e3, tt.p90 * 1e3);
+        }
+    }
+    Ok(())
+}
+
+/// One request on a fresh connection; returns None on transport failure.
+fn fire(addr: &str, body: &str, stream: bool) -> Option<Outcome> {
+    let start = Instant::now();
+    let mut conn = TcpStream::connect(addr).ok()?;
+    conn.set_nodelay(true).ok();
+    conn.set_read_timeout(Some(Duration::from_secs(300))).ok();
+    let target = if stream { "/v1/generate?stream=1" } else { "/v1/generate" };
+    write!(
+        conn,
+        "POST {target} HTTP/1.1\r\nhost: {addr}\r\ncontent-type: application/json\r\n\
+         content-length: {}\r\nconnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .ok()?;
+    conn.flush().ok()?;
+
+    let mut rd = BufReader::new(conn);
+    let head = http::read_response_head(&mut rd).ok()?;
+    if head.chunked() {
+        // Streamed: count tokens per event, timestamp the first chunk.
+        let mut ttft = None;
+        let mut tokens = 0usize;
+        let mut chunks = http::ChunkedReader::new(&mut rd);
+        while let Ok(Some(chunk)) = chunks.next_chunk() {
+            ttft.get_or_insert_with(|| start.elapsed().as_secs_f64());
+            let text = String::from_utf8_lossy(&chunk);
+            for event in text.split("\n\n").filter(|e| !e.is_empty()) {
+                let Some(payload) = event.strip_prefix("data: ") else { continue };
+                if let Ok(v) = Value::parse(payload.trim()) {
+                    if v.get("done").as_bool() != Some(true) {
+                        tokens += v.get("tokens").as_arr().map(|a| a.len()).unwrap_or(0);
+                    }
+                }
+            }
+        }
+        Some(Outcome { code: head.code, latency: start.elapsed().as_secs_f64(), ttft, tokens })
+    } else {
+        let mut head = head;
+        http::read_body(&mut rd, &mut head).ok()?;
+        let tokens = Value::parse(&head.body_str())
+            .ok()
+            .and_then(|v| v.get("tokens").as_arr().map(|a| a.len()))
+            .unwrap_or(0);
+        Some(Outcome { code: head.code, latency: start.elapsed().as_secs_f64(), ttft: None, tokens })
+    }
+}

@@ -117,12 +117,12 @@ fn replay(coord: &Coordinator, trace: &[TraceRequest]) -> specd::Result<ServeMet
             if let Some(wait) = r.arrival.checked_sub(t0.elapsed()) {
                 std::thread::sleep(wait);
             }
-            let _ = req_tx.send(Request {
-                id: i as u64,
-                prompt: r.prompt,
-                max_new: r.max_new,
-                sampling: SamplingConfig::for_task(&r.task, i as u64),
-            });
+            let _ = req_tx.send(Request::new(
+                i as u64,
+                r.prompt,
+                r.max_new,
+                SamplingConfig::for_task(&r.task, i as u64),
+            ));
         }
     });
     let metrics = coord.serve(req_rx, resp_tx)?;

@@ -186,6 +186,13 @@ impl Parsed {
             .map_err(|_| Error::Cli(format!("--{name}: expected integer, got '{}'", self.str(name))))
     }
 
+    /// Millisecond duration option; `0` means disabled (`None`). Used by
+    /// the serving CLI for deadlines/timeouts.
+    pub fn ms_opt(&self, name: &str) -> Result<Option<std::time::Duration>> {
+        let ms = self.u64(name)?;
+        Ok(if ms == 0 { None } else { Some(std::time::Duration::from_millis(ms)) })
+    }
+
     /// Comma-separated list.
     pub fn list(&self, name: &str) -> Vec<String> {
         self.str(name)
@@ -237,6 +244,20 @@ mod tests {
     fn unknown_option_rejected() {
         let r = Args::new("t", "test").parse_from(&argv(&["--nope"]));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn ms_opt_zero_disables() {
+        let p = Args::new("t", "test")
+            .opt("timeout-ms", "0", "deadline")
+            .parse_from(&argv(&[]))
+            .unwrap();
+        assert_eq!(p.ms_opt("timeout-ms").unwrap(), None);
+        let p = Args::new("t", "test")
+            .opt("timeout-ms", "0", "deadline")
+            .parse_from(&argv(&["--timeout-ms", "2500"]))
+            .unwrap();
+        assert_eq!(p.ms_opt("timeout-ms").unwrap(), Some(std::time::Duration::from_millis(2500)));
     }
 
     #[test]

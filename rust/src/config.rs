@@ -84,6 +84,9 @@ impl RunConfig {
         if self.max_batch == 0 {
             return Err(Error::msg("max_batch must be >= 1"));
         }
+        if self.max_new_tokens == 0 {
+            return Err(Error::msg("max_new_tokens must be >= 1"));
+        }
         if !(0.0..=1.0).contains(&self.sampling.top_p) {
             return Err(Error::msg(format!("top_p={} not in [0,1]", self.sampling.top_p)));
         }
@@ -134,6 +137,13 @@ mod tests {
         c.gamma = 8;
         assert!(c.validate().is_err());
         c.gamma = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn zero_max_new_rejected() {
+        let mut c = RunConfig::default();
+        c.max_new_tokens = 0;
         assert!(c.validate().is_err());
     }
 

@@ -13,15 +13,28 @@
 //!                                              │ batching at block level)
 //!                                              ▼
 //!                                      responses channel ──▶ clients
+//!                                      per-request delta channel ──▶ HTTP
+//!                                      streaming handlers (optional)
 //! ```
 //!
 //! PJRT handles are not `Send`, so the scheduler owns all model state on
 //! one thread; concurrency with clients happens through the channels from
 //! [`crate::exec`]. Iteration-level interleaving bounds head-of-line
 //! blocking at one speculation block (γ+1 tokens) rather than one request.
+//!
+//! Streaming: a request may carry an `events` sender; the scheduler pushes
+//! [`Delta::Started`] at admission, a [`Delta::Tokens`] after every
+//! speculation block and a terminal [`Delta::Done`] mirroring the final
+//! [`Response`]. When the receiving side hangs up (HTTP client
+//! disconnect) the sequence is cancelled and its slot freed immediately.
+//!
+//! Deadlines: a request may carry a wall-clock `deadline` measured from
+//! `submitted` (or admission when unset). Expired sequences are evicted
+//! with [`ERR_DEADLINE`] in `Response::error`, which the HTTP server maps
+//! to `408 Request Timeout`.
 
 use std::collections::VecDeque;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::config::{RunConfig, SamplingConfig};
 use crate::error::Result;
@@ -30,6 +43,11 @@ use crate::metrics::ServeMetrics;
 use crate::rng::Pcg64;
 use crate::spec::{SpecDecoder, SpecSession};
 
+/// `Response::error` value for deadline-evicted requests (HTTP 408).
+pub const ERR_DEADLINE: &str = "deadline exceeded";
+/// `Response::error` value for client-disconnect cancellations.
+pub const ERR_DISCONNECT: &str = "client disconnected";
+
 /// A generation request.
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -37,6 +55,38 @@ pub struct Request {
     pub prompt: Vec<u32>,
     pub max_new: usize,
     pub sampling: SamplingConfig,
+    /// Wall-clock budget measured from `submitted`; `None` = no limit.
+    pub deadline: Option<Duration>,
+    /// When the client enqueued the request (queue wait counts against the
+    /// deadline and the reported latency); admission time when `None`.
+    pub submitted: Option<Instant>,
+    /// Incremental output sink: [`Delta::Started`] at admission, one
+    /// [`Delta::Tokens`] per speculation block, then [`Delta::Done`]. The
+    /// channel should be sized so the scheduler never blocks
+    /// (`max_new + 3` suffices: every block emits at least one token).
+    pub events: Option<Sender<Delta>>,
+}
+
+impl Request {
+    /// A plain request with no deadline and no streaming sink.
+    pub fn new(id: u64, prompt: Vec<u32>, max_new: usize, sampling: SamplingConfig) -> Request {
+        Request { id, prompt, max_new, sampling, deadline: None, submitted: None, events: None }
+    }
+}
+
+/// Incremental output event for one request (streaming mode).
+#[derive(Debug, Clone)]
+pub enum Delta {
+    /// The request left the admission queue and owns a batch slot. Lets
+    /// the HTTP layer distinguish a healthy-but-deep queue (no events
+    /// yet) from a post-admission scheduler stall.
+    Started,
+    /// Tokens emitted by one speculation block, already clipped to the
+    /// request's `max_new` budget.
+    Tokens(Vec<u32>),
+    /// Terminal event; mirrors the [`Response`] sent on the shared
+    /// response channel (including the error cases).
+    Done(Response),
 }
 
 /// A completed generation.
@@ -63,6 +113,17 @@ struct Active {
     enqueued: Instant,
     started: Instant,
     first_token: Option<f64>,
+    /// Absolute eviction deadline, when the request carries one.
+    deadline_at: Option<Instant>,
+    events: Option<Sender<Delta>>,
+    /// Tokens already pushed through `events` (max_new clipping).
+    streamed: usize,
+}
+
+impl Active {
+    fn expired(&self) -> bool {
+        self.deadline_at.is_some_and(|d| Instant::now() >= d)
+    }
 }
 
 /// The scheduler. Owns the models (via the decoder) for its lifetime.
@@ -101,27 +162,53 @@ impl<'a> Coordinator<'a> {
                     rx.try_recv()
                 };
                 let Some(req) = req else { break };
-                let enqueued = Instant::now();
+                let enqueued = req.submitted.unwrap_or_else(Instant::now);
+                let deadline_at = req.deadline.map(|d| enqueued + d);
+                // Expired while queued: reject without spending a prefill.
+                if deadline_at.is_some_and(|d| Instant::now() >= d) {
+                    metrics.timeouts += 1;
+                    Self::emit_error(
+                        &tx,
+                        &req.events,
+                        req.id,
+                        Vec::new(),
+                        Default::default(),
+                        enqueued.elapsed().as_secs_f64(),
+                        0.0,
+                        ERR_DEADLINE,
+                    );
+                    continue;
+                }
+                if let Some(ev) = &req.events {
+                    let _ = ev.send(Delta::Started);
+                }
                 match self.decoder.start(&req.prompt) {
                     Ok(session) => active.push_back(Active {
                         id: req.id,
                         session,
                         sampling: req.sampling,
-                        max_new: req.max_new.min(self.cfg.max_new_tokens.max(req.max_new)),
+                        // Engine-side ceiling: the configured budget bounds
+                        // every admitted request (the HTTP edge clamps too).
+                        max_new: req.max_new.min(self.cfg.max_new_tokens),
                         rng: Pcg64::with_stream(req.sampling.seed ^ req.id, 0x5e0e),
                         enqueued,
                         started: Instant::now(),
                         first_token: None,
+                        deadline_at,
+                        events: req.events,
+                        streamed: 0,
                     }),
                     Err(e) => {
-                        let _ = tx.send(Response {
-                            id: req.id,
-                            tokens: Vec::new(),
-                            stats: Default::default(),
-                            latency: 0.0,
-                            ttft: 0.0,
-                            error: Some(e.to_string()),
-                        });
+                        Self::emit_error(
+                            &tx,
+                            &req.events,
+                            req.id,
+                            Vec::new(),
+                            Default::default(),
+                            0.0,
+                            0.0,
+                            &e.to_string(),
+                        );
                     }
                 }
             }
@@ -136,11 +223,50 @@ impl<'a> Coordinator<'a> {
             // --- one scheduling iteration: one block per active sequence --
             let mut still_active = VecDeque::with_capacity(active.len());
             while let Some(mut a) = active.pop_front() {
+                // Deadline eviction: free the slot, report partial output.
+                if a.expired() {
+                    metrics.timeouts += 1;
+                    let mut tokens = a.session.generated().to_vec();
+                    tokens.truncate(a.max_new);
+                    Self::emit_error(
+                        &tx,
+                        &a.events,
+                        a.id,
+                        tokens,
+                        a.session.stats,
+                        a.enqueued.elapsed().as_secs_f64(),
+                        a.first_token.unwrap_or(0.0),
+                        ERR_DEADLINE,
+                    );
+                    continue;
+                }
                 let step = self.decoder.step(&mut a.session, &a.sampling, &mut a.rng);
                 match step {
                     Ok(emitted) => {
                         if !emitted.is_empty() && a.first_token.is_none() {
                             a.first_token = Some(a.enqueued.elapsed().as_secs_f64());
+                        }
+                        // Stream the block's tokens, clipped to max_new.
+                        if let Some(ev) = &a.events {
+                            let budget = a.max_new.saturating_sub(a.streamed);
+                            let clip = emitted.len().min(budget);
+                            if clip > 0 && ev.send(Delta::Tokens(emitted[..clip].to_vec())).is_err()
+                            {
+                                // Client hung up: cancel, free the slot.
+                                metrics.cancelled += 1;
+                                let mut tokens = a.session.generated().to_vec();
+                                tokens.truncate(a.max_new);
+                                let _ = tx.send(Response {
+                                    id: a.id,
+                                    tokens,
+                                    stats: a.session.stats,
+                                    latency: a.enqueued.elapsed().as_secs_f64(),
+                                    ttft: a.first_token.unwrap_or(0.0),
+                                    error: Some(ERR_DISCONNECT.to_string()),
+                                });
+                                continue;
+                            }
+                            a.streamed += clip;
                         }
                         let done = a.session.finished
                             || a.session.generated().len() >= a.max_new
@@ -152,14 +278,18 @@ impl<'a> Coordinator<'a> {
                         }
                     }
                     Err(e) => {
-                        let _ = tx.send(Response {
-                            id: a.id,
-                            tokens: a.session.generated().to_vec(),
-                            stats: a.session.stats,
-                            latency: a.enqueued.elapsed().as_secs_f64(),
-                            ttft: a.first_token.unwrap_or(0.0),
-                            error: Some(e.to_string()),
-                        });
+                        let mut tokens = a.session.generated().to_vec();
+                        tokens.truncate(a.max_new);
+                        Self::emit_error(
+                            &tx,
+                            &a.events,
+                            a.id,
+                            tokens,
+                            a.session.stats,
+                            a.enqueued.elapsed().as_secs_f64(),
+                            a.first_token.unwrap_or(0.0),
+                            &e.to_string(),
+                        );
                     }
                 }
             }
@@ -167,6 +297,26 @@ impl<'a> Coordinator<'a> {
         }
         metrics.wall_seconds = wall0.elapsed().as_secs_f64();
         Ok(metrics)
+    }
+
+    /// Send an error terminal on both the shared response channel and the
+    /// request's delta sink (when present).
+    #[allow(clippy::too_many_arguments)]
+    fn emit_error(
+        tx: &Sender<Response>,
+        events: &Option<Sender<Delta>>,
+        id: u64,
+        tokens: Vec<u32>,
+        stats: crate::metrics::SpecStats,
+        latency: f64,
+        ttft: f64,
+        error: &str,
+    ) {
+        let resp = Response { id, tokens, stats, latency, ttft, error: Some(error.to_string()) };
+        if let Some(ev) = events {
+            let _ = ev.send(Delta::Done(resp.clone()));
+        }
+        let _ = tx.send(resp);
     }
 
     fn finish(
@@ -183,14 +333,18 @@ impl<'a> Coordinator<'a> {
         metrics.request_latency.push(latency);
         metrics.ttft.push(a.first_token.unwrap_or(latency));
         metrics.spec.merge(&a.session.stats);
-        let _ = tx.send(Response {
+        let resp = Response {
             id: a.id,
             tokens,
             stats: a.session.stats,
             latency,
             ttft: a.first_token.unwrap_or(latency),
             error: None,
-        });
+        };
+        if let Some(ev) = &a.events {
+            let _ = ev.send(Delta::Done(resp.clone()));
+        }
+        let _ = tx.send(resp);
         let _ = a.started; // reserved for decode-only latency metrics
         Ok(())
     }
@@ -199,8 +353,18 @@ impl<'a> Coordinator<'a> {
 #[cfg(test)]
 mod tests {
     // The coordinator requires compiled artifacts; its end-to-end behaviour
-    // (all admitted requests terminate, batching bounds, starvation freedom)
-    // is covered in rust/tests/coordinator_integration.rs. Pure scheduling
-    // invariants that don't need models are tested via the exec channel
-    // tests and the kvcache pool property tests.
+    // (all admitted requests terminate, batching bounds, starvation
+    // freedom, streaming deltas, deadline eviction) is covered in
+    // rust/tests/coordinator_integration.rs and
+    // rust/tests/server_integration.rs. Pure scheduling invariants that
+    // don't need models are tested via the exec channel tests and the
+    // kvcache pool property tests.
+    use super::*;
+
+    #[test]
+    fn request_new_defaults() {
+        let r = Request::new(7, vec![1, 2], 16, SamplingConfig::greedy());
+        assert!(r.deadline.is_none() && r.submitted.is_none() && r.events.is_none());
+        assert_eq!(r.id, 7);
+    }
 }

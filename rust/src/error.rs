@@ -1,38 +1,62 @@
-//! Crate-wide error type.
+//! Crate-wide error type (thiserror is unavailable offline; the Display
+//! and From impls are written by hand, same substrate policy as
+//! [`crate::json`] / [`crate::cli`]).
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("xla: {0}")]
-    Xla(#[from] xla::Error),
-
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("json parse error at byte {offset}: {msg}")]
+    Xla(xla::Error),
+    Io(std::io::Error),
     Json { offset: usize, msg: String },
-
-    #[error("manifest: {0}")]
     Manifest(String),
-
-    #[error("weights file: {0}")]
     Weights(String),
-
-    #[error("tokenizer: {0}")]
     Tokenizer(String),
-
-    #[error("kv cache: {0}")]
     KvCache(String),
-
-    #[error("scheduler: {0}")]
     Scheduler(String),
-
-    #[error("cli: {0}")]
     Cli(String),
-
-    #[error("{0}")]
     Msg(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Xla(e) => write!(f, "xla: {e}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Json { offset, msg } => {
+                write!(f, "json parse error at byte {offset}: {msg}")
+            }
+            Error::Manifest(m) => write!(f, "manifest: {m}"),
+            Error::Weights(m) => write!(f, "weights file: {m}"),
+            Error::Tokenizer(m) => write!(f, "tokenizer: {m}"),
+            Error::KvCache(m) => write!(f, "kv cache: {m}"),
+            Error::Scheduler(m) => write!(f, "scheduler: {m}"),
+            Error::Cli(m) => write!(f, "cli: {m}"),
+            Error::Msg(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Xla(e) => Some(e),
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl Error {
@@ -42,3 +66,24 @@ impl Error {
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_previous_format() {
+        assert_eq!(Error::msg("plain").to_string(), "plain");
+        assert_eq!(Error::Cli("bad flag".into()).to_string(), "cli: bad flag");
+        assert_eq!(
+            Error::Json { offset: 7, msg: "oops".into() }.to_string(),
+            "json parse error at byte 7: oops"
+        );
+    }
+
+    #[test]
+    fn io_errors_convert() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::Other, "gone").into();
+        assert!(e.to_string().starts_with("io: "));
+    }
+}

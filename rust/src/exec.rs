@@ -6,7 +6,10 @@
 //!   request handling off the scheduler thread.
 //! - [`bounded`]: a bounded MPSC channel with blocking send — the
 //!   backpressure mechanism for request admission (when the queue is full,
-//!   producers block rather than piling up unbounded memory).
+//!   producers block rather than piling up unbounded memory). `try_send`
+//!   is the non-blocking variant behind the HTTP 429 path and
+//!   `recv_timeout` bounds how long a connection handler waits on the
+//!   scheduler.
 //!
 //! Everything is std-only: `Mutex` + `Condvar` underneath.
 
@@ -14,6 +17,7 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 // ---------------------------------------------------------------------------
 // Bounded channel
@@ -41,6 +45,27 @@ pub struct Receiver<T>(Arc<ChannelInner<T>>);
 /// Error returned when the other side is gone.
 #[derive(Debug, PartialEq, Eq)]
 pub struct Closed;
+
+/// Error from [`Receiver::recv_timeout`].
+#[derive(Debug, PartialEq, Eq)]
+pub enum RecvTimeoutError {
+    /// Nothing arrived within the timeout; the channel is still open.
+    Timeout,
+    /// All senders dropped and the queue is drained.
+    Closed,
+}
+
+impl<T> std::fmt::Debug for Sender<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("Sender")
+    }
+}
+
+impl<T> std::fmt::Debug for Receiver<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("Receiver")
+    }
+}
 
 pub fn bounded<T>(capacity: usize) -> (Sender<T>, Receiver<T>) {
     assert!(capacity > 0);
@@ -132,6 +157,35 @@ impl<T> Receiver<T> {
                 return Err(Closed);
             }
             st = self.0.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Blocking receive with a deadline. `Timeout` leaves the channel
+    /// usable; the HTTP handlers use this so a stalled scheduler can't pin
+    /// a connection thread forever.
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<T, RecvTimeoutError> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.0.queue.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.0.not_full.notify_one();
+                return Ok(item);
+            }
+            if st.senders == 0 {
+                return Err(RecvTimeoutError::Closed);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(RecvTimeoutError::Timeout);
+            }
+            let (guard, res) = self.0.not_empty.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+            if res.timed_out() && st.items.is_empty() {
+                if st.senders == 0 {
+                    return Err(RecvTimeoutError::Closed);
+                }
+                return Err(RecvTimeoutError::Timeout);
+            }
         }
     }
 
@@ -281,6 +335,83 @@ mod tests {
         let (tx, _rx) = bounded(1);
         tx.try_send(1).unwrap();
         assert!(matches!(tx.try_send(2), Err(TrySendError::Full(2))));
+    }
+
+    #[test]
+    fn try_send_full_then_drains_and_accepts() {
+        // The 429 path: a full queue rejects without consuming the item,
+        // and the same item can be resubmitted after the receiver drains.
+        let (tx, rx) = bounded(2);
+        tx.try_send(10).unwrap();
+        tx.try_send(11).unwrap();
+        let back = match tx.try_send(12) {
+            Err(TrySendError::Full(v)) => v,
+            other => panic!("expected Full, got {other:?}"),
+        };
+        assert_eq!(rx.recv(), Ok(10));
+        tx.try_send(back).unwrap();
+        assert_eq!(rx.recv(), Ok(11));
+        assert_eq!(rx.recv(), Ok(12));
+    }
+
+    #[test]
+    fn try_send_after_receiver_drop_returns_closed() {
+        let (tx, rx) = bounded(4);
+        drop(rx);
+        assert!(matches!(tx.try_send(7), Err(TrySendError::Closed(7))));
+        // Blocking send must not hang either.
+        assert_eq!(tx.send(8), Err(Closed));
+    }
+
+    #[test]
+    fn recv_timeout_times_out_then_delivers() {
+        let (tx, rx) = bounded(1);
+        let t0 = std::time::Instant::now();
+        assert_eq!(
+            rx.recv_timeout(Duration::from_millis(30)),
+            Err(RecvTimeoutError::Timeout)
+        );
+        assert!(t0.elapsed() >= Duration::from_millis(25), "returned too early");
+        tx.send(5).unwrap();
+        assert_eq!(rx.recv_timeout(Duration::from_millis(30)), Ok(5));
+    }
+
+    #[test]
+    fn recv_timeout_wakes_on_send() {
+        let (tx, rx) = bounded(1);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            tx.send(42).unwrap();
+        });
+        // Generous timeout: must return as soon as the item lands.
+        assert_eq!(rx.recv_timeout(Duration::from_secs(5)), Ok(42));
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn recv_timeout_closed_channel() {
+        let (tx, rx) = bounded::<i32>(1);
+        drop(tx);
+        assert_eq!(
+            rx.recv_timeout(Duration::from_millis(10)),
+            Err(RecvTimeoutError::Closed)
+        );
+    }
+
+    #[test]
+    fn recv_timeout_drains_before_reporting_closed() {
+        // Items queued before the last sender dropped must still be
+        // delivered (close-then-drain semantics match recv()).
+        let (tx, rx) = bounded(4);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv_timeout(Duration::from_millis(10)), Ok(1));
+        assert_eq!(rx.recv_timeout(Duration::from_millis(10)), Ok(2));
+        assert_eq!(
+            rx.recv_timeout(Duration::from_millis(10)),
+            Err(RecvTimeoutError::Closed)
+        );
     }
 
     #[test]

@@ -1,0 +1,703 @@
+//! HTTP/1.1 substrate (hyper/axum are unavailable offline).
+//!
+//! The wire layer for [`crate::server`]: a request parser with hard size
+//! limits, a plain and a chunked response writer, and a client-side
+//! response reader (used by the integration tests and
+//! `examples/http_load.rs`). Scope is deliberately the subset the serving
+//! subsystem needs:
+//!
+//! * requests: `GET`/`POST`, `Content-Length` bodies (chunked request
+//!   bodies are refused with [`HttpError::Unsupported`] → 501),
+//! * keep-alive: HTTP/1.1 default-on, HTTP/1.0 default-off, `Connection`
+//!   header respected; pipelined requests fall out of the parser reading
+//!   exactly one message per call,
+//! * responses: fixed `Content-Length` bodies or `Transfer-Encoding:
+//!   chunked` for streaming (each speculation block is flushed as one
+//!   chunk),
+//! * limits: request-line/header/body byte caps so a misbehaving client
+//!   cannot balloon memory (431/413 at the server layer).
+//!
+//! Timeouts are the socket's (`set_read_timeout`); the parser surfaces
+//! them as [`HttpError::TimedOut`] with a `started` flag so the connection
+//! loop can distinguish an idle keep-alive (retry or close politely) from
+//! a stalled mid-request client (close).
+
+use std::collections::BTreeMap;
+use std::io::{self, BufRead, Write};
+
+// ---------------------------------------------------------------------------
+// Limits
+// ---------------------------------------------------------------------------
+
+/// Byte/count caps applied while parsing one message.
+#[derive(Debug, Clone)]
+pub struct Limits {
+    /// Max bytes in the request line (method + target + version).
+    pub max_request_line: usize,
+    /// Max number of header fields.
+    pub max_headers: usize,
+    /// Max bytes in one header line.
+    pub max_header_line: usize,
+    /// Max body bytes (`Content-Length` above this is refused outright).
+    pub max_body: usize,
+}
+
+impl Default for Limits {
+    fn default() -> Self {
+        Limits {
+            max_request_line: 8 * 1024,
+            max_headers: 64,
+            max_header_line: 8 * 1024,
+            max_body: 1024 * 1024,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------------
+
+/// Parse/transport failure while reading one HTTP message.
+#[derive(Debug)]
+pub enum HttpError {
+    /// Clean EOF before the first byte of a message — the peer closed an
+    /// idle (keep-alive) connection; not an error condition.
+    Eof,
+    /// The socket read timed out. `started` is true when part of a message
+    /// had already been consumed (a stalled client, close the connection);
+    /// false means an idle keep-alive wait (safe to retry).
+    TimedOut { started: bool },
+    /// A size limit tripped; the payload names which one (→ 431/413).
+    TooLarge(&'static str),
+    /// Syntactically invalid message (→ 400).
+    Malformed(String),
+    /// Valid HTTP we deliberately don't implement (→ 501).
+    Unsupported(&'static str),
+    Io(io::Error),
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HttpError::Eof => write!(f, "connection closed"),
+            HttpError::TimedOut { started } => {
+                write!(f, "read timed out (mid-request: {started})")
+            }
+            HttpError::TooLarge(what) => write!(f, "{what} too large"),
+            HttpError::Malformed(m) => write!(f, "malformed request: {m}"),
+            HttpError::Unsupported(what) => write!(f, "unsupported: {what}"),
+            HttpError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+fn is_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+// ---------------------------------------------------------------------------
+// Request parsing
+// ---------------------------------------------------------------------------
+
+/// One parsed request. Header names are lowercased at parse time.
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    /// Path without the query string, e.g. `/v1/generate`.
+    pub path: String,
+    /// Decoded `k=v` query pairs (no percent-decoding; the serving API
+    /// uses plain tokens like `stream=1`).
+    pub query: BTreeMap<String, String>,
+    /// True for HTTP/1.1, false for HTTP/1.0.
+    pub http11: bool,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// Case-insensitive header lookup (names are stored lowercased).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Whether the connection should stay open after this exchange.
+    pub fn keep_alive(&self) -> bool {
+        match self.header("connection").map(|v| v.to_ascii_lowercase()) {
+            Some(v) if v.contains("close") => false,
+            Some(v) if v.contains("keep-alive") => true,
+            _ => self.http11,
+        }
+    }
+
+    /// Query flag: present and not `0`/`false`.
+    pub fn query_flag(&self, name: &str) -> bool {
+        match self.query.get(name) {
+            Some(v) => v != "0" && !v.eq_ignore_ascii_case("false"),
+            None => false,
+        }
+    }
+
+    pub fn body_str(&self) -> std::borrow::Cow<'_, str> {
+        String::from_utf8_lossy(&self.body)
+    }
+}
+
+/// Read one line (terminated by `\n`, `\r\n` stripped) into `buf`.
+/// `buf` must be empty on entry unless resuming after a timeout. The limit
+/// is enforced *while* reading, so an endless line cannot balloon memory.
+fn read_line(
+    r: &mut impl BufRead,
+    buf: &mut Vec<u8>,
+    limit: usize,
+    what: &'static str,
+) -> Result<(), HttpError> {
+    loop {
+        let available = match r.fill_buf() {
+            Ok(b) => b,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) if is_timeout(&e) => {
+                return Err(HttpError::TimedOut { started: !buf.is_empty() })
+            }
+            Err(e) => return Err(HttpError::Io(e)),
+        };
+        if available.is_empty() {
+            return Err(if buf.is_empty() {
+                HttpError::Eof
+            } else {
+                HttpError::Malformed("unexpected eof".into())
+            });
+        }
+        match available.iter().position(|&b| b == b'\n') {
+            Some(i) => {
+                buf.extend_from_slice(&available[..i]);
+                r.consume(i + 1);
+                if buf.len() > limit {
+                    return Err(HttpError::TooLarge(what));
+                }
+                if buf.last() == Some(&b'\r') {
+                    buf.pop();
+                }
+                return Ok(());
+            }
+            None => {
+                let n = available.len();
+                buf.extend_from_slice(available);
+                r.consume(n);
+                if buf.len() > limit {
+                    return Err(HttpError::TooLarge(what));
+                }
+            }
+        }
+    }
+}
+
+/// Fill `out` completely, looping over short reads.
+fn read_full(r: &mut impl BufRead, out: &mut [u8]) -> Result<(), HttpError> {
+    let mut filled = 0;
+    while filled < out.len() {
+        match r.read(&mut out[filled..]) {
+            Ok(0) => return Err(HttpError::Malformed("body truncated".into())),
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) if is_timeout(&e) => return Err(HttpError::TimedOut { started: true }),
+            Err(e) => return Err(HttpError::Io(e)),
+        }
+    }
+    Ok(())
+}
+
+/// Parse exactly one request from `r`. Leaves the reader positioned at the
+/// start of the next pipelined request (if any).
+///
+/// `continue_to`: writer for the interim `100 Continue` response — clients
+/// like curl send `Expect: 100-continue` for non-trivial bodies and wait
+/// for it before transmitting; without the interim response the body read
+/// stalls into a timeout. Pass `None` when parsing from a byte buffer.
+pub fn read_request(
+    r: &mut impl BufRead,
+    limits: &Limits,
+    continue_to: Option<&mut dyn Write>,
+) -> Result<HttpRequest, HttpError> {
+    // --- request line ----------------------------------------------------
+    let mut line = Vec::new();
+    read_line(r, &mut line, limits.max_request_line, "request line")?;
+    let line = String::from_utf8(line)
+        .map_err(|_| HttpError::Malformed("request line not utf-8".into()))?;
+    let mut parts = line.split(' ');
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next())
+    {
+        (Some(m), Some(t), Some(v), None) if !m.is_empty() && !t.is_empty() => (m, t, v),
+        _ => return Err(HttpError::Malformed(format!("bad request line '{line}'"))),
+    };
+    let http11 = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        _ => return Err(HttpError::Malformed(format!("bad version '{version}'"))),
+    };
+    if !method.bytes().all(|b| b.is_ascii_uppercase()) {
+        return Err(HttpError::Malformed(format!("bad method '{method}'")));
+    }
+    let (path, query_str) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+    if !path.starts_with('/') {
+        return Err(HttpError::Malformed(format!("bad target '{target}'")));
+    }
+    let mut query = BTreeMap::new();
+    for pair in query_str.split('&').filter(|s| !s.is_empty()) {
+        let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+        query.insert(k.to_string(), v.to_string());
+    }
+
+    // --- headers ----------------------------------------------------------
+    let mut headers: Vec<(String, String)> = Vec::new();
+    loop {
+        let mut hline = Vec::new();
+        read_line(r, &mut hline, limits.max_header_line, "header line").map_err(|e| {
+            // EOF between request line and blank line is malformed, and a
+            // timeout here is always mid-request.
+            match e {
+                HttpError::Eof => HttpError::Malformed("eof in headers".into()),
+                HttpError::TimedOut { .. } => HttpError::TimedOut { started: true },
+                other => other,
+            }
+        })?;
+        if hline.is_empty() {
+            break;
+        }
+        if headers.len() >= limits.max_headers {
+            return Err(HttpError::TooLarge("header count"));
+        }
+        let hline = String::from_utf8(hline)
+            .map_err(|_| HttpError::Malformed("header not utf-8".into()))?;
+        let (name, value) = hline
+            .split_once(':')
+            .ok_or_else(|| HttpError::Malformed(format!("bad header '{hline}'")))?;
+        if name.is_empty() || name.contains(' ') {
+            return Err(HttpError::Malformed(format!("bad header name '{name}'")));
+        }
+        headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    let mut req =
+        HttpRequest { method: method.to_string(), path: path.to_string(), query, http11, headers, body: Vec::new() };
+
+    // --- body -------------------------------------------------------------
+    if let Some(te) = req.header("transfer-encoding") {
+        if !te.eq_ignore_ascii_case("identity") {
+            return Err(HttpError::Unsupported("chunked request bodies"));
+        }
+    }
+    if let Some(cl) = req.header("content-length") {
+        let len: usize = cl
+            .trim()
+            .parse()
+            .map_err(|_| HttpError::Malformed(format!("bad content-length '{cl}'")))?;
+        if len > limits.max_body {
+            return Err(HttpError::TooLarge("body"));
+        }
+        if len > 0
+            && req.header("expect").is_some_and(|e| e.eq_ignore_ascii_case("100-continue"))
+        {
+            if let Some(w) = continue_to {
+                w.write_all(b"HTTP/1.1 100 Continue\r\n\r\n").map_err(HttpError::Io)?;
+                w.flush().map_err(HttpError::Io)?;
+            }
+        }
+        let mut body = vec![0u8; len];
+        read_full(r, &mut body)?;
+        req.body = body;
+    }
+    Ok(req)
+}
+
+// ---------------------------------------------------------------------------
+// Response writing
+// ---------------------------------------------------------------------------
+
+pub fn status_reason(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// Write a complete fixed-length response.
+pub fn write_response(
+    w: &mut impl Write,
+    code: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+    extra_headers: &[(&str, &str)],
+) -> io::Result<()> {
+    write!(w, "HTTP/1.1 {} {}\r\n", code, status_reason(code))?;
+    write!(w, "content-type: {content_type}\r\n")?;
+    write!(w, "content-length: {}\r\n", body.len())?;
+    write!(w, "connection: {}\r\n", if keep_alive { "keep-alive" } else { "close" })?;
+    for (k, v) in extra_headers {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    w.write_all(b"\r\n")?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Chunked-transfer streaming body. Construction writes the response head;
+/// every [`ChunkedWriter::chunk`] is flushed immediately so clients observe
+/// tokens as the scheduler produces them; [`ChunkedWriter::finish`] writes
+/// the terminal zero-chunk (also attempted on drop, errors ignored).
+pub struct ChunkedWriter<'a, W: Write> {
+    w: &'a mut W,
+    finished: bool,
+}
+
+impl<'a, W: Write> ChunkedWriter<'a, W> {
+    pub fn start(
+        w: &'a mut W,
+        code: u16,
+        content_type: &str,
+        keep_alive: bool,
+    ) -> io::Result<Self> {
+        write!(w, "HTTP/1.1 {} {}\r\n", code, status_reason(code))?;
+        write!(w, "content-type: {content_type}\r\n")?;
+        w.write_all(b"transfer-encoding: chunked\r\n")?;
+        write!(w, "connection: {}\r\n", if keep_alive { "keep-alive" } else { "close" })?;
+        w.write_all(b"\r\n")?;
+        w.flush()?;
+        Ok(ChunkedWriter { w, finished: false })
+    }
+
+    pub fn chunk(&mut self, data: &[u8]) -> io::Result<()> {
+        if data.is_empty() {
+            return Ok(()); // an empty chunk would terminate the body
+        }
+        write!(self.w, "{:x}\r\n", data.len())?;
+        self.w.write_all(data)?;
+        self.w.write_all(b"\r\n")?;
+        self.w.flush()
+    }
+
+    pub fn finish(mut self) -> io::Result<()> {
+        self.finished = true;
+        self.w.write_all(b"0\r\n\r\n")?;
+        self.w.flush()
+    }
+}
+
+impl<W: Write> Drop for ChunkedWriter<'_, W> {
+    fn drop(&mut self) {
+        if !self.finished {
+            let _ = self.w.write_all(b"0\r\n\r\n");
+            let _ = self.w.flush();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client-side response reading (integration tests + load generator)
+// ---------------------------------------------------------------------------
+
+/// A parsed response. Header names are lowercased.
+#[derive(Debug)]
+pub struct HttpResponse {
+    pub code: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+
+    pub fn body_str(&self) -> std::borrow::Cow<'_, str> {
+        String::from_utf8_lossy(&self.body)
+    }
+
+    pub fn chunked(&self) -> bool {
+        self.header("transfer-encoding").is_some_and(|v| v.eq_ignore_ascii_case("chunked"))
+    }
+}
+
+/// Read status line + headers; the body is NOT consumed (callers pick
+/// fixed-length vs chunked via [`read_body`] / [`ChunkedReader`]).
+pub fn read_response_head(r: &mut impl BufRead) -> Result<HttpResponse, HttpError> {
+    let mut line = Vec::new();
+    read_line(r, &mut line, 8 * 1024, "status line")?;
+    let line =
+        String::from_utf8(line).map_err(|_| HttpError::Malformed("status not utf-8".into()))?;
+    let mut parts = line.splitn(3, ' ');
+    let (version, code) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::Malformed(format!("bad status line '{line}'")));
+    }
+    let code: u16 =
+        code.parse().map_err(|_| HttpError::Malformed(format!("bad status code '{code}'")))?;
+    let mut headers = Vec::new();
+    loop {
+        let mut hline = Vec::new();
+        read_line(r, &mut hline, 8 * 1024, "header line")?;
+        if hline.is_empty() {
+            break;
+        }
+        let hline = String::from_utf8(hline)
+            .map_err(|_| HttpError::Malformed("header not utf-8".into()))?;
+        if let Some((k, v)) = hline.split_once(':') {
+            headers.push((k.to_ascii_lowercase(), v.trim().to_string()));
+        }
+    }
+    Ok(HttpResponse { code, headers, body: Vec::new() })
+}
+
+/// Consume the body for `head` (fixed-length or chunked) and fill it in.
+pub fn read_body(r: &mut impl BufRead, head: &mut HttpResponse) -> Result<(), HttpError> {
+    if head.chunked() {
+        let mut chunks = ChunkedReader::new(r);
+        while let Some(c) = chunks.next_chunk()? {
+            head.body.extend_from_slice(&c);
+        }
+    } else if let Some(cl) = head.header("content-length") {
+        let len: usize = cl
+            .parse()
+            .map_err(|_| HttpError::Malformed(format!("bad content-length '{cl}'")))?;
+        let mut body = vec![0u8; len];
+        read_full(r, &mut body)?;
+        head.body = body;
+    }
+    Ok(())
+}
+
+/// Read one full response (head + body).
+pub fn read_response(r: &mut impl BufRead) -> Result<HttpResponse, HttpError> {
+    let mut head = read_response_head(r)?;
+    read_body(r, &mut head)?;
+    Ok(head)
+}
+
+/// Incremental chunked-body reader: one `next_chunk` per wire chunk, so a
+/// streaming client can timestamp each arrival (TTFT measurements).
+pub struct ChunkedReader<'a, R: BufRead> {
+    r: &'a mut R,
+    done: bool,
+}
+
+impl<'a, R: BufRead> ChunkedReader<'a, R> {
+    pub fn new(r: &'a mut R) -> Self {
+        ChunkedReader { r, done: false }
+    }
+
+    /// `Ok(None)` after the terminal zero-chunk.
+    pub fn next_chunk(&mut self) -> Result<Option<Vec<u8>>, HttpError> {
+        if self.done {
+            return Ok(None);
+        }
+        let mut line = Vec::new();
+        read_line(self.r, &mut line, 1024, "chunk size")?;
+        let size_str = String::from_utf8(line)
+            .map_err(|_| HttpError::Malformed("chunk size not utf-8".into()))?;
+        let size_str = size_str.split(';').next().unwrap_or("").trim();
+        let size = usize::from_str_radix(size_str, 16)
+            .map_err(|_| HttpError::Malformed(format!("bad chunk size '{size_str}'")))?;
+        if size == 0 {
+            // Trailer section: lines until the blank terminator.
+            loop {
+                let mut t = Vec::new();
+                read_line(self.r, &mut t, 8 * 1024, "trailer")?;
+                if t.is_empty() {
+                    break;
+                }
+            }
+            self.done = true;
+            return Ok(None);
+        }
+        let mut data = vec![0u8; size];
+        read_full(self.r, &mut data)?;
+        let mut crlf = Vec::new();
+        read_line(self.r, &mut crlf, 8, "chunk terminator")?;
+        if !crlf.is_empty() {
+            return Err(HttpError::Malformed("chunk not CRLF-terminated".into()));
+        }
+        Ok(Some(data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn parse(bytes: &[u8]) -> Result<HttpRequest, HttpError> {
+        read_request(&mut BufReader::new(bytes), &Limits::default(), None)
+    }
+
+    #[test]
+    fn parses_get_with_query() {
+        let r = parse(b"GET /v1/generate?stream=1&x=a HTTP/1.1\r\nHost: h\r\n\r\n").unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/v1/generate");
+        assert_eq!(r.query.get("stream").map(|s| s.as_str()), Some("1"));
+        assert!(r.query_flag("stream"));
+        assert!(!r.query_flag("missing"));
+        assert!(r.http11 && r.keep_alive());
+        assert_eq!(r.header("host"), Some("h"));
+        assert_eq!(r.header("HOST"), Some("h"));
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let r = parse(b"POST /v1/generate HTTP/1.1\r\ncontent-length: 4\r\n\r\nabcd").unwrap();
+        assert_eq!(r.body, b"abcd");
+    }
+
+    #[test]
+    fn keep_alive_rules() {
+        assert!(!parse(b"GET / HTTP/1.0\r\n\r\n").unwrap().keep_alive());
+        assert!(parse(b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n").unwrap().keep_alive());
+        assert!(!parse(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap().keep_alive());
+    }
+
+    #[test]
+    fn malformed_request_lines_rejected() {
+        for bad in [
+            &b"GARBAGE\r\n\r\n"[..],
+            b"GET\r\n\r\n",
+            b"GET / HTTP/2.0\r\n\r\n",
+            b"GET / HTTP/1.1 extra\r\n\r\n",
+            b"get / HTTP/1.1\r\n\r\n",
+            b"GET nopath HTTP/1.1\r\n\r\n",
+        ] {
+            assert!(
+                matches!(parse(bad), Err(HttpError::Malformed(_))),
+                "accepted: {:?}",
+                String::from_utf8_lossy(bad)
+            );
+        }
+    }
+
+    #[test]
+    fn eof_before_request_is_clean_close() {
+        assert!(matches!(parse(b""), Err(HttpError::Eof)));
+    }
+
+    #[test]
+    fn truncated_body_is_malformed() {
+        let r = parse(b"POST / HTTP/1.1\r\ncontent-length: 10\r\n\r\nabc");
+        assert!(matches!(r, Err(HttpError::Malformed(_))));
+    }
+
+    #[test]
+    fn limits_enforced() {
+        // Request line cap.
+        let long = format!("GET /{} HTTP/1.1\r\n\r\n", "x".repeat(10_000));
+        assert!(matches!(parse(long.as_bytes()), Err(HttpError::TooLarge("request line"))));
+        // Body cap: declared length over the limit is refused before reading.
+        let lim = Limits { max_body: 8, ..Limits::default() };
+        let r = read_request(
+            &mut BufReader::new(&b"POST / HTTP/1.1\r\ncontent-length: 9\r\n\r\n123456789"[..]),
+            &lim,
+            None,
+        );
+        assert!(matches!(r, Err(HttpError::TooLarge("body"))));
+        // Header count cap.
+        let mut many = String::from("GET / HTTP/1.1\r\n");
+        for i in 0..100 {
+            many.push_str(&format!("h{i}: v\r\n"));
+        }
+        many.push_str("\r\n");
+        assert!(matches!(parse(many.as_bytes()), Err(HttpError::TooLarge("header count"))));
+    }
+
+    #[test]
+    fn chunked_request_body_unsupported() {
+        let r = parse(b"POST / HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n");
+        assert!(matches!(r, Err(HttpError::Unsupported(_))));
+    }
+
+    #[test]
+    fn pipelined_requests_parse_sequentially() {
+        let wire = b"POST /a HTTP/1.1\r\ncontent-length: 2\r\n\r\nhiGET /b HTTP/1.1\r\n\r\n";
+        let mut rd = BufReader::new(&wire[..]);
+        let a = read_request(&mut rd, &Limits::default(), None).unwrap();
+        assert_eq!((a.path.as_str(), a.body.as_slice()), ("/a", &b"hi"[..]));
+        let b = read_request(&mut rd, &Limits::default(), None).unwrap();
+        assert_eq!(b.path, "/b");
+        assert!(matches!(read_request(&mut rd, &Limits::default(), None), Err(HttpError::Eof)));
+    }
+
+    #[test]
+    fn expect_100_continue_gets_interim_response() {
+        let wire = b"POST / HTTP/1.1\r\nexpect: 100-continue\r\ncontent-length: 2\r\n\r\nhi";
+        let mut interim = Vec::new();
+        let mut rd = BufReader::new(&wire[..]);
+        let req =
+            read_request(&mut rd, &Limits::default(), Some(&mut interim)).unwrap();
+        assert_eq!(req.body, b"hi");
+        assert_eq!(interim, b"HTTP/1.1 100 Continue\r\n\r\n");
+        // Without the Expect header no interim bytes are written.
+        let wire = b"POST / HTTP/1.1\r\ncontent-length: 2\r\n\r\nhi";
+        let mut interim = Vec::new();
+        read_request(&mut BufReader::new(&wire[..]), &Limits::default(), Some(&mut interim))
+            .unwrap();
+        assert!(interim.is_empty());
+    }
+
+    #[test]
+    fn write_then_read_response_roundtrip() {
+        let mut wire = Vec::new();
+        write_response(&mut wire, 429, "application/json", b"{\"error\":\"busy\"}", true,
+                       &[("retry-after", "1")])
+            .unwrap();
+        let resp = read_response(&mut BufReader::new(&wire[..])).unwrap();
+        assert_eq!(resp.code, 429);
+        assert_eq!(resp.header("retry-after"), Some("1"));
+        assert_eq!(resp.body_str(), "{\"error\":\"busy\"}");
+    }
+
+    #[test]
+    fn chunked_writer_reader_roundtrip() {
+        let mut wire = Vec::new();
+        {
+            let mut cw = ChunkedWriter::start(&mut wire, 200, "text/event-stream", true).unwrap();
+            cw.chunk(b"data: {\"tokens\":[1,2]}\n\n").unwrap();
+            cw.chunk(b"").unwrap(); // ignored, must not terminate
+            cw.chunk(b"data: done\n\n").unwrap();
+            cw.finish().unwrap();
+        }
+        let mut rd = BufReader::new(&wire[..]);
+        let head = read_response_head(&mut rd).unwrap();
+        assert!(head.chunked());
+        let mut cr = ChunkedReader::new(&mut rd);
+        assert_eq!(cr.next_chunk().unwrap().unwrap(), b"data: {\"tokens\":[1,2]}\n\n");
+        assert_eq!(cr.next_chunk().unwrap().unwrap(), b"data: done\n\n");
+        assert!(cr.next_chunk().unwrap().is_none());
+        assert!(cr.next_chunk().unwrap().is_none(), "idempotent after terminator");
+    }
+
+    #[test]
+    fn chunked_writer_terminates_on_drop() {
+        let mut wire = Vec::new();
+        {
+            let mut cw = ChunkedWriter::start(&mut wire, 200, "text/plain", false).unwrap();
+            cw.chunk(b"partial").unwrap();
+            // dropped without finish(): terminal chunk still written
+        }
+        let mut rd = BufReader::new(&wire[..]);
+        let resp = read_response(&mut rd).unwrap();
+        assert_eq!(resp.body_str(), "partial");
+    }
+}

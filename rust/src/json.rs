@@ -4,6 +4,10 @@
 //! serializer. Used for the artifact manifest, vocab file, golden test
 //! vectors, run configs and metric dumps. Numbers are kept as f64 (adequate
 //! for every artifact we exchange: token ids, shapes, probabilities).
+//!
+//! For the HTTP streaming path, [`escape_fragment_into`] writes
+//! escape-correct string fragments without building a [`Value`], and
+//! [`ObjWriter`] assembles flat response objects incrementally.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -207,6 +211,16 @@ fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
 
 fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
+    escape_fragment_into(out, s);
+    out.push('"');
+}
+
+/// Append `s` to `out` as the *contents* of a JSON string — escape-correct
+/// but without the surrounding quotes. This is the streaming-serializer
+/// primitive: a long string can be emitted in arbitrary `&str` pieces
+/// between one `"` pair, with no [`Value`] tree materialized. It also
+/// backs [`ObjWriter`] (which the HTTP responses are built with).
+pub fn escape_fragment_into(out: &mut String, s: &str) {
     for c in s.chars() {
         match c {
             '"' => out.push_str("\\\""),
@@ -220,7 +234,79 @@ fn write_escaped(out: &mut String, s: &str) {
             c => out.push(c),
         }
     }
-    out.push('"');
+}
+
+/// Incremental writer for a flat JSON object, for streaming responses where
+/// building a [`Value`] per event would be wasteful. Fields are appended in
+/// call order; the result of [`ObjWriter::finish`] is always a complete,
+/// parseable object.
+pub struct ObjWriter {
+    buf: String,
+    first: bool,
+}
+
+impl ObjWriter {
+    pub fn new() -> ObjWriter {
+        ObjWriter { buf: String::from("{"), first: true }
+    }
+
+    fn key(&mut self, key: &str) {
+        if !self.first {
+            self.buf.push(',');
+        }
+        self.first = false;
+        write_escaped(&mut self.buf, key);
+        self.buf.push(':');
+    }
+
+    pub fn str(mut self, key: &str, v: &str) -> Self {
+        self.key(key);
+        write_escaped(&mut self.buf, v);
+        self
+    }
+
+    pub fn num(mut self, key: &str, v: f64) -> Self {
+        self.key(key);
+        Value::Num(v).write(&mut self.buf, None, 0);
+        self
+    }
+
+    pub fn bool(mut self, key: &str, v: bool) -> Self {
+        self.key(key);
+        self.buf.push_str(if v { "true" } else { "false" });
+        self
+    }
+
+    pub fn u32_arr(mut self, key: &str, xs: &[u32]) -> Self {
+        self.key(key);
+        self.buf.push('[');
+        for (i, x) in xs.iter().enumerate() {
+            if i > 0 {
+                self.buf.push(',');
+            }
+            let _ = write!(self.buf, "{x}");
+        }
+        self.buf.push(']');
+        self
+    }
+
+    /// Nest a pre-serialized JSON value (object, array, ...) under `key`.
+    pub fn raw(mut self, key: &str, json: &str) -> Self {
+        self.key(key);
+        self.buf.push_str(json);
+        self
+    }
+
+    pub fn finish(mut self) -> String {
+        self.buf.push('}');
+        self.buf
+    }
+}
+
+impl Default for ObjWriter {
+    fn default() -> Self {
+        ObjWriter::new()
+    }
 }
 
 struct Parser<'a> {
@@ -470,5 +556,98 @@ mod tests {
     fn integer_precision_preserved_in_serialization() {
         let v = Value::parse("[0, 1, 384, 23160]").unwrap();
         assert_eq!(v.to_string(), "[0,1,384,23160]");
+    }
+
+    #[test]
+    fn fragment_writer_matches_whole_string_escaping() {
+        // Emitting a string in pieces between one quote pair must parse to
+        // the concatenation — the streaming-serializer contract.
+        let pieces = ["plain ", "quo\"te", "\\back", "\nctl\u{1}", "héllo 😀"];
+        let mut streamed = String::from("\"");
+        for p in &pieces {
+            escape_fragment_into(&mut streamed, p);
+        }
+        streamed.push('"');
+        let whole: String = pieces.concat();
+        assert_eq!(Value::parse(&streamed).unwrap(), Value::Str(whole));
+    }
+
+    #[test]
+    fn obj_writer_builds_parseable_objects() {
+        let s = ObjWriter::new()
+            .str("text", "a\"b\nc")
+            .num("latency_s", 0.125)
+            .bool("done", true)
+            .u32_arr("tokens", &[5, 9, 2])
+            .raw("stats", r#"{"blocks":3}"#)
+            .finish();
+        let v = Value::parse(&s).unwrap();
+        assert_eq!(v.get("text").as_str(), Some("a\"b\nc"));
+        assert_eq!(v.get("latency_s").as_f64(), Some(0.125));
+        assert_eq!(v.get("done").as_bool(), Some(true));
+        assert_eq!(v.get("tokens").idx(2).as_usize(), Some(2));
+        assert_eq!(v.get("stats").get("blocks").as_usize(), Some(3));
+    }
+
+    /// Generator over adversarial strings: ASCII, control characters,
+    /// multi-byte BMP, and astral-plane codepoints.
+    fn string_gen() -> crate::prop::Gen<String> {
+        crate::prop::Gen::new(
+            |rng| {
+                let n = rng.gen_range(0, 24);
+                (0..n)
+                    .map(|_| match rng.gen_range(0, 5) {
+                        0 => char::from_u32(rng.gen_range(0x20, 0x7f) as u32).unwrap(),
+                        1 => char::from_u32(rng.gen_range(0, 0x20) as u32).unwrap(),
+                        2 => char::from_u32(rng.gen_range(0xa0, 0x700) as u32).unwrap(),
+                        3 => char::from_u32(rng.gen_range(0x4e00, 0x9fff) as u32).unwrap(),
+                        _ => char::from_u32(rng.gen_range(0x1f300, 0x1f64f) as u32).unwrap(),
+                    })
+                    .collect()
+            },
+            |s: &String| {
+                // Shrink by halving and by dropping one char.
+                let chars: Vec<char> = s.chars().collect();
+                let mut out = Vec::new();
+                if !chars.is_empty() {
+                    out.push(chars[..chars.len() / 2].iter().collect());
+                    out.push(chars[1..].iter().collect());
+                    out.push(chars[..chars.len() - 1].iter().collect());
+                }
+                out
+            },
+        )
+    }
+
+    #[test]
+    fn prop_string_roundtrip_parse_of_serialize() {
+        crate::prop::check("json-string-roundtrip", &string_gen(), 300, 11, |s| {
+            let ser = Value::Str(s.clone()).to_string();
+            match Value::parse(&ser) {
+                Ok(Value::Str(back)) if back == *s => crate::prop::Check::Pass,
+                Ok(v) => crate::prop::Check::Fail(format!("parsed to {v:?}")),
+                Err(e) => crate::prop::Check::Fail(format!("parse error: {e}")),
+            }
+        });
+    }
+
+    #[test]
+    fn prop_fragment_stream_roundtrip() {
+        // Split each string at a random char boundary, stream the two
+        // halves through the fragment writer, parse, compare.
+        let g = string_gen();
+        let mut rng = crate::rng::Pcg64::new(17);
+        for _ in 0..300 {
+            let s = g.sample(&mut rng);
+            let chars: Vec<char> = s.chars().collect();
+            let cut = if chars.is_empty() { 0 } else { rng.gen_range(0, chars.len() + 1) };
+            let (a, b): (String, String) =
+                (chars[..cut].iter().collect(), chars[cut..].iter().collect());
+            let mut out = String::from("\"");
+            escape_fragment_into(&mut out, &a);
+            escape_fragment_into(&mut out, &b);
+            out.push('"');
+            assert_eq!(Value::parse(&out).unwrap(), Value::Str(s));
+        }
     }
 }

@@ -23,6 +23,8 @@
 //! | [`spec`] | the draft-gamma-then-verify speculative decoding engine |
 //! | [`baseline`] | plain autoregressive decoding (the paper's baseline) |
 //! | [`coordinator`] | request queue, continuous batcher, scheduler |
+//! | [`http`] | HTTP/1.1 wire layer: parser, chunked/streaming writers |
+//! | [`server`] | TCP front end (L4): `/v1/generate`, `/healthz`, `/metrics` |
 //! | [`metrics`] | block efficiency, MBSU, token rate, latency histograms |
 //! | [`workload`] | synthetic task generators (dolly/xsum/cnndm/wmt) |
 //! | [`eval`] | figure/table harness used by `rust/benches/` |
@@ -41,6 +43,7 @@ pub mod coordinator;
 pub mod error;
 pub mod eval;
 pub mod exec;
+pub mod http;
 pub mod json;
 pub mod kvcache;
 pub mod metrics;
@@ -48,6 +51,7 @@ pub mod prop;
 pub mod rng;
 pub mod runtime;
 pub mod sampling;
+pub mod server;
 pub mod spec;
 pub mod tensor;
 pub mod tokenizer;

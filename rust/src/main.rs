@@ -3,13 +3,16 @@
 //! Subcommands:
 //!   info      print the artifact manifest summary (models, ratios, arch)
 //!   generate  run one prompt through speculative decoding (or --baseline)
-//!   serve     run a Poisson serving trace through the coordinator
+//!   serve     run the HTTP serving subsystem (POST /v1/generate, streaming,
+//!             /healthz, /metrics) over the continuous-batching coordinator
+//!   replay    run a Poisson serving trace through the coordinator in-process
 //!   eval      evaluate one (draft, task, gamma) figure cell
 //!
 //! Examples:
 //!   specd info --artifacts artifacts
 //!   specd generate --draft draft_tvdpp_ckpt4 --task dolly --gamma 5
-//!   specd serve --requests 32 --rate 2.0 --max-batch 4
+//!   specd serve --addr 127.0.0.1:8080 --max-batch 4 --gamma 3
+//!   specd replay --requests 32 --rate 2.0 --max-batch 4
 //!   specd eval --draft draft_kld_ckpt4 --task xsum --gamma 3
 
 use std::sync::Arc;
@@ -17,12 +20,14 @@ use std::sync::Arc;
 use specd::artifacts::Manifest;
 use specd::cli::Args;
 use specd::config::{RunConfig, SamplingConfig};
-use specd::coordinator::{Coordinator, Request};
+use specd::coordinator::{Coordinator, Request, Response};
 use specd::error::Result;
 use specd::eval::{eval_cell, render_cells, ArBaselineCache, EvalOptions};
 use specd::exec;
+use specd::metrics::ServeMetrics;
 use specd::rng::Pcg64;
 use specd::runtime::Runtime;
+use specd::server::{Server, ServerConfig};
 use specd::spec::SpecDecoder;
 use specd::tokenizer::Tokenizer;
 use specd::workload::{build_trace, EvalSuite, TraceConfig};
@@ -44,9 +49,13 @@ fn run() -> Result<()> {
         .opt("prompt-index", "0", "eval prompt index for `generate`")
         .opt("max-new", "48", "max new tokens")
         .opt("prompts", "16", "prompts per eval cell")
-        .opt("requests", "32", "serve: number of requests in the trace")
-        .opt("rate", "2.0", "serve: Poisson arrival rate (req/s)")
-        .opt("max-batch", "4", "serve: max concurrent sequences")
+        .opt("requests", "32", "replay: number of requests in the trace")
+        .opt("rate", "2.0", "replay: Poisson arrival rate (req/s)")
+        .opt("max-batch", "4", "serve/replay: max concurrent sequences")
+        .opt("queue-depth", "64", "serve/replay: admission queue length")
+        .opt("addr", "127.0.0.1:8080", "serve: HTTP bind address")
+        .opt("http-workers", "8", "serve: connection handler threads")
+        .opt("timeout-ms", "0", "serve: default per-request deadline (0 = none)")
         .opt("seed", "0", "random seed")
         .flag("baseline", "generate: use autoregressive decoding instead")
         .parse()?;
@@ -57,10 +66,11 @@ fn run() -> Result<()> {
     match command {
         "info" => info(&manifest),
         "generate" => generate(&manifest, &args),
-        "serve" => serve(&manifest, &args),
+        "serve" => serve_http(&manifest, &args),
+        "replay" => replay(&manifest, &args),
         "eval" => eval(&manifest, &args),
         other => Err(specd::Error::Cli(format!(
-            "unknown command '{other}' (expected info|generate|serve|eval)"
+            "unknown command '{other}' (expected info|generate|serve|replay|eval)"
         ))),
     }
 }
@@ -143,7 +153,77 @@ fn generate(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
     Ok(())
 }
 
-fn serve(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
+/// `specd serve` — the HTTP serving subsystem. The scheduler thread owns
+/// all PJRT state (handles are not `Send`); the server threads reach it
+/// only through the bounded admission queue, and each request's output
+/// comes back over its own delta channel.
+fn serve_http(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
+    let tokenizer = Arc::new(Tokenizer::load(&manifest.vocab_path())?);
+    let run_cfg = RunConfig {
+        artifacts_dir: args.str("artifacts").to_string(),
+        draft_model: args.str("draft").to_string(),
+        target_model: args.str("target").to_string(),
+        gamma: args.usize("gamma")?,
+        max_new_tokens: args.usize("max-new")?,
+        sampling: SamplingConfig::for_task(args.str("task"), args.u64("seed")?),
+        max_batch: args.usize("max-batch")?,
+        queue_depth: args.usize("queue-depth")?,
+    };
+    run_cfg.validate()?;
+
+    let (req_tx, req_rx) = exec::bounded::<Request>(run_cfg.queue_depth);
+    let (resp_tx, resp_rx) = exec::bounded::<Response>(run_cfg.queue_depth.max(16));
+
+    // Per-request routing happens over the delta channels; the shared
+    // response channel still carries every terminal Response, so drain it
+    // to keep the scheduler unblocked.
+    let drainer = std::thread::spawn(move || while resp_rx.recv().is_ok() {});
+
+    let sched_cfg = run_cfg.clone();
+    let scheduler = std::thread::Builder::new()
+        .name("specd-scheduler".to_string())
+        .spawn(move || -> Result<ServeMetrics> {
+            let manifest = Manifest::load(&sched_cfg.artifacts_dir)?;
+            let l = load(&manifest, &sched_cfg.draft_model, &sched_cfg.target_model)?;
+            let decoder = SpecDecoder::new(&l.draft, &l.target, sched_cfg.gamma)?;
+            let coord = Coordinator::new(decoder, sched_cfg.clone())?;
+            coord.serve(req_rx, resp_tx)
+        })
+        .map_err(specd::Error::Io)?;
+
+    let srv_cfg = ServerConfig {
+        addr: args.str("addr").to_string(),
+        n_workers: args.usize("http-workers")?,
+        default_max_new: args.usize("max-new")?,
+        // Clamp at the edge to the engine budget so clients get the real
+        // cap in their response instead of silent truncation.
+        max_new_ceiling: run_cfg.max_new_tokens,
+        default_deadline: args.ms_opt("timeout-ms")?,
+        ..ServerConfig::default()
+    };
+    let server = Server::start(srv_cfg, tokenizer, req_tx)?;
+    println!("specd: serving on http://{}", server.addr());
+    println!("  POST /v1/generate          generate (JSON in/out)");
+    println!("  POST /v1/generate?stream=1 chunked per-block token stream");
+    println!("  GET  /healthz | /metrics   liveness | Prometheus");
+
+    // The scheduler only returns when the admission queue closes (the
+    // server stopping) or on startup failure. std-only means no signal
+    // handling, so in normal operation this process runs until killed;
+    // the join's practical job is surfacing startup errors (bad
+    // artifacts, bad config) as a clean nonzero exit instead of a
+    // listener that 503s forever.
+    let result = scheduler.join().expect("scheduler thread");
+    drop(server); // graceful drain; also closes the admission queue
+    let _ = drainer.join();
+    let metrics = result?;
+    println!("{}", metrics.report());
+    Ok(())
+}
+
+/// `specd replay` — in-process Poisson trace replay (the pre-HTTP serving
+/// harness; still the cleanest way to benchmark the coordinator alone).
+fn replay(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
     let l = load(manifest, args.str("draft"), args.str("target"))?;
     let run_cfg = RunConfig {
         artifacts_dir: args.str("artifacts").to_string(),
@@ -153,7 +233,7 @@ fn serve(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
         max_new_tokens: args.usize("max-new")?,
         sampling: SamplingConfig::for_task(args.str("task"), args.u64("seed")?),
         max_batch: args.usize("max-batch")?,
-        queue_depth: 64,
+        queue_depth: args.usize("queue-depth")?,
     };
     let trace_cfg = TraceConfig {
         rate: args.f64("rate")?,
@@ -176,12 +256,12 @@ fn serve(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
             if let Some(wait) = r.arrival.checked_sub(t0.elapsed()) {
                 std::thread::sleep(wait);
             }
-            let _ = req_tx.send(Request {
-                id: i as u64,
-                prompt: r.prompt,
-                max_new: r.max_new,
-                sampling: SamplingConfig::for_task(&r.task, i as u64),
-            });
+            let _ = req_tx.send(Request::new(
+                i as u64,
+                r.prompt,
+                r.max_new,
+                SamplingConfig::for_task(&r.task, i as u64),
+            ));
         }
     });
 

@@ -101,6 +101,25 @@ pub fn token_rate_ratio(sd: &RateMeasurement, ar: &RateMeasurement) -> f64 {
     }
 }
 
+/// Cap on retained per-request latency/TTFT samples in a long-running
+/// aggregate: [`ServeMetrics::merge`] keeps a sliding window of the most
+/// recent samples so the live `/metrics` aggregate cannot grow without
+/// bound (quantiles are then over this window; lifetime totals stay in
+/// the counters).
+pub const LATENCY_WINDOW: usize = 4096;
+
+/// Emit one Prometheus counter family (HELP/TYPE/sample lines). Shared by
+/// [`ServeMetrics::prometheus_text`] and the HTTP server's own counters so
+/// the exposition format lives in one place.
+pub fn prom_counter(out: &mut String, name: &str, help: &str, v: f64) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"));
+}
+
+/// Emit one Prometheus gauge family.
+pub fn prom_gauge(out: &mut String, name: &str, help: &str, v: f64) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n"));
+}
+
 /// Latency/throughput aggregation for the serving benchmark.
 #[derive(Debug, Default)]
 pub struct ServeMetrics {
@@ -110,6 +129,10 @@ pub struct ServeMetrics {
     pub ttft: Vec<f64>,
     pub total_new_tokens: usize,
     pub total_requests: usize,
+    /// Requests evicted for exceeding their deadline (HTTP 408).
+    pub timeouts: usize,
+    /// Requests cancelled because the streaming client disconnected.
+    pub cancelled: usize,
     pub wall_seconds: f64,
     pub spec: SpecStats,
 }
@@ -145,6 +168,73 @@ impl ServeMetrics {
         } else {
             Some(Stats::from(self.ttft.clone()))
         }
+    }
+
+    /// Merge another aggregation into this one (the HTTP server folds each
+    /// completed request's view into a shared live aggregate). Retained
+    /// samples are windowed to the last [`LATENCY_WINDOW`] so a
+    /// long-running server's aggregate stays O(1) in memory and /metrics
+    /// scrape cost stays bounded; the scalar totals are lifetime-exact.
+    pub fn merge(&mut self, other: &ServeMetrics) {
+        self.request_latency.extend_from_slice(&other.request_latency);
+        self.ttft.extend_from_slice(&other.ttft);
+        for v in [&mut self.request_latency, &mut self.ttft] {
+            if v.len() > LATENCY_WINDOW {
+                v.drain(..v.len() - LATENCY_WINDOW);
+            }
+        }
+        self.total_new_tokens += other.total_new_tokens;
+        self.total_requests += other.total_requests;
+        self.timeouts += other.timeouts;
+        self.cancelled += other.cancelled;
+        self.wall_seconds += other.wall_seconds;
+        self.spec.merge(&other.spec);
+    }
+
+    /// Render in Prometheus text exposition format (`GET /metrics`).
+    /// Quantiles are emitted as a summary-style family computed over the
+    /// retained (windowed) per-request samples.
+    pub fn prometheus_text(&self) -> String {
+        let mut s = String::new();
+        prom_counter(&mut s, "specd_requests_total", "Completed generation requests.",
+                     self.total_requests as f64);
+        prom_counter(&mut s, "specd_tokens_generated_total", "New tokens emitted.",
+                     self.total_new_tokens as f64);
+        prom_counter(&mut s, "specd_request_timeouts_total", "Requests evicted past deadline.",
+                     self.timeouts as f64);
+        prom_counter(&mut s, "specd_requests_cancelled_total",
+                     "Streaming clients that disconnected.", self.cancelled as f64);
+        prom_counter(&mut s, "specd_spec_blocks_total",
+                     "Target verify runs (speculation blocks).", self.spec.blocks as f64);
+        prom_counter(&mut s, "specd_spec_drafted_total", "Draft tokens proposed.",
+                     self.spec.drafted as f64);
+        prom_counter(&mut s, "specd_spec_accepted_total", "Draft tokens accepted.",
+                     self.spec.accepted as f64);
+        prom_counter(&mut s, "specd_draft_calls_total", "Draft model executions.",
+                     self.spec.draft_calls as f64);
+        prom_counter(&mut s, "specd_target_calls_total", "Target model executions.",
+                     self.spec.target_calls as f64);
+        prom_gauge(&mut s, "specd_block_efficiency", "Mean tokens per speculation block (tau).",
+                   self.spec.block_efficiency());
+        prom_gauge(&mut s, "specd_acceptance_rate", "Draft-token acceptance rate.",
+                   self.spec.acceptance_rate());
+
+        let mut summary = |name: &str, help: &str, stats: &Option<Stats>| {
+            s.push_str(&format!("# HELP {name} {help}\n# TYPE {name} summary\n"));
+            if let Some(st) = stats {
+                for (q, v) in [("0.5", st.p50), ("0.9", st.p90), ("0.99", st.p99)] {
+                    s.push_str(&format!("{name}{{quantile=\"{q}\"}} {v}\n"));
+                }
+                s.push_str(&format!("{name}_sum {}\n", st.mean * st.n as f64));
+                s.push_str(&format!("{name}_count {}\n", st.n));
+            } else {
+                s.push_str(&format!("{name}_sum 0\n{name}_count 0\n"));
+            }
+        };
+        summary("specd_request_latency_seconds", "End-to-end request latency.",
+                &self.latency_stats());
+        summary("specd_ttft_seconds", "Time to first token.", &self.ttft_stats());
+        s
     }
 
     pub fn report(&self) -> String {
@@ -218,6 +308,56 @@ mod tests {
         assert_eq!(a.blocks, 2);
         assert_eq!(a.generated, 6);
         assert!((a.acceptance_rate() - 4.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prometheus_text_renders_counters_and_quantiles() {
+        let mut m = ServeMetrics::default();
+        m.total_requests = 3;
+        m.total_new_tokens = 42;
+        m.timeouts = 1;
+        m.request_latency = vec![0.1, 0.2, 0.3];
+        m.ttft = vec![0.01, 0.02, 0.03];
+        m.spec = SpecStats { blocks: 10, generated: 23, drafted: 30, accepted: 20,
+                             draft_calls: 30, target_calls: 10 };
+        let text = m.prometheus_text();
+        assert!(text.contains("specd_requests_total 3"));
+        assert!(text.contains("specd_tokens_generated_total 42"));
+        assert!(text.contains("specd_request_timeouts_total 1"));
+        assert!(text.contains("# TYPE specd_block_efficiency gauge"));
+        assert!(text.contains("specd_block_efficiency 2.3"));
+        assert!(text.contains("specd_request_latency_seconds{quantile=\"0.5\"} 0.2"));
+        assert!(text.contains("specd_request_latency_seconds_count 3"));
+        // Exposition format sanity: every non-comment line is `name value`
+        // or `name{labels} value`.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert_eq!(line.split_whitespace().count(), 2, "bad line: {line}");
+        }
+    }
+
+    #[test]
+    fn prometheus_text_empty_metrics_still_valid() {
+        let text = ServeMetrics::default().prometheus_text();
+        assert!(text.contains("specd_requests_total 0"));
+        assert!(text.contains("specd_request_latency_seconds_count 0"));
+    }
+
+    #[test]
+    fn serve_metrics_merge_accumulates() {
+        let mut a = ServeMetrics::default();
+        a.total_requests = 1;
+        a.request_latency = vec![0.1];
+        a.spec.blocks = 2;
+        let mut b = ServeMetrics::default();
+        b.total_requests = 2;
+        b.timeouts = 1;
+        b.request_latency = vec![0.2, 0.3];
+        b.spec.blocks = 3;
+        a.merge(&b);
+        assert_eq!(a.total_requests, 3);
+        assert_eq!(a.timeouts, 1);
+        assert_eq!(a.request_latency.len(), 3);
+        assert_eq!(a.spec.blocks, 5);
     }
 
     #[test]

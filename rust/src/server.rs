@@ -1,0 +1,729 @@
+//! The HTTP serving subsystem (L4): a TCP front end over the
+//! continuous-batching [`crate::coordinator`].
+//!
+//! ```text
+//!   TcpListener ── accept thread ──▶ exec::ThreadPool connection handlers
+//!        │                                   │ parse (http::read_request)
+//!        │ nonblocking poll +                │ tokenize / validate (400)
+//!        │ shutdown flag                     │ try_send ──▶ admission queue
+//!        ▼                                   │    └─ Full ⇒ 429 (backpressure)
+//!   graceful drain                           ▼
+//!   (stop accepting,              per-request Delta channel ◀── scheduler
+//!    finish in-flight,            stream=1: one chunk per speculation block
+//!    close admission queue)       else: wait for Delta::Done, one JSON body
+//! ```
+//!
+//! Endpoints:
+//!
+//! * `POST /v1/generate` — JSON body `{"prompt": "...", "tokens": [...],
+//!   "max_new": N, "task": "dolly", "temperature": T, "top_p": P,
+//!   "seed": S, "chat": bool, "timeout_ms": MS}` (either `prompt` or
+//!   `tokens`). Responds with tokens, decoded text and [`SpecStats`].
+//!   With `?stream=1` (or `"stream": true`) the response is
+//!   `Transfer-Encoding: chunked`, SSE-style: one `data: {...}\n\n` event
+//!   per speculation block, then a terminal `data: {"done":true,...}`.
+//! * `GET /healthz` — liveness probe.
+//! * `GET /metrics` — Prometheus text format, live server-side aggregate.
+//!
+//! Status mapping: invalid request 400, unknown path 404, wrong method
+//! 405, deadline exceeded 408 ([`crate::coordinator::ERR_DEADLINE`]),
+//! oversized body 413, admission queue full 429, header overflow 431,
+//! engine failure 500, chunked request bodies 501, scheduler offline 503,
+//! scheduler stall 504.
+//!
+//! The server owns no model state: it bridges into the scheduler through
+//! the bounded channels from [`crate::exec`], so it can be tested against
+//! a mock scheduler with no artifacts (see
+//! `rust/tests/server_integration.rs`).
+
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::SamplingConfig;
+use crate::coordinator::{Delta, Request, ERR_DEADLINE};
+use crate::error::{Error, Result};
+use crate::exec::{self, RecvTimeoutError, Sender, ThreadPool, TrySendError};
+use crate::http::{self, ChunkedWriter, HttpError, HttpRequest, Limits};
+use crate::json::{ObjWriter, Value};
+use crate::metrics::{ServeMetrics, SpecStats};
+use crate::tokenizer::Tokenizer;
+
+// ---------------------------------------------------------------------------
+// Configuration
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Bind address; port 0 picks an ephemeral port (tests).
+    pub addr: String,
+    /// Connection-handler threads (requests in flight concurrently at the
+    /// HTTP layer; the scheduler's max_batch bounds decode concurrency).
+    pub n_workers: usize,
+    pub limits: Limits,
+    /// `max_new` when the request doesn't specify one.
+    pub default_max_new: usize,
+    /// Hard cap on client-requested `max_new`.
+    pub max_new_ceiling: usize,
+    /// Deadline applied when the request doesn't carry `timeout_ms`.
+    pub default_deadline: Option<Duration>,
+    /// Close keep-alive connections idle longer than this.
+    pub keep_alive_idle: Duration,
+    /// Max wait for the *next* scheduler event before declaring a stall
+    /// (504). Progress resets the clock, and the timer only arms once the
+    /// request is admitted ([`Delta::Started`]) — time spent queued is
+    /// bounded by the client's `timeout_ms`, not by this.
+    pub scheduler_wait: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:8080".to_string(),
+            n_workers: 8,
+            limits: Limits::default(),
+            default_max_new: 48,
+            max_new_ceiling: 256,
+            default_deadline: None,
+            keep_alive_idle: Duration::from_secs(10),
+            scheduler_wait: Duration::from_secs(120),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared live state (rendered by /metrics)
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+pub struct ServerState {
+    next_id: AtomicU64,
+    in_flight: AtomicU64,
+    responses_2xx: AtomicU64,
+    responses_4xx: AtomicU64,
+    responses_5xx: AtomicU64,
+    rejected_busy: AtomicU64,
+    timeouts_408: AtomicU64,
+    /// Per-request aggregates folded in as generations complete.
+    agg: Mutex<ServeMetrics>,
+}
+
+impl ServerState {
+    fn count_status(&self, code: u16) {
+        match code {
+            200..=299 => &self.responses_2xx,
+            408 => {
+                self.timeouts_408.fetch_add(1, Ordering::Relaxed);
+                &self.responses_4xx
+            }
+            429 => {
+                self.rejected_busy.fetch_add(1, Ordering::Relaxed);
+                &self.responses_4xx
+            }
+            400..=499 => &self.responses_4xx,
+            _ => &self.responses_5xx,
+        }
+        .fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn merge_completed(&self, m: &ServeMetrics) {
+        self.agg.lock().unwrap().merge(m);
+    }
+
+    /// Snapshot of the generation aggregate (tests / final report).
+    pub fn aggregate_report(&self) -> String {
+        self.agg.lock().unwrap().report()
+    }
+
+    pub fn completed_requests(&self) -> usize {
+        self.agg.lock().unwrap().total_requests
+    }
+
+    /// Full Prometheus exposition: HTTP-layer counters + the generation
+    /// aggregate from [`ServeMetrics::prometheus_text`].
+    pub fn prometheus(&self) -> String {
+        use crate::metrics::{prom_counter, prom_gauge};
+        let mut s = String::new();
+        prom_counter(&mut s, "specd_http_responses_2xx_total", "HTTP responses with 2xx status.",
+                     self.responses_2xx.load(Ordering::Relaxed) as f64);
+        prom_counter(&mut s, "specd_http_responses_4xx_total", "HTTP responses with 4xx status.",
+                     self.responses_4xx.load(Ordering::Relaxed) as f64);
+        prom_counter(&mut s, "specd_http_responses_5xx_total", "HTTP responses with 5xx status.",
+                     self.responses_5xx.load(Ordering::Relaxed) as f64);
+        prom_counter(&mut s, "specd_http_rejected_busy_total",
+                     "Requests rejected 429 (queue full).",
+                     self.rejected_busy.load(Ordering::Relaxed) as f64);
+        prom_counter(&mut s, "specd_http_timeouts_total", "Requests answered 408 (deadline).",
+                     self.timeouts_408.load(Ordering::Relaxed) as f64);
+        prom_gauge(&mut s, "specd_http_in_flight", "Requests currently being handled.",
+                   self.in_flight.load(Ordering::Relaxed) as f64);
+        s.push_str(&self.agg.lock().unwrap().prometheus_text());
+        s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+struct Inner {
+    cfg: ServerConfig,
+    tokenizer: Arc<Tokenizer>,
+    state: Arc<ServerState>,
+    shutdown: Arc<AtomicBool>,
+}
+
+/// A running HTTP server. Dropping (or calling [`Server::shutdown`])
+/// stops accepting, drains in-flight connections, then closes its side of
+/// the admission queue so the coordinator can drain and exit.
+pub struct Server {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    state: Arc<ServerState>,
+}
+
+impl Server {
+    /// Bind `cfg.addr` and serve in background threads. `req_tx` feeds the
+    /// coordinator's bounded admission queue; it is consumed so the queue
+    /// closes exactly when the server has fully stopped.
+    pub fn start(
+        cfg: ServerConfig,
+        tokenizer: Arc<Tokenizer>,
+        req_tx: Sender<Request>,
+    ) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .map_err(|e| Error::msg(format!("bind {}: {e}", cfg.addr)))?;
+        let addr = listener.local_addr().map_err(Error::Io)?;
+        listener.set_nonblocking(true).map_err(Error::Io)?;
+
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let state = Arc::new(ServerState::default());
+        let inner = Arc::new(Inner {
+            cfg: cfg.clone(),
+            tokenizer,
+            state: state.clone(),
+            shutdown: shutdown.clone(),
+        });
+
+        let accept_shutdown = shutdown.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("specd-accept".to_string())
+            .spawn(move || {
+                let pool = ThreadPool::new(cfg.n_workers, cfg.n_workers * 2);
+                while !accept_shutdown.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            let inner = inner.clone();
+                            let req_tx = req_tx.clone();
+                            pool.execute(move || handle_connection(stream, inner, req_tx));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(20));
+                        }
+                        Err(_) => std::thread::sleep(Duration::from_millis(20)),
+                    }
+                }
+                // pool drops here: waits for in-flight connections, then the
+                // last req_tx clone drops and the admission queue closes.
+            })
+            .map_err(Error::Io)?;
+
+        Ok(Server { addr, shutdown, accept_thread: Some(accept_thread), state })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn state(&self) -> Arc<ServerState> {
+        self.state.clone()
+    }
+
+    /// Graceful drain: stop accepting, finish in-flight requests, close
+    /// the admission queue. Idempotent.
+    pub fn shutdown(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Connection handling
+// ---------------------------------------------------------------------------
+
+/// Socket read timeout: the granularity at which idle keep-alive loops
+/// notice the shutdown flag.
+const READ_TICK: Duration = Duration::from_millis(250);
+
+/// Socket write timeout: bounds how long a stalled client (full TCP send
+/// buffer, reader gone) can pin a worker thread — without it, graceful
+/// shutdown could hang on a dead streaming peer.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Pre-admission wait granularity: while a request is still queued the
+/// handler wakes at this tick to notice server shutdown, so a wedged
+/// scheduler cannot deadlock the graceful drain.
+const ADMIT_TICK: Duration = Duration::from_millis(500);
+
+fn handle_connection(stream: TcpStream, inner: Arc<Inner>, req_tx: Sender<Request>) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(READ_TICK));
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    let mut idle_since = Instant::now();
+
+    loop {
+        if inner.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match http::read_request(&mut reader, &inner.cfg.limits, Some(&mut writer)) {
+            Ok(req) => {
+                inner.state.in_flight.fetch_add(1, Ordering::Relaxed);
+                let keep = req.keep_alive() && !inner.shutdown.load(Ordering::SeqCst);
+                let keep = route(&req, keep, &mut writer, &inner, &req_tx) && keep;
+                inner.state.in_flight.fetch_sub(1, Ordering::Relaxed);
+                if !keep {
+                    break;
+                }
+                idle_since = Instant::now();
+            }
+            Err(HttpError::TimedOut { started: false }) => {
+                if idle_since.elapsed() > inner.cfg.keep_alive_idle {
+                    break;
+                }
+            }
+            Err(HttpError::TimedOut { started: true }) => break, // stalled client
+            Err(HttpError::Eof) => break,
+            Err(HttpError::TooLarge(what)) => {
+                let code = if what == "body" { 413 } else { 431 };
+                let _ = respond_error(&inner.state, &mut writer, code, false,
+                                      &format!("{what} exceeds limit"));
+                break;
+            }
+            Err(HttpError::Unsupported(what)) => {
+                let _ = respond_error(&inner.state, &mut writer, 501, false, what);
+                break;
+            }
+            Err(HttpError::Malformed(m)) => {
+                let _ = respond_error(&inner.state, &mut writer, 400, false, &m);
+                break;
+            }
+            Err(HttpError::Io(_)) => break,
+        }
+    }
+}
+
+/// Route one request; returns whether the connection may continue.
+fn route(
+    req: &HttpRequest,
+    keep: bool,
+    w: &mut TcpStream,
+    inner: &Inner,
+    req_tx: &Sender<Request>,
+) -> bool {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            respond(&inner.state, w, 200, "text/plain", b"ok\n", keep, &[])
+        }
+        ("GET", "/metrics") => {
+            let text = inner.state.prometheus();
+            respond(&inner.state, w, 200, "text/plain; version=0.0.4", text.as_bytes(), keep, &[])
+        }
+        ("POST", "/v1/generate") => generate(req, keep, w, inner, req_tx),
+        (_, "/healthz" | "/metrics" | "/v1/generate") => {
+            respond_error(&inner.state, w, 405, keep, "method not allowed")
+        }
+        _ => respond_error(&inner.state, w, 404, keep, "not found"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// /v1/generate
+// ---------------------------------------------------------------------------
+
+struct GenSpec {
+    prompt: Vec<u32>,
+    max_new: usize,
+    sampling: SamplingConfig,
+    deadline: Option<Duration>,
+    stream: bool,
+}
+
+/// Parse and validate the request body; Err(message) maps to 400.
+fn parse_gen_spec(
+    req: &HttpRequest,
+    inner: &Inner,
+    id: u64,
+) -> std::result::Result<GenSpec, String> {
+    let body = if req.body.is_empty() {
+        Value::Obj(Default::default())
+    } else {
+        Value::parse(&req.body_str()).map_err(|e| format!("invalid json: {e}"))?
+    };
+
+    let mut prompt: Vec<u32> = match body.get("tokens") {
+        Value::Arr(a) => a
+            .iter()
+            .map(|v| v.as_usize().map(|t| t as u32).ok_or_else(|| "bad token id".to_string()))
+            .collect::<std::result::Result<_, _>>()?,
+        Value::Null => match body.get("prompt").as_str() {
+            Some(text) => inner.tokenizer.encode(text).map_err(|e| e.to_string())?,
+            None => return Err("body needs 'prompt' (string) or 'tokens' (array)".to_string()),
+        },
+        _ => return Err("'tokens' must be an array".to_string()),
+    };
+    if body.get("chat").as_bool().unwrap_or(false) {
+        prompt = inner.tokenizer.chat_prompt(&prompt);
+    }
+    if prompt.is_empty() {
+        return Err("empty prompt".to_string());
+    }
+    // Range-check client-supplied ids here so garbage is a 400, not a 500
+    // from the engine after burning an admission slot.
+    let vocab = inner.tokenizer.vocab_size() as u32;
+    if let Some(&bad) = prompt.iter().find(|&&t| t >= vocab) {
+        return Err(format!("token id {bad} out of range (vocab size {vocab})"));
+    }
+
+    let max_new = body
+        .get("max_new")
+        .as_usize()
+        .unwrap_or(inner.cfg.default_max_new)
+        .min(inner.cfg.max_new_ceiling.max(1))
+        .max(1);
+
+    // Default seed: a multiplicative mix of the id, NOT the id itself —
+    // the coordinator derives its stream from `seed ^ id`, which would
+    // cancel to 0 for every request and make all unseeded sampled
+    // requests identical.
+    let seed = body
+        .get("seed")
+        .as_i64()
+        .map(|s| s as u64)
+        .unwrap_or_else(|| id.wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(1));
+    let mut sampling = match body.get("task").as_str() {
+        Some(task) => SamplingConfig::for_task(task, seed),
+        None => SamplingConfig { seed, ..SamplingConfig::greedy() },
+    };
+    if let Some(t) = body.get("temperature").as_f64() {
+        sampling.temperature = t as f32;
+    }
+    if let Some(p) = body.get("top_p").as_f64() {
+        sampling.top_p = p as f32;
+    }
+    if !(0.0..=1.0).contains(&sampling.top_p) || sampling.temperature < 0.0 {
+        return Err("invalid sampling parameters".to_string());
+    }
+
+    let deadline = match body.get("timeout_ms").as_usize() {
+        Some(0) => return Err("timeout_ms must be positive".to_string()),
+        Some(ms) => Some(Duration::from_millis(ms as u64)),
+        None => inner.cfg.default_deadline,
+    };
+    let stream = req.query_flag("stream") || body.get("stream").as_bool().unwrap_or(false);
+    Ok(GenSpec { prompt, max_new, sampling, deadline, stream })
+}
+
+fn generate(
+    req: &HttpRequest,
+    keep: bool,
+    w: &mut TcpStream,
+    inner: &Inner,
+    req_tx: &Sender<Request>,
+) -> bool {
+    let id = inner.state.next_id.fetch_add(1, Ordering::Relaxed);
+    let spec = match parse_gen_spec(req, inner, id) {
+        Ok(s) => s,
+        Err(msg) => return respond_error(&inner.state, w, 400, keep, &msg),
+    };
+    // Chunked transfer encoding doesn't exist in HTTP/1.0; refuse rather
+    // than feed the client framing it cannot parse.
+    if spec.stream && !req.http11 {
+        return respond_error(&inner.state, w, 400, keep, "streaming requires HTTP/1.1");
+    }
+
+    // Channel sized so the scheduler never blocks on a slow client:
+    // Started + one Tokens delta per block (each emits >= 1 token) +
+    // the terminal Done.
+    let (ev_tx, ev_rx) = exec::bounded::<Delta>(spec.max_new + 3);
+    let request = Request {
+        id,
+        prompt: spec.prompt,
+        max_new: spec.max_new,
+        sampling: spec.sampling,
+        deadline: spec.deadline,
+        submitted: Some(Instant::now()),
+        events: Some(ev_tx),
+    };
+
+    // Admission control: never block the HTTP thread on a full queue.
+    match req_tx.try_send(request) {
+        Ok(()) => {}
+        Err(TrySendError::Full(_)) => {
+            return respond_with(
+                &inner.state, w, 429, keep,
+                ObjWriter::new().str("error", "server busy: admission queue full").finish(),
+                &[("retry-after", "1")],
+            );
+        }
+        Err(TrySendError::Closed(_)) => {
+            return respond_error(&inner.state, w, 503, keep, "scheduler offline");
+        }
+    }
+
+    if spec.stream {
+        stream_response(id, keep, w, inner, &ev_rx)
+    } else {
+        unary_response(id, keep, w, inner, &ev_rx)
+    }
+}
+
+/// Wait for the terminal event and answer with one JSON body.
+fn unary_response(
+    id: u64,
+    keep: bool,
+    w: &mut TcpStream,
+    inner: &Inner,
+    ev_rx: &exec::Receiver<Delta>,
+) -> bool {
+    let mut admitted = false;
+    let mut drain_waited = Duration::ZERO;
+    loop {
+        let wait = if admitted { inner.cfg.scheduler_wait } else { ADMIT_TICK };
+        match ev_rx.recv_timeout(wait) {
+            Ok(Delta::Started) => admitted = true,
+            // Interim deltas only matter for streaming; the terminal
+            // Response carries the full token list.
+            Ok(Delta::Tokens(_)) => continue,
+            Ok(Delta::Done(r)) => {
+                let code = match r.error.as_deref() {
+                    None => 200,
+                    Some(ERR_DEADLINE) => 408,
+                    Some(_) => 500,
+                };
+                inner.state.merge_completed(&completed_metrics(&r));
+                let text = inner.tokenizer.decode(&r.tokens);
+                let mut o = ObjWriter::new()
+                    .num("id", id as f64)
+                    .u32_arr("tokens", &r.tokens)
+                    .str("text", &text)
+                    .num("latency_s", r.latency)
+                    .num("ttft_s", r.ttft)
+                    .raw("stats", &stats_json(&r.stats));
+                if let Some(e) = &r.error {
+                    o = o.str("error", e);
+                }
+                return respond_with(&inner.state, w, code, keep, o.finish(), &[]);
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                // Still queued: not a stall — admission-queue wait is
+                // bounded by the operator's queue depth and the client's
+                // own timeout_ms (the scheduler rejects expired requests
+                // at admission); a dead scheduler closes the channel. Once
+                // shutdown starts, bound the remaining wait so a wedged
+                // scheduler cannot deadlock the drain.
+                if !admitted {
+                    if inner.shutdown.load(Ordering::SeqCst) {
+                        drain_waited += ADMIT_TICK;
+                        if drain_waited >= inner.cfg.scheduler_wait {
+                            return respond_error(&inner.state, w, 503, false,
+                                                 "server shutting down");
+                        }
+                    }
+                    continue;
+                }
+                // Dropping ev_rx after this cancels the sequence server-side.
+                return respond_error(&inner.state, w, 504, false, "scheduler stalled");
+            }
+            Err(RecvTimeoutError::Closed) => {
+                return respond_error(&inner.state, w, 500, false, "scheduler dropped request");
+            }
+        }
+    }
+}
+
+/// Chunked SSE-style streaming: one event per speculation block.
+fn stream_response(
+    id: u64,
+    keep: bool,
+    w: &mut TcpStream,
+    inner: &Inner,
+    ev_rx: &exec::Receiver<Delta>,
+) -> bool {
+    inner.state.count_status(200);
+    let Ok(mut cw) = ChunkedWriter::start(w, 200, "text/event-stream", keep) else {
+        return false;
+    };
+    let mut admitted = false;
+    let mut drain_waited = Duration::ZERO;
+    loop {
+        let wait = if admitted { inner.cfg.scheduler_wait } else { ADMIT_TICK };
+        match ev_rx.recv_timeout(wait) {
+            Ok(Delta::Started) => admitted = true,
+            Ok(Delta::Tokens(toks)) => {
+                let event = ObjWriter::new()
+                    .u32_arr("tokens", &toks)
+                    .str("text", &inner.tokenizer.decode(&toks))
+                    .finish();
+                if cw.chunk(format!("data: {event}\n\n").as_bytes()).is_err() {
+                    // Client hung up; dropping ev_rx cancels the sequence.
+                    let mut m = ServeMetrics::default();
+                    m.cancelled = 1;
+                    inner.state.merge_completed(&m);
+                    return false;
+                }
+            }
+            Ok(Delta::Done(r)) => {
+                inner.state.merge_completed(&completed_metrics(&r));
+                let mut o = ObjWriter::new()
+                    .bool("done", true)
+                    .num("id", id as f64)
+                    .num("tokens_total", r.tokens.len() as f64)
+                    .str("text", &inner.tokenizer.decode(&r.tokens))
+                    .num("latency_s", r.latency)
+                    .num("ttft_s", r.ttft)
+                    .raw("stats", &stats_json(&r.stats));
+                if let Some(e) = &r.error {
+                    o = o.str("error", e);
+                }
+                let ok = cw.chunk(format!("data: {}\n\n", o.finish()).as_bytes()).is_ok();
+                return cw.finish().is_ok() && ok && keep;
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if !admitted {
+                    // Queued, not stalled (see unary_response); bounded
+                    // once shutdown begins.
+                    if inner.shutdown.load(Ordering::SeqCst) {
+                        drain_waited += ADMIT_TICK;
+                        if drain_waited >= inner.cfg.scheduler_wait {
+                            let _ = cw.chunk(
+                                b"data: {\"done\":true,\"error\":\"server shutting down\"}\n\n",
+                            );
+                            let _ = cw.finish();
+                            return false;
+                        }
+                    }
+                    continue;
+                }
+                let _ = cw.chunk(b"data: {\"done\":true,\"error\":\"scheduler stalled\"}\n\n");
+                let _ = cw.finish();
+                return false;
+            }
+            Err(RecvTimeoutError::Closed) => {
+                let _ =
+                    cw.chunk(b"data: {\"done\":true,\"error\":\"scheduler dropped request\"}\n\n");
+                let _ = cw.finish();
+                return false;
+            }
+        }
+    }
+}
+
+/// One completed request folded into the live aggregate.
+fn completed_metrics(r: &crate::coordinator::Response) -> ServeMetrics {
+    let mut m = ServeMetrics::default();
+    match r.error.as_deref() {
+        None => {
+            m.total_requests = 1;
+            m.total_new_tokens = r.tokens.len();
+            m.request_latency.push(r.latency);
+            m.ttft.push(r.ttft);
+            m.spec.merge(&r.stats);
+        }
+        Some(ERR_DEADLINE) => m.timeouts = 1,
+        Some(_) => {}
+    }
+    m
+}
+
+fn stats_json(s: &SpecStats) -> String {
+    ObjWriter::new()
+        .num("blocks", s.blocks as f64)
+        .num("drafted", s.drafted as f64)
+        .num("accepted", s.accepted as f64)
+        .num("generated", s.generated as f64)
+        .num("draft_calls", s.draft_calls as f64)
+        .num("target_calls", s.target_calls as f64)
+        .num("block_efficiency", s.block_efficiency())
+        .num("acceptance_rate", s.acceptance_rate())
+        .finish()
+}
+
+// ---------------------------------------------------------------------------
+// Response helpers
+// ---------------------------------------------------------------------------
+
+fn respond(
+    state: &ServerState,
+    w: &mut impl Write,
+    code: u16,
+    content_type: &str,
+    body: &[u8],
+    keep: bool,
+    extra: &[(&str, &str)],
+) -> bool {
+    state.count_status(code);
+    http::write_response(w, code, content_type, body, keep, extra).is_ok() && keep
+}
+
+fn respond_with(
+    state: &ServerState,
+    w: &mut impl Write,
+    code: u16,
+    keep: bool,
+    json: String,
+    extra: &[(&str, &str)],
+) -> bool {
+    respond(state, w, code, "application/json", json.as_bytes(), keep, extra)
+}
+
+fn respond_error(state: &ServerState, w: &mut impl Write, code: u16, keep: bool, msg: &str) -> bool {
+    respond_with(state, w, code, keep, ObjWriter::new().str("error", msg).finish(), &[])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn server_state_counts_classes() {
+        let st = ServerState::default();
+        st.count_status(200);
+        st.count_status(201);
+        st.count_status(404);
+        st.count_status(429);
+        st.count_status(408);
+        st.count_status(500);
+        assert_eq!(st.responses_2xx.load(Ordering::Relaxed), 2);
+        assert_eq!(st.responses_4xx.load(Ordering::Relaxed), 3);
+        assert_eq!(st.responses_5xx.load(Ordering::Relaxed), 1);
+        assert_eq!(st.rejected_busy.load(Ordering::Relaxed), 1);
+        assert_eq!(st.timeouts_408.load(Ordering::Relaxed), 1);
+        let prom = st.prometheus();
+        assert!(prom.contains("specd_http_rejected_busy_total 1"));
+        assert!(prom.contains("specd_requests_total 0"));
+    }
+
+    #[test]
+    fn stats_json_parses() {
+        let s = SpecStats { blocks: 10, drafted: 30, accepted: 20, generated: 23,
+                            draft_calls: 30, target_calls: 10 };
+        let v = Value::parse(&stats_json(&s)).unwrap();
+        assert_eq!(v.get("blocks").as_usize(), Some(10));
+        assert!((v.get("block_efficiency").as_f64().unwrap() - 2.3).abs() < 1e-12);
+    }
+}

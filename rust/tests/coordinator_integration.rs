@@ -48,12 +48,7 @@ fn all_requests_complete_and_match_direct_engine() {
     let reqs: Vec<Request> = examples
         .iter()
         .enumerate()
-        .map(|(i, ex)| Request {
-            id: i as u64,
-            prompt: ex.prompt.clone(),
-            max_new: 16,
-            sampling: cfg,
-        })
+        .map(|(i, ex)| Request::new(i as u64, ex.prompt.clone(), 16, cfg))
         .collect();
     let (responses, metrics) = run_requests(&f, &draft, reqs, 3);
 
@@ -79,12 +74,7 @@ fn respects_max_new_tokens() {
     let f = common::Fixture::load();
     let draft = f.default_draft();
     let ex = &f.suite.take("dolly", 1).unwrap()[0];
-    let reqs = vec![Request {
-        id: 0,
-        prompt: ex.prompt.clone(),
-        max_new: 5,
-        sampling: SamplingConfig::for_task("dolly", 0),
-    }];
+    let reqs = vec![Request::new(0, ex.prompt.clone(), 5, SamplingConfig::for_task("dolly", 0))];
     let (responses, _) = run_requests(&f, &draft, reqs, 1);
     assert!(responses[0].tokens.len() <= 5);
     assert!(responses[0].ttft <= responses[0].latency);
@@ -97,19 +87,65 @@ fn bad_request_reports_error_without_stalling_others() {
     let draft = f.default_draft();
     let good = &f.suite.take("cnndm", 1).unwrap()[0];
     let reqs = vec![
-        Request { id: 0, prompt: Vec::new(), max_new: 8, sampling: SamplingConfig::greedy() },
-        Request {
-            id: 1,
-            prompt: good.prompt.clone(),
-            max_new: 8,
-            sampling: SamplingConfig::greedy(),
-        },
+        Request::new(0, Vec::new(), 8, SamplingConfig::greedy()),
+        Request::new(1, good.prompt.clone(), 8, SamplingConfig::greedy()),
     ];
     let (responses, metrics) = run_requests(&f, &draft, reqs, 2);
     let by_id: BTreeMap<u64, &Response> = responses.iter().map(|r| (r.id, r)).collect();
     assert!(by_id[&0].error.is_some(), "empty prompt must fail");
     assert!(by_id[&1].error.is_none(), "good request must succeed");
     assert_eq!(metrics.total_requests, 1, "failed admissions don't count");
+}
+
+#[test]
+fn streaming_deltas_concatenate_to_final_response() {
+    require_artifacts!();
+    let f = common::Fixture::load();
+    let draft = f.default_draft();
+    let ex = &f.suite.take("xsum", 1).unwrap()[0];
+    let (ev_tx, ev_rx) = exec::bounded::<specd::coordinator::Delta>(16 + 3);
+    let mut req = Request::new(0, ex.prompt.clone(), 16, SamplingConfig::greedy());
+    req.events = Some(ev_tx);
+    let (responses, _) = run_requests(&f, &draft, vec![req], 1);
+    assert!(responses[0].error.is_none());
+
+    let mut streamed: Vec<u32> = Vec::new();
+    let mut started = false;
+    let mut done: Option<Response> = None;
+    while let Some(d) = ev_rx.try_recv() {
+        match d {
+            specd::coordinator::Delta::Started => {
+                assert!(streamed.is_empty() && done.is_none(), "Started must come first");
+                started = true;
+            }
+            specd::coordinator::Delta::Tokens(t) => {
+                assert!(done.is_none(), "tokens after Done");
+                streamed.extend(t);
+            }
+            specd::coordinator::Delta::Done(r) => done = Some(r),
+        }
+    }
+    assert!(started, "admission must emit Started");
+    let done = done.expect("terminal Done delta");
+    assert_eq!(streamed, done.tokens, "streamed deltas must concatenate to the final tokens");
+    assert_eq!(done.tokens, responses[0].tokens);
+}
+
+#[test]
+fn expired_deadline_evicts_with_timeout_error() {
+    require_artifacts!();
+    let f = common::Fixture::load();
+    let draft = f.default_draft();
+    let ex = &f.suite.take("dolly", 1).unwrap()[0];
+    // Deadline already expired at submission: must be rejected at
+    // admission, with the timeout error string the server maps to 408.
+    let mut req = Request::new(0, ex.prompt.clone(), 32, SamplingConfig::greedy());
+    req.deadline = Some(std::time::Duration::from_millis(1));
+    req.submitted = Some(std::time::Instant::now() - std::time::Duration::from_secs(1));
+    let (responses, metrics) = run_requests(&f, &draft, vec![req], 1);
+    assert_eq!(responses[0].error.as_deref(), Some(specd::coordinator::ERR_DEADLINE));
+    assert_eq!(metrics.timeouts, 1);
+    assert_eq!(metrics.total_requests, 0, "timed-out requests don't count as served");
 }
 
 #[test]
@@ -123,11 +159,8 @@ fn many_requests_through_small_batch_terminate() {
     let reqs: Vec<Request> = examples
         .iter()
         .enumerate()
-        .map(|(i, ex)| Request {
-            id: i as u64,
-            prompt: ex.prompt.clone(),
-            max_new: 8,
-            sampling: SamplingConfig::for_task("dolly", i as u64),
+        .map(|(i, ex)| {
+            Request::new(i as u64, ex.prompt.clone(), 8, SamplingConfig::for_task("dolly", i as u64))
         })
         .collect();
     let (responses, metrics) = run_requests(&f, &draft, reqs, 2);

@@ -1,0 +1,562 @@
+//! HTTP serving subsystem, end-to-end against a real listener on an
+//! ephemeral port.
+//!
+//! Most tests drive [`specd::server`] over a *mock scheduler* — a thread
+//! that consumes [`Request`]s from the admission queue and answers over
+//! the per-request delta channels with scripted timing. That exercises the
+//! full HTTP surface (parsing, limits, keep-alive pipelining, streaming,
+//! 429 backpressure, 408 deadlines, graceful drain) with no artifacts.
+//! The final test swaps in the real coordinator (artifact-gated).
+
+mod common;
+
+use std::io::{BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use specd::coordinator::{Delta, Request, Response, ERR_DEADLINE};
+use specd::exec;
+use specd::http;
+use specd::json::Value;
+use specd::server::{Server, ServerConfig};
+use specd::tokenizer::Tokenizer;
+
+// ---------------------------------------------------------------------------
+// Harness
+// ---------------------------------------------------------------------------
+
+fn tiny_tokenizer() -> Arc<Tokenizer> {
+    let v = Value::parse(
+        r#"{
+        "words": ["<pad>", "<bos>", "<eos>", "<user>", "<asst>",
+                  "ba", "do", "ka", "xana", "xbebe"],
+        "topic_ranges": [[5, 7]],
+        "function_range": [7, 8],
+        "template_range": [7, 8],
+        "de_range": [8, 10],
+        "de_to_en": [5, 6],
+        "special": {"pad": 0, "bos": 1, "eos": 2, "user": 3, "asst": 4}
+    }"#,
+    )
+    .unwrap();
+    Arc::new(Tokenizer::from_json(&v).unwrap())
+}
+
+/// Scripted stand-in for the coordinator: echoes each request's prompt
+/// back (clipped to max_new) in blocks of `block` tokens with
+/// `block_delay` before each block, honouring deadlines the way the real
+/// scheduler does. Single-threaded, so queued requests wait — which is
+/// exactly what the 429 test needs.
+fn spawn_mock_scheduler(
+    req_rx: exec::Receiver<Request>,
+    block: usize,
+    block_delay: Duration,
+) -> JoinHandle<usize> {
+    std::thread::spawn(move || {
+        let mut served = 0usize;
+        while let Ok(req) = req_rx.recv() {
+            served += 1;
+            let events = req.events.expect("server always sets events");
+            let _ = events.send(Delta::Started);
+            let enq = req.submitted.unwrap_or_else(Instant::now);
+            let deadline_at = req.deadline.map(|d| enq + d);
+            let out: Vec<u32> = req.prompt.iter().copied().take(req.max_new).collect();
+            let mut sent = 0usize;
+            let mut expired = false;
+            while sent < out.len() {
+                std::thread::sleep(block_delay);
+                if deadline_at.is_some_and(|d| Instant::now() >= d) {
+                    expired = true;
+                    break;
+                }
+                let hi = (sent + block).min(out.len());
+                if events.send(Delta::Tokens(out[sent..hi].to_vec())).is_err() {
+                    break; // client hung up
+                }
+                sent = hi;
+            }
+            let resp = Response {
+                id: req.id,
+                tokens: out[..sent].to_vec(),
+                stats: specd::metrics::SpecStats {
+                    blocks: sent.div_ceil(block.max(1)),
+                    drafted: sent,
+                    accepted: sent,
+                    generated: sent,
+                    draft_calls: sent,
+                    target_calls: sent.div_ceil(block.max(1)),
+                },
+                latency: enq.elapsed().as_secs_f64(),
+                ttft: 0.001,
+                error: expired.then(|| ERR_DEADLINE.to_string()),
+            };
+            let _ = events.send(Delta::Done(resp));
+        }
+        served
+    })
+}
+
+struct Rig {
+    server: Server,
+    scheduler: Option<JoinHandle<usize>>,
+}
+
+impl Rig {
+    /// Server + mock scheduler on an ephemeral port.
+    fn start(
+        queue_depth: usize,
+        block: usize,
+        block_delay: Duration,
+        tweak: impl FnOnce(&mut ServerConfig),
+    ) -> Rig {
+        let (req_tx, req_rx) = exec::bounded::<Request>(queue_depth);
+        let scheduler = spawn_mock_scheduler(req_rx, block, block_delay);
+        let mut cfg = ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            n_workers: 4,
+            ..ServerConfig::default()
+        };
+        tweak(&mut cfg);
+        let server = Server::start(cfg, tiny_tokenizer(), req_tx).unwrap();
+        Rig { server, scheduler: Some(scheduler) }
+    }
+
+    fn fast() -> Rig {
+        Rig::start(16, 2, Duration::from_millis(1), |_| {})
+    }
+
+    fn addr(&self) -> String {
+        self.server.addr().to_string()
+    }
+
+    /// Graceful drain, then the number of requests the mock served.
+    fn stop(mut self) -> usize {
+        self.server.shutdown();
+        self.scheduler.take().unwrap().join().unwrap()
+    }
+}
+
+fn connect(addr: &str) -> TcpStream {
+    let s = TcpStream::connect(addr).unwrap();
+    s.set_nodelay(true).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    s
+}
+
+/// One request over a fresh connection; returns the parsed response.
+fn roundtrip(addr: &str, raw: &str) -> http::HttpResponse {
+    let mut conn = connect(addr);
+    conn.write_all(raw.as_bytes()).unwrap();
+    conn.flush().unwrap();
+    let mut rd = BufReader::new(conn);
+    http::read_response(&mut rd).unwrap()
+}
+
+fn post_generate(addr: &str, body: &str, query: &str) -> http::HttpResponse {
+    roundtrip(
+        addr,
+        &format!(
+            "POST /v1/generate{query} HTTP/1.1\r\nhost: t\r\ncontent-type: application/json\r\n\
+             content-length: {}\r\n\r\n{body}",
+            body.len()
+        ),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// HTTP surface over the mock scheduler
+// ---------------------------------------------------------------------------
+
+#[test]
+fn healthz_and_metrics_respond() {
+    let rig = Rig::fast();
+    let h = roundtrip(&rig.addr(), "GET /healthz HTTP/1.1\r\nhost: t\r\n\r\n");
+    assert_eq!(h.code, 200);
+    assert_eq!(h.body_str(), "ok\n");
+    let m = roundtrip(&rig.addr(), "GET /metrics HTTP/1.1\r\nhost: t\r\n\r\n");
+    assert_eq!(m.code, 200);
+    let text = m.body_str().to_string();
+    assert!(text.contains("specd_requests_total"), "missing family: {text}");
+    assert!(text.contains("# TYPE specd_http_in_flight gauge"));
+    rig.stop();
+}
+
+#[test]
+fn generate_unary_end_to_end() {
+    let rig = Rig::fast();
+    let r = post_generate(&rig.addr(), r#"{"tokens": [5, 6, 7], "max_new": 8}"#, "");
+    assert_eq!(r.code, 200, "body: {}", r.body_str());
+    let v = Value::parse(&r.body_str()).unwrap();
+    let toks: Vec<usize> =
+        v.get("tokens").as_arr().unwrap().iter().map(|t| t.as_usize().unwrap()).collect();
+    assert_eq!(toks, vec![5, 6, 7], "mock echoes the prompt");
+    assert_eq!(v.get("text").as_str(), Some("ba do ka"));
+    assert!(v.get("stats").get("blocks").as_usize().unwrap() >= 1);
+    assert!(v.get("latency_s").as_f64().unwrap() >= 0.0);
+    assert_eq!(v.get("error"), &Value::Null);
+    assert_eq!(rig.stop(), 1);
+}
+
+#[test]
+fn generate_accepts_text_prompt_and_rejects_oov() {
+    let rig = Rig::fast();
+    let ok = post_generate(&rig.addr(), r#"{"prompt": "ba do", "chat": true}"#, "");
+    assert_eq!(ok.code, 200);
+    let v = Value::parse(&ok.body_str()).unwrap();
+    // chat template wraps the prompt: [BOS, USER, ba, do, ASST] echoed back.
+    assert_eq!(v.get("tokens").as_arr().unwrap().len(), 5);
+
+    let bad = post_generate(&rig.addr(), r#"{"prompt": "nonexistent-word"}"#, "");
+    assert_eq!(bad.code, 400);
+    assert!(Value::parse(&bad.body_str()).unwrap().get("error").as_str().is_some());
+    rig.stop();
+}
+
+#[test]
+fn generate_validates_bodies() {
+    let rig = Rig::fast();
+    for (body, why) in [
+        ("{not json", "invalid json"),
+        ("{}", "no prompt or tokens"),
+        (r#"{"tokens": []}"#, "empty prompt"),
+        (r#"{"tokens": "x"}"#, "tokens not array"),
+        (r#"{"tokens": [1], "timeout_ms": 0}"#, "zero timeout"),
+        (r#"{"tokens": [1], "top_p": 7.0}"#, "bad sampling"),
+        (r#"{"tokens": [999]}"#, "token id beyond vocab"),
+    ] {
+        let r = post_generate(&rig.addr(), body, "");
+        assert_eq!(r.code, 400, "{why}: {}", r.body_str());
+    }
+    assert_eq!(rig.stop(), 0, "invalid requests must not reach the scheduler");
+}
+
+#[test]
+fn streaming_chunks_accumulate_to_final() {
+    let rig = Rig::start(16, 2, Duration::from_millis(5), |_| {});
+    let body = r#"{"tokens": [5, 6, 7, 8, 9], "max_new": 5}"#;
+    let mut conn = connect(&rig.addr());
+    write!(
+        conn,
+        "POST /v1/generate?stream=1 HTTP/1.1\r\nhost: t\r\ncontent-type: application/json\r\n\
+         content-length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut rd = BufReader::new(conn);
+    let head = http::read_response_head(&mut rd).unwrap();
+    assert_eq!(head.code, 200);
+    assert!(head.chunked());
+    assert_eq!(head.header("content-type"), Some("text/event-stream"));
+
+    let mut streamed: Vec<usize> = Vec::new();
+    let mut done: Option<Value> = None;
+    let mut chunks = http::ChunkedReader::new(&mut rd);
+    while let Some(chunk) = chunks.next_chunk().unwrap() {
+        let text = String::from_utf8(chunk).unwrap();
+        for event in text.split("\n\n").filter(|e| !e.is_empty()) {
+            let payload = event.strip_prefix("data: ").expect("SSE framing");
+            let v = Value::parse(payload).unwrap();
+            if v.get("done").as_bool() == Some(true) {
+                done = Some(v);
+            } else {
+                assert!(done.is_none(), "tokens after done event");
+                streamed
+                    .extend(v.get("tokens").as_arr().unwrap().iter().map(|t| t.as_usize().unwrap()));
+            }
+        }
+    }
+    let done = done.expect("terminal done event");
+    assert_eq!(streamed, vec![5, 6, 7, 8, 9]);
+    assert_eq!(done.get("tokens_total").as_usize(), Some(5));
+    assert_eq!(done.get("error"), &Value::Null);
+    assert!(done.get("stats").get("blocks").as_usize().unwrap() >= 2, "multiple blocks streamed");
+    rig.stop();
+}
+
+#[test]
+fn malformed_request_lines_get_400() {
+    let rig = Rig::fast();
+    for raw in [
+        "GARBAGE\r\n\r\n",
+        "GET\r\n\r\n",
+        "GET / HTTP/2.0\r\n\r\n",
+        "POST /v1/generate HTTP/1.1\r\ncontent-length: nope\r\n\r\n",
+    ] {
+        let r = roundtrip(&rig.addr(), raw);
+        assert_eq!(r.code, 400, "accepted: {raw:?}");
+    }
+    rig.stop();
+}
+
+#[test]
+fn oversized_bodies_get_413_and_long_headers_431() {
+    let rig = Rig::start(16, 2, Duration::from_millis(1), |cfg| {
+        cfg.limits.max_body = 64;
+    });
+    let big = "x".repeat(65);
+    let r = roundtrip(
+        &rig.addr(),
+        &format!(
+            "POST /v1/generate HTTP/1.1\r\nhost: t\r\ncontent-length: {}\r\n\r\n{big}",
+            big.len()
+        ),
+    );
+    assert_eq!(r.code, 413);
+
+    let r = roundtrip(
+        &rig.addr(),
+        &format!("GET /healthz HTTP/1.1\r\nhost: t\r\nx-long: {}\r\n\r\n", "y".repeat(20_000)),
+    );
+    assert_eq!(r.code, 431);
+    rig.stop();
+}
+
+#[test]
+fn expect_100_continue_clients_work() {
+    // curl-style: headers first, body only after the interim response.
+    let rig = Rig::fast();
+    let body = r#"{"tokens": [5, 6], "max_new": 4}"#;
+    let mut conn = connect(&rig.addr());
+    write!(
+        conn,
+        "POST /v1/generate HTTP/1.1\r\nhost: t\r\nexpect: 100-continue\r\n\
+         content-length: {}\r\n\r\n",
+        body.len()
+    )
+    .unwrap();
+    conn.flush().unwrap();
+    let mut rd = BufReader::new(conn.try_clone().unwrap());
+    let interim = http::read_response_head(&mut rd).unwrap();
+    assert_eq!(interim.code, 100);
+    conn.write_all(body.as_bytes()).unwrap();
+    conn.flush().unwrap();
+    let resp = http::read_response(&mut rd).unwrap();
+    assert_eq!(resp.code, 200, "body: {}", resp.body_str());
+    rig.stop();
+}
+
+#[test]
+fn streaming_refused_for_http10_clients() {
+    let rig = Rig::fast();
+    let body = r#"{"tokens": [5], "stream": true}"#;
+    let r = roundtrip(
+        &rig.addr(),
+        &format!(
+            "POST /v1/generate HTTP/1.0\r\nhost: t\r\ncontent-length: {}\r\n\r\n{body}",
+            body.len()
+        ),
+    );
+    assert_eq!(r.code, 400);
+    assert!(r.body_str().contains("HTTP/1.1"));
+    assert_eq!(rig.stop(), 0);
+}
+
+#[test]
+fn unknown_paths_and_methods_rejected() {
+    let rig = Rig::fast();
+    assert_eq!(roundtrip(&rig.addr(), "GET /nope HTTP/1.1\r\n\r\n").code, 404);
+    assert_eq!(roundtrip(&rig.addr(), "DELETE /healthz HTTP/1.1\r\n\r\n").code, 405);
+    assert_eq!(roundtrip(&rig.addr(), "GET /v1/generate HTTP/1.1\r\n\r\n").code, 405);
+    rig.stop();
+}
+
+#[test]
+fn pipelined_keepalive_requests_answered_in_order() {
+    let rig = Rig::fast();
+    let b1 = r#"{"tokens": [5], "max_new": 4}"#;
+    let b2 = r#"{"tokens": [6, 7], "max_new": 4}"#;
+    let mut conn = connect(&rig.addr());
+    // Two requests written back-to-back before reading anything.
+    write!(
+        conn,
+        "POST /v1/generate HTTP/1.1\r\nhost: t\r\ncontent-length: {}\r\n\r\n{b1}\
+         POST /v1/generate HTTP/1.1\r\nhost: t\r\ncontent-length: {}\r\n\r\n{b2}",
+        b1.len(),
+        b2.len()
+    )
+    .unwrap();
+    conn.flush().unwrap();
+    let mut rd = BufReader::new(conn);
+    let r1 = http::read_response(&mut rd).unwrap();
+    let r2 = http::read_response(&mut rd).unwrap();
+    assert_eq!((r1.code, r2.code), (200, 200));
+    let t1 = Value::parse(&r1.body_str()).unwrap();
+    let t2 = Value::parse(&r2.body_str()).unwrap();
+    assert_eq!(t1.get("tokens").as_arr().unwrap().len(), 1);
+    assert_eq!(t2.get("tokens").as_arr().unwrap().len(), 2);
+    assert_eq!(rig.stop(), 2);
+}
+
+#[test]
+fn queue_full_returns_429_with_retry_after() {
+    // Admission queue of 1 + slow single-threaded mock: request A is being
+    // served, B fills the queue, C must bounce with 429.
+    let rig = Rig::start(1, 1, Duration::from_millis(150), |_| {});
+    let addr = rig.addr();
+    let slow_body = r#"{"tokens": [5, 6, 7, 8], "max_new": 4}"#;
+    let a = {
+        let addr = addr.clone();
+        std::thread::spawn(move || post_generate(&addr, slow_body, "").code)
+    };
+    std::thread::sleep(Duration::from_millis(100)); // A admitted by the mock
+    let b = {
+        let addr = addr.clone();
+        std::thread::spawn(move || post_generate(&addr, slow_body, "").code)
+    };
+    std::thread::sleep(Duration::from_millis(100)); // B parked in the queue
+    let c = post_generate(&addr, slow_body, "");
+    assert_eq!(c.code, 429, "body: {}", c.body_str());
+    assert_eq!(c.header("retry-after"), Some("1"));
+    assert!(Value::parse(&c.body_str()).unwrap().get("error").as_str().unwrap().contains("busy"));
+    assert_eq!(a.join().unwrap(), 200);
+    assert_eq!(b.join().unwrap(), 200);
+    assert_eq!(rig.stop(), 2, "the 429'd request never reached the scheduler");
+}
+
+#[test]
+fn expired_deadline_maps_to_408() {
+    let rig = Rig::start(4, 1, Duration::from_millis(120), |_| {});
+    let r = post_generate(&rig.addr(), r#"{"tokens": [5, 6, 7], "timeout_ms": 40}"#, "");
+    assert_eq!(r.code, 408, "body: {}", r.body_str());
+    let v = Value::parse(&r.body_str()).unwrap();
+    assert_eq!(v.get("error").as_str(), Some(ERR_DEADLINE));
+    rig.stop();
+}
+
+#[test]
+fn sixteen_concurrent_clients_smoke() {
+    let rig = Rig::start(64, 2, Duration::from_millis(1), |cfg| cfg.n_workers = 16);
+    let addr = rig.addr();
+    let handles: Vec<_> = (0..16)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                // Two sequential requests per client over one keep-alive
+                // connection; distinct prompt lengths per client.
+                let n = (i % 4) + 1;
+                let tokens: Vec<String> = (0..n).map(|j| ((5 + j % 5) as u32).to_string()).collect();
+                let body = format!("{{\"tokens\": [{}], \"max_new\": 8}}", tokens.join(","));
+                let mut conn = connect(&addr);
+                let mut rd = BufReader::new(conn.try_clone().unwrap());
+                for _ in 0..2 {
+                    write!(
+                        conn,
+                        "POST /v1/generate HTTP/1.1\r\nhost: t\r\ncontent-length: {}\r\n\r\n{body}",
+                        body.len()
+                    )
+                    .unwrap();
+                    conn.flush().unwrap();
+                    let resp = http::read_response(&mut rd).unwrap();
+                    assert_eq!(resp.code, 200, "client {i}: {}", resp.body_str());
+                    let v = Value::parse(&resp.body_str()).unwrap();
+                    assert_eq!(v.get("tokens").as_arr().unwrap().len(), n, "client {i} echo");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    // Live aggregate observed the full fleet.
+    let m = roundtrip(&addr, "GET /metrics HTTP/1.1\r\nhost: t\r\n\r\n");
+    let text = m.body_str().to_string();
+    assert!(text.contains("specd_requests_total 32"), "metrics:\n{text}");
+    assert_eq!(rig.stop(), 32);
+}
+
+#[test]
+fn graceful_shutdown_finishes_in_flight_requests() {
+    let rig = Rig::start(4, 1, Duration::from_millis(50), |_| {});
+    let addr = rig.addr();
+    let inflight = std::thread::spawn(move || {
+        post_generate(&addr, r#"{"tokens": [5, 6, 7, 8], "max_new": 4}"#, "").code
+    });
+    std::thread::sleep(Duration::from_millis(60)); // request is mid-decode
+    let served = rig.stop(); // blocks until drain completes
+    assert_eq!(inflight.join().unwrap(), 200, "in-flight request must finish during drain");
+    assert_eq!(served, 1);
+}
+
+// ---------------------------------------------------------------------------
+// Full stack: real coordinator + artifacts (gated)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn full_stack_generate_and_stream_with_artifacts() {
+    require_artifacts!();
+    use specd::config::RunConfig;
+    use specd::coordinator::Coordinator;
+    use specd::spec::SpecDecoder;
+    use specd::workload::EvalSuite;
+
+    let (req_tx, req_rx) = exec::bounded::<Request>(8);
+    let (resp_tx, resp_rx) = exec::bounded::<Response>(64);
+    let drainer = std::thread::spawn(move || while resp_rx.recv().is_ok() {});
+    // The scheduler thread owns all PJRT state (not Send).
+    let scheduler = std::thread::spawn(move || {
+        let f = common::Fixture::load();
+        let draft = f.default_draft();
+        let decoder = SpecDecoder::new(&draft, &f.target, 3).unwrap();
+        let coord = Coordinator::new(decoder, RunConfig::default()).unwrap();
+        coord.serve(req_rx, resp_tx).unwrap()
+    });
+
+    let dir = std::path::PathBuf::from(common::artifacts_dir());
+    let tokenizer = Arc::new(Tokenizer::load(&dir.join("vocab.json")).unwrap());
+    let suite = EvalSuite::load(&dir.join("eval_prompts.json")).unwrap();
+    let prompt = suite.take("xsum", 1).unwrap()[0].prompt.clone();
+    let toks: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+    let body = format!("{{\"tokens\": [{}], \"max_new\": 12}}", toks.join(","));
+
+    let cfg = ServerConfig { addr: "127.0.0.1:0".to_string(), ..ServerConfig::default() };
+    let server = Server::start(cfg, tokenizer, req_tx).unwrap();
+    let addr = server.addr().to_string();
+
+    // Unary.
+    let r = post_generate(&addr, &body, "");
+    assert_eq!(r.code, 200, "body: {}", r.body_str());
+    let v = Value::parse(&r.body_str()).unwrap();
+    let unary_tokens: Vec<usize> =
+        v.get("tokens").as_arr().unwrap().iter().map(|t| t.as_usize().unwrap()).collect();
+    assert!(!unary_tokens.is_empty());
+    assert!(v.get("stats").get("blocks").as_usize().unwrap() >= 1);
+    assert!(v.get("text").as_str().is_some());
+
+    // Streaming of the same prompt: greedy decode, so the streamed tokens
+    // must equal the unary result.
+    let mut conn = connect(&addr);
+    write!(
+        conn,
+        "POST /v1/generate?stream=1 HTTP/1.1\r\nhost: t\r\ncontent-length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut rd = BufReader::new(conn);
+    let head = http::read_response_head(&mut rd).unwrap();
+    assert!(head.chunked());
+    let mut streamed: Vec<usize> = Vec::new();
+    let mut saw_done = false;
+    let mut chunks = http::ChunkedReader::new(&mut rd);
+    while let Some(chunk) = chunks.next_chunk().unwrap() {
+        let text = String::from_utf8(chunk).unwrap();
+        for event in text.split("\n\n").filter(|e| !e.is_empty()) {
+            let v = Value::parse(event.strip_prefix("data: ").unwrap()).unwrap();
+            if v.get("done").as_bool() == Some(true) {
+                saw_done = true;
+                assert_eq!(v.get("error"), &Value::Null);
+            } else {
+                streamed
+                    .extend(v.get("tokens").as_arr().unwrap().iter().map(|t| t.as_usize().unwrap()));
+            }
+        }
+    }
+    assert!(saw_done);
+    assert_eq!(streamed, unary_tokens, "streaming must not change greedy output");
+
+    drop(server); // graceful drain closes the admission queue
+    let metrics = scheduler.join().unwrap();
+    assert_eq!(metrics.total_requests, 2);
+    drainer.join().unwrap();
+}

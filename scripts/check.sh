@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Tier-1 verification in one command: build, tests, formatting.
+#
+#   scripts/check.sh            # everything
+#   scripts/check.sh --no-fmt   # skip the formatting gate
+#
+# The integration tests that need compiled artifacts skip themselves when
+# the bundle is absent (run `make artifacts` first for full coverage).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+run_fmt=1
+[[ "${1:-}" == "--no-fmt" ]] && run_fmt=0
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if [[ "$run_fmt" == 1 ]]; then
+    echo "== cargo fmt --check =="
+    cargo fmt --check
+fi
+
+echo "tier-1: OK"
