@@ -7,13 +7,16 @@
 //!
 //! ```sh
 //! # terminal 1
-//! cargo run --release -- serve --addr 127.0.0.1:8080 --max-batch 4
+//! cargo run --release -- serve --addr 127.0.0.1:8080 --max-slots 4
 //! # terminal 2
 //! cargo run --release --example http_load -- \
 //!     --addr 127.0.0.1:8080 --requests 64 --rate 4.0 --stream
 //! ```
 //!
-//! The numbers from this binary are recorded in EXPERIMENTS.md.
+//! After the run the server's `/metrics` is scraped and the scheduler
+//! families (slot-pool occupancy, per-phase timing) are echoed, so one
+//! invocation captures both client- and server-side views. The numbers
+//! from this binary are recorded in EXPERIMENTS.md.
 
 use std::io::{BufReader, Write};
 use std::net::TcpStream;
@@ -154,7 +157,34 @@ fn main() -> specd::Result<()> {
             println!("ttft (streamed): p50={:.0}ms p90={:.0}ms", tt.p50 * 1e3, tt.p90 * 1e3);
         }
     }
+
+    // Server-side view: scheduler pool occupancy + per-phase timing.
+    match scrape_metrics(&addr) {
+        Some(text) => {
+            println!("server /metrics (scheduler + phase families):");
+            // Only the `specd_sched_*` families are live scheduler-side
+            // state; the coordinator's own aggregate families surface at
+            // shutdown, not on the serving endpoint.
+            for line in
+                text.lines().filter(|l| !l.starts_with('#') && l.starts_with("specd_sched_"))
+            {
+                println!("  {line}");
+            }
+        }
+        None => println!("server /metrics scrape failed (server gone?)"),
+    }
     Ok(())
+}
+
+/// GET /metrics on a fresh connection; None on any failure.
+fn scrape_metrics(addr: &str) -> Option<String> {
+    let mut conn = TcpStream::connect(addr).ok()?;
+    conn.set_read_timeout(Some(Duration::from_secs(10))).ok();
+    write!(conn, "GET /metrics HTTP/1.1\r\nhost: {addr}\r\nconnection: close\r\n\r\n").ok()?;
+    conn.flush().ok()?;
+    let mut rd = BufReader::new(conn);
+    let resp = http::read_response(&mut rd).ok()?;
+    (resp.code == 200).then(|| resp.body_str().to_string())
 }
 
 /// One request on a fresh connection; returns None on transport failure.

@@ -5,7 +5,7 @@
 //!
 //! ```sh
 //! cargo run --release --example serve_benchmark -- \
-//!     --requests 32 --rate 2.0 --max-batch 4 --gamma 3
+//!     --requests 32 --rate 2.0 --max-slots 4 --gamma 3
 //! ```
 //!
 //! The numbers from this binary are recorded in EXPERIMENTS.md.
@@ -31,7 +31,8 @@ fn main() -> specd::Result<()> {
         .opt("gamma", "3", "speculation depth")
         .opt("requests", "32", "number of requests")
         .opt("rate", "2.0", "Poisson arrival rate, req/s")
-        .opt("max-batch", "4", "max concurrent sequences")
+        .opt("max-slots", "4", "KV slot pool size (resident sequences)")
+        .alias("max-batch", "max-slots")
         .opt("max-new", "32", "max new tokens per request")
         .opt("seed", "0", "trace seed")
         .opt("mix", "chat", "workload mix: chat (dolly-only) | paper (dolly/cnndm/xsum)")
@@ -83,7 +84,7 @@ fn main() -> specd::Result<()> {
     let decoder = SpecDecoder::new(&draft, &target, gamma)?;
     let cfg = RunConfig {
         gamma,
-        max_batch: args.usize("max-batch")?,
+        max_slots: args.usize("max-slots")?,
         max_new_tokens: trace_cfg.max_new,
         ..RunConfig::default()
     };

@@ -22,6 +22,7 @@ pub struct Args {
     program: &'static str,
     about: &'static str,
     specs: Vec<Spec>,
+    aliases: BTreeMap<&'static str, &'static str>,
     values: BTreeMap<&'static str, String>,
     flags: BTreeMap<&'static str, bool>,
     positional: Vec<String>,
@@ -33,10 +34,19 @@ impl Args {
             program,
             about,
             specs: Vec::new(),
+            aliases: BTreeMap::new(),
             values: BTreeMap::new(),
             flags: BTreeMap::new(),
             positional: Vec::new(),
         }
+    }
+
+    /// Accept `--from` as another spelling of `--to` (renamed options keep
+    /// working for existing scripts). The target spec must be declared.
+    pub fn alias(mut self, from: &'static str, to: &'static str) -> Self {
+        debug_assert!(self.specs.iter().any(|s| s.name == to), "alias target --{to} undeclared");
+        self.aliases.insert(from, to);
+        self
     }
 
     /// `--name <value>` with a default.
@@ -102,6 +112,7 @@ impl Args {
                     Some((n, v)) => (n, Some(v.to_string())),
                     None => (stripped, None),
                 };
+                let name: &str = self.aliases.get(name).copied().unwrap_or(name);
                 let spec = self
                     .specs
                     .iter()
@@ -244,6 +255,23 @@ mod tests {
     fn unknown_option_rejected() {
         let r = Args::new("t", "test").parse_from(&argv(&["--nope"]));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn aliases_resolve_to_target_spec() {
+        let p = Args::new("t", "test")
+            .opt("max-slots", "4", "pool size")
+            .alias("max-batch", "max-slots")
+            .parse_from(&argv(&["--max-batch", "8"]))
+            .unwrap();
+        assert_eq!(p.usize("max-slots").unwrap(), 8);
+        // Equals syntax goes through the same resolution.
+        let p = Args::new("t", "test")
+            .opt("max-slots", "4", "pool size")
+            .alias("max-batch", "max-slots")
+            .parse_from(&argv(&["--max-batch=2"]))
+            .unwrap();
+        assert_eq!(p.usize("max-slots").unwrap(), 2);
     }
 
     #[test]

@@ -52,8 +52,10 @@ pub struct RunConfig {
     /// Max new tokens per request.
     pub max_new_tokens: usize,
     pub sampling: SamplingConfig,
-    /// Scheduler: max sequences resident at once.
-    pub max_batch: usize,
+    /// Scheduler: KV slot-pool capacity — the number of sequences resident
+    /// at once, i.e. the serving memory budget
+    /// ([`crate::kvcache::SlotPool`] is the sole admission gate).
+    pub max_slots: usize,
     /// Scheduler: bounded admission queue length (backpressure).
     pub queue_depth: usize,
 }
@@ -67,7 +69,7 @@ impl Default for RunConfig {
             gamma: 3,
             max_new_tokens: 48,
             sampling: SamplingConfig::greedy(),
-            max_batch: 4,
+            max_slots: 4,
             queue_depth: 64,
         }
     }
@@ -81,8 +83,8 @@ impl RunConfig {
                 self.gamma
             )));
         }
-        if self.max_batch == 0 {
-            return Err(Error::msg("max_batch must be >= 1"));
+        if self.max_slots == 0 {
+            return Err(Error::msg("max_slots must be >= 1"));
         }
         if self.max_new_tokens == 0 {
             return Err(Error::msg("max_new_tokens must be >= 1"));
@@ -114,7 +116,13 @@ impl RunConfig {
                 top_p: v.get("top_p").as_f64().unwrap_or(1.0) as f32,
                 seed: v.get("seed").as_i64().unwrap_or(0) as u64,
             },
-            max_batch: v.get("max_batch").as_usize().unwrap_or(d.max_batch),
+            // "max_batch" is the pre-slot-pool name; still accepted so
+            // existing deployment configs keep working.
+            max_slots: v
+                .get("max_slots")
+                .as_usize()
+                .or_else(|| v.get("max_batch").as_usize())
+                .unwrap_or(d.max_slots),
             queue_depth: v.get("queue_depth").as_usize().unwrap_or(d.queue_depth),
         };
         cfg.validate()?;
@@ -167,5 +175,25 @@ mod tests {
         assert_eq!(c.gamma, 5);
         assert_eq!(c.draft_model, "draft_base");
         assert!((c.sampling.temperature - 0.6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_max_slots_rejected() {
+        let mut c = RunConfig::default();
+        c.max_slots = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn from_json_max_slots_with_legacy_alias() {
+        let c = RunConfig::from_json(&Value::parse(r#"{"max_slots": 8}"#).unwrap()).unwrap();
+        assert_eq!(c.max_slots, 8);
+        // Pre-slot-pool configs used "max_batch"; still honoured.
+        let c = RunConfig::from_json(&Value::parse(r#"{"max_batch": 2}"#).unwrap()).unwrap();
+        assert_eq!(c.max_slots, 2);
+        // The new name wins when both are present.
+        let c = RunConfig::from_json(&Value::parse(r#"{"max_slots": 3, "max_batch": 9}"#).unwrap())
+            .unwrap();
+        assert_eq!(c.max_slots, 3);
     }
 }

@@ -1,16 +1,20 @@
-//! The serving coordinator: request queue, admission control, continuous
-//! (iteration-level) batching and the scheduler loop.
+//! The serving coordinator: request queue, slot-pool admission control and
+//! the batch-stepped scheduler loop.
 //!
 //! Architecture (vLLM-router-style, adapted to a single-device CPU PJRT
 //! backend whose executables are single-sequence):
 //!
 //! ```text
 //!   clients ──bounded channel (backpressure)──▶ scheduler thread
-//!                                              │ admit while slots free
-//!                                              │ round-robin: one SD block
-//!                                              │ per active sequence per
-//!                                              │ iteration (continuous
-//!                                              │ batching at block level)
+//!                                              │ admit while the KV SlotPool
+//!                                              │ has free slots (max_slots =
+//!                                              │ the memory budget; exhausted
+//!                                              │ pool defers, never errors)
+//!                                              ▼
+//!                                   one BatchStep per iteration:
+//!                                     draft-sync sweep   (all lanes)
+//!                                     proposal round j   (all lanes, j<γ)
+//!                                     verify sweep       (all lanes)
 //!                                              ▼
 //!                                      responses channel ──▶ clients
 //!                                      per-request delta channel ──▶ HTTP
@@ -19,27 +23,39 @@
 //!
 //! PJRT handles are not `Send`, so the scheduler owns all model state on
 //! one thread; concurrency with clients happens through the channels from
-//! [`crate::exec`]. Iteration-level interleaving bounds head-of-line
-//! blocking at one speculation block (γ+1 tokens) rather than one request.
+//! [`crate::exec`]. Phase-lockstep batching ([`crate::batch::BatchStep`])
+//! bounds head-of-line blocking at one speculation block per sequence per
+//! iteration and dispatches each phase's executable in one tight loop.
+//!
+//! Admission: [`crate::kvcache::SlotPool`] is the sole capacity gate. A
+//! request is admitted exactly when a slot can be allocated; each slot
+//! mirrors its sequence's length so `/metrics` can report resident KV
+//! positions. When the pool is exhausted, queued requests wait (the
+//! bounded channel provides backpressure further upstream).
 //!
 //! Streaming: a request may carry an `events` sender; the scheduler pushes
 //! [`Delta::Started`] at admission, a [`Delta::Tokens`] after every
 //! speculation block and a terminal [`Delta::Done`] mirroring the final
-//! [`Response`]. When the receiving side hangs up (HTTP client
-//! disconnect) the sequence is cancelled and its slot freed immediately.
+//! [`Response`]. The events channel is probed every iteration — a client
+//! that hangs up is cancelled and frees its slot even when no tokens are
+//! flowing toward it (exhausted `max_new` budget, capacity-finished
+//! sequence), not just when the next delta send fails.
 //!
 //! Deadlines: a request may carry a wall-clock `deadline` measured from
 //! `submitted` (or admission when unset). Expired sequences are evicted
 //! with [`ERR_DEADLINE`] in `Response::error`, which the HTTP server maps
 //! to `408 Request Timeout`.
 
-use std::collections::VecDeque;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::batch::{BatchStep, Lane, LaneOutcome};
 use crate::config::{RunConfig, SamplingConfig};
 use crate::error::Result;
 use crate::exec::{Receiver, Sender};
-use crate::metrics::ServeMetrics;
+use crate::kvcache::{SlotId, SlotPool};
+use crate::metrics::{SchedulerGauges, ServeMetrics};
 use crate::rng::Pcg64;
 use crate::spec::{SpecDecoder, SpecSession};
 
@@ -77,7 +93,7 @@ impl Request {
 /// Incremental output event for one request (streaming mode).
 #[derive(Debug, Clone)]
 pub enum Delta {
-    /// The request left the admission queue and owns a batch slot. Lets
+    /// The request left the admission queue and owns a pool slot. Lets
     /// the HTTP layer distinguish a healthy-but-deep queue (no events
     /// yet) from a post-admission scheduler stall.
     Started,
@@ -95,10 +111,14 @@ pub struct Response {
     pub id: u64,
     /// Generated tokens (prompt excluded), truncated to max_new.
     pub tokens: Vec<u32>,
+    /// Engine counters, clipped to the delivered token count (so block
+    /// efficiency describes what the client received).
     pub stats: crate::metrics::SpecStats,
     /// Queue + decode latency, seconds.
     pub latency: f64,
-    /// Time to first emitted token, seconds.
+    /// Time to first emitted token, seconds. Equals `latency` when the
+    /// request terminated (deadline, error, cancel) before emitting
+    /// anything — never 0.0, which would poison windowed percentiles.
     pub ttft: f64,
     /// Error message when generation failed.
     pub error: Option<String>,
@@ -111,18 +131,25 @@ struct Active {
     max_new: usize,
     rng: Pcg64,
     enqueued: Instant,
-    started: Instant,
     first_token: Option<f64>,
     /// Absolute eviction deadline, when the request carries one.
     deadline_at: Option<Instant>,
     events: Option<Sender<Delta>>,
     /// Tokens already pushed through `events` (max_new clipping).
     streamed: usize,
+    /// The KV pool slot this sequence occupies (freed on every exit path).
+    slot: SlotId,
 }
 
 impl Active {
     fn expired(&self) -> bool {
         self.deadline_at.is_some_and(|d| Instant::now() >= d)
+    }
+
+    /// A streaming client whose receiver hung up. Probed every iteration:
+    /// detection must not depend on a token send happening to fail.
+    fn disconnected(&self) -> bool {
+        self.events.as_ref().is_some_and(|ev| !ev.is_connected())
     }
 }
 
@@ -130,25 +157,40 @@ impl Active {
 pub struct Coordinator<'a> {
     decoder: SpecDecoder<'a>,
     cfg: RunConfig,
+    gauges: Option<Arc<SchedulerGauges>>,
 }
 
 impl<'a> Coordinator<'a> {
     pub fn new(decoder: SpecDecoder<'a>, cfg: RunConfig) -> Result<Self> {
         cfg.validate()?;
-        Ok(Coordinator { decoder, cfg })
+        Ok(Coordinator { decoder, cfg, gauges: None })
+    }
+
+    /// Attach live gauges (shared with the HTTP `/metrics` handler).
+    pub fn with_gauges(mut self, gauges: Arc<SchedulerGauges>) -> Self {
+        self.gauges = Some(gauges);
+        self
     }
 
     /// Serve until the request channel closes and all work drains.
     /// Returns aggregate metrics.
     pub fn serve(&self, rx: Receiver<Request>, tx: Sender<Response>) -> Result<ServeMetrics> {
         let mut metrics = ServeMetrics::default();
-        let mut active: VecDeque<Active> = VecDeque::new();
+        // Slot capacity: the sequence mirror can exceed the processed
+        // positions by exactly one — the final bonus token is appended to
+        // the sequence but never reprocessed.
+        let slot_cap = self.decoder.target.max_seq() + 1;
+        let mut pool: SlotPool<u64> = SlotPool::new(self.cfg.max_slots);
+        if let Some(g) = &self.gauges {
+            g.pool_max.store(pool.max_slots(), Ordering::Relaxed);
+        }
+        let mut active: Vec<Active> = Vec::new();
         let mut rx_open = true;
         let wall0 = Instant::now();
 
         loop {
-            // --- admission: fill free slots ------------------------------
-            while rx_open && active.len() < self.cfg.max_batch {
+            // --- admission: allocate pool slots to queued requests -------
+            while rx_open && pool.available() > 0 {
                 let req = if active.is_empty() {
                     // Idle: block for work (or shutdown).
                     match rx.recv() {
@@ -167,49 +209,83 @@ impl<'a> Coordinator<'a> {
                 // Expired while queued: reject without spending a prefill.
                 if deadline_at.is_some_and(|d| Instant::now() >= d) {
                     metrics.timeouts += 1;
-                    Self::emit_error(
+                    let latency = enqueued.elapsed().as_secs_f64();
+                    Self::emit(
                         &tx,
                         &req.events,
-                        req.id,
-                        Vec::new(),
-                        Default::default(),
-                        enqueued.elapsed().as_secs_f64(),
-                        0.0,
-                        ERR_DEADLINE,
+                        Response {
+                            id: req.id,
+                            tokens: Vec::new(),
+                            stats: Default::default(),
+                            latency,
+                            ttft: latency,
+                            error: Some(ERR_DEADLINE.to_string()),
+                        },
                     );
+                    continue;
+                }
+                // Hung up while queued: cancel before spending the prefill
+                // (the most expensive per-request call) or a pool slot.
+                if req.events.as_ref().is_some_and(|ev| !ev.is_connected()) {
+                    metrics.cancelled += 1;
+                    let latency = enqueued.elapsed().as_secs_f64();
+                    let _ = tx.send(Response {
+                        id: req.id,
+                        tokens: Vec::new(),
+                        stats: Default::default(),
+                        latency,
+                        ttft: latency,
+                        error: Some(ERR_DISCONNECT.to_string()),
+                    });
                     continue;
                 }
                 if let Some(ev) = &req.events {
                     let _ = ev.send(Delta::Started);
                 }
                 match self.decoder.start(&req.prompt) {
-                    Ok(session) => active.push_back(Active {
-                        id: req.id,
-                        session,
-                        sampling: req.sampling,
-                        // Engine-side ceiling: the configured budget bounds
-                        // every admitted request (the HTTP edge clamps too).
-                        max_new: req.max_new.min(self.cfg.max_new_tokens),
-                        rng: Pcg64::with_stream(req.sampling.seed ^ req.id, 0x5e0e),
-                        enqueued,
-                        started: Instant::now(),
-                        first_token: None,
-                        deadline_at,
-                        events: req.events,
-                        streamed: 0,
-                    }),
+                    Ok(session) => {
+                        let slot = pool.alloc(req.id, slot_cap)?;
+                        pool.get_mut(slot)?.advance(session.prompt_len)?;
+                        active.push(Active {
+                            id: req.id,
+                            session,
+                            sampling: req.sampling,
+                            // Engine-side ceiling: the configured budget
+                            // bounds every admitted request (the HTTP edge
+                            // clamps too).
+                            max_new: req.max_new.min(self.cfg.max_new_tokens),
+                            rng: Pcg64::with_stream(req.sampling.seed ^ req.id, 0x5e0e),
+                            enqueued,
+                            first_token: None,
+                            deadline_at,
+                            events: req.events,
+                            streamed: 0,
+                            slot,
+                        });
+                    }
                     Err(e) => {
-                        Self::emit_error(
+                        Self::emit(
                             &tx,
                             &req.events,
-                            req.id,
-                            Vec::new(),
-                            Default::default(),
-                            0.0,
-                            0.0,
-                            &e.to_string(),
+                            Response {
+                                id: req.id,
+                                tokens: Vec::new(),
+                                stats: Default::default(),
+                                latency: enqueued.elapsed().as_secs_f64(),
+                                ttft: enqueued.elapsed().as_secs_f64(),
+                                error: Some(e.to_string()),
+                            },
                         );
                     }
+                }
+            }
+            // Pool exhausted with work still queued: defer admission until
+            // a slot frees (the bounded request channel pushes back
+            // further upstream) — never an error.
+            if rx_open && pool.available() == 0 && !rx.is_empty() {
+                metrics.admission_deferrals += 1;
+                if let Some(g) = &self.gauges {
+                    g.record_deferral();
                 }
             }
 
@@ -220,142 +296,149 @@ impl<'a> Coordinator<'a> {
                 continue;
             }
 
-            // --- one scheduling iteration: one block per active sequence --
-            let mut still_active = VecDeque::with_capacity(active.len());
-            while let Some(mut a) = active.pop_front() {
-                // Deadline eviction: free the slot, report partial output.
+            // --- eviction sweep: deadlines + disconnected clients --------
+            let mut survivors = Vec::with_capacity(active.len());
+            for a in active.drain(..) {
                 if a.expired() {
                     metrics.timeouts += 1;
-                    let mut tokens = a.session.generated().to_vec();
-                    tokens.truncate(a.max_new);
-                    Self::emit_error(
+                    pool.free(a.slot)?;
+                    Self::emit(
                         &tx,
                         &a.events,
-                        a.id,
-                        tokens,
-                        a.session.stats,
-                        a.enqueued.elapsed().as_secs_f64(),
-                        a.first_token.unwrap_or(0.0),
-                        ERR_DEADLINE,
+                        Self::terminal_response(&a, Some(ERR_DEADLINE.to_string())),
                     );
-                    continue;
+                } else if a.disconnected() {
+                    metrics.cancelled += 1;
+                    pool.free(a.slot)?;
+                    // The delta receiver is gone; only the shared response
+                    // channel observes the cancellation.
+                    let _ = tx.send(Self::terminal_response(&a, Some(ERR_DISCONNECT.to_string())));
+                } else {
+                    survivors.push(a);
                 }
-                let step = self.decoder.step(&mut a.session, &a.sampling, &mut a.rng);
-                match step {
-                    Ok(emitted) => {
-                        if !emitted.is_empty() && a.first_token.is_none() {
+            }
+            active = survivors;
+            if active.is_empty() {
+                continue;
+            }
+
+            // --- one scheduling iteration: a lockstep batch step ---------
+            let (outcomes, timings) = {
+                let mut lanes: Vec<Lane<'_>> = active
+                    .iter_mut()
+                    .map(|a| Lane {
+                        session: &mut a.session,
+                        sampling: a.sampling,
+                        rng: &mut a.rng,
+                    })
+                    .collect();
+                BatchStep::run(&self.decoder, &mut lanes)
+            };
+            metrics.batch_iterations += 1;
+            metrics.phase_draft_sync_seconds += timings.draft_sync;
+            metrics.phase_propose_seconds += timings.propose;
+            metrics.phase_verify_seconds += timings.verify;
+
+            let mut survivors = Vec::with_capacity(active.len());
+            for (mut a, outcome) in active.drain(..).zip(outcomes) {
+                match outcome {
+                    LaneOutcome::Emitted(emitted) => {
+                        pool.get_mut(a.slot)?.advance(emitted.len())?;
+                        if a.first_token.is_none() {
                             a.first_token = Some(a.enqueued.elapsed().as_secs_f64());
                         }
                         // Stream the block's tokens, clipped to max_new.
+                        let mut hung_up = false;
                         if let Some(ev) = &a.events {
                             let budget = a.max_new.saturating_sub(a.streamed);
                             let clip = emitted.len().min(budget);
-                            if clip > 0 && ev.send(Delta::Tokens(emitted[..clip].to_vec())).is_err()
-                            {
-                                // Client hung up: cancel, free the slot.
-                                metrics.cancelled += 1;
-                                let mut tokens = a.session.generated().to_vec();
-                                tokens.truncate(a.max_new);
-                                let _ = tx.send(Response {
-                                    id: a.id,
-                                    tokens,
-                                    stats: a.session.stats,
-                                    latency: a.enqueued.elapsed().as_secs_f64(),
-                                    ttft: a.first_token.unwrap_or(0.0),
-                                    error: Some(ERR_DISCONNECT.to_string()),
-                                });
-                                continue;
+                            if clip > 0 {
+                                if ev.send(Delta::Tokens(emitted[..clip].to_vec())).is_err() {
+                                    hung_up = true;
+                                } else {
+                                    a.streamed += clip;
+                                }
                             }
-                            a.streamed += clip;
                         }
-                        let done = a.session.finished
-                            || a.session.generated().len() >= a.max_new
-                            || emitted.is_empty();
-                        if done {
-                            self.finish(&mut metrics, &tx, a)?;
+                        if hung_up {
+                            metrics.cancelled += 1;
+                            pool.free(a.slot)?;
+                            let _ = tx
+                                .send(Self::terminal_response(&a, Some(ERR_DISCONNECT.to_string())));
+                        } else if a.session.finished || a.session.generated().len() >= a.max_new {
+                            pool.free(a.slot)?;
+                            Self::finish(&mut metrics, &tx, &a);
                         } else {
-                            still_active.push_back(a);
+                            survivors.push(a);
                         }
                     }
-                    Err(e) => {
-                        let mut tokens = a.session.generated().to_vec();
-                        tokens.truncate(a.max_new);
-                        Self::emit_error(
-                            &tx,
-                            &a.events,
-                            a.id,
-                            tokens,
-                            a.session.stats,
-                            a.enqueued.elapsed().as_secs_f64(),
-                            a.first_token.unwrap_or(0.0),
-                            &e.to_string(),
-                        );
+                    LaneOutcome::Idle => {
+                        // Context capacity reached (the session is now
+                        // finished): deliver the partial output as a
+                        // successful completion.
+                        pool.free(a.slot)?;
+                        Self::finish(&mut metrics, &tx, &a);
+                    }
+                    LaneOutcome::Failed(e) => {
+                        pool.free(a.slot)?;
+                        Self::emit(&tx, &a.events, Self::terminal_response(&a, Some(e.to_string())));
                     }
                 }
             }
-            active = still_active;
+            active = survivors;
+
+            if let Some(g) = &self.gauges {
+                g.pool_live.store(pool.live(), Ordering::Relaxed);
+                g.pool_peak.store(pool.peak_live, Ordering::Relaxed);
+                g.resident_tokens.store(pool.resident(), Ordering::Relaxed);
+                g.queue_depth.store(rx.len(), Ordering::Relaxed);
+                g.record_iteration(timings.draft_sync, timings.propose, timings.verify);
+            }
         }
+        metrics.pool_peak_slots = pool.peak_live;
         metrics.wall_seconds = wall0.elapsed().as_secs_f64();
         Ok(metrics)
     }
 
-    /// Send an error terminal on both the shared response channel and the
+    /// Build the terminal [`Response`] for `a`: tokens truncated to the
+    /// budget, stats clipped to the delivered count, TTFT falling back to
+    /// the full latency when nothing was emitted.
+    fn terminal_response(a: &Active, error: Option<String>) -> Response {
+        let mut tokens = a.session.generated().to_vec();
+        tokens.truncate(a.max_new);
+        let mut stats = a.session.stats;
+        stats.clip_to_delivered(tokens.len());
+        let latency = a.enqueued.elapsed().as_secs_f64();
+        Response { id: a.id, tokens, stats, latency, ttft: a.first_token.unwrap_or(latency), error }
+    }
+
+    /// Send a terminal on both the shared response channel and the
     /// request's delta sink (when present).
-    #[allow(clippy::too_many_arguments)]
-    fn emit_error(
-        tx: &Sender<Response>,
-        events: &Option<Sender<Delta>>,
-        id: u64,
-        tokens: Vec<u32>,
-        stats: crate::metrics::SpecStats,
-        latency: f64,
-        ttft: f64,
-        error: &str,
-    ) {
-        let resp = Response { id, tokens, stats, latency, ttft, error: Some(error.to_string()) };
+    fn emit(tx: &Sender<Response>, events: &Option<Sender<Delta>>, resp: Response) {
         if let Some(ev) = events {
             let _ = ev.send(Delta::Done(resp.clone()));
         }
         let _ = tx.send(resp);
     }
 
-    fn finish(
-        &self,
-        metrics: &mut ServeMetrics,
-        tx: &Sender<Response>,
-        a: Active,
-    ) -> Result<()> {
-        let mut tokens = a.session.generated().to_vec();
-        tokens.truncate(a.max_new);
-        let latency = a.enqueued.elapsed().as_secs_f64();
+    /// Successful completion: fold into the aggregate and emit.
+    fn finish(metrics: &mut ServeMetrics, tx: &Sender<Response>, a: &Active) {
+        let resp = Self::terminal_response(a, None);
         metrics.total_requests += 1;
-        metrics.total_new_tokens += tokens.len();
-        metrics.request_latency.push(latency);
-        metrics.ttft.push(a.first_token.unwrap_or(latency));
-        metrics.spec.merge(&a.session.stats);
-        let resp = Response {
-            id: a.id,
-            tokens,
-            stats: a.session.stats,
-            latency,
-            ttft: a.first_token.unwrap_or(latency),
-            error: None,
-        };
-        if let Some(ev) = &a.events {
-            let _ = ev.send(Delta::Done(resp.clone()));
-        }
-        let _ = tx.send(resp);
-        let _ = a.started; // reserved for decode-only latency metrics
-        Ok(())
+        metrics.total_new_tokens += resp.tokens.len();
+        metrics.request_latency.push(resp.latency);
+        metrics.ttft.push(resp.ttft);
+        metrics.spec.merge(&resp.stats);
+        Self::emit(tx, &a.events, resp);
     }
 }
 
 #[cfg(test)]
 mod tests {
     // The coordinator requires compiled artifacts; its end-to-end behaviour
-    // (all admitted requests terminate, batching bounds, starvation
-    // freedom, streaming deltas, deadline eviction) is covered in
-    // rust/tests/coordinator_integration.rs and
+    // (all admitted requests terminate, pool-bounded batching, deferral,
+    // starvation freedom, streaming deltas, deadline eviction, disconnect
+    // cancellation) is covered in rust/tests/coordinator_integration.rs and
     // rust/tests/server_integration.rs. Pure scheduling invariants that
     // don't need models are tested via the exec channel tests and the
     // kvcache pool property tests.

@@ -123,6 +123,15 @@ impl<T> Sender<T> {
         }
     }
 
+    /// Whether the receiving half is still alive. The scheduler probes
+    /// this every iteration so a disconnected client frees its batch slot
+    /// even when no tokens are flowing toward it (exhausted `max_new`
+    /// budget, capacity-finished block) — previously such sequences held
+    /// their slot until natural completion.
+    pub fn is_connected(&self) -> bool {
+        self.0.queue.lock().unwrap().receiver_alive
+    }
+
     /// Non-blocking send; gives the item back when full.
     pub fn try_send(&self, item: T) -> Result<(), TrySendError<T>> {
         let mut st = self.0.queue.lock().unwrap();
@@ -361,6 +370,16 @@ mod tests {
         assert!(matches!(tx.try_send(7), Err(TrySendError::Closed(7))));
         // Blocking send must not hang either.
         assert_eq!(tx.send(8), Err(Closed));
+    }
+
+    #[test]
+    fn is_connected_tracks_receiver_lifetime() {
+        let (tx, rx) = bounded::<i32>(1);
+        assert!(tx.is_connected());
+        let tx2 = tx.clone();
+        drop(rx);
+        assert!(!tx.is_connected());
+        assert!(!tx2.is_connected(), "all clones observe the hangup");
     }
 
     #[test]

@@ -115,8 +115,19 @@ impl<S> SlotPool<S> {
         self.slots.len()
     }
 
+    /// Pool capacity (the serving memory budget).
+    pub fn max_slots(&self) -> usize {
+        self.max_slots
+    }
+
     pub fn available(&self) -> usize {
         self.max_slots - self.slots.len()
+    }
+
+    /// Total valid positions across live slots — the KV memory actually in
+    /// use, reported by the scheduler occupancy gauges.
+    pub fn resident(&self) -> usize {
+        self.slots.values().map(|c| c.len()).sum()
     }
 
     /// Allocate a slot holding `state`; fails when the pool is exhausted
@@ -186,6 +197,7 @@ mod tests {
     #[test]
     fn pool_alloc_free_cycle() {
         let mut pool: SlotPool<u32> = SlotPool::new(2);
+        assert_eq!(pool.max_slots(), 2);
         let a = pool.alloc(1, 8).unwrap();
         let b = pool.alloc(2, 8).unwrap();
         assert_ne!(a, b);
@@ -198,6 +210,21 @@ mod tests {
         pool.free(b).unwrap();
         pool.free(c).unwrap();
         assert_eq!(pool.live(), 0);
+    }
+
+    #[test]
+    fn resident_sums_live_lengths() {
+        let mut pool: SlotPool<u32> = SlotPool::new(4);
+        assert_eq!(pool.resident(), 0);
+        let a = pool.alloc(1, 32).unwrap();
+        let b = pool.alloc(2, 32).unwrap();
+        pool.get_mut(a).unwrap().advance(10).unwrap();
+        pool.get_mut(b).unwrap().advance(5).unwrap();
+        assert_eq!(pool.resident(), 15);
+        pool.get_mut(a).unwrap().rollback_to(7).unwrap();
+        assert_eq!(pool.resident(), 12);
+        pool.free(a).unwrap();
+        assert_eq!(pool.resident(), 5);
     }
 
     /// Property: under a random alloc/free/advance/rollback workload, live

@@ -21,8 +21,9 @@
 //! | [`kvcache`] | KV-slot pool with rollback-by-length semantics |
 //! | [`sampling`] | temperature/top-p + Leviathan-style rejection sampling |
 //! | [`spec`] | the draft-gamma-then-verify speculative decoding engine |
+//! | [`batch`] | batch-stepped phase executor (lockstep across sequences) |
 //! | [`baseline`] | plain autoregressive decoding (the paper's baseline) |
-//! | [`coordinator`] | request queue, continuous batcher, scheduler |
+//! | [`coordinator`] | request queue, slot-pool admission, batch scheduler |
 //! | [`http`] | HTTP/1.1 wire layer: parser, chunked/streaming writers |
 //! | [`server`] | TCP front end (L4): `/v1/generate`, `/healthz`, `/metrics` |
 //! | [`metrics`] | block efficiency, MBSU, token rate, latency histograms |
@@ -36,6 +37,7 @@
 
 pub mod artifacts;
 pub mod baseline;
+pub mod batch;
 pub mod benchkit;
 pub mod cli;
 pub mod config;

@@ -11,9 +11,11 @@
 //! Examples:
 //!   specd info --artifacts artifacts
 //!   specd generate --draft draft_tvdpp_ckpt4 --task dolly --gamma 5
-//!   specd serve --addr 127.0.0.1:8080 --max-batch 4 --gamma 3
-//!   specd replay --requests 32 --rate 2.0 --max-batch 4
+//!   specd serve --addr 127.0.0.1:8080 --max-slots 4 --gamma 3
+//!   specd replay --requests 32 --rate 2.0 --max-slots 4
 //!   specd eval --draft draft_kld_ckpt4 --task xsum --gamma 3
+//!
+//! (`--max-batch` is accepted as an alias of `--max-slots`.)
 
 use std::sync::Arc;
 
@@ -24,7 +26,7 @@ use specd::coordinator::{Coordinator, Request, Response};
 use specd::error::Result;
 use specd::eval::{eval_cell, render_cells, ArBaselineCache, EvalOptions};
 use specd::exec;
-use specd::metrics::ServeMetrics;
+use specd::metrics::{SchedulerGauges, ServeMetrics};
 use specd::rng::Pcg64;
 use specd::runtime::Runtime;
 use specd::server::{Server, ServerConfig};
@@ -51,7 +53,8 @@ fn run() -> Result<()> {
         .opt("prompts", "16", "prompts per eval cell")
         .opt("requests", "32", "replay: number of requests in the trace")
         .opt("rate", "2.0", "replay: Poisson arrival rate (req/s)")
-        .opt("max-batch", "4", "serve/replay: max concurrent sequences")
+        .opt("max-slots", "4", "serve/replay: KV slot pool size (resident sequences)")
+        .alias("max-batch", "max-slots")
         .opt("queue-depth", "64", "serve/replay: admission queue length")
         .opt("addr", "127.0.0.1:8080", "serve: HTTP bind address")
         .opt("http-workers", "8", "serve: connection handler threads")
@@ -166,10 +169,14 @@ fn serve_http(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
         gamma: args.usize("gamma")?,
         max_new_tokens: args.usize("max-new")?,
         sampling: SamplingConfig::for_task(args.str("task"), args.u64("seed")?),
-        max_batch: args.usize("max-batch")?,
+        max_slots: args.usize("max-slots")?,
         queue_depth: args.usize("queue-depth")?,
     };
     run_cfg.validate()?;
+
+    // Shared with the scheduler thread: pool occupancy + per-phase timing
+    // surfaced live on GET /metrics.
+    let gauges = Arc::new(SchedulerGauges::default());
 
     let (req_tx, req_rx) = exec::bounded::<Request>(run_cfg.queue_depth);
     let (resp_tx, resp_rx) = exec::bounded::<Response>(run_cfg.queue_depth.max(16));
@@ -180,13 +187,14 @@ fn serve_http(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
     let drainer = std::thread::spawn(move || while resp_rx.recv().is_ok() {});
 
     let sched_cfg = run_cfg.clone();
+    let sched_gauges = gauges.clone();
     let scheduler = std::thread::Builder::new()
         .name("specd-scheduler".to_string())
         .spawn(move || -> Result<ServeMetrics> {
             let manifest = Manifest::load(&sched_cfg.artifacts_dir)?;
             let l = load(&manifest, &sched_cfg.draft_model, &sched_cfg.target_model)?;
             let decoder = SpecDecoder::new(&l.draft, &l.target, sched_cfg.gamma)?;
-            let coord = Coordinator::new(decoder, sched_cfg.clone())?;
+            let coord = Coordinator::new(decoder, sched_cfg.clone())?.with_gauges(sched_gauges);
             coord.serve(req_rx, resp_tx)
         })
         .map_err(specd::Error::Io)?;
@@ -199,6 +207,7 @@ fn serve_http(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
         // cap in their response instead of silent truncation.
         max_new_ceiling: run_cfg.max_new_tokens,
         default_deadline: args.ms_opt("timeout-ms")?,
+        scheduler_gauges: Some(gauges),
         ..ServerConfig::default()
     };
     let server = Server::start(srv_cfg, tokenizer, req_tx)?;
@@ -232,7 +241,7 @@ fn replay(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
         gamma: args.usize("gamma")?,
         max_new_tokens: args.usize("max-new")?,
         sampling: SamplingConfig::for_task(args.str("task"), args.u64("seed")?),
-        max_batch: args.usize("max-batch")?,
+        max_slots: args.usize("max-slots")?,
         queue_depth: args.usize("queue-depth")?,
     };
     let trace_cfg = TraceConfig {

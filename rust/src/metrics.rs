@@ -12,6 +12,7 @@
 //! * token-rate ratio: SD tokens/sec over autoregressive tokens/sec,
 //!   measured on this testbed.
 
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::time::Duration;
 
 use crate::benchkit::Stats;
@@ -58,6 +59,17 @@ impl SpecStats {
             0.0
         } else {
             self.accepted as f64 / self.drafted as f64
+        }
+    }
+
+    /// Clip the generated-token counter to the number of tokens actually
+    /// delivered. The last block can overshoot a request's `max_new`
+    /// budget; the overshoot is truncated from the output, and counting it
+    /// would inflate reported block efficiency relative to what the caller
+    /// received.
+    pub fn clip_to_delivered(&mut self, delivered: usize) {
+        if self.generated > delivered {
+            self.generated = delivered;
         }
     }
 }
@@ -135,6 +147,17 @@ pub struct ServeMetrics {
     pub cancelled: usize,
     pub wall_seconds: f64,
     pub spec: SpecStats,
+    /// Scheduler iterations (one lockstep batch step across all lanes).
+    pub batch_iterations: usize,
+    /// Wall-clock seconds summed per lockstep phase across iterations.
+    pub phase_draft_sync_seconds: f64,
+    pub phase_propose_seconds: f64,
+    pub phase_verify_seconds: f64,
+    /// Iterations that began with queued requests and an exhausted slot
+    /// pool (admission deferred, not errored).
+    pub admission_deferrals: usize,
+    /// High-water mark of live slots in the scheduler's KV pool.
+    pub pool_peak_slots: usize,
 }
 
 impl ServeMetrics {
@@ -189,6 +212,12 @@ impl ServeMetrics {
         self.cancelled += other.cancelled;
         self.wall_seconds += other.wall_seconds;
         self.spec.merge(&other.spec);
+        self.batch_iterations += other.batch_iterations;
+        self.phase_draft_sync_seconds += other.phase_draft_sync_seconds;
+        self.phase_propose_seconds += other.phase_propose_seconds;
+        self.phase_verify_seconds += other.phase_verify_seconds;
+        self.admission_deferrals += other.admission_deferrals;
+        self.pool_peak_slots = self.pool_peak_slots.max(other.pool_peak_slots);
     }
 
     /// Render in Prometheus text exposition format (`GET /metrics`).
@@ -218,6 +247,27 @@ impl ServeMetrics {
                    self.spec.block_efficiency());
         prom_gauge(&mut s, "specd_acceptance_rate", "Draft-token acceptance rate.",
                    self.spec.acceptance_rate());
+        // Scheduler-side families, only meaningful when this aggregate came
+        // from a coordinator run. The HTTP server's live aggregate is built
+        // from per-request responses and never populates them — omitting
+        // empty families there avoids misleading always-zero series next to
+        // the real `specd_sched_*` gauges.
+        if self.batch_iterations > 0 {
+            prom_counter(&mut s, "specd_batch_iterations_total",
+                         "Lockstep batch steps executed by the scheduler.",
+                         self.batch_iterations as f64);
+            prom_counter(&mut s, "specd_phase_draft_sync_seconds_total",
+                         "Wall seconds in the draft-sync phase.", self.phase_draft_sync_seconds);
+            prom_counter(&mut s, "specd_phase_propose_seconds_total",
+                         "Wall seconds in the proposal-round phases.", self.phase_propose_seconds);
+            prom_counter(&mut s, "specd_phase_verify_seconds_total",
+                         "Wall seconds in the target-verify phase.", self.phase_verify_seconds);
+            prom_counter(&mut s, "specd_admission_deferrals_total",
+                         "Iterations with queued work deferred on an exhausted slot pool.",
+                         self.admission_deferrals as f64);
+            prom_gauge(&mut s, "specd_pool_peak_slots",
+                       "High-water mark of live KV pool slots.", self.pool_peak_slots as f64);
+        }
 
         let mut summary = |name: &str, help: &str, stats: &Option<Stats>| {
             s.push_str(&format!("# HELP {name} {help}\n# TYPE {name} summary\n"));
@@ -246,7 +296,9 @@ impl ServeMetrics {
         format!(
             "requests={} tokens={} wall={:.2}s throughput={:.1} tok/s ({:.2} req/s)\n\
              latency p50={} p90={} p99={} | ttft p50={} p90={}\n\
-             block_efficiency={:.3} acceptance={:.3}",
+             block_efficiency={:.3} acceptance={:.3}\n\
+             phases: draft_sync={:.2}s propose={:.2}s verify={:.2}s over {} steps \
+             | pool peak={} deferrals={}",
             self.total_requests,
             self.total_new_tokens,
             self.wall_seconds,
@@ -259,7 +311,88 @@ impl ServeMetrics {
             fmt(&ttft, |s| s.p90),
             self.spec.block_efficiency(),
             self.spec.acceptance_rate(),
+            self.phase_draft_sync_seconds,
+            self.phase_propose_seconds,
+            self.phase_verify_seconds,
+            self.batch_iterations,
+            self.pool_peak_slots,
+            self.admission_deferrals,
         )
+    }
+}
+
+/// Live scheduler-side gauges, shared (`Arc`) between the scheduler
+/// thread and the HTTP `/metrics` handler so pool occupancy and per-phase
+/// timing are scrapeable while the server runs. All `Relaxed` atomics:
+/// each value is an independent monitoring signal, not a synchronization
+/// point. Family names carry a `specd_sched_` prefix so they never
+/// collide with the [`ServeMetrics`] aggregate families in one
+/// exposition.
+#[derive(Debug, Default)]
+pub struct SchedulerGauges {
+    /// Live slots in the KV pool (sequences currently resident).
+    pub pool_live: AtomicUsize,
+    /// Pool capacity (the configured `max_slots`).
+    pub pool_max: AtomicUsize,
+    /// High-water mark of live slots.
+    pub pool_peak: AtomicUsize,
+    /// Total valid KV positions across live slots.
+    pub resident_tokens: AtomicUsize,
+    /// Requests visible in the admission queue at the last iteration.
+    pub queue_depth: AtomicUsize,
+    phase_draft_sync_us: AtomicU64,
+    phase_propose_us: AtomicU64,
+    phase_verify_us: AtomicU64,
+    iterations: AtomicU64,
+    deferrals: AtomicU64,
+}
+
+impl SchedulerGauges {
+    /// Fold one batch step's phase timings (seconds) into the counters.
+    pub fn record_iteration(&self, draft_sync_s: f64, propose_s: f64, verify_s: f64) {
+        self.phase_draft_sync_us.fetch_add((draft_sync_s * 1e6) as u64, Ordering::Relaxed);
+        self.phase_propose_us.fetch_add((propose_s * 1e6) as u64, Ordering::Relaxed);
+        self.phase_verify_us.fetch_add((verify_s * 1e6) as u64, Ordering::Relaxed);
+        self.iterations.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one admission deferred on an exhausted slot pool — this is
+    /// the live-endpoint signal the `max_slots` sweep protocol gates on
+    /// (the coordinator's own aggregate only surfaces at shutdown).
+    pub fn record_deferral(&self) {
+        self.deferrals.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Render the scheduler families in Prometheus text format.
+    pub fn prometheus_text(&self) -> String {
+        let mut s = String::new();
+        prom_gauge(&mut s, "specd_sched_pool_live_slots", "Live KV pool slots.",
+                   self.pool_live.load(Ordering::Relaxed) as f64);
+        prom_gauge(&mut s, "specd_sched_pool_max_slots", "KV pool capacity (max_slots).",
+                   self.pool_max.load(Ordering::Relaxed) as f64);
+        prom_gauge(&mut s, "specd_sched_pool_peak_slots", "High-water mark of live slots.",
+                   self.pool_peak.load(Ordering::Relaxed) as f64);
+        prom_gauge(&mut s, "specd_sched_resident_tokens",
+                   "Valid KV positions across live slots.",
+                   self.resident_tokens.load(Ordering::Relaxed) as f64);
+        prom_gauge(&mut s, "specd_sched_queue_depth",
+                   "Admission-queue depth at the last scheduler iteration.",
+                   self.queue_depth.load(Ordering::Relaxed) as f64);
+        prom_counter(&mut s, "specd_sched_iterations_total", "Lockstep batch steps executed.",
+                     self.iterations.load(Ordering::Relaxed) as f64);
+        prom_counter(&mut s, "specd_sched_admission_deferrals_total",
+                     "Iterations with queued work deferred on an exhausted slot pool.",
+                     self.deferrals.load(Ordering::Relaxed) as f64);
+        prom_counter(&mut s, "specd_sched_phase_draft_sync_seconds_total",
+                     "Wall seconds in the draft-sync phase.",
+                     self.phase_draft_sync_us.load(Ordering::Relaxed) as f64 / 1e6);
+        prom_counter(&mut s, "specd_sched_phase_propose_seconds_total",
+                     "Wall seconds in the proposal-round phases.",
+                     self.phase_propose_us.load(Ordering::Relaxed) as f64 / 1e6);
+        prom_counter(&mut s, "specd_sched_phase_verify_seconds_total",
+                     "Wall seconds in the target-verify phase.",
+                     self.phase_verify_us.load(Ordering::Relaxed) as f64 / 1e6);
+        s
     }
 }
 
@@ -358,6 +491,69 @@ mod tests {
         assert_eq!(a.timeouts, 1);
         assert_eq!(a.request_latency.len(), 3);
         assert_eq!(a.spec.blocks, 5);
+    }
+
+    #[test]
+    fn clip_to_delivered_caps_generated() {
+        let mut s = SpecStats { blocks: 4, generated: 10, ..Default::default() };
+        assert!((s.block_efficiency() - 2.5).abs() < 1e-12);
+        // Overshot block: only 8 tokens were delivered after truncation.
+        s.clip_to_delivered(8);
+        assert_eq!(s.generated, 8);
+        assert!((s.block_efficiency() - 2.0).abs() < 1e-12);
+        // Never grows the counter.
+        s.clip_to_delivered(100);
+        assert_eq!(s.generated, 8);
+    }
+
+    #[test]
+    fn phase_and_pool_metrics_merge_and_render() {
+        let mut a = ServeMetrics::default();
+        a.batch_iterations = 2;
+        a.phase_draft_sync_seconds = 0.5;
+        a.phase_verify_seconds = 1.5;
+        a.pool_peak_slots = 3;
+        a.admission_deferrals = 1;
+        let mut b = ServeMetrics::default();
+        b.batch_iterations = 1;
+        b.phase_draft_sync_seconds = 0.25;
+        b.pool_peak_slots = 2;
+        a.merge(&b);
+        assert_eq!(a.batch_iterations, 3);
+        assert!((a.phase_draft_sync_seconds - 0.75).abs() < 1e-12);
+        assert_eq!(a.pool_peak_slots, 3, "peak merges as max");
+        let text = a.prometheus_text();
+        assert!(text.contains("specd_phase_draft_sync_seconds_total 0.75"));
+        assert!(text.contains("specd_phase_verify_seconds_total 1.5"));
+        assert!(text.contains("specd_batch_iterations_total 3"));
+        assert!(text.contains("specd_pool_peak_slots 3"));
+        assert!(text.contains("specd_admission_deferrals_total 1"));
+        let report = a.report();
+        assert!(report.contains("pool peak=3"), "report: {report}");
+    }
+
+    #[test]
+    fn scheduler_gauges_render() {
+        let g = SchedulerGauges::default();
+        g.pool_live.store(3, Ordering::Relaxed);
+        g.pool_max.store(4, Ordering::Relaxed);
+        g.pool_peak.store(4, Ordering::Relaxed);
+        g.resident_tokens.store(512, Ordering::Relaxed);
+        g.record_iteration(0.5, 1.0, 0.25);
+        g.record_iteration(0.5, 0.0, 0.25);
+        g.record_deferral();
+        let text = g.prometheus_text();
+        assert!(text.contains("specd_sched_pool_live_slots 3"));
+        assert!(text.contains("specd_sched_pool_max_slots 4"));
+        assert!(text.contains("specd_sched_resident_tokens 512"));
+        assert!(text.contains("specd_sched_iterations_total 2"));
+        assert!(text.contains("specd_sched_admission_deferrals_total 1"));
+        assert!(text.contains("specd_sched_phase_draft_sync_seconds_total 1"));
+        assert!(text.contains("specd_sched_phase_verify_seconds_total 0.5"));
+        // Families must not collide with the ServeMetrics exposition.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert!(line.starts_with("specd_sched_"), "bad family: {line}");
+        }
     }
 
     #[test]

@@ -49,7 +49,7 @@ use crate::error::{Error, Result};
 use crate::exec::{self, RecvTimeoutError, Sender, ThreadPool, TrySendError};
 use crate::http::{self, ChunkedWriter, HttpError, HttpRequest, Limits};
 use crate::json::{ObjWriter, Value};
-use crate::metrics::{ServeMetrics, SpecStats};
+use crate::metrics::{SchedulerGauges, ServeMetrics, SpecStats};
 use crate::tokenizer::Tokenizer;
 
 // ---------------------------------------------------------------------------
@@ -61,7 +61,7 @@ pub struct ServerConfig {
     /// Bind address; port 0 picks an ephemeral port (tests).
     pub addr: String,
     /// Connection-handler threads (requests in flight concurrently at the
-    /// HTTP layer; the scheduler's max_batch bounds decode concurrency).
+    /// HTTP layer; the scheduler's slot pool bounds decode concurrency).
     pub n_workers: usize,
     pub limits: Limits,
     /// `max_new` when the request doesn't specify one.
@@ -77,6 +77,10 @@ pub struct ServerConfig {
     /// request is admitted ([`Delta::Started`]) — time spent queued is
     /// bounded by the client's `timeout_ms`, not by this.
     pub scheduler_wait: Duration,
+    /// Live scheduler gauges (slot-pool occupancy, per-phase timing),
+    /// shared with the scheduler thread and appended to `GET /metrics`
+    /// when present.
+    pub scheduler_gauges: Option<Arc<SchedulerGauges>>,
 }
 
 impl Default for ServerConfig {
@@ -90,6 +94,7 @@ impl Default for ServerConfig {
             default_deadline: None,
             keep_alive_idle: Duration::from_secs(10),
             scheduler_wait: Duration::from_secs(120),
+            scheduler_gauges: None,
         }
     }
 }
@@ -340,7 +345,10 @@ fn route(
             respond(&inner.state, w, 200, "text/plain", b"ok\n", keep, &[])
         }
         ("GET", "/metrics") => {
-            let text = inner.state.prometheus();
+            let mut text = inner.state.prometheus();
+            if let Some(g) = &inner.cfg.scheduler_gauges {
+                text.push_str(&g.prometheus_text());
+            }
             respond(&inner.state, w, 200, "text/plain; version=0.0.4", text.as_bytes(), keep, &[])
         }
         ("POST", "/v1/generate") => generate(req, keep, w, inner, req_tx),

@@ -18,6 +18,14 @@
 //!    caches *roll back by length only* (the position-masked attention
 //!    contract makes stale rows unreachable).
 //!
+//! The block is exposed both as a single [`SpecDecoder::step`] call and as
+//! the per-phase methods [`SpecDecoder::begin_block`],
+//! [`SpecDecoder::propose_round`] and [`SpecDecoder::commit_block`], which
+//! [`crate::batch::BatchStep`] runs in lockstep across all active
+//! sequences so every phase's PJRT executable is dispatched in one tight
+//! loop. Near the context cap the per-block draft length shrinks
+//! ([`shrunken_gamma`]) instead of finishing the sequence blocks early.
+//!
 //! The engine is single-sequence; the [`crate::coordinator`] interleaves
 //! many sessions over it (iteration-level scheduling).
 
@@ -35,6 +43,56 @@ pub struct SpecDecoder<'a> {
     pub draft: &'a Model,
     pub target: &'a Model,
     pub gamma: usize,
+}
+
+/// Largest per-block draft length γ_eff ≤ `gamma` that still fits at
+/// sequence length `l` with `np` target-pending tokens:
+///
+/// * the target verify advances to `l + γ_eff` and must also hold the
+///   re-fed pending prefix (`np + γ_eff ≤ verify_block`),
+/// * the draft advances to `l + γ_eff - 1` (sync to `l`, then γ_eff − 1
+///   decode calls).
+///
+/// `0` means the sequence is at capacity and the caller finishes it. This
+/// replaces the old all-or-nothing `l + 2(γ+1) ≥ max_seq` guard, which
+/// silently finished sequences roughly two blocks before the real cap.
+pub fn shrunken_gamma(
+    gamma: usize,
+    l: usize,
+    np: usize,
+    target_max_seq: usize,
+    draft_max_seq: usize,
+    verify_block: usize,
+) -> usize {
+    let t_room = target_max_seq.saturating_sub(l);
+    let d_room = (draft_max_seq + 1).saturating_sub(l);
+    let vb_room = verify_block.saturating_sub(np);
+    gamma.min(t_room).min(d_room).min(vb_room)
+}
+
+/// In-flight state of one speculation block between phases: produced by
+/// [`SpecDecoder::begin_block`], fed by γ_eff [`SpecDecoder::propose_round`]
+/// calls, consumed by [`SpecDecoder::commit_block`]. Fields are private so
+/// the phase ordering invariants can't be violated from outside.
+pub struct BlockState {
+    /// This block's draft length (≤ the decoder γ; shrunk near the cap).
+    gamma: usize,
+    /// Logits row the next proposal samples from.
+    basis: Vec<f32>,
+    drafted: Vec<u32>,
+    draft_probs: Vec<Vec<f32>>,
+}
+
+impl BlockState {
+    /// The per-block (possibly shrunken) draft length.
+    pub fn gamma(&self) -> usize {
+        self.gamma
+    }
+
+    /// Proposal rounds completed so far (0..=gamma).
+    pub fn proposed(&self) -> usize {
+        self.drafted.len()
+    }
 }
 
 /// One in-flight sequence.
@@ -128,45 +186,84 @@ impl<'a> SpecDecoder<'a> {
         Ok(s.d_last_logits.clone())
     }
 
-    /// Run one speculation block; returns the tokens emitted (1..=gamma+1).
-    pub fn step(
+    /// This session's per-block draft length right now (0 = at capacity).
+    fn effective_gamma(&self, s: &SpecSession) -> usize {
+        let l = s.seq.len();
+        let np = l - s.t_cache.len();
+        shrunken_gamma(
+            self.gamma,
+            l,
+            np,
+            self.target.max_seq(),
+            self.draft.max_seq(),
+            self.target.arch.block(Entry::Verify),
+        )
+    }
+
+    /// Phase 1 — draft sync. Picks the per-block draft length (shrunk near
+    /// the context cap) and feeds the draft everything it hasn't processed.
+    /// Returns `None` — and marks the session finished — when not even a
+    /// γ_eff = 1 block fits (or the session already finished).
+    pub fn begin_block(&self, s: &mut SpecSession) -> Result<Option<BlockState>> {
+        if s.finished {
+            return Ok(None);
+        }
+        let gamma = self.effective_gamma(s);
+        if gamma == 0 {
+            s.finished = true;
+            return Ok(None);
+        }
+        let basis = self.sync_draft(s)?;
+        Ok(Some(BlockState {
+            gamma,
+            basis,
+            drafted: Vec::with_capacity(gamma),
+            draft_probs: Vec::with_capacity(gamma),
+        }))
+    }
+
+    /// Phase 2 — one proposal round: sample draft token j from the current
+    /// basis, then run one draft decode for the next basis — except after
+    /// the last round (if the last token survives verification, the next
+    /// block's sync ingests it; that keeps draft calls per block at γ_eff).
+    pub fn propose_round(
         &self,
         s: &mut SpecSession,
+        b: &mut BlockState,
+        cfg: &SamplingConfig,
+        rng: &mut Pcg64,
+    ) -> Result<()> {
+        debug_assert!(b.drafted.len() < b.gamma, "proposal round past gamma");
+        let v = self.target.vocab_size();
+        let p = logits_to_probs(&b.basis, cfg);
+        let t = sample_token(&p, cfg, rng);
+        b.drafted.push(t);
+        b.draft_probs.push(p);
+        if b.drafted.len() < b.gamma {
+            let state = s.d_cache.take_state()?;
+            let (state, logits) = self.draft.run(Entry::Decode, state, &[t], s.d_cache.len())?;
+            s.d_cache.put_state(state);
+            s.d_cache.advance(1)?;
+            s.stats.draft_calls += 1;
+            b.basis = logits[..v].to_vec();
+        }
+        Ok(())
+    }
+
+    /// Phases 3 + 4 — one target verify over [pending ++ drafted], then
+    /// rejection sampling, cache rollback and EOS handling. Returns the
+    /// emitted tokens (1..=γ_eff+1, never empty).
+    pub fn commit_block(
+        &self,
+        s: &mut SpecSession,
+        b: BlockState,
         cfg: &SamplingConfig,
         rng: &mut Pcg64,
     ) -> Result<Vec<u32>> {
-        if s.finished {
-            return Ok(Vec::new());
-        }
-        let gamma = self.gamma;
+        let BlockState { gamma, drafted, draft_probs, .. } = b;
+        debug_assert_eq!(drafted.len(), gamma, "commit before all proposal rounds");
         let l = s.seq.len();
         let v = self.target.vocab_size();
-
-        // Capacity guard: a block can add gamma+1 tokens and the models
-        // must be able to process them next round.
-        if l + 2 * (gamma + 1) >= self.target.max_seq() {
-            s.finished = true;
-            return Ok(Vec::new());
-        }
-
-        // 1. + 2. — draft sync and proposals (gamma draft calls in total).
-        let mut basis = self.sync_draft(s)?;
-        let mut drafted: Vec<u32> = Vec::with_capacity(gamma);
-        let mut draft_probs: Vec<Vec<f32>> = Vec::with_capacity(gamma);
-        for j in 0..gamma {
-            let p = logits_to_probs(&basis, cfg);
-            let t = sample_token(&p, cfg, rng);
-            drafted.push(t);
-            draft_probs.push(p);
-            if j + 1 < gamma {
-                let state = s.d_cache.take_state()?;
-                let (state, logits) = self.draft.run(Entry::Decode, state, &[t], s.d_cache.len())?;
-                s.d_cache.put_state(state);
-                s.d_cache.advance(1)?;
-                s.stats.draft_calls += 1;
-                basis = logits[..v].to_vec();
-            }
-        }
         s.stats.drafted += gamma;
 
         // 3. — one target verify over [pending ++ drafted].
@@ -223,6 +320,26 @@ impl<'a> SpecDecoder<'a> {
         Ok(emitted)
     }
 
+    /// Run one speculation block; returns the tokens emitted (empty only
+    /// when the session is finished or at capacity). Single-sequence
+    /// composition of the phase methods — the batch scheduler runs the
+    /// same phases in lockstep across sequences, consuming each lane's
+    /// RNG in the same order, so batched and direct output match.
+    pub fn step(
+        &self,
+        s: &mut SpecSession,
+        cfg: &SamplingConfig,
+        rng: &mut Pcg64,
+    ) -> Result<Vec<u32>> {
+        let Some(mut b) = self.begin_block(s)? else {
+            return Ok(Vec::new());
+        };
+        for _ in 0..b.gamma {
+            self.propose_round(s, &mut b, cfg, rng)?;
+        }
+        self.commit_block(s, b, cfg, rng)
+    }
+
     /// Convenience driver: generate until EOS / max_new / capacity.
     pub fn generate(
         &self,
@@ -240,6 +357,9 @@ impl<'a> SpecDecoder<'a> {
         }
         let mut out = session.generated().to_vec();
         out.truncate(max_new);
+        // The final block can overshoot max_new; the reported counters must
+        // describe the *delivered* tokens or block efficiency inflates.
+        session.stats.clip_to_delivered(out.len());
         Ok((out, session.stats))
     }
 }
@@ -248,6 +368,7 @@ impl<'a> SpecDecoder<'a> {
 mod tests {
     // The engine needs compiled artifacts; its integration tests live in
     // rust/tests/spec_equivalence.rs. Here we pin the pure bookkeeping.
+    use super::shrunken_gamma;
     use crate::metrics::SpecStats;
 
     #[test]
@@ -255,5 +376,45 @@ mod tests {
         let s = SpecStats::default();
         assert_eq!(s.block_efficiency(), 0.0);
         assert_eq!(s.acceptance_rate(), 0.0);
+    }
+
+    #[test]
+    fn shrunken_gamma_full_when_room() {
+        // Far from every cap: the configured gamma is used unchanged.
+        assert_eq!(shrunken_gamma(3, 10, 1, 256, 256, 8), 3);
+        assert_eq!(shrunken_gamma(5, 0, 0, 256, 256, 8), 5);
+    }
+
+    #[test]
+    fn shrunken_gamma_target_cap_binds() {
+        // Target can only advance max_seq - l more positions.
+        assert_eq!(shrunken_gamma(5, 254, 1, 256, 512, 8), 2);
+        assert_eq!(shrunken_gamma(5, 255, 1, 256, 512, 8), 1);
+        assert_eq!(shrunken_gamma(5, 256, 1, 256, 512, 8), 0, "at capacity");
+    }
+
+    #[test]
+    fn shrunken_gamma_draft_cap_binds() {
+        // Draft advances to l + gamma - 1, so it allows one extra position.
+        assert_eq!(shrunken_gamma(5, 254, 1, 512, 256, 8), 3);
+        assert_eq!(shrunken_gamma(5, 256, 1, 512, 256, 8), 1, "sync-only block");
+        assert_eq!(shrunken_gamma(5, 257, 1, 512, 256, 8), 0);
+    }
+
+    #[test]
+    fn shrunken_gamma_verify_block_binds() {
+        // The verify call re-feeds np pending tokens alongside the draft.
+        assert_eq!(shrunken_gamma(5, 10, 4, 256, 256, 8), 4);
+        assert_eq!(shrunken_gamma(5, 10, 8, 256, 256, 8), 0);
+    }
+
+    #[test]
+    fn shrunken_gamma_never_exceeds_configured() {
+        for l in 0..300 {
+            let g = shrunken_gamma(3, l, 1, 256, 256, 8);
+            assert!(g <= 3);
+            // Monotone non-increasing in l once caps start binding.
+            assert!(g >= shrunken_gamma(3, l + 1, 1, 256, 256, 8));
+        }
     }
 }

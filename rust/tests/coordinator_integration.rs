@@ -11,14 +11,13 @@ use specd::exec;
 use specd::rng::Pcg64;
 use specd::spec::SpecDecoder;
 
-fn run_requests(
+fn run_requests_cfg(
     f: &common::Fixture,
     draft: &specd::runtime::Model,
     reqs: Vec<Request>,
-    max_batch: usize,
+    cfg: RunConfig,
 ) -> (Vec<Response>, specd::metrics::ServeMetrics) {
-    let decoder = SpecDecoder::new(draft, &f.target, 3).unwrap();
-    let cfg = RunConfig { max_batch, ..RunConfig::default() };
+    let decoder = SpecDecoder::new(draft, &f.target, cfg.gamma).unwrap();
     let coord = Coordinator::new(decoder, cfg).unwrap();
     let n = reqs.len();
     let (req_tx, req_rx) = exec::bounded::<Request>(4); // small: exercises backpressure
@@ -36,6 +35,15 @@ fn run_requests(
     }
     assert_eq!(out.len(), n, "every admitted request must get a response");
     (out, metrics)
+}
+
+fn run_requests(
+    f: &common::Fixture,
+    draft: &specd::runtime::Model,
+    reqs: Vec<Request>,
+    max_slots: usize,
+) -> (Vec<Response>, specd::metrics::ServeMetrics) {
+    run_requests_cfg(f, draft, reqs, RunConfig { max_slots, ..RunConfig::default() })
 }
 
 #[test]
@@ -146,12 +154,21 @@ fn expired_deadline_evicts_with_timeout_error() {
     assert_eq!(responses[0].error.as_deref(), Some(specd::coordinator::ERR_DEADLINE));
     assert_eq!(metrics.timeouts, 1);
     assert_eq!(metrics.total_requests, 0, "timed-out requests don't count as served");
+    // TTFT regression: a request evicted before emitting anything reports
+    // ttft == latency (0.0 would poison the windowed TTFT percentiles).
+    assert!(responses[0].ttft > 0.0, "ttft must not be 0.0 on the deadline path");
+    assert!(
+        (responses[0].ttft - responses[0].latency).abs() < 1e-9,
+        "ttft {} must equal latency {} when nothing was emitted",
+        responses[0].ttft,
+        responses[0].latency
+    );
 }
 
 #[test]
 fn many_requests_through_small_batch_terminate() {
     require_artifacts!();
-    // 12 requests through max_batch=2 with a queue of 4: exercises
+    // 12 requests through max_slots=2 with a queue of 4: exercises
     // admission backpressure + slot turnover; must fully drain.
     let f = common::Fixture::load();
     let draft = f.default_draft();
@@ -167,8 +184,108 @@ fn many_requests_through_small_batch_terminate() {
     assert_eq!(responses.len(), 12);
     assert!(responses.iter().all(|r| r.error.is_none()));
     assert_eq!(metrics.total_requests, 12);
+    // The slot pool is the admission gate: never more residents than slots.
+    assert!(metrics.pool_peak_slots <= 2, "pool peak {} > max_slots", metrics.pool_peak_slots);
     // Latency ordering sanity: every request has ttft <= latency.
     for r in &responses {
         assert!(r.ttft <= r.latency + 1e-9);
     }
+}
+
+#[test]
+fn pool_exhaustion_defers_admission_until_slots_free() {
+    require_artifacts!();
+    // All 6 requests are queued BEFORE the scheduler starts, through a
+    // pool of only 2 slots: the first iteration must observe queued work
+    // with an exhausted pool (a deferral), admission must resume as slots
+    // free, and every request must still complete.
+    let f = common::Fixture::load();
+    let draft = f.default_draft();
+    let decoder = SpecDecoder::new(&draft, &f.target, 3).unwrap();
+    let cfg = RunConfig { max_slots: 2, ..RunConfig::default() };
+    let coord = Coordinator::new(decoder, cfg).unwrap();
+    let examples = f.suite.take("dolly", 6).unwrap();
+    let (req_tx, req_rx) = exec::bounded::<Request>(8);
+    let (resp_tx, resp_rx) = exec::bounded::<Response>(64);
+    for (i, ex) in examples.iter().enumerate() {
+        req_tx
+            .send(Request::new(i as u64, ex.prompt.clone(), 8, SamplingConfig::greedy()))
+            .unwrap();
+    }
+    drop(req_tx); // queue closed: serve drains and returns
+    let metrics = coord.serve(req_rx, resp_tx).unwrap();
+
+    let mut out = Vec::new();
+    while let Some(r) = resp_rx.try_recv() {
+        out.push(r);
+    }
+    assert_eq!(out.len(), 6, "deferred requests must eventually be admitted");
+    assert!(out.iter().all(|r| r.error.is_none()), "deferral must not surface as an error");
+    assert_eq!(metrics.total_requests, 6);
+    assert_eq!(metrics.pool_peak_slots, 2, "the pool must actually fill");
+    assert!(
+        metrics.admission_deferrals >= 1,
+        "queued work behind a full pool must be counted as deferred"
+    );
+}
+
+#[test]
+fn near_capacity_shrinks_gamma_and_fills_the_context() {
+    require_artifacts!();
+    // A request with an effectively unlimited token budget must keep
+    // generating until the context is genuinely full (shrinking its
+    // per-block gamma on approach), not stop ~2 blocks early the way the
+    // old `l + 2(gamma+1) >= max_seq` guard did.
+    let f = common::Fixture::load();
+    let draft = f.default_draft();
+    let t_max = f.target.max_seq();
+    let d_max = draft.max_seq();
+    let ex = &f.suite.take("dolly", 1).unwrap()[0];
+    let budget = 2 * t_max;
+    let cfg = RunConfig { max_slots: 1, max_new_tokens: budget, ..RunConfig::default() };
+    let reqs = vec![Request::new(0, ex.prompt.clone(), budget, SamplingConfig::greedy())];
+    let (responses, metrics) = run_requests_cfg(&f, &draft, reqs, cfg);
+    let r = &responses[0];
+    assert!(r.error.is_none(), "capacity termination is a successful completion: {:?}", r.error);
+    assert_eq!(metrics.total_requests, 1);
+
+    let total = ex.prompt.len() + r.tokens.len();
+    // Generation stops at l >= cap (target room or draft room exhausted),
+    // and the final block can append at most one unprocessed bonus token.
+    let cap = t_max.min(d_max + 1);
+    assert!(total <= cap + 1, "sequence overran the context: {total} > {}", cap + 1);
+    if r.tokens.last() != Some(&specd::tokenizer::EOS) {
+        assert!(
+            total >= cap,
+            "stopped {} tokens short of the context cap {cap} (old-guard behaviour?)",
+            cap - total
+        );
+    }
+}
+
+#[test]
+fn disconnected_client_cancelled_before_spending_decode() {
+    require_artifacts!();
+    // The events channel is probed at admission and every iteration: a
+    // client that hung up while its request sat in the queue must be
+    // cancelled before any model call runs for it (not even the prefill),
+    // not held until a token send happens to fail.
+    let f = common::Fixture::load();
+    let draft = f.default_draft();
+    let ex = &f.suite.take("xsum", 1).unwrap()[0];
+    let (ev_tx, ev_rx) = exec::bounded::<specd::coordinator::Delta>(64);
+    drop(ev_rx); // client gone before the scheduler ever sees the request
+    let mut req = Request::new(0, ex.prompt.clone(), 16, SamplingConfig::greedy());
+    req.events = Some(ev_tx);
+    let (responses, metrics) = run_requests(&f, &draft, vec![req], 1);
+    assert_eq!(responses[0].error.as_deref(), Some(specd::coordinator::ERR_DISCONNECT));
+    assert_eq!(metrics.cancelled, 1);
+    assert_eq!(metrics.total_requests, 0, "cancelled requests don't count as served");
+    assert!(
+        responses[0].tokens.is_empty(),
+        "probe must fire before the first block, got {} tokens",
+        responses[0].tokens.len()
+    );
+    // TTFT consistency on the cancel path too.
+    assert!((responses[0].ttft - responses[0].latency).abs() < 1e-9);
 }

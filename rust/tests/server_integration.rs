@@ -184,6 +184,32 @@ fn healthz_and_metrics_respond() {
 }
 
 #[test]
+fn metrics_include_scheduler_gauges_when_attached() {
+    use specd::metrics::SchedulerGauges;
+    use std::sync::atomic::Ordering;
+
+    let gauges = Arc::new(SchedulerGauges::default());
+    gauges.pool_live.store(3, Ordering::Relaxed);
+    gauges.pool_max.store(4, Ordering::Relaxed);
+    gauges.resident_tokens.store(123, Ordering::Relaxed);
+    gauges.record_iteration(0.25, 0.5, 0.125);
+    let g = gauges.clone();
+    let rig = Rig::start(16, 2, Duration::from_millis(1), move |cfg| {
+        cfg.scheduler_gauges = Some(g);
+    });
+    let m = roundtrip(&rig.addr(), "GET /metrics HTTP/1.1\r\nhost: t\r\n\r\n");
+    assert_eq!(m.code, 200);
+    let text = m.body_str().to_string();
+    assert!(text.contains("specd_sched_pool_live_slots 3"), "missing gauge:\n{text}");
+    assert!(text.contains("specd_sched_pool_max_slots 4"));
+    assert!(text.contains("specd_sched_resident_tokens 123"));
+    assert!(text.contains("specd_sched_phase_verify_seconds_total 0.125"));
+    // The HTTP aggregate families are still present alongside.
+    assert!(text.contains("specd_requests_total"));
+    rig.stop();
+}
+
+#[test]
 fn generate_unary_end_to_end() {
     let rig = Rig::fast();
     let r = post_generate(&rig.addr(), r#"{"tokens": [5, 6, 7], "max_new": 8}"#, "");

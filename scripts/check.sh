@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Tier-1 verification in one command: build, tests, formatting.
+# Tier-1 verification in one command: build, tests, lints, formatting.
 #
 #   scripts/check.sh            # everything
 #   scripts/check.sh --no-fmt   # skip the formatting gate
@@ -17,6 +17,13 @@ cargo build --release
 
 echo "== cargo test -q =="
 cargo test -q
+
+echo "== cargo clippy (deny warnings) =="
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "clippy component not installed; skipping (install with: rustup component add clippy)"
+fi
 
 if [[ "$run_fmt" == 1 ]]; then
     echo "== cargo fmt --check =="
