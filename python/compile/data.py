@@ -26,6 +26,8 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import os
+import struct
 from typing import Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -281,6 +283,130 @@ class SynthChat:
         excludes 'wmt' — that is exactly what makes WMT OOD in Figure 3."""
         rng = np.random.default_rng(seed)
         return [self.sample_example(rng, tasks[i % len(tasks)]) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# `specd distill` shard reader (phase-2 data generated by the Rust stack)
+# ---------------------------------------------------------------------------
+#
+# Layout mirror of rust/src/dataset.rs (little-endian):
+#
+#   manifest.json       metadata + per-shard FNV-1a-64 checksums
+#   shard-NNNNN.spds    magic "SPDS1\0" | topk u16 | reserved u16 | records:
+#     seq_index u64 | task_id u8 | temperature f32
+#     prompt_len u32 | resp_len u32
+#     prompt u32*prompt_len | response u32*resp_len
+#     per response position (when topk > 0): ids u32*topk | logits f32*topk
+#
+# Captured logits are RAW (pre-temperature) target rows, descending, so the
+# distillation loss can be computed against the true target distribution
+# instead of the one-hot sampled token.
+
+DISTILL_SHARD_MAGIC = b"SPDS1\x00"
+DISTILL_FORMAT_TAG = "SPDD1"
+
+
+def _fnv1a64(data: bytes) -> int:
+    """FNV-1a 64 (inherently sequential, so pure Python — ~5 MB/s; fine
+    for CPU-scale datasets, and `verify_checksums=False` skips it for
+    repeated loads of an already-verified directory)."""
+    h = 0xCBF29CE484222325
+    mult, mask = 0x100000001B3, 0xFFFFFFFFFFFFFFFF
+    for b in data:
+        h = ((h ^ b) * mult) & mask
+    return h
+
+
+@dataclasses.dataclass
+class DistillShardRecord:
+    """One target-generated sequence from a `specd distill` shard."""
+
+    seq_index: int
+    task: str
+    temperature: float
+    prompt: List[int]
+    response: List[int]
+    topk_ids: Optional[np.ndarray]  # [resp_len, topk] int64, or None
+    topk_logits: Optional[np.ndarray]  # [resp_len, topk] float32, or None
+
+    @property
+    def tokens(self) -> List[int]:
+        return self.prompt + self.response
+
+
+def load_distill_shards(dir_path: str, verify_checksums: bool = True) -> List[DistillShardRecord]:
+    """Read a `specd distill` dataset directory (manifest + shards)."""
+    with open(os.path.join(dir_path, "manifest.json")) as f:
+        manifest = json.load(f)
+    if manifest.get("format") != DISTILL_FORMAT_TAG:
+        raise ValueError(f"not a {DISTILL_FORMAT_TAG} dataset: {dir_path}")
+    topk = int(manifest["topk"])
+    tasks = [m["task"] for m in manifest["mix"]]
+    out: List[DistillShardRecord] = []
+    for shard in manifest["shards"]:
+        path = os.path.join(dir_path, shard["file"])
+        with open(path, "rb") as f:
+            raw = f.read()
+        if len(raw) != int(shard["bytes"]):
+            raise ValueError(f"{shard['file']}: size mismatch")
+        if verify_checksums and _fnv1a64(raw) != int(shard["fnv64"], 16):
+            raise ValueError(f"{shard['file']}: checksum mismatch")
+        if raw[:6] != DISTILL_SHARD_MAGIC:
+            raise ValueError(f"{shard['file']}: bad magic")
+        (shard_topk,) = struct.unpack_from("<H", raw, 6)
+        if shard_topk != topk:
+            raise ValueError(f"{shard['file']}: topk {shard_topk} != manifest {topk}")
+        pos = 10  # magic + topk + reserved
+        n = 0
+        while pos < len(raw):
+            seq_index, task_id, temperature, prompt_len, resp_len = struct.unpack_from(
+                "<QBfII", raw, pos
+            )
+            pos += 8 + 1 + 4 + 4 + 4
+            prompt = np.frombuffer(raw, "<u4", prompt_len, pos).tolist()
+            pos += 4 * prompt_len
+            response = np.frombuffer(raw, "<u4", resp_len, pos).tolist()
+            pos += 4 * resp_len
+            topk_ids = topk_logits = None
+            if topk > 0:
+                # One structured read for the whole capture block (per
+                # position: k ids then k logits).
+                row_dt = np.dtype([("ids", "<u4", (topk,)), ("logits", "<f4", (topk,))])
+                rows = np.frombuffer(raw, row_dt, resp_len, pos)
+                pos += row_dt.itemsize * resp_len
+                topk_ids = rows["ids"].astype(np.int64)
+                topk_logits = np.ascontiguousarray(rows["logits"])
+            out.append(
+                DistillShardRecord(
+                    seq_index=seq_index,
+                    task=tasks[task_id],
+                    temperature=temperature,
+                    prompt=prompt,
+                    response=response,
+                    topk_ids=topk_ids,
+                    topk_logits=topk_logits,
+                )
+            )
+            n += 1
+        if n != int(shard["records"]):
+            raise ValueError(f"{shard['file']}: {n} records, manifest says {shard['records']}")
+    if len(out) != int(manifest["records_total"]):
+        raise ValueError("records_total mismatch across shards")
+    for i, rec in enumerate(out):
+        if rec.seq_index != i:
+            raise ValueError(f"non-contiguous seq_index at {i}")
+    return out
+
+
+def distill_set_from_records(records: Sequence[DistillShardRecord]) -> List[Tuple[List[int], int]]:
+    """Adapt shard records to the [(tokens, prompt_len)] structure that
+    train.py's phase-3 finetuning consumes (see build_distill_dataset)."""
+    return [(rec.tokens, len(rec.prompt)) for rec in records]
+
+
+def distill_set_from_shards(dir_path: str) -> List[Tuple[List[int], int]]:
+    """distill_set_from_records over a whole shard directory."""
+    return distill_set_from_records(load_distill_shards(dir_path))
 
 
 def pack_stream(stream: Iterator[List[int]], seq_len: int) -> Iterator[np.ndarray]:

@@ -23,10 +23,11 @@ from __future__ import annotations
 
 import argparse
 import functools
+import hashlib
 import json
 import os
 import time
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -198,18 +199,36 @@ def build_distill_dataset(
 # ---------------------------------------------------------------------------
 
 
-def make_finetune_step(loss_name: str, tc: TrainConfig, total_steps: int):
+# Fill value for vocabulary entries outside a captured top-k row: softmax
+# sends exp(-1e9 - max) to exactly 0, so the sparse teacher is the
+# renormalized top-k distribution.
+CAPTURE_LOGIT_FLOOR = -1e9
+
+
+def make_finetune_step(loss_name: str, tc: TrainConfig, total_steps: int,
+                       captured_teacher: bool = False):
+    """Finetune step factory. With `captured_teacher` the teacher
+    distribution comes from the `q_teacher` argument (target top-k logits
+    captured by `specd distill`, scattered onto the full vocab grid)
+    instead of a live target forward pass — the paper's phase-3 setup
+    against the *recorded* target distribution, and one whole target
+    forward cheaper per step."""
     warmup = max(1, int(tc.warmup_frac * total_steps))
 
     @jax.jit
-    def step(draft_params, target_params, opt_state, tokens, dist_w, lm_w):
+    def step(draft_params, target_params, opt_state, tokens, dist_w, lm_w, q_teacher):
         """tokens: [B, T+1]; dist_w masks distill-response positions (on the
-        *label* grid), lm_w masks pretraining-row positions."""
+        *label* grid), lm_w masks pretraining-row positions. q_teacher:
+        [B, T, V] captured teacher logits (any placeholder when
+        `captured_teacher` is off — the live branch never reads it)."""
         inputs, labels = tokens[:, :-1], tokens[:, 1:]
 
         def loss_fn(p):
             p_logits = model.forward_train(p, DRAFT_CONFIG, inputs)
-            q_logits = model.forward_train(target_params, TARGET_CONFIG, inputs)
+            if captured_teacher:
+                q_logits = q_teacher
+            else:
+                q_logits = model.forward_train(target_params, TARGET_CONFIG, inputs)
             l_dist = losses.distill_loss(loss_name, p_logits, q_logits, dist_w)
             l_lm = losses.next_token_loss(p_logits, labels, lm_w)
             return l_dist + l_lm, (l_dist, l_lm)
@@ -233,40 +252,72 @@ def finetune_draft(
     tc: TrainConfig,
     loss_name: str,
     ckpt_hook,
+    capture: Optional[List[Tuple[np.ndarray, np.ndarray]]] = None,
 ):
     """Phase 3 for one loss. `ckpt_hook(ckpt_index, params)` is called at the
-    n_checkpoints evenly spaced points (paper Figure 2's x-axis)."""
-    rng = np.random.default_rng(hash(loss_name) % 2**31)
-    step_fn = make_finetune_step(loss_name, tc, tc.finetune_steps)
+    n_checkpoints evenly spaced points (paper Figure 2's x-axis).
+
+    `capture`, when given, is parallel to `distill_set`: per record the
+    (topk_ids [R, k], topk_logits [R, k]) arrays from a `specd distill`
+    shard dataset. The distillation loss then runs against the captured
+    target distribution (scattered onto the vocab grid) instead of a live
+    target forward pass."""
+    if capture is not None and len(capture) != len(distill_set):
+        raise ValueError("capture must be parallel to distill_set")
+    # Stable per-loss seed: builtin hash() is salted per process
+    # (PYTHONHASHSEED), which would make finetuning unreproducible.
+    loss_seed = int.from_bytes(hashlib.sha256(loss_name.encode()).digest()[:4], "little")
+    rng = np.random.default_rng(loss_seed)
+    step_fn = make_finetune_step(loss_name, tc, tc.finetune_steps,
+                                 captured_teacher=capture is not None)
     opt_state = optim.adamw_init(draft_params)
     pre_batches = batch_stream(synth.corpus_stream(seed=999), tc.seq_len, tc.batch_size)
     n_dist_rows = max(1, int(round(tc.distill_mix_ratio * tc.batch_size)))
     t_len = tc.seq_len
+    vocab = TARGET_CONFIG.vocab_size
 
     def sample_rows():
         tokens = np.zeros((tc.batch_size, t_len + 1), np.int32)
         dist_w = np.zeros((tc.batch_size, t_len), np.float32)
         lm_w = np.zeros((tc.batch_size, t_len), np.float32)
+        if capture is not None:
+            q = np.full((tc.batch_size, t_len, vocab), CAPTURE_LOGIT_FLOOR, np.float32)
+        else:
+            q = np.zeros((1,), np.float32)  # placeholder; live branch ignores it
         # distillation rows (loss vs teacher on response positions)
         for b in range(n_dist_rows):
-            seq, plen = distill_set[int(rng.integers(len(distill_set)))]
+            i = int(rng.integers(len(distill_set)))
+            seq, plen = distill_set[i]
             seq = seq[: t_len + 1]
             tokens[b, : len(seq)] = seq
             # label index j predicts token j+1: response tokens start at plen
             dist_w[b, max(plen - 1, 0) : max(len(seq) - 1, 0)] = 1.0
+            if capture is not None:
+                ids, logits = capture[i]
+                # Captured row j is the target's distribution for response
+                # token j = seq[plen + j], i.e. label position plen - 1 + j.
+                # Vectorized scatter: one fancy-index write per row, no
+                # per-position Python loop. Rows whose label position falls
+                # below 0 (a pathological plen = 0 record) are dropped, the
+                # same guard dist_w applies above — never negative-index q.
+                n = len(seq) - plen
+                skip = max(plen - 1, 0) - (plen - 1)
+                if n > skip:
+                    pos = np.arange(plen - 1 + skip, plen - 1 + n)
+                    q[b, pos[:, None], ids[skip:n]] = logits[skip:n]
         # pretraining rows (regularization, plain next-token loss)
         pre = next(pre_batches)
         for b in range(n_dist_rows, tc.batch_size):
             tokens[b] = pre[b - n_dist_rows]
             lm_w[b, :] = 1.0
-        return jnp.asarray(tokens), jnp.asarray(dist_w), jnp.asarray(lm_w)
+        return jnp.asarray(tokens), jnp.asarray(dist_w), jnp.asarray(lm_w), jnp.asarray(q)
 
     ckpt_every = max(1, tc.finetune_steps // tc.n_checkpoints)
     t0 = time.time()
     for i in range(tc.finetune_steps):
-        tokens, dist_w, lm_w = sample_rows()
+        tokens, dist_w, lm_w, q_teacher = sample_rows()
         draft_params, opt_state, loss, l_dist, l_lm = step_fn(
-            draft_params, target_params, opt_state, tokens, dist_w, lm_w
+            draft_params, target_params, opt_state, tokens, dist_w, lm_w, q_teacher
         )
         if i % 50 == 0 or i == tc.finetune_steps - 1:
             print(f"[finetune:{loss_name}] step {i:4d}/{tc.finetune_steps} "
@@ -300,7 +351,17 @@ def smoke_config() -> TrainConfig:
     )
 
 
-def run_pipeline(out_dir: str, tc: TrainConfig, include_wmt: bool = False, seed: int = 0):
+def run_pipeline(
+    out_dir: str,
+    tc: TrainConfig,
+    include_wmt: bool = False,
+    seed: int = 0,
+    distill_dir: str | None = None,
+):
+    """Full pipeline. When `distill_dir` points at a `specd distill` shard
+    directory (Rust-side bulk generation), phase 2 loads those shards
+    instead of regenerating responses here — the serving stack is much
+    faster at saturating the target model than this reference loop."""
     os.makedirs(out_dir, exist_ok=True)
     synth = SynthChat()
     meta = {"include_wmt": include_wmt, "seed": seed, "losses": list(losses.LOSS_NAMES)}
@@ -323,8 +384,26 @@ def run_pipeline(out_dir: str, tc: TrainConfig, include_wmt: bool = False, seed:
     meta["pretrain_loss"] = {"target": l_t, "draft": l_d, "target_sft": l_sft}
 
     # --- Phase 2: distillation dataset from the target --------------------
-    tasks = ("dolly", "xsum", "cnndm") + (("wmt",) if include_wmt else ())
-    distill_set = build_distill_dataset(target_params, synth, tc, tasks, seed=404)
+    capture = None
+    if distill_dir is not None:
+        records = data_mod.load_distill_shards(distill_dir)
+        if not records:
+            # Fail in seconds, not hours into phase 1: an interrupted
+            # `specd distill` run can leave a valid manifest with 0 shards.
+            raise ValueError(f"{distill_dir}: dataset has no committed records")
+        distill_set = data_mod.distill_set_from_records(records)
+        if records and records[0].topk_ids is not None:
+            capture = [(r.topk_ids, r.topk_logits) for r in records]
+            meta["distill_capture_topk"] = int(records[0].topk_ids.shape[1])
+        else:
+            meta["distill_capture_topk"] = 0
+        meta["distill_source"] = distill_dir
+        tasks = tuple(sorted({r.task for r in records}))
+        if "wmt" in tasks:
+            raise ValueError("shard dataset contains wmt seeds (OOD protocol violation)")
+    else:
+        tasks = ("dolly", "xsum", "cnndm") + (("wmt",) if include_wmt else ())
+        distill_set = build_distill_dataset(target_params, synth, tc, tasks, seed=404)
     meta["distill_sequences"] = len(distill_set)
     meta["distill_tasks"] = list(tasks)
 
@@ -334,7 +413,7 @@ def run_pipeline(out_dir: str, tc: TrainConfig, include_wmt: bool = False, seed:
             save_params(os.path.join(out_dir, f"draft_{loss_name}_ckpt{ck}.npz"), p)
         print(f"=== finetune loss={loss_name} ===", flush=True)
         finetune_draft(dict(draft_params), target_params, distill_set, synth, tc,
-                       loss_name, hook)
+                       loss_name, hook, capture=capture)
 
     meta["n_checkpoints"] = tc.n_checkpoints
     with open(os.path.join(out_dir, "meta.json"), "w") as f:
@@ -348,10 +427,13 @@ def main():
     ap.add_argument("--profile", choices=("full", "smoke"), default="full")
     ap.add_argument("--include-wmt", action="store_true",
                     help="ablation: add wmt to the distillation seeds (§A.5)")
+    ap.add_argument("--distill-data", default=None,
+                    help="`specd distill` shard directory; skips phase-2 generation")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     tc = TRAIN_CONFIG if args.profile == "full" else smoke_config()
-    run_pipeline(args.out, tc, include_wmt=args.include_wmt, seed=args.seed)
+    run_pipeline(args.out, tc, include_wmt=args.include_wmt, seed=args.seed,
+                 distill_dir=args.distill_data)
 
 
 if __name__ == "__main__":

@@ -89,6 +89,61 @@ def test_finetune_checkpoint_hook_and_param_change(target_params, synth):
     assert delta > 0.0
 
 
+def test_captured_teacher_matches_live_teacher_with_full_capture(target_params, synth):
+    """The sparse-teacher path fed a FULL (k = V) capture of the live
+    teacher's logits must reproduce the live-teacher step exactly — pins
+    the capture scatter + the captured_teacher jit branch."""
+    tc = train.smoke_config()
+    rng = np.random.default_rng(7)
+    ex = synth.sample_example(rng, "dolly")
+    seq = (ex.prompt + ex.response)[: tc.seq_len + 1]
+    plen = len(ex.prompt)
+    tokens = np.zeros((1, tc.seq_len + 1), np.int32)
+    tokens[0, : len(seq)] = seq
+    dist_w = np.zeros((1, tc.seq_len), np.float32)
+    dist_w[0, plen - 1 : len(seq) - 1] = 1.0
+    lm_w = np.zeros((1, tc.seq_len), np.float32)
+
+    q_live = train.model.forward_train(target_params, TARGET_CONFIG,
+                                       jnp.asarray(tokens[:, :-1]))
+    draft0 = model.init_params(train.DRAFT_CONFIG, seed=11)
+    opt0 = train.optim.adamw_init(draft0)
+    args = (jnp.asarray(tokens), jnp.asarray(dist_w), jnp.asarray(lm_w))
+
+    step_live = train.make_finetune_step("tvdpp", tc, 4)
+    step_cap = train.make_finetune_step("tvdpp", tc, 4, captured_teacher=True)
+    dummy = jnp.zeros((1,), jnp.float32)
+    _, _, loss_live, ld_live, _ = step_live(dict(draft0), target_params, dict(opt0), *args, dummy)
+    _, _, loss_cap, ld_cap, _ = step_cap(dict(draft0), target_params, dict(opt0), *args, q_live)
+    np.testing.assert_allclose(float(ld_cap), float(ld_live), rtol=1e-5)
+    np.testing.assert_allclose(float(loss_cap), float(loss_live), rtol=1e-5)
+
+
+def test_finetune_draft_with_synthetic_capture_runs(target_params, synth):
+    """finetune_draft over a shard-style capture (small k): params move and
+    every loss variant accepts the sparse teacher."""
+    tc = train.smoke_config()
+    rng = np.random.default_rng(9)
+    k, vocab = 4, TARGET_CONFIG.vocab_size
+    distill_set, capture = [], []
+    for _ in range(6):
+        ex = synth.sample_example(rng, "xsum")
+        seq = ex.prompt + ex.response
+        n_resp = len(ex.response)
+        ids = np.stack([rng.choice(vocab, size=k, replace=False) for _ in range(n_resp)])
+        logits = np.sort(rng.normal(size=(n_resp, k)).astype(np.float32))[:, ::-1]
+        distill_set.append((seq, len(ex.prompt)))
+        capture.append((ids.astype(np.int64), np.ascontiguousarray(logits)))
+    draft0 = model.init_params(train.DRAFT_CONFIG, seed=13)
+    out = train.finetune_draft(dict(draft0), target_params, distill_set, synth, tc,
+                               "tvd", lambda ck, p: None, capture=capture)
+    delta = sum(float(jnp.abs(out[key] - draft0[key]).sum()) for key in draft0)
+    assert delta > 0.0
+    with pytest.raises(ValueError, match="parallel"):
+        train.finetune_draft(dict(draft0), target_params, distill_set, synth, tc,
+                             "tvd", lambda ck, p: None, capture=capture[:2])
+
+
 @pytest.mark.slow
 def test_pipeline_smoke_end_to_end(tmp_path):
     out = os.path.join(tmp_path, "run")

@@ -21,6 +21,11 @@
 //! verification draws) is identical to the single-sequence
 //! [`SpecDecoder::step`], so batch-stepped output token-matches the
 //! direct engine (pinned by `rust/tests/coordinator_integration.rs`).
+//!
+//! Two drivers sit on top: the latency-oriented [`crate::coordinator`]
+//! (serving, deadlines, streaming) and the throughput-oriented
+//! [`crate::datagen`] (`specd distill` saturation mode — no deadlines,
+//! every slot kept full until a token budget is met).
 
 use std::time::Instant;
 

@@ -1,0 +1,292 @@
+//! `specd distill` — offline bulk-generation driver (throughput mode).
+//!
+//! The serving coordinator optimizes latency under deadlines; this driver
+//! optimizes saturation. No HTTP, no deadlines, no streaming: it keeps
+//! every KV slot full from a deterministic seed-instruction stream
+//! ([`crate::workload::SeedStream`], dolly/cnndm/xsum — wmt excluded per
+//! the paper's OOD protocol) until a response-token budget is met, running
+//! the same lockstep [`BatchStep`] the server uses so per-phase dispatch
+//! locality carries over unchanged.
+//!
+//! Each finished sequence becomes one [`DistillRecord`]: seed prompt,
+//! target-verified response, and the target's top-k raw logits per
+//! response position ([`crate::spec::LogitCapture`]) so the finetuning
+//! step computes TVD++ against the true target distribution instead of
+//! one-hot samples. Records go through the checkpointing
+//! [`DatasetWriter`]: complete shards only, atomic manifest updates, and
+//! duplicate-free resume by fast-forwarding the deterministic stream past
+//! the committed prefix.
+//!
+//! This is phase 2 of the paper's pipeline (§2.2) on the Rust serving
+//! stack; `python/compile/train.py --distill-data <dir>` consumes the
+//! shards directly.
+//!
+//! Error policy: generation failures abort the run (fail fast). The
+//! manifest only ever lists complete shards, so a rerun resumes at the
+//! last checkpoint; nothing is duplicated and nothing is silently skipped
+//! (a skipped seed would desynchronize the resume stream).
+
+use std::path::Path;
+use std::time::Instant;
+
+use crate::batch::{BatchStep, Lane, LaneOutcome};
+use crate::config::SamplingConfig;
+use crate::dataset::{DatasetMeta, DatasetWriter, DistillRecord};
+use crate::error::Result;
+use crate::kvcache::{SlotId, SlotPool};
+use crate::metrics::DistillMetrics;
+use crate::rng::Pcg64;
+use crate::spec::{SpecDecoder, SpecSession};
+use crate::workload::{EvalSuite, SeedPrompt, SeedStream};
+
+/// Configuration of one bulk-generation run.
+#[derive(Debug, Clone)]
+pub struct DistillConfig {
+    /// (task, weight) seed mixture (wmt rejected by the stream).
+    pub mix: Vec<(String, f64)>,
+    /// Target sampling temperature grid (paper §3: {0, 0.3, 0.7, 1.0}).
+    pub temperatures: Vec<f32>,
+    /// Nucleus mass for sampled temperatures (paper §3: 0.95).
+    pub top_p: f32,
+    /// Stop admitting new sequences once this many response tokens are
+    /// appended (dataset lifetime, so resumed runs count their prefix).
+    /// Active lanes drain, so the final count can overshoot by up to
+    /// `max_slots * max_new`.
+    pub token_budget: usize,
+    /// Captured (id, logit) pairs per response position; 0 disables capture.
+    pub topk: usize,
+    /// Response length cap per sequence.
+    pub max_new: usize,
+    /// KV slot-pool capacity (resident sequences — the memory budget).
+    pub max_slots: usize,
+    pub records_per_shard: usize,
+    pub seed: u64,
+    pub out_dir: String,
+}
+
+impl Default for DistillConfig {
+    fn default() -> Self {
+        DistillConfig {
+            mix: vec![
+                ("dolly".to_string(), 0.5),
+                ("cnndm".to_string(), 0.3),
+                ("xsum".to_string(), 0.2),
+            ],
+            temperatures: vec![0.0, 0.3, 0.7, 1.0],
+            top_p: 0.95,
+            token_budget: 4096,
+            topk: 8,
+            max_new: 64,
+            max_slots: 4,
+            records_per_shard: 256,
+            seed: 0,
+            out_dir: "shards".to_string(),
+        }
+    }
+}
+
+impl DistillConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.mix.is_empty() {
+            return Err(crate::Error::msg("distill: empty task mix"));
+        }
+        if self.temperatures.is_empty() {
+            return Err(crate::Error::msg("distill: empty temperature grid"));
+        }
+        if !(0.0..=1.0).contains(&self.top_p) || self.top_p == 0.0 {
+            return Err(crate::Error::msg(format!("distill: top_p={} not in (0,1]", self.top_p)));
+        }
+        if self.max_new == 0 {
+            return Err(crate::Error::msg("distill: max_new must be >= 1"));
+        }
+        if self.max_slots == 0 {
+            return Err(crate::Error::msg("distill: max_slots must be >= 1"));
+        }
+        if self.records_per_shard == 0 {
+            return Err(crate::Error::msg("distill: records_per_shard must be >= 1"));
+        }
+        for t in &self.temperatures {
+            if !t.is_finite() || *t < 0.0 {
+                return Err(crate::Error::msg(format!("distill: bad temperature {t}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One resident generation lane (the distill analogue of the
+/// coordinator's `Active`, minus everything latency-related).
+struct GenLane {
+    sp: SeedPrompt,
+    session: SpecSession,
+    sampling: SamplingConfig,
+    rng: Pcg64,
+    slot: SlotId,
+}
+
+/// Run bulk generation until the token budget is met and all lanes drain.
+/// Returns this run's aggregate metrics; the dataset (shards + manifest)
+/// is on disk under `cfg.out_dir`.
+pub fn run_distill(
+    decoder: &SpecDecoder<'_>,
+    suite: &EvalSuite,
+    cfg: &DistillConfig,
+) -> Result<DistillMetrics> {
+    cfg.validate()?;
+    let topk = cfg.topk.min(decoder.target.vocab_size());
+    let meta = DatasetMeta {
+        topk,
+        seed: cfg.seed,
+        mix: cfg.mix.clone(),
+        temperatures: cfg.temperatures.clone(),
+        top_p: cfg.top_p,
+        max_new: cfg.max_new,
+        records_per_shard: cfg.records_per_shard,
+        gamma: decoder.gamma,
+        draft_model: decoder.draft.name.clone(),
+        target_model: decoder.target.name.clone(),
+    };
+    let mut writer = DatasetWriter::open_or_create(Path::new(&cfg.out_dir), meta)?;
+    let mut stream = SeedStream::new(suite, cfg.mix.clone(), cfg.temperatures.clone(), cfg.seed)?;
+    stream.skip(writer.resume_records());
+
+    let mut metrics = DistillMetrics {
+        resumed_records: writer.resume_records() as usize,
+        ..DistillMetrics::default()
+    };
+    let mut total_tokens = writer.resume_response_tokens() as usize;
+
+    // Same +1 headroom as the coordinator: the sequence mirror can exceed
+    // processed positions by the final bonus token.
+    let slot_cap = decoder.target.max_seq() + 1;
+    let mut pool: SlotPool<u64> = SlotPool::new(cfg.max_slots);
+    let mut active: Vec<GenLane> = Vec::new();
+    let wall0 = Instant::now();
+
+    loop {
+        // --- admission: saturate the pool while the budget is unmet ------
+        while total_tokens < cfg.token_budget && pool.available() > 0 {
+            let sp = stream.next_prompt();
+            let mut session = decoder.start(&sp.prompt)?;
+            session.enable_capture(topk);
+            let slot = pool.alloc(sp.index, slot_cap)?;
+            pool.get_mut(slot)?.advance(session.prompt_len)?;
+            let sampling = SamplingConfig {
+                temperature: sp.temperature,
+                top_p: cfg.top_p,
+                seed: sp.sampling_seed,
+            };
+            let rng = Pcg64::with_stream(sp.sampling_seed, 0xd157);
+            active.push(GenLane { sp, session, sampling, rng, slot });
+        }
+        if active.is_empty() {
+            break; // budget met and every lane drained
+        }
+
+        // --- one lockstep batch step across all lanes --------------------
+        let (outcomes, timings) = {
+            let mut lanes: Vec<Lane<'_>> = active
+                .iter_mut()
+                .map(|l| Lane { session: &mut l.session, sampling: l.sampling, rng: &mut l.rng })
+                .collect();
+            BatchStep::run(decoder, &mut lanes)
+        };
+        metrics.batch_iterations += 1;
+        metrics.phase_draft_sync_seconds += timings.draft_sync;
+        metrics.phase_propose_seconds += timings.propose;
+        metrics.phase_verify_seconds += timings.verify;
+
+        let mut survivors = Vec::with_capacity(active.len());
+        for (mut lane, outcome) in active.drain(..).zip(outcomes) {
+            match outcome {
+                LaneOutcome::Emitted(emitted) => {
+                    pool.get_mut(lane.slot)?.advance(emitted.len())?;
+                    if lane.session.finished || lane.session.generated().len() >= cfg.max_new {
+                        pool.free(lane.slot)?;
+                        total_tokens += commit(&mut writer, &mut metrics, &mut lane, cfg.max_new)?;
+                    } else {
+                        survivors.push(lane);
+                    }
+                }
+                LaneOutcome::Idle => {
+                    // Context capacity reached; the partial response is a
+                    // valid (short) record.
+                    pool.free(lane.slot)?;
+                    total_tokens += commit(&mut writer, &mut metrics, &mut lane, cfg.max_new)?;
+                }
+                LaneOutcome::Failed(e) => {
+                    pool.free(lane.slot)?;
+                    return Err(e); // fail fast; resume regenerates the tail
+                }
+            }
+        }
+        active = survivors;
+    }
+
+    metrics.pool_peak_slots = pool.peak_live;
+    let summary = writer.finish()?;
+    metrics.shards_written = summary.shards_written;
+    metrics.shard_bytes = summary.bytes_written;
+    metrics.wall_seconds = wall0.elapsed().as_secs_f64();
+    Ok(metrics)
+}
+
+/// Finish one lane: clip response + stats + capture to `max_new`, fold the
+/// counters, and append the record. Returns the response token count.
+fn commit(
+    writer: &mut DatasetWriter,
+    metrics: &mut DistillMetrics,
+    lane: &mut GenLane,
+    max_new: usize,
+) -> Result<usize> {
+    let mut response = lane.session.generated().to_vec();
+    response.truncate(max_new);
+    let mut stats = lane.session.stats;
+    stats.clip_to_delivered(response.len());
+    let mut cap = lane.session.capture.take().unwrap_or_default();
+    cap.clip_to(response.len());
+    metrics.capture_seconds += cap.seconds;
+    metrics.spec.merge(&stats);
+    metrics.sequences += 1;
+    metrics.response_tokens += response.len();
+    let n = response.len();
+    writer.append(DistillRecord {
+        seq_index: lane.sp.index,
+        task: lane.sp.task.clone(),
+        temperature: lane.sp.temperature,
+        prompt: lane.sp.prompt.clone(),
+        response,
+        topk: cap.rows,
+    })?;
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    // run_distill needs compiled artifacts; the end-to-end path (tiny
+    // budget, round-trip through the reader, duplicate-free resume) lives
+    // in rust/tests/distill_integration.rs. Pure config validation here.
+    use super::DistillConfig;
+
+    #[test]
+    fn default_config_valid() {
+        DistillConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_configs() {
+        let cases = [
+            DistillConfig { temperatures: vec![], ..DistillConfig::default() },
+            DistillConfig { temperatures: vec![-0.5], ..DistillConfig::default() },
+            DistillConfig { top_p: 0.0, ..DistillConfig::default() },
+            DistillConfig { top_p: 1.5, ..DistillConfig::default() },
+            DistillConfig { max_slots: 0, ..DistillConfig::default() },
+            DistillConfig { max_new: 0, ..DistillConfig::default() },
+            DistillConfig { records_per_shard: 0, ..DistillConfig::default() },
+            DistillConfig { mix: vec![], ..DistillConfig::default() },
+        ];
+        for c in cases {
+            assert!(c.validate().is_err(), "should reject: {c:?}");
+        }
+    }
+}

@@ -1,0 +1,910 @@
+//! Sharded on-disk distillation dataset: framed records + JSON manifest.
+//!
+//! `specd distill` writes target-generated training data as a directory of
+//! shard files plus a manifest:
+//!
+//! ```text
+//! out/
+//!   manifest.json      dataset metadata + per-shard checksums
+//!   shard-00000.spds   complete shards only (atomic tmp+rename)
+//!   shard-00001.spds
+//! ```
+//!
+//! ## Shard layout (little-endian, `SPCD1`-style framing)
+//!
+//! ```text
+//! magic     6 bytes   "SPDS1\0"
+//! topk      u16       captured (id, logit) pairs per response position
+//! reserved  u16       0
+//! then framed records until EOF:
+//!   seq_index    u64    global sequence index (contiguous from 0)
+//!   task_id      u8     index into the manifest's "mix" list
+//!   temperature  f32    target sampling temperature for this record
+//!   prompt_len   u32
+//!   resp_len     u32
+//!   prompt       u32 × prompt_len
+//!   response     u32 × resp_len
+//!   capture      resp_len × [ids u32 × topk, logits f32 × topk]
+//!                (absent when topk = 0; logits are RAW pre-temperature
+//!                 rows, descending, so the finetuning step applies its
+//!                 own softmax)
+//! ```
+//!
+//! `python/compile/data.py::load_distill_shards` reads the same layout so
+//! `train.py` consumes the shards directly.
+//!
+//! ## Durability / resume
+//!
+//! Shards are buffered in memory and written in one atomic tmp+rename once
+//! complete; the manifest (also tmp+rename) lists complete shards only.
+//! Records are committed strictly in `seq_index` order (a small reorder
+//! buffer absorbs out-of-order lane completions), so the manifest's
+//! `records_total` is exactly the length of the durably-committed prefix
+//! `[0, records_total)`. Resume = re-open the directory, discard any stray
+//! shard file the manifest doesn't list (a write aborted mid-flight), and
+//! regenerate from `records_total` — the seed stream is deterministic
+//! ([`crate::workload::SeedStream`]), so the regenerated records are
+//! identical and nothing is duplicated.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::json::Value;
+use crate::runtime::TopkRow;
+
+/// Shard file magic.
+pub const SHARD_MAGIC: &[u8; 6] = b"SPDS1\x00";
+/// Manifest `format` tag.
+pub const FORMAT_TAG: &str = "SPDD1";
+/// Manifest filename inside a dataset directory.
+pub const MANIFEST_NAME: &str = "manifest.json";
+
+/// FNV-1a 64 — the per-shard checksum (no external crates; bit-rot
+/// detection is the goal, not collision resistance).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// One generated sequence: seed prompt, target response, and (optionally)
+/// the target's top-k raw logits per response position.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DistillRecord {
+    pub seq_index: u64,
+    pub task: String,
+    pub temperature: f32,
+    pub prompt: Vec<u32>,
+    pub response: Vec<u32>,
+    /// One row per response position when capture is on (`meta.topk > 0`),
+    /// empty otherwise.
+    pub topk: Vec<TopkRow>,
+}
+
+/// Dataset-level metadata, persisted in the manifest. On resume it must
+/// match the run's configuration exactly: a different mix / seed /
+/// temperature grid would produce a different seed stream and break the
+/// duplicate-free resume contract.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetMeta {
+    /// Captured (id, logit) pairs per response position; 0 disables capture.
+    pub topk: usize,
+    pub seed: u64,
+    /// (task, weight) mixture; record `task_id` indexes into this list.
+    pub mix: Vec<(String, f64)>,
+    pub temperatures: Vec<f32>,
+    pub top_p: f32,
+    pub max_new: usize,
+    pub records_per_shard: usize,
+    /// Provenance (informational, still resume-checked: a different
+    /// draft/target/gamma generates different data).
+    pub gamma: usize,
+    pub draft_model: String,
+    pub target_model: String,
+}
+
+impl DatasetMeta {
+    fn validate(&self) -> Result<()> {
+        if self.topk > u16::MAX as usize {
+            return Err(Error::msg(format!("topk {} exceeds the u16 shard header", self.topk)));
+        }
+        if self.mix.is_empty() {
+            return Err(Error::msg("dataset meta: empty task mix"));
+        }
+        if self.mix.len() > u8::MAX as usize {
+            return Err(Error::msg("dataset meta: more than 255 tasks"));
+        }
+        if self.records_per_shard == 0 {
+            return Err(Error::msg("records_per_shard must be >= 1"));
+        }
+        Ok(())
+    }
+
+    fn task_id(&self, task: &str) -> Result<u8> {
+        self.mix
+            .iter()
+            .position(|(t, _)| t == task)
+            .map(|i| i as u8)
+            .ok_or_else(|| Error::msg(format!("record task '{task}' not in the dataset mix")))
+    }
+
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("format", Value::Str(FORMAT_TAG.to_string())),
+            ("topk", Value::Num(self.topk as f64)),
+            // String, not Num: JSON numbers are f64 and a u64 seed above
+            // 2^53 would round, making an identical rerun fail the resume
+            // meta check.
+            ("seed", Value::Str(self.seed.to_string())),
+            (
+                "mix",
+                Value::Arr(
+                    self.mix
+                        .iter()
+                        .map(|(t, w)| {
+                            Value::obj(vec![
+                                ("task", Value::Str(t.clone())),
+                                ("weight", Value::Num(*w)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "temperatures",
+                Value::Arr(self.temperatures.iter().map(|&t| Value::Num(t as f64)).collect()),
+            ),
+            ("top_p", Value::Num(self.top_p as f64)),
+            ("max_new", Value::Num(self.max_new as f64)),
+            ("records_per_shard", Value::Num(self.records_per_shard as f64)),
+            ("gamma", Value::Num(self.gamma as f64)),
+            ("draft_model", Value::Str(self.draft_model.clone())),
+            ("target_model", Value::Str(self.target_model.clone())),
+        ])
+    }
+
+    fn from_json(v: &Value) -> Result<DatasetMeta> {
+        if v.req_str("format")? != FORMAT_TAG {
+            return Err(Error::Manifest(format!(
+                "dataset manifest: format '{}' is not {FORMAT_TAG}",
+                v.req_str("format")?
+            )));
+        }
+        let mix = v
+            .get("mix")
+            .as_arr()
+            .ok_or_else(|| Error::Manifest("dataset manifest: missing mix".into()))?
+            .iter()
+            .map(|e| Ok((e.req_str("task")?.to_string(), e.req_f64("weight")?)))
+            .collect::<Result<Vec<_>>>()?;
+        let temperatures = v
+            .get("temperatures")
+            .as_arr()
+            .ok_or_else(|| Error::Manifest("dataset manifest: missing temperatures".into()))?
+            .iter()
+            .map(|e| {
+                e.as_f64()
+                    .map(|t| t as f32)
+                    .ok_or_else(|| Error::Manifest("dataset manifest: bad temperature".into()))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let seed_str = v.req_str("seed")?;
+        let seed = seed_str
+            .parse::<u64>()
+            .map_err(|_| Error::Manifest(format!("dataset manifest: bad seed '{seed_str}'")))?;
+        Ok(DatasetMeta {
+            topk: v.req_usize("topk")?,
+            seed,
+            mix,
+            temperatures,
+            top_p: v.req_f64("top_p")? as f32,
+            max_new: v.req_usize("max_new")?,
+            records_per_shard: v.req_usize("records_per_shard")?,
+            gamma: v.req_usize("gamma")?,
+            draft_model: v.req_str("draft_model")?.to_string(),
+            target_model: v.req_str("target_model")?.to_string(),
+        })
+    }
+}
+
+/// Manifest entry for one complete shard.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardInfo {
+    pub file: String,
+    pub records: usize,
+    pub response_tokens: usize,
+    pub bytes: u64,
+    pub fnv64: u64,
+}
+
+/// This-run totals returned by [`DatasetWriter::finish`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DatasetSummary {
+    /// Records durably committed across the dataset's lifetime.
+    pub records_total: u64,
+    pub response_tokens_total: u64,
+    /// Shards / bytes written by THIS run (excludes resumed shards).
+    pub shards_written: usize,
+    pub bytes_written: u64,
+}
+
+/// Checkpointing shard writer. See the module docs for the durability and
+/// resume contract.
+pub struct DatasetWriter {
+    dir: PathBuf,
+    meta: DatasetMeta,
+    shards: Vec<ShardInfo>,
+    /// Records committed at open time (the resume point).
+    resumed_records: u64,
+    resumed_response_tokens: u64,
+    /// Next expected seq_index == contiguously drained record count.
+    next_seq_index: u64,
+    /// Out-of-order completions waiting for the contiguous prefix.
+    pending: BTreeMap<u64, DistillRecord>,
+    /// Encoded records of the in-progress shard (header prepended at flush).
+    cur: Vec<u8>,
+    cur_records: usize,
+    cur_response_tokens: usize,
+    shards_written: usize,
+    bytes_written: u64,
+}
+
+impl DatasetWriter {
+    /// Open `dir` for appending: fresh directory ⇒ new dataset; existing
+    /// manifest ⇒ resume (meta must match exactly; stray shard files not in
+    /// the manifest — aborted mid-flight writes — are deleted).
+    pub fn open_or_create(dir: &Path, meta: DatasetMeta) -> Result<DatasetWriter> {
+        meta.validate()?;
+        std::fs::create_dir_all(dir)?;
+        let manifest_path = dir.join(MANIFEST_NAME);
+        let (shards, resumed_records, resumed_tokens) = if manifest_path.exists() {
+            let existing = DatasetReader::open(dir)?;
+            // Bit-rot in the committed prefix must surface NOW, not after
+            // this run spends its whole budget extending a broken dataset.
+            existing.verify()?;
+            if existing.meta != meta {
+                return Err(Error::Manifest(format!(
+                    "dataset at {} was generated with a different configuration; \
+                     resume would duplicate or skip records (delete the directory \
+                     or rerun with the original flags)",
+                    dir.display()
+                )));
+            }
+            let known: Vec<&str> = existing.shards.iter().map(|s| s.file.as_str()).collect();
+            for entry in std::fs::read_dir(dir)? {
+                let entry = entry?;
+                let name = entry.file_name().to_string_lossy().to_string();
+                let is_shard = name.starts_with("shard-")
+                    && (name.ends_with(".spds") || name.ends_with(".tmp"));
+                if is_shard && !known.contains(&name.as_str()) {
+                    std::fs::remove_file(entry.path())?;
+                }
+            }
+            let records: u64 = existing.shards.iter().map(|s| s.records as u64).sum();
+            let tokens: u64 = existing.shards.iter().map(|s| s.response_tokens as u64).sum();
+            (existing.shards, records, tokens)
+        } else {
+            (Vec::new(), 0, 0)
+        };
+        let mut w = DatasetWriter {
+            dir: dir.to_path_buf(),
+            meta,
+            shards,
+            resumed_records,
+            resumed_response_tokens: resumed_tokens,
+            next_seq_index: resumed_records,
+            pending: BTreeMap::new(),
+            cur: Vec::new(),
+            cur_records: 0,
+            cur_response_tokens: 0,
+            shards_written: 0,
+            bytes_written: 0,
+        };
+        // A valid (possibly empty) manifest exists from the first moment, so
+        // an interrupted run before the first shard still resumes cleanly.
+        w.write_manifest()?;
+        Ok(w)
+    }
+
+    /// Records durably committed before this run (the seed-stream
+    /// fast-forward distance).
+    pub fn resume_records(&self) -> u64 {
+        self.resumed_records
+    }
+
+    /// Response tokens durably committed before this run.
+    pub fn resume_response_tokens(&self) -> u64 {
+        self.resumed_response_tokens
+    }
+
+    /// Append one record. Records may arrive out of `seq_index` order
+    /// (lanes finish when they finish); they are committed in order, and a
+    /// duplicate or already-committed index is an error.
+    pub fn append(&mut self, rec: DistillRecord) -> Result<()> {
+        if rec.seq_index < self.next_seq_index || self.pending.contains_key(&rec.seq_index) {
+            return Err(Error::msg(format!(
+                "duplicate record seq_index {} (next expected {})",
+                rec.seq_index, self.next_seq_index
+            )));
+        }
+        self.pending.insert(rec.seq_index, rec);
+        while let Some(rec) = self.pending.remove(&self.next_seq_index) {
+            let task_id = self.meta.task_id(&rec.task)?;
+            // Encode to a scratch buffer first so a malformed record cannot
+            // leave half a frame in the shard.
+            let mut frame = Vec::new();
+            encode_record(&mut frame, &rec, task_id, self.meta.topk)?;
+            self.cur.extend_from_slice(&frame);
+            self.next_seq_index += 1;
+            self.cur_records += 1;
+            self.cur_response_tokens += rec.response.len();
+            if self.cur_records == self.meta.records_per_shard {
+                self.flush_shard()?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Flush the in-progress shard (short final shards are fine) and write
+    /// the final manifest. Errors if out-of-order records never filled in —
+    /// a hole would silently corrupt the resume contract.
+    pub fn finish(mut self) -> Result<DatasetSummary> {
+        if let Some((&idx, _)) = self.pending.iter().next() {
+            return Err(Error::msg(format!(
+                "record stream has a hole: seq_index {} missing, {} held back",
+                self.next_seq_index, idx
+            )));
+        }
+        if self.cur_records > 0 {
+            self.flush_shard()?;
+        } else {
+            self.write_manifest()?;
+        }
+        Ok(DatasetSummary {
+            records_total: self.next_seq_index,
+            response_tokens_total: self
+                .shards
+                .iter()
+                .map(|s| s.response_tokens as u64)
+                .sum::<u64>(),
+            shards_written: self.shards_written,
+            bytes_written: self.bytes_written,
+        })
+    }
+
+    fn flush_shard(&mut self) -> Result<()> {
+        let mut bytes = Vec::with_capacity(10 + self.cur.len());
+        bytes.extend_from_slice(SHARD_MAGIC);
+        bytes.extend_from_slice(&(self.meta.topk as u16).to_le_bytes());
+        bytes.extend_from_slice(&0u16.to_le_bytes());
+        bytes.extend_from_slice(&self.cur);
+        let info = ShardInfo {
+            file: format!("shard-{:05}.spds", self.shards.len()),
+            records: self.cur_records,
+            response_tokens: self.cur_response_tokens,
+            bytes: bytes.len() as u64,
+            fnv64: fnv1a64(&bytes),
+        };
+        write_atomic(&self.dir.join(&info.file), &bytes)?;
+        self.bytes_written += info.bytes;
+        self.shards_written += 1;
+        self.shards.push(info);
+        self.cur.clear();
+        self.cur_records = 0;
+        self.cur_response_tokens = 0;
+        self.write_manifest()
+    }
+
+    fn write_manifest(&self) -> Result<()> {
+        let records_total: u64 = self.shards.iter().map(|s| s.records as u64).sum();
+        let tokens_total: u64 = self.shards.iter().map(|s| s.response_tokens as u64).sum();
+        let mut obj = match self.meta.to_json() {
+            Value::Obj(o) => o,
+            _ => unreachable!("meta serializes to an object"),
+        };
+        obj.insert("records_total".into(), Value::Num(records_total as f64));
+        obj.insert("response_tokens_total".into(), Value::Num(tokens_total as f64));
+        obj.insert(
+            "shards".into(),
+            Value::Arr(
+                self.shards
+                    .iter()
+                    .map(|s| {
+                        Value::obj(vec![
+                            ("file", Value::Str(s.file.clone())),
+                            ("records", Value::Num(s.records as f64)),
+                            ("response_tokens", Value::Num(s.response_tokens as f64)),
+                            ("bytes", Value::Num(s.bytes as f64)),
+                            ("fnv64", Value::Str(format!("{:016x}", s.fnv64))),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
+        write_atomic(
+            &self.dir.join(MANIFEST_NAME),
+            Value::Obj(obj).to_string_pretty().as_bytes(),
+        )
+    }
+}
+
+/// tmp + fsync + rename + fsync(dir): the rename must not reach disk
+/// before the data blocks do, or a power loss leaves a manifest-listed
+/// shard full of garbage — which `open_or_create`'s verify pass would
+/// reject, bricking resume for the whole dataset.
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    use std::io::Write;
+    let tmp = path.with_extension("tmp");
+    let mut f = std::fs::File::create(&tmp)?;
+    f.write_all(bytes)?;
+    f.sync_all()?;
+    drop(f);
+    std::fs::rename(&tmp, path)?;
+    if let Some(dir) = path.parent() {
+        // Persist the rename itself (directory entry). Directories can't
+        // be fsynced on some platforms (e.g. Windows); best effort there.
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+/// Reader for a dataset directory: manifest + checksum-verified shards.
+pub struct DatasetReader {
+    dir: PathBuf,
+    pub meta: DatasetMeta,
+    pub shards: Vec<ShardInfo>,
+    pub records_total: u64,
+    pub response_tokens_total: u64,
+}
+
+impl DatasetReader {
+    pub fn open(dir: &Path) -> Result<DatasetReader> {
+        let path = dir.join(MANIFEST_NAME);
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::Manifest(format!("cannot read {}: {e}", path.display())))?;
+        let v = Value::parse(&text)?;
+        let meta = DatasetMeta::from_json(&v)?;
+        let shards = v
+            .get("shards")
+            .as_arr()
+            .ok_or_else(|| Error::Manifest("dataset manifest: missing shards".into()))?
+            .iter()
+            .map(|s| {
+                let hex = s.req_str("fnv64")?;
+                let fnv64 = u64::from_str_radix(hex, 16)
+                    .map_err(|_| Error::Manifest(format!("bad shard checksum '{hex}'")))?;
+                Ok(ShardInfo {
+                    file: s.req_str("file")?.to_string(),
+                    records: s.req_usize("records")?,
+                    response_tokens: s.req_usize("response_tokens")?,
+                    bytes: s.req_usize("bytes")? as u64,
+                    fnv64,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let records_total = v.req_usize("records_total")? as u64;
+        if shards.iter().map(|s| s.records as u64).sum::<u64>() != records_total {
+            return Err(Error::Manifest("dataset manifest: records_total mismatch".into()));
+        }
+        Ok(DatasetReader {
+            dir: dir.to_path_buf(),
+            response_tokens_total: v.req_usize("response_tokens_total")? as u64,
+            meta,
+            shards,
+            records_total,
+        })
+    }
+
+    /// Read and fully validate shard `i`: byte count + FNV checksum against
+    /// the manifest, record framing, and `seq_index` contiguity.
+    pub fn read_shard(&self, i: usize) -> Result<Vec<DistillRecord>> {
+        let info = self
+            .shards
+            .get(i)
+            .ok_or_else(|| Error::Manifest(format!("no shard index {i}")))?;
+        let path = self.dir.join(&info.file);
+        let bytes = std::fs::read(&path)
+            .map_err(|e| Error::Manifest(format!("cannot read {}: {e}", path.display())))?;
+        if bytes.len() as u64 != info.bytes {
+            return Err(Error::Manifest(format!(
+                "{}: {} bytes on disk, manifest says {}",
+                info.file,
+                bytes.len(),
+                info.bytes
+            )));
+        }
+        let sum = fnv1a64(&bytes);
+        if sum != info.fnv64 {
+            return Err(Error::Manifest(format!(
+                "{}: checksum mismatch ({sum:016x} != {:016x})",
+                info.file, info.fnv64
+            )));
+        }
+        let mut cur = Cursor { bytes: &bytes[..], pos: 0 };
+        if cur.take(6)? != SHARD_MAGIC {
+            return Err(Error::Manifest(format!("{}: bad shard magic", info.file)));
+        }
+        let topk = cur.u16()? as usize;
+        if topk != self.meta.topk {
+            return Err(Error::Manifest(format!(
+                "{}: shard topk {topk} != manifest topk {}",
+                info.file, self.meta.topk
+            )));
+        }
+        let _reserved = cur.u16()?;
+        let mut expected: u64 = self.shards[..i].iter().map(|s| s.records as u64).sum();
+        let mut out = Vec::with_capacity(info.records);
+        while cur.pos < bytes.len() {
+            let rec = decode_record(&mut cur, &self.meta, topk)?;
+            if rec.seq_index != expected {
+                return Err(Error::Manifest(format!(
+                    "{}: seq_index {} where {expected} expected",
+                    info.file, rec.seq_index
+                )));
+            }
+            expected += 1;
+            out.push(rec);
+        }
+        if out.len() != info.records {
+            return Err(Error::Manifest(format!(
+                "{}: {} records on disk, manifest says {}",
+                info.file,
+                out.len(),
+                info.records
+            )));
+        }
+        Ok(out)
+    }
+
+    /// All records across all shards, fully validated.
+    pub fn read_all(&self) -> Result<Vec<DistillRecord>> {
+        let mut out = Vec::new();
+        for i in 0..self.shards.len() {
+            out.extend(self.read_shard(i)?);
+        }
+        Ok(out)
+    }
+
+    /// Validate every shard without keeping records in memory.
+    pub fn verify(&self) -> Result<()> {
+        for i in 0..self.shards.len() {
+            self.read_shard(i)?;
+        }
+        Ok(())
+    }
+}
+
+fn encode_record(out: &mut Vec<u8>, rec: &DistillRecord, task_id: u8, topk: usize) -> Result<()> {
+    if topk > 0 && rec.topk.len() != rec.response.len() {
+        return Err(Error::msg(format!(
+            "record {}: {} capture rows for {} response tokens",
+            rec.seq_index,
+            rec.topk.len(),
+            rec.response.len()
+        )));
+    }
+    out.extend_from_slice(&rec.seq_index.to_le_bytes());
+    out.push(task_id);
+    out.extend_from_slice(&rec.temperature.to_le_bytes());
+    out.extend_from_slice(&(rec.prompt.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(rec.response.len() as u32).to_le_bytes());
+    for &t in &rec.prompt {
+        out.extend_from_slice(&t.to_le_bytes());
+    }
+    for &t in &rec.response {
+        out.extend_from_slice(&t.to_le_bytes());
+    }
+    if topk > 0 {
+        for row in &rec.topk {
+            if row.ids.len() != topk || row.logits.len() != topk {
+                return Err(Error::msg(format!(
+                    "record {}: capture row has {} entries, dataset topk is {topk}",
+                    rec.seq_index,
+                    row.ids.len()
+                )));
+            }
+            for &id in &row.ids {
+                out.extend_from_slice(&id.to_le_bytes());
+            }
+            for &l in &row.logits {
+                out.extend_from_slice(&l.to_le_bytes());
+            }
+        }
+    }
+    Ok(())
+}
+
+fn decode_record(cur: &mut Cursor<'_>, meta: &DatasetMeta, topk: usize) -> Result<DistillRecord> {
+    let seq_index = cur.u64()?;
+    let task_id = cur.u8()? as usize;
+    let task = meta
+        .mix
+        .get(task_id)
+        .map(|(t, _)| t.clone())
+        .ok_or_else(|| Error::Manifest(format!("record {seq_index}: task_id {task_id} out of range")))?;
+    let temperature = cur.f32()?;
+    let prompt_len = cur.u32()? as usize;
+    let resp_len = cur.u32()? as usize;
+    let mut prompt = Vec::with_capacity(prompt_len);
+    for _ in 0..prompt_len {
+        prompt.push(cur.u32()?);
+    }
+    let mut response = Vec::with_capacity(resp_len);
+    for _ in 0..resp_len {
+        response.push(cur.u32()?);
+    }
+    let mut rows = Vec::new();
+    if topk > 0 {
+        rows.reserve(resp_len);
+        for _ in 0..resp_len {
+            let mut ids = Vec::with_capacity(topk);
+            for _ in 0..topk {
+                ids.push(cur.u32()?);
+            }
+            let mut logits = Vec::with_capacity(topk);
+            for _ in 0..topk {
+                logits.push(cur.f32()?);
+            }
+            rows.push(TopkRow { ids, logits });
+        }
+    }
+    Ok(DistillRecord { seq_index, task, temperature, prompt, response, topk: rows })
+}
+
+/// Bounds-checked little-endian reader. Deliberately a twin of the
+/// private cursor in [`crate::weights`] rather than a shared type: the
+/// weights parser's errors must stay `Error::Weights` (its loader matches
+/// on that variant to prepend the file path), while shard truncation is a
+/// manifest-level error here.
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.bytes.len() {
+            return Err(Error::Manifest("shard truncated mid-record".into()));
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("specd-dataset-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn meta(topk: usize, rps: usize) -> DatasetMeta {
+        DatasetMeta {
+            topk,
+            seed: 7,
+            mix: vec![("dolly".into(), 0.5), ("cnndm".into(), 0.3), ("xsum".into(), 0.2)],
+            temperatures: vec![0.0, 0.7],
+            top_p: 0.95,
+            max_new: 16,
+            records_per_shard: rps,
+            gamma: 3,
+            draft_model: "draft_tvdpp_ckpt4".into(),
+            target_model: "target".into(),
+        }
+    }
+
+    fn rec(i: u64, topk: usize) -> DistillRecord {
+        let response: Vec<u32> = (0..(3 + i as u32 % 4)).map(|j| 10 + j).collect();
+        let rows = (0..response.len())
+            .map(|p| TopkRow {
+                ids: (0..topk as u32).map(|k| k + p as u32).collect(),
+                logits: (0..topk).map(|k| (topk - k) as f32 + i as f32).collect(),
+            })
+            .collect();
+        DistillRecord {
+            seq_index: i,
+            task: ["dolly", "cnndm", "xsum"][i as usize % 3].to_string(),
+            temperature: if i % 2 == 0 { 0.0 } else { 0.7 },
+            prompt: vec![1, 3, 5 + i as u32, 4],
+            response,
+            topk: if topk > 0 { rows } else { Vec::new() },
+        }
+    }
+
+    #[test]
+    fn fnv_known_vectors() {
+        // Standard FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn roundtrip_multi_shard_with_capture() {
+        let dir = tmpdir("roundtrip");
+        let mut w = DatasetWriter::open_or_create(&dir, meta(4, 2)).unwrap();
+        let recs: Vec<DistillRecord> = (0..5).map(|i| rec(i, 4)).collect();
+        for r in &recs {
+            w.append(r.clone()).unwrap();
+        }
+        let summary = w.finish().unwrap();
+        assert_eq!(summary.records_total, 5);
+        assert_eq!(summary.shards_written, 3, "2 + 2 + 1 records");
+        assert!(summary.bytes_written > 0);
+
+        let r = DatasetReader::open(&dir).unwrap();
+        assert_eq!(r.meta, meta(4, 2));
+        assert_eq!(r.shards.len(), 3);
+        r.verify().unwrap();
+        let back = r.read_all().unwrap();
+        assert_eq!(back, recs);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn roundtrip_without_capture() {
+        let dir = tmpdir("nocapture");
+        let mut w = DatasetWriter::open_or_create(&dir, meta(0, 8)).unwrap();
+        for i in 0..3 {
+            w.append(rec(i, 0)).unwrap();
+        }
+        w.finish().unwrap();
+        let back = DatasetReader::open(&dir).unwrap().read_all().unwrap();
+        assert_eq!(back.len(), 3);
+        assert!(back.iter().all(|r| r.topk.is_empty()));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn out_of_order_appends_commit_in_order() {
+        let dir = tmpdir("ooo");
+        let mut w = DatasetWriter::open_or_create(&dir, meta(0, 4)).unwrap();
+        // Lanes finish out of order; commit order must still be 0,1,2,3.
+        for i in [2u64, 0, 3, 1] {
+            w.append(rec(i, 0)).unwrap();
+        }
+        assert!(w.append(rec(1, 0)).is_err(), "duplicate rejected");
+        w.finish().unwrap();
+        let back = DatasetReader::open(&dir).unwrap().read_all().unwrap();
+        let idx: Vec<u64> = back.iter().map(|r| r.seq_index).collect();
+        assert_eq!(idx, vec![0, 1, 2, 3]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn finish_rejects_holes() {
+        let dir = tmpdir("hole");
+        let mut w = DatasetWriter::open_or_create(&dir, meta(0, 4)).unwrap();
+        w.append(rec(0, 0)).unwrap();
+        w.append(rec(2, 0)).unwrap(); // 1 never arrives
+        assert!(w.finish().is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corruption_detected_by_checksum() {
+        let dir = tmpdir("corrupt");
+        let mut w = DatasetWriter::open_or_create(&dir, meta(2, 8)).unwrap();
+        for i in 0..2 {
+            w.append(rec(i, 2)).unwrap();
+        }
+        w.finish().unwrap();
+        let shard = dir.join("shard-00000.spds");
+        let mut bytes = std::fs::read(&shard).unwrap();
+        let n = bytes.len();
+        bytes[n / 2] ^= 0xff;
+        std::fs::write(&shard, bytes).unwrap();
+        let r = DatasetReader::open(&dir).unwrap();
+        assert!(r.read_shard(0).is_err(), "flipped byte must fail the checksum");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn resume_discards_partial_and_continues_without_duplicates() {
+        let dir = tmpdir("resume");
+        // First run: 3 records at 2/shard. Shard 0 (records 0-1) commits;
+        // record 2 is buffered and lost when the writer is dropped
+        // (simulated crash: no finish()).
+        let mut w = DatasetWriter::open_or_create(&dir, meta(2, 2)).unwrap();
+        for i in 0..3 {
+            w.append(rec(i, 2)).unwrap();
+        }
+        drop(w);
+        // A stray partial shard from the aborted run.
+        std::fs::write(dir.join("shard-00001.spds"), b"partial garbage").unwrap();
+
+        let mut w = DatasetWriter::open_or_create(&dir, meta(2, 2)).unwrap();
+        assert_eq!(w.resume_records(), 2, "only the committed shard counts");
+        assert!(!dir.join("shard-00001.spds").exists(), "stray shard removed");
+        // The deterministic stream regenerates records 2..5 identically.
+        for i in 2..5 {
+            w.append(rec(i, 2)).unwrap();
+        }
+        let summary = w.finish().unwrap();
+        assert_eq!(summary.records_total, 5);
+
+        let back = DatasetReader::open(&dir).unwrap().read_all().unwrap();
+        let idx: Vec<u64> = back.iter().map(|r| r.seq_index).collect();
+        assert_eq!(idx, vec![0, 1, 2, 3, 4], "contiguous, no duplicates");
+        assert_eq!(back, (0..5).map(|i| rec(i, 2)).collect::<Vec<_>>());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn resume_rejects_corrupted_committed_prefix() {
+        let dir = tmpdir("resume-corrupt");
+        let mut w = DatasetWriter::open_or_create(&dir, meta(2, 2)).unwrap();
+        for i in 0..2 {
+            w.append(rec(i, 2)).unwrap();
+        }
+        w.finish().unwrap();
+        // Bit-rot in the committed shard: resume must fail up front, not
+        // after spending a generation budget extending a broken dataset.
+        let shard = dir.join("shard-00000.spds");
+        let mut bytes = std::fs::read(&shard).unwrap();
+        let n = bytes.len();
+        bytes[n - 1] ^= 0x01;
+        std::fs::write(&shard, bytes).unwrap();
+        assert!(DatasetWriter::open_or_create(&dir, meta(2, 2)).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn resume_rejects_meta_mismatch() {
+        let dir = tmpdir("meta-mismatch");
+        let w = DatasetWriter::open_or_create(&dir, meta(2, 2)).unwrap();
+        w.finish().unwrap();
+        let mut other = meta(2, 2);
+        other.seed = 99;
+        assert!(DatasetWriter::open_or_create(&dir, other).is_err());
+        let mut other = meta(2, 2);
+        other.mix.pop();
+        assert!(DatasetWriter::open_or_create(&dir, other).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn capture_row_arity_enforced() {
+        let dir = tmpdir("arity");
+        let mut w = DatasetWriter::open_or_create(&dir, meta(4, 8)).unwrap();
+        let mut bad = rec(0, 4);
+        bad.topk.pop(); // one row short of response length
+        assert!(w.append(bad).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -52,13 +52,30 @@ impl Default for EvalOptions {
     }
 }
 
-/// Cached autoregressive baselines keyed by (task, n_prompts, max_new).
+/// Cached autoregressive baselines keyed by (task, n_prompts, max_new,
+/// seed). The seed is part of the key: the per-prompt sampler seeds derive
+/// from `EvalOptions::seed`, so a rerun with a different seed is a
+/// different measurement — omitting it silently reused a stale baseline.
 #[derive(Default)]
 pub struct ArBaselineCache {
-    cache: BTreeMap<(String, usize, usize), RateMeasurement>,
+    cache: BTreeMap<(String, usize, usize, u64), RateMeasurement>,
 }
 
 impl ArBaselineCache {
+    fn key(task: &str, opts: &EvalOptions) -> (String, usize, usize, u64) {
+        (task.to_string(), opts.n_prompts, opts.max_new, opts.seed)
+    }
+
+    /// Cached measurement for this (task, options) cell, if any.
+    pub fn get(&self, task: &str, opts: &EvalOptions) -> Option<RateMeasurement> {
+        self.cache.get(&Self::key(task, opts)).copied()
+    }
+
+    /// Record a measurement for this cell.
+    pub fn insert(&mut self, task: &str, opts: &EvalOptions, m: RateMeasurement) {
+        self.cache.insert(Self::key(task, opts), m);
+    }
+
     pub fn get_or_run(
         &mut self,
         target: &Model,
@@ -66,9 +83,8 @@ impl ArBaselineCache {
         task: &str,
         opts: &EvalOptions,
     ) -> Result<RateMeasurement> {
-        let key = (task.to_string(), opts.n_prompts, opts.max_new);
-        if let Some(m) = self.cache.get(&key) {
-            return Ok(*m);
+        if let Some(m) = self.get(task, opts) {
+            return Ok(m);
         }
         let decoder = ArDecoder::new(target);
         let examples = suite.take(task, opts.n_prompts)?;
@@ -82,7 +98,7 @@ impl ArBaselineCache {
             elapsed += rate.elapsed;
         }
         let m = RateMeasurement { new_tokens: tokens, elapsed };
-        self.cache.insert(key, m);
+        self.insert(task, opts, m);
         Ok(m)
     }
 }
@@ -199,5 +215,26 @@ mod tests {
     fn default_options_sane() {
         let o = EvalOptions::default();
         assert!(o.n_prompts > 0 && o.max_new > 0);
+    }
+
+    /// Regression: the AR baseline cache must key on the eval seed — the
+    /// old (task, n_prompts, max_new) key silently reused a stale baseline
+    /// when only the seed changed.
+    #[test]
+    fn ar_cache_distinguishes_seeds() {
+        let mut cache = ArBaselineCache::default();
+        let seed0 = EvalOptions { seed: 0, ..EvalOptions::default() };
+        let seed1 = EvalOptions { seed: 1, ..EvalOptions::default() };
+        let m = RateMeasurement {
+            new_tokens: 100,
+            elapsed: std::time::Duration::from_secs(1),
+        };
+        cache.insert("dolly", &seed0, m);
+        assert!(cache.get("dolly", &seed0).is_some(), "same seed hits");
+        assert!(cache.get("dolly", &seed1).is_none(), "different seed must re-measure");
+        assert!(cache.get("xsum", &seed0).is_none(), "different task must re-measure");
+        let other = EvalOptions { n_prompts: seed0.n_prompts + 1, ..seed0 };
+        assert!(cache.get("dolly", &other).is_none());
+        assert_eq!(cache.get("dolly", &seed0).unwrap().new_tokens, 100);
     }
 }

@@ -24,6 +24,8 @@
 //! | [`batch`] | batch-stepped phase executor (lockstep across sequences) |
 //! | [`baseline`] | plain autoregressive decoding (the paper's baseline) |
 //! | [`coordinator`] | request queue, slot-pool admission, batch scheduler |
+//! | [`datagen`] | `specd distill` bulk-generation driver (throughput mode) |
+//! | [`dataset`] | sharded distillation dataset: writer/reader, checksums |
 //! | [`http`] | HTTP/1.1 wire layer: parser, chunked/streaming writers |
 //! | [`server`] | TCP front end (L4): `/v1/generate`, `/healthz`, `/metrics` |
 //! | [`metrics`] | block efficiency, MBSU, token rate, latency histograms |
@@ -42,6 +44,8 @@ pub mod benchkit;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod datagen;
+pub mod dataset;
 pub mod error;
 pub mod eval;
 pub mod exec;

@@ -6,6 +6,8 @@
 //!   serve     run the HTTP serving subsystem (POST /v1/generate, streaming,
 //!             /healthz, /metrics) over the continuous-batching coordinator
 //!   replay    run a Poisson serving trace through the coordinator in-process
+//!   distill   bulk-generate a sharded distillation dataset from the target
+//!             (throughput mode; captures target top-k logits per position)
 //!   eval      evaluate one (draft, task, gamma) figure cell
 //!
 //! Examples:
@@ -13,6 +15,8 @@
 //!   specd generate --draft draft_tvdpp_ckpt4 --task dolly --gamma 5
 //!   specd serve --addr 127.0.0.1:8080 --max-slots 4 --gamma 3
 //!   specd replay --requests 32 --rate 2.0 --max-slots 4
+//!   specd distill --task-mix dolly:0.5,cnndm:0.3,xsum:0.2 \
+//!                 --tokens 1e6 --topk 8 --out shards/
 //!   specd eval --draft draft_kld_ckpt4 --task xsum --gamma 3
 //!
 //! (`--max-batch` is accepted as an alias of `--max-slots`.)
@@ -23,6 +27,7 @@ use specd::artifacts::Manifest;
 use specd::cli::Args;
 use specd::config::{RunConfig, SamplingConfig};
 use specd::coordinator::{Coordinator, Request, Response};
+use specd::datagen::{run_distill, DistillConfig};
 use specd::error::Result;
 use specd::eval::{eval_cell, render_cells, ArBaselineCache, EvalOptions};
 use specd::exec;
@@ -59,6 +64,14 @@ fn run() -> Result<()> {
         .opt("addr", "127.0.0.1:8080", "serve: HTTP bind address")
         .opt("http-workers", "8", "serve: connection handler threads")
         .opt("timeout-ms", "0", "serve: default per-request deadline (0 = none)")
+        .opt("task-mix", "dolly:0.5,cnndm:0.3,xsum:0.2",
+             "distill: task:weight seed mixture (wmt rejected — OOD)")
+        .opt("tokens", "4096", "distill: response-token budget (accepts 1e6)")
+        .opt("topk", "8", "distill: captured target (id, logit) pairs per position (0 = off)")
+        .opt("temperatures", "0,0.3,0.7,1.0", "distill: target temperature grid")
+        .opt("top-p", "0.95", "distill: nucleus mass for sampled temperatures")
+        .opt("shard-records", "256", "distill: records per shard (checkpoint granularity)")
+        .opt("out", "shards", "distill: dataset output directory")
         .opt("seed", "0", "random seed")
         .flag("baseline", "generate: use autoregressive decoding instead")
         .parse()?;
@@ -71,9 +84,10 @@ fn run() -> Result<()> {
         "generate" => generate(&manifest, &args),
         "serve" => serve_http(&manifest, &args),
         "replay" => replay(&manifest, &args),
+        "distill" => distill(&manifest, &args),
         "eval" => eval(&manifest, &args),
         other => Err(specd::Error::Cli(format!(
-            "unknown command '{other}' (expected info|generate|serve|replay|eval)"
+            "unknown command '{other}' (expected info|generate|serve|replay|distill|eval)"
         ))),
     }
 }
@@ -286,6 +300,50 @@ fn replay(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
     if errors > 0 {
         println!("errors: {errors}");
     }
+    Ok(())
+}
+
+/// `specd distill` — offline bulk generation of the distillation dataset
+/// (paper phase 2) in throughput mode: the batch-stepped scheduler runs in
+/// saturation with no HTTP and no deadlines, and every finished sequence
+/// lands in a checkpointed shard with the target's top-k logits captured
+/// per position. Re-running with the same flags resumes from the last
+/// complete shard without duplicating records.
+fn distill(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
+    let l = load(manifest, args.str("draft"), args.str("target"))?;
+    let decoder = SpecDecoder::new(&l.draft, &l.target, args.usize("gamma")?)?;
+    let temperatures = args
+        .list("temperatures")
+        .iter()
+        .map(|t| {
+            t.parse::<f32>()
+                .map_err(|_| specd::Error::Cli(format!("--temperatures: bad value '{t}'")))
+        })
+        .collect::<Result<Vec<f32>>>()?;
+    let token_budget = args.f64("tokens")?;
+    if !token_budget.is_finite() || token_budget < 0.0 {
+        return Err(specd::Error::Cli(format!("--tokens: bad budget {token_budget}")));
+    }
+    let cfg = DistillConfig {
+        mix: specd::workload::parse_task_mix(args.str("task-mix"))?,
+        temperatures,
+        top_p: args.f64("top-p")? as f32,
+        token_budget: token_budget as usize,
+        topk: args.usize("topk")?,
+        max_new: args.usize("max-new")?,
+        max_slots: args.usize("max-slots")?,
+        records_per_shard: args.usize("shard-records")?,
+        seed: args.u64("seed")?,
+        out_dir: args.str("out").to_string(),
+    };
+    let metrics = run_distill(&decoder, &l.suite, &cfg)?;
+    println!("{}", metrics.report());
+    // Textfile-collector exposition next to the dataset (there is no live
+    // endpoint in a batch run), so the specd_distill_* families land in
+    // the same Prometheus as the serving metrics.
+    let prom = std::path::Path::new(&cfg.out_dir).join("metrics.prom");
+    std::fs::write(&prom, metrics.prometheus_text()).map_err(specd::Error::Io)?;
+    println!("dataset: {}  (metrics: {})", cfg.out_dir, prom.display());
     Ok(())
 }
 

@@ -321,6 +321,101 @@ impl ServeMetrics {
     }
 }
 
+/// Aggregate for one `specd distill` bulk-generation run. Offline
+/// throughput mode: no latencies or deadlines — the numbers that matter
+/// are tokens/s of target-verified response tokens, bytes of shards
+/// written, and how much wall time the top-k capture path cost (compare a
+/// run against `--topk 0` for the marginal overhead).
+#[derive(Debug, Default)]
+pub struct DistillMetrics {
+    /// Records (sequences) written by this run.
+    pub sequences: usize,
+    /// Response tokens written by this run.
+    pub response_tokens: usize,
+    /// Records already durable when the run started (resume prefix).
+    pub resumed_records: usize,
+    /// Shards / bytes written by this run.
+    pub shards_written: usize,
+    pub shard_bytes: u64,
+    pub wall_seconds: f64,
+    /// Host seconds spent extracting top-k rows (0 with `--topk 0`).
+    pub capture_seconds: f64,
+    pub batch_iterations: usize,
+    pub phase_draft_sync_seconds: f64,
+    pub phase_propose_seconds: f64,
+    pub phase_verify_seconds: f64,
+    pub pool_peak_slots: usize,
+    pub spec: SpecStats,
+}
+
+impl DistillMetrics {
+    /// Generation throughput: response tokens per wall second.
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.wall_seconds == 0.0 {
+            0.0
+        } else {
+            self.response_tokens as f64 / self.wall_seconds
+        }
+    }
+
+    /// Fraction of wall time spent in top-k capture.
+    pub fn capture_overhead(&self) -> f64 {
+        if self.wall_seconds == 0.0 {
+            0.0
+        } else {
+            self.capture_seconds / self.wall_seconds
+        }
+    }
+
+    /// Render in Prometheus text exposition format (`specd_distill_*`
+    /// families, disjoint from the serving families).
+    pub fn prometheus_text(&self) -> String {
+        let mut s = String::new();
+        prom_counter(&mut s, "specd_distill_sequences_total",
+                     "Distillation records written this run.", self.sequences as f64);
+        prom_counter(&mut s, "specd_distill_response_tokens_total",
+                     "Response tokens written this run.", self.response_tokens as f64);
+        prom_counter(&mut s, "specd_distill_shards_total",
+                     "Shards written this run.", self.shards_written as f64);
+        prom_counter(&mut s, "specd_distill_shard_bytes_total",
+                     "Shard bytes written this run.", self.shard_bytes as f64);
+        prom_counter(&mut s, "specd_distill_capture_seconds_total",
+                     "Host seconds extracting top-k target logits.", self.capture_seconds);
+        prom_counter(&mut s, "specd_distill_batch_iterations_total",
+                     "Lockstep batch steps executed.", self.batch_iterations as f64);
+        prom_gauge(&mut s, "specd_distill_tokens_per_sec",
+                   "Response-token generation throughput.", self.tokens_per_sec());
+        prom_gauge(&mut s, "specd_distill_capture_overhead",
+                   "Fraction of wall time spent in top-k capture.", self.capture_overhead());
+        s
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "distill: sequences={} (+{} resumed) tokens={} wall={:.2}s throughput={:.1} tok/s\n\
+             shards={} ({} bytes) capture={:.2}s ({:.1}% of wall)\n\
+             block_efficiency={:.3} acceptance={:.3}\n\
+             phases: draft_sync={:.2}s propose={:.2}s verify={:.2}s over {} steps | pool peak={}",
+            self.sequences,
+            self.resumed_records,
+            self.response_tokens,
+            self.wall_seconds,
+            self.tokens_per_sec(),
+            self.shards_written,
+            self.shard_bytes,
+            self.capture_seconds,
+            self.capture_overhead() * 100.0,
+            self.spec.block_efficiency(),
+            self.spec.acceptance_rate(),
+            self.phase_draft_sync_seconds,
+            self.phase_propose_seconds,
+            self.phase_verify_seconds,
+            self.batch_iterations,
+            self.pool_peak_slots,
+        )
+    }
+}
+
 /// Live scheduler-side gauges, shared (`Arc`) between the scheduler
 /// thread and the HTTP `/metrics` handler so pool occupancy and per-phase
 /// timing are scrapeable while the server runs. All `Relaxed` atomics:
@@ -553,6 +648,47 @@ mod tests {
         // Families must not collide with the ServeMetrics exposition.
         for line in text.lines().filter(|l| !l.starts_with('#')) {
             assert!(line.starts_with("specd_sched_"), "bad family: {line}");
+        }
+    }
+
+    #[test]
+    fn distill_metrics_rates_and_report() {
+        let empty = DistillMetrics::default();
+        assert_eq!(empty.tokens_per_sec(), 0.0);
+        assert_eq!(empty.capture_overhead(), 0.0);
+        let m = DistillMetrics {
+            sequences: 4,
+            response_tokens: 200,
+            wall_seconds: 2.0,
+            capture_seconds: 0.5,
+            shards_written: 2,
+            shard_bytes: 4096,
+            spec: SpecStats { blocks: 50, generated: 200, drafted: 150, accepted: 120,
+                              draft_calls: 150, target_calls: 50 },
+            ..DistillMetrics::default()
+        };
+        assert!((m.tokens_per_sec() - 100.0).abs() < 1e-9);
+        assert!((m.capture_overhead() - 0.25).abs() < 1e-9);
+        let r = m.report();
+        assert!(r.contains("throughput=100.0 tok/s"), "report: {r}");
+        assert!(r.contains("shards=2 (4096 bytes)"), "report: {r}");
+        assert!(r.contains("capture=0.50s (25.0% of wall)"), "report: {r}");
+    }
+
+    #[test]
+    fn distill_prometheus_families_are_disjoint() {
+        let m = DistillMetrics {
+            sequences: 1,
+            response_tokens: 10,
+            wall_seconds: 1.0,
+            ..DistillMetrics::default()
+        };
+        let text = m.prometheus_text();
+        assert!(text.contains("specd_distill_response_tokens_total 10"));
+        assert!(text.contains("specd_distill_tokens_per_sec 10"));
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert!(line.starts_with("specd_distill_"), "bad family: {line}");
+            assert_eq!(line.split_whitespace().count(), 2, "bad line: {line}");
         }
     }
 

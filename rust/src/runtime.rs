@@ -26,6 +26,46 @@ use crate::weights::WeightsFile;
 /// executable beats a full-state download (measured crossover; §Perf).
 const EXTRACT_THRESHOLD_ELEMS: usize = 128 * 1024;
 
+/// One position's captured target distribution: top-k (token id, raw
+/// logit) pairs, descending by logit. Produced by the distillation capture
+/// path ([`topk_of_row`] over the verify logits rows the engine already
+/// reads back), serialized by [`crate::dataset`], and consumed by
+/// `python/compile/train.py` to compute TVD++ against the true target
+/// distribution instead of one-hot samples.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TopkRow {
+    pub ids: Vec<u32>,
+    pub logits: Vec<f32>,
+}
+
+/// Top-k capture of one logits row: the k highest-logit (id, logit) pairs,
+/// descending by logit (ties broken by lower id, so the capture is
+/// deterministic). `k` is clamped to the row length; `k = 0` captures
+/// nothing. Logits are RAW (pre-temperature) — the trainer applies its own
+/// softmax, matching the paper's white-box distillation setup.
+pub fn topk_of_row(row: &[f32], k: usize) -> TopkRow {
+    let k = k.min(row.len());
+    if k == 0 {
+        return TopkRow::default();
+    }
+    let by_logit_desc = |&a: &usize, &b: &usize| {
+        row[b]
+            .partial_cmp(&row[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    };
+    let mut idx: Vec<usize> = (0..row.len()).collect();
+    if k < idx.len() {
+        idx.select_nth_unstable_by(k - 1, by_logit_desc);
+        idx.truncate(k);
+    }
+    idx.sort_unstable_by(by_logit_desc);
+    TopkRow {
+        ids: idx.iter().map(|&i| i as u32).collect(),
+        logits: idx.iter().map(|&i| row[i]).collect(),
+    }
+}
+
 /// Entry points exported per architecture.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Entry {
@@ -313,6 +353,30 @@ mod tests {
         assert_eq!(Entry::Prefill.name(), "prefill");
         assert_eq!(Entry::Verify.name(), "verify");
         assert_eq!(Entry::Decode.name(), "decode");
+    }
+
+    #[test]
+    fn topk_picks_highest_descending() {
+        let row = [0.1f32, 3.0, -1.0, 2.0, 2.5];
+        let t = topk_of_row(&row, 3);
+        assert_eq!(t.ids, vec![1, 4, 3]);
+        assert_eq!(t.logits, vec![3.0, 2.5, 2.0]);
+    }
+
+    #[test]
+    fn topk_clamps_and_zero_is_empty() {
+        let row = [1.0f32, 2.0];
+        let t = topk_of_row(&row, 8);
+        assert_eq!(t.ids, vec![1, 0], "k clamped to the row length");
+        let empty = topk_of_row(&row, 0);
+        assert!(empty.ids.is_empty() && empty.logits.is_empty());
+    }
+
+    #[test]
+    fn topk_ties_break_by_lower_id() {
+        let row = [5.0f32, 5.0, 5.0, 1.0];
+        let t = topk_of_row(&row, 2);
+        assert_eq!(t.ids, vec![0, 1], "deterministic tie-break");
     }
     // Integration tests that exercise real PJRT execution live in
     // rust/tests/runtime_integration.rs (they need `make artifacts`).

@@ -34,7 +34,7 @@ use crate::error::{Error, Result};
 use crate::kvcache::SeqCache;
 use crate::metrics::SpecStats;
 use crate::rng::Pcg64;
-use crate::runtime::{Entry, Model, SeqState};
+use crate::runtime::{topk_of_row, Entry, Model, SeqState, TopkRow};
 use crate::sampling::{logits_to_probs, sample_token, verify_block};
 use crate::tokenizer::EOS;
 
@@ -95,6 +95,29 @@ impl BlockState {
     }
 }
 
+/// Target top-k logit capture for one session (distillation mode). The
+/// engine already reads back every verify logits row; capture is a
+/// host-side top-k extraction over rows it would otherwise discard, so the
+/// only added cost is the selection itself (tracked in `seconds` and
+/// reported as capture overhead by `specd distill`).
+#[derive(Debug, Clone, Default)]
+pub struct LogitCapture {
+    /// (id, logit) pairs kept per generated position.
+    pub topk: usize,
+    /// One row per generated token, aligned with [`SpecSession::generated`].
+    pub rows: Vec<TopkRow>,
+    /// Host wall seconds spent extracting top-k (the capture overhead).
+    pub seconds: f64,
+}
+
+impl LogitCapture {
+    /// Truncate to the delivered token count (the final block can overshoot
+    /// a request's `max_new`, same as [`SpecStats::clip_to_delivered`]).
+    pub fn clip_to(&mut self, delivered: usize) {
+        self.rows.truncate(delivered);
+    }
+}
+
 /// One in-flight sequence.
 pub struct SpecSession {
     /// prompt ++ generated tokens (ground truth sequence).
@@ -110,11 +133,22 @@ pub struct SpecSession {
     d_last_logits: Vec<f32>,
     pub stats: SpecStats,
     pub finished: bool,
+    /// Target top-k capture sink; `None` (the serving default) costs nothing.
+    pub capture: Option<LogitCapture>,
 }
 
 impl SpecSession {
     pub fn generated(&self) -> &[u32] {
         &self.seq[self.prompt_len..]
+    }
+
+    /// Enable target top-k logit capture for this session (distillation
+    /// dataset generation). Must be called before the first block; `k = 0`
+    /// leaves capture off.
+    pub fn enable_capture(&mut self, topk: usize) {
+        if topk > 0 {
+            self.capture = Some(LogitCapture { topk, ..LogitCapture::default() });
+        }
     }
 }
 
@@ -159,6 +193,7 @@ impl<'a> SpecDecoder<'a> {
             d_last_logits: d_logits,
             stats,
             finished: false,
+            capture: None,
         })
     }
 
@@ -316,6 +351,20 @@ impl<'a> SpecDecoder<'a> {
             s.d_cache.rollback_to(s.d_cache.len().min(keep))?;
             s.finished = true;
         }
+        // Distillation capture: emitted[j] was verified/sampled against
+        // q_j, whose raw logits row the verify call already returned
+        // (position 0 right after prefill reuses the stored prefill row).
+        // Runs after the EOS truncation so rows stay aligned with the kept
+        // tokens.
+        if let Some(cap) = s.capture.as_mut() {
+            let t0 = std::time::Instant::now();
+            for j in 0..emitted.len() {
+                let raw: &[f32] =
+                    if j == 0 && np == 0 { &s.t_last_logits } else { row(np + j - 1) };
+                cap.rows.push(topk_of_row(raw, cap.topk));
+            }
+            cap.seconds += t0.elapsed().as_secs_f64();
+        }
         s.seq.extend_from_slice(&emitted);
         Ok(emitted)
     }
@@ -368,8 +417,9 @@ impl<'a> SpecDecoder<'a> {
 mod tests {
     // The engine needs compiled artifacts; its integration tests live in
     // rust/tests/spec_equivalence.rs. Here we pin the pure bookkeeping.
-    use super::shrunken_gamma;
+    use super::{shrunken_gamma, LogitCapture};
     use crate::metrics::SpecStats;
+    use crate::runtime::TopkRow;
 
     #[test]
     fn stats_default_zero() {
@@ -406,6 +456,21 @@ mod tests {
         // The verify call re-feeds np pending tokens alongside the draft.
         assert_eq!(shrunken_gamma(5, 10, 4, 256, 256, 8), 4);
         assert_eq!(shrunken_gamma(5, 10, 8, 256, 256, 8), 0);
+    }
+
+    #[test]
+    fn capture_clip_truncates_rows_only() {
+        let mut cap = LogitCapture { topk: 2, rows: Vec::new(), seconds: 0.25 };
+        for i in 0..5u32 {
+            cap.rows.push(TopkRow { ids: vec![i, i + 1], logits: vec![1.0, 0.5] });
+        }
+        cap.clip_to(3);
+        assert_eq!(cap.rows.len(), 3);
+        assert_eq!(cap.rows[2].ids, vec![2, 3]);
+        // Never grows, and the overhead accounting is untouched.
+        cap.clip_to(10);
+        assert_eq!(cap.rows.len(), 3);
+        assert!((cap.seconds - 0.25).abs() < 1e-12);
     }
 
     #[test]

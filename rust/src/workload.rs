@@ -127,6 +127,133 @@ impl Default for TraceConfig {
     }
 }
 
+/// Parse a `task:weight,...` mixture spec (e.g. `dolly:0.5,cnndm:0.3`).
+/// The OOD task is rejected outright: distillation seeds must never
+/// contain wmt — that exclusion is exactly what makes wmt
+/// out-of-distribution in the paper's Figure 3 protocol (§2.2 / §A.5).
+pub fn parse_task_mix(spec: &str) -> Result<Vec<(String, f64)>> {
+    let mut mix: Vec<(String, f64)> = Vec::new();
+    for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let (task, weight) = part
+            .split_once(':')
+            .ok_or_else(|| Error::Cli(format!("task mix entry '{part}': expected task:weight")))?;
+        let task = task.trim();
+        let weight: f64 = weight
+            .trim()
+            .parse()
+            .map_err(|_| Error::Cli(format!("task mix entry '{part}': bad weight")))?;
+        if !weight.is_finite() || weight <= 0.0 {
+            return Err(Error::Cli(format!("task mix entry '{part}': weight must be > 0")));
+        }
+        if task == OOD_TASK {
+            return Err(Error::Cli(format!(
+                "task '{OOD_TASK}' is the held-out OOD task and cannot seed distillation"
+            )));
+        }
+        if mix.iter().any(|(t, _)| t == task) {
+            return Err(Error::Cli(format!("task '{task}' appears twice in the mix")));
+        }
+        mix.push((task.to_string(), weight));
+    }
+    if mix.is_empty() {
+        return Err(Error::Cli("empty task mix".into()));
+    }
+    Ok(mix)
+}
+
+/// One distillation seed instruction drawn from the mix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SeedPrompt {
+    /// Global position in the stream (becomes the record `seq_index`).
+    pub index: u64,
+    pub task: String,
+    pub prompt: Vec<u32>,
+    /// Target sampling temperature for this sequence, drawn from the
+    /// paper's §3 grid.
+    pub temperature: f32,
+    /// Per-sequence sampler seed (decorrelates lanes, deterministically).
+    pub sampling_seed: u64,
+}
+
+/// Deterministic distillation seed-instruction stream: same suite + mix +
+/// temperature grid + seed ⇒ bit-identical prompt stream. That determinism
+/// is what makes `specd distill` checkpoint/resume duplicate-free — the
+/// writer records how many sequences are committed and the stream is
+/// simply fast-forwarded past them ([`SeedStream::skip`]).
+pub struct SeedStream<'a> {
+    suite: &'a EvalSuite,
+    mix: Vec<(String, f64)>,
+    weights: Vec<f32>,
+    temperatures: Vec<f32>,
+    rng: Pcg64,
+    cursors: BTreeMap<String, usize>,
+    next_index: u64,
+}
+
+impl<'a> SeedStream<'a> {
+    pub fn new(
+        suite: &'a EvalSuite,
+        mix: Vec<(String, f64)>,
+        temperatures: Vec<f32>,
+        seed: u64,
+    ) -> Result<SeedStream<'a>> {
+        if mix.is_empty() {
+            return Err(Error::Manifest("seed stream: empty task mix".into()));
+        }
+        if temperatures.is_empty() {
+            return Err(Error::Manifest("seed stream: empty temperature grid".into()));
+        }
+        for (task, weight) in &mix {
+            if task == OOD_TASK {
+                return Err(Error::Manifest(format!(
+                    "seed stream: '{OOD_TASK}' is OOD-held-out and cannot seed distillation"
+                )));
+            }
+            if !weight.is_finite() || *weight <= 0.0 {
+                return Err(Error::Manifest(format!("seed stream: bad weight for '{task}'")));
+            }
+            if suite.task(task)?.is_empty() {
+                return Err(Error::Manifest(format!("seed stream: task '{task}' has no prompts")));
+            }
+        }
+        let weights = mix.iter().map(|(_, w)| *w as f32).collect();
+        Ok(SeedStream {
+            suite,
+            mix,
+            weights,
+            temperatures,
+            rng: Pcg64::with_stream(seed, 0x5eed),
+            cursors: BTreeMap::new(),
+            next_index: 0,
+        })
+    }
+
+    /// Next seed instruction. The stream is infinite: prompts cycle per
+    /// task while the task/temperature draws stay i.i.d. from the RNG.
+    pub fn next_prompt(&mut self) -> SeedPrompt {
+        let ti = self.rng.categorical(&self.weights);
+        let task = self.mix[ti].0.clone();
+        let examples = self.suite.task(&task).expect("tasks validated in new()");
+        let cursor = self.cursors.entry(task.clone()).or_insert(0);
+        let prompt = examples[*cursor % examples.len()].prompt.clone();
+        *cursor += 1;
+        let temperature =
+            self.temperatures[self.rng.next_below(self.temperatures.len() as u64) as usize];
+        let sampling_seed = self.rng.next_u64();
+        let index = self.next_index;
+        self.next_index += 1;
+        SeedPrompt { index, task, prompt, temperature, sampling_seed }
+    }
+
+    /// Fast-forward past `n` prompts (resume: the dataset's committed
+    /// prefix was generated from exactly these).
+    pub fn skip(&mut self, n: u64) {
+        for _ in 0..n {
+            self.next_prompt();
+        }
+    }
+}
+
 pub fn build_trace(suite: &EvalSuite, cfg: &TraceConfig) -> Result<Vec<TraceRequest>> {
     let mut rng = Pcg64::with_stream(cfg.seed, 0x7ace);
     let weights: Vec<f32> = cfg.mix.iter().map(|(_, w)| *w as f32).collect();
@@ -192,6 +319,74 @@ mod tests {
         }
         let dolly = trace.iter().filter(|r| r.task == "dolly").count();
         assert!(dolly > 10 && dolly < 40, "mixture off: {dolly}/50 dolly");
+    }
+
+    #[test]
+    fn seed_stream_deterministic_per_seed() {
+        let s = tiny_suite();
+        let mix = parse_task_mix("dolly:0.5,cnndm:0.3,xsum:0.2").unwrap();
+        let temps = vec![0.0f32, 0.3, 0.7, 1.0];
+        let mut a = SeedStream::new(&s, mix.clone(), temps.clone(), 9).unwrap();
+        let mut b = SeedStream::new(&s, mix.clone(), temps.clone(), 9).unwrap();
+        let xs: Vec<SeedPrompt> = (0..64).map(|_| a.next_prompt()).collect();
+        let ys: Vec<SeedPrompt> = (0..64).map(|_| b.next_prompt()).collect();
+        assert_eq!(xs, ys, "same seed must give an identical prompt stream");
+        // A different seed diverges (not a constant stream).
+        let mut c = SeedStream::new(&s, mix, temps, 10).unwrap();
+        let zs: Vec<SeedPrompt> = (0..64).map(|_| c.next_prompt()).collect();
+        assert_ne!(xs, zs);
+        // Indices are the global stream positions.
+        assert_eq!(xs.iter().map(|p| p.index).collect::<Vec<_>>(),
+                   (0..64).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn seed_stream_never_emits_wmt() {
+        let s = tiny_suite();
+        let mix = parse_task_mix("dolly:0.5,cnndm:0.3,xsum:0.2").unwrap();
+        let mut stream = SeedStream::new(&s, mix, vec![0.0, 0.7], 0).unwrap();
+        for _ in 0..256 {
+            let p = stream.next_prompt();
+            assert_ne!(p.task, OOD_TASK, "wmt is OOD-held-out and must never be seeded");
+            assert!(TASKS.contains(&p.task.as_str()));
+        }
+        // And the OOD task cannot even be configured into the mix.
+        assert!(parse_task_mix("wmt:1.0").is_err());
+        assert!(parse_task_mix("dolly:0.5,wmt:0.5").is_err());
+        assert!(SeedStream::new(&s, vec![("wmt".into(), 1.0)], vec![0.0], 0).is_err());
+    }
+
+    #[test]
+    fn seed_stream_skip_matches_consumption() {
+        let s = tiny_suite();
+        let mix = parse_task_mix("dolly:1,xsum:1").unwrap();
+        let temps = vec![0.0f32, 1.0];
+        let mut a = SeedStream::new(&s, mix.clone(), temps.clone(), 3).unwrap();
+        let full: Vec<SeedPrompt> = (0..10).map(|_| a.next_prompt()).collect();
+        let mut b = SeedStream::new(&s, mix, temps, 3).unwrap();
+        b.skip(5);
+        let tail: Vec<SeedPrompt> = (0..5).map(|_| b.next_prompt()).collect();
+        assert_eq!(tail, full[5..], "skip(n) == consuming n prompts");
+    }
+
+    #[test]
+    fn parse_task_mix_rejects_garbage() {
+        assert!(parse_task_mix("").is_err());
+        assert!(parse_task_mix("dolly").is_err(), "missing weight");
+        assert!(parse_task_mix("dolly:x").is_err(), "non-numeric weight");
+        assert!(parse_task_mix("dolly:-1").is_err(), "negative weight");
+        assert!(parse_task_mix("dolly:0").is_err(), "zero weight");
+        assert!(parse_task_mix("dolly:0.5,dolly:0.5").is_err(), "duplicate task");
+        let ok = parse_task_mix(" dolly:0.5 , cnndm:0.3 ").unwrap();
+        assert_eq!(ok, vec![("dolly".to_string(), 0.5), ("cnndm".to_string(), 0.3)]);
+    }
+
+    #[test]
+    fn seed_stream_requires_known_tasks() {
+        let s = tiny_suite();
+        assert!(SeedStream::new(&s, vec![("nope".into(), 1.0)], vec![0.0], 0).is_err());
+        assert!(SeedStream::new(&s, vec![("dolly".into(), 1.0)], vec![], 0).is_err());
+        assert!(SeedStream::new(&s, vec![], vec![0.0], 0).is_err());
     }
 
     #[test]

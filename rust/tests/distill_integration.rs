@@ -1,0 +1,201 @@
+//! Integration tests for the distillation dataset subsystem.
+//!
+//! The dataset dir-level tests (round-trip, resume, checksum) run without
+//! artifacts; the end-to-end `run_distill` tests need the compiled bundle
+//! and skip themselves politely otherwise (same gating as the coordinator
+//! tests).
+
+mod common;
+
+use std::path::PathBuf;
+
+use specd::datagen::{run_distill, DistillConfig};
+use specd::dataset::{DatasetMeta, DatasetReader, DatasetWriter, DistillRecord};
+use specd::runtime::topk_of_row;
+use specd::spec::SpecDecoder;
+use specd::workload::parse_task_mix;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("specd-distill-it-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn test_meta(topk: usize, records_per_shard: usize) -> DatasetMeta {
+    DatasetMeta {
+        topk,
+        seed: 0,
+        mix: parse_task_mix("dolly:0.5,cnndm:0.3,xsum:0.2").unwrap(),
+        temperatures: vec![0.0, 0.3, 0.7, 1.0],
+        top_p: 0.95,
+        max_new: 16,
+        records_per_shard,
+        gamma: 2,
+        draft_model: "draft_tvdpp_ckpt4".into(),
+        target_model: "target".into(),
+    }
+}
+
+/// Synthesize a record the way datagen would: top-k rows extracted from a
+/// dense logits row per response position.
+fn synth_record(i: u64, topk: usize) -> DistillRecord {
+    let response: Vec<u32> = (0..(2 + i as u32 % 3)).map(|j| 20 + i as u32 + j).collect();
+    let rows = response
+        .iter()
+        .enumerate()
+        .map(|(p, _)| {
+            let dense: Vec<f32> = (0..16).map(|v| ((v * 7 + p + i as usize) % 13) as f32).collect();
+            topk_of_row(&dense, topk)
+        })
+        .collect();
+    DistillRecord {
+        seq_index: i,
+        task: ["dolly", "cnndm", "xsum"][i as usize % 3].to_string(),
+        temperature: [0.0f32, 0.3, 0.7, 1.0][i as usize % 4],
+        prompt: vec![1, 3, 9, 4],
+        response,
+        topk: if topk > 0 { rows } else { Vec::new() },
+    }
+}
+
+#[test]
+fn dataset_dir_roundtrip_with_manifest_and_checksums() {
+    let dir = tmpdir("roundtrip");
+    let mut w = DatasetWriter::open_or_create(&dir, test_meta(4, 3)).unwrap();
+    let recs: Vec<DistillRecord> = (0..8).map(|i| synth_record(i, 4)).collect();
+    for r in &recs {
+        w.append(r.clone()).unwrap();
+    }
+    let summary = w.finish().unwrap();
+    assert_eq!(summary.records_total, 8);
+    assert_eq!(summary.shards_written, 3, "3 + 3 + 2");
+
+    let reader = DatasetReader::open(&dir).unwrap();
+    reader.verify().unwrap();
+    assert_eq!(reader.records_total, 8);
+    assert_eq!(reader.read_all().unwrap(), recs);
+    // Each capture row carries exactly topk descending logits.
+    for rec in reader.read_all().unwrap() {
+        assert_eq!(rec.topk.len(), rec.response.len());
+        for row in &rec.topk {
+            assert_eq!(row.ids.len(), 4);
+            assert!(row.logits.windows(2).all(|w| w[0] >= w[1]), "descending");
+        }
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn dataset_dir_resume_is_duplicate_free() {
+    let dir = tmpdir("resume");
+    // Run 1 "crashes": 5 records at 2/shard — shards 0 and 1 commit
+    // (records 0..4), record 4 is buffered and lost with the writer.
+    let mut w = DatasetWriter::open_or_create(&dir, test_meta(2, 2)).unwrap();
+    for i in 0..5 {
+        w.append(synth_record(i, 2)).unwrap();
+    }
+    drop(w);
+    // Plus a stray partial shard from the aborted flush.
+    std::fs::write(dir.join("shard-00002.spds"), b"torn write").unwrap();
+
+    // Run 2 resumes: the "deterministic stream" regenerates 4..7.
+    let mut w = DatasetWriter::open_or_create(&dir, test_meta(2, 2)).unwrap();
+    assert_eq!(w.resume_records(), 4);
+    for i in 4..7 {
+        w.append(synth_record(i, 2)).unwrap();
+    }
+    w.finish().unwrap();
+
+    let reader = DatasetReader::open(&dir).unwrap();
+    reader.verify().unwrap();
+    let all = reader.read_all().unwrap();
+    let idx: Vec<u64> = all.iter().map(|r| r.seq_index).collect();
+    assert_eq!(idx, (0..7).collect::<Vec<u64>>(), "contiguous, no duplicates");
+    assert_eq!(all, (0..7).map(|i| synth_record(i, 2)).collect::<Vec<_>>());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Artifact-gated end-to-end tests
+// ---------------------------------------------------------------------------
+
+fn tiny_cfg(out: &std::path::Path, token_budget: usize) -> DistillConfig {
+    DistillConfig {
+        mix: parse_task_mix("dolly:0.5,cnndm:0.3,xsum:0.2").unwrap(),
+        temperatures: vec![0.0, 0.7],
+        top_p: 0.95,
+        token_budget,
+        topk: 4,
+        max_new: 8,
+        max_slots: 3,
+        records_per_shard: 4,
+        seed: 0,
+        out_dir: out.to_string_lossy().to_string(),
+    }
+}
+
+#[test]
+fn distill_end_to_end_tiny_budget() {
+    require_artifacts!();
+    let fx = common::Fixture::load();
+    let draft = fx.default_draft();
+    let decoder = SpecDecoder::new(&draft, &fx.target, 2).expect("decoder");
+    let dir = tmpdir("e2e");
+
+    let budget = 48;
+    let metrics = run_distill(&decoder, &fx.suite, &tiny_cfg(&dir, budget)).expect("distill run");
+    assert!(metrics.response_tokens >= budget, "budget is a floor: {}", metrics.response_tokens);
+    assert!(metrics.sequences > 0);
+    assert!(metrics.batch_iterations > 0);
+    assert!(metrics.tokens_per_sec() > 0.0);
+    assert!(metrics.capture_seconds > 0.0, "topk=4 must cost something");
+    assert!(metrics.pool_peak_slots <= 3);
+
+    let reader = DatasetReader::open(&dir).expect("manifest");
+    reader.verify().expect("checksums");
+    let all = reader.read_all().expect("records");
+    assert_eq!(all.len(), metrics.sequences);
+    let total: usize = all.iter().map(|r| r.response.len()).sum();
+    assert_eq!(total, metrics.response_tokens);
+    for (i, rec) in all.iter().enumerate() {
+        assert_eq!(rec.seq_index, i as u64);
+        assert!(rec.response.len() <= 8, "max_new respected");
+        assert_ne!(rec.task, "wmt");
+        assert_eq!(rec.topk.len(), rec.response.len(), "one capture row per token");
+        for row in &rec.topk {
+            assert_eq!(row.ids.len(), 4);
+            assert!(row.logits.windows(2).all(|w| w[0] >= w[1]));
+            assert!(row.ids.iter().all(|&id| (id as usize) < fx.target.vocab_size()));
+        }
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn distill_resume_continues_the_same_stream() {
+    require_artifacts!();
+    let fx = common::Fixture::load();
+    let draft = fx.default_draft();
+    let decoder = SpecDecoder::new(&draft, &fx.target, 2).expect("decoder");
+    let dir = tmpdir("e2e-resume");
+
+    // First run meets a small budget; second run raises the budget and
+    // must extend — not duplicate — the dataset.
+    let m1 = run_distill(&decoder, &fx.suite, &tiny_cfg(&dir, 24)).expect("run 1");
+    let r1 = DatasetReader::open(&dir).unwrap();
+    let n1 = r1.records_total;
+    assert!(n1 > 0);
+
+    let m2 = run_distill(&decoder, &fx.suite, &tiny_cfg(&dir, 96)).expect("run 2");
+    assert_eq!(m2.resumed_records as u64, n1, "run 2 resumed past run 1's records");
+    let r2 = DatasetReader::open(&dir).unwrap();
+    r2.verify().unwrap();
+    let all = r2.read_all().unwrap();
+    assert!(all.len() as u64 > n1, "budget increase must add records");
+    let idx: Vec<u64> = all.iter().map(|r| r.seq_index).collect();
+    assert_eq!(idx, (0..all.len() as u64).collect::<Vec<u64>>(), "no duplicates, no holes");
+    let total: usize = all.iter().map(|r| r.response.len()).sum();
+    assert!(total >= 96, "lifetime budget met: {total}");
+    assert_eq!(total, m1.response_tokens + m2.response_tokens);
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -27,7 +27,11 @@ fi
 
 if [[ "$run_fmt" == 1 ]]; then
     echo "== cargo fmt --check =="
-    cargo fmt --check
+    if cargo fmt --version >/dev/null 2>&1; then
+        cargo fmt --check
+    else
+        echo "rustfmt component not installed; skipping (install with: rustup component add rustfmt)"
+    fi
 fi
 
 echo "tier-1: OK"
