@@ -1,0 +1,248 @@
+//! Per-lane vs fused-batched dispatch microbench (the PR 4 perf artifact).
+//!
+//! Drives `BatchStep` directly — no HTTP, no arrival process — over
+//! N ∈ `--lanes` concurrent greedy sequences, once with the fused
+//! `[B, T]` dispatch path (`BatchedCtx`) and once with per-lane dispatch,
+//! and records tokens/s, dispatches per block and batch occupancy into a
+//! machine-readable `BENCH_pr4.json` (the first datapoint of the perf
+//! trajectory; CI uploads it when present).
+//!
+//! ```sh
+//! cargo run --release --example dispatch_microbench -- \
+//!     --artifacts artifacts --gamma 3 --lanes 1,4,8 --out BENCH_pr4.json
+//! ```
+//!
+//! The fused path must issue O(γ + 2) dispatches per step regardless of N
+//! (per-lane issues O(N·(γ + 2))); the bench asserts that bound and warns
+//! if batched output diverges from per-lane output (they are pinned equal
+//! in rust/tests/batched_integration.rs).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use specd::artifacts::Manifest;
+use specd::batch::{BatchStep, Lane, LaneOutcome};
+use specd::benchkit::{write_bench_json, Table};
+use specd::cli::Args;
+use specd::config::SamplingConfig;
+use specd::json::Value;
+use specd::rng::Pcg64;
+use specd::runtime::Runtime;
+use specd::spec::SpecDecoder;
+use specd::workload::EvalSuite;
+
+struct Row {
+    mode: &'static str,
+    lanes: usize,
+    steps: u64,
+    dispatches: u64,
+    tokens: usize,
+    wall: f64,
+    lane_steps: usize,
+    outputs: Vec<Vec<u32>>,
+}
+
+impl Row {
+    fn dispatches_per_block(&self) -> f64 {
+        if self.lane_steps == 0 {
+            0.0
+        } else {
+            self.dispatches as f64 / self.lane_steps as f64
+        }
+    }
+
+    fn occupancy(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.lane_steps as f64 / self.steps as f64
+        }
+    }
+
+    fn tokens_per_sec(&self) -> f64 {
+        if self.wall == 0.0 {
+            0.0
+        } else {
+            self.tokens as f64 / self.wall
+        }
+    }
+
+    fn json(&self) -> Value {
+        Value::obj(vec![
+            ("mode", Value::Str(self.mode.to_string())),
+            ("lanes", Value::Num(self.lanes as f64)),
+            ("steps", Value::Num(self.steps as f64)),
+            ("dispatches", Value::Num(self.dispatches as f64)),
+            ("dispatches_per_step", Value::Num(self.dispatches as f64 / self.steps.max(1) as f64)),
+            ("dispatches_per_block", Value::Num(self.dispatches_per_block())),
+            ("tokens", Value::Num(self.tokens as f64)),
+            ("tokens_per_sec", Value::Num(self.tokens_per_sec())),
+            ("batch_occupancy", Value::Num(self.occupancy())),
+            ("wall_seconds", Value::Num(self.wall)),
+        ])
+    }
+}
+
+fn run_config(
+    decoder: &SpecDecoder<'_>,
+    suite: &EvalSuite,
+    n: usize,
+    fused: bool,
+    max_new: usize,
+) -> specd::Result<Row> {
+    let mut ctx = if fused { decoder.batched_ctx()? } else { None };
+    let examples = suite.take("dolly", n)?;
+    let sampling = SamplingConfig::greedy();
+    let mut sessions = Vec::with_capacity(n);
+    let mut rngs = Vec::with_capacity(n);
+    for (i, ex) in examples.iter().enumerate() {
+        let mut s = decoder.start(&ex.prompt)?;
+        if let Some(c) = ctx.as_mut() {
+            decoder.adopt(c, &mut s)?;
+        }
+        sessions.push(s);
+        rngs.push(Pcg64::with_stream(i as u64, 0xbe7c));
+    }
+
+    let t0 = Instant::now();
+    let (mut steps, mut dispatches, mut lane_steps) = (0u64, 0u64, 0usize);
+    loop {
+        let mut lanes: Vec<Lane<'_>> = sessions
+            .iter_mut()
+            .zip(rngs.iter_mut())
+            .filter(|(s, _)| !s.finished && s.generated().len() < max_new)
+            .map(|(s, rng)| Lane { session: s, sampling, rng })
+            .collect();
+        if lanes.is_empty() {
+            break;
+        }
+        let (outcomes, t) = BatchStep::run(decoder, ctx.as_mut(), &mut lanes);
+        for o in &outcomes {
+            if let LaneOutcome::Failed(e) = o {
+                return Err(specd::Error::msg(format!("lane failed: {e}")));
+            }
+        }
+        steps += 1;
+        dispatches += t.dispatches;
+        lane_steps += t.lanes;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut outputs = Vec::with_capacity(n);
+    let mut tokens = 0usize;
+    for s in &mut sessions {
+        let mut out = s.generated().to_vec();
+        out.truncate(max_new);
+        tokens += out.len();
+        outputs.push(out);
+    }
+    if let Some(c) = ctx.as_mut() {
+        for s in &mut sessions {
+            decoder.release(c, s);
+        }
+    }
+    Ok(Row {
+        mode: if fused { "batched" } else { "per_lane" },
+        lanes: n,
+        steps,
+        dispatches,
+        tokens,
+        wall,
+        lane_steps,
+        outputs,
+    })
+}
+
+fn main() -> specd::Result<()> {
+    let args = Args::new("dispatch_microbench", "per-lane vs fused-batched dispatch microbench")
+        .opt("artifacts", "artifacts", "artifact bundle directory")
+        .opt("draft", "", "draft model (default: best tvdpp checkpoint)")
+        .opt("gamma", "3", "speculation depth")
+        .opt("max-new", "24", "new tokens per lane")
+        .opt("lanes", "1,4,8", "comma-separated lane counts (the occupancy sweep)")
+        .opt("out", "BENCH_pr4.json", "machine-readable output artifact")
+        .parse()?;
+
+    let manifest = Manifest::load(args.str("artifacts"))?;
+    let rt = Arc::new(Runtime::new()?);
+    let draft_arch = rt.load_arch(&manifest, "draft")?;
+    let target_arch = rt.load_arch(&manifest, "target")?;
+    let target = rt.load_model(&manifest, &target_arch, "target")?;
+    let draft_name = if args.str("draft").is_empty() {
+        manifest.draft_models().into_iter().filter(|n| n.contains("tvdpp")).max()
+            .unwrap_or_else(|| "draft_base".to_string())
+    } else {
+        args.str("draft").to_string()
+    };
+    let draft = rt.load_model(&manifest, &draft_arch, &draft_name)?;
+    let suite = EvalSuite::load(&manifest.root.join("eval_prompts.json"))?;
+    let gamma = args.usize("gamma")?;
+    let max_new = args.usize("max-new")?;
+    let decoder = SpecDecoder::new(&draft, &target, gamma)?;
+    let batched_available = decoder.batched_ctx()?.is_some();
+    if !batched_available {
+        eprintln!("note: bundle has no batched entry points; batched rows will be skipped");
+    }
+
+    let lane_counts: Vec<usize> = args
+        .str("lanes")
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse().map_err(|_| specd::Error::Cli(format!("--lanes: bad value '{s}'"))))
+        .collect::<specd::Result<_>>()?;
+
+    let mut table = Table::new(&["mode", "lanes", "steps", "disp", "disp/block", "occup", "tok/s"]);
+    let mut rows_json = Vec::new();
+    for &n in &lane_counts {
+        let per_lane = run_config(&decoder, &suite, n, false, max_new)?;
+        let mut pair = vec![per_lane];
+        if batched_available {
+            let batched = run_config(&decoder, &suite, n, true, max_new)?;
+            // The fused path's dispatch bill per step is bounded by the
+            // block shape alone: <= 2 sync + 2(γ-1) propose + 2 verify
+            // launches (extract readbacks included), for ANY occupancy.
+            let bound = (2 * gamma + 4) as f64;
+            let per_step = batched.dispatches as f64 / batched.steps.max(1) as f64;
+            assert!(
+                per_step <= bound + 1e-9,
+                "fused path issued {per_step:.1} dispatches/step (> O(γ+2) bound {bound})"
+            );
+            if batched.outputs != pair[0].outputs {
+                eprintln!(
+                    "warning: batched output != per-lane output at lanes={n} \
+                     (numerics drift between single and vmapped executables?)"
+                );
+            }
+            pair.push(batched);
+        }
+        for r in pair {
+            table.row(&[
+                r.mode.to_string(),
+                r.lanes.to_string(),
+                r.steps.to_string(),
+                r.dispatches.to_string(),
+                format!("{:.2}", r.dispatches_per_block()),
+                format!("{:.2}", r.occupancy()),
+                format!("{:.1}", r.tokens_per_sec()),
+            ]);
+            rows_json.push(r.json());
+        }
+    }
+    table.print();
+
+    let artifact = Value::obj(vec![
+        ("bench", Value::Str("dispatch_microbench".to_string())),
+        ("draft", Value::Str(draft_name)),
+        ("gamma", Value::Num(gamma as f64)),
+        ("max_new", Value::Num(max_new as f64)),
+        ("batched_available", Value::Bool(batched_available)),
+        (
+            "batch_size",
+            decoder.draft.batch_size().map(|b| Value::Num(b as f64)).unwrap_or(Value::Null),
+        ),
+        ("rows", Value::Arr(rows_json)),
+    ]);
+    write_bench_json(args.str("out"), &artifact)?;
+    println!("wrote {}", args.str("out"));
+    Ok(())
+}

@@ -36,6 +36,7 @@ fn main() -> specd::Result<()> {
         .opt("max-new", "32", "max new tokens per request")
         .opt("seed", "0", "trace seed")
         .opt("mix", "chat", "workload mix: chat (dolly-only) | paper (dolly/cnndm/xsum)")
+        .opt("bench-json", "", "write machine-readable metrics to this path (BENCH_serve.json)")
         .flag("skip-baseline", "skip the autoregressive replay")
         .parse()?;
 
@@ -93,6 +94,7 @@ fn main() -> specd::Result<()> {
     println!("\n== speculative decoding ==\n{}", sd.report());
 
     // --- autoregressive replay (sequential engine, same prompts) ---------
+    let mut ar_metrics = None;
     if !args.flag("skip-baseline") {
         let ar = ar_replay(&target, &trace)?;
         println!("\n== autoregressive baseline ==\n{}", ar.report());
@@ -103,6 +105,30 @@ fn main() -> specd::Result<()> {
             p50(&ar) * 1e3,
             p50(&sd) * 1e3
         );
+        ar_metrics = Some(ar);
+    }
+    if !args.str("bench-json").is_empty() {
+        let row = |m: &ServeMetrics| {
+            specd::json::Value::obj(vec![
+                ("requests", specd::json::Value::Num(m.total_requests as f64)),
+                ("tokens", specd::json::Value::Num(m.total_new_tokens as f64)),
+                ("tokens_per_sec", specd::json::Value::Num(m.throughput_tok_s())),
+                ("dispatches", specd::json::Value::Num(m.dispatches as f64)),
+                ("batch_occupancy", specd::json::Value::Num(m.batch_occupancy())),
+                ("block_efficiency", specd::json::Value::Num(m.spec.block_efficiency())),
+            ])
+        };
+        let mut fields = vec![
+            ("bench", specd::json::Value::Str("serve_benchmark".to_string())),
+            ("gamma", specd::json::Value::Num(gamma as f64)),
+            ("sd", row(&sd)),
+        ];
+        if let Some(ar) = &ar_metrics {
+            fields.push(("ar", row(ar)));
+        }
+        let v = specd::json::Value::obj(fields);
+        specd::benchkit::write_bench_json(args.str("bench-json"), &v)?;
+        println!("wrote {}", args.str("bench-json"));
     }
     Ok(())
 }

@@ -15,6 +15,15 @@ Interchange contract with the Rust runtime (rust/src/runtime, rust/src/weights):
       decode   T = 1    (draft autoregression + AR baseline)
   Argument order = sorted parameter names, then kv, tokens, pos — recorded
   in manifest.json and asserted by the Rust loader.
+- Batched `[B, T]` entry points (optional, `--batch-sizes`): each single
+  entry also exports `fn(params.., states[B, state_len], tokens[B, T],
+  pos[B], active_mask[B]) -> states'[B, state_len]` as
+  `<entry>.b<B>.hlo.txt`, plus a batched logits extractor and a `pack`
+  entry (write one state vector over one arena lane). Masked lanes pass
+  through bit-for-bit, so a partially full batch is correct; the Rust
+  scheduler uses these to issue ONE dispatch per lockstep phase instead of
+  one per sequence. Manifest key `arch.*.batch_sizes` lists what was
+  exported; old bundles lack it and the runtime serves per-lane.
 - weights .bin format "SPCD1": per tensor, name + dims + raw f32 LE bytes.
 - golden.json: input/output probes for every exported (model, entry) pair so
   the Rust integration tests can pin end-to-end numerics bit-for-bit-ish
@@ -75,11 +84,15 @@ def state_len(cfg: ModelConfig) -> int:
     return kv_len(cfg) + PREFILL_BLOCK * cfg.vocab_size
 
 
-def lower_entry(cfg: ModelConfig, block: int, use_pallas: bool = True) -> str:
-    """Lower forward_cached at a fixed block size to HLO text."""
+def state_fn(cfg: ModelConfig, block: int, use_pallas: bool = True):
+    """The single-sequence state-vector function all entry points lower.
+
+    `fn(flat_params, state[state_len], tokens[block], pos) -> state'` with
+    the [ kv | logits | tail ] layout described in `state_len`. Shared by
+    the single-sequence entries (lowered directly) and the batched entries
+    (lowered under `jax.vmap`)."""
     names = model.param_names(cfg)
     kvn = kv_len(cfg)
-    sl = state_len(cfg)
 
     def fn(flat_params: List[jax.Array], state, tokens, pos):
         params = dict(zip(names, flat_params))
@@ -90,10 +103,20 @@ def lower_entry(cfg: ModelConfig, block: int, use_pallas: bool = True) -> str:
         tail = state[kvn + block * cfg.vocab_size :]
         return jnp.concatenate([kv2.reshape(-1), logits.reshape(-1), tail])
 
-    p_specs = [
-        jax.ShapeDtypeStruct(model.param_shape(cfg, n), jnp.float32) for n in names
+    return fn
+
+
+def param_specs(cfg: ModelConfig) -> List[jax.ShapeDtypeStruct]:
+    return [
+        jax.ShapeDtypeStruct(model.param_shape(cfg, n), jnp.float32)
+        for n in model.param_names(cfg)
     ]
-    state_spec = jax.ShapeDtypeStruct((sl,), jnp.float32)
+
+
+def lower_entry(cfg: ModelConfig, block: int, use_pallas: bool = True) -> str:
+    """Lower forward_cached at a fixed block size to HLO text."""
+    fn = state_fn(cfg, block, use_pallas)
+    state_spec = jax.ShapeDtypeStruct((state_len(cfg),), jnp.float32)
     tok_spec = jax.ShapeDtypeStruct((block,), jnp.int32)
     pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
     # NOT donated: input-output aliasing survives the HLO-text roundtrip
@@ -101,7 +124,43 @@ def lower_entry(cfg: ModelConfig, block: int, use_pallas: bool = True) -> str:
     # client — the Rust side's buffer handle keeps a reference alive, so
     # PJRT copies defensively on every donated call. See EXPERIMENTS.md
     # §Perf iteration log.
-    lowered = jax.jit(fn).lower(p_specs, state_spec, tok_spec, pos_spec)
+    lowered = jax.jit(fn).lower(param_specs(cfg), state_spec, tok_spec, pos_spec)
+    return to_hlo_text(lowered)
+
+
+def batched_fn(cfg: ModelConfig, block: int, use_pallas: bool = True):
+    """The batched state function the `[B, T]` entry points lower.
+
+    `fn(flat_params, states[B, state_len], tokens[B, block], pos[B],
+    active_mask[B]) -> states'[B, state_len]`. Weights are broadcast;
+    lanes with `active_mask == 0` pass their state through bit-for-bit
+    (a `where` on the vmapped output), so a partially full batch is
+    correct and one dispatch advances every active lane."""
+    one = state_fn(cfg, block, use_pallas)
+
+    def fn(flat_params: List[jax.Array], states, tokens, pos, mask):
+        new = jax.vmap(lambda s, t, p: one(flat_params, s, t, p))(states, tokens, pos)
+        return jnp.where((mask != 0)[:, None], new, states)
+
+    return fn
+
+
+def lower_entry_batched(cfg: ModelConfig, block: int, batch: int,
+                        use_pallas: bool = True) -> str:
+    """Lower the batched `[B, T]` variant of one entry point to HLO text.
+
+    One PJRT dispatch of this executable replaces `batch` single-sequence
+    dispatches: the Rust scheduler packs every active lane's state into a
+    device-resident `[B, state_len]` arena and runs each lockstep phase as
+    a single call (rust/src/runtime.rs `StateArena`)."""
+    fn = batched_fn(cfg, block, use_pallas)
+    lowered = jax.jit(fn).lower(
+        param_specs(cfg),
+        jax.ShapeDtypeStruct((batch, state_len(cfg)), jnp.float32),
+        jax.ShapeDtypeStruct((batch, block), jnp.int32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+    )
     return to_hlo_text(lowered)
 
 
@@ -122,6 +181,41 @@ def lower_extract(cfg: ModelConfig) -> str:
         return jax.lax.dynamic_slice(state, (kvn,), (n,))
 
     lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((state_len(cfg),), jnp.float32))
+    return to_hlo_text(lowered)
+
+
+def lower_extract_batched(cfg: ModelConfig, batch: int) -> str:
+    """Batched logits slicer: `fn(states[B, S]) -> logits[B, extract_len]`.
+
+    After one batched dispatch the host needs every active lane's logits;
+    this downloads `B * PREFILL_BLOCK * V` floats in one readback instead
+    of B full-state copies (the batched analogue of `lower_extract`)."""
+    kvn = kv_len(cfg)
+    n = PREFILL_BLOCK * cfg.vocab_size
+
+    def fn(states):
+        return jax.lax.slice(states, (0, kvn), (batch, kvn + n))
+
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((batch, state_len(cfg)), jnp.float32)
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_pack(cfg: ModelConfig, batch: int) -> str:
+    """Lane-pack entry: `fn(states[B, S], incoming[S], lane[]) -> states'`.
+
+    Writes one sequence's full state vector over lane `lane` of the arena
+    (admission gather). Because the entire row is overwritten, recycled
+    lanes need no zeroing — whatever the previous occupant left is dead."""
+    def fn(states, incoming, lane):
+        return jax.lax.dynamic_update_slice(states, incoming[None, :], (lane, 0))
+
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((batch, state_len(cfg)), jnp.float32),
+        jax.ShapeDtypeStruct((state_len(cfg),), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
     return to_hlo_text(lowered)
 
 
@@ -184,6 +278,53 @@ def golden_probe(cfg: ModelConfig, params: Dict[str, np.ndarray], entry: str, bl
     }
 
 
+def golden_probe_batched(cfg: ModelConfig, params: Dict[str, np.ndarray],
+                         batch: int, block: int, rtol: float = 1e-5):
+    """Self-checking probe for one batched entry at batch size `batch`.
+
+    Runs the batched function over a half-masked batch (lane 1 inactive)
+    of fresh zero states, asserts every active lane's output equals the
+    single-sequence path and the masked lane's state passes through
+    bit-for-bit, then records per-lane logits heads/argmaxes for the Rust
+    integration test to pin against the compiled batched executable."""
+    rng = np.random.default_rng(47)
+    names = model.param_names(cfg)
+    flat = [jnp.asarray(params[n]) for n in names]
+    kvn = kv_len(cfg)
+    v = cfg.vocab_size
+
+    states = jnp.zeros((batch, state_len(cfg)), jnp.float32)
+    tokens = jnp.asarray(rng.integers(5, v, size=(batch, block)).astype(np.int32))
+    pos = jnp.zeros((batch,), jnp.int32)
+    mask_np = np.ones(batch, np.int32)
+    if batch > 1:
+        mask_np[1] = 0  # pin the masked-lane no-op
+    mask = jnp.asarray(mask_np)
+
+    out = np.asarray(batched_fn(cfg, block)(flat, states, tokens, pos, mask))
+    single = state_fn(cfg, block)
+    heads, argmaxes = [], []
+    for b in range(batch):
+        if mask_np[b]:
+            want = np.asarray(single(flat, states[b], tokens[b], pos[b]))
+            np.testing.assert_allclose(out[b], want, rtol=rtol, atol=1e-5,
+                                       err_msg=f"batched lane {b} != single path")
+        else:
+            np.testing.assert_array_equal(out[b], np.asarray(states[b]),
+                                          err_msg="masked lane must be a no-op")
+        rows = out[b, kvn:kvn + block * v].reshape(block, v)
+        heads.append(rows[:, :8].round(5).tolist())
+        argmaxes.append(int(np.argmax(rows[-1])))
+    return {
+        "batch": batch,
+        "block": block,
+        "tokens": np.asarray(tokens).tolist(),
+        "mask": mask_np.tolist(),
+        "logits_head": heads,
+        "logits_last_argmax": argmaxes,
+    }
+
+
 # ---------------------------------------------------------------------------
 # Driver
 # ---------------------------------------------------------------------------
@@ -208,7 +349,11 @@ def export_eval_prompts(out_dir: str, per_task: int = 48, seed: int = 20240601) 
     print(f"[aot] eval prompts: {per_task}/task x {len(TASKS)} tasks", flush=True)
 
 
-def export(train_dir: str, out_dir: str) -> None:
+DEFAULT_BATCH_SIZES = (8,)
+
+
+def export(train_dir: str, out_dir: str, batch_sizes=DEFAULT_BATCH_SIZES) -> None:
+    batch_sizes = sorted(set(int(b) for b in batch_sizes if int(b) > 1))
     os.makedirs(out_dir, exist_ok=True)
     vocab = build_vocab()
     with open(os.path.join(out_dir, "vocab.json"), "w") as f:
@@ -227,6 +372,20 @@ def export(train_dir: str, out_dir: str) -> None:
                 f.write(text)
         with open(os.path.join(hlo_dir, "extract.hlo.txt"), "w") as f:
             f.write(lower_extract(cfg))
+        # Batched [B, T] entry points (one PJRT dispatch per lockstep
+        # phase). File naming: <entry>.b<B>.hlo.txt — old bundles simply
+        # lack these files and the Rust runtime falls back to per-lane
+        # dispatch.
+        for b in batch_sizes:
+            for entry, block in ENTRY_POINTS.items():
+                path = os.path.join(hlo_dir, f"{entry}.b{b}.hlo.txt")
+                print(f"[aot] lowering {cfg.name}/{entry} (B={b}, T={block})", flush=True)
+                with open(path, "w") as f:
+                    f.write(lower_entry_batched(cfg, block, b))
+            with open(os.path.join(hlo_dir, f"extract.b{b}.hlo.txt"), "w") as f:
+                f.write(lower_extract_batched(cfg, b))
+            with open(os.path.join(hlo_dir, f"pack.b{b}.hlo.txt"), "w") as f:
+                f.write(lower_pack(cfg, b))
 
     # --- weights + golden probes per trained model -------------------------
     wdir = os.path.join(out_dir, "weights")
@@ -248,6 +407,12 @@ def export(train_dir: str, out_dir: str) -> None:
             "params": int(sum(int(np.prod(v.shape)) for v in params.values())),
         }
         golden[name] = golden_probe(cfg, params, "verify", VERIFY_BLOCK)
+        # Batched probes are self-checking (batched == per-lane asserted at
+        # export time) and recorded per batch size for the Rust runtime test.
+        golden[name]["batched"] = {
+            str(b): golden_probe_batched(cfg, params, b, VERIFY_BLOCK)
+            for b in batch_sizes
+        }
         print(f"[aot] packed {name} ({models[name]['params']} params)", flush=True)
 
     n_target = models["target"]["params"]
@@ -272,6 +437,11 @@ def export(train_dir: str, out_dir: str) -> None:
                 "kv_len": kv_len(cfg),
                 "state_len": state_len(cfg),
                 "param_order": model.param_names(cfg),
+                # Batched entry points exported for these batch sizes as
+                # <entry>.b<B>.hlo.txt (+ extract.b<B> / pack.b<B>). Absent
+                # or empty on older bundles: the Rust loader treats the key
+                # as optional and serves per-lane.
+                "batch_sizes": batch_sizes,
             }
             for cfg in (TARGET_CONFIG, DRAFT_CONFIG)
         },
@@ -289,8 +459,11 @@ def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--train-dir", default="../artifacts/train")
     ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--batch-sizes", default=",".join(str(b) for b in DEFAULT_BATCH_SIZES),
+                    help="comma-separated [B, T] entry-point batch sizes ('' disables)")
     args = ap.parse_args()
-    export(args.train_dir, args.out)
+    sizes = [int(b) for b in args.batch_sizes.split(",") if b.strip()]
+    export(args.train_dir, args.out, batch_sizes=sizes)
 
 
 if __name__ == "__main__":

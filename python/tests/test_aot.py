@@ -92,6 +92,75 @@ def test_weights_roundtrip(tmp_path):
     assert total == model.count_params(params)
 
 
+def test_batched_fn_matches_per_lane_and_masks_pass_through():
+    """The [B, T] batched function is the per-lane single function plus a
+    mask select: active lanes equal the single path, masked lanes are
+    bit-for-bit pass-throughs."""
+    params = model.init_params(TINY, seed=3)
+    names = model.param_names(TINY)
+    flat = [params[n] for n in names]
+    block, batch = 3, 4
+    rng = np.random.default_rng(7)
+    states = jnp.asarray(rng.normal(size=(batch, aot.state_len(TINY))).astype(np.float32))
+    tokens = jnp.asarray(rng.integers(0, TINY.vocab_size, (batch, block)).astype(np.int32))
+    pos = jnp.asarray([0, 0, 4, 9], jnp.int32)
+    mask = jnp.asarray([1, 0, 1, 1], jnp.int32)
+
+    out = np.asarray(aot.batched_fn(TINY, block, use_pallas=False)(
+        flat, states, tokens, pos, mask))
+    single = aot.state_fn(TINY, block, use_pallas=False)
+    for b in range(batch):
+        if int(mask[b]):
+            want = np.asarray(single(flat, states[b], tokens[b], pos[b]))
+            np.testing.assert_allclose(out[b], want, rtol=1e-5, atol=1e-6)
+        else:
+            np.testing.assert_array_equal(out[b], np.asarray(states[b]))
+
+
+def test_lower_entry_batched_emits_hlo_text():
+    text = aot.lower_entry_batched(TINY, block=2, batch=3, use_pallas=False)
+    assert "ENTRY" in text and "HloModule" in text
+    # Non-tuple root: the [B, state_len] arena buffer threads call-to-call.
+    assert f"f32[3,{aot.state_len(TINY)}]" in text
+
+
+def test_lower_extract_batched_and_pack_emit_hlo_text():
+    text = aot.lower_extract_batched(TINY, batch=3)
+    assert f"f32[3,{aot.PREFILL_BLOCK * TINY.vocab_size}]" in text
+    text = aot.lower_pack(TINY, batch=3)
+    assert "dynamic-update-slice" in text
+
+
+def test_pack_semantics_overwrite_one_lane():
+    """The pack entry writes the whole incoming state over exactly one
+    lane — recycled lanes need no zeroing."""
+    sl = aot.state_len(TINY)
+    rng = np.random.default_rng(11)
+    states = jnp.asarray(rng.normal(size=(4, sl)).astype(np.float32))
+    incoming = jnp.asarray(rng.normal(size=(sl,)).astype(np.float32))
+
+    def pack(states, incoming, lane):
+        return jax.lax.dynamic_update_slice(states, incoming[None, :], (lane, 0))
+
+    out = np.asarray(pack(states, incoming, jnp.asarray(2, jnp.int32)))
+    np.testing.assert_array_equal(out[2], np.asarray(incoming))
+    for b in (0, 1, 3):
+        np.testing.assert_array_equal(out[b], np.asarray(states[b]))
+
+
+def test_golden_probe_batched_self_checks():
+    params = {k: np.asarray(v) for k, v in model.init_params(TINY, seed=2).items()}
+    probe = aot.golden_probe_batched(TINY, params, batch=3, block=4)
+    assert probe["batch"] == 3 and probe["block"] == 4
+    assert probe["mask"] == [1, 0, 1]
+    assert len(probe["tokens"]) == 3 and len(probe["tokens"][0]) == 4
+    assert len(probe["logits_head"]) == 3
+    assert len(probe["logits_last_argmax"]) == 3
+    # Deterministic (the Rust test replays it against the compiled exe).
+    again = aot.golden_probe_batched(TINY, params, batch=3, block=4)
+    assert probe == again
+
+
 def test_golden_probe_deterministic():
     params = {k: np.asarray(v) for k, v in model.init_params(TINY, seed=2).items()}
     a = aot.golden_probe(TINY, params, "verify", 4)
@@ -114,13 +183,20 @@ def test_export_smoke(tmp_path):
     save_params(os.path.join(train_dir, "draft_base.npz"),
                 model.init_params(DRAFT_CONFIG, 1))
     out = os.path.join(tmp_path, "artifacts")
-    aot.export(train_dir, out)
+    aot.export(train_dir, out, batch_sizes=(2,))
     manifest = json.load(open(os.path.join(out, "manifest.json")))
     assert manifest["format"] == "specd-artifacts-v1"
     assert set(manifest["models"]) == {"target", "draft_base"}
     assert manifest["models"]["draft_base"]["c_ratio"] < 0.05
     for arch in ("target", "draft"):
+        assert manifest["arch"][arch]["batch_sizes"] == [2]
         for entry in ("prefill", "verify", "decode"):
             assert os.path.exists(os.path.join(out, "hlo", arch, f"{entry}.hlo.txt"))
+            assert os.path.exists(os.path.join(out, "hlo", arch, f"{entry}.b2.hlo.txt"))
+        for extra in ("extract.b2", "pack.b2"):
+            assert os.path.exists(os.path.join(out, "hlo", arch, f"{extra}.hlo.txt"))
+    golden = json.load(open(os.path.join(out, "golden.json")))
+    for name in ("target", "draft_base"):
+        assert set(golden[name]["batched"]) == {"2"}
     prompts = json.load(open(os.path.join(out, "eval_prompts.json")))
     assert set(prompts) == {"dolly", "xsum", "cnndm", "wmt"}

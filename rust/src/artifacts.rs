@@ -28,6 +28,11 @@ pub struct ArchInfo {
     /// total f32 elements of the state vector (kv + logits region).
     pub state_len: usize,
     pub param_order: Vec<String>,
+    /// Batch sizes of the exported `[B, T]` entry points
+    /// (`<entry>.b<B>.hlo.txt`). Empty on bundles exported before batched
+    /// entries existed — the key is optional and the runtime then serves
+    /// per-lane.
+    pub batch_sizes: Vec<usize>,
 }
 
 /// One trained model (weights variant).
@@ -93,6 +98,13 @@ impl Manifest {
                 .iter()
                 .map(|x| x.as_str().unwrap_or("").to_string())
                 .collect();
+            // Optional (absent on pre-batched bundles): tolerate missing
+            // key and junk entries rather than rejecting an old bundle.
+            let batch_sizes = a
+                .get("batch_sizes")
+                .as_arr()
+                .map(|xs| xs.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_default();
             archs.insert(
                 name.clone(),
                 ArchInfo {
@@ -107,6 +119,7 @@ impl Manifest {
                     kv_len: a.req_usize("kv_len")?,
                     state_len: a.req_usize("state_len")?,
                     param_order,
+                    batch_sizes,
                 },
             );
         }
@@ -201,7 +214,8 @@ mod tests {
                 "target": {"hlo_dir": "hlo/target", "n_layers": 6, "n_heads": 8,
                            "hidden": 128, "intermediate": 384, "head_dim": 16,
                            "max_seq": 256, "vocab_size": 384, "kv_len": 393216,
-                           "state_len": 405504, "param_order": ["embed", "final_norm"]},
+                           "state_len": 405504, "param_order": ["embed", "final_norm"],
+                           "batch_sizes": [8]},
                 "draft": {"hlo_dir": "hlo/draft", "n_layers": 2, "n_heads": 3,
                           "hidden": 24, "intermediate": 64, "head_dim": 8,
                           "max_seq": 256, "vocab_size": 384, "kv_len": 24576,
@@ -225,6 +239,10 @@ mod tests {
         assert_eq!(m.arch("draft").unwrap().kv_len, 24576);
         assert!((m.model("draft_base").unwrap().c_ratio - 0.0168).abs() < 1e-9);
         assert_eq!(m.draft_models(), vec!["draft_base".to_string()]);
+        // batch_sizes is optional: present on target, absent on draft —
+        // both parse (pre-batched bundles keep loading).
+        assert_eq!(m.arch("target").unwrap().batch_sizes, vec![8]);
+        assert!(m.arch("draft").unwrap().batch_sizes.is_empty());
     }
 
     #[test]

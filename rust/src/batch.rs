@@ -3,24 +3,28 @@
 //!
 //! One [`BatchStep::run`] performs, over every lane:
 //!
-//! 1. a **draft-sync sweep** (one [`SpecDecoder::begin_block`] per lane),
+//! 1. a **draft-sync sweep** (draft ingestion for every lane),
 //! 2. γ **proposal-round sweeps** — round j for *every* lane before round
-//!    j+1 for any ([`SpecDecoder::propose_round`]),
-//! 3. a **verify sweep** ([`SpecDecoder::commit_block`]).
+//!    j+1 for any,
+//! 3. a **verify sweep**.
 //!
-//! The point of the lockstep is dispatch locality: within a phase the same
-//! PJRT executable is invoked back-to-back for all sequences, so the
-//! scheduler is already shaped for genuinely batched executables — when
-//! the compile pipeline exports `[B, T]` entry points, only the inner
-//! loops here fuse into single calls; the coordinator above doesn't
-//! change. Until then the win is instruction/weight locality and the
-//! per-phase timing signal exported to `/metrics`.
+//! With a [`BatchedCtx`] loaded (bundles exported with batched `[B, T]`
+//! entry points), each phase over the adopted lanes is a SINGLE fused
+//! PJRT dispatch ([`SpecDecoder::begin_block_batch`] /
+//! [`SpecDecoder::propose_round_batch`] /
+//! [`SpecDecoder::commit_block_batch`]): one `BatchStep::run` over N
+//! lanes issues O(γ + 2) dispatches instead of O(N·(γ + 2)). Sessions
+//! that could not be adopted (full arena, or a pre-batched bundle) fall
+//! back to per-lane dispatch of the single-sequence phase methods within
+//! the same lockstep — a mixed batch is correct, just less fused.
 //!
 //! Correctness under interleaving: each lane owns a private RNG and the
 //! per-lane order of RNG consumption (γ proposal samples, then the
 //! verification draws) is identical to the single-sequence
 //! [`SpecDecoder::step`], so batch-stepped output token-matches the
-//! direct engine (pinned by `rust/tests/coordinator_integration.rs`).
+//! direct engine in both modes (pinned by
+//! `rust/tests/coordinator_integration.rs` and
+//! `rust/tests/batched_integration.rs`).
 //!
 //! Two drivers sit on top: the latency-oriented [`crate::coordinator`]
 //! (serving, deadlines, streaming) and the throughput-oriented
@@ -32,7 +36,7 @@ use std::time::Instant;
 use crate::config::SamplingConfig;
 use crate::error::Error;
 use crate::rng::Pcg64;
-use crate::spec::{BlockState, SpecDecoder, SpecSession};
+use crate::spec::{BatchedCtx, BlockState, SpecDecoder, SpecSession};
 
 /// One active sequence's slice of the batch: mutable views the phases
 /// need, borrowed from the coordinator's per-request state for the
@@ -55,33 +59,61 @@ pub enum LaneOutcome {
     Failed(Error),
 }
 
-/// Wall-clock seconds spent in each lockstep phase of one batch step.
+/// Wall-clock seconds spent in each lockstep phase of one batch step,
+/// plus the step's dispatch and occupancy accounting.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct PhaseTimings {
     pub draft_sync: f64,
     pub propose: f64,
     pub verify: f64,
+    /// PJRT executable launches issued during this step (draft + target;
+    /// extract readbacks included). With the fused path this is O(γ + 2)
+    /// per step; per-lane it is O(N·(γ + 2)).
+    pub dispatches: u64,
+    /// Lanes that emitted a block this step (the batch occupancy).
+    pub lanes: usize,
+    /// Of those, lanes served by fused batched dispatch.
+    pub batched_lanes: usize,
 }
 
-/// The lockstep executor (stateless; the state lives in the lanes).
+/// The lockstep executor (stateless; the state lives in the lanes and the
+/// optional arenas).
 pub struct BatchStep;
 
 impl BatchStep {
     /// Run one speculation block for every lane, phase by phase. Always
-    /// returns exactly one outcome per lane, in lane order.
-    pub fn run(decoder: &SpecDecoder<'_>, lanes: &mut [Lane<'_>]) -> (Vec<LaneOutcome>, PhaseTimings) {
+    /// returns exactly one outcome per lane, in lane order. `ctx` carries
+    /// the fused-dispatch arenas; `None` (or an un-adopted session) means
+    /// per-lane dispatch.
+    pub fn run(
+        decoder: &SpecDecoder<'_>,
+        mut ctx: Option<&mut BatchedCtx>,
+        lanes: &mut [Lane<'_>],
+    ) -> (Vec<LaneOutcome>, PhaseTimings) {
         let n = lanes.len();
+        let fused = ctx.is_some();
         let mut timings = PhaseTimings::default();
-        let mut outcomes: Vec<Option<LaneOutcome>> = (0..n).map(|_| None).collect();
+        let dispatches0 = decoder.dispatch_count();
         let mut blocks: Vec<Option<BlockState>> = (0..n).map(|_| None).collect();
+        let mut failed: Vec<Option<Error>> = (0..n).map(|_| None).collect();
+        let mut emitted: Vec<Option<Vec<u32>>> = (0..n).map(|_| None).collect();
+        // A lane runs fused iff its session was adopted into the arenas.
+        let is_fused = |lane: &Lane<'_>| fused && lane.session.lane_mode();
 
         // Phase 1 — draft-sync sweep.
         let t0 = Instant::now();
+        if let Some(c) = ctx.as_deref_mut() {
+            if let Err(e) = decoder.begin_block_batch(c, lanes, &mut blocks, &mut failed) {
+                Self::fail_fused(lanes, &mut blocks, &mut failed, &e);
+            }
+        }
         for (i, lane) in lanes.iter_mut().enumerate() {
+            if is_fused(lane) || failed[i].is_some() {
+                continue;
+            }
             match decoder.begin_block(lane.session) {
-                Ok(Some(b)) => blocks[i] = Some(b),
-                Ok(None) => outcomes[i] = Some(LaneOutcome::Idle),
-                Err(e) => outcomes[i] = Some(LaneOutcome::Failed(e)),
+                Ok(b) => blocks[i] = b,
+                Err(e) => failed[i] = Some(e),
             }
         }
         timings.draft_sync = t0.elapsed().as_secs_f64();
@@ -92,13 +124,21 @@ impl BatchStep {
         let t0 = Instant::now();
         let rounds = blocks.iter().flatten().map(|b| b.gamma()).max().unwrap_or(0);
         for _round in 0..rounds {
+            if let Some(c) = ctx.as_deref_mut() {
+                if let Err(e) = decoder.propose_round_batch(c, lanes, &mut blocks, &mut failed) {
+                    Self::fail_fused(lanes, &mut blocks, &mut failed, &e);
+                }
+            }
             for (i, lane) in lanes.iter_mut().enumerate() {
+                if is_fused(lane) || failed[i].is_some() {
+                    continue;
+                }
                 let Some(b) = blocks[i].as_mut() else { continue };
                 if b.proposed() >= b.gamma() {
                     continue;
                 }
                 if let Err(e) = decoder.propose_round(lane.session, b, &lane.sampling, lane.rng) {
-                    outcomes[i] = Some(LaneOutcome::Failed(e));
+                    failed[i] = Some(e);
                     blocks[i] = None;
                 }
             }
@@ -107,21 +147,60 @@ impl BatchStep {
 
         // Phase 3 — verify sweep.
         let t0 = Instant::now();
+        if let Some(c) = ctx.as_deref_mut() {
+            if let Err(e) =
+                decoder.commit_block_batch(c, lanes, &mut blocks, &mut failed, &mut emitted)
+            {
+                Self::fail_fused(lanes, &mut blocks, &mut failed, &e);
+            }
+        }
         for (i, lane) in lanes.iter_mut().enumerate() {
+            if is_fused(lane) || failed[i].is_some() {
+                continue;
+            }
             let Some(b) = blocks[i].take() else { continue };
-            outcomes[i] =
-                Some(match decoder.commit_block(lane.session, b, &lane.sampling, lane.rng) {
-                    Ok(tokens) => LaneOutcome::Emitted(tokens),
-                    Err(e) => LaneOutcome::Failed(e),
-                });
+            match decoder.commit_block(lane.session, b, &lane.sampling, lane.rng) {
+                Ok(tokens) => emitted[i] = Some(tokens),
+                Err(e) => failed[i] = Some(e),
+            }
         }
         timings.verify = t0.elapsed().as_secs_f64();
 
-        let outcomes = outcomes
-            .into_iter()
-            .map(|o| o.expect("every lane resolves to an outcome"))
-            .collect();
+        // Resolve per-lane outcomes + the step's occupancy accounting.
+        let mut outcomes = Vec::with_capacity(n);
+        for (i, lane) in lanes.iter().enumerate() {
+            let outcome = if let Some(e) = failed[i].take() {
+                LaneOutcome::Failed(e)
+            } else if let Some(tokens) = emitted[i].take() {
+                timings.lanes += 1;
+                if is_fused(lane) {
+                    timings.batched_lanes += 1;
+                }
+                LaneOutcome::Emitted(tokens)
+            } else {
+                LaneOutcome::Idle
+            };
+            outcomes.push(outcome);
+        }
+        timings.dispatches = decoder.dispatch_count() - dispatches0;
         (outcomes, timings)
+    }
+
+    /// A shared fused dispatch failed: every adopted lane that has not
+    /// already resolved dies with it (the per-lane fallback lanes are
+    /// unaffected and keep running).
+    fn fail_fused(
+        lanes: &[Lane<'_>],
+        blocks: &mut [Option<BlockState>],
+        failed: &mut [Option<Error>],
+        e: &Error,
+    ) {
+        for (i, lane) in lanes.iter().enumerate() {
+            if lane.session.lane_mode() && failed[i].is_none() {
+                failed[i] = Some(Error::msg(format!("fused batched dispatch failed: {e}")));
+                blocks[i] = None;
+            }
+        }
     }
 }
 
@@ -129,14 +208,18 @@ impl BatchStep {
 mod tests {
     // BatchStep needs live sessions (compiled artifacts); its end-to-end
     // behaviour — batched output == direct engine output, per-phase
-    // lockstep, shrunken-gamma lanes sitting out late rounds — is covered
-    // by rust/tests/coordinator_integration.rs. The phase-capacity
-    // arithmetic is unit-tested in crate::spec (shrunken_gamma).
+    // lockstep, shrunken-gamma lanes sitting out late rounds, fused-path
+    // dispatch counts — is covered by rust/tests/coordinator_integration.rs
+    // and rust/tests/batched_integration.rs. The phase-capacity arithmetic
+    // is unit-tested in crate::spec (shrunken_gamma), the arena/staging
+    // invariants in crate::runtime.
     use super::PhaseTimings;
 
     #[test]
     fn timings_default_zero() {
         let t = PhaseTimings::default();
         assert_eq!(t.draft_sync + t.propose + t.verify, 0.0);
+        assert_eq!(t.dispatches, 0);
+        assert_eq!(t.lanes + t.batched_lanes, 0);
     }
 }

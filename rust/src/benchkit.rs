@@ -129,6 +129,15 @@ pub fn time_it<R>(f: impl FnOnce() -> R) -> (R, Duration) {
     (r, t0.elapsed())
 }
 
+/// Write a machine-readable benchmark artifact (`BENCH_*.json`): pretty
+/// JSON + trailing newline, written atomically (tmp + rename) so a
+/// half-written artifact never lands in the perf trajectory CI uploads.
+pub fn write_bench_json(path: &str, v: &crate::json::Value) -> crate::error::Result<()> {
+    let tmp = format!("{path}.tmp");
+    std::fs::write(&tmp, format!("{}\n", v.to_string_pretty())).map_err(crate::error::Error::Io)?;
+    std::fs::rename(&tmp, path).map_err(crate::error::Error::Io)
+}
+
 /// Fixed-width table printer for the figure benches: the paper's rows.
 pub struct Table {
     headers: Vec<String>,
@@ -218,5 +227,21 @@ mod tests {
     fn table_rejects_bad_arity() {
         let mut t = Table::new(&["a", "b"]);
         t.row(&["only-one".to_string()]);
+    }
+
+    #[test]
+    fn bench_json_roundtrips() {
+        use crate::json::Value;
+        let path = std::env::temp_dir().join("specd_bench_json_test.json");
+        let path = path.to_str().unwrap().to_string();
+        let v = Value::obj(vec![
+            ("bench", Value::Str("t".into())),
+            ("tokens_per_sec", Value::Num(123.5)),
+        ]);
+        write_bench_json(&path, &v).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.ends_with('\n'));
+        assert_eq!(Value::parse(&text).unwrap(), v);
+        std::fs::remove_file(&path).ok();
     }
 }

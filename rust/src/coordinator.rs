@@ -2,7 +2,9 @@
 //! the batch-stepped scheduler loop.
 //!
 //! Architecture (vLLM-router-style, adapted to a single-device CPU PJRT
-//! backend whose executables are single-sequence):
+//! backend; with a batched bundle each lockstep phase below is ONE fused
+//! `[B, T]` dispatch over a device-resident state arena, otherwise the
+//! executables are dispatched per sequence):
 //!
 //! ```text
 //!   clients ──bounded channel (backpressure)──▶ scheduler thread
@@ -176,6 +178,11 @@ impl<'a> Coordinator<'a> {
     /// Returns aggregate metrics.
     pub fn serve(&self, rx: Receiver<Request>, tx: Sender<Response>) -> Result<ServeMetrics> {
         let mut metrics = ServeMetrics::default();
+        // Fused-dispatch arenas, when the bundle exports batched entry
+        // points. Admitted sessions are adopted into them (arena-capacity
+        // permitting) so every lockstep phase is one PJRT dispatch;
+        // un-adopted sessions run per-lane within the same batch step.
+        let mut batched = self.decoder.batched_ctx()?;
         // Slot capacity: the sequence mirror can exceed the processed
         // positions by exactly one — the final bonus token is appended to
         // the sequence but never reprocessed.
@@ -242,7 +249,20 @@ impl<'a> Coordinator<'a> {
                 if let Some(ev) = &req.events {
                     let _ = ev.send(Delta::Started);
                 }
-                match self.decoder.start(&req.prompt) {
+                // Admission gather: prefill (owned state), then pack into
+                // the fused arenas when there is lane capacity. An adopt
+                // failure poisons only this session — report it like a
+                // start failure.
+                let started = self.decoder.start(&req.prompt).and_then(|mut session| {
+                    if let Some(c) = batched.as_mut() {
+                        if let Err(e) = self.decoder.adopt(c, &mut session) {
+                            self.decoder.release(c, &mut session);
+                            return Err(e);
+                        }
+                    }
+                    Ok(session)
+                });
+                match started {
                     Ok(session) => {
                         let slot = pool.alloc(req.id, slot_cap)?;
                         pool.get_mut(slot)?.advance(session.prompt_len)?;
@@ -298,10 +318,11 @@ impl<'a> Coordinator<'a> {
 
             // --- eviction sweep: deadlines + disconnected clients --------
             let mut survivors = Vec::with_capacity(active.len());
-            for a in active.drain(..) {
+            for mut a in active.drain(..) {
                 if a.expired() {
                     metrics.timeouts += 1;
                     pool.free(a.slot)?;
+                    self.release_lanes(&mut batched, &mut a.session);
                     Self::emit(
                         &tx,
                         &a.events,
@@ -310,6 +331,7 @@ impl<'a> Coordinator<'a> {
                 } else if a.disconnected() {
                     metrics.cancelled += 1;
                     pool.free(a.slot)?;
+                    self.release_lanes(&mut batched, &mut a.session);
                     // The delta receiver is gone; only the shared response
                     // channel observes the cancellation.
                     let _ = tx.send(Self::terminal_response(&a, Some(ERR_DISCONNECT.to_string())));
@@ -332,12 +354,15 @@ impl<'a> Coordinator<'a> {
                         rng: &mut a.rng,
                     })
                     .collect();
-                BatchStep::run(&self.decoder, &mut lanes)
+                BatchStep::run(&self.decoder, batched.as_mut(), &mut lanes)
             };
             metrics.batch_iterations += 1;
             metrics.phase_draft_sync_seconds += timings.draft_sync;
             metrics.phase_propose_seconds += timings.propose;
             metrics.phase_verify_seconds += timings.verify;
+            metrics.dispatches += timings.dispatches;
+            metrics.lane_steps += timings.lanes;
+            metrics.batched_lane_steps += timings.batched_lanes;
 
             let mut survivors = Vec::with_capacity(active.len());
             for (mut a, outcome) in active.drain(..).zip(outcomes) {
@@ -363,10 +388,12 @@ impl<'a> Coordinator<'a> {
                         if hung_up {
                             metrics.cancelled += 1;
                             pool.free(a.slot)?;
+                            self.release_lanes(&mut batched, &mut a.session);
                             let _ = tx
                                 .send(Self::terminal_response(&a, Some(ERR_DISCONNECT.to_string())));
                         } else if a.session.finished || a.session.generated().len() >= a.max_new {
                             pool.free(a.slot)?;
+                            self.release_lanes(&mut batched, &mut a.session);
                             Self::finish(&mut metrics, &tx, &a);
                         } else {
                             survivors.push(a);
@@ -377,10 +404,12 @@ impl<'a> Coordinator<'a> {
                         // finished): deliver the partial output as a
                         // successful completion.
                         pool.free(a.slot)?;
+                        self.release_lanes(&mut batched, &mut a.session);
                         Self::finish(&mut metrics, &tx, &a);
                     }
                     LaneOutcome::Failed(e) => {
                         pool.free(a.slot)?;
+                        self.release_lanes(&mut batched, &mut a.session);
                         Self::emit(&tx, &a.events, Self::terminal_response(&a, Some(e.to_string())));
                     }
                 }
@@ -392,12 +421,24 @@ impl<'a> Coordinator<'a> {
                 g.pool_peak.store(pool.peak_live, Ordering::Relaxed);
                 g.resident_tokens.store(pool.resident(), Ordering::Relaxed);
                 g.queue_depth.store(rx.len(), Ordering::Relaxed);
-                g.record_iteration(timings.draft_sync, timings.propose, timings.verify);
+                g.record_iteration(&timings);
             }
         }
         metrics.pool_peak_slots = pool.peak_live;
         metrics.wall_seconds = wall0.elapsed().as_secs_f64();
         Ok(metrics)
+    }
+
+    /// Return any fused-arena lanes a departing session holds (next to
+    /// every `pool.free` — the slot pool and the arenas recycle together).
+    fn release_lanes(
+        &self,
+        batched: &mut Option<crate::spec::BatchedCtx>,
+        session: &mut SpecSession,
+    ) {
+        if let Some(c) = batched.as_mut() {
+            self.decoder.release(c, session);
+        }
     }
 
     /// Build the terminal [`Response`] for `a`: tokens truncated to the

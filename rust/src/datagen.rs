@@ -5,8 +5,9 @@
 //! every KV slot full from a deterministic seed-instruction stream
 //! ([`crate::workload::SeedStream`], dolly/cnndm/xsum — wmt excluded per
 //! the paper's OOD protocol) until a response-token budget is met, running
-//! the same lockstep [`BatchStep`] the server uses so per-phase dispatch
-//! locality carries over unchanged.
+//! the same lockstep [`BatchStep`] the server uses — including the fused
+//! `[B, T]` dispatch path when the bundle exports batched entry points —
+//! so per-phase dispatch behaviour carries over unchanged.
 //!
 //! Each finished sequence becomes one [`DistillRecord`]: seed prompt,
 //! target-verified response, and the target's top-k raw logits per
@@ -160,6 +161,10 @@ pub fn run_distill(
     // processed positions by the final bonus token.
     let slot_cap = decoder.target.max_seq() + 1;
     let mut pool: SlotPool<u64> = SlotPool::new(cfg.max_slots);
+    // Fused-dispatch arenas (batched bundles): adopted lanes run each
+    // lockstep phase as one PJRT dispatch. Errors abort the run (fail
+    // fast, same policy as generation failures).
+    let mut batched = decoder.batched_ctx()?;
     let mut active: Vec<GenLane> = Vec::new();
     let wall0 = Instant::now();
 
@@ -169,6 +174,9 @@ pub fn run_distill(
             let sp = stream.next_prompt();
             let mut session = decoder.start(&sp.prompt)?;
             session.enable_capture(topk);
+            if let Some(c) = batched.as_mut() {
+                decoder.adopt(c, &mut session)?;
+            }
             let slot = pool.alloc(sp.index, slot_cap)?;
             pool.get_mut(slot)?.advance(session.prompt_len)?;
             let sampling = SamplingConfig {
@@ -189,12 +197,15 @@ pub fn run_distill(
                 .iter_mut()
                 .map(|l| Lane { session: &mut l.session, sampling: l.sampling, rng: &mut l.rng })
                 .collect();
-            BatchStep::run(decoder, &mut lanes)
+            BatchStep::run(decoder, batched.as_mut(), &mut lanes)
         };
         metrics.batch_iterations += 1;
         metrics.phase_draft_sync_seconds += timings.draft_sync;
         metrics.phase_propose_seconds += timings.propose;
         metrics.phase_verify_seconds += timings.verify;
+        metrics.dispatches += timings.dispatches;
+        metrics.lane_steps += timings.lanes;
+        metrics.batched_lane_steps += timings.batched_lanes;
 
         let mut survivors = Vec::with_capacity(active.len());
         for (mut lane, outcome) in active.drain(..).zip(outcomes) {
@@ -202,7 +213,7 @@ pub fn run_distill(
                 LaneOutcome::Emitted(emitted) => {
                     pool.get_mut(lane.slot)?.advance(emitted.len())?;
                     if lane.session.finished || lane.session.generated().len() >= cfg.max_new {
-                        pool.free(lane.slot)?;
+                        retire(decoder, &mut batched, &mut pool, &mut lane)?;
                         total_tokens += commit(&mut writer, &mut metrics, &mut lane, cfg.max_new)?;
                     } else {
                         survivors.push(lane);
@@ -211,11 +222,11 @@ pub fn run_distill(
                 LaneOutcome::Idle => {
                     // Context capacity reached; the partial response is a
                     // valid (short) record.
-                    pool.free(lane.slot)?;
+                    retire(decoder, &mut batched, &mut pool, &mut lane)?;
                     total_tokens += commit(&mut writer, &mut metrics, &mut lane, cfg.max_new)?;
                 }
                 LaneOutcome::Failed(e) => {
-                    pool.free(lane.slot)?;
+                    retire(decoder, &mut batched, &mut pool, &mut lane)?;
                     return Err(e); // fail fast; resume regenerates the tail
                 }
             }
@@ -229,6 +240,21 @@ pub fn run_distill(
     metrics.shard_bytes = summary.bytes_written;
     metrics.wall_seconds = wall0.elapsed().as_secs_f64();
     Ok(metrics)
+}
+
+/// Retire one lane from the pool AND the fused arenas (every exit path —
+/// finish, capacity, failure — must free both or arena capacity leaks).
+fn retire(
+    decoder: &SpecDecoder<'_>,
+    batched: &mut Option<crate::spec::BatchedCtx>,
+    pool: &mut SlotPool<u64>,
+    lane: &mut GenLane,
+) -> Result<()> {
+    pool.free(lane.slot)?;
+    if let Some(c) = batched.as_mut() {
+        decoder.release(c, &mut lane.session);
+    }
+    Ok(())
 }
 
 /// Finish one lane: clip response + stats + capture to `max_new`, fold the

@@ -96,8 +96,13 @@ fn info(manifest: &Manifest) -> Result<()> {
     println!("artifact bundle: {}", manifest.root.display());
     println!("vocab: {} tokens (hash {})", manifest.vocab_size, manifest.vocab_hash);
     for (name, a) in &manifest.archs {
+        let batched = if a.batch_sizes.is_empty() {
+            "per-lane only".to_string()
+        } else {
+            format!("batched B={:?}", a.batch_sizes)
+        };
         println!(
-            "arch {name}: {} layers, {} heads, hidden {}, max_seq {}, state {} f32",
+            "arch {name}: {} layers, {} heads, hidden {}, max_seq {}, state {} f32, {batched}",
             a.n_layers, a.n_heads, a.hidden, a.max_seq, a.state_len
         );
     }

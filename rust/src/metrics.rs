@@ -153,6 +153,15 @@ pub struct ServeMetrics {
     pub phase_draft_sync_seconds: f64,
     pub phase_propose_seconds: f64,
     pub phase_verify_seconds: f64,
+    /// PJRT executable launches issued by the scheduler's batch steps.
+    /// The fused batched path spends O(γ + 2) per step; per-lane dispatch
+    /// spends O(N·(γ + 2)) — this counter is how the difference shows.
+    pub dispatches: u64,
+    /// Lanes that emitted a block, summed over iterations
+    /// (`lane_steps / batch_iterations` = mean batch occupancy).
+    pub lane_steps: usize,
+    /// Of those, lane-steps served by fused batched dispatch.
+    pub batched_lane_steps: usize,
     /// Iterations that began with queued requests and an exhausted slot
     /// pool (admission deferred, not errored).
     pub admission_deferrals: usize,
@@ -193,6 +202,24 @@ impl ServeMetrics {
         }
     }
 
+    /// Mean lanes emitting per batch step (0 with no iterations).
+    pub fn batch_occupancy(&self) -> f64 {
+        if self.batch_iterations == 0 {
+            0.0
+        } else {
+            self.lane_steps as f64 / self.batch_iterations as f64
+        }
+    }
+
+    /// Mean PJRT dispatches per batch step (0 with no iterations).
+    pub fn dispatches_per_step(&self) -> f64 {
+        if self.batch_iterations == 0 {
+            0.0
+        } else {
+            self.dispatches as f64 / self.batch_iterations as f64
+        }
+    }
+
     /// Merge another aggregation into this one (the HTTP server folds each
     /// completed request's view into a shared live aggregate). Retained
     /// samples are windowed to the last [`LATENCY_WINDOW`] so a
@@ -216,6 +243,9 @@ impl ServeMetrics {
         self.phase_draft_sync_seconds += other.phase_draft_sync_seconds;
         self.phase_propose_seconds += other.phase_propose_seconds;
         self.phase_verify_seconds += other.phase_verify_seconds;
+        self.dispatches += other.dispatches;
+        self.lane_steps += other.lane_steps;
+        self.batched_lane_steps += other.batched_lane_steps;
         self.admission_deferrals += other.admission_deferrals;
         self.pool_peak_slots = self.pool_peak_slots.max(other.pool_peak_slots);
     }
@@ -262,6 +292,18 @@ impl ServeMetrics {
                          "Wall seconds in the proposal-round phases.", self.phase_propose_seconds);
             prom_counter(&mut s, "specd_phase_verify_seconds_total",
                          "Wall seconds in the target-verify phase.", self.phase_verify_seconds);
+            prom_counter(&mut s, "specd_dispatches_total",
+                         "PJRT executable launches issued by the scheduler.",
+                         self.dispatches as f64);
+            prom_counter(&mut s, "specd_lane_steps_total",
+                         "Lane-blocks emitted across batch steps.", self.lane_steps as f64);
+            prom_counter(&mut s, "specd_batched_lane_steps_total",
+                         "Lane-blocks served by fused batched dispatch.",
+                         self.batched_lane_steps as f64);
+            prom_gauge(&mut s, "specd_batch_occupancy",
+                       "Mean lanes emitting per batch step.", self.batch_occupancy());
+            prom_gauge(&mut s, "specd_dispatches_per_step",
+                       "Mean PJRT dispatches per batch step.", self.dispatches_per_step());
             prom_counter(&mut s, "specd_admission_deferrals_total",
                          "Iterations with queued work deferred on an exhausted slot pool.",
                          self.admission_deferrals as f64);
@@ -298,7 +340,8 @@ impl ServeMetrics {
              latency p50={} p90={} p99={} | ttft p50={} p90={}\n\
              block_efficiency={:.3} acceptance={:.3}\n\
              phases: draft_sync={:.2}s propose={:.2}s verify={:.2}s over {} steps \
-             | pool peak={} deferrals={}",
+             | pool peak={} deferrals={}\n\
+             dispatch: {} total ({:.1}/step) occupancy={:.2} fused_lane_steps={}/{}",
             self.total_requests,
             self.total_new_tokens,
             self.wall_seconds,
@@ -317,6 +360,11 @@ impl ServeMetrics {
             self.batch_iterations,
             self.pool_peak_slots,
             self.admission_deferrals,
+            self.dispatches,
+            self.dispatches_per_step(),
+            self.batch_occupancy(),
+            self.batched_lane_steps,
+            self.lane_steps,
         )
     }
 }
@@ -344,6 +392,12 @@ pub struct DistillMetrics {
     pub phase_draft_sync_seconds: f64,
     pub phase_propose_seconds: f64,
     pub phase_verify_seconds: f64,
+    /// PJRT executable launches issued by the run's batch steps.
+    pub dispatches: u64,
+    /// Lane-blocks emitted across steps (occupancy numerator) and the
+    /// fused-dispatch share of them.
+    pub lane_steps: usize,
+    pub batched_lane_steps: usize,
     pub pool_peak_slots: usize,
     pub spec: SpecStats,
 }
@@ -367,6 +421,15 @@ impl DistillMetrics {
         }
     }
 
+    /// Mean lanes emitting per batch step (0 with no iterations).
+    pub fn batch_occupancy(&self) -> f64 {
+        if self.batch_iterations == 0 {
+            0.0
+        } else {
+            self.lane_steps as f64 / self.batch_iterations as f64
+        }
+    }
+
     /// Render in Prometheus text exposition format (`specd_distill_*`
     /// families, disjoint from the serving families).
     pub fn prometheus_text(&self) -> String {
@@ -383,6 +446,15 @@ impl DistillMetrics {
                      "Host seconds extracting top-k target logits.", self.capture_seconds);
         prom_counter(&mut s, "specd_distill_batch_iterations_total",
                      "Lockstep batch steps executed.", self.batch_iterations as f64);
+        prom_counter(&mut s, "specd_distill_dispatches_total",
+                     "PJRT executable launches issued.", self.dispatches as f64);
+        prom_counter(&mut s, "specd_distill_lane_steps_total",
+                     "Lane-blocks emitted across batch steps.", self.lane_steps as f64);
+        prom_counter(&mut s, "specd_distill_batched_lane_steps_total",
+                     "Lane-blocks served by fused batched dispatch.",
+                     self.batched_lane_steps as f64);
+        prom_gauge(&mut s, "specd_distill_batch_occupancy",
+                   "Mean lanes emitting per batch step.", self.batch_occupancy());
         prom_gauge(&mut s, "specd_distill_tokens_per_sec",
                    "Response-token generation throughput.", self.tokens_per_sec());
         prom_gauge(&mut s, "specd_distill_capture_overhead",
@@ -395,7 +467,8 @@ impl DistillMetrics {
             "distill: sequences={} (+{} resumed) tokens={} wall={:.2}s throughput={:.1} tok/s\n\
              shards={} ({} bytes) capture={:.2}s ({:.1}% of wall)\n\
              block_efficiency={:.3} acceptance={:.3}\n\
-             phases: draft_sync={:.2}s propose={:.2}s verify={:.2}s over {} steps | pool peak={}",
+             phases: draft_sync={:.2}s propose={:.2}s verify={:.2}s over {} steps | pool peak={}\n\
+             dispatch: {} total occupancy={:.2} fused_lane_steps={}/{}",
             self.sequences,
             self.resumed_records,
             self.response_tokens,
@@ -412,6 +485,10 @@ impl DistillMetrics {
             self.phase_verify_seconds,
             self.batch_iterations,
             self.pool_peak_slots,
+            self.dispatches,
+            self.batch_occupancy(),
+            self.batched_lane_steps,
+            self.lane_steps,
         )
     }
 }
@@ -440,15 +517,26 @@ pub struct SchedulerGauges {
     phase_verify_us: AtomicU64,
     iterations: AtomicU64,
     deferrals: AtomicU64,
+    /// PJRT executable launches issued across batch steps.
+    dispatches: AtomicU64,
+    /// Lane-blocks emitted across steps, and the fused-dispatch share.
+    lane_steps: AtomicU64,
+    batched_lane_steps: AtomicU64,
+    /// Lanes that emitted in the most recent step (live occupancy gauge).
+    pub last_occupancy: AtomicUsize,
 }
 
 impl SchedulerGauges {
-    /// Fold one batch step's phase timings (seconds) into the counters.
-    pub fn record_iteration(&self, draft_sync_s: f64, propose_s: f64, verify_s: f64) {
-        self.phase_draft_sync_us.fetch_add((draft_sync_s * 1e6) as u64, Ordering::Relaxed);
-        self.phase_propose_us.fetch_add((propose_s * 1e6) as u64, Ordering::Relaxed);
-        self.phase_verify_us.fetch_add((verify_s * 1e6) as u64, Ordering::Relaxed);
+    /// Fold one batch step's timings/dispatch accounting into the counters.
+    pub fn record_iteration(&self, t: &crate::batch::PhaseTimings) {
+        self.phase_draft_sync_us.fetch_add((t.draft_sync * 1e6) as u64, Ordering::Relaxed);
+        self.phase_propose_us.fetch_add((t.propose * 1e6) as u64, Ordering::Relaxed);
+        self.phase_verify_us.fetch_add((t.verify * 1e6) as u64, Ordering::Relaxed);
         self.iterations.fetch_add(1, Ordering::Relaxed);
+        self.dispatches.fetch_add(t.dispatches, Ordering::Relaxed);
+        self.lane_steps.fetch_add(t.lanes as u64, Ordering::Relaxed);
+        self.batched_lane_steps.fetch_add(t.batched_lanes as u64, Ordering::Relaxed);
+        self.last_occupancy.store(t.lanes, Ordering::Relaxed);
     }
 
     /// Count one admission deferred on an exhausted slot pool — this is
@@ -473,8 +561,20 @@ impl SchedulerGauges {
         prom_gauge(&mut s, "specd_sched_queue_depth",
                    "Admission-queue depth at the last scheduler iteration.",
                    self.queue_depth.load(Ordering::Relaxed) as f64);
+        prom_gauge(&mut s, "specd_sched_batch_occupancy",
+                   "Lanes that emitted in the most recent batch step.",
+                   self.last_occupancy.load(Ordering::Relaxed) as f64);
         prom_counter(&mut s, "specd_sched_iterations_total", "Lockstep batch steps executed.",
                      self.iterations.load(Ordering::Relaxed) as f64);
+        prom_counter(&mut s, "specd_sched_dispatches_total",
+                     "PJRT executable launches issued by the scheduler.",
+                     self.dispatches.load(Ordering::Relaxed) as f64);
+        prom_counter(&mut s, "specd_sched_lane_steps_total",
+                     "Lane-blocks emitted across batch steps.",
+                     self.lane_steps.load(Ordering::Relaxed) as f64);
+        prom_counter(&mut s, "specd_sched_batched_lane_steps_total",
+                     "Lane-blocks served by fused batched dispatch.",
+                     self.batched_lane_steps.load(Ordering::Relaxed) as f64);
         prom_counter(&mut s, "specd_sched_admission_deferrals_total",
                      "Iterations with queued work deferred on an exhausted slot pool.",
                      self.deferrals.load(Ordering::Relaxed) as f64);
@@ -609,22 +709,39 @@ mod tests {
         a.phase_verify_seconds = 1.5;
         a.pool_peak_slots = 3;
         a.admission_deferrals = 1;
+        a.dispatches = 20;
+        a.lane_steps = 6;
+        a.batched_lane_steps = 6;
         let mut b = ServeMetrics::default();
         b.batch_iterations = 1;
         b.phase_draft_sync_seconds = 0.25;
         b.pool_peak_slots = 2;
+        b.dispatches = 10;
+        b.lane_steps = 3;
         a.merge(&b);
         assert_eq!(a.batch_iterations, 3);
         assert!((a.phase_draft_sync_seconds - 0.75).abs() < 1e-12);
         assert_eq!(a.pool_peak_slots, 3, "peak merges as max");
+        assert_eq!(a.dispatches, 30);
+        assert_eq!(a.lane_steps, 9);
+        assert_eq!(a.batched_lane_steps, 6);
+        assert!((a.batch_occupancy() - 3.0).abs() < 1e-12);
+        assert!((a.dispatches_per_step() - 10.0).abs() < 1e-12);
         let text = a.prometheus_text();
         assert!(text.contains("specd_phase_draft_sync_seconds_total 0.75"));
         assert!(text.contains("specd_phase_verify_seconds_total 1.5"));
         assert!(text.contains("specd_batch_iterations_total 3"));
         assert!(text.contains("specd_pool_peak_slots 3"));
         assert!(text.contains("specd_admission_deferrals_total 1"));
+        assert!(text.contains("specd_dispatches_total 30"));
+        assert!(text.contains("specd_lane_steps_total 9"));
+        assert!(text.contains("specd_batched_lane_steps_total 6"));
+        assert!(text.contains("specd_batch_occupancy 3"));
+        assert!(text.contains("specd_dispatches_per_step 10"));
         let report = a.report();
         assert!(report.contains("pool peak=3"), "report: {report}");
+        assert!(report.contains("occupancy=3.00"), "report: {report}");
+        assert!(report.contains("fused_lane_steps=6/9"), "report: {report}");
     }
 
     #[test]
@@ -634,8 +751,24 @@ mod tests {
         g.pool_max.store(4, Ordering::Relaxed);
         g.pool_peak.store(4, Ordering::Relaxed);
         g.resident_tokens.store(512, Ordering::Relaxed);
-        g.record_iteration(0.5, 1.0, 0.25);
-        g.record_iteration(0.5, 0.0, 0.25);
+        let t1 = crate::batch::PhaseTimings {
+            draft_sync: 0.5,
+            propose: 1.0,
+            verify: 0.25,
+            dispatches: 8,
+            lanes: 4,
+            batched_lanes: 4,
+        };
+        let t2 = crate::batch::PhaseTimings {
+            draft_sync: 0.5,
+            propose: 0.0,
+            verify: 0.25,
+            dispatches: 8,
+            lanes: 3,
+            batched_lanes: 0,
+        };
+        g.record_iteration(&t1);
+        g.record_iteration(&t2);
         g.record_deferral();
         let text = g.prometheus_text();
         assert!(text.contains("specd_sched_pool_live_slots 3"));
@@ -645,6 +778,10 @@ mod tests {
         assert!(text.contains("specd_sched_admission_deferrals_total 1"));
         assert!(text.contains("specd_sched_phase_draft_sync_seconds_total 1"));
         assert!(text.contains("specd_sched_phase_verify_seconds_total 0.5"));
+        assert!(text.contains("specd_sched_dispatches_total 16"));
+        assert!(text.contains("specd_sched_lane_steps_total 7"));
+        assert!(text.contains("specd_sched_batched_lane_steps_total 4"));
+        assert!(text.contains("specd_sched_batch_occupancy 3"), "last step's occupancy");
         // Families must not collide with the ServeMetrics exposition.
         for line in text.lines().filter(|l| !l.starts_with('#')) {
             assert!(line.starts_with("specd_sched_"), "bad family: {line}");

@@ -3,19 +3,35 @@
 //!
 //! ## Execution contract (mirrors python/compile/aot.py)
 //!
-//! Every entry point is `fn(params.., state, tokens[T], pos) -> state'`
-//! where `state = [ kv (kv_len f32) | logits region (32 * V f32) ]` is one
-//! flat f32 vector. Because the output is a single non-tuple array, PJRT
-//! hands back a device buffer that threads directly into the next call:
-//! **the KV cache never crosses the device boundary**. After a call with
-//! block T, the host reads exactly `T * V` floats at offset `kv_len`
-//! (`copy_raw_to_host_sync`) — the logits — and nothing else.
+//! Every single-sequence entry point is `fn(params.., state, tokens[T],
+//! pos) -> state'` where `state = [ kv (kv_len f32) | logits region
+//! (32 * V f32) ]` is one flat f32 vector. Because the output is a single
+//! non-tuple array, PJRT hands back a device buffer that threads directly
+//! into the next call: **the KV cache never crosses the device boundary**.
+//! After a call with block T, the host reads exactly `T * V` floats at
+//! offset `kv_len` (`copy_raw_to_host_sync`) — the logits — and nothing
+//! else.
+//!
+//! ## Batched `[B, T]` entry points (optional)
+//!
+//! Bundles exported with `--batch-sizes` additionally carry
+//! `fn(params.., states[B, state_len], tokens[B, T], pos[B],
+//! active_mask[B]) -> states'` per entry, a batched logits extractor, and
+//! a `pack` entry that writes one state vector over one lane. The
+//! [`StateArena`] holds B sequence states in ONE device buffer; sequences
+//! are packed in on admission ([`Model::pack_lane`]), lanes are recycled
+//! through a free list, and one [`Model::run_lanes`] call advances every
+//! active lane in a single PJRT dispatch (masked lanes pass through
+//! bit-for-bit). Host staging for tokens/pos/mask and the logits readback
+//! scratch live in the arena and are reused across calls, so the batched
+//! hot path performs no per-call heap allocation.
 //!
 //! Weights are uploaded once per model as device buffers and shared by all
-//! sequences; all weight variants of an architecture share the same three
-//! compiled executables (prefill/verify/decode), so swapping draft
-//! checkpoints costs one weight upload, not a recompile.
+//! sequences; all weight variants of an architecture share the same
+//! compiled executables (prefill/verify/decode, plus the batched set), so
+//! swapping draft checkpoints costs one weight upload, not a recompile.
 
+use std::cell::{Cell, RefCell};
 use std::sync::Arc;
 
 use crate::artifacts::{ArchInfo, Manifest};
@@ -38,31 +54,68 @@ pub struct TopkRow {
     pub logits: Vec<f32>,
 }
 
+/// Candidate ordering for the bounded top-k selection: `Less` = better
+/// (higher logit, ties broken by lower id). NaN compares equal-ish, same
+/// as the previous full-sort implementation.
+fn topk_cmp(a: (f32, usize), b: (f32, usize)) -> std::cmp::Ordering {
+    b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
+}
+
+/// Heap entry ordered so the binary max-heap surfaces the WORST kept
+/// candidate at the top (lowest logit; ties by higher id).
+struct TopkEntry(f32, usize);
+
+impl PartialEq for TopkEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for TopkEntry {}
+impl PartialOrd for TopkEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for TopkEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // topk_cmp is a "better = Less" ordering, so under the max-heap
+        // the greatest element — heap.peek() — is the WORST kept.
+        topk_cmp((self.0, self.1), (other.0, other.1))
+    }
+}
+
 /// Top-k capture of one logits row: the k highest-logit (id, logit) pairs,
 /// descending by logit (ties broken by lower id, so the capture is
 /// deterministic). `k` is clamped to the row length; `k = 0` captures
 /// nothing. Logits are RAW (pre-temperature) — the trainer applies its own
 /// softmax, matching the paper's white-box distillation setup.
+///
+/// Bounded selection: a k-sized min-heap scanned once over the row —
+/// O(V log k) time and O(k) scratch. The previous implementation
+/// allocated and partially sorted a full `(0..V)` index vector per
+/// captured position, which made distill capture overhead scale as O(V)
+/// allocations per emitted token.
 pub fn topk_of_row(row: &[f32], k: usize) -> TopkRow {
     let k = k.min(row.len());
     if k == 0 {
         return TopkRow::default();
     }
-    let by_logit_desc = |&a: &usize, &b: &usize| {
-        row[b]
-            .partial_cmp(&row[a])
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.cmp(&b))
-    };
-    let mut idx: Vec<usize> = (0..row.len()).collect();
-    if k < idx.len() {
-        idx.select_nth_unstable_by(k - 1, by_logit_desc);
-        idx.truncate(k);
+    let mut heap = std::collections::BinaryHeap::with_capacity(k);
+    for (i, &x) in row.iter().enumerate() {
+        if heap.len() < k {
+            heap.push(TopkEntry(x, i));
+        } else if let Some(worst) = heap.peek() {
+            if topk_cmp((x, i), (worst.0, worst.1)) == std::cmp::Ordering::Less {
+                heap.pop();
+                heap.push(TopkEntry(x, i));
+            }
+        }
     }
-    idx.sort_unstable_by(by_logit_desc);
+    let mut kept = heap.into_vec();
+    kept.sort_unstable_by(|a, b| topk_cmp((a.0, a.1), (b.0, b.1)));
     TopkRow {
-        ids: idx.iter().map(|&i| i as u32).collect(),
-        logits: idx.iter().map(|&i| row[i]).collect(),
+        ids: kept.iter().map(|e| e.1 as u32).collect(),
+        logits: kept.iter().map(|e| e.0).collect(),
     }
 }
 
@@ -98,7 +151,10 @@ impl Runtime {
         self.client.platform_name()
     }
 
-    /// Compile the three entry points of one architecture.
+    /// Compile the entry points of one architecture: the three
+    /// single-sequence executables, the optional logits extractor, and —
+    /// when the manifest lists `batch_sizes` and the files exist — the
+    /// batched `[B, T]` set for the largest exported batch size.
     pub fn load_arch(self: &Arc<Self>, manifest: &Manifest, arch_name: &str) -> Result<Arc<CompiledArch>> {
         let arch = manifest.arch(arch_name)?.clone();
         let compile = |rel: &str| -> Result<xla::PjRtLoadedExecutable> {
@@ -110,16 +166,38 @@ impl Runtime {
             let comp = xla::XlaComputation::from_proto(&proto);
             Ok(self.client.compile(&comp)?)
         };
+        let exists = |rel: &str| manifest.root.join(&arch.hlo_dir).join(rel).exists();
         let prefill = compile("prefill.hlo.txt")?;
         let verify = compile("verify.hlo.txt")?;
         let decode = compile("decode.hlo.txt")?;
         // Optional logits-extraction entry (older bundles lack it; the
         // runtime then falls back to full-state downloads).
-        let extract = if manifest.root.join(&arch.hlo_dir).join("extract.hlo.txt").exists() {
+        let extract = if exists("extract.hlo.txt") {
             Some(compile("extract.hlo.txt")?)
         } else {
             None
         };
+        // Optional batched entry points. One batch size is compiled — the
+        // largest exported — because masked lanes make any occupancy
+        // N <= B correct with a single executable set.
+        let mut batched = None;
+        if let Some(&b) = arch.batch_sizes.iter().max() {
+            let entries = ["prefill", "verify", "decode", "pack"];
+            if entries.iter().all(|e| exists(&format!("{e}.b{b}.hlo.txt"))) {
+                batched = Some(BatchedExes {
+                    batch: b,
+                    prefill: compile(&format!("prefill.b{b}.hlo.txt"))?,
+                    verify: compile(&format!("verify.b{b}.hlo.txt"))?,
+                    decode: compile(&format!("decode.b{b}.hlo.txt"))?,
+                    pack: compile(&format!("pack.b{b}.hlo.txt"))?,
+                    extract: if exists(&format!("extract.b{b}.hlo.txt")) {
+                        Some(compile(&format!("extract.b{b}.hlo.txt"))?)
+                    } else {
+                        None
+                    },
+                });
+            }
+        }
         Ok(Arc::new(CompiledArch {
             rt: self.clone(),
             arch,
@@ -127,6 +205,7 @@ impl Runtime {
             verify,
             decode,
             extract,
+            batched,
             blocks: [
                 manifest.entry_blocks["prefill"],
                 manifest.entry_blocks["verify"],
@@ -160,18 +239,45 @@ impl Runtime {
                 None,
             )?);
         }
+        let max_block = *arch.blocks.iter().max().expect("entry blocks");
         Ok(Model {
             name: model_name.to_string(),
             arch: arch.clone(),
             weight_bufs,
             params: info.params,
             c_ratio: info.c_ratio,
-            scratch: std::cell::RefCell::new(vec![0f32; arch.arch.state_len]),
+            scratch: RefCell::new(vec![0f32; arch.arch.state_len]),
+            tok_staging: RefCell::new(vec![0i32; max_block]),
+            zero_state: vec![0f32; arch.arch.state_len],
+            dispatches: Cell::new(0),
         })
     }
 }
 
-/// The three compiled executables of one architecture.
+/// The compiled executables of one architecture's batched `[B, T]` entry
+/// points (one batch size; masked lanes make partial occupancy correct).
+pub struct BatchedExes {
+    pub batch: usize,
+    prefill: xla::PjRtLoadedExecutable,
+    verify: xla::PjRtLoadedExecutable,
+    decode: xla::PjRtLoadedExecutable,
+    /// Writes one state vector over one arena lane (admission gather).
+    pack: xla::PjRtLoadedExecutable,
+    /// On-device `[B, logits-region]` slicer for the batched readback.
+    extract: Option<xla::PjRtLoadedExecutable>,
+}
+
+impl BatchedExes {
+    fn exe(&self, entry: Entry) -> &xla::PjRtLoadedExecutable {
+        match entry {
+            Entry::Prefill => &self.prefill,
+            Entry::Verify => &self.verify,
+            Entry::Decode => &self.decode,
+        }
+    }
+}
+
+/// The compiled executables of one architecture.
 pub struct CompiledArch {
     rt: Arc<Runtime>,
     pub arch: ArchInfo,
@@ -181,6 +287,8 @@ pub struct CompiledArch {
     /// On-device logits slicer: avoids downloading the full state vector
     /// per step (§Perf iteration 2).
     extract: Option<xla::PjRtLoadedExecutable>,
+    /// Batched `[B, T]` entry points, when the bundle exports them.
+    batched: Option<BatchedExes>,
     /// block sizes in Entry order [prefill, verify, decode].
     blocks: [usize; 3],
 }
@@ -216,12 +324,194 @@ pub struct Model {
     /// copies it here once; the logits slice is then carved out without a
     /// per-call allocation. RefCell is safe: PJRT handles are !Send and the
     /// scheduler is single-threaded by design (see coordinator docs).
-    scratch: std::cell::RefCell<Vec<f32>>,
+    scratch: RefCell<Vec<f32>>,
+    /// Reusable i32 staging for token uploads (sized to the largest entry
+    /// block) — the single-lane hot path allocates nothing per call.
+    tok_staging: RefCell<Vec<i32>>,
+    /// Cached zero template for fresh sequence states: one allocation per
+    /// model instead of one `vec![0; state_len]` per admission.
+    zero_state: Vec<f32>,
+    /// PJRT executable launches issued through this model (single-lane,
+    /// batched, extract and pack alike) — the scheduler's dispatch-count
+    /// metric reads deltas of this.
+    dispatches: Cell<u64>,
 }
 
-/// Device-resident per-sequence state (KV cache + logits region).
-pub struct SeqState {
-    buf: xla::PjRtBuffer,
+/// Device-resident per-sequence state: either a privately owned buffer
+/// (single-lane dispatch) or a lane of a shared [`StateArena`] (batched
+/// dispatch). The two never mix within one sequence — a session is
+/// adopted into an arena at admission or stays owned for its lifetime.
+pub enum SeqState {
+    Owned(xla::PjRtBuffer),
+    Lane(usize),
+}
+
+impl SeqState {
+    /// The arena lane index, when this state lives in an arena.
+    pub fn lane(&self) -> Option<usize> {
+        match self {
+            SeqState::Lane(l) => Some(*l),
+            SeqState::Owned(_) => None,
+        }
+    }
+}
+
+/// One lane's slice of a batched dispatch: which arena lane, which tokens,
+/// at which absolute position. Tokens are padded to the entry block on
+/// staging; the padded rows write stale KV the position-masked attention
+/// never exposes (same contract as the single-lane path).
+pub struct LaneCall<'t> {
+    pub lane: usize,
+    pub tokens: &'t [u32],
+    pub pos: usize,
+}
+
+/// Pure lane bookkeeping of a [`StateArena`]: free-list allocation with
+/// recycling and double-free detection. Split from the device side so the
+/// allocator invariants are unit-testable without PJRT.
+#[derive(Debug)]
+pub struct LaneLedger {
+    in_use: Vec<bool>,
+    /// LIFO free list — recycled lanes are reused first.
+    free: Vec<usize>,
+}
+
+impl LaneLedger {
+    pub fn new(batch: usize) -> LaneLedger {
+        LaneLedger { in_use: vec![false; batch], free: (0..batch).rev().collect() }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.in_use.len()
+    }
+
+    pub fn live(&self) -> usize {
+        self.in_use.len() - self.free.len()
+    }
+
+    pub fn available(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn is_live(&self, lane: usize) -> bool {
+        self.in_use.get(lane).copied().unwrap_or(false)
+    }
+
+    /// Claim a free lane; `None` when the arena is full.
+    pub fn alloc(&mut self) -> Option<usize> {
+        let lane = self.free.pop()?;
+        self.in_use[lane] = true;
+        Some(lane)
+    }
+
+    /// Release a lane back to the free list.
+    pub fn free(&mut self, lane: usize) -> Result<()> {
+        if !self.is_live(lane) {
+            return Err(Error::KvCache(format!(
+                "arena lane {lane} freed while not live (batch {})",
+                self.batch()
+            )));
+        }
+        self.in_use[lane] = false;
+        self.free.push(lane);
+        Ok(())
+    }
+}
+
+/// Reusable host staging for one batched dispatch: token/pos/mask upload
+/// vectors, refilled in place per call. Split from [`StateArena`] so the
+/// staging layout and call validation are unit-testable without PJRT.
+#[derive(Debug)]
+struct BatchStaging {
+    tok: Vec<i32>,
+    pos: Vec<i32>,
+    mask: Vec<i32>,
+}
+
+impl BatchStaging {
+    fn new(batch: usize, max_block: usize) -> BatchStaging {
+        BatchStaging {
+            tok: vec![0i32; batch * max_block],
+            pos: vec![0i32; batch],
+            mask: vec![0i32; batch],
+        }
+    }
+
+    /// Fill the staging vectors for one dispatch and validate the calls.
+    /// Layout: tokens row-major `[B, block]` (pad 0), pos/mask dense `[B]`
+    /// with mask = 1 on called lanes. Rejects out-of-range lanes, dead
+    /// lanes, duplicate lanes, empty and oversized token slices, and
+    /// sequence overflow past `max_seq`.
+    fn stage(
+        &mut self,
+        calls: &[LaneCall<'_>],
+        block: usize,
+        max_seq: usize,
+        ledger: &LaneLedger,
+    ) -> Result<()> {
+        let batch = ledger.batch();
+        self.tok[..batch * block].fill(0);
+        self.pos[..batch].fill(0);
+        self.mask[..batch].fill(0);
+        for c in calls {
+            if c.lane >= batch {
+                return Err(Error::msg(format!("lane {} out of range (batch {batch})", c.lane)));
+            }
+            if !ledger.is_live(c.lane) {
+                return Err(Error::KvCache(format!("dispatch to dead arena lane {}", c.lane)));
+            }
+            if self.mask[c.lane] != 0 {
+                return Err(Error::msg(format!("duplicate lane {} in one dispatch", c.lane)));
+            }
+            if c.tokens.is_empty() || c.tokens.len() > block {
+                return Err(Error::msg(format!(
+                    "lane {}: got {} tokens for block {block}",
+                    c.lane,
+                    c.tokens.len()
+                )));
+            }
+            if c.pos + c.tokens.len() > max_seq {
+                return Err(Error::KvCache(format!(
+                    "lane {}: sequence overflow: pos {} + {} > max_seq {max_seq}",
+                    c.lane,
+                    c.pos,
+                    c.tokens.len()
+                )));
+            }
+            for (i, &t) in c.tokens.iter().enumerate() {
+                self.tok[c.lane * block + i] = t as i32;
+            }
+            self.pos[c.lane] = c.pos as i32;
+            self.mask[c.lane] = 1;
+        }
+        Ok(())
+    }
+}
+
+/// Device arena of B sequence states in one `[B, state_len]` buffer, plus
+/// the reusable host staging the batched hot path needs (token/pos/mask
+/// uploads, logits readback scratch). Created per model via
+/// [`Model::new_arena`]; every [`Model::run_lanes`] dispatch replaces the
+/// buffer wholesale (the executables pass masked lanes through).
+pub struct StateArena {
+    states: xla::PjRtBuffer,
+    pub ledger: LaneLedger,
+    staging: BatchStaging,
+    /// Readback destination for all B lanes' logits regions.
+    scratch: Vec<f32>,
+    /// Per-lane f32 stride of the last readback into `scratch`.
+    stride: usize,
+    /// Logits offset within one lane's readback region.
+    logits_off: usize,
+}
+
+impl StateArena {
+    /// Logits rows of one lane after the last [`Model::run_lanes`] call:
+    /// `n_tokens * vocab` floats starting at that lane's row 0.
+    pub fn lane_logits(&self, lane: usize, n_tokens: usize, vocab: usize) -> &[f32] {
+        let base = lane * self.stride + self.logits_off;
+        &self.scratch[base..base + n_tokens * vocab]
+    }
 }
 
 impl Model {
@@ -233,18 +523,158 @@ impl Model {
         self.arch.arch.max_seq
     }
 
-    /// Fresh zeroed sequence state on device.
+    /// PJRT executable launches issued through this model so far.
+    pub fn dispatch_count(&self) -> u64 {
+        self.dispatches.get()
+    }
+
+    fn count_dispatch(&self) {
+        self.dispatches.set(self.dispatches.get() + 1);
+    }
+
+    /// Batch size of this arch's batched entry points (`None` on bundles
+    /// without them — the caller serves per-lane).
+    pub fn batch_size(&self) -> Option<usize> {
+        self.arch.batched.as_ref().map(|b| b.batch)
+    }
+
+    /// Fresh zeroed sequence state on device (from the cached zero
+    /// template — no per-admission host allocation).
     pub fn new_state(&self) -> Result<SeqState> {
-        let zeros = vec![0f32; self.arch.arch.state_len];
         let buf = self.arch.rt.client.buffer_from_host_buffer::<f32>(
-            &zeros,
+            &self.zero_state,
             &[self.arch.arch.state_len],
             None,
         )?;
-        Ok(SeqState { buf })
+        Ok(SeqState::Owned(buf))
     }
 
-    /// Run one entry point.
+    /// Fresh state arena for this model's batched entry points.
+    pub fn new_arena(&self) -> Result<StateArena> {
+        let bx = self
+            .arch
+            .batched
+            .as_ref()
+            .ok_or_else(|| Error::msg("no batched entry points in this bundle"))?;
+        let sl = self.arch.arch.state_len;
+        let zeros = vec![0f32; bx.batch * sl];
+        let states =
+            self.arch.rt.client.buffer_from_host_buffer::<f32>(&zeros, &[bx.batch, sl], None)?;
+        let max_block = *self.arch.blocks.iter().max().expect("entry blocks");
+        Ok(StateArena {
+            states,
+            ledger: LaneLedger::new(bx.batch),
+            staging: BatchStaging::new(bx.batch, max_block),
+            scratch: vec![0f32; bx.batch * sl],
+            stride: sl,
+            logits_off: self.arch.arch.kv_len,
+        })
+    }
+
+    /// Pack one owned sequence state over arena lane `lane` (admission
+    /// gather; one dispatch). The whole lane row is overwritten, so
+    /// recycled lanes carry no stale residue.
+    pub fn pack_lane(
+        &self,
+        arena: &mut StateArena,
+        lane: usize,
+        state: SeqState,
+    ) -> Result<SeqState> {
+        let bx = self
+            .arch
+            .batched
+            .as_ref()
+            .ok_or_else(|| Error::msg("no batched entry points in this bundle"))?;
+        let SeqState::Owned(buf) = state else {
+            return Err(Error::msg("pack_lane needs an owned state"));
+        };
+        if !arena.ledger.is_live(lane) {
+            return Err(Error::KvCache(format!("pack into dead arena lane {lane}")));
+        }
+        let client = &self.arch.rt.client;
+        let lane_buf = client.buffer_from_host_buffer::<i32>(&[lane as i32], &[], None)?;
+        let mut out = bx.pack.execute_b(&[&arena.states, &buf, &lane_buf])?;
+        self.count_dispatch();
+        let new_states = out
+            .get_mut(0)
+            .and_then(|r| (!r.is_empty()).then(|| r.remove(0)))
+            .ok_or_else(|| Error::msg("pack returned no output"))?;
+        arena.states = new_states;
+        Ok(SeqState::Lane(lane))
+    }
+
+    /// Run one batched entry point over the given lanes in ONE dispatch
+    /// (plus one batched-extract dispatch for the readback, when
+    /// profitable). Uncalled lanes are masked and pass through untouched.
+    /// Afterwards each called lane's logits rows are readable via
+    /// [`StateArena::lane_logits`] until the next dispatch.
+    pub fn run_lanes(
+        &self,
+        entry: Entry,
+        arena: &mut StateArena,
+        calls: &[LaneCall<'_>],
+    ) -> Result<()> {
+        if calls.is_empty() {
+            return Ok(());
+        }
+        let bx = self
+            .arch
+            .batched
+            .as_ref()
+            .ok_or_else(|| Error::msg("no batched entry points in this bundle"))?;
+        let block = self.arch.block(entry);
+        let (b, sl, kvn) = (bx.batch, self.arch.arch.state_len, self.arch.arch.kv_len);
+        arena.staging.stage(calls, block, self.arch.arch.max_seq, &arena.ledger)?;
+        let client = &self.arch.rt.client;
+        let tok_buf = client.buffer_from_host_buffer::<i32>(
+            &arena.staging.tok[..b * block],
+            &[b, block],
+            None,
+        )?;
+        let pos_buf = client.buffer_from_host_buffer::<i32>(&arena.staging.pos, &[b], None)?;
+        let mask_buf = client.buffer_from_host_buffer::<i32>(&arena.staging.mask, &[b], None)?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.weight_bufs.len() + 4);
+        args.extend(self.weight_bufs.iter());
+        args.push(&arena.states);
+        args.push(&tok_buf);
+        args.push(&pos_buf);
+        args.push(&mask_buf);
+
+        let mut out = bx.exe(entry).execute_b(&args)?;
+        self.count_dispatch();
+        let new_states = out
+            .get_mut(0)
+            .and_then(|r| (!r.is_empty()).then(|| r.remove(0)))
+            .ok_or_else(|| Error::msg("batched executable returned no output"))?;
+
+        // Readback: one download covers every called lane. Same extract
+        // heuristic as the single-lane path — the extra dispatch only pays
+        // off when the avoided copy is large.
+        let use_extract = sl > EXTRACT_THRESHOLD_ELEMS;
+        if let Some(extract) = bx.extract.as_ref().filter(|_| use_extract) {
+            let mut out = extract.execute_b(&[&new_states])?;
+            self.count_dispatch();
+            let lbuf = out
+                .get_mut(0)
+                .and_then(|r| (!r.is_empty()).then(|| r.remove(0)))
+                .ok_or_else(|| Error::msg("batched extract returned no output"))?;
+            let lit = lbuf.to_literal_sync()?;
+            let stride = sl - kvn;
+            arena.stride = stride;
+            arena.logits_off = 0;
+            lit.copy_raw_to::<f32>(&mut arena.scratch[..b * stride])?;
+        } else {
+            let lit = new_states.to_literal_sync()?;
+            arena.stride = sl;
+            arena.logits_off = kvn;
+            lit.copy_raw_to::<f32>(&mut arena.scratch[..b * sl])?;
+        }
+        arena.states = new_states;
+        Ok(())
+    }
+
+    /// Run one single-sequence entry point.
     ///
     /// `tokens.len()` must be <= block; short inputs are PAD-padded (the
     /// padded rows write stale KV beyond `pos + tokens.len()`, which the
@@ -258,8 +688,30 @@ impl Model {
         tokens: &[u32],
         pos: usize,
     ) -> Result<(SeqState, Vec<f32>)> {
+        let mut logits = Vec::new();
+        let state = self.run_into(entry, state, tokens, pos, &mut logits)?;
+        Ok((state, logits))
+    }
+
+    /// [`Model::run`] writing the logits into a caller-owned buffer (the
+    /// engine reuses one buffer per session, so the steady-state decode
+    /// path performs no host allocation).
+    pub fn run_into(
+        &self,
+        entry: Entry,
+        state: SeqState,
+        tokens: &[u32],
+        pos: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<SeqState> {
         let block = self.arch.block(entry);
         let v = self.arch.arch.vocab_size;
+        let SeqState::Owned(state_buf) = state else {
+            return Err(Error::msg(format!(
+                "{}: arena-lane state in a single-lane call (use run_lanes)",
+                entry.name()
+            )));
+        };
         if tokens.is_empty() || tokens.len() > block {
             return Err(Error::msg(format!(
                 "{}: got {} tokens for block {}",
@@ -275,22 +727,26 @@ impl Model {
                 self.arch.arch.max_seq
             )));
         }
-        let mut tok_i32 = vec![0i32; block];
-        for (i, &t) in tokens.iter().enumerate() {
-            tok_i32[i] = t as i32;
-        }
         let client = &self.arch.rt.client;
-        let tok_buf = client.buffer_from_host_buffer::<i32>(&tok_i32, &[block], None)?;
+        let tok_buf = {
+            let mut staging = self.tok_staging.borrow_mut();
+            staging[..block].fill(0);
+            for (i, &t) in tokens.iter().enumerate() {
+                staging[i] = t as i32;
+            }
+            client.buffer_from_host_buffer::<i32>(&staging[..block], &[block], None)?
+        };
         let pos_buf = client.buffer_from_host_buffer::<i32>(&[pos as i32], &[], None)?;
 
         let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.weight_bufs.len() + 3);
         args.extend(self.weight_bufs.iter());
-        args.push(&state.buf);
+        args.push(&state_buf);
         args.push(&tok_buf);
         args.push(&pos_buf);
 
-        let mut out = self.arch.exe(entry).execute_b(&args)?;
-        let buf = out
+        let mut exec_out = self.arch.exe(entry).execute_b(&args)?;
+        self.count_dispatch();
+        let buf = exec_out
             .get_mut(0)
             .and_then(|r| (!r.is_empty()).then(|| r.remove(0)))
             .ok_or_else(|| Error::msg("executable returned no output"))?;
@@ -304,9 +760,11 @@ impl Model {
         // for the draft arch (state ~147KB) the fallback full-state download
         // is faster than a second executable launch (§Perf iteration 3).
         let use_extract = self.arch.arch.state_len > EXTRACT_THRESHOLD_ELEMS;
-        let logits = if let Some(extract) = self.arch.extract.as_ref().filter(|_| use_extract) {
-            let mut out = extract.execute_b(&[&buf])?;
-            let lbuf = out
+        out.clear();
+        if let Some(extract) = self.arch.extract.as_ref().filter(|_| use_extract) {
+            let mut eo = extract.execute_b(&[&buf])?;
+            self.count_dispatch();
+            let lbuf = eo
                 .get_mut(0)
                 .and_then(|r| (!r.is_empty()).then(|| r.remove(0)))
                 .ok_or_else(|| Error::msg("extract returned no output"))?;
@@ -314,32 +772,38 @@ impl Model {
             let mut scratch = self.scratch.borrow_mut();
             let region = &mut scratch[..self.arch.arch.state_len - self.arch.arch.kv_len];
             lit.copy_raw_to::<f32>(region)?;
-            region[..tokens.len() * v].to_vec()
+            out.extend_from_slice(&region[..tokens.len() * v]);
         } else {
             let lit = buf.to_literal_sync()?;
             let mut scratch = self.scratch.borrow_mut();
             lit.copy_raw_to::<f32>(&mut scratch)?;
             let kvn = self.arch.arch.kv_len;
-            scratch[kvn..kvn + tokens.len() * v].to_vec()
-        };
-        Ok((SeqState { buf }, logits))
+            out.extend_from_slice(&scratch[kvn..kvn + tokens.len() * v]);
+        }
+        Ok(SeqState::Owned(buf))
     }
 
     /// Prefill an arbitrary-length prompt by chunking through the prefill
-    /// entry. Returns (state, last-token logits row, prompt length).
+    /// entry. Returns (state, last-token logits row). Only the FINAL
+    /// chunk's last row is materialized — earlier chunks reuse one
+    /// staging buffer and copy nothing extra.
     pub fn prefill_prompt(&self, prompt: &[u32]) -> Result<(SeqState, Vec<f32>)> {
+        if prompt.is_empty() {
+            return Err(Error::msg("prefill of an empty prompt"));
+        }
         let block = self.arch.block(Entry::Prefill);
         let v = self.arch.arch.vocab_size;
         let mut state = self.new_state()?;
-        let mut last = Vec::new();
+        let mut chunk_logits = Vec::new();
         let mut pos = 0usize;
+        let mut last_len = 0usize;
         for chunk in prompt.chunks(block) {
-            let (s2, logits) = self.run(Entry::Prefill, state, chunk, pos)?;
-            state = s2;
+            state = self.run_into(Entry::Prefill, state, chunk, pos, &mut chunk_logits)?;
             pos += chunk.len();
-            let off = (chunk.len() - 1) * v;
-            last = logits[off..off + v].to_vec();
+            last_len = chunk.len();
         }
+        let off = (last_len - 1) * v;
+        let last = chunk_logits[off..off + v].to_vec();
         Ok((state, last))
     }
 }
@@ -347,6 +811,7 @@ impl Model {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prop::{self, Check};
 
     #[test]
     fn entry_names() {
@@ -378,6 +843,160 @@ mod tests {
         let t = topk_of_row(&row, 2);
         assert_eq!(t.ids, vec![0, 1], "deterministic tie-break");
     }
+
+    /// The previous implementation (full index vector + partial sort),
+    /// kept as the property-test oracle for the bounded-heap rewrite.
+    fn topk_of_row_reference(row: &[f32], k: usize) -> TopkRow {
+        let k = k.min(row.len());
+        if k == 0 {
+            return TopkRow::default();
+        }
+        let by_logit_desc = |&a: &usize, &b: &usize| {
+            row[b]
+                .partial_cmp(&row[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        };
+        let mut idx: Vec<usize> = (0..row.len()).collect();
+        if k < idx.len() {
+            idx.select_nth_unstable_by(k - 1, by_logit_desc);
+            idx.truncate(k);
+        }
+        idx.sort_unstable_by(by_logit_desc);
+        TopkRow {
+            ids: idx.iter().map(|&i| i as u32).collect(),
+            logits: idx.iter().map(|&i| row[i]).collect(),
+        }
+    }
+
+    /// Property: the bounded-heap top-k equals the old full-sort top-k on
+    /// arbitrary rows (duplicates included — the tie-break must agree).
+    #[test]
+    fn topk_matches_reference_implementation() {
+        let rows = prop::vec_of(prop::f32_in(-4.0, 4.0), 1, 80)
+            // Quantize so duplicate logits (tie-breaks) actually occur.
+            .map(|xs| xs.into_iter().map(|x| (x * 4.0).round() / 4.0).collect::<Vec<f32>>());
+        prop::check("topk-heap-vs-reference", &rows, 300, 0x70CC, |row| {
+            for k in [0, 1, 2, 3, 8, row.len(), row.len() + 5] {
+                let got = topk_of_row(row, k);
+                let want = topk_of_row_reference(row, k);
+                if got != want {
+                    return Check::Fail(format!(
+                        "k={k}: heap {:?}/{:?} vs reference {:?}/{:?}",
+                        got.ids, got.logits, want.ids, want.logits
+                    ));
+                }
+            }
+            Check::Pass
+        });
+    }
+
+    #[test]
+    fn topk_handles_infinities() {
+        let row = [f32::NEG_INFINITY, 1.0, f32::INFINITY, 1.0];
+        let t = topk_of_row(&row, 3);
+        assert_eq!(t.ids, vec![2, 1, 3]);
+    }
+
+    #[test]
+    fn lane_ledger_alloc_free_recycle() {
+        let mut l = LaneLedger::new(2);
+        assert_eq!(l.batch(), 2);
+        assert_eq!(l.available(), 2);
+        let a = l.alloc().unwrap();
+        let b = l.alloc().unwrap();
+        assert_ne!(a, b);
+        assert!(l.alloc().is_none(), "arena capacity enforced");
+        assert_eq!(l.live(), 2);
+        l.free(a).unwrap();
+        assert!(l.free(a).is_err(), "double free detected");
+        let c = l.alloc().unwrap();
+        assert_eq!(c, a, "freed lane is recycled");
+        assert!(l.free(99).is_err(), "out-of-range free rejected");
+        assert!(l.is_live(b) && l.is_live(c));
+    }
+
+    #[test]
+    fn lane_ledger_zero_capacity() {
+        let mut l = LaneLedger::new(0);
+        assert_eq!(l.batch(), 0);
+        assert!(l.alloc().is_none());
+    }
+
+    #[test]
+    fn stage_layout_and_mask() {
+        let mut ledger = LaneLedger::new(4);
+        let l0 = ledger.alloc().unwrap();
+        let _l1 = ledger.alloc().unwrap();
+        let l2 = ledger.alloc().unwrap();
+        let mut st = BatchStaging::new(4, 3);
+        let calls = [
+            LaneCall { lane: l0, tokens: &[7, 8], pos: 5 },
+            LaneCall { lane: l2, tokens: &[9], pos: 0 },
+        ];
+        st.stage(&calls, 3, 64, &ledger).unwrap();
+        assert_eq!(st.tok, vec![7, 8, 0, 0, 0, 0, 9, 0, 0, 0, 0, 0], "row-major, zero-padded");
+        assert_eq!(st.pos, vec![5, 0, 0, 0]);
+        assert_eq!(st.mask, vec![1, 0, 1, 0], "only called lanes active");
+        // Restaging reuses the vectors and clears the previous content.
+        let calls = [LaneCall { lane: l2, tokens: &[1], pos: 2 }];
+        st.stage(&calls, 3, 64, &ledger).unwrap();
+        assert_eq!(st.mask, vec![0, 0, 1, 0]);
+        assert_eq!(st.tok[..3], [0, 0, 0], "previous lane's tokens cleared");
+    }
+
+    #[test]
+    fn stage_empty_batch_is_all_masked() {
+        let ledger = LaneLedger::new(2);
+        let mut st = BatchStaging::new(2, 2);
+        st.tok.fill(9);
+        st.mask.fill(9);
+        st.stage(&[], 2, 16, &ledger).unwrap();
+        assert_eq!(st.mask, vec![0, 0]);
+        assert_eq!(st.tok, vec![0; 4]);
+    }
+
+    #[test]
+    fn stage_single_lane() {
+        let mut ledger = LaneLedger::new(1);
+        let l = ledger.alloc().unwrap();
+        let mut st = BatchStaging::new(1, 2);
+        let calls = [LaneCall { lane: l, tokens: &[3, 4], pos: 1 }];
+        st.stage(&calls, 2, 16, &ledger).unwrap();
+        assert_eq!((st.tok, st.pos, st.mask), (vec![3, 4], vec![1], vec![1]));
+    }
+
+    #[test]
+    fn stage_rejects_bad_calls() {
+        let mut ledger = LaneLedger::new(2);
+        let l = ledger.alloc().unwrap();
+        let dead = 1; // never allocated
+        let mut st = BatchStaging::new(2, 2);
+        let cases: Vec<Vec<LaneCall<'_>>> = vec![
+            vec![LaneCall { lane: 5, tokens: &[1], pos: 0 }],   // out of range
+            vec![LaneCall { lane: dead, tokens: &[1], pos: 0 }], // dead lane
+            vec![LaneCall { lane: l, tokens: &[], pos: 0 }],     // empty tokens
+            vec![LaneCall { lane: l, tokens: &[1, 2, 3], pos: 0 }], // over block
+            vec![LaneCall { lane: l, tokens: &[1, 2], pos: 15 }],   // overflow
+            vec![
+                LaneCall { lane: l, tokens: &[1], pos: 0 },
+                LaneCall { lane: l, tokens: &[2], pos: 0 },
+            ], // duplicate lane
+        ];
+        for calls in &cases {
+            assert!(
+                st.stage(calls, 2, 16, &ledger).is_err(),
+                "should reject {:?}",
+                calls.iter().map(|c| (c.lane, c.tokens.len(), c.pos)).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn seq_state_lane_accessor() {
+        assert_eq!(SeqState::Lane(3).lane(), Some(3));
+    }
     // Integration tests that exercise real PJRT execution live in
-    // rust/tests/runtime_integration.rs (they need `make artifacts`).
+    // rust/tests/runtime_integration.rs and rust/tests/batched_integration.rs
+    // (they need `make artifacts`).
 }

@@ -26,15 +26,29 @@
 //! loop. Near the context cap the per-block draft length shrinks
 //! ([`shrunken_gamma`]) instead of finishing the sequence blocks early.
 //!
+//! ## Fused batched dispatch
+//!
+//! When the bundle exports batched `[B, T]` entry points, a
+//! [`BatchedCtx`] (one [`StateArena`] per model) turns each lockstep
+//! phase into a SINGLE PJRT dispatch over every adopted lane:
+//! [`SpecDecoder::begin_block_batch`], [`SpecDecoder::propose_round_batch`]
+//! and [`SpecDecoder::commit_block_batch`]. Sessions are adopted into the
+//! arenas at admission ([`SpecDecoder::adopt`] packs their prefilled state
+//! over a recycled lane) and release their lanes on every exit path
+//! ([`SpecDecoder::release`]). Each lane's RNG is consumed in exactly the
+//! single-sequence order (γ proposal samples, then the verification
+//! draws), so fused output token-matches the direct engine.
+//!
 //! The engine is single-sequence; the [`crate::coordinator`] interleaves
 //! many sessions over it (iteration-level scheduling).
 
+use crate::batch::Lane;
 use crate::config::SamplingConfig;
 use crate::error::{Error, Result};
 use crate::kvcache::SeqCache;
 use crate::metrics::SpecStats;
 use crate::rng::Pcg64;
-use crate::runtime::{topk_of_row, Entry, Model, SeqState, TopkRow};
+use crate::runtime::{topk_of_row, Entry, LaneCall, Model, SeqState, StateArena, TopkRow};
 use crate::sampling::{logits_to_probs, sample_token, verify_block};
 use crate::tokenizer::EOS;
 
@@ -131,6 +145,10 @@ pub struct SpecSession {
     /// Last draft logits row — consulted when the draft has no pending
     /// tokens (right after prefill, before the first speculation block).
     d_last_logits: Vec<f32>,
+    /// Reusable readback buffers for this session's draft/target calls —
+    /// the steady-state decode path allocates no fresh logits vectors.
+    d_logits_buf: Vec<f32>,
+    t_logits_buf: Vec<f32>,
     pub stats: SpecStats,
     pub finished: bool,
     /// Target top-k capture sink; `None` (the serving default) costs nothing.
@@ -149,6 +167,37 @@ impl SpecSession {
         if topk > 0 {
             self.capture = Some(LogitCapture { topk, ..LogitCapture::default() });
         }
+    }
+
+    /// Whether this session's device state lives in a shared
+    /// [`StateArena`] (fused batched dispatch) rather than in privately
+    /// owned buffers.
+    pub fn lane_mode(&self) -> bool {
+        matches!(self.d_cache.state, Some(SeqState::Lane(_)))
+    }
+
+    fn d_lane(&self) -> Option<usize> {
+        self.d_cache.state.as_ref().and_then(|s| s.lane())
+    }
+
+    fn t_lane(&self) -> Option<usize> {
+        self.t_cache.state.as_ref().and_then(|s| s.lane())
+    }
+}
+
+/// Shared fused-dispatch context: one device [`StateArena`] per model.
+/// Created once per scheduler via [`SpecDecoder::batched_ctx`] when the
+/// loaded bundle exports batched entry points; `None` otherwise and every
+/// phase falls back to per-lane dispatch.
+pub struct BatchedCtx {
+    pub draft: StateArena,
+    pub target: StateArena,
+}
+
+impl BatchedCtx {
+    /// Free adopted-lane capacity (the min across the two arenas).
+    pub fn available(&self) -> usize {
+        self.draft.ledger.available().min(self.target.ledger.available())
     }
 }
 
@@ -191,10 +240,74 @@ impl<'a> SpecDecoder<'a> {
             t_cache,
             t_last_logits: t_logits,
             d_last_logits: d_logits,
+            d_logits_buf: Vec::new(),
+            t_logits_buf: Vec::new(),
             stats,
             finished: false,
             capture: None,
         })
+    }
+
+    /// Total PJRT executable launches issued through this decoder's two
+    /// models so far (the scheduler's dispatch-count metric reads deltas).
+    pub fn dispatch_count(&self) -> u64 {
+        self.draft.dispatch_count() + self.target.dispatch_count()
+    }
+
+    /// Build the fused-dispatch context when both models' bundles export
+    /// batched entry points; `None` (per-lane fallback) otherwise.
+    pub fn batched_ctx(&self) -> Result<Option<BatchedCtx>> {
+        if self.draft.batch_size().is_none() || self.target.batch_size().is_none() {
+            return Ok(None);
+        }
+        Ok(Some(BatchedCtx { draft: self.draft.new_arena()?, target: self.target.new_arena()? }))
+    }
+
+    /// Adopt an owned session into the fused arenas: pack its prefilled
+    /// draft/target states over one recycled lane each (two dispatches).
+    /// Returns `false` — the session stays owned and is served per-lane —
+    /// when either arena is full. On `Err` the session is unusable (its
+    /// state may be half-packed) and must be evicted by the caller.
+    pub fn adopt(&self, ctx: &mut BatchedCtx, s: &mut SpecSession) -> Result<bool> {
+        if s.lane_mode() {
+            return Ok(true);
+        }
+        if ctx.available() == 0 {
+            return Ok(false);
+        }
+        let dl = ctx.draft.ledger.alloc().expect("free draft lane checked");
+        let tl = ctx.target.ledger.alloc().expect("free target lane checked");
+        let packed = (|| -> Result<()> {
+            let st = s.d_cache.take_state()?;
+            let st = self.draft.pack_lane(&mut ctx.draft, dl, st)?;
+            s.d_cache.put_state(st);
+            let st = s.t_cache.take_state()?;
+            let st = self.target.pack_lane(&mut ctx.target, tl, st)?;
+            s.t_cache.put_state(st);
+            Ok(())
+        })();
+        if let Err(e) = packed {
+            let _ = ctx.draft.ledger.free(dl);
+            let _ = ctx.target.ledger.free(tl);
+            return Err(e);
+        }
+        Ok(true)
+    }
+
+    /// Release any arena lanes a session holds back to the free lists
+    /// (called on every scheduler exit path — finish, eviction, failure).
+    /// A no-op on owned sessions; tolerant of half-adopted sessions.
+    pub fn release(&self, ctx: &mut BatchedCtx, s: &mut SpecSession) {
+        if matches!(s.d_cache.state, Some(SeqState::Lane(_))) {
+            if let Some(st) = s.d_cache.state.take() {
+                let _ = ctx.draft.ledger.free(st.lane().expect("matched lane"));
+            }
+        }
+        if matches!(s.t_cache.state, Some(SeqState::Lane(_))) {
+            if let Some(st) = s.t_cache.state.take() {
+                let _ = ctx.target.ledger.free(st.lane().expect("matched lane"));
+            }
+        }
     }
 
     /// Feed the draft everything it hasn't processed and return its last
@@ -211,13 +324,16 @@ impl<'a> SpecDecoder<'a> {
         debug_assert!(pending.len() <= vb, "draft pending {} > verify block {vb}", pending.len());
         let entry = if pending.len() == 1 { Entry::Decode } else { Entry::Verify };
         let state = s.d_cache.take_state()?;
-        let (state, logits) = self.draft.run(entry, state, pending, d_len)?;
+        let mut buf = std::mem::take(&mut s.d_logits_buf);
+        let state = self.draft.run_into(entry, state, pending, d_len, &mut buf)?;
         s.d_cache.put_state(state);
         s.d_cache.advance(pending.len())?;
         s.stats.draft_calls += 1;
         let v = self.draft.vocab_size();
         let off = (pending.len() - 1) * v;
-        s.d_last_logits = logits[off..off + v].to_vec();
+        s.d_last_logits.clear();
+        s.d_last_logits.extend_from_slice(&buf[off..off + v]);
+        s.d_logits_buf = buf;
         Ok(s.d_last_logits.clone())
     }
 
@@ -275,12 +391,16 @@ impl<'a> SpecDecoder<'a> {
         b.drafted.push(t);
         b.draft_probs.push(p);
         if b.drafted.len() < b.gamma {
+            let pos = s.d_cache.len();
             let state = s.d_cache.take_state()?;
-            let (state, logits) = self.draft.run(Entry::Decode, state, &[t], s.d_cache.len())?;
+            let mut buf = std::mem::take(&mut s.d_logits_buf);
+            let state = self.draft.run_into(Entry::Decode, state, &[t], pos, &mut buf)?;
             s.d_cache.put_state(state);
             s.d_cache.advance(1)?;
             s.stats.draft_calls += 1;
-            b.basis = logits[..v].to_vec();
+            b.basis.clear();
+            b.basis.extend_from_slice(&buf[..v]);
+            s.d_logits_buf = buf;
         }
         Ok(())
     }
@@ -295,28 +415,56 @@ impl<'a> SpecDecoder<'a> {
         cfg: &SamplingConfig,
         rng: &mut Pcg64,
     ) -> Result<Vec<u32>> {
-        let BlockState { gamma, drafted, draft_probs, .. } = b;
-        debug_assert_eq!(drafted.len(), gamma, "commit before all proposal rounds");
+        debug_assert_eq!(b.drafted.len(), b.gamma, "commit before all proposal rounds");
         let l = s.seq.len();
-        let v = self.target.vocab_size();
-        s.stats.drafted += gamma;
 
         // 3. — one target verify over [pending ++ drafted].
         let t_len = s.t_cache.len();
-        let pending_t: Vec<u32> = s.seq[t_len..l].to_vec();
-        let mut fed = pending_t.clone();
-        fed.extend_from_slice(&drafted);
+        let np = l - t_len;
+        let mut fed: Vec<u32> = s.seq[t_len..l].to_vec();
+        fed.extend_from_slice(&b.drafted);
         debug_assert!(fed.len() <= self.target.arch.block(Entry::Verify));
         let state = s.t_cache.take_state()?;
-        let (state, t_logits) = self.target.run(Entry::Verify, state, &fed, t_len)?;
+        let mut rows = std::mem::take(&mut s.t_logits_buf);
+        let state = match self.target.run_into(Entry::Verify, state, &fed, t_len, &mut rows) {
+            Ok(st) => st,
+            Err(e) => {
+                s.t_logits_buf = rows;
+                return Err(e);
+            }
+        };
         s.t_cache.put_state(state);
-        s.t_cache.advance(fed.len())?;
+        if let Err(e) = s.t_cache.advance(fed.len()) {
+            s.t_logits_buf = rows;
+            return Err(e);
+        }
+        let out = self.finish_block(s, b, np, &rows, cfg, rng);
+        s.t_logits_buf = rows;
+        out
+    }
+
+    /// Phase 4 — rejection sampling, cache rollback, EOS handling and
+    /// capture, given the verify call's raw logits rows (`fed.len() * V`
+    /// floats). Shared by the per-lane and fused-batched commit paths; the
+    /// caller has already advanced the target cache past the fed tokens.
+    fn finish_block(
+        &self,
+        s: &mut SpecSession,
+        b: BlockState,
+        np: usize,
+        t_rows: &[f32],
+        cfg: &SamplingConfig,
+        rng: &mut Pcg64,
+    ) -> Result<Vec<u32>> {
+        let BlockState { gamma, drafted, draft_probs, .. } = b;
+        let l = s.seq.len();
+        let v = self.target.vocab_size();
+        s.stats.drafted += gamma;
         s.stats.target_calls += 1;
         s.stats.blocks += 1;
 
         // Assemble q_0..q_gamma.
-        let np = pending_t.len();
-        let row = |i: usize| -> &[f32] { &t_logits[i * v..(i + 1) * v] };
+        let row = |i: usize| -> &[f32] { &t_rows[i * v..(i + 1) * v] };
         let mut target_probs: Vec<Vec<f32>> = Vec::with_capacity(gamma + 1);
         for j in 0..=gamma {
             let probs = if j == 0 && np == 0 {
@@ -327,7 +475,7 @@ impl<'a> SpecDecoder<'a> {
             target_probs.push(probs);
         }
 
-        // 4. — rejection sampling + rollback.
+        // Rejection sampling + rollback.
         let out = verify_block(&draft_probs, &target_probs, &drafted, rng);
         let k = out.accepted;
         s.stats.accepted += k;
@@ -367,6 +515,224 @@ impl<'a> SpecDecoder<'a> {
         }
         s.seq.extend_from_slice(&emitted);
         Ok(emitted)
+    }
+
+    /// Phase 1 (fused) — draft-sync sweep over every adopted lane in at
+    /// most two dispatches (one batched decode for single-pending lanes,
+    /// one batched verify for the rest — the same entry selection as the
+    /// per-lane path, so the computed rows match it numerically). Fills
+    /// `blocks[i]` for lanes that begin a block, marks at-capacity
+    /// sessions finished, and records per-lane failures in `failed[i]`.
+    /// `Err` means a shared dispatch failed (all adopted lanes are dead).
+    pub fn begin_block_batch(
+        &self,
+        ctx: &mut BatchedCtx,
+        lanes: &mut [Lane<'_>],
+        blocks: &mut [Option<BlockState>],
+        failed: &mut [Option<Error>],
+    ) -> Result<()> {
+        let v = self.draft.vocab_size();
+        struct Sync {
+            i: usize,
+            lane: usize,
+            pending: Vec<u32>,
+            pos: usize,
+        }
+        let mut syncs: Vec<Sync> = Vec::new();
+        for (i, lane) in lanes.iter_mut().enumerate() {
+            let s = &mut *lane.session;
+            if !s.lane_mode() || failed[i].is_some() || s.finished {
+                continue;
+            }
+            let gamma = self.effective_gamma(s);
+            if gamma == 0 {
+                s.finished = true;
+                continue;
+            }
+            blocks[i] = Some(BlockState {
+                gamma,
+                basis: Vec::new(),
+                drafted: Vec::with_capacity(gamma),
+                draft_probs: Vec::with_capacity(gamma),
+            });
+            let d_len = s.d_cache.len();
+            if d_len < s.seq.len() {
+                syncs.push(Sync {
+                    i,
+                    lane: s.d_lane().expect("lane-mode session has a draft lane"),
+                    pending: s.seq[d_len..].to_vec(),
+                    pos: d_len,
+                });
+            }
+        }
+        // Same entry selection as `sync_draft`: decode for one pending
+        // token, verify otherwise — one fused dispatch per entry in use.
+        for want_decode in [true, false] {
+            let calls: Vec<LaneCall<'_>> = syncs
+                .iter()
+                .filter(|c| (c.pending.len() == 1) == want_decode)
+                .map(|c| LaneCall { lane: c.lane, tokens: &c.pending, pos: c.pos })
+                .collect();
+            if calls.is_empty() {
+                continue;
+            }
+            let entry = if want_decode { Entry::Decode } else { Entry::Verify };
+            self.draft.run_lanes(entry, &mut ctx.draft, &calls)?;
+            drop(calls);
+            for c in syncs.iter().filter(|c| (c.pending.len() == 1) == want_decode) {
+                let s = &mut *lanes[c.i].session;
+                let rows = ctx.draft.lane_logits(c.lane, c.pending.len(), v);
+                let off = (c.pending.len() - 1) * v;
+                s.d_last_logits.clear();
+                s.d_last_logits.extend_from_slice(&rows[off..off + v]);
+                s.stats.draft_calls += 1;
+                if let Err(e) = s.d_cache.advance(c.pending.len()) {
+                    failed[c.i] = Some(e);
+                    blocks[c.i] = None;
+                }
+            }
+        }
+        // Proposal-0 basis: the (now fresh) last draft row of every lane
+        // that begins a block this step.
+        for (i, lane) in lanes.iter_mut().enumerate() {
+            if lane.session.lane_mode() && failed[i].is_none() {
+                if let Some(b) = blocks[i].as_mut() {
+                    b.basis.clear();
+                    b.basis.extend_from_slice(&lane.session.d_last_logits);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Phase 2 (fused) — one proposal round across every adopted drafting
+    /// lane: sample token j per lane from its basis (host RNG, per-lane
+    /// order identical to the single-lane path), then ONE batched decode
+    /// dispatch for every lane that still needs a next basis. Lanes whose
+    /// shrunken γ is exhausted sit the round out.
+    pub fn propose_round_batch(
+        &self,
+        ctx: &mut BatchedCtx,
+        lanes: &mut [Lane<'_>],
+        blocks: &mut [Option<BlockState>],
+        failed: &mut [Option<Error>],
+    ) -> Result<()> {
+        let v = self.target.vocab_size();
+        struct Dec {
+            i: usize,
+            lane: usize,
+            tok: u32,
+            pos: usize,
+        }
+        let mut decs: Vec<Dec> = Vec::new();
+        for (i, lane) in lanes.iter_mut().enumerate() {
+            if !lane.session.lane_mode() || failed[i].is_some() {
+                continue;
+            }
+            let Some(b) = blocks[i].as_mut() else { continue };
+            if b.proposed() >= b.gamma() {
+                continue;
+            }
+            let p = logits_to_probs(&b.basis, &lane.sampling);
+            let t = sample_token(&p, &lane.sampling, lane.rng);
+            b.drafted.push(t);
+            b.draft_probs.push(p);
+            if b.drafted.len() < b.gamma {
+                decs.push(Dec {
+                    i,
+                    lane: lane.session.d_lane().expect("lane-mode session has a draft lane"),
+                    tok: t,
+                    pos: lane.session.d_cache.len(),
+                });
+            }
+        }
+        if decs.is_empty() {
+            return Ok(());
+        }
+        let calls: Vec<LaneCall<'_>> = decs
+            .iter()
+            .map(|c| LaneCall { lane: c.lane, tokens: std::slice::from_ref(&c.tok), pos: c.pos })
+            .collect();
+        self.draft.run_lanes(Entry::Decode, &mut ctx.draft, &calls)?;
+        drop(calls);
+        for c in &decs {
+            let s = &mut *lanes[c.i].session;
+            let rows = ctx.draft.lane_logits(c.lane, 1, v);
+            let b = blocks[c.i].as_mut().expect("drafting lane has a block");
+            b.basis.clear();
+            b.basis.extend_from_slice(&rows[..v]);
+            s.stats.draft_calls += 1;
+            if let Err(e) = s.d_cache.advance(1) {
+                failed[c.i] = Some(e);
+                blocks[c.i] = None;
+            }
+        }
+        Ok(())
+    }
+
+    /// Phase 3 (fused) — ONE batched target-verify dispatch over every
+    /// adopted lane with a completed block, then per-lane rejection
+    /// sampling / rollback / EOS ([`finish_block`](Self::commit_block)'s
+    /// shared tail). Emitted tokens land in `emitted[i]`.
+    pub fn commit_block_batch(
+        &self,
+        ctx: &mut BatchedCtx,
+        lanes: &mut [Lane<'_>],
+        blocks: &mut [Option<BlockState>],
+        failed: &mut [Option<Error>],
+        emitted: &mut [Option<Vec<u32>>],
+    ) -> Result<()> {
+        let v = self.target.vocab_size();
+        struct Ver {
+            i: usize,
+            lane: usize,
+            fed: Vec<u32>,
+            pos: usize,
+            np: usize,
+        }
+        let mut vers: Vec<Ver> = Vec::new();
+        for (i, lane) in lanes.iter_mut().enumerate() {
+            if !lane.session.lane_mode() || failed[i].is_some() {
+                continue;
+            }
+            let Some(b) = blocks[i].as_ref() else { continue };
+            debug_assert_eq!(b.drafted.len(), b.gamma, "commit before all proposal rounds");
+            let s = &*lane.session;
+            let t_len = s.t_cache.len();
+            let mut fed: Vec<u32> = s.seq[t_len..].to_vec();
+            fed.extend_from_slice(&b.drafted);
+            debug_assert!(fed.len() <= self.target.arch.block(Entry::Verify));
+            vers.push(Ver {
+                i,
+                lane: s.t_lane().expect("lane-mode session has a target lane"),
+                fed,
+                pos: t_len,
+                np: s.seq.len() - t_len,
+            });
+        }
+        if vers.is_empty() {
+            return Ok(());
+        }
+        let calls: Vec<LaneCall<'_>> = vers
+            .iter()
+            .map(|c| LaneCall { lane: c.lane, tokens: &c.fed, pos: c.pos })
+            .collect();
+        self.target.run_lanes(Entry::Verify, &mut ctx.target, &calls)?;
+        drop(calls);
+        for c in &vers {
+            let Lane { session, sampling, rng } = &mut lanes[c.i];
+            let b = blocks[c.i].take().expect("verified lane has a block");
+            let rows = ctx.target.lane_logits(c.lane, c.fed.len(), v);
+            let done = match session.t_cache.advance(c.fed.len()) {
+                Ok(()) => self.finish_block(session, b, c.np, rows, sampling, rng),
+                Err(e) => Err(e),
+            };
+            match done {
+                Ok(tokens) => emitted[c.i] = Some(tokens),
+                Err(e) => failed[c.i] = Some(e),
+            }
+        }
+        Ok(())
     }
 
     /// Run one speculation block; returns the tokens emitted (empty only

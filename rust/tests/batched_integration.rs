@@ -1,0 +1,271 @@
+//! Fused batched dispatch end-to-end (artifact-gated, and additionally
+//! gated on the bundle exporting batched `[B, T]` entry points):
+//!
+//! * fused output token-matches the per-lane path AND the direct engine
+//!   across a mixed-γ batch (one lane runs to the context cap, shrinking
+//!   its per-block γ),
+//! * one `BatchStep::run` over N lanes issues O(γ + 2) dispatches on the
+//!   fused path vs O(N·(γ + 2)) per-lane (the PR's acceptance bound),
+//! * arena lanes are recycled across sequence lifetimes (lane death mid
+//!   run, new admission into the freed lane),
+//! * a mixed batch (some adopted, some per-lane) stays token-identical.
+
+mod common;
+
+use specd::batch::{BatchStep, Lane, LaneOutcome, PhaseTimings};
+use specd::config::SamplingConfig;
+use specd::rng::Pcg64;
+use specd::spec::{BatchedCtx, SpecDecoder, SpecSession};
+
+/// Skip unless the bundle also exports batched entry points.
+macro_rules! require_batched {
+    ($decoder:expr) => {
+        match $decoder.batched_ctx().unwrap() {
+            Some(ctx) => ctx,
+            None => {
+                eprintln!("skipping: bundle has no batched entry points (re-run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+/// Drive BatchStep over the given sessions until every one is finished or
+/// has `budgets[i]` generated tokens. Returns accumulated timings.
+fn drive(
+    decoder: &SpecDecoder<'_>,
+    mut ctx: Option<&mut BatchedCtx>,
+    sessions: &mut [SpecSession],
+    rngs: &mut [Pcg64],
+    budgets: &[usize],
+) -> PhaseTimings {
+    let sampling = SamplingConfig::greedy();
+    let mut total = PhaseTimings::default();
+    loop {
+        let mut lanes: Vec<Lane<'_>> = sessions
+            .iter_mut()
+            .zip(rngs.iter_mut())
+            .enumerate()
+            .filter(|(i, (s, _))| !s.finished && s.generated().len() < budgets[*i])
+            .map(|(_, (s, rng))| Lane { session: s, sampling, rng })
+            .collect();
+        if lanes.is_empty() {
+            break;
+        }
+        let (outcomes, t) = BatchStep::run(decoder, ctx.as_deref_mut(), &mut lanes);
+        for o in outcomes {
+            if let LaneOutcome::Failed(e) = o {
+                panic!("lane failed: {e}");
+            }
+        }
+        total.dispatches += t.dispatches;
+        total.lanes += t.lanes;
+        total.batched_lanes += t.batched_lanes;
+    }
+    total
+}
+
+fn start_all(decoder: &SpecDecoder<'_>, prompts: &[Vec<u32>]) -> (Vec<SpecSession>, Vec<Pcg64>) {
+    let sessions = prompts.iter().map(|p| decoder.start(p).unwrap()).collect();
+    let rngs = (0..prompts.len()).map(|i| Pcg64::with_stream(i as u64, 0xba7c)).collect();
+    (sessions, rngs)
+}
+
+fn outputs(sessions: &[SpecSession], budgets: &[usize]) -> Vec<Vec<u32>> {
+    sessions
+        .iter()
+        .zip(budgets)
+        .map(|(s, &b)| {
+            let mut out = s.generated().to_vec();
+            out.truncate(b);
+            out
+        })
+        .collect()
+}
+
+#[test]
+fn fused_output_matches_per_lane_and_direct_across_mixed_gamma() {
+    require_artifacts!();
+    let f = common::Fixture::load();
+    let draft = f.default_draft();
+    let decoder = SpecDecoder::new(&draft, &f.target, 3).unwrap();
+    let mut ctx = require_batched!(decoder);
+
+    // Mixed tasks; lane 0 gets an unlimited budget so it runs into the
+    // context cap and its per-block γ shrinks (mixed-γ batch).
+    let mut prompts: Vec<Vec<u32>> = f.suite.take("dolly", 2).unwrap()
+        .iter().map(|e| e.prompt.clone()).collect();
+    prompts.extend(f.suite.take("xsum", 2).unwrap().iter().map(|e| e.prompt.clone()));
+    let budgets = vec![2 * f.target.max_seq(), 16, 16, 16];
+
+    // Fused run.
+    let (mut fused_sessions, mut fused_rngs) = start_all(&decoder, &prompts);
+    for s in fused_sessions.iter_mut() {
+        assert!(decoder.adopt(&mut ctx, s).unwrap(), "arena must have free lanes");
+        assert!(s.lane_mode());
+    }
+    let t = drive(&decoder, Some(&mut ctx), &mut fused_sessions, &mut fused_rngs, &budgets);
+    assert_eq!(t.lanes, t.batched_lanes, "every lane-step must be fused");
+    let fused_out = outputs(&fused_sessions, &budgets);
+    for s in fused_sessions.iter_mut() {
+        decoder.release(&mut ctx, s);
+    }
+    assert_eq!(ctx.available(), ctx.draft.ledger.batch().min(ctx.target.ledger.batch()));
+
+    // Per-lane run (no ctx), identical seeds.
+    let (mut plain_sessions, mut plain_rngs) = start_all(&decoder, &prompts);
+    drive(&decoder, None, &mut plain_sessions, &mut plain_rngs, &budgets);
+    let plain_out = outputs(&plain_sessions, &budgets);
+    assert_eq!(fused_out, plain_out, "fused output diverged from per-lane lockstep");
+
+    // Direct single-sequence engine, same seeds.
+    for (i, p) in prompts.iter().enumerate() {
+        let mut rng = Pcg64::with_stream(i as u64, 0xba7c);
+        let (want, _) = decoder
+            .generate(p, budgets[i], &SamplingConfig::greedy(), &mut rng)
+            .unwrap();
+        assert_eq!(fused_out[i], want, "lane {i} diverged from the direct engine");
+    }
+    // The long lane actually exercised shrunken γ: it filled the context.
+    let total = prompts[0].len() + fused_out[0].len();
+    let cap = f.target.max_seq().min(draft.max_seq() + 1);
+    if fused_out[0].last() != Some(&specd::tokenizer::EOS) {
+        assert!(total >= cap, "long lane stopped {} short of the cap", cap - total);
+    }
+}
+
+#[test]
+fn fused_step_issues_o_gamma_dispatches_not_o_n_gamma() {
+    require_artifacts!();
+    let f = common::Fixture::load();
+    let draft = f.default_draft();
+    let gamma = 3;
+    let decoder = SpecDecoder::new(&draft, &f.target, gamma).unwrap();
+    let mut ctx = require_batched!(decoder);
+    let n = 4usize.min(ctx.available());
+    assert!(n >= 2, "need at least 2 arena lanes for this bound to mean anything");
+    let prompts: Vec<Vec<u32>> =
+        f.suite.take("cnndm", n).unwrap().iter().map(|e| e.prompt.clone()).collect();
+    let sampling = SamplingConfig::greedy();
+
+    // One fused step over N active lanes.
+    let (mut sessions, mut rngs) = start_all(&decoder, &prompts);
+    for s in sessions.iter_mut() {
+        assert!(decoder.adopt(&mut ctx, s).unwrap());
+    }
+    let mut lanes: Vec<Lane<'_>> = sessions
+        .iter_mut()
+        .zip(rngs.iter_mut())
+        .map(|(s, rng)| Lane { session: s, sampling, rng })
+        .collect();
+    let (outcomes, fused) = BatchStep::run(&decoder, Some(&mut ctx), &mut lanes);
+    assert!(outcomes.iter().all(|o| matches!(o, LaneOutcome::Emitted(_))));
+    assert_eq!(fused.batched_lanes, n);
+    // O(γ + 2) bound, independent of N: at most 2 sync + 2(γ-1) propose +
+    // 2 verify launches (each run_lanes may add one extract readback).
+    let bound = (2 * gamma + 4) as u64;
+    assert!(
+        fused.dispatches <= bound,
+        "fused step over {n} lanes issued {} dispatches (> bound {bound})",
+        fused.dispatches
+    );
+    for s in sessions.iter_mut() {
+        decoder.release(&mut ctx, s);
+    }
+
+    // The same step per-lane dispatches at least N·(γ + 1) times.
+    let (mut sessions, mut rngs) = start_all(&decoder, &prompts);
+    let mut lanes: Vec<Lane<'_>> = sessions
+        .iter_mut()
+        .zip(rngs.iter_mut())
+        .map(|(s, rng)| Lane { session: s, sampling, rng })
+        .collect();
+    let (_, plain) = BatchStep::run(&decoder, None, &mut lanes);
+    assert_eq!(plain.batched_lanes, 0);
+    assert!(
+        plain.dispatches >= (n * (gamma + 1)) as u64,
+        "per-lane step over {n} lanes issued only {} dispatches",
+        plain.dispatches
+    );
+    assert!(fused.dispatches < plain.dispatches, "fusing must reduce dispatches for n >= 2");
+}
+
+#[test]
+fn arena_lanes_recycle_across_sequence_lifetimes() {
+    require_artifacts!();
+    let f = common::Fixture::load();
+    let draft = f.default_draft();
+    let decoder = SpecDecoder::new(&draft, &f.target, 3).unwrap();
+    let mut ctx = require_batched!(decoder);
+    let sampling = SamplingConfig::greedy();
+    let examples = f.suite.take("dolly", 6).unwrap();
+
+    // Admit/finish/re-admit through the arena two lanes at a time; every
+    // output must match the direct engine (recycled lanes carry no stale
+    // state — pack overwrites the whole row).
+    let mut next = 0usize;
+    let mut live: Vec<(usize, SpecSession, Pcg64)> = Vec::new();
+    let mut done: Vec<(usize, Vec<u32>)> = Vec::new();
+    while done.len() < examples.len() {
+        while next < examples.len() && live.len() < 2 {
+            let mut s = decoder.start(&examples[next].prompt).unwrap();
+            assert!(decoder.adopt(&mut ctx, &mut s).unwrap());
+            live.push((next, s, Pcg64::with_stream(next as u64, 0x5eed)));
+            next += 1;
+        }
+        {
+            let mut lanes: Vec<Lane<'_>> = live
+                .iter_mut()
+                .map(|(_, s, rng)| Lane { session: s, sampling, rng })
+                .collect();
+            let (outcomes, _) = BatchStep::run(&decoder, Some(&mut ctx), &mut lanes);
+            assert!(outcomes.iter().all(|o| !matches!(o, LaneOutcome::Failed(_))));
+        }
+        let mut still = Vec::new();
+        for (i, mut s, rng) in live.drain(..) {
+            if s.finished || s.generated().len() >= 8 {
+                decoder.release(&mut ctx, &mut s);
+                let mut out = s.generated().to_vec();
+                out.truncate(8);
+                done.push((i, out));
+            } else {
+                still.push((i, s, rng));
+            }
+        }
+        live = still;
+    }
+    for (i, got) in done {
+        let mut rng = Pcg64::with_stream(i as u64, 0x5eed);
+        let (want, _) = decoder.generate(&examples[i].prompt, 8, &sampling, &mut rng).unwrap();
+        assert_eq!(got, want, "sequence {i} diverged after lane recycling");
+    }
+}
+
+#[test]
+fn mixed_batch_of_adopted_and_owned_lanes_matches_direct() {
+    require_artifacts!();
+    let f = common::Fixture::load();
+    let draft = f.default_draft();
+    let decoder = SpecDecoder::new(&draft, &f.target, 3).unwrap();
+    let mut ctx = require_batched!(decoder);
+    let prompts: Vec<Vec<u32>> =
+        f.suite.take("xsum", 4).unwrap().iter().map(|e| e.prompt.clone()).collect();
+    let budgets = vec![12; 4];
+    let (mut sessions, mut rngs) = start_all(&decoder, &prompts);
+    // Adopt only half: the step runs a genuinely mixed batch.
+    for s in sessions.iter_mut().take(2) {
+        assert!(decoder.adopt(&mut ctx, s).unwrap());
+    }
+    let t = drive(&decoder, Some(&mut ctx), &mut sessions, &mut rngs, &budgets);
+    assert!(t.batched_lanes > 0 && t.batched_lanes < t.lanes, "batch must be mixed");
+    let got = outputs(&sessions, &budgets);
+    for s in sessions.iter_mut() {
+        decoder.release(&mut ctx, s);
+    }
+    for (i, p) in prompts.iter().enumerate() {
+        let mut rng = Pcg64::with_stream(i as u64, 0xba7c);
+        let (want, _) =
+            decoder.generate(p, budgets[i], &SamplingConfig::greedy(), &mut rng).unwrap();
+        assert_eq!(got[i], want, "mixed-batch lane {i} diverged from the direct engine");
+    }
+}

@@ -61,6 +61,77 @@ fn golden_probes_match_python() {
 }
 
 #[test]
+fn batched_golden_probes_match_python() {
+    require_artifacts!();
+    // Pins the compiled batched `[B, T]` executables against the probes
+    // python recorded at export time (which are themselves asserted equal
+    // to the per-lane path there). Skips on pre-batched bundles.
+    let f = common::Fixture::load();
+    let golden_text =
+        std::fs::read_to_string(f.manifest.root.join("golden.json")).expect("golden.json");
+    let golden = Value::parse(&golden_text).expect("golden parse");
+
+    let mut checked = 0;
+    for (model_name, probe) in golden.as_obj().expect("golden object") {
+        let info = f.manifest.model(model_name).expect("model in manifest");
+        let arch =
+            if info.arch == "target" { &f.target_arch } else { &f.draft_arch };
+        let model = f.rt.load_model(&f.manifest, arch, model_name).unwrap();
+        let Some(batch) = model.batch_size() else { continue };
+        let Some(bp) = probe.get("batched").as_obj().and_then(|m| m.get(&batch.to_string()))
+        else {
+            continue;
+        };
+        let v = model.vocab_size();
+        let block = bp.get("block").as_usize().unwrap();
+        let mask: Vec<usize> =
+            bp.get("mask").as_arr().unwrap().iter().map(|x| x.as_usize().unwrap()).collect();
+        let tokens: Vec<Vec<u32>> = bp
+            .get("tokens")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|row| row.as_arr().unwrap().iter().map(|x| x.as_usize().unwrap() as u32).collect())
+            .collect();
+        assert_eq!(mask.len(), batch);
+
+        // Fresh zeroed arena; one fused dispatch over the active lanes
+        // (LaneLedger hands out lanes in index order from a fresh arena).
+        let mut arena = model.new_arena().unwrap();
+        for b in 0..batch {
+            assert_eq!(arena.ledger.alloc(), Some(b));
+        }
+        let calls: Vec<specd::runtime::LaneCall<'_>> = (0..batch)
+            .filter(|&b| mask[b] != 0)
+            .map(|b| specd::runtime::LaneCall { lane: b, tokens: &tokens[b], pos: 0 })
+            .collect();
+        model.run_lanes(Entry::Verify, &mut arena, &calls).unwrap();
+
+        let heads = bp.get("logits_head").as_arr().unwrap();
+        let argmaxes = bp.get("logits_last_argmax").as_arr().unwrap();
+        for b in (0..batch).filter(|&b| mask[b] != 0) {
+            let logits = arena.lane_logits(b, block, v);
+            for (r, row) in heads[b].as_arr().unwrap().iter().enumerate() {
+                for (c, want) in row.as_arr().unwrap().iter().enumerate() {
+                    let got = logits[r * v + c] as f64;
+                    let want = want.as_f64().unwrap();
+                    assert!(
+                        (got - want).abs() < 2e-3 + 1e-3 * want.abs(),
+                        "{model_name} lane {b} [{r}][{c}]: rust {got} vs python {want}"
+                    );
+                }
+            }
+            let am = argmax(&logits[(block - 1) * v..block * v]);
+            assert_eq!(am, argmaxes[b].as_usize().unwrap(), "{model_name} lane {b}");
+        }
+        checked += 1;
+    }
+    if checked == 0 {
+        eprintln!("skipping: bundle has no batched probes (re-run `make artifacts`)");
+    }
+}
+
+#[test]
 fn prefill_chunking_matches_single_shot() {
     require_artifacts!();
     let f = common::Fixture::load();

@@ -192,7 +192,14 @@ fn metrics_include_scheduler_gauges_when_attached() {
     gauges.pool_live.store(3, Ordering::Relaxed);
     gauges.pool_max.store(4, Ordering::Relaxed);
     gauges.resident_tokens.store(123, Ordering::Relaxed);
-    gauges.record_iteration(0.25, 0.5, 0.125);
+    gauges.record_iteration(&specd::batch::PhaseTimings {
+        draft_sync: 0.25,
+        propose: 0.5,
+        verify: 0.125,
+        dispatches: 7,
+        lanes: 2,
+        batched_lanes: 2,
+    });
     let g = gauges.clone();
     let rig = Rig::start(16, 2, Duration::from_millis(1), move |cfg| {
         cfg.scheduler_gauges = Some(g);
@@ -204,6 +211,8 @@ fn metrics_include_scheduler_gauges_when_attached() {
     assert!(text.contains("specd_sched_pool_max_slots 4"));
     assert!(text.contains("specd_sched_resident_tokens 123"));
     assert!(text.contains("specd_sched_phase_verify_seconds_total 0.125"));
+    assert!(text.contains("specd_sched_dispatches_total 7"));
+    assert!(text.contains("specd_sched_batch_occupancy 2"));
     // The HTTP aggregate families are still present alongside.
     assert!(text.contains("specd_requests_total"));
     rig.stop();

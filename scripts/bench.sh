@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# Perf artifacts in one command (the BENCH_* trajectory files):
+#
+#   scripts/bench.sh                 # dispatch microbench + serve benchmark
+#   ARTIFACTS=path scripts/bench.sh  # non-default bundle location
+#
+# Produces:
+#   BENCH_pr4.json    per-lane vs fused-batched dispatch microbench
+#                     (tokens/s, dispatches/block, batch occupancy)
+#   BENCH_serve.json  trace-replay serving benchmark (SD vs AR)
+#
+# Both need a compiled artifact bundle; without one this script prints a
+# note and exits 0 (CI runs it opportunistically).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+ART="${ARTIFACTS:-artifacts}"
+if [[ ! -f "$ART/manifest.json" ]]; then
+    echo "no artifact bundle at $ART (run \`make artifacts\` / python -m compile.aot); nothing to bench"
+    exit 0
+fi
+
+echo "== dispatch microbench (BENCH_pr4.json) =="
+cargo run --release --example dispatch_microbench -- \
+    --artifacts "$ART" --lanes 1,4,8 --out BENCH_pr4.json
+
+echo "== serve benchmark (BENCH_serve.json) =="
+cargo run --release --example serve_benchmark -- \
+    --artifacts "$ART" --bench-json BENCH_serve.json "$@"
+
+echo "bench artifacts: BENCH_pr4.json BENCH_serve.json"

@@ -18,6 +18,17 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+echo "== batched golden probes (artifact-gated) =="
+if compgen -G "artifacts/hlo/*/verify.b*.hlo.txt" > /dev/null; then
+    # Bundle exports batched [B, T] entry points: run the fused-dispatch
+    # suites explicitly in release (numerics pins + the O(γ+2) dispatch
+    # bound). These tests self-skip inside `cargo test` when gated, so
+    # this stage is the one that actually exercises them.
+    cargo test --release --test runtime_integration --test batched_integration
+else
+    echo "no batched artifact bundle; skipping (export with: cd python && python -m compile.aot)"
+fi
+
 echo "== cargo clippy (deny warnings) =="
 if cargo clippy --version >/dev/null 2>&1; then
     cargo clippy --all-targets -- -D warnings
