@@ -1,0 +1,279 @@
+//! Admission-path microbench (the PR 5 perf artifact): fused admission
+//! waves vs the per-sequence prefill+pack path, and the TTFT-vs-ITL trade
+//! of the `--prefill-budget` interleaving knob. Writes a machine-readable
+//! `BENCH_pr5.json` (CI uploads it when present).
+//!
+//! Two parts:
+//!
+//! 1. **Admission dispatch sweep** — for each wave width N, admit the same
+//!    ragged prompt mix (short-chat + exact-boundary + long-document)
+//!    once per-sequence (`start` + `adopt`: Σ ceil(L_i/block) chunk
+//!    dispatches + N packs) and once as a wave (`admit_wave`:
+//!    O(ceil(L_max/block)) fused dispatches, zero packs). Hard-asserts
+//!    the wave bound, mirroring `dispatch_microbench`'s fused-step gate.
+//! 2. **Prefill-budget sweep** — replays one bursty Poisson trace with a
+//!    short/long prompt-length mixture through the coordinator per
+//!    budget value and records TTFT/latency percentiles, throughput and
+//!    the admission-wave counters, making the chunked-prefill
+//!    interleaving trade-off measurable.
+//!
+//! ```sh
+//! cargo run --release --example admission_microbench -- \
+//!     --artifacts artifacts --lanes 1,4,8 --budgets 0,32,128 --out BENCH_pr5.json
+//! ```
+
+use std::sync::Arc;
+
+use specd::artifacts::Manifest;
+use specd::benchkit::write_bench_json;
+use specd::cli::Args;
+use specd::config::{RunConfig, SamplingConfig};
+use specd::coordinator::{Coordinator, Request, Response};
+use specd::exec;
+use specd::json::Value;
+use specd::metrics::ServeMetrics;
+use specd::runtime::{Entry, Runtime};
+use specd::spec::SpecDecoder;
+use specd::workload::{build_trace, parse_len_mix, stretch_prompt, EvalSuite, TraceConfig};
+
+/// The ragged admission mix: short-chat, exact-boundary and long-document
+/// prompts built from real suite prompts.
+fn ragged_prompts(suite: &EvalSuite, block: usize, n: usize) -> specd::Result<Vec<Vec<u32>>> {
+    let exs = suite.take("dolly", n)?;
+    Ok(exs
+        .iter()
+        .enumerate()
+        .map(|(i, ex)| match i % 4 {
+            0 => stretch_prompt(&ex.prompt, (block / 4).max(1)),
+            1 => stretch_prompt(&ex.prompt, 2 * block + 3),
+            2 => stretch_prompt(&ex.prompt, block),
+            _ => ex.prompt.clone(),
+        })
+        .collect())
+}
+
+fn main() -> specd::Result<()> {
+    let args = Args::new("admission_microbench", "wave vs per-sequence admission microbench")
+        .opt("artifacts", "artifacts", "artifact bundle directory")
+        .opt("draft", "", "draft model (default: best tvdpp checkpoint)")
+        .opt("gamma", "3", "speculation depth")
+        .opt("lanes", "1,4,8", "comma-separated admission-wave widths")
+        .opt("budgets", "0,32,128", "prefill-budget sweep (tokens/iteration; 0 = unbounded)")
+        .opt("requests", "24", "budget sweep: requests per replay")
+        .opt("rate", "16.0", "budget sweep: Poisson arrival rate (bursty)")
+        .opt("max-new", "16", "budget sweep: new tokens per request")
+        .opt("max-slots", "4", "budget sweep: KV slot pool size")
+        .opt("len-mix", "8:0.6,96:0.4", "budget sweep: prompt-length mixture")
+        .opt("seed", "0", "trace seed")
+        .opt("out", "BENCH_pr5.json", "machine-readable output artifact")
+        .parse()?;
+
+    let manifest = Manifest::load(args.str("artifacts"))?;
+    let rt = Arc::new(Runtime::new()?);
+    let draft_arch = rt.load_arch(&manifest, "draft")?;
+    let target_arch = rt.load_arch(&manifest, "target")?;
+    let target = rt.load_model(&manifest, &target_arch, "target")?;
+    let draft_name = if args.str("draft").is_empty() {
+        manifest
+            .draft_models()
+            .into_iter()
+            .filter(|n| n.contains("tvdpp"))
+            .max()
+            .unwrap_or_else(|| "draft_base".to_string())
+    } else {
+        args.str("draft").to_string()
+    };
+    let draft = rt.load_model(&manifest, &draft_arch, &draft_name)?;
+    let suite = EvalSuite::load(&manifest.root.join("eval_prompts.json"))?;
+    let gamma = args.usize("gamma")?;
+    let decoder = SpecDecoder::new(&draft, &target, gamma)?;
+    let block = target.arch.block(Entry::Prefill);
+    let batched_available = decoder.batched_ctx()?.is_some();
+    if !batched_available {
+        eprintln!("note: bundle has no batched entry points; wave rows will be skipped");
+    }
+
+    // ---- part 1: admission dispatch sweep --------------------------------
+    let mut rows = Vec::new();
+    let lane_counts: Vec<usize> = args
+        .list("lanes")
+        .iter()
+        .map(|s| s.parse().map_err(|_| specd::Error::Cli(format!("--lanes: bad value '{s}'"))))
+        .collect::<specd::Result<_>>()?;
+    for &n in &lane_counts {
+        let prompts = ragged_prompts(&suite, block, n)?;
+        let tokens: usize = prompts.iter().map(Vec::len).sum();
+        let l_max = prompts.iter().map(Vec::len).max().unwrap_or(0);
+        let sum_chunks: usize = prompts.iter().map(|p| p.len().div_ceil(block)).sum();
+
+        // Per-sequence baseline: owned prefill, then pack into the arena.
+        let mut ctx = decoder.batched_ctx()?;
+        let d0 = decoder.dispatch_count();
+        let mut sessions = Vec::new();
+        for p in &prompts {
+            let mut s = decoder.start(p)?;
+            if let Some(c) = ctx.as_mut() {
+                decoder.adopt(c, &mut s)?;
+            }
+            sessions.push(s);
+        }
+        let per_seq = decoder.dispatch_count() - d0;
+        if let Some(c) = ctx.as_mut() {
+            for s in sessions.iter_mut() {
+                decoder.release(c, s);
+            }
+        }
+        drop(sessions);
+        rows.push(Value::obj(vec![
+            ("mode", Value::Str("per_seq".to_string())),
+            ("lanes", Value::Num(n as f64)),
+            ("prompt_tokens", Value::Num(tokens as f64)),
+            ("sum_chunks", Value::Num(sum_chunks as f64)),
+            ("dispatches", Value::Num(per_seq as f64)),
+            ("dispatches_per_lane", Value::Num(per_seq as f64 / n.max(1) as f64)),
+        ]));
+
+        // Fused wave over the identical prompts.
+        if let Some(mut c) = decoder.batched_ctx()? {
+            if n > c.available() {
+                eprintln!("note: lanes={n} exceeds arena capacity {}; skipping", c.available());
+                continue;
+            }
+            let d0 = decoder.dispatch_count();
+            let mut sessions = decoder.admit_wave(&mut c, prompts.clone())?;
+            let wave = decoder.dispatch_count() - d0;
+            for s in sessions.iter_mut() {
+                decoder.release(&mut c, s);
+            }
+            let chunks = l_max.div_ceil(block) as u64;
+            // The acceptance gate: O(ceil(L_max/block)) fused dispatches
+            // (each chunk = one prefill per model + at most one extract
+            // readback each), ZERO packs, for ANY wave width.
+            assert!(
+                wave <= 4 * chunks,
+                "wave of {n} issued {wave} dispatches (> O(ceil(L_max/block)) bound {})",
+                4 * chunks
+            );
+            println!(
+                "admission lanes={n}: per_seq={per_seq} wave={wave} dispatches \
+                 (Σchunks={sum_chunks}, ceil(Lmax/block)={chunks})"
+            );
+            rows.push(Value::obj(vec![
+                ("mode", Value::Str("wave".to_string())),
+                ("lanes", Value::Num(n as f64)),
+                ("prompt_tokens", Value::Num(tokens as f64)),
+                ("max_chunks", Value::Num(chunks as f64)),
+                ("dispatches", Value::Num(wave as f64)),
+                ("dispatches_per_lane", Value::Num(wave as f64 / n.max(1) as f64)),
+            ]));
+        }
+    }
+
+    // ---- part 2: prefill-budget sweep ------------------------------------
+    let mut budget_rows = Vec::new();
+    let budgets: Vec<usize> = args
+        .list("budgets")
+        .iter()
+        .map(|s| s.parse().map_err(|_| specd::Error::Cli(format!("--budgets: bad value '{s}'"))))
+        .collect::<specd::Result<_>>()?;
+    let trace_cfg = TraceConfig {
+        rate: args.f64("rate")?,
+        n_requests: args.usize("requests")?,
+        max_new: args.usize("max-new")?,
+        seed: args.u64("seed")?,
+        prompt_len_mix: parse_len_mix(args.str("len-mix"))?,
+        ..Default::default()
+    };
+    let trace = build_trace(&suite, &trace_cfg)?;
+    for &budget in &budgets {
+        let cfg = RunConfig {
+            gamma,
+            max_slots: args.usize("max-slots")?,
+            max_new_tokens: trace_cfg.max_new,
+            prefill_budget: budget,
+            ..RunConfig::default()
+        };
+        let decoder = SpecDecoder::new(&draft, &target, gamma)?;
+        let coord = Coordinator::new(decoder, cfg)?;
+        let m = replay(&coord, &trace)?;
+        let q = |st: &Option<specd::benchkit::Stats>, f: fn(&specd::benchkit::Stats) -> f64| {
+            st.as_ref().map(f).unwrap_or(0.0)
+        };
+        let (ttft, lat) = (m.ttft_stats(), m.latency_stats());
+        println!(
+            "budget={budget}: ttft p50={:.0}ms p90={:.0}ms | latency p50={:.0}ms | \
+             {:.1} tok/s | waves={} (mean {:.1} lanes)",
+            q(&ttft, |s| s.p50) * 1e3,
+            q(&ttft, |s| s.p90) * 1e3,
+            q(&lat, |s| s.p50) * 1e3,
+            m.throughput_tok_s(),
+            m.prefill_waves,
+            m.mean_wave_lanes(),
+        );
+        budget_rows.push(Value::obj(vec![
+            ("prefill_budget", Value::Num(budget as f64)),
+            ("ttft_p50", Value::Num(q(&ttft, |s| s.p50))),
+            ("ttft_p90", Value::Num(q(&ttft, |s| s.p90))),
+            ("latency_p50", Value::Num(q(&lat, |s| s.p50))),
+            ("tokens_per_sec", Value::Num(m.throughput_tok_s())),
+            ("batch_iterations", Value::Num(m.batch_iterations as f64)),
+            ("prefill_waves", Value::Num(m.prefill_waves as f64)),
+            ("mean_wave_lanes", Value::Num(m.mean_wave_lanes())),
+            ("prefill_dispatches", Value::Num(m.prefill_dispatches as f64)),
+            ("prefill_tokens", Value::Num(m.prefill_tokens as f64)),
+        ]));
+    }
+
+    let artifact = Value::obj(vec![
+        ("bench", Value::Str("admission_microbench".to_string())),
+        ("draft", Value::Str(draft_name)),
+        ("gamma", Value::Num(gamma as f64)),
+        ("prefill_block", Value::Num(block as f64)),
+        ("batched_available", Value::Bool(batched_available)),
+        ("len_mix", Value::Str(args.str("len-mix").to_string())),
+        ("admission_rows", Value::Arr(rows)),
+        ("budget_rows", Value::Arr(budget_rows)),
+    ]);
+    write_bench_json(args.str("out"), &artifact)?;
+    println!("wrote {}", args.str("out"));
+    Ok(())
+}
+
+/// Feed the trace through the coordinator with real arrival timing (same
+/// shape as serve_benchmark's replay; queue wait counts via `submitted`).
+fn replay(
+    coord: &Coordinator,
+    trace: &[specd::workload::TraceRequest],
+) -> specd::Result<ServeMetrics> {
+    let (req_tx, req_rx) = exec::bounded::<Request>(64);
+    let (resp_tx, resp_rx) = exec::bounded::<Response>(256);
+    let trace_owned: Vec<specd::workload::TraceRequest> = trace.to_vec();
+    let client = std::thread::spawn(move || {
+        let t0 = std::time::Instant::now();
+        for (i, r) in trace_owned.into_iter().enumerate() {
+            if let Some(wait) = r.arrival.checked_sub(t0.elapsed()) {
+                std::thread::sleep(wait);
+            }
+            let mut req = Request::new(
+                i as u64,
+                r.prompt,
+                r.max_new,
+                SamplingConfig::for_task(&r.task, i as u64),
+            );
+            req.submitted = Some(std::time::Instant::now());
+            let _ = req_tx.send(req);
+        }
+    });
+    let metrics = coord.serve(req_rx, resp_tx)?;
+    client.join().expect("client thread");
+    let mut failures = 0;
+    while let Some(r) = resp_rx.try_recv() {
+        if r.error.is_some() {
+            failures += 1;
+        }
+    }
+    if failures > 0 {
+        eprintln!("warning: {failures} failed requests");
+    }
+    Ok(metrics)
+}

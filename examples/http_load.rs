@@ -29,6 +29,7 @@ use specd::cli::Args;
 use specd::http;
 use specd::json::{ObjWriter, Value};
 use specd::rng::Pcg64;
+use specd::workload::{parse_len_mix, stretch_prompt};
 
 #[derive(Debug)]
 struct Outcome {
@@ -49,6 +50,9 @@ fn main() -> specd::Result<()> {
         .opt("max-new", "32", "max new tokens per request")
         .opt("tokens", "1,3,5,6,7,4", "prompt token ids (comma-separated)")
         .opt("prompt", "", "prompt text (overrides --tokens; server-side encode)")
+        .opt("len-mix", "",
+             "len:weight prompt-length mixture cycled over --tokens \
+              (e.g. 8:0.7,96:0.3; '' = one shared prompt)")
         .opt("task", "dolly", "sampling regime task name")
         .opt("timeout-ms", "0", "per-request deadline sent to the server (0 = none)")
         .opt("seed", "0", "arrival-schedule seed")
@@ -61,24 +65,57 @@ fn main() -> specd::Result<()> {
     let stream = args.flag("stream");
     let max_new = args.usize("max-new")?;
 
-    // Request body (shared by every request; seed varies server-side by id).
-    let mut body = ObjWriter::new()
-        .num("max_new", max_new as f64)
-        .str("task", args.str("task"));
-    if !args.str("prompt").is_empty() {
-        body = body.str("prompt", args.str("prompt"));
+    // Request bodies. Default: ONE body shared by every request (seed
+    // varies server-side by id). With --len-mix: one body per request,
+    // its token prompt stretched to a length drawn from the mixture, so
+    // the server's admission path sees a realistic short-chat vs
+    // long-document arrival pattern instead of uniform prompts.
+    let timeout_ms = args.ms_opt("timeout-ms")?.map(|d| d.as_millis() as f64);
+    let build_body = |toks: Option<&[u32]>| -> String {
+        let mut b = ObjWriter::new()
+            .num("max_new", max_new as f64)
+            .str("task", args.str("task"));
+        b = match toks {
+            Some(t) => b.u32_arr("tokens", t),
+            None => b.str("prompt", args.str("prompt")),
+        };
+        if let Some(ms) = timeout_ms {
+            b = b.num("timeout_ms", ms);
+        }
+        b.finish()
+    };
+    let base_toks: Option<Vec<u32>> = if args.str("prompt").is_empty() {
+        Some(
+            args.list("tokens")
+                .iter()
+                .map(|t| {
+                    t.parse::<u32>().map_err(|_| specd::Error::Cli(format!("bad token '{t}'")))
+                })
+                .collect::<specd::Result<_>>()?,
+        )
     } else {
-        let toks: Vec<u32> = args
-            .list("tokens")
-            .iter()
-            .map(|t| t.parse::<u32>().map_err(|_| specd::Error::Cli(format!("bad token '{t}'"))))
-            .collect::<specd::Result<_>>()?;
-        body = body.u32_arr("tokens", &toks);
-    }
-    if let Some(d) = args.ms_opt("timeout-ms")? {
-        body = body.num("timeout_ms", d.as_millis() as f64);
-    }
-    let body = Arc::new(body.finish());
+        None
+    };
+    let bodies: Arc<Vec<String>> = Arc::new(if args.str("len-mix").is_empty() {
+        vec![build_body(base_toks.as_deref())]
+    } else {
+        let Some(toks) = base_toks.as_deref() else {
+            return Err(specd::Error::Cli(
+                "--len-mix needs client-side --tokens prompts (text prompts are \
+                 encoded server-side and cannot be stretched here)"
+                    .into(),
+            ));
+        };
+        let mix = parse_len_mix(args.str("len-mix"))?;
+        let weights: Vec<f32> = mix.iter().map(|(_, w)| *w as f32).collect();
+        let mut lrng = Pcg64::with_stream(args.u64("seed")?, 0x11e7);
+        (0..n)
+            .map(|_| {
+                let target = mix[lrng.categorical(&weights)].0;
+                build_body(Some(&stretch_prompt(toks, target)))
+            })
+            .collect()
+    });
 
     // Poisson schedule: exponential inter-arrival offsets from t0.
     let mut rng = Pcg64::with_stream(args.u64("seed")?, 0x10ad);
@@ -103,8 +140,8 @@ fn main() -> specd::Result<()> {
     let t0 = Instant::now();
     let mut workers = Vec::new();
     for _ in 0..args.usize("clients")?.max(1) {
-        let (addr, body, schedule, cursor, outcomes) =
-            (addr.clone(), body.clone(), schedule.clone(), cursor.clone(), outcomes.clone());
+        let (addr, bodies, schedule, cursor, outcomes) =
+            (addr.clone(), bodies.clone(), schedule.clone(), cursor.clone(), outcomes.clone());
         workers.push(std::thread::spawn(move || loop {
             let i = cursor.fetch_add(1, Ordering::SeqCst);
             if i >= schedule.len() {
@@ -113,7 +150,7 @@ fn main() -> specd::Result<()> {
             if let Some(wait) = schedule[i].checked_sub(t0.elapsed()) {
                 std::thread::sleep(wait);
             }
-            let out = fire(&addr, &body, stream).unwrap_or(Outcome {
+            let out = fire(&addr, &bodies[i % bodies.len()], stream).unwrap_or(Outcome {
                 code: 0,
                 latency: 0.0,
                 ttft: None,

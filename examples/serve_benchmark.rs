@@ -36,6 +36,9 @@ fn main() -> specd::Result<()> {
         .opt("max-new", "32", "max new tokens per request")
         .opt("seed", "0", "trace seed")
         .opt("mix", "chat", "workload mix: chat (dolly-only) | paper (dolly/cnndm/xsum)")
+        .opt("len-mix", "", "len:weight prompt-length mixture (e.g. 8:0.7,96:0.3; '' = natural)")
+        .opt("prefill-budget", "0",
+             "admission prefill tokens per scheduler iteration (0 = unbounded)")
         .opt("bench-json", "", "write machine-readable metrics to this path (BENCH_serve.json)")
         .flag("skip-baseline", "skip the autoregressive replay")
         .parse()?;
@@ -69,6 +72,11 @@ fn main() -> specd::Result<()> {
         max_new: args.usize("max-new")?,
         seed: args.u64("seed")?,
         mix,
+        prompt_len_mix: if args.str("len-mix").is_empty() {
+            Vec::new()
+        } else {
+            specd::workload::parse_len_mix(args.str("len-mix"))?
+        },
     };
     let trace = build_trace(&suite, &trace_cfg)?;
     println!(
@@ -87,6 +95,7 @@ fn main() -> specd::Result<()> {
         gamma,
         max_slots: args.usize("max-slots")?,
         max_new_tokens: trace_cfg.max_new,
+        prefill_budget: args.usize("prefill-budget")?,
         ..RunConfig::default()
     };
     let coord = Coordinator::new(decoder, cfg)?;

@@ -135,7 +135,18 @@ def batched_fn(cfg: ModelConfig, block: int, use_pallas: bool = True):
     active_mask[B]) -> states'[B, state_len]`. Weights are broadcast;
     lanes with `active_mask == 0` pass their state through bit-for-bit
     (a `where` on the vmapped output), so a partially full batch is
-    correct and one dispatch advances every active lane."""
+    correct and one dispatch advances every active lane.
+
+    Ragged-wave mask semantics (batched admission prefill): `pos` is
+    PER-LANE, so one dispatch may advance lanes sitting at different
+    sequence positions — a wave of mixed-length prompts chunk-locksteps
+    with every lane at `pos = chunk_start` until its own prompt runs out,
+    after which the lane is masked and its state (final-chunk logits rows
+    included) passes through untouched for the rest of the wave. Masked
+    lanes therefore keep their last-written logits readable until their
+    next dispatch, which is what lets the Rust side read every wave
+    member's last-row logits once, after the final chunk
+    (`golden_probe_prefill_wave` pins this contract)."""
     one = state_fn(cfg, block, use_pallas)
 
     def fn(flat_params: List[jax.Array], states, tokens, pos, mask):
@@ -325,6 +336,82 @@ def golden_probe_batched(cfg: ModelConfig, params: Dict[str, np.ndarray],
     }
 
 
+def golden_probe_prefill_wave(cfg: ModelConfig, params: Dict[str, np.ndarray],
+                              batch: int, block: int, rtol: float = 1e-5):
+    """Self-checking probe for RAGGED batched admission-wave prefill.
+
+    Chunk-locksteps a wave of mixed-length prompts — a single-token
+    prompt, a multi-chunk prompt, an exact-boundary prompt and a short
+    one — through `batched_fn` with per-lane pos/active_mask: a lane goes
+    inactive once its prompt is exhausted and its state must pass through
+    bit-for-bit until the wave drains, in exactly ceil(L_max/block)
+    dispatches. Asserts every lane's final state equals sequential
+    single-lane chunked prefill of its own prompt and that
+    never-dispatched lanes stay zero, then records per-lane last-row
+    logits heads/argmaxes for the Rust integration tests to pin against
+    the compiled batched prefill executable."""
+    assert batch >= 1 and block >= 1
+    rng = np.random.default_rng(53)
+    names = model.param_names(cfg)
+    flat = [jnp.asarray(params[n]) for n in names]
+    kvn = kv_len(cfg)
+    v = cfg.vocab_size
+    # Ragged lengths, clipped to the batch; extra lanes beyond them sit
+    # idle for the whole wave (pinning the all-masked pass-through).
+    lens = [L for L in (1, 2 * block + 3, block, max(2, block // 2)) if L <= cfg.max_seq]
+    lens = lens[:batch]
+    prompts = [rng.integers(5, v, size=L).astype(np.int32) for L in lens]
+
+    fn = batched_fn(cfg, block)
+    states = jnp.zeros((batch, state_len(cfg)), jnp.float32)
+    max_len = max(lens)
+    dispatches = 0
+    for start in range(0, max_len, block):
+        tokens = np.zeros((batch, block), np.int32)
+        pos = np.zeros(batch, np.int32)
+        mask = np.zeros(batch, np.int32)
+        for b, (length, p) in enumerate(zip(lens, prompts)):
+            if length > start:
+                chunk = p[start:min(start + block, length)]
+                tokens[b, :len(chunk)] = chunk
+                pos[b] = start
+                mask[b] = 1
+        states = fn(flat, states, jnp.asarray(tokens), jnp.asarray(pos), jnp.asarray(mask))
+        dispatches += 1
+    assert dispatches == -(-max_len // block), "wave cost must be ceil(L_max/block)"
+    states = np.asarray(states)
+
+    single = state_fn(cfg, block)
+    heads, argmaxes = [], []
+    for b, (length, p) in enumerate(zip(lens, prompts)):
+        # Sequential single-lane chunked prefill of the same prompt.
+        want = jnp.zeros(state_len(cfg), jnp.float32)
+        for start in range(0, length, block):
+            chunk = p[start:min(start + block, length)]
+            padded = np.zeros(block, np.int32)
+            padded[:len(chunk)] = chunk
+            want = single(flat, want, jnp.asarray(padded), jnp.asarray(start, jnp.int32))
+        np.testing.assert_allclose(
+            states[b], np.asarray(want), rtol=rtol, atol=1e-5,
+            err_msg=f"wave lane {b} (len {length}) != sequential chunked prefill")
+        last_row = (length - 1) % block
+        rows = states[b, kvn:kvn + block * v].reshape(block, v)
+        heads.append(rows[last_row, :8].round(5).tolist())
+        argmaxes.append(int(np.argmax(rows[last_row])))
+    for b in range(len(lens), batch):
+        np.testing.assert_array_equal(
+            states[b], np.zeros(state_len(cfg), np.float32),
+            err_msg="never-dispatched lane must stay a zero state")
+    return {
+        "batch": batch,
+        "block": block,
+        "lens": lens,
+        "prompts": [p.tolist() for p in prompts],
+        "last_row_head": heads,
+        "last_row_argmax": argmaxes,
+    }
+
+
 # ---------------------------------------------------------------------------
 # Driver
 # ---------------------------------------------------------------------------
@@ -411,6 +498,12 @@ def export(train_dir: str, out_dir: str, batch_sizes=DEFAULT_BATCH_SIZES) -> Non
         # export time) and recorded per batch size for the Rust runtime test.
         golden[name]["batched"] = {
             str(b): golden_probe_batched(cfg, params, b, VERIFY_BLOCK)
+            for b in batch_sizes
+        }
+        # Ragged admission-wave prefill probe (mask semantics for mixed
+        # prompt lengths), likewise self-checking at export time.
+        golden[name]["prefill_wave"] = {
+            str(b): golden_probe_prefill_wave(cfg, params, b, PREFILL_BLOCK)
             for b in batch_sizes
         }
         print(f"[aot] packed {name} ({models[name]['params']} params)", flush=True)

@@ -161,6 +161,31 @@ def test_golden_probe_batched_self_checks():
     assert probe == again
 
 
+def test_golden_probe_prefill_wave_self_checks():
+    """Ragged-wave prefill == sequential per-lane chunked prefill, pinned
+    by the probe's own asserts (single-token, multi-chunk and
+    exact-boundary prompts; idle lanes stay zero)."""
+    params = {k: np.asarray(v) for k, v in model.init_params(TINY, seed=2).items()}
+    probe = aot.golden_probe_prefill_wave(TINY, params, batch=5, block=4)
+    assert probe["batch"] == 5 and probe["block"] == 4
+    # 1 token, 2*block+3 = 11 (multi-chunk), block (exact boundary), 2.
+    assert probe["lens"] == [1, 11, 4, 2]
+    assert [len(p) for p in probe["prompts"]] == probe["lens"]
+    assert len(probe["last_row_head"]) == 4 and len(probe["last_row_head"][0]) == 8
+    assert len(probe["last_row_argmax"]) == 4
+    # Deterministic (the Rust test replays it against the compiled exe).
+    again = aot.golden_probe_prefill_wave(TINY, params, batch=5, block=4)
+    assert probe == again
+
+
+def test_golden_probe_prefill_wave_single_lane():
+    """A width-1 wave degrades to plain chunked prefill."""
+    params = {k: np.asarray(v) for k, v in model.init_params(TINY, seed=4).items()}
+    probe = aot.golden_probe_prefill_wave(TINY, params, batch=1, block=4)
+    assert probe["lens"] == [1]
+    assert len(probe["last_row_head"]) == 1
+
+
 def test_golden_probe_deterministic():
     params = {k: np.asarray(v) for k, v in model.init_params(TINY, seed=2).items()}
     a = aot.golden_probe(TINY, params, "verify", 4)
@@ -198,5 +223,10 @@ def test_export_smoke(tmp_path):
     golden = json.load(open(os.path.join(out, "golden.json")))
     for name in ("target", "draft_base"):
         assert set(golden[name]["batched"]) == {"2"}
+        assert set(golden[name]["prefill_wave"]) == {"2"}
+        wave = golden[name]["prefill_wave"]["2"]
+        assert wave["block"] == aot.PREFILL_BLOCK
+        assert wave["lens"] == [1, 2 * aot.PREFILL_BLOCK + 3], "clipped to batch=2"
+        assert all(len(p) == L for p, L in zip(wave["prompts"], wave["lens"]))
     prompts = json.load(open(os.path.join(out, "eval_prompts.json")))
     assert set(prompts) == {"dolly", "xsum", "cnndm", "wmt"}

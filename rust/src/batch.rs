@@ -30,6 +30,16 @@
 //! (serving, deadlines, streaming) and the throughput-oriented
 //! [`crate::datagen`] (`specd distill` saturation mode — no deadlines,
 //! every slot kept full until a token budget is met).
+//!
+//! Admission runs AROUND the batch step, in the same fused regime: both
+//! drivers refill free lanes through a [`crate::spec::PrefillWave`]
+//! (chunk-lockstep batched prefill directly into arena lanes), and may
+//! slice a wave across iterations by a prefill-token budget — so one
+//! scheduler iteration is "≤ budget admission prefill tokens, then one
+//! `BatchStep` over the residents". Wave chunk dispatches mask every
+//! resident lane (state pass-through), which is why the interleaving
+//! cannot perturb resident sequences (pinned by
+//! `rust/tests/admission_integration.rs`).
 
 use std::time::Instant;
 

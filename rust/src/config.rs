@@ -58,6 +58,12 @@ pub struct RunConfig {
     pub max_slots: usize,
     /// Scheduler: bounded admission queue length (backpressure).
     pub queue_depth: usize,
+    /// Scheduler: max prompt tokens of admission prefill per scheduler
+    /// iteration (`0` = unbounded — a whole wave drains before resident
+    /// lanes run again). Bounding it interleaves chunked prefill with
+    /// speculation blocks, trading TTFT for resident-lane ITL
+    /// (Sarathi-style chunked-prefill scheduling).
+    pub prefill_budget: usize,
 }
 
 impl Default for RunConfig {
@@ -71,6 +77,7 @@ impl Default for RunConfig {
             sampling: SamplingConfig::greedy(),
             max_slots: 4,
             queue_depth: 64,
+            prefill_budget: 0,
         }
     }
 }
@@ -124,6 +131,7 @@ impl RunConfig {
                 .or_else(|| v.get("max_batch").as_usize())
                 .unwrap_or(d.max_slots),
             queue_depth: v.get("queue_depth").as_usize().unwrap_or(d.queue_depth),
+            prefill_budget: v.get("prefill_budget").as_usize().unwrap_or(d.prefill_budget),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -182,6 +190,14 @@ mod tests {
         let mut c = RunConfig::default();
         c.max_slots = 0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn from_json_prefill_budget() {
+        let c = RunConfig::from_json(&Value::parse(r#"{"prefill_budget": 64}"#).unwrap()).unwrap();
+        assert_eq!(c.prefill_budget, 64);
+        let c = RunConfig::from_json(&Value::parse("{}").unwrap()).unwrap();
+        assert_eq!(c.prefill_budget, 0, "default: unbounded admission prefill");
     }
 
     #[test]

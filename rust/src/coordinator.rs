@@ -13,6 +13,11 @@
 //!                                              │ the memory budget; exhausted
 //!                                              │ pool defers, never errors)
 //!                                              ▼
+//!                        admission WAVE: up to lanes_free queued prompts
+//!                        chunk-locksteped through the batched prefill
+//!                        entry DIRECTLY into arena lanes, ≤ prefill_budget
+//!                        prompt tokens per iteration, then
+//!                                              ▼
 //!                                   one BatchStep per iteration:
 //!                                     draft-sync sweep   (all lanes)
 //!                                     proposal round j   (all lanes, j<γ)
@@ -33,7 +38,22 @@
 //! request is admitted exactly when a slot can be allocated; each slot
 //! mirrors its sequence's length so `/metrics` can report resident KV
 //! positions. When the pool is exhausted, queued requests wait (the
-//! bounded channel provides backpressure further upstream).
+//! bounded channel provides backpressure further upstream). With a
+//! batched bundle, admission drains up to `lanes_free` queued requests
+//! per iteration into a [`crate::spec::PrefillWave`]: one fused prefill
+//! dispatch per model per chunk advances every admitted prompt at once
+//! (ragged lengths drop out of later chunks), directly over the arena
+//! lanes the sequences will decode in — a wave of N prompts costs
+//! O(ceil(L_max/block)) dispatches and ZERO pack dispatches, where the
+//! per-sequence path cost O(Σ ceil(L_i/block)) + N packs.
+//! `prefill_budget` caps the prompt tokens one iteration may prefill, so
+//! a long wave is sliced across iterations and resident lanes keep
+//! getting speculation blocks in between (chunked-prefill interleaving:
+//! the TTFT-vs-ITL trade is an explicit, metered knob). Pool capacity
+//! beyond the arena (or a pre-batched bundle) falls back to per-sequence
+//! owned-state admission. Pool errors during admission fail only the one
+//! request (lanes and slot released, error response emitted) — never the
+//! scheduler loop.
 //!
 //! Streaming: a request may carry an `events` sender; the scheduler pushes
 //! [`Delta::Started`] at admission, a [`Delta::Tokens`] after every
@@ -48,6 +68,7 @@
 //! with [`ERR_DEADLINE`] in `Response::error`, which the HTTP server maps
 //! to `408 Request Timeout`.
 
+use std::collections::VecDeque;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -59,7 +80,7 @@ use crate::exec::{Receiver, Sender};
 use crate::kvcache::{SlotId, SlotPool};
 use crate::metrics::{SchedulerGauges, ServeMetrics};
 use crate::rng::Pcg64;
-use crate::spec::{SpecDecoder, SpecSession};
+use crate::spec::{PrefillWave, SpecDecoder, SpecSession};
 
 /// `Response::error` value for deadline-evicted requests (HTTP 408).
 pub const ERR_DEADLINE: &str = "deadline exceeded";
@@ -95,7 +116,8 @@ impl Request {
 /// Incremental output event for one request (streaming mode).
 #[derive(Debug, Clone)]
 pub enum Delta {
-    /// The request left the admission queue and owns a pool slot. Lets
+    /// The request left the admission queue and its prefill started
+    /// (joined an admission wave, or began per-sequence prefill). Lets
     /// the HTTP layer distinguish a healthy-but-deep queue (no events
     /// yet) from a post-admission scheduler stall.
     Started,
@@ -155,6 +177,29 @@ impl Active {
     }
 }
 
+/// A request accepted off the channel, waiting for admission capacity.
+/// Its deadline/disconnect state is re-probed every iteration it waits,
+/// so queued work that expired or hung up never spends a prefill.
+struct Pending {
+    req: Request,
+    enqueued: Instant,
+    deadline_at: Option<Instant>,
+}
+
+impl Pending {
+    fn disconnected(&self) -> bool {
+        self.req.events.as_ref().is_some_and(|ev| !ev.is_connected())
+    }
+}
+
+/// An admission wave in flight across scheduler iterations: the engine's
+/// chunk-lockstep cursor plus the pending requests it will admit (aligned
+/// with the wave's lanes, in order).
+struct WaveInFlight {
+    wave: PrefillWave,
+    members: Vec<Pending>,
+}
+
 /// The scheduler. Owns the models (via the decoder) for its lifetime.
 pub struct Coordinator<'a> {
     decoder: SpecDecoder<'a>,
@@ -192,14 +237,28 @@ impl<'a> Coordinator<'a> {
             g.pool_max.store(pool.max_slots(), Ordering::Relaxed);
         }
         let mut active: Vec<Active> = Vec::new();
+        // Requests accepted off the channel, waiting for lane/slot
+        // capacity; re-probed for deadline/disconnect while they wait.
+        let mut pending: VecDeque<Pending> = VecDeque::new();
+        // The admission wave in flight (at most one), sliced across
+        // iterations by the prefill budget.
+        let mut wave: Option<WaveInFlight> = None;
+        let prefill_budget =
+            if self.cfg.prefill_budget == 0 { usize::MAX } else { self.cfg.prefill_budget };
+        // Checked once: a bundle that can't lockstep waves (mismatched
+        // prefill blocks) serves per-sequence instead of failing waves.
+        let wave_capable = self.decoder.wave_capable();
         let mut rx_open = true;
         let wall0 = Instant::now();
 
         loop {
-            // --- admission: allocate pool slots to queued requests -------
-            while rx_open && pool.available() > 0 {
-                let req = if active.is_empty() {
-                    // Idle: block for work (or shutdown).
+            // --- intake: accept queued requests into the pending set -----
+            // Bounded by max_slots so the channel keeps providing
+            // backpressure further upstream.
+            while rx_open && pending.len() < self.cfg.max_slots {
+                let idle = active.is_empty() && wave.is_none() && pending.is_empty();
+                let req = if idle {
+                    // Fully idle: block for work (or shutdown).
                     match rx.recv() {
                         Ok(r) => Some(r),
                         Err(_) => {
@@ -213,47 +272,163 @@ impl<'a> Coordinator<'a> {
                 let Some(req) = req else { break };
                 let enqueued = req.submitted.unwrap_or_else(Instant::now);
                 let deadline_at = req.deadline.map(|d| enqueued + d);
-                // Expired while queued: reject without spending a prefill.
-                if deadline_at.is_some_and(|d| Instant::now() >= d) {
+                pending.push_back(Pending { req, enqueued, deadline_at });
+            }
+
+            // --- pending hygiene: expired or hung-up queued requests are
+            // rejected before spending a prefill or a pool slot. In-place
+            // retain with one clock read: this runs every hot-loop
+            // iteration and must not allocate.
+            let now = Instant::now();
+            pending.retain_mut(|p| {
+                if p.deadline_at.is_some_and(|d| now >= d) {
                     metrics.timeouts += 1;
-                    let latency = enqueued.elapsed().as_secs_f64();
-                    Self::emit(
-                        &tx,
-                        &req.events,
-                        Response {
-                            id: req.id,
-                            tokens: Vec::new(),
-                            stats: Default::default(),
-                            latency,
-                            ttft: latency,
-                            error: Some(ERR_DEADLINE.to_string()),
-                        },
-                    );
-                    continue;
-                }
-                // Hung up while queued: cancel before spending the prefill
-                // (the most expensive per-request call) or a pool slot.
-                if req.events.as_ref().is_some_and(|ev| !ev.is_connected()) {
+                    Self::emit(&tx, &p.req.events, Self::pending_error(p, ERR_DEADLINE.to_string()));
+                    false
+                } else if p.disconnected() {
                     metrics.cancelled += 1;
-                    let latency = enqueued.elapsed().as_secs_f64();
-                    let _ = tx.send(Response {
-                        id: req.id,
-                        tokens: Vec::new(),
-                        stats: Default::default(),
-                        latency,
-                        ttft: latency,
-                        error: Some(ERR_DISCONNECT.to_string()),
-                    });
-                    continue;
+                    // The delta receiver is gone; only the shared response
+                    // channel observes the cancellation.
+                    let _ = tx.send(Self::pending_error(p, ERR_DISCONNECT.to_string()));
+                    false
+                } else {
+                    true
                 }
-                if let Some(ev) = &req.events {
+            });
+
+            // --- admission: fused wave over the batched prefill entry ----
+            let t_admit = Instant::now();
+            let disp0 = self.decoder.dispatch_count();
+            let (mut waves_opened, mut wave_lanes, mut admit_tokens) = (0u64, 0u64, 0usize);
+
+            if let Some(ctx) = batched.as_mut() {
+                // Open a new wave over as many pending requests as there
+                // is lane AND slot capacity for.
+                if wave_capable && wave.is_none() && !pending.is_empty() {
+                    let k = pending.len().min(ctx.available()).min(pool.available());
+                    let mut members: Vec<Pending> = Vec::with_capacity(k);
+                    let mut prompts: Vec<Vec<u32>> = Vec::with_capacity(k);
+                    while members.len() < k {
+                        let Some(p) = pending.pop_front() else { break };
+                        // Per-request validation up front: a bad prompt is
+                        // that request's failure, never the wave's.
+                        if let Err(e) = self.decoder.validate_prompt(&p.req.prompt) {
+                            Self::emit(&tx, &p.req.events, Self::pending_error(&p, e.to_string()));
+                            continue;
+                        }
+                        if let Some(ev) = &p.req.events {
+                            let _ = ev.send(Delta::Started);
+                        }
+                        metrics.queue_wait.push(p.enqueued.elapsed().as_secs_f64());
+                        prompts.push(p.req.prompt.clone());
+                        members.push(p);
+                    }
+                    if !members.is_empty() {
+                        match self.decoder.begin_wave(ctx, prompts) {
+                            Ok(w) => {
+                                waves_opened += 1;
+                                wave_lanes += members.len() as u64;
+                                metrics.prefill_waves += 1;
+                                metrics.prefill_wave_lanes += members.len();
+                                wave = Some(WaveInFlight { wave: w, members });
+                            }
+                            Err(e) => {
+                                // begin_wave allocates nothing on failure.
+                                for p in members {
+                                    Self::emit(
+                                        &tx,
+                                        &p.req.events,
+                                        Self::pending_error(&p, e.to_string()),
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+                // Advance the wave by up to `budget` prompt tokens; admit
+                // its sessions once it drains.
+                if let Some(mut wf) = wave.take() {
+                    match self.decoder.wave_step(ctx, &mut wf.wave, prefill_budget) {
+                        Ok(spent) => {
+                            admit_tokens += spent;
+                            if wf.wave.done() {
+                                match self.decoder.finish_wave(ctx, wf.wave) {
+                                    Ok(sessions) => {
+                                        for (p, mut session) in
+                                            wf.members.into_iter().zip(sessions)
+                                        {
+                                            match Self::claim_slot(
+                                                &mut pool,
+                                                p.req.id,
+                                                slot_cap,
+                                                session.prompt_len,
+                                            ) {
+                                                Ok(slot) => active.push(Self::make_active(
+                                                    p, session, slot, &self.cfg,
+                                                )),
+                                                Err(e) => {
+                                                    // Per-request failure:
+                                                    // free the lanes, keep
+                                                    // the scheduler alive.
+                                                    self.decoder.release(ctx, &mut session);
+                                                    Self::emit(
+                                                        &tx,
+                                                        &p.req.events,
+                                                        Self::pending_error(&p, e.to_string()),
+                                                    );
+                                                }
+                                            }
+                                        }
+                                    }
+                                    Err(e) => {
+                                        // finish_wave released every lane.
+                                        for p in wf.members {
+                                            Self::emit(
+                                                &tx,
+                                                &p.req.events,
+                                                Self::pending_error(&p, e.to_string()),
+                                            );
+                                        }
+                                    }
+                                }
+                            } else {
+                                wave = Some(wf);
+                            }
+                        }
+                        Err(e) => {
+                            // Wave-fatal dispatch failure: release the
+                            // lanes, fail every member request.
+                            self.decoder.abort_wave(ctx, wf.wave);
+                            for p in wf.members {
+                                Self::emit(
+                                    &tx,
+                                    &p.req.events,
+                                    Self::pending_error(&p, e.to_string()),
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+
+            // --- admission fallback: per-sequence owned prefill ----------
+            // Pre-batched or wave-incapable bundles, or pool capacity
+            // beyond the arena (extra residents run per-lane within the
+            // same batch step).
+            while !pending.is_empty()
+                && pool.available() > 0
+                && wave.is_none()
+                && (!wave_capable || !batched.as_ref().is_some_and(|c| c.available() > 0))
+            {
+                let p = pending.pop_front().expect("checked non-empty");
+                if let Some(ev) = &p.req.events {
                     let _ = ev.send(Delta::Started);
                 }
-                // Admission gather: prefill (owned state), then pack into
-                // the fused arenas when there is lane capacity. An adopt
-                // failure poisons only this session — report it like a
-                // start failure.
-                let started = self.decoder.start(&req.prompt).and_then(|mut session| {
+                metrics.queue_wait.push(p.enqueued.elapsed().as_secs_f64());
+                // Prefill (owned state), then pack into the fused arenas
+                // if a lane freed meanwhile. An adopt failure poisons only
+                // this session — report it like a start failure.
+                let started = self.decoder.start(&p.req.prompt).and_then(|mut session| {
                     if let Some(c) = batched.as_mut() {
                         if let Err(e) = self.decoder.adopt(c, &mut session) {
                             self.decoder.release(c, &mut session);
@@ -263,46 +438,50 @@ impl<'a> Coordinator<'a> {
                     Ok(session)
                 });
                 match started {
-                    Ok(session) => {
-                        let slot = pool.alloc(req.id, slot_cap)?;
-                        pool.get_mut(slot)?.advance(session.prompt_len)?;
-                        active.push(Active {
-                            id: req.id,
-                            session,
-                            sampling: req.sampling,
-                            // Engine-side ceiling: the configured budget
-                            // bounds every admitted request (the HTTP edge
-                            // clamps too).
-                            max_new: req.max_new.min(self.cfg.max_new_tokens),
-                            rng: Pcg64::with_stream(req.sampling.seed ^ req.id, 0x5e0e),
-                            enqueued,
-                            first_token: None,
-                            deadline_at,
-                            events: req.events,
-                            streamed: 0,
-                            slot,
-                        });
+                    Ok(mut session) => {
+                        admit_tokens += session.prompt_len;
+                        match Self::claim_slot(&mut pool, p.req.id, slot_cap, session.prompt_len)
+                        {
+                            Ok(slot) => {
+                                active.push(Self::make_active(p, session, slot, &self.cfg))
+                            }
+                            Err(e) => {
+                                // Per-request pool failure (was scheduler-
+                                // fatal `?` before): release and report.
+                                self.release_lanes(&mut batched, &mut session);
+                                Self::emit(
+                                    &tx,
+                                    &p.req.events,
+                                    Self::pending_error(&p, e.to_string()),
+                                );
+                            }
+                        }
                     }
                     Err(e) => {
-                        Self::emit(
-                            &tx,
-                            &req.events,
-                            Response {
-                                id: req.id,
-                                tokens: Vec::new(),
-                                stats: Default::default(),
-                                latency: enqueued.elapsed().as_secs_f64(),
-                                ttft: enqueued.elapsed().as_secs_f64(),
-                                error: Some(e.to_string()),
-                            },
-                        );
+                        Self::emit(&tx, &p.req.events, Self::pending_error(&p, e.to_string()));
                     }
                 }
             }
+
+            metrics.prefill_tokens += admit_tokens;
+            let admit_dispatches = self.decoder.dispatch_count() - disp0;
+            metrics.prefill_dispatches += admit_dispatches;
+            let admit_seconds = t_admit.elapsed().as_secs_f64();
+            metrics.phase_prefill_seconds += admit_seconds;
+            if let Some(g) = &self.gauges {
+                g.record_admission(
+                    waves_opened,
+                    wave_lanes,
+                    admit_dispatches,
+                    admit_tokens as u64,
+                    admit_seconds,
+                );
+            }
+
             // Pool exhausted with work still queued: defer admission until
             // a slot frees (the bounded request channel pushes back
             // further upstream) — never an error.
-            if rx_open && pool.available() == 0 && !rx.is_empty() {
+            if pool.available() == 0 && (!pending.is_empty() || !rx.is_empty()) {
                 metrics.admission_deferrals += 1;
                 if let Some(g) = &self.gauges {
                     g.record_deferral();
@@ -310,7 +489,7 @@ impl<'a> Coordinator<'a> {
             }
 
             if active.is_empty() {
-                if !rx_open {
+                if !rx_open && wave.is_none() && pending.is_empty() {
                     break;
                 }
                 continue;
@@ -420,7 +599,7 @@ impl<'a> Coordinator<'a> {
                 g.pool_live.store(pool.live(), Ordering::Relaxed);
                 g.pool_peak.store(pool.peak_live, Ordering::Relaxed);
                 g.resident_tokens.store(pool.resident(), Ordering::Relaxed);
-                g.queue_depth.store(rx.len(), Ordering::Relaxed);
+                g.queue_depth.store(rx.len() + pending.len(), Ordering::Relaxed);
                 g.record_iteration(&timings);
             }
         }
@@ -438,6 +617,60 @@ impl<'a> Coordinator<'a> {
     ) {
         if let Some(c) = batched.as_mut() {
             self.decoder.release(c, session);
+        }
+    }
+
+    /// Allocate a pool slot for a freshly prefilled session and mirror its
+    /// prompt length. A pool error here is a PER-REQUEST failure: the
+    /// half-claimed slot is freed and the error returned for the caller to
+    /// report on that request's channel — it must never propagate out of
+    /// the scheduler loop (which would kill the thread and leak the
+    /// already-prefilled lanes of every other in-flight request).
+    fn claim_slot(
+        pool: &mut SlotPool<u64>,
+        id: u64,
+        slot_cap: usize,
+        prompt_len: usize,
+    ) -> Result<SlotId> {
+        let slot = pool.alloc(id, slot_cap)?;
+        if let Err(e) = pool.get_mut(slot).and_then(|c| c.advance(prompt_len)) {
+            let _ = pool.free(slot);
+            return Err(e);
+        }
+        Ok(slot)
+    }
+
+    /// Promote an admitted (prefilled, slot-claimed) request to an active
+    /// scheduler lane.
+    fn make_active(p: Pending, session: SpecSession, slot: SlotId, cfg: &RunConfig) -> Active {
+        Active {
+            id: p.req.id,
+            session,
+            sampling: p.req.sampling,
+            // Engine-side ceiling: the configured budget bounds every
+            // admitted request (the HTTP edge clamps too).
+            max_new: p.req.max_new.min(cfg.max_new_tokens),
+            rng: Pcg64::with_stream(p.req.sampling.seed ^ p.req.id, 0x5e0e),
+            enqueued: p.enqueued,
+            first_token: None,
+            deadline_at: p.deadline_at,
+            events: p.req.events,
+            streamed: 0,
+            slot,
+        }
+    }
+
+    /// Terminal [`Response`] for a request that failed (or was rejected)
+    /// before owning a session.
+    fn pending_error(p: &Pending, error: String) -> Response {
+        let latency = p.enqueued.elapsed().as_secs_f64();
+        Response {
+            id: p.req.id,
+            tokens: Vec::new(),
+            stats: Default::default(),
+            latency,
+            ttft: latency,
+            error: Some(error),
         }
     }
 
@@ -490,5 +723,27 @@ mod tests {
         let r = Request::new(7, vec![1, 2], 16, SamplingConfig::greedy());
         assert!(r.deadline.is_none() && r.submitted.is_none() && r.events.is_none());
         assert_eq!(r.id, 7);
+    }
+
+    /// Regression (PR 5 satellite): a pool error while admitting one
+    /// request must be a per-request failure. The old admission arm did
+    /// `pool.alloc(..)?` / `pool.get_mut(..)?.advance(..)?`, so a pool
+    /// error after a successful adopt killed the whole scheduler thread
+    /// and leaked the adopted lane; `claim_slot` is the conversion point.
+    #[test]
+    fn claim_slot_pool_errors_are_per_request_and_leak_free() {
+        let mut pool: SlotPool<u64> = SlotPool::new(1);
+        // Prompt longer than the slot cap: error surfaces to the caller,
+        // and the half-claimed slot is freed again (no leak).
+        assert!(Coordinator::claim_slot(&mut pool, 7, 4, 10).is_err());
+        assert_eq!(pool.live(), 0, "half-claimed slot must be freed");
+        assert_eq!(pool.available(), 1);
+        // A well-formed claim right after succeeds and mirrors the length.
+        let slot = Coordinator::claim_slot(&mut pool, 7, 16, 10).unwrap();
+        assert_eq!(pool.get(slot).unwrap().len(), 10);
+        // Exhausted pool: error, existing slot untouched.
+        assert!(Coordinator::claim_slot(&mut pool, 8, 16, 1).is_err());
+        assert_eq!(pool.live(), 1);
+        assert_eq!(pool.get(slot).unwrap().len(), 10);
     }
 }

@@ -7,7 +7,12 @@
 //! the paper's OOD protocol) until a response-token budget is met, running
 //! the same lockstep [`BatchStep`] the server uses — including the fused
 //! `[B, T]` dispatch path when the bundle exports batched entry points —
-//! so per-phase dispatch behaviour carries over unchanged.
+//! so per-phase dispatch behaviour carries over unchanged. Admission is
+//! fused the same way the serving coordinator's is: free slots are
+//! refilled by a batched seed wave ([`crate::spec::PrefillWave`] —
+//! chunk-lockstep prefill directly into arena lanes, zero packs),
+//! optionally sliced by `prefill_budget` so resident lanes keep emitting
+//! while long seed prompts prefill.
 //!
 //! Each finished sequence becomes one [`DistillRecord`]: seed prompt,
 //! target-verified response, and the target's top-k raw logits per
@@ -60,6 +65,11 @@ pub struct DistillConfig {
     pub max_new: usize,
     /// KV slot-pool capacity (resident sequences — the memory budget).
     pub max_slots: usize,
+    /// Max prompt tokens of admission prefill per scheduler iteration
+    /// (`0` = unbounded). Bounding it interleaves admission-wave chunks
+    /// with speculation blocks so resident lanes keep emitting while a
+    /// long seed wave prefills.
+    pub prefill_budget: usize,
     pub records_per_shard: usize,
     pub seed: u64,
     pub out_dir: String,
@@ -79,6 +89,7 @@ impl Default for DistillConfig {
             topk: 8,
             max_new: 64,
             max_slots: 4,
+            prefill_budget: 0,
             records_per_shard: 256,
             seed: 0,
             out_dir: "shards".to_string(),
@@ -166,13 +177,75 @@ pub fn run_distill(
     // fast, same policy as generation failures).
     let mut batched = decoder.batched_ctx()?;
     let mut active: Vec<GenLane> = Vec::new();
+    // The seed wave in flight (at most one), sliced across iterations by
+    // the prefill budget; seeds are drawn when the wave opens so the
+    // deterministic stream position always matches the drawn work.
+    let mut wave: Option<(crate::spec::PrefillWave, Vec<SeedPrompt>)> = None;
+    let prefill_budget =
+        if cfg.prefill_budget == 0 { usize::MAX } else { cfg.prefill_budget };
+    // Checked once: a bundle that can't lockstep waves (mismatched
+    // prefill blocks) admits per-seed instead of failing waves.
+    let wave_capable = decoder.wave_capable();
     let wall0 = Instant::now();
 
     loop {
         // --- admission: saturate the pool while the budget is unmet ------
-        while total_tokens < cfg.token_budget && pool.available() > 0 {
+        // Fused path: draw up to min(free slots, free lanes) seeds and
+        // chunk-lockstep all of their prompts through the batched prefill
+        // entry directly into arena lanes (zero packs, zero owned-state
+        // round-trips). Errors abort the run (fail fast, same policy as
+        // generation failures; the resume path regenerates the tail).
+        let t_admit = Instant::now();
+        let disp0 = decoder.dispatch_count();
+        let mut admit_tokens = 0usize;
+        if let Some(c) = batched.as_mut() {
+            if wave_capable && wave.is_none() && total_tokens < cfg.token_budget {
+                let k = pool.available().min(c.available());
+                if k > 0 {
+                    let sps: Vec<SeedPrompt> = (0..k).map(|_| stream.next_prompt()).collect();
+                    let prompts: Vec<Vec<u32>> = sps.iter().map(|s| s.prompt.clone()).collect();
+                    let w = decoder.begin_wave(c, prompts)?;
+                    metrics.prefill_waves += 1;
+                    metrics.prefill_wave_lanes += k;
+                    wave = Some((w, sps));
+                }
+            }
+            if let Some((mut w, sps)) = wave.take() {
+                match decoder.wave_step(c, &mut w, prefill_budget) {
+                    Ok(spent) => admit_tokens += spent,
+                    Err(e) => {
+                        decoder.abort_wave(c, w);
+                        return Err(e);
+                    }
+                }
+                if w.done() {
+                    for (mut session, sp) in decoder.finish_wave(c, w)?.into_iter().zip(sps) {
+                        session.enable_capture(topk);
+                        let slot = pool.alloc(sp.index, slot_cap)?;
+                        pool.get_mut(slot)?.advance(session.prompt_len)?;
+                        let sampling = SamplingConfig {
+                            temperature: sp.temperature,
+                            top_p: cfg.top_p,
+                            seed: sp.sampling_seed,
+                        };
+                        let rng = Pcg64::with_stream(sp.sampling_seed, 0xd157);
+                        active.push(GenLane { sp, session, sampling, rng, slot });
+                    }
+                } else {
+                    wave = Some((w, sps));
+                }
+            }
+        }
+        // Per-seed fallback: pre-batched bundles, or pool capacity beyond
+        // the arena (extra residents run per-lane).
+        while total_tokens < cfg.token_budget
+            && pool.available() > 0
+            && wave.is_none()
+            && (!wave_capable || !batched.as_ref().is_some_and(|c| c.available() > 0))
+        {
             let sp = stream.next_prompt();
             let mut session = decoder.start(&sp.prompt)?;
+            admit_tokens += session.prompt_len;
             session.enable_capture(topk);
             if let Some(c) = batched.as_mut() {
                 decoder.adopt(c, &mut session)?;
@@ -187,8 +260,15 @@ pub fn run_distill(
             let rng = Pcg64::with_stream(sp.sampling_seed, 0xd157);
             active.push(GenLane { sp, session, sampling, rng, slot });
         }
+        metrics.prefill_tokens += admit_tokens;
+        metrics.prefill_dispatches += decoder.dispatch_count() - disp0;
+        metrics.phase_prefill_seconds += t_admit.elapsed().as_secs_f64();
+
         if active.is_empty() {
-            break; // budget met and every lane drained
+            if wave.is_none() {
+                break; // budget met and every lane drained
+            }
+            continue; // wave still prefilling (budget-sliced)
         }
 
         // --- one lockstep batch step across all lanes --------------------

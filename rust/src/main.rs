@@ -61,6 +61,11 @@ fn run() -> Result<()> {
         .opt("max-slots", "4", "serve/replay: KV slot pool size (resident sequences)")
         .alias("max-batch", "max-slots")
         .opt("queue-depth", "64", "serve/replay: admission queue length")
+        .opt("prefill-budget", "0",
+             "serve/replay/distill: admission prefill tokens per scheduler iteration \
+              (0 = unbounded; bounding interleaves chunked prefill with decode)")
+        .opt("len-mix", "",
+             "replay: len:weight prompt-length mixture (e.g. 8:0.7,96:0.3; '' = natural)")
         .opt("addr", "127.0.0.1:8080", "serve: HTTP bind address")
         .opt("http-workers", "8", "serve: connection handler threads")
         .opt("timeout-ms", "0", "serve: default per-request deadline (0 = none)")
@@ -190,6 +195,7 @@ fn serve_http(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
         sampling: SamplingConfig::for_task(args.str("task"), args.u64("seed")?),
         max_slots: args.usize("max-slots")?,
         queue_depth: args.usize("queue-depth")?,
+        prefill_budget: args.usize("prefill-budget")?,
     };
     run_cfg.validate()?;
 
@@ -262,12 +268,18 @@ fn replay(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
         sampling: SamplingConfig::for_task(args.str("task"), args.u64("seed")?),
         max_slots: args.usize("max-slots")?,
         queue_depth: args.usize("queue-depth")?,
+        prefill_budget: args.usize("prefill-budget")?,
     };
     let trace_cfg = TraceConfig {
         rate: args.f64("rate")?,
         n_requests: args.usize("requests")?,
         max_new: args.usize("max-new")?,
         seed: args.u64("seed")?,
+        prompt_len_mix: if args.str("len-mix").is_empty() {
+            Vec::new()
+        } else {
+            specd::workload::parse_len_mix(args.str("len-mix"))?
+        },
         ..Default::default()
     };
     let trace = build_trace(&l.suite, &trace_cfg)?;
@@ -337,6 +349,7 @@ fn distill(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
         topk: args.usize("topk")?,
         max_new: args.usize("max-new")?,
         max_slots: args.usize("max-slots")?,
+        prefill_budget: args.usize("prefill-budget")?,
         records_per_shard: args.usize("shard-records")?,
         seed: args.u64("seed")?,
         out_dir: args.str("out").to_string(),

@@ -167,6 +167,23 @@ pub struct ServeMetrics {
     pub admission_deferrals: usize,
     /// High-water mark of live slots in the scheduler's KV pool.
     pub pool_peak_slots: usize,
+    /// Fused admission waves executed (batched direct-to-lane prefill).
+    pub prefill_waves: usize,
+    /// Lanes admitted through fused waves (`/ prefill_waves` = mean wave
+    /// width; requests admitted per-lane as fallback are not counted).
+    pub prefill_wave_lanes: usize,
+    /// PJRT executable launches issued by admission prefill (wave and
+    /// per-lane fallback alike). A wave of N ragged prompts costs
+    /// O(ceil(L_max/block)) fused dispatches; the pre-wave path cost
+    /// O(Σ ceil(L_i/block)) + N packs.
+    pub prefill_dispatches: u64,
+    /// Prompt tokens prefilled at admission.
+    pub prefill_tokens: usize,
+    /// Wall seconds in the admission-prefill phase.
+    pub phase_prefill_seconds: f64,
+    /// Windowed per-request queue-wait samples, seconds (enqueue → the
+    /// request's prefill starting).
+    pub queue_wait: Vec<f64>,
 }
 
 impl ServeMetrics {
@@ -202,6 +219,23 @@ impl ServeMetrics {
         }
     }
 
+    pub fn queue_wait_stats(&self) -> Option<Stats> {
+        if self.queue_wait.is_empty() {
+            None
+        } else {
+            Some(Stats::from(self.queue_wait.clone()))
+        }
+    }
+
+    /// Mean lanes per fused admission wave (0 with no waves).
+    pub fn mean_wave_lanes(&self) -> f64 {
+        if self.prefill_waves == 0 {
+            0.0
+        } else {
+            self.prefill_wave_lanes as f64 / self.prefill_waves as f64
+        }
+    }
+
     /// Mean lanes emitting per batch step (0 with no iterations).
     pub fn batch_occupancy(&self) -> f64 {
         if self.batch_iterations == 0 {
@@ -228,7 +262,8 @@ impl ServeMetrics {
     pub fn merge(&mut self, other: &ServeMetrics) {
         self.request_latency.extend_from_slice(&other.request_latency);
         self.ttft.extend_from_slice(&other.ttft);
-        for v in [&mut self.request_latency, &mut self.ttft] {
+        self.queue_wait.extend_from_slice(&other.queue_wait);
+        for v in [&mut self.request_latency, &mut self.ttft, &mut self.queue_wait] {
             if v.len() > LATENCY_WINDOW {
                 v.drain(..v.len() - LATENCY_WINDOW);
             }
@@ -248,6 +283,11 @@ impl ServeMetrics {
         self.batched_lane_steps += other.batched_lane_steps;
         self.admission_deferrals += other.admission_deferrals;
         self.pool_peak_slots = self.pool_peak_slots.max(other.pool_peak_slots);
+        self.prefill_waves += other.prefill_waves;
+        self.prefill_wave_lanes += other.prefill_wave_lanes;
+        self.prefill_dispatches += other.prefill_dispatches;
+        self.prefill_tokens += other.prefill_tokens;
+        self.phase_prefill_seconds += other.phase_prefill_seconds;
     }
 
     /// Render in Prometheus text exposition format (`GET /metrics`).
@@ -282,7 +322,7 @@ impl ServeMetrics {
         // from per-request responses and never populates them — omitting
         // empty families there avoids misleading always-zero series next to
         // the real `specd_sched_*` gauges.
-        if self.batch_iterations > 0 {
+        if self.batch_iterations > 0 || self.prefill_waves > 0 {
             prom_counter(&mut s, "specd_batch_iterations_total",
                          "Lockstep batch steps executed by the scheduler.",
                          self.batch_iterations as f64);
@@ -309,6 +349,20 @@ impl ServeMetrics {
                          self.admission_deferrals as f64);
             prom_gauge(&mut s, "specd_pool_peak_slots",
                        "High-water mark of live KV pool slots.", self.pool_peak_slots as f64);
+            prom_counter(&mut s, "specd_prefill_waves_total",
+                         "Fused batched admission waves executed.", self.prefill_waves as f64);
+            prom_counter(&mut s, "specd_prefill_wave_lanes_total",
+                         "Lanes admitted through fused waves.", self.prefill_wave_lanes as f64);
+            prom_counter(&mut s, "specd_prefill_dispatches_total",
+                         "PJRT executable launches issued by admission prefill.",
+                         self.prefill_dispatches as f64);
+            prom_counter(&mut s, "specd_prefill_tokens_total",
+                         "Prompt tokens prefilled at admission.", self.prefill_tokens as f64);
+            prom_counter(&mut s, "specd_prefill_seconds_total",
+                         "Wall seconds in the admission-prefill phase.",
+                         self.phase_prefill_seconds);
+            prom_gauge(&mut s, "specd_prefill_mean_wave_lanes",
+                       "Mean lanes per fused admission wave.", self.mean_wave_lanes());
         }
 
         let mut summary = |name: &str, help: &str, stats: &Option<Stats>| {
@@ -326,12 +380,15 @@ impl ServeMetrics {
         summary("specd_request_latency_seconds", "End-to-end request latency.",
                 &self.latency_stats());
         summary("specd_ttft_seconds", "Time to first token.", &self.ttft_stats());
+        summary("specd_prefill_queue_wait_seconds",
+                "Admission-queue wait (enqueue to prefill start).", &self.queue_wait_stats());
         s
     }
 
     pub fn report(&self) -> String {
         let lat = self.latency_stats();
         let ttft = self.ttft_stats();
+        let wait = self.queue_wait_stats();
         let fmt = |s: &Option<Stats>, f: fn(&Stats) -> f64| {
             s.as_ref().map(|s| format!("{:.1}ms", f(s) * 1e3)).unwrap_or_else(|| "-".into())
         };
@@ -339,9 +396,11 @@ impl ServeMetrics {
             "requests={} tokens={} wall={:.2}s throughput={:.1} tok/s ({:.2} req/s)\n\
              latency p50={} p90={} p99={} | ttft p50={} p90={}\n\
              block_efficiency={:.3} acceptance={:.3}\n\
-             phases: draft_sync={:.2}s propose={:.2}s verify={:.2}s over {} steps \
+             phases: prefill={:.2}s draft_sync={:.2}s propose={:.2}s verify={:.2}s over {} steps \
              | pool peak={} deferrals={}\n\
-             dispatch: {} total ({:.1}/step) occupancy={:.2} fused_lane_steps={}/{}",
+             dispatch: {} total ({:.1}/step) occupancy={:.2} fused_lane_steps={}/{}\n\
+             admission: waves={} (mean {:.1} lanes) prefill_tokens={} \
+             prefill_dispatches={} queue_wait p50={} p90={}",
             self.total_requests,
             self.total_new_tokens,
             self.wall_seconds,
@@ -354,6 +413,7 @@ impl ServeMetrics {
             fmt(&ttft, |s| s.p90),
             self.spec.block_efficiency(),
             self.spec.acceptance_rate(),
+            self.phase_prefill_seconds,
             self.phase_draft_sync_seconds,
             self.phase_propose_seconds,
             self.phase_verify_seconds,
@@ -365,6 +425,12 @@ impl ServeMetrics {
             self.batch_occupancy(),
             self.batched_lane_steps,
             self.lane_steps,
+            self.prefill_waves,
+            self.mean_wave_lanes(),
+            self.prefill_tokens,
+            self.prefill_dispatches,
+            fmt(&wait, |s| s.p50),
+            fmt(&wait, |s| s.p90),
         )
     }
 }
@@ -399,6 +465,14 @@ pub struct DistillMetrics {
     pub lane_steps: usize,
     pub batched_lane_steps: usize,
     pub pool_peak_slots: usize,
+    /// Fused admission waves executed, and lanes admitted through them.
+    pub prefill_waves: usize,
+    pub prefill_wave_lanes: usize,
+    /// PJRT launches / prompt tokens / wall seconds spent in admission
+    /// prefill (wave and per-seed fallback alike).
+    pub prefill_dispatches: u64,
+    pub prefill_tokens: usize,
+    pub phase_prefill_seconds: f64,
     pub spec: SpecStats,
 }
 
@@ -453,6 +527,17 @@ impl DistillMetrics {
         prom_counter(&mut s, "specd_distill_batched_lane_steps_total",
                      "Lane-blocks served by fused batched dispatch.",
                      self.batched_lane_steps as f64);
+        prom_counter(&mut s, "specd_distill_prefill_waves_total",
+                     "Fused batched admission waves executed.", self.prefill_waves as f64);
+        prom_counter(&mut s, "specd_distill_prefill_wave_lanes_total",
+                     "Lanes admitted through fused waves.", self.prefill_wave_lanes as f64);
+        prom_counter(&mut s, "specd_distill_prefill_dispatches_total",
+                     "PJRT executable launches issued by admission prefill.",
+                     self.prefill_dispatches as f64);
+        prom_counter(&mut s, "specd_distill_prefill_tokens_total",
+                     "Prompt tokens prefilled at admission.", self.prefill_tokens as f64);
+        prom_counter(&mut s, "specd_distill_prefill_seconds_total",
+                     "Wall seconds in the admission-prefill phase.", self.phase_prefill_seconds);
         prom_gauge(&mut s, "specd_distill_batch_occupancy",
                    "Mean lanes emitting per batch step.", self.batch_occupancy());
         prom_gauge(&mut s, "specd_distill_tokens_per_sec",
@@ -467,8 +552,10 @@ impl DistillMetrics {
             "distill: sequences={} (+{} resumed) tokens={} wall={:.2}s throughput={:.1} tok/s\n\
              shards={} ({} bytes) capture={:.2}s ({:.1}% of wall)\n\
              block_efficiency={:.3} acceptance={:.3}\n\
-             phases: draft_sync={:.2}s propose={:.2}s verify={:.2}s over {} steps | pool peak={}\n\
-             dispatch: {} total occupancy={:.2} fused_lane_steps={}/{}",
+             phases: prefill={:.2}s draft_sync={:.2}s propose={:.2}s verify={:.2}s \
+             over {} steps | pool peak={}\n\
+             dispatch: {} total occupancy={:.2} fused_lane_steps={}/{}\n\
+             admission: waves={} ({} lanes) prefill_tokens={} prefill_dispatches={}",
             self.sequences,
             self.resumed_records,
             self.response_tokens,
@@ -480,6 +567,7 @@ impl DistillMetrics {
             self.capture_overhead() * 100.0,
             self.spec.block_efficiency(),
             self.spec.acceptance_rate(),
+            self.phase_prefill_seconds,
             self.phase_draft_sync_seconds,
             self.phase_propose_seconds,
             self.phase_verify_seconds,
@@ -489,6 +577,10 @@ impl DistillMetrics {
             self.batch_occupancy(),
             self.batched_lane_steps,
             self.lane_steps,
+            self.prefill_waves,
+            self.prefill_wave_lanes,
+            self.prefill_tokens,
+            self.prefill_dispatches,
         )
     }
 }
@@ -524,6 +616,15 @@ pub struct SchedulerGauges {
     batched_lane_steps: AtomicU64,
     /// Lanes that emitted in the most recent step (live occupancy gauge).
     pub last_occupancy: AtomicUsize,
+    /// Admission-prefill accounting: fused waves, lanes admitted through
+    /// them, PJRT launches, prompt tokens, wall microseconds.
+    prefill_waves: AtomicU64,
+    prefill_wave_lanes: AtomicU64,
+    prefill_dispatches: AtomicU64,
+    prefill_tokens: AtomicU64,
+    prefill_us: AtomicU64,
+    /// Width of the most recently opened wave (live gauge).
+    pub last_wave_lanes: AtomicUsize,
 }
 
 impl SchedulerGauges {
@@ -544,6 +645,27 @@ impl SchedulerGauges {
     /// (the coordinator's own aggregate only surfaces at shutdown).
     pub fn record_deferral(&self) {
         self.deferrals.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fold one scheduler iteration's admission-phase accounting: waves
+    /// opened, lanes admitted through them, prefill dispatches/tokens and
+    /// wall seconds spent.
+    pub fn record_admission(
+        &self,
+        waves: u64,
+        wave_lanes: u64,
+        dispatches: u64,
+        tokens: u64,
+        seconds: f64,
+    ) {
+        self.prefill_waves.fetch_add(waves, Ordering::Relaxed);
+        self.prefill_wave_lanes.fetch_add(wave_lanes, Ordering::Relaxed);
+        self.prefill_dispatches.fetch_add(dispatches, Ordering::Relaxed);
+        self.prefill_tokens.fetch_add(tokens, Ordering::Relaxed);
+        self.prefill_us.fetch_add((seconds * 1e6) as u64, Ordering::Relaxed);
+        if waves > 0 {
+            self.last_wave_lanes.store(wave_lanes as usize, Ordering::Relaxed);
+        }
     }
 
     /// Render the scheduler families in Prometheus text format.
@@ -578,6 +700,24 @@ impl SchedulerGauges {
         prom_counter(&mut s, "specd_sched_admission_deferrals_total",
                      "Iterations with queued work deferred on an exhausted slot pool.",
                      self.deferrals.load(Ordering::Relaxed) as f64);
+        prom_counter(&mut s, "specd_sched_prefill_waves_total",
+                     "Fused batched admission waves executed.",
+                     self.prefill_waves.load(Ordering::Relaxed) as f64);
+        prom_counter(&mut s, "specd_sched_prefill_wave_lanes_total",
+                     "Lanes admitted through fused waves.",
+                     self.prefill_wave_lanes.load(Ordering::Relaxed) as f64);
+        prom_counter(&mut s, "specd_sched_prefill_dispatches_total",
+                     "PJRT executable launches issued by admission prefill.",
+                     self.prefill_dispatches.load(Ordering::Relaxed) as f64);
+        prom_counter(&mut s, "specd_sched_prefill_tokens_total",
+                     "Prompt tokens prefilled at admission.",
+                     self.prefill_tokens.load(Ordering::Relaxed) as f64);
+        prom_counter(&mut s, "specd_sched_prefill_seconds_total",
+                     "Wall seconds in the admission-prefill phase.",
+                     self.prefill_us.load(Ordering::Relaxed) as f64 / 1e6);
+        prom_gauge(&mut s, "specd_sched_last_wave_lanes",
+                   "Width of the most recently opened admission wave.",
+                   self.last_wave_lanes.load(Ordering::Relaxed) as f64);
         prom_counter(&mut s, "specd_sched_phase_draft_sync_seconds_total",
                      "Wall seconds in the draft-sync phase.",
                      self.phase_draft_sync_us.load(Ordering::Relaxed) as f64 / 1e6);
@@ -712,12 +852,24 @@ mod tests {
         a.dispatches = 20;
         a.lane_steps = 6;
         a.batched_lane_steps = 6;
+        a.prefill_waves = 2;
+        a.prefill_wave_lanes = 6;
+        a.prefill_dispatches = 8;
+        a.prefill_tokens = 96;
+        a.phase_prefill_seconds = 0.125;
+        a.queue_wait = vec![0.01, 0.03];
         let mut b = ServeMetrics::default();
         b.batch_iterations = 1;
         b.phase_draft_sync_seconds = 0.25;
         b.pool_peak_slots = 2;
         b.dispatches = 10;
         b.lane_steps = 3;
+        b.prefill_waves = 1;
+        b.prefill_wave_lanes = 2;
+        b.prefill_dispatches = 4;
+        b.prefill_tokens = 32;
+        b.phase_prefill_seconds = 0.125;
+        b.queue_wait = vec![0.02];
         a.merge(&b);
         assert_eq!(a.batch_iterations, 3);
         assert!((a.phase_draft_sync_seconds - 0.75).abs() < 1e-12);
@@ -727,6 +879,13 @@ mod tests {
         assert_eq!(a.batched_lane_steps, 6);
         assert!((a.batch_occupancy() - 3.0).abs() < 1e-12);
         assert!((a.dispatches_per_step() - 10.0).abs() < 1e-12);
+        assert_eq!(a.prefill_waves, 3);
+        assert_eq!(a.prefill_wave_lanes, 8);
+        assert_eq!(a.prefill_dispatches, 12);
+        assert_eq!(a.prefill_tokens, 128);
+        assert!((a.phase_prefill_seconds - 0.25).abs() < 1e-12);
+        assert_eq!(a.queue_wait.len(), 3, "queue-wait samples merge (windowed)");
+        assert!((a.mean_wave_lanes() - 8.0 / 3.0).abs() < 1e-12);
         let text = a.prometheus_text();
         assert!(text.contains("specd_phase_draft_sync_seconds_total 0.75"));
         assert!(text.contains("specd_phase_verify_seconds_total 1.5"));
@@ -738,10 +897,35 @@ mod tests {
         assert!(text.contains("specd_batched_lane_steps_total 6"));
         assert!(text.contains("specd_batch_occupancy 3"));
         assert!(text.contains("specd_dispatches_per_step 10"));
+        assert!(text.contains("specd_prefill_waves_total 3"));
+        assert!(text.contains("specd_prefill_wave_lanes_total 8"));
+        assert!(text.contains("specd_prefill_dispatches_total 12"));
+        assert!(text.contains("specd_prefill_tokens_total 128"));
+        assert!(text.contains("specd_prefill_seconds_total 0.25"));
+        assert!(text.contains("specd_prefill_queue_wait_seconds{quantile=\"0.5\"} 0.02"));
         let report = a.report();
         assert!(report.contains("pool peak=3"), "report: {report}");
         assert!(report.contains("occupancy=3.00"), "report: {report}");
         assert!(report.contains("fused_lane_steps=6/9"), "report: {report}");
+        assert!(report.contains("waves=3 (mean 2.7 lanes)"), "report: {report}");
+        assert!(report.contains("prefill_tokens=128"), "report: {report}");
+    }
+
+    #[test]
+    fn prefill_families_render_without_batch_iterations() {
+        // An aggregate that only admitted (no speculation block ran yet)
+        // must still expose the admission families.
+        let mut m = ServeMetrics::default();
+        m.prefill_waves = 1;
+        m.prefill_wave_lanes = 4;
+        m.prefill_tokens = 64;
+        let text = m.prometheus_text();
+        assert!(text.contains("specd_prefill_waves_total 1"));
+        assert!(text.contains("specd_prefill_mean_wave_lanes 4"));
+        // And an empty aggregate (HTTP live view) still omits them.
+        let empty = ServeMetrics::default().prometheus_text();
+        assert!(!empty.contains("specd_prefill_waves_total"));
+        assert!(empty.contains("specd_prefill_queue_wait_seconds_count 0"));
     }
 
     #[test]
@@ -770,6 +954,8 @@ mod tests {
         g.record_iteration(&t1);
         g.record_iteration(&t2);
         g.record_deferral();
+        g.record_admission(1, 3, 6, 64, 0.5);
+        g.record_admission(0, 0, 2, 16, 0.25); // wave-less iteration keeps the gauge
         let text = g.prometheus_text();
         assert!(text.contains("specd_sched_pool_live_slots 3"));
         assert!(text.contains("specd_sched_pool_max_slots 4"));
@@ -782,6 +968,12 @@ mod tests {
         assert!(text.contains("specd_sched_lane_steps_total 7"));
         assert!(text.contains("specd_sched_batched_lane_steps_total 4"));
         assert!(text.contains("specd_sched_batch_occupancy 3"), "last step's occupancy");
+        assert!(text.contains("specd_sched_prefill_waves_total 1"));
+        assert!(text.contains("specd_sched_prefill_wave_lanes_total 3"));
+        assert!(text.contains("specd_sched_prefill_dispatches_total 8"));
+        assert!(text.contains("specd_sched_prefill_tokens_total 80"));
+        assert!(text.contains("specd_sched_prefill_seconds_total 0.75"));
+        assert!(text.contains("specd_sched_last_wave_lanes 3"), "wave-less iterations keep it");
         // Families must not collide with the ServeMetrics exposition.
         for line in text.lines().filter(|l| !l.starts_with('#')) {
             assert!(line.starts_with("specd_sched_"), "bad family: {line}");

@@ -18,11 +18,17 @@
 //! `fn(params.., states[B, state_len], tokens[B, T], pos[B],
 //! active_mask[B]) -> states'` per entry, a batched logits extractor, and
 //! a `pack` entry that writes one state vector over one lane. The
-//! [`StateArena`] holds B sequence states in ONE device buffer; sequences
-//! are packed in on admission ([`Model::pack_lane`]), lanes are recycled
-//! through a free list, and one [`Model::run_lanes`] call advances every
-//! active lane in a single PJRT dispatch (masked lanes pass through
-//! bit-for-bit). Host staging for tokens/pos/mask and the logits readback
+//! [`StateArena`] holds B sequence states in ONE device buffer; lanes are
+//! recycled through a free list, and one [`Model::run_lanes`] call
+//! advances every active lane in a single PJRT dispatch (masked lanes
+//! pass through bit-for-bit). Admission prefills **directly into a lane**
+//! (`crate::spec`'s batched admission wave runs the batched prefill entry
+//! from `pos = 0` over a freshly allocated lane — no owned-state
+//! allocation, no host round-trip, no pack dispatch; stale KV from the
+//! previous occupant is unreachable under the position-masked attention
+//! contract, and each entry overwrites the logits region it reads).
+//! [`Model::pack_lane`] remains for gathering an already-owned state into
+//! a lane. Host staging for tokens/pos/mask and the logits readback
 //! scratch live in the arena and are reused across calls, so the batched
 //! hot path performs no per-call heap allocation.
 //!
@@ -508,9 +514,24 @@ pub struct StateArena {
 impl StateArena {
     /// Logits rows of one lane after the last [`Model::run_lanes`] call:
     /// `n_tokens * vocab` floats starting at that lane's row 0.
+    ///
+    /// Every readback downloads ALL B lanes' logits regions of the
+    /// *current* arena state, and masked lanes pass through bit-for-bit —
+    /// so a lane's last-written rows stay readable across later dispatches
+    /// that do not call it. The batched admission wave relies on this:
+    /// a lane whose (ragged) prompt ends at chunk c still exposes its
+    /// final chunk's rows after the wave's longest prompt finishes at
+    /// chunk c' > c.
     pub fn lane_logits(&self, lane: usize, n_tokens: usize, vocab: usize) -> &[f32] {
         let base = lane * self.stride + self.logits_off;
         &self.scratch[base..base + n_tokens * vocab]
+    }
+
+    /// The logits row of one lane's token `row` (0-based within the rows
+    /// written by that lane's most recent dispatch): `vocab` floats.
+    pub fn lane_row(&self, lane: usize, row: usize, vocab: usize) -> &[f32] {
+        let base = lane * self.stride + self.logits_off + row * vocab;
+        &self.scratch[base..base + vocab]
     }
 }
 

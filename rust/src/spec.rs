@@ -32,12 +32,33 @@
 //! [`BatchedCtx`] (one [`StateArena`] per model) turns each lockstep
 //! phase into a SINGLE PJRT dispatch over every adopted lane:
 //! [`SpecDecoder::begin_block_batch`], [`SpecDecoder::propose_round_batch`]
-//! and [`SpecDecoder::commit_block_batch`]. Sessions are adopted into the
-//! arenas at admission ([`SpecDecoder::adopt`] packs their prefilled state
-//! over a recycled lane) and release their lanes on every exit path
-//! ([`SpecDecoder::release`]). Each lane's RNG is consumed in exactly the
-//! single-sequence order (γ proposal samples, then the verification
-//! draws), so fused output token-matches the direct engine.
+//! and [`SpecDecoder::commit_block_batch`]. Sessions release their lanes
+//! on every exit path ([`SpecDecoder::release`]). Each lane's RNG is
+//! consumed in exactly the single-sequence order (γ proposal samples,
+//! then the verification draws), so fused output token-matches the
+//! direct engine.
+//!
+//! ## Batched admission waves (direct-to-lane prefill)
+//!
+//! Admission is fused too: a [`PrefillWave`] chunk-locksteps N queued
+//! prompts through the batched PREFILL entry *directly into freshly
+//! allocated arena lanes* ([`SpecDecoder::begin_wave`] →
+//! [`SpecDecoder::wave_step`] → [`SpecDecoder::finish_wave`], or the
+//! one-shot [`SpecDecoder::admit_wave`]). Ragged prompt lengths are
+//! handled by the per-lane `pos[B]`/`active_mask[B]` contract: a lane
+//! drops out of the dispatch once its prompt is exhausted and its state
+//! (final-chunk logits rows included) passes through bit-for-bit until
+//! the wave drains. Admitting N prompts therefore costs
+//! O(ceil(L_max / prefill_block)) fused dispatches per model instead of
+//! O(Σ ceil(L_i / prefill_block)) sequential ones — and ZERO pack
+//! dispatches, no owned-state allocation and no full-state host
+//! round-trip (the pre-wave path was prefill-owned-then-pack via
+//! [`SpecDecoder::start`] + [`SpecDecoder::adopt`], which remains the
+//! fallback when the arenas are full or the bundle is per-lane only).
+//! [`SpecDecoder::wave_step`] takes a token budget so drivers can
+//! interleave bounded slices of admission prefill with speculation
+//! blocks for resident lanes (Sarathi-style chunked prefill: the
+//! TTFT-vs-ITL trade-off becomes an explicit knob).
 //!
 //! The engine is single-sequence; the [`crate::coordinator`] interleaves
 //! many sessions over it (iteration-level scheduling).
@@ -201,6 +222,64 @@ impl BatchedCtx {
     }
 }
 
+/// One prompt's slice of an in-flight admission wave: the prompt and the
+/// two arena lanes (draft + target) it prefills into, allocated up front
+/// so the wave owns its capacity for its whole lifetime.
+struct WaveEntry {
+    prompt: Vec<u32>,
+    d_lane: usize,
+    t_lane: usize,
+}
+
+/// An in-flight **batched admission wave**: N queued prompts
+/// chunk-locksteped through the batched PREFILL entry directly into
+/// arena lanes. All wave prompts start at position 0, so one shared
+/// cursor drives the lockstep; a lane whose (shorter) prompt is
+/// exhausted simply drops out of later dispatches and its state — final
+/// logits rows included — passes through untouched until the wave
+/// drains. Created by [`SpecDecoder::begin_wave`], advanced by
+/// [`SpecDecoder::wave_step`] (budgeted, resumable across scheduler
+/// iterations), consumed by [`SpecDecoder::finish_wave`]; on any
+/// dispatch error the wave must be released via
+/// [`SpecDecoder::abort_wave`] or its lanes leak.
+pub struct PrefillWave {
+    entries: Vec<WaveEntry>,
+    /// Shared lockstep cursor: the next chunk starts here.
+    pos: usize,
+    /// Longest prompt in the wave (the cursor's end).
+    max_len: usize,
+    /// The prefill entry block (shared by draft and target).
+    block: usize,
+}
+
+impl PrefillWave {
+    /// Prompts (= lane pairs) in this wave.
+    pub fn lanes(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether every prompt is fully prefilled.
+    pub fn done(&self) -> bool {
+        self.pos >= self.max_len
+    }
+
+    /// Total prompt tokens across the wave.
+    pub fn total_tokens(&self) -> usize {
+        self.entries.iter().map(|e| e.prompt.len()).sum()
+    }
+
+    /// Prompt tokens not yet prefilled.
+    pub fn remaining_tokens(&self) -> usize {
+        self.entries.iter().map(|e| e.prompt.len().saturating_sub(self.pos)).sum()
+    }
+
+    /// Chunk dispatches per model still needed to drain the wave —
+    /// O(ceil(L_max / block)), independent of the wave width.
+    pub fn remaining_chunks(&self) -> usize {
+        self.max_len.saturating_sub(self.pos).div_ceil(self.block)
+    }
+}
+
 impl<'a> SpecDecoder<'a> {
     pub fn new(draft: &'a Model, target: &'a Model, gamma: usize) -> Result<Self> {
         let verify_block_size = target.arch.block(Entry::Verify);
@@ -308,6 +387,198 @@ impl<'a> SpecDecoder<'a> {
                 let _ = ctx.target.ledger.free(st.lane().expect("matched lane"));
             }
         }
+    }
+
+    /// A prompt the admission path can serve: non-empty and within both
+    /// models' context windows — the same bounds `prefill_prompt` enforces
+    /// call-by-call, checked up front so a bad prompt is a per-request
+    /// admission failure, never a wave-fatal one.
+    pub fn validate_prompt(&self, prompt: &[u32]) -> Result<()> {
+        if prompt.is_empty() {
+            return Err(Error::msg("empty prompt"));
+        }
+        let cap = self.target.max_seq().min(self.draft.max_seq());
+        if prompt.len() > cap {
+            return Err(Error::KvCache(format!(
+                "prompt of {} tokens exceeds the context window ({cap})",
+                prompt.len()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Whether admission waves can run at all: both models must share
+    /// one prefill block (always true for manifests exporting global
+    /// `entry_points`, but checked so an exotic bundle degrades to the
+    /// per-sequence admission path instead of failing every wave).
+    /// Drivers gate wave admission on this once, up front.
+    pub fn wave_capable(&self) -> bool {
+        self.target.arch.block(Entry::Prefill) == self.draft.arch.block(Entry::Prefill)
+    }
+
+    /// Open a batched admission wave over `prompts`: validate every
+    /// prompt, then allocate one draft + one target arena lane per
+    /// prompt. Fails (allocating nothing) when the wave exceeds free
+    /// arena capacity or any prompt is invalid — the caller decides
+    /// which requests to retry per-lane or reject.
+    pub fn begin_wave(&self, ctx: &mut BatchedCtx, prompts: Vec<Vec<u32>>) -> Result<PrefillWave> {
+        if prompts.is_empty() {
+            return Err(Error::msg("empty admission wave"));
+        }
+        if !self.wave_capable() {
+            return Err(Error::msg("draft/target prefill blocks differ: cannot lockstep a wave"));
+        }
+        let block = self.target.arch.block(Entry::Prefill);
+        if prompts.len() > ctx.available() {
+            return Err(Error::msg(format!(
+                "wave of {} prompts exceeds free arena capacity {}",
+                prompts.len(),
+                ctx.available()
+            )));
+        }
+        for p in &prompts {
+            self.validate_prompt(p)?;
+        }
+        let max_len = prompts.iter().map(Vec::len).max().expect("non-empty wave");
+        let entries = prompts
+            .into_iter()
+            .map(|prompt| WaveEntry {
+                prompt,
+                d_lane: ctx.draft.ledger.alloc().expect("wave capacity checked"),
+                t_lane: ctx.target.ledger.alloc().expect("wave capacity checked"),
+            })
+            .collect();
+        Ok(PrefillWave { entries, pos: 0, max_len, block })
+    }
+
+    /// Advance a wave by whole chunks until `budget` prompt tokens have
+    /// been prefilled (or the wave drains). Each chunk is ONE fused
+    /// batched-prefill dispatch per model over every lane whose prompt
+    /// reaches it — ragged lengths just shrink later dispatches. At least
+    /// one chunk runs per call (progress guarantee), so a budget smaller
+    /// than one chunk degrades to chunk-at-a-time interleaving. Returns
+    /// the prompt tokens processed. On `Err` the wave is dead and must be
+    /// released with [`SpecDecoder::abort_wave`].
+    pub fn wave_step(
+        &self,
+        ctx: &mut BatchedCtx,
+        wave: &mut PrefillWave,
+        budget: usize,
+    ) -> Result<usize> {
+        let block = wave.block;
+        let mut spent = 0usize;
+        while !wave.done() && (spent == 0 || spent < budget) {
+            let start = wave.pos;
+            let chunk_tokens = {
+                let active: Vec<(usize, usize, &[u32])> = wave
+                    .entries
+                    .iter()
+                    .filter(|e| e.prompt.len() > start)
+                    .map(|e| {
+                        let chunk = &e.prompt[start..(start + block).min(e.prompt.len())];
+                        (e.t_lane, e.d_lane, chunk)
+                    })
+                    .collect();
+                let t_calls: Vec<LaneCall<'_>> = active
+                    .iter()
+                    .map(|&(t, _, tokens)| LaneCall { lane: t, tokens, pos: start })
+                    .collect();
+                let d_calls: Vec<LaneCall<'_>> = active
+                    .iter()
+                    .map(|&(_, d, tokens)| LaneCall { lane: d, tokens, pos: start })
+                    .collect();
+                let n: usize = active.iter().map(|&(_, _, t)| t.len()).sum();
+                self.target.run_lanes(Entry::Prefill, &mut ctx.target, &t_calls)?;
+                self.draft.run_lanes(Entry::Prefill, &mut ctx.draft, &d_calls)?;
+                n
+            };
+            wave.pos = start + block;
+            spent += chunk_tokens;
+        }
+        Ok(spent)
+    }
+
+    /// Build one drained wave entry's session: caches advanced to the
+    /// prompt length over the lane states, last-row logits read from the
+    /// arena scratch (preserved through any later masked dispatches —
+    /// see [`StateArena::lane_logits`]).
+    fn wave_session(&self, ctx: &BatchedCtx, e: &WaveEntry, block: usize) -> Result<SpecSession> {
+        let last_row = (e.prompt.len() - 1) % block;
+        let t_logits = ctx.target.lane_row(e.t_lane, last_row, self.target.vocab_size()).to_vec();
+        let d_logits = ctx.draft.lane_row(e.d_lane, last_row, self.draft.vocab_size()).to_vec();
+        // Per-sequence call accounting mirrors the owned path (what one
+        // sequence's prefill would have cost); the fused saving is
+        // visible in the dispatch counters, not per-session stats.
+        let chunks = e.prompt.len().div_ceil(block);
+        let stats =
+            SpecStats { target_calls: chunks, draft_calls: chunks, ..SpecStats::default() };
+        let mut t_cache = SeqCache::new(SeqState::Lane(e.t_lane), self.target.max_seq());
+        t_cache.advance(e.prompt.len())?;
+        let mut d_cache = SeqCache::new(SeqState::Lane(e.d_lane), self.draft.max_seq());
+        d_cache.advance(e.prompt.len())?;
+        Ok(SpecSession {
+            seq: e.prompt.clone(),
+            prompt_len: e.prompt.len(),
+            d_cache,
+            t_cache,
+            t_last_logits: t_logits,
+            d_last_logits: d_logits,
+            d_logits_buf: Vec::new(),
+            t_logits_buf: Vec::new(),
+            stats,
+            finished: false,
+            capture: None,
+        })
+    }
+
+    /// Consume a drained wave into ready [`SpecSession`]s (lane-mode, in
+    /// prompt order) — the fused equivalent of [`SpecDecoder::start`] +
+    /// [`SpecDecoder::adopt`], minus the owned-state allocation, the
+    /// host round-trip and the pack dispatches. On `Err` (unreachable
+    /// after `begin_wave` validation, kept defensive) every wave lane has
+    /// been released — nothing leaks.
+    pub fn finish_wave(
+        &self,
+        ctx: &mut BatchedCtx,
+        wave: PrefillWave,
+    ) -> Result<Vec<SpecSession>> {
+        debug_assert!(wave.done(), "finish_wave before the wave drained");
+        let built: Result<Vec<SpecSession>> =
+            wave.entries.iter().map(|e| self.wave_session(ctx, e, wave.block)).collect();
+        match built {
+            Ok(sessions) => Ok(sessions),
+            Err(e) => {
+                // Built sessions hold lane indices only; free each lane
+                // exactly once via the wave.
+                self.abort_wave(ctx, wave);
+                Err(e)
+            }
+        }
+    }
+
+    /// Release every lane a wave holds back to the arena free lists
+    /// (wave-fatal dispatch error, or driver shutdown mid-wave).
+    pub fn abort_wave(&self, ctx: &mut BatchedCtx, wave: PrefillWave) {
+        for e in &wave.entries {
+            let _ = ctx.draft.ledger.free(e.d_lane);
+            let _ = ctx.target.ledger.free(e.t_lane);
+        }
+    }
+
+    /// One-shot batched admission: open a wave over `prompts`, drain it
+    /// with no interleaving budget, and return the sessions. On `Err`
+    /// every wave lane has been released.
+    pub fn admit_wave(
+        &self,
+        ctx: &mut BatchedCtx,
+        prompts: Vec<Vec<u32>>,
+    ) -> Result<Vec<SpecSession>> {
+        let mut wave = self.begin_wave(ctx, prompts)?;
+        if let Err(e) = self.wave_step(ctx, &mut wave, usize::MAX) {
+            self.abort_wave(ctx, wave);
+            return Err(e);
+        }
+        self.finish_wave(ctx, wave)
     }
 
     /// Feed the draft everything it hasn't processed and return its last
@@ -837,6 +1108,38 @@ mod tests {
         cap.clip_to(10);
         assert_eq!(cap.rows.len(), 3);
         assert!((cap.seconds - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prefill_wave_cursor_arithmetic() {
+        use super::{PrefillWave, WaveEntry};
+        // Ragged wave: single-token, multi-chunk and exact-boundary
+        // prompts share one lockstep cursor.
+        let mut w = PrefillWave {
+            entries: vec![
+                WaveEntry { prompt: vec![1], d_lane: 0, t_lane: 0 },
+                WaveEntry { prompt: (0..70).collect(), d_lane: 1, t_lane: 1 },
+                WaveEntry { prompt: (0..32).collect(), d_lane: 2, t_lane: 2 },
+            ],
+            pos: 0,
+            max_len: 70,
+            block: 32,
+        };
+        assert_eq!(w.lanes(), 3);
+        assert!(!w.done());
+        assert_eq!(w.total_tokens(), 103);
+        assert_eq!(w.remaining_tokens(), 103);
+        assert_eq!(w.remaining_chunks(), 3, "ceil(70/32): bound is the LONGEST prompt");
+        w.pos = 32;
+        assert_eq!(w.remaining_tokens(), 38, "short lanes dropped out");
+        assert_eq!(w.remaining_chunks(), 2);
+        w.pos = 64;
+        assert_eq!(w.remaining_tokens(), 6);
+        assert_eq!(w.remaining_chunks(), 1);
+        w.pos = 96; // cursor overshoots the longest prompt by padding
+        assert!(w.done());
+        assert_eq!(w.remaining_tokens(), 0);
+        assert_eq!(w.remaining_chunks(), 0);
     }
 
     #[test]

@@ -108,6 +108,12 @@ pub struct TraceConfig {
     pub max_new: usize,
     /// (task, weight) mixture.
     pub mix: Vec<(String, f64)>,
+    /// (prompt_len, weight) mixture. Empty = natural prompt lengths;
+    /// otherwise each request's prompt is stretched/truncated to a drawn
+    /// target length ([`stretch_prompt`]) so admission behaves like a
+    /// short-chat vs long-document mix instead of the near-uniform
+    /// exported prompt lengths.
+    pub prompt_len_mix: Vec<(usize, f64)>,
     pub seed: u64,
 }
 
@@ -122,6 +128,7 @@ impl Default for TraceConfig {
                 ("cnndm".to_string(), 0.25),
                 ("xsum".to_string(), 0.25),
             ],
+            prompt_len_mix: Vec::new(),
             seed: 0,
         }
     }
@@ -159,6 +166,52 @@ pub fn parse_task_mix(spec: &str) -> Result<Vec<(String, f64)>> {
         return Err(Error::Cli("empty task mix".into()));
     }
     Ok(mix)
+}
+
+/// Parse a `len:weight,...` prompt-length mixture spec (e.g.
+/// `8:0.7,96:0.3` — a short-chat vs long-document serving mix). Lengths
+/// are target prompt token counts (>= 1), weights must be positive, and a
+/// length may appear only once.
+pub fn parse_len_mix(spec: &str) -> Result<Vec<(usize, f64)>> {
+    let mut mix: Vec<(usize, f64)> = Vec::new();
+    for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let (len, weight) = part
+            .split_once(':')
+            .ok_or_else(|| Error::Cli(format!("len mix entry '{part}': expected len:weight")))?;
+        let len: usize = len
+            .trim()
+            .parse()
+            .map_err(|_| Error::Cli(format!("len mix entry '{part}': bad length")))?;
+        let weight: f64 = weight
+            .trim()
+            .parse()
+            .map_err(|_| Error::Cli(format!("len mix entry '{part}': bad weight")))?;
+        if len == 0 {
+            return Err(Error::Cli(format!("len mix entry '{part}': length must be >= 1")));
+        }
+        if !weight.is_finite() || weight <= 0.0 {
+            return Err(Error::Cli(format!("len mix entry '{part}': weight must be > 0")));
+        }
+        if mix.iter().any(|(l, _)| *l == len) {
+            return Err(Error::Cli(format!("length {len} appears twice in the mix")));
+        }
+        mix.push((len, weight));
+    }
+    if mix.is_empty() {
+        return Err(Error::Cli("empty len mix".into()));
+    }
+    Ok(mix)
+}
+
+/// Build a prompt of exactly `target` tokens by cycling `base` (synthetic
+/// long-document / clipped short-chat prompts for load shaping; every
+/// token id stays in-vocab because it came from a real exported prompt).
+/// An empty base stays empty — the caller surfaces that as a bad example.
+pub fn stretch_prompt(base: &[u32], target: usize) -> Vec<u32> {
+    if base.is_empty() {
+        return Vec::new();
+    }
+    base.iter().copied().cycle().take(target).collect()
 }
 
 /// One distillation seed instruction drawn from the mix.
@@ -257,6 +310,7 @@ impl<'a> SeedStream<'a> {
 pub fn build_trace(suite: &EvalSuite, cfg: &TraceConfig) -> Result<Vec<TraceRequest>> {
     let mut rng = Pcg64::with_stream(cfg.seed, 0x7ace);
     let weights: Vec<f32> = cfg.mix.iter().map(|(_, w)| *w as f32).collect();
+    let len_weights: Vec<f32> = cfg.prompt_len_mix.iter().map(|(_, w)| *w as f32).collect();
     let mut t = 0.0f64;
     let mut out = Vec::with_capacity(cfg.n_requests);
     let mut cursors: BTreeMap<&str, usize> = BTreeMap::new();
@@ -269,10 +323,16 @@ pub fn build_trace(suite: &EvalSuite, cfg: &TraceConfig) -> Result<Vec<TraceRequ
         let cursor = cursors.entry(task).or_insert(0);
         let ex = &examples[*cursor % examples.len()];
         *cursor += 1;
+        let prompt = if cfg.prompt_len_mix.is_empty() {
+            ex.prompt.clone()
+        } else {
+            let li = rng.categorical(&len_weights);
+            stretch_prompt(&ex.prompt, cfg.prompt_len_mix[li].0)
+        };
         out.push(TraceRequest {
             arrival: std::time::Duration::from_secs_f64(t),
             task: task.to_string(),
-            prompt: ex.prompt.clone(),
+            prompt,
             max_new: cfg.max_new,
         });
     }
@@ -387,6 +447,57 @@ mod tests {
         assert!(SeedStream::new(&s, vec![("nope".into(), 1.0)], vec![0.0], 0).is_err());
         assert!(SeedStream::new(&s, vec![("dolly".into(), 1.0)], vec![], 0).is_err());
         assert!(SeedStream::new(&s, vec![], vec![0.0], 0).is_err());
+    }
+
+    #[test]
+    fn parse_len_mix_rejects_garbage() {
+        assert!(parse_len_mix("").is_err());
+        assert!(parse_len_mix("8").is_err(), "missing weight");
+        assert!(parse_len_mix("8:x").is_err(), "non-numeric weight");
+        assert!(parse_len_mix("x:1").is_err(), "non-numeric length");
+        assert!(parse_len_mix("0:1").is_err(), "zero length");
+        assert!(parse_len_mix("8:0").is_err(), "zero weight");
+        assert!(parse_len_mix("8:-1").is_err(), "negative weight");
+        assert!(parse_len_mix("8:0.5,8:0.5").is_err(), "duplicate length");
+        let ok = parse_len_mix(" 8:0.7 , 96:0.3 ").unwrap();
+        assert_eq!(ok, vec![(8, 0.7), (96, 0.3)]);
+    }
+
+    #[test]
+    fn stretch_prompt_cycles_and_truncates() {
+        assert_eq!(stretch_prompt(&[1, 2, 3], 7), vec![1, 2, 3, 1, 2, 3, 1]);
+        assert_eq!(stretch_prompt(&[1, 2, 3], 2), vec![1, 2]);
+        assert_eq!(stretch_prompt(&[5], 4), vec![5, 5, 5, 5]);
+        assert!(stretch_prompt(&[], 4).is_empty(), "empty base stays empty");
+    }
+
+    #[test]
+    fn trace_len_mix_shapes_prompt_lengths() {
+        let s = tiny_suite();
+        let cfg = TraceConfig {
+            n_requests: 120,
+            prompt_len_mix: parse_len_mix("3:0.5,40:0.5").unwrap(),
+            ..Default::default()
+        };
+        let trace = build_trace(&s, &cfg).unwrap();
+        assert_eq!(trace.len(), 120);
+        let short = trace.iter().filter(|r| r.prompt.len() == 3).count();
+        let long = trace.iter().filter(|r| r.prompt.len() == 40).count();
+        assert_eq!(short + long, 120, "every prompt stretched to a mix length");
+        assert!(short > 30 && long > 30, "mixture off: {short}/{long}");
+        // Stretched prompts cycle real exported token ids, never invent
+        // them (tiny_suite's vocabulary of prompt tokens).
+        let known: std::collections::BTreeSet<u32> = [1, 3, 4, 5, 6, 8, 9].into_iter().collect();
+        let long_req = trace.iter().find(|r| r.prompt.len() == 40).unwrap();
+        assert!(long_req.prompt.iter().all(|t| known.contains(t)), "tokens must stay in-vocab");
+        // Deterministic per seed, and the natural-length default is intact.
+        let again = build_trace(&s, &cfg).unwrap();
+        assert_eq!(
+            trace.iter().map(|r| r.prompt.len()).collect::<Vec<_>>(),
+            again.iter().map(|r| r.prompt.len()).collect::<Vec<_>>()
+        );
+        let natural = build_trace(&s, &TraceConfig::default()).unwrap();
+        assert!(natural.iter().all(|r| r.prompt.len() <= 5), "natural lengths untouched");
     }
 
     #[test]

@@ -1,0 +1,268 @@
+//! Batched admission-wave end-to-end (artifact-gated, and additionally
+//! gated on the bundle exporting batched `[B, T]` entry points):
+//!
+//! * a ragged wave (single-token, exact-boundary and multi-chunk prompts)
+//!   admits N prompts in O(ceil(L_max/prefill_block)) fused dispatches
+//!   with ZERO pack dispatches, strictly cheaper than the per-sequence
+//!   start+adopt path (the PR's acceptance bound, asserted via the
+//!   per-model dispatch counter),
+//! * fused-wave sessions are token-identical to the per-sequence path
+//!   and the direct engine,
+//! * a budget-sliced wave interleaves with resident-lane decode without
+//!   corrupting either side (the masked-lane state/logits pass-through
+//!   contract), even when decode dispatches land between the wave's
+//!   final chunk and session construction,
+//! * aborting a wave releases every lane.
+
+mod common;
+
+use specd::batch::{BatchStep, Lane, LaneOutcome};
+use specd::config::SamplingConfig;
+use specd::rng::Pcg64;
+use specd::runtime::Entry;
+use specd::spec::{BatchedCtx, SpecDecoder, SpecSession};
+use specd::workload::stretch_prompt;
+
+/// Skip unless the bundle also exports batched entry points.
+macro_rules! require_batched {
+    ($decoder:expr) => {
+        match $decoder.batched_ctx().unwrap() {
+            Some(ctx) => ctx,
+            None => {
+                eprintln!("skipping: bundle has no batched entry points (re-run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+/// Ragged prompt mix over real suite prompts: a single-token prompt, a
+/// multi-chunk prompt (2 * block + 3), an exact-boundary prompt (block),
+/// then natural lengths.
+fn ragged_prompts(f: &common::Fixture, block: usize, n: usize) -> Vec<Vec<u32>> {
+    let exs = f.suite.take("dolly", n).unwrap();
+    exs.iter()
+        .enumerate()
+        .map(|(i, ex)| match i % 4 {
+            0 => vec![ex.prompt[0]],
+            1 => stretch_prompt(&ex.prompt, 2 * block + 3),
+            2 => stretch_prompt(&ex.prompt, block),
+            _ => ex.prompt.clone(),
+        })
+        .collect()
+}
+
+/// Drive BatchStep until every session is finished or has `budget` tokens.
+fn drive(
+    decoder: &SpecDecoder<'_>,
+    mut ctx: Option<&mut BatchedCtx>,
+    sessions: &mut [SpecSession],
+    rngs: &mut [Pcg64],
+    budget: usize,
+) {
+    let sampling = SamplingConfig::greedy();
+    loop {
+        let mut lanes: Vec<Lane<'_>> = sessions
+            .iter_mut()
+            .zip(rngs.iter_mut())
+            .filter(|(s, _)| !s.finished && s.generated().len() < budget)
+            .map(|(s, rng)| Lane { session: s, sampling, rng })
+            .collect();
+        if lanes.is_empty() {
+            break;
+        }
+        let (outcomes, _) = BatchStep::run(decoder, ctx.as_deref_mut(), &mut lanes);
+        for o in outcomes {
+            if let LaneOutcome::Failed(e) = o {
+                panic!("lane failed: {e}");
+            }
+        }
+    }
+}
+
+#[test]
+fn ragged_wave_admission_is_fused_and_token_identical() {
+    require_artifacts!();
+    let f = common::Fixture::load();
+    let draft = f.default_draft();
+    let decoder = SpecDecoder::new(&draft, &f.target, 3).unwrap();
+    let mut ctx = require_batched!(decoder);
+    let block = f.target.arch.block(Entry::Prefill);
+    let n = 4usize.min(ctx.available());
+    assert!(n >= 2, "need at least 2 arena lanes for the wave bound to mean anything");
+    let prompts = ragged_prompts(&f, block, n);
+    let l_max = prompts.iter().map(Vec::len).max().unwrap();
+    let chunks = l_max.div_ceil(block) as u64;
+    assert!(chunks >= 3, "mix must include a multi-chunk prompt");
+
+    // Pre-wave admission bill: per-sequence prefill (owned states) + the
+    // pack dispatches `adopt` spends gathering them into the arena.
+    let disp0 = decoder.dispatch_count();
+    let mut adopted: Vec<SpecSession> =
+        prompts.iter().map(|p| decoder.start(p).unwrap()).collect();
+    for s in adopted.iter_mut() {
+        assert!(decoder.adopt(&mut ctx, s).unwrap());
+    }
+    let per_seq_dispatches = decoder.dispatch_count() - disp0;
+    for s in adopted.iter_mut() {
+        decoder.release(&mut ctx, s);
+    }
+    drop(adopted);
+
+    // Wave admission of the same prompts.
+    let disp0 = decoder.dispatch_count();
+    let mut sessions = decoder.admit_wave(&mut ctx, prompts.clone()).unwrap();
+    let wave_dispatches = decoder.dispatch_count() - disp0;
+
+    // O(ceil(L_max/block)) bound: per chunk, one fused prefill dispatch
+    // per model plus at most one extract readback each. The bound leaves
+    // NO room for pack dispatches (n per model would blow it) or
+    // per-sequence chunks (Σ ceil(L_i/block) > ceil(L_max/block) here).
+    assert!(
+        wave_dispatches <= 4 * chunks,
+        "wave of {n} ragged prompts issued {wave_dispatches} dispatches (> bound {})",
+        4 * chunks
+    );
+    assert!(
+        wave_dispatches < per_seq_dispatches,
+        "wave ({wave_dispatches}) must beat per-sequence admission ({per_seq_dispatches})"
+    );
+
+    // Every wave session is lane-mode (direct-to-lane prefill, no owned
+    // state ever existed) and ready to decode.
+    assert!(sessions.iter().all(|s| s.lane_mode()));
+    assert_eq!(sessions.len(), n);
+
+    // Token parity: drive the wave sessions fused and compare with the
+    // direct single-sequence engine on identical RNG streams. (Bit-level
+    // ragged-wave == sequential-prefill parity is pinned at export time
+    // by aot.golden_probe_prefill_wave and cross-checked against the
+    // compiled executables in runtime_integration.)
+    let budget = 12usize;
+    let mut rngs: Vec<Pcg64> =
+        (0..n).map(|i| Pcg64::with_stream(i as u64, 0xad31)).collect();
+    drive(&decoder, Some(&mut ctx), &mut sessions, &mut rngs, budget);
+    for (i, p) in prompts.iter().enumerate() {
+        let mut rng = Pcg64::with_stream(i as u64, 0xad31);
+        let (want, _) =
+            decoder.generate(p, budget, &SamplingConfig::greedy(), &mut rng).unwrap();
+        let mut got = sessions[i].generated().to_vec();
+        got.truncate(budget);
+        assert_eq!(got, want, "wave-admitted lane {i} diverged from the direct engine");
+    }
+    for s in sessions.iter_mut() {
+        decoder.release(&mut ctx, s);
+    }
+    assert_eq!(
+        ctx.available(),
+        ctx.draft.ledger.batch().min(ctx.target.ledger.batch()),
+        "all wave lanes must be recycled"
+    );
+}
+
+#[test]
+fn budget_sliced_wave_interleaves_with_resident_decode() {
+    require_artifacts!();
+    let f = common::Fixture::load();
+    let draft = f.default_draft();
+    let decoder = SpecDecoder::new(&draft, &f.target, 3).unwrap();
+    let mut ctx = require_batched!(decoder);
+    if ctx.available() < 4 {
+        eprintln!("skipping: need >= 4 arena lanes");
+        return;
+    }
+    let block = f.target.arch.block(Entry::Prefill);
+    let sampling = SamplingConfig::greedy();
+
+    // Two residents admitted and decoding.
+    let res_prompts: Vec<Vec<u32>> =
+        f.suite.take("xsum", 2).unwrap().iter().map(|e| e.prompt.clone()).collect();
+    let mut residents = decoder.admit_wave(&mut ctx, res_prompts.clone()).unwrap();
+    let mut res_rngs: Vec<Pcg64> =
+        (0..2).map(|i| Pcg64::with_stream(i as u64, 0x4e5)).collect();
+
+    // A ragged wave (incl. a multi-chunk prompt) sliced one chunk at a
+    // time; residents take a full speculation block between slices.
+    let wave_prompts = vec![
+        stretch_prompt(&res_prompts[0], 2 * block + 3),
+        vec![res_prompts[1][0]],
+    ];
+    let mut wave = decoder.begin_wave(&mut ctx, wave_prompts.clone()).unwrap();
+    let mut interleaved_steps = 0usize;
+    while !wave.done() {
+        // Budget 1 < any chunk: exactly one chunk per slice.
+        decoder.wave_step(&mut ctx, &mut wave, 1).unwrap();
+        let mut lanes: Vec<Lane<'_>> = residents
+            .iter_mut()
+            .zip(res_rngs.iter_mut())
+            .filter(|(s, _)| !s.finished)
+            .map(|(s, rng)| Lane { session: s, sampling, rng })
+            .collect();
+        if !lanes.is_empty() {
+            let (outcomes, _) = BatchStep::run(&decoder, Some(&mut ctx), &mut lanes);
+            assert!(outcomes.iter().all(|o| !matches!(o, LaneOutcome::Failed(_))));
+        }
+        interleaved_steps += 1;
+    }
+    assert!(interleaved_steps >= 3, "multi-chunk prompt must take several slices");
+    // Deliberately: decode dispatches above landed AFTER the wave's final
+    // chunk; finish_wave must still read every lane's final prefill rows
+    // (masked pass-through preserves them in the arena).
+    let mut wave_sessions = decoder.finish_wave(&mut ctx, wave).unwrap();
+
+    // Drive everything to completion; every sequence must match the
+    // direct engine despite the interleaving.
+    let budget = 10usize;
+    let mut wave_rngs: Vec<Pcg64> =
+        (0..2).map(|i| Pcg64::with_stream(100 + i as u64, 0x4e5)).collect();
+    drive(&decoder, Some(&mut ctx), &mut wave_sessions, &mut wave_rngs, budget);
+    drive(&decoder, Some(&mut ctx), &mut residents, &mut res_rngs, budget);
+
+    for (i, p) in wave_prompts.iter().enumerate() {
+        let mut rng = Pcg64::with_stream(100 + i as u64, 0x4e5);
+        let (want, _) = decoder.generate(p, budget, &sampling, &mut rng).unwrap();
+        let mut got = wave_sessions[i].generated().to_vec();
+        got.truncate(budget);
+        assert_eq!(got, want, "interleaved wave lane {i} diverged");
+    }
+    for (i, p) in res_prompts.iter().enumerate() {
+        let mut rng = Pcg64::with_stream(i as u64, 0x4e5);
+        let (want, _) = decoder.generate(p, budget, &sampling, &mut rng).unwrap();
+        let mut got = residents[i].generated().to_vec();
+        got.truncate(budget);
+        assert_eq!(got, want, "resident lane {i} corrupted by wave interleaving");
+    }
+    for s in wave_sessions.iter_mut().chain(residents.iter_mut()) {
+        decoder.release(&mut ctx, s);
+    }
+}
+
+#[test]
+fn abort_wave_releases_every_lane() {
+    require_artifacts!();
+    let f = common::Fixture::load();
+    let draft = f.default_draft();
+    let decoder = SpecDecoder::new(&draft, &f.target, 3).unwrap();
+    let mut ctx = require_batched!(decoder);
+    let full = ctx.available();
+    let prompts = ragged_prompts(&f, f.target.arch.block(Entry::Prefill), 2.min(full));
+
+    let wave = decoder.begin_wave(&mut ctx, prompts.clone()).unwrap();
+    assert_eq!(ctx.available(), full - prompts.len());
+    decoder.abort_wave(&mut ctx, wave);
+    assert_eq!(ctx.available(), full, "aborted wave must release its lanes");
+
+    // Lanes are immediately reusable.
+    let mut sessions = decoder.admit_wave(&mut ctx, prompts).unwrap();
+    for s in sessions.iter_mut() {
+        decoder.release(&mut ctx, s);
+    }
+    assert_eq!(ctx.available(), full);
+
+    // Oversized waves and invalid prompts are rejected without leaking.
+    assert!(decoder.begin_wave(&mut ctx, vec![]).is_err());
+    assert!(decoder.begin_wave(&mut ctx, vec![Vec::new()]).is_err());
+    let too_long = vec![5u32; f.target.max_seq() + 1];
+    assert!(decoder.begin_wave(&mut ctx, vec![too_long]).is_err());
+    assert_eq!(ctx.available(), full, "failed begin_wave must allocate nothing");
+}

@@ -74,6 +74,41 @@ fn all_requests_complete_and_match_direct_engine() {
     assert_eq!(metrics.total_requests, 6);
     assert!(metrics.spec.blocks > 0);
     assert!(metrics.throughput_tok_s() > 0.0);
+    // Admission accounting: every admitted prompt token was prefilled
+    // exactly once, every admitted request left a queue-wait sample, and
+    // the prefill phase actually dispatched.
+    let prompt_tokens: usize = examples.iter().map(|ex| ex.prompt.len()).sum();
+    assert_eq!(metrics.prefill_tokens, prompt_tokens);
+    assert_eq!(metrics.queue_wait.len(), 6);
+    assert!(metrics.prefill_dispatches > 0);
+    // With a batched bundle, admission went through fused waves.
+    let spec2 = SpecDecoder::new(&draft, &f.target, 3).unwrap();
+    if spec2.batched_ctx().unwrap().is_some() {
+        assert!(metrics.prefill_waves >= 1, "batched bundle must admit via waves");
+        assert_eq!(metrics.prefill_wave_lanes, 6, "every request admitted through a wave");
+    }
+}
+
+#[test]
+fn overlong_prompt_fails_one_request_not_the_scheduler() {
+    require_artifacts!();
+    // Regression (PR 5 satellite): an admission-time pool/validation
+    // failure is a per-request error response — the scheduler must stay
+    // alive and serve the requests behind it. (The old admission arm
+    // propagated pool errors with `?`, killing the scheduler thread.)
+    let f = common::Fixture::load();
+    let draft = f.default_draft();
+    let good = &f.suite.take("cnndm", 1).unwrap()[0];
+    let too_long = specd::workload::stretch_prompt(&good.prompt, f.target.max_seq() + 8);
+    let reqs = vec![
+        Request::new(0, too_long, 8, SamplingConfig::greedy()),
+        Request::new(1, good.prompt.clone(), 8, SamplingConfig::greedy()),
+    ];
+    let (responses, metrics) = run_requests(&f, &draft, reqs, 2);
+    let by_id: BTreeMap<u64, &Response> = responses.iter().map(|r| (r.id, r)).collect();
+    assert!(by_id[&0].error.is_some(), "over-long prompt must fail");
+    assert!(by_id[&1].error.is_none(), "the scheduler must keep serving afterwards");
+    assert_eq!(metrics.total_requests, 1, "failed admissions don't count");
 }
 
 #[test]

@@ -128,6 +128,7 @@ fn tiny_cfg(out: &std::path::Path, token_budget: usize) -> DistillConfig {
         topk: 4,
         max_new: 8,
         max_slots: 3,
+        prefill_budget: 0,
         records_per_shard: 4,
         seed: 0,
         out_dir: out.to_string_lossy().to_string(),

@@ -132,6 +132,102 @@ fn batched_golden_probes_match_python() {
 }
 
 #[test]
+fn prefill_wave_golden_probes_match_python() {
+    require_artifacts!();
+    // Replays the ragged admission-wave probe — mixed prompt lengths,
+    // per-lane pos, lanes dropping out of later chunks — against the
+    // compiled batched PREFILL executable, and pins every lane's final
+    // last-row logits against what python recorded at export time (where
+    // the wave was asserted equal to sequential per-lane prefill). Also
+    // pins the contract `finish_wave` relies on: a lane whose prompt
+    // ended chunks ago still exposes its final rows after the wave's
+    // last dispatch. Skips on bundles without the probe.
+    let f = common::Fixture::load();
+    let golden_text =
+        std::fs::read_to_string(f.manifest.root.join("golden.json")).expect("golden.json");
+    let golden = Value::parse(&golden_text).expect("golden parse");
+
+    let mut checked = 0;
+    for (model_name, probe) in golden.as_obj().expect("golden object") {
+        let info = f.manifest.model(model_name).expect("model in manifest");
+        let arch = if info.arch == "target" { &f.target_arch } else { &f.draft_arch };
+        let model = f.rt.load_model(&f.manifest, arch, model_name).unwrap();
+        let Some(batch) = model.batch_size() else { continue };
+        let Some(wp) =
+            probe.get("prefill_wave").as_obj().and_then(|m| m.get(&batch.to_string()))
+        else {
+            continue;
+        };
+        let v = model.vocab_size();
+        let block = wp.get("block").as_usize().unwrap();
+        let prompts: Vec<Vec<u32>> = wp
+            .get("prompts")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|row| row.as_arr().unwrap().iter().map(|x| x.as_usize().unwrap() as u32).collect())
+            .collect();
+        assert!(prompts.len() <= batch);
+
+        let mut arena = model.new_arena().unwrap();
+        for b in 0..batch {
+            assert_eq!(arena.ledger.alloc(), Some(b));
+        }
+        let max_len = prompts.iter().map(Vec::len).max().unwrap();
+        let mut start = 0usize;
+        let mut dispatch0 = model.dispatch_count();
+        let mut chunks = 0u64;
+        while start < max_len {
+            let calls: Vec<specd::runtime::LaneCall<'_>> = prompts
+                .iter()
+                .enumerate()
+                .filter(|(_, p)| p.len() > start)
+                .map(|(b, p)| specd::runtime::LaneCall {
+                    lane: b,
+                    tokens: &p[start..(start + block).min(p.len())],
+                    pos: start,
+                })
+                .collect();
+            model.run_lanes(Entry::Prefill, &mut arena, &calls).unwrap();
+            start += block;
+            chunks += 1;
+        }
+        // Dispatch bound: ceil(L_max/block) chunk dispatches (+ at most
+        // one extract readback each), regardless of Σ ceil(L_i/block).
+        let spent = model.dispatch_count() - dispatch0;
+        assert_eq!(chunks, max_len.div_ceil(block) as u64);
+        assert!(spent <= 2 * chunks, "{model_name}: {spent} dispatches > 2 * {chunks}");
+        dispatch0 = model.dispatch_count();
+
+        let heads = wp.get("last_row_head").as_arr().unwrap();
+        let argmaxes = wp.get("last_row_argmax").as_arr().unwrap();
+        for (b, p) in prompts.iter().enumerate() {
+            let last_row = (p.len() - 1) % block;
+            let row = arena.lane_row(b, last_row, v);
+            for (c, want) in heads[b].as_arr().unwrap().iter().enumerate() {
+                let got = row[c] as f64;
+                let want = want.as_f64().unwrap();
+                assert!(
+                    (got - want).abs() < 2e-3 + 1e-3 * want.abs(),
+                    "{model_name} wave lane {b} head[{c}]: rust {got} vs python {want}"
+                );
+            }
+            assert_eq!(
+                argmax(row),
+                argmaxes[b].as_usize().unwrap(),
+                "{model_name} wave lane {b} (prompt len {})",
+                p.len()
+            );
+        }
+        assert_eq!(model.dispatch_count(), dispatch0, "readback must not re-dispatch");
+        checked += 1;
+    }
+    if checked == 0 {
+        eprintln!("skipping: bundle has no prefill_wave probes (re-run `make artifacts`)");
+    }
+}
+
+#[test]
 fn prefill_chunking_matches_single_shot() {
     require_artifacts!();
     let f = common::Fixture::load();

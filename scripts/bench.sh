@@ -7,6 +7,8 @@
 # Produces:
 #   BENCH_pr4.json    per-lane vs fused-batched dispatch microbench
 #                     (tokens/s, dispatches/block, batch occupancy)
+#   BENCH_pr5.json    admission microbench: wave vs per-sequence dispatch
+#                     bills + TTFT percentiles vs --prefill-budget
 #   BENCH_serve.json  trace-replay serving benchmark (SD vs AR)
 #
 # Both need a compiled artifact bundle; without one this script prints a
@@ -24,8 +26,12 @@ echo "== dispatch microbench (BENCH_pr4.json) =="
 cargo run --release --example dispatch_microbench -- \
     --artifacts "$ART" --lanes 1,4,8 --out BENCH_pr4.json
 
+echo "== admission microbench (BENCH_pr5.json) =="
+cargo run --release --example admission_microbench -- \
+    --artifacts "$ART" --lanes 1,4,8 --budgets 0,32,128 --out BENCH_pr5.json
+
 echo "== serve benchmark (BENCH_serve.json) =="
 cargo run --release --example serve_benchmark -- \
     --artifacts "$ART" --bench-json BENCH_serve.json "$@"
 
-echo "bench artifacts: BENCH_pr4.json BENCH_serve.json"
+echo "bench artifacts: BENCH_pr4.json BENCH_pr5.json BENCH_serve.json"
