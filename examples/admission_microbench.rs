@@ -66,7 +66,13 @@ fn main() -> specd::Result<()> {
         .opt("len-mix", "8:0.6,96:0.4", "budget sweep: prompt-length mixture")
         .opt("seed", "0", "trace seed")
         .opt("out", "BENCH_pr5.json", "machine-readable output artifact")
+        .opt("trace-out", "", "write the budget sweep's flight-recorder ring as Chrome trace JSON")
         .parse()?;
+
+    let trace_out = args.str("trace-out").to_string();
+    if !trace_out.is_empty() {
+        specd::trace::enable(specd::trace::DEFAULT_CAPACITY);
+    }
 
     let manifest = Manifest::load(args.str("artifacts"))?;
     let rt = Arc::new(Runtime::new()?);
@@ -236,6 +242,10 @@ fn main() -> specd::Result<()> {
     ]);
     write_bench_json(args.str("out"), &artifact)?;
     println!("wrote {}", args.str("out"));
+    if !trace_out.is_empty() {
+        specd::trace::write_chrome_trace(&trace_out)?;
+        println!("trace: {trace_out}");
+    }
     Ok(())
 }
 

@@ -153,6 +153,48 @@ fn run_config(
     })
 }
 
+/// Tracing-off overhead gate (hard-asserted): with the recorder disabled
+/// every trace site costs one relaxed atomic load and an early return.
+/// Measure that real disabled-path cost, bill it against each row's
+/// measured wall time at the row's actual site density (2 calls per
+/// dispatch, 2 per phase span x3 phases + 2 for the scheduler's iteration
+/// span per step — counted even though this driver issues only the
+/// phases — plus 1 `req_block` guard per emitted block), and require the
+/// delta to stay under 1% of the row's tokens/s. Returns
+/// (ns_per_site, worst_fraction) for the bench artifact.
+fn assert_trace_overhead(rows: &[Row]) -> (f64, f64) {
+    assert!(!specd::trace::enabled(), "microbench must run with tracing disabled");
+    let reps: u64 = 2_000_000;
+    let t0 = Instant::now();
+    let mut acc = 0u64;
+    for _ in 0..reps {
+        let t = specd::trace::begin();
+        acc = acc.wrapping_add(t);
+        specd::trace::dispatch(t, specd::trace::DispatchKind::Decode, 1, 0);
+    }
+    std::hint::black_box(acc);
+    // Two site calls per rep (begin + span record).
+    let ns_per_site = t0.elapsed().as_nanos() as f64 / (2 * reps) as f64;
+    let mut worst = 0.0f64;
+    for r in rows {
+        if r.wall == 0.0 {
+            continue;
+        }
+        let calls = 2.0 * r.dispatches as f64 + 8.0 * r.steps as f64 + r.lane_steps as f64;
+        let frac = calls * ns_per_site / (r.wall * 1e9);
+        assert!(
+            frac <= 0.01,
+            "tracing-off sites cost {:.3}% of {} lanes={} wall time (> 1% gate; \
+             {ns_per_site:.1} ns/site x {calls:.0} calls)",
+            frac * 100.0,
+            r.mode,
+            r.lanes,
+        );
+        worst = worst.max(frac);
+    }
+    (ns_per_site, worst)
+}
+
 fn main() -> specd::Result<()> {
     let args = Args::new("dispatch_microbench", "per-lane vs fused-batched dispatch microbench")
         .opt("artifacts", "artifacts", "artifact bundle directory")
@@ -193,6 +235,7 @@ fn main() -> specd::Result<()> {
 
     let mut table = Table::new(&["mode", "lanes", "steps", "disp", "disp/block", "occup", "tok/s"]);
     let mut rows_json = Vec::new();
+    let mut all_rows: Vec<Row> = Vec::new();
     for &n in &lane_counts {
         let per_lane = run_config(&decoder, &suite, n, false, max_new)?;
         let mut pair = vec![per_lane];
@@ -226,9 +269,15 @@ fn main() -> specd::Result<()> {
                 format!("{:.1}", r.tokens_per_sec()),
             ]);
             rows_json.push(r.json());
+            all_rows.push(r);
         }
     }
     table.print();
+    let (trace_ns_per_site, trace_worst_frac) = assert_trace_overhead(&all_rows);
+    println!(
+        "trace overhead gate: {trace_ns_per_site:.1} ns/site disabled, worst {:.4}% of wall (<= 1%)",
+        trace_worst_frac * 100.0
+    );
 
     let artifact = Value::obj(vec![
         ("bench", Value::Str("dispatch_microbench".to_string())),
@@ -236,6 +285,8 @@ fn main() -> specd::Result<()> {
         ("gamma", Value::Num(gamma as f64)),
         ("max_new", Value::Num(max_new as f64)),
         ("batched_available", Value::Bool(batched_available)),
+        ("trace_ns_per_site_disabled", Value::Num(trace_ns_per_site)),
+        ("trace_overhead_worst_frac", Value::Num(trace_worst_frac)),
         (
             "batch_size",
             decoder.draft.batch_size().map(|b| Value::Num(b as f64)).unwrap_or(Value::Null),

@@ -1,0 +1,209 @@
+"""Chrome trace-event export contract: the JSON `specd --trace-out` writes
+must load in Perfetto. Validates span nesting, monotonic timestamps, track
+metadata and request-lifecycle instants — first against a synthetic trace
+shaped exactly like the Rust exporter's output, then (when available)
+against a real replay-produced trace.
+
+CI produces the real trace with:
+
+    specd replay --trace-out trace.json ...
+
+and points this suite at it via ``SPECD_TRACE_JSON``; without the env var
+(or with artifacts missing) the replay half skips and the synthetic half
+still pins the validator itself.
+"""
+
+import json
+import os
+
+import pytest
+
+# ---------------------------------------------------------------------------
+# Validators (shared by the synthetic and replay halves)
+# ---------------------------------------------------------------------------
+
+SCHED_CATS = {"sched", "phase", "dispatch"}
+REQ_NAMES = {"req_queued", "req_admitted", "req_block", "req_terminal"}
+
+
+def load_trace(text):
+    """Parse and structurally validate a Chrome trace-event JSON string.
+
+    Returns (metadata_events, duration_events, instant_events, ordered)
+    where ``ordered`` is every non-metadata event in file order.
+    """
+    v = json.loads(text)
+    assert isinstance(v, dict) and "traceEvents" in v, "top level must be {traceEvents: [...]}"
+    events = v["traceEvents"]
+    assert isinstance(events, list) and events, "traceEvents must be a non-empty array"
+
+    metas, durs, instants, ordered = [], [], [], []
+    for e in events:
+        assert isinstance(e, dict) and "ph" in e and "pid" in e, e
+        ph = e["ph"]
+        if ph == "M":
+            metas.append(e)
+            continue
+        assert "ts" in e and "tid" in e and "name" in e and "cat" in e, e
+        ordered.append(e)
+        if ph == "X":
+            assert "dur" in e and e["dur"] >= 0, e
+            assert e["cat"] in SCHED_CATS, f"unknown scheduler category: {e}"
+            durs.append(e)
+        elif ph == "i":
+            assert e.get("s") == "t", f"instants must be thread-scoped: {e}"
+            assert e["name"] in REQ_NAMES, f"unknown request instant: {e}"
+            instants.append(e)
+        else:
+            raise AssertionError(f"unexpected phase {ph!r}: {e}")
+    return metas, durs, instants, ordered
+
+
+def assert_tracks_named(metas):
+    names = {
+        (m["pid"], m["tid"]): m["args"]["name"]
+        for m in metas
+        if m.get("name") == "thread_name"
+    }
+    assert "scheduler" in names.values(), f"missing scheduler track: {names}"
+    assert "requests" in names.values(), f"missing requests track: {names}"
+
+
+def assert_monotonic(events):
+    ts = [e["ts"] for e in events]
+    assert ts == sorted(ts), "exported events must be sorted by timestamp"
+    assert all(t >= 0 for t in ts)
+
+
+def assert_nesting(durs):
+    """Every phase span must be contained in some iteration/wave span and
+    every dispatch span in some enclosing phase-or-iteration span: ts/dur
+    containment on one tid is exactly what Perfetto renders as nesting."""
+
+    def contains(outer, inner):
+        return (
+            outer["tid"] == inner["tid"]
+            and outer["ts"] <= inner["ts"]
+            and inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"]
+        )
+
+    tops = [e for e in durs if e["cat"] == "sched"]
+    phases = [e for e in durs if e["cat"] == "phase"]
+    dispatches = [e for e in durs if e["cat"] == "dispatch"]
+    for p in phases:
+        assert any(contains(t, p) for t in tops), f"orphan phase span: {p}"
+    for d in dispatches:
+        assert any(contains(e, d) for e in phases + tops), f"orphan dispatch span: {d}"
+
+
+def assert_request_lifecycles(instants):
+    """Per request: queued precedes admitted precedes the terminal, and
+    there is exactly one terminal."""
+    by_req = {}
+    for e in instants:
+        by_req.setdefault(e["args"]["req"], []).append(e)
+    assert by_req, "no request lifecycle instants in trace"
+    for req, evs in by_req.items():
+        names = [e["name"] for e in evs]
+        assert names.count("req_terminal") == 1, f"request {req}: terminals {names}"
+        assert names[-1] == "req_terminal", f"request {req}: events after terminal"
+        if "req_queued" in names and "req_admitted" in names:
+            assert names.index("req_queued") < names.index("req_admitted"), req
+
+
+def validate(text):
+    metas, durs, instants, ordered = load_trace(text)
+    assert_tracks_named(metas)
+    assert_monotonic(ordered)
+    assert_nesting(durs)
+    assert_request_lifecycles(instants)
+    return durs, instants
+
+
+# ---------------------------------------------------------------------------
+# Synthetic trace, shaped exactly like rust/src/trace.rs's exporter
+# ---------------------------------------------------------------------------
+
+
+def _ev(name, cat, ts, dur, tid=1, **args):
+    return {
+        "pid": 1, "tid": tid, "ph": "X", "name": name, "cat": cat,
+        "ts": ts, "dur": dur, "args": args,
+    }
+
+
+def _inst(name, ts, **args):
+    return {
+        "pid": 1, "tid": 2, "ph": "i", "s": "t", "name": name, "cat": "req",
+        "ts": ts, "args": args,
+    }
+
+
+def synthetic_trace():
+    events = [
+        {"pid": 1, "tid": 1, "ph": "M", "name": "thread_name", "args": {"name": "scheduler"}},
+        {"pid": 1, "tid": 2, "ph": "M", "name": "thread_name", "args": {"name": "requests"}},
+        _inst("req_queued", 5, req=1),
+        _inst("req_admitted", 40, req=1, queue_wait_us=35),
+        _ev("wave", "sched", 50, 100, lanes=1, prompt_tokens=32),
+        _ev("prefill", "dispatch", 60, 80, calls=1, bytes=4096),
+        _ev("iteration", "sched", 200, 300, lane_steps=1, dispatches=5),
+        _ev("draft_sync", "phase", 210, 40, lanes=1),
+        _ev("decode", "dispatch", 215, 30, calls=1, bytes=128),
+        _ev("verify", "phase", 260, 200, lanes=1),
+        _ev("verify", "dispatch", 270, 180, calls=1, bytes=512),
+        _inst("req_block", 505, req=1, accepted=2, emitted=3),
+        _inst("req_terminal", 510, req=1, reason="ok", tokens_out=3),
+    ]
+    events.sort(key=lambda e: e.get("ts", -1))
+    return json.dumps({"traceEvents": events})
+
+
+def test_synthetic_trace_validates():
+    durs, instants = validate(synthetic_trace())
+    assert len(durs) == 7
+    assert len(instants) == 4
+
+
+def test_validator_rejects_broken_nesting():
+    v = json.loads(synthetic_trace())
+    for e in v["traceEvents"]:
+        if e.get("cat") == "phase" and e["name"] == "verify":
+            e["dur"] = 10_000  # now overflows its iteration
+    with pytest.raises(AssertionError, match="orphan phase"):
+        validate(json.dumps(v))
+
+
+def test_validator_rejects_double_terminal():
+    v = json.loads(synthetic_trace())
+    v["traceEvents"].append(
+        _inst("req_terminal", 600, req=1, reason="ok", tokens_out=3)
+    )
+    with pytest.raises(AssertionError, match="terminals"):
+        validate(json.dumps(v))
+
+
+def test_validator_rejects_unsorted_timestamps():
+    v = json.loads(synthetic_trace())
+    v["traceEvents"].reverse()
+    with pytest.raises(AssertionError, match="sorted"):
+        validate(json.dumps(v))
+
+
+# ---------------------------------------------------------------------------
+# Replay-produced trace (CI wires SPECD_TRACE_JSON to the smoke run's file)
+# ---------------------------------------------------------------------------
+
+
+def test_replay_trace_validates():
+    path = os.environ.get("SPECD_TRACE_JSON", "")
+    if not path:
+        pytest.skip("SPECD_TRACE_JSON not set (no replay trace to validate)")
+    if not os.path.exists(path):
+        pytest.skip(f"replay trace {path} not found")
+    with open(path) as f:
+        text = f.read()
+    durs, instants = validate(text)
+    # A real replay decodes at least one block for at least one request.
+    assert any(e["name"] == "iteration" for e in durs), "no iteration spans in replay trace"
+    assert any(e["name"] == "req_terminal" for e in instants)

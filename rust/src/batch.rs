@@ -112,6 +112,7 @@ impl BatchStep {
 
         // Phase 1 — draft-sync sweep.
         let t0 = Instant::now();
+        let tr0 = crate::trace::begin();
         if let Some(c) = ctx.as_deref_mut() {
             if let Err(e) = decoder.begin_block_batch(c, lanes, &mut blocks, &mut failed) {
                 Self::fail_fused(lanes, &mut blocks, &mut failed, &e);
@@ -127,11 +128,13 @@ impl BatchStep {
             }
         }
         timings.draft_sync = t0.elapsed().as_secs_f64();
+        crate::trace::phase(tr0, crate::trace::Phase::DraftSync, n as u64);
 
         // Phase 2 — proposal round j across every lane still drafting.
         // Lanes near the context cap carry a shrunken per-block gamma and
         // simply sit out the later rounds.
         let t0 = Instant::now();
+        let tr0 = crate::trace::begin();
         let rounds = blocks.iter().flatten().map(|b| b.gamma()).max().unwrap_or(0);
         for _round in 0..rounds {
             if let Some(c) = ctx.as_deref_mut() {
@@ -154,9 +157,11 @@ impl BatchStep {
             }
         }
         timings.propose = t0.elapsed().as_secs_f64();
+        crate::trace::phase(tr0, crate::trace::Phase::Propose, n as u64);
 
         // Phase 3 — verify sweep.
         let t0 = Instant::now();
+        let tr0 = crate::trace::begin();
         if let Some(c) = ctx.as_deref_mut() {
             if let Err(e) =
                 decoder.commit_block_batch(c, lanes, &mut blocks, &mut failed, &mut emitted)
@@ -175,6 +180,7 @@ impl BatchStep {
             }
         }
         timings.verify = t0.elapsed().as_secs_f64();
+        crate::trace::phase(tr0, crate::trace::Phase::Verify, n as u64);
 
         // Resolve per-lane outcomes + the step's occupancy accounting.
         let mut outcomes = Vec::with_capacity(n);

@@ -146,6 +146,12 @@ pub struct Response {
     pub ttft: f64,
     /// Error message when generation failed.
     pub error: Option<String>,
+    /// Acceptance-depth histogram for this request: `depth_counts[k]` is
+    /// the number of speculation blocks that accepted exactly `k` draft
+    /// tokens (`k` in `0..=γ`). Empty for requests that never decoded.
+    /// Feeds the `specd_accept_depth` Prometheus histogram; its weighted
+    /// sum equals `stats.accepted` before `max_new` clipping.
+    pub depth_counts: Vec<u32>,
 }
 
 struct Active {
@@ -163,6 +169,9 @@ struct Active {
     streamed: usize,
     /// The KV pool slot this sequence occupies (freed on every exit path).
     slot: SlotId,
+    /// Per-request acceptance-depth counts (`len == γ + 1`), indexed by
+    /// accepted-token count per block; snapshotted into the [`Response`].
+    depth_counts: Vec<u32>,
 }
 
 impl Active {
@@ -205,12 +214,13 @@ pub struct Coordinator<'a> {
     decoder: SpecDecoder<'a>,
     cfg: RunConfig,
     gauges: Option<Arc<SchedulerGauges>>,
+    log_requests: bool,
 }
 
 impl<'a> Coordinator<'a> {
     pub fn new(decoder: SpecDecoder<'a>, cfg: RunConfig) -> Result<Self> {
         cfg.validate()?;
-        Ok(Coordinator { decoder, cfg, gauges: None })
+        Ok(Coordinator { decoder, cfg, gauges: None, log_requests: false })
     }
 
     /// Attach live gauges (shared with the HTTP `/metrics` handler).
@@ -219,10 +229,29 @@ impl<'a> Coordinator<'a> {
         self
     }
 
+    /// Emit one structured JSON access-log line per request terminal on
+    /// stderr (`--log-requests`).
+    pub fn with_access_log(mut self, on: bool) -> Self {
+        self.log_requests = on;
+        self
+    }
+
     /// Serve until the request channel closes and all work drains.
     /// Returns aggregate metrics.
     pub fn serve(&self, rx: Receiver<Request>, tx: Sender<Response>) -> Result<ServeMetrics> {
         let mut metrics = ServeMetrics::default();
+        // Histogram families with fixed bounds, so merged/scraped quantiles
+        // survive aggregation (and scrape resets — the micro-fix for the
+        // Summary-style queue-wait samples losing history).
+        metrics.accept_depth = crate::metrics::Histogram::accept_depth(self.cfg.gamma);
+        metrics.block_draft_sync =
+            crate::metrics::Histogram::with_bounds(&crate::metrics::BLOCK_SECONDS_BOUNDS);
+        metrics.block_propose =
+            crate::metrics::Histogram::with_bounds(&crate::metrics::BLOCK_SECONDS_BOUNDS);
+        metrics.block_verify =
+            crate::metrics::Histogram::with_bounds(&crate::metrics::BLOCK_SECONDS_BOUNDS);
+        metrics.queue_wait_hist =
+            crate::metrics::Histogram::with_bounds(&crate::metrics::QUEUE_WAIT_BOUNDS);
         // Fused-dispatch arenas, when the bundle exports batched entry
         // points. Admitted sessions are adopted into them (arena-capacity
         // permitting) so every lockstep phase is one PJRT dispatch;
@@ -272,6 +301,7 @@ impl<'a> Coordinator<'a> {
                 let Some(req) = req else { break };
                 let enqueued = req.submitted.unwrap_or_else(Instant::now);
                 let deadline_at = req.deadline.map(|d| enqueued + d);
+                crate::trace::req_queued(req.id);
                 pending.push_back(Pending { req, enqueued, deadline_at });
             }
 
@@ -283,13 +313,13 @@ impl<'a> Coordinator<'a> {
             pending.retain_mut(|p| {
                 if p.deadline_at.is_some_and(|d| now >= d) {
                     metrics.timeouts += 1;
-                    Self::emit(&tx, &p.req.events, Self::pending_error(p, ERR_DEADLINE.to_string()));
+                    let resp = Self::pending_error(p, ERR_DEADLINE.to_string());
+                    self.terminal(&tx, &p.req.events, p.req.prompt.len(), resp);
                     false
                 } else if p.disconnected() {
                     metrics.cancelled += 1;
-                    // The delta receiver is gone; only the shared response
-                    // channel observes the cancellation.
-                    let _ = tx.send(Self::pending_error(p, ERR_DISCONNECT.to_string()));
+                    let resp = Self::pending_error(p, ERR_DISCONNECT.to_string());
+                    self.terminal(&tx, &p.req.events, p.req.prompt.len(), resp);
                     false
                 } else {
                     true
@@ -313,13 +343,17 @@ impl<'a> Coordinator<'a> {
                         // Per-request validation up front: a bad prompt is
                         // that request's failure, never the wave's.
                         if let Err(e) = self.decoder.validate_prompt(&p.req.prompt) {
-                            Self::emit(&tx, &p.req.events, Self::pending_error(&p, e.to_string()));
+                            let resp = Self::pending_error(&p, e.to_string());
+                            self.terminal(&tx, &p.req.events, p.req.prompt.len(), resp);
                             continue;
                         }
                         if let Some(ev) = &p.req.events {
                             let _ = ev.send(Delta::Started);
                         }
-                        metrics.queue_wait.push(p.enqueued.elapsed().as_secs_f64());
+                        let wait = p.enqueued.elapsed().as_secs_f64();
+                        metrics.queue_wait.push(wait);
+                        metrics.queue_wait_hist.observe(wait);
+                        crate::trace::req_admitted(p.req.id, (wait * 1e6) as u64);
                         prompts.push(p.req.prompt.clone());
                         members.push(p);
                     }
@@ -335,11 +369,8 @@ impl<'a> Coordinator<'a> {
                             Err(e) => {
                                 // begin_wave allocates nothing on failure.
                                 for p in members {
-                                    Self::emit(
-                                        &tx,
-                                        &p.req.events,
-                                        Self::pending_error(&p, e.to_string()),
-                                    );
+                                    let resp = Self::pending_error(&p, e.to_string());
+                                    self.terminal(&tx, &p.req.events, p.req.prompt.len(), resp);
                                 }
                             }
                         }
@@ -348,8 +379,11 @@ impl<'a> Coordinator<'a> {
                 // Advance the wave by up to `budget` prompt tokens; admit
                 // its sessions once it drains.
                 if let Some(mut wf) = wave.take() {
+                    let tr_w = crate::trace::begin();
+                    let wave_members = wf.members.len() as u64;
                     match self.decoder.wave_step(ctx, &mut wf.wave, prefill_budget) {
                         Ok(spent) => {
+                            crate::trace::wave(tr_w, wave_members, spent as u64);
                             admit_tokens += spent;
                             if wf.wave.done() {
                                 match self.decoder.finish_wave(ctx, wf.wave) {
@@ -371,10 +405,13 @@ impl<'a> Coordinator<'a> {
                                                     // free the lanes, keep
                                                     // the scheduler alive.
                                                     self.decoder.release(ctx, &mut session);
-                                                    Self::emit(
+                                                    let resp =
+                                                        Self::pending_error(&p, e.to_string());
+                                                    self.terminal(
                                                         &tx,
                                                         &p.req.events,
-                                                        Self::pending_error(&p, e.to_string()),
+                                                        p.req.prompt.len(),
+                                                        resp,
                                                     );
                                                 }
                                             }
@@ -383,10 +420,12 @@ impl<'a> Coordinator<'a> {
                                     Err(e) => {
                                         // finish_wave released every lane.
                                         for p in wf.members {
-                                            Self::emit(
+                                            let resp = Self::pending_error(&p, e.to_string());
+                                            self.terminal(
                                                 &tx,
                                                 &p.req.events,
-                                                Self::pending_error(&p, e.to_string()),
+                                                p.req.prompt.len(),
+                                                resp,
                                             );
                                         }
                                     }
@@ -400,11 +439,8 @@ impl<'a> Coordinator<'a> {
                             // lanes, fail every member request.
                             self.decoder.abort_wave(ctx, wf.wave);
                             for p in wf.members {
-                                Self::emit(
-                                    &tx,
-                                    &p.req.events,
-                                    Self::pending_error(&p, e.to_string()),
-                                );
+                                let resp = Self::pending_error(&p, e.to_string());
+                                self.terminal(&tx, &p.req.events, p.req.prompt.len(), resp);
                             }
                         }
                     }
@@ -424,7 +460,10 @@ impl<'a> Coordinator<'a> {
                 if let Some(ev) = &p.req.events {
                     let _ = ev.send(Delta::Started);
                 }
-                metrics.queue_wait.push(p.enqueued.elapsed().as_secs_f64());
+                let wait = p.enqueued.elapsed().as_secs_f64();
+                metrics.queue_wait.push(wait);
+                metrics.queue_wait_hist.observe(wait);
+                crate::trace::req_admitted(p.req.id, (wait * 1e6) as u64);
                 // Prefill (owned state), then pack into the fused arenas
                 // if a lane freed meanwhile. An adopt failure poisons only
                 // this session — report it like a start failure.
@@ -449,16 +488,14 @@ impl<'a> Coordinator<'a> {
                                 // Per-request pool failure (was scheduler-
                                 // fatal `?` before): release and report.
                                 self.release_lanes(&mut batched, &mut session);
-                                Self::emit(
-                                    &tx,
-                                    &p.req.events,
-                                    Self::pending_error(&p, e.to_string()),
-                                );
+                                let resp = Self::pending_error(&p, e.to_string());
+                                self.terminal(&tx, &p.req.events, p.req.prompt.len(), resp);
                             }
                         }
                     }
                     Err(e) => {
-                        Self::emit(&tx, &p.req.events, Self::pending_error(&p, e.to_string()));
+                        let resp = Self::pending_error(&p, e.to_string());
+                        self.terminal(&tx, &p.req.events, p.req.prompt.len(), resp);
                     }
                 }
             }
@@ -502,18 +539,14 @@ impl<'a> Coordinator<'a> {
                     metrics.timeouts += 1;
                     pool.free(a.slot)?;
                     self.release_lanes(&mut batched, &mut a.session);
-                    Self::emit(
-                        &tx,
-                        &a.events,
-                        Self::terminal_response(&a, Some(ERR_DEADLINE.to_string())),
-                    );
+                    let resp = Self::terminal_response(&a, Some(ERR_DEADLINE.to_string()));
+                    self.terminal(&tx, &a.events, a.session.prompt_len, resp);
                 } else if a.disconnected() {
                     metrics.cancelled += 1;
                     pool.free(a.slot)?;
                     self.release_lanes(&mut batched, &mut a.session);
-                    // The delta receiver is gone; only the shared response
-                    // channel observes the cancellation.
-                    let _ = tx.send(Self::terminal_response(&a, Some(ERR_DISCONNECT.to_string())));
+                    let resp = Self::terminal_response(&a, Some(ERR_DISCONNECT.to_string()));
+                    self.terminal(&tx, &a.events, a.session.prompt_len, resp);
                 } else {
                     survivors.push(a);
                 }
@@ -524,6 +557,12 @@ impl<'a> Coordinator<'a> {
             }
 
             // --- one scheduling iteration: a lockstep batch step ---------
+            let tr_it = crate::trace::begin();
+            // Per-lane accepted-counter snapshot: the post-step delta is
+            // this block's acceptance depth (0..=γ), feeding the
+            // `specd_accept_depth` histogram and the per-request counts.
+            let accepted_pre: Vec<usize> =
+                active.iter().map(|a| a.session.stats.accepted).collect();
             let (outcomes, timings) = {
                 let mut lanes: Vec<Lane<'_>> = active
                     .iter_mut()
@@ -542,11 +581,19 @@ impl<'a> Coordinator<'a> {
             metrics.dispatches += timings.dispatches;
             metrics.lane_steps += timings.lanes;
             metrics.batched_lane_steps += timings.batched_lanes;
+            metrics.block_draft_sync.observe(timings.draft_sync);
+            metrics.block_propose.observe(timings.propose);
+            metrics.block_verify.observe(timings.verify);
+            crate::trace::iteration(tr_it, timings.lanes as u64, timings.dispatches);
 
             let mut survivors = Vec::with_capacity(active.len());
-            for (mut a, outcome) in active.drain(..).zip(outcomes) {
+            for (i, (mut a, outcome)) in active.drain(..).zip(outcomes).enumerate() {
                 match outcome {
                     LaneOutcome::Emitted(emitted) => {
+                        let depth = (a.session.stats.accepted - accepted_pre[i])
+                            .min(a.depth_counts.len() - 1);
+                        metrics.accept_depth.observe(depth as f64);
+                        a.depth_counts[depth] += 1;
                         pool.get_mut(a.slot)?.advance(emitted.len())?;
                         if a.first_token.is_none() {
                             a.first_token = Some(a.enqueued.elapsed().as_secs_f64());
@@ -568,12 +615,13 @@ impl<'a> Coordinator<'a> {
                             metrics.cancelled += 1;
                             pool.free(a.slot)?;
                             self.release_lanes(&mut batched, &mut a.session);
-                            let _ = tx
-                                .send(Self::terminal_response(&a, Some(ERR_DISCONNECT.to_string())));
+                            let resp =
+                                Self::terminal_response(&a, Some(ERR_DISCONNECT.to_string()));
+                            self.terminal(&tx, &a.events, a.session.prompt_len, resp);
                         } else if a.session.finished || a.session.generated().len() >= a.max_new {
                             pool.free(a.slot)?;
                             self.release_lanes(&mut batched, &mut a.session);
-                            Self::finish(&mut metrics, &tx, &a);
+                            self.finish(&mut metrics, &tx, &a);
                         } else {
                             survivors.push(a);
                         }
@@ -584,12 +632,13 @@ impl<'a> Coordinator<'a> {
                         // successful completion.
                         pool.free(a.slot)?;
                         self.release_lanes(&mut batched, &mut a.session);
-                        Self::finish(&mut metrics, &tx, &a);
+                        self.finish(&mut metrics, &tx, &a);
                     }
                     LaneOutcome::Failed(e) => {
                         pool.free(a.slot)?;
                         self.release_lanes(&mut batched, &mut a.session);
-                        Self::emit(&tx, &a.events, Self::terminal_response(&a, Some(e.to_string())));
+                        let resp = Self::terminal_response(&a, Some(e.to_string()));
+                        self.terminal(&tx, &a.events, a.session.prompt_len, resp);
                     }
                 }
             }
@@ -642,7 +691,10 @@ impl<'a> Coordinator<'a> {
 
     /// Promote an admitted (prefilled, slot-claimed) request to an active
     /// scheduler lane.
-    fn make_active(p: Pending, session: SpecSession, slot: SlotId, cfg: &RunConfig) -> Active {
+    fn make_active(p: Pending, mut session: SpecSession, slot: SlotId, cfg: &RunConfig) -> Active {
+        // Thread the request ID into the engine so per-block trace instants
+        // ([`crate::trace::req_block`]) attribute to this request.
+        session.trace_id = p.req.id;
         Active {
             id: p.req.id,
             session,
@@ -657,6 +709,7 @@ impl<'a> Coordinator<'a> {
             events: p.req.events,
             streamed: 0,
             slot,
+            depth_counts: vec![0; cfg.gamma + 1],
         }
     }
 
@@ -671,6 +724,7 @@ impl<'a> Coordinator<'a> {
             latency,
             ttft: latency,
             error: Some(error),
+            depth_counts: Vec::new(),
         }
     }
 
@@ -683,12 +737,53 @@ impl<'a> Coordinator<'a> {
         let mut stats = a.session.stats;
         stats.clip_to_delivered(tokens.len());
         let latency = a.enqueued.elapsed().as_secs_f64();
-        Response { id: a.id, tokens, stats, latency, ttft: a.first_token.unwrap_or(latency), error }
+        Response {
+            id: a.id,
+            tokens,
+            stats,
+            latency,
+            ttft: a.first_token.unwrap_or(latency),
+            error,
+            depth_counts: a.depth_counts.clone(),
+        }
     }
 
-    /// Send a terminal on both the shared response channel and the
-    /// request's delta sink (when present).
-    fn emit(tx: &Sender<Response>, events: &Option<Sender<Delta>>, resp: Response) {
+    /// The single terminal choke point: EVERY request exit — success,
+    /// deadline eviction, disconnect cancellation, validation/pool/wave
+    /// error — flows through here exactly once, so the trace terminal,
+    /// the access-log line, the `Delta::Done` and the response-channel
+    /// send cannot drift apart (pinned by
+    /// `one_terminal_per_request_across_exits` in
+    /// rust/tests/coordinator_integration.rs).
+    fn terminal(
+        &self,
+        tx: &Sender<Response>,
+        events: &Option<Sender<Delta>>,
+        tokens_in: usize,
+        resp: Response,
+    ) {
+        let reason = crate::trace::Reason::from_error(resp.error.as_deref());
+        crate::trace::req_terminal(resp.id, reason, resp.tokens.len() as u64);
+        if self.log_requests {
+            let accept_rate = if resp.stats.drafted > 0 {
+                resp.stats.accepted as f64 / resp.stats.drafted as f64
+            } else {
+                0.0
+            };
+            crate::trace::access_log(&crate::trace::AccessRecord {
+                id: resp.id,
+                status: reason.status(),
+                tokens_in,
+                tokens_out: resp.tokens.len(),
+                ttft_s: resp.ttft,
+                latency_s: resp.latency,
+                accept_rate,
+                reason: reason.name(),
+            });
+        }
+        // A hung-up delta receiver makes this send fail, which is exactly
+        // the disconnect case — the error is deliberately ignored on every
+        // path rather than special-casing cancellations.
         if let Some(ev) = events {
             let _ = ev.send(Delta::Done(resp.clone()));
         }
@@ -696,14 +791,14 @@ impl<'a> Coordinator<'a> {
     }
 
     /// Successful completion: fold into the aggregate and emit.
-    fn finish(metrics: &mut ServeMetrics, tx: &Sender<Response>, a: &Active) {
+    fn finish(&self, metrics: &mut ServeMetrics, tx: &Sender<Response>, a: &Active) {
         let resp = Self::terminal_response(a, None);
         metrics.total_requests += 1;
         metrics.total_new_tokens += resp.tokens.len();
         metrics.request_latency.push(resp.latency);
         metrics.ttft.push(resp.ttft);
         metrics.spec.merge(&resp.stats);
-        Self::emit(tx, &a.events, resp);
+        self.terminal(tx, &a.events, a.session.prompt_len, resp);
     }
 }
 

@@ -166,6 +166,7 @@ pub fn run_distill(
         resumed_records: writer.resume_records() as usize,
         ..DistillMetrics::default()
     };
+    metrics.accept_depth = crate::metrics::Histogram::accept_depth(decoder.gamma);
     let mut total_tokens = writer.resume_response_tokens() as usize;
 
     // Same +1 headroom as the coordinator: the sequence mirror can exceed
@@ -211,8 +212,13 @@ pub fn run_distill(
                 }
             }
             if let Some((mut w, sps)) = wave.take() {
+                let tr_w = crate::trace::begin();
+                let wave_lanes = sps.len() as u64;
                 match decoder.wave_step(c, &mut w, prefill_budget) {
-                    Ok(spent) => admit_tokens += spent,
+                    Ok(spent) => {
+                        crate::trace::wave(tr_w, wave_lanes, spent as u64);
+                        admit_tokens += spent
+                    }
                     Err(e) => {
                         decoder.abort_wave(c, w);
                         return Err(e);
@@ -221,6 +227,9 @@ pub fn run_distill(
                 if w.done() {
                     for (mut session, sp) in decoder.finish_wave(c, w)?.into_iter().zip(sps) {
                         session.enable_capture(topk);
+                        // Nonzero trace ID (seed index is 0-based) so
+                        // per-block instants attribute to this sequence.
+                        session.trace_id = sp.index + 1;
                         let slot = pool.alloc(sp.index, slot_cap)?;
                         pool.get_mut(slot)?.advance(session.prompt_len)?;
                         let sampling = SamplingConfig {
@@ -247,6 +256,7 @@ pub fn run_distill(
             let mut session = decoder.start(&sp.prompt)?;
             admit_tokens += session.prompt_len;
             session.enable_capture(topk);
+            session.trace_id = sp.index + 1;
             if let Some(c) = batched.as_mut() {
                 decoder.adopt(c, &mut session)?;
             }
@@ -272,6 +282,9 @@ pub fn run_distill(
         }
 
         // --- one lockstep batch step across all lanes --------------------
+        let tr_it = crate::trace::begin();
+        let accepted_pre: Vec<usize> =
+            active.iter().map(|l| l.session.stats.accepted).collect();
         let (outcomes, timings) = {
             let mut lanes: Vec<Lane<'_>> = active
                 .iter_mut()
@@ -279,6 +292,7 @@ pub fn run_distill(
                 .collect();
             BatchStep::run(decoder, batched.as_mut(), &mut lanes)
         };
+        crate::trace::iteration(tr_it, timings.lanes as u64, timings.dispatches);
         metrics.batch_iterations += 1;
         metrics.phase_draft_sync_seconds += timings.draft_sync;
         metrics.phase_propose_seconds += timings.propose;
@@ -288,9 +302,11 @@ pub fn run_distill(
         metrics.batched_lane_steps += timings.batched_lanes;
 
         let mut survivors = Vec::with_capacity(active.len());
-        for (mut lane, outcome) in active.drain(..).zip(outcomes) {
+        for (i, (mut lane, outcome)) in active.drain(..).zip(outcomes).enumerate() {
             match outcome {
                 LaneOutcome::Emitted(emitted) => {
+                    let depth = lane.session.stats.accepted - accepted_pre[i];
+                    metrics.accept_depth.observe(depth as f64);
                     pool.get_mut(lane.slot)?.advance(emitted.len())?;
                     if lane.session.finished || lane.session.generated().len() >= cfg.max_new {
                         retire(decoder, &mut batched, &mut pool, &mut lane)?;

@@ -371,11 +371,15 @@ impl<'a, W: Write> ChunkedWriter<'a, W> {
         code: u16,
         content_type: &str,
         keep_alive: bool,
+        extra_headers: &[(&str, &str)],
     ) -> io::Result<Self> {
         write!(w, "HTTP/1.1 {} {}\r\n", code, status_reason(code))?;
         write!(w, "content-type: {content_type}\r\n")?;
         w.write_all(b"transfer-encoding: chunked\r\n")?;
         write!(w, "connection: {}\r\n", if keep_alive { "keep-alive" } else { "close" })?;
+        for (k, v) in extra_headers {
+            write!(w, "{k}: {v}\r\n")?;
+        }
         w.write_all(b"\r\n")?;
         w.flush()?;
         Ok(ChunkedWriter { w, finished: false })
@@ -672,7 +676,9 @@ mod tests {
     fn chunked_writer_reader_roundtrip() {
         let mut wire = Vec::new();
         {
-            let mut cw = ChunkedWriter::start(&mut wire, 200, "text/event-stream", true).unwrap();
+            let hdrs = [("x-request-id", "rid-42")];
+            let mut cw =
+                ChunkedWriter::start(&mut wire, 200, "text/event-stream", true, &hdrs).unwrap();
             cw.chunk(b"data: {\"tokens\":[1,2]}\n\n").unwrap();
             cw.chunk(b"").unwrap(); // ignored, must not terminate
             cw.chunk(b"data: done\n\n").unwrap();
@@ -681,6 +687,7 @@ mod tests {
         let mut rd = BufReader::new(&wire[..]);
         let head = read_response_head(&mut rd).unwrap();
         assert!(head.chunked());
+        assert_eq!(head.header("x-request-id"), Some("rid-42"));
         let mut cr = ChunkedReader::new(&mut rd);
         assert_eq!(cr.next_chunk().unwrap().unwrap(), b"data: {\"tokens\":[1,2]}\n\n");
         assert_eq!(cr.next_chunk().unwrap().unwrap(), b"data: done\n\n");
@@ -692,7 +699,7 @@ mod tests {
     fn chunked_writer_terminates_on_drop() {
         let mut wire = Vec::new();
         {
-            let mut cw = ChunkedWriter::start(&mut wire, 200, "text/plain", false).unwrap();
+            let mut cw = ChunkedWriter::start(&mut wire, 200, "text/plain", false, &[]).unwrap();
             cw.chunk(b"partial").unwrap();
             // dropped without finish(): terminal chunk still written
         }

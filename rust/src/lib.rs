@@ -29,6 +29,7 @@
 //! | [`http`] | HTTP/1.1 wire layer: parser, chunked/streaming writers |
 //! | [`server`] | TCP front end (L4): `/v1/generate`, `/healthz`, `/metrics` |
 //! | [`metrics`] | block efficiency, MBSU, token rate, latency histograms |
+//! | [`trace`] | flight recorder: spans, Chrome-trace export, access log |
 //! | [`workload`] | synthetic task generators (dolly/xsum/cnndm/wmt) |
 //! | [`eval`] | figure/table harness used by `rust/benches/` |
 //!
@@ -61,6 +62,7 @@ pub mod server;
 pub mod spec;
 pub mod tensor;
 pub mod tokenizer;
+pub mod trace;
 pub mod weights;
 pub mod workload;
 

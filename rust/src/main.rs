@@ -78,7 +78,14 @@ fn run() -> Result<()> {
         .opt("shard-records", "256", "distill: records per shard (checkpoint granularity)")
         .opt("out", "shards", "distill: dataset output directory")
         .opt("seed", "0", "random seed")
+        .opt("trace-out", "",
+             "serve/replay/distill: write the flight-recorder ring as Chrome \
+              trace-event JSON to this path on exit ('' = off; load in Perfetto)")
         .flag("baseline", "generate: use autoregressive decoding instead")
+        .flag("log-requests",
+              "serve/replay: one structured JSON access-log line per request terminal on stderr")
+        .flag("debug-endpoints",
+              "serve: expose GET /debug/trace and /debug/requests/<id> (404 otherwise)")
         .parse()?;
 
     let command = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
@@ -117,6 +124,27 @@ fn info(manifest: &Manifest) -> Result<()> {
             "  {name:<24} arch={:<7} params={:>9} c={:.4}",
             m.arch, m.params, m.c_ratio
         );
+    }
+    Ok(())
+}
+
+/// Arm the flight recorder when any trace consumer was requested. Returns
+/// the `--trace-out` export path (`""` = no export). The recorder also
+/// arms without an export path when the debug endpoints are exposed, so
+/// `GET /debug/trace` has a live ring to snapshot.
+fn arm_trace(args: &specd::cli::Parsed) -> String {
+    let out = args.str("trace-out").to_string();
+    if !out.is_empty() || args.flag("debug-endpoints") {
+        specd::trace::enable(specd::trace::DEFAULT_CAPACITY);
+    }
+    out
+}
+
+/// Write the Chrome trace export if `--trace-out` was given.
+fn export_trace(trace_out: &str) -> Result<()> {
+    if !trace_out.is_empty() {
+        specd::trace::write_chrome_trace(trace_out)?;
+        println!("trace: {trace_out} (chrome://tracing or https://ui.perfetto.dev)");
     }
     Ok(())
 }
@@ -185,6 +213,8 @@ fn generate(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
 /// only through the bounded admission queue, and each request's output
 /// comes back over its own delta channel.
 fn serve_http(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
+    let trace_out = arm_trace(args);
+    let log_requests = args.flag("log-requests");
     let tokenizer = Arc::new(Tokenizer::load(&manifest.vocab_path())?);
     let run_cfg = RunConfig {
         artifacts_dir: args.str("artifacts").to_string(),
@@ -219,7 +249,9 @@ fn serve_http(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
             let manifest = Manifest::load(&sched_cfg.artifacts_dir)?;
             let l = load(&manifest, &sched_cfg.draft_model, &sched_cfg.target_model)?;
             let decoder = SpecDecoder::new(&l.draft, &l.target, sched_cfg.gamma)?;
-            let coord = Coordinator::new(decoder, sched_cfg.clone())?.with_gauges(sched_gauges);
+            let coord = Coordinator::new(decoder, sched_cfg.clone())?
+                .with_gauges(sched_gauges)
+                .with_access_log(log_requests);
             coord.serve(req_rx, resp_tx)
         })
         .map_err(specd::Error::Io)?;
@@ -233,13 +265,18 @@ fn serve_http(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
         max_new_ceiling: run_cfg.max_new_tokens,
         default_deadline: args.ms_opt("timeout-ms")?,
         scheduler_gauges: Some(gauges),
+        debug_endpoints: args.flag("debug-endpoints"),
         ..ServerConfig::default()
     };
+    let debug_endpoints = srv_cfg.debug_endpoints;
     let server = Server::start(srv_cfg, tokenizer, req_tx)?;
     println!("specd: serving on http://{}", server.addr());
     println!("  POST /v1/generate          generate (JSON in/out)");
     println!("  POST /v1/generate?stream=1 chunked per-block token stream");
     println!("  GET  /healthz | /metrics   liveness | Prometheus");
+    if debug_endpoints {
+        println!("  GET  /debug/trace | /debug/requests/<id>  flight recorder");
+    }
 
     // The scheduler only returns when the admission queue closes (the
     // server stopping) or on startup failure. std-only means no signal
@@ -252,12 +289,14 @@ fn serve_http(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
     let _ = drainer.join();
     let metrics = result?;
     println!("{}", metrics.report());
+    export_trace(&trace_out)?;
     Ok(())
 }
 
 /// `specd replay` — in-process Poisson trace replay (the pre-HTTP serving
 /// harness; still the cleanest way to benchmark the coordinator alone).
 fn replay(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
+    let trace_out = arm_trace(args);
     let l = load(manifest, args.str("draft"), args.str("target"))?;
     let run_cfg = RunConfig {
         artifacts_dir: args.str("artifacts").to_string(),
@@ -285,7 +324,8 @@ fn replay(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
     let trace = build_trace(&l.suite, &trace_cfg)?;
 
     let decoder = SpecDecoder::new(&l.draft, &l.target, run_cfg.gamma)?;
-    let coord = Coordinator::new(decoder, run_cfg.clone())?;
+    let coord =
+        Coordinator::new(decoder, run_cfg.clone())?.with_access_log(args.flag("log-requests"));
     let (req_tx, req_rx) = exec::bounded::<Request>(run_cfg.queue_depth);
     let (resp_tx, resp_rx) = exec::bounded(run_cfg.queue_depth);
 
@@ -317,6 +357,7 @@ fn replay(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
     if errors > 0 {
         println!("errors: {errors}");
     }
+    export_trace(&trace_out)?;
     Ok(())
 }
 
@@ -327,6 +368,7 @@ fn replay(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
 /// per position. Re-running with the same flags resumes from the last
 /// complete shard without duplicating records.
 fn distill(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
+    let trace_out = arm_trace(args);
     let l = load(manifest, args.str("draft"), args.str("target"))?;
     let decoder = SpecDecoder::new(&l.draft, &l.target, args.usize("gamma")?)?;
     let temperatures = args
@@ -362,6 +404,7 @@ fn distill(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
     let prom = std::path::Path::new(&cfg.out_dir).join("metrics.prom");
     std::fs::write(&prom, metrics.prometheus_text()).map_err(specd::Error::Io)?;
     println!("dataset: {}  (metrics: {})", cfg.out_dir, prom.display());
+    export_trace(&trace_out)?;
     Ok(())
 }
 

@@ -132,6 +132,138 @@ pub fn prom_gauge(out: &mut String, name: &str, help: &str, v: f64) {
     out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n"));
 }
 
+/// Upper bounds for per-phase block-seconds histograms (seconds).
+pub const BLOCK_SECONDS_BOUNDS: [f64; 8] =
+    [0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25];
+
+/// Upper bounds for the admission queue-wait histogram (seconds).
+pub const QUEUE_WAIT_BOUNDS: [f64; 8] = [0.001, 0.005, 0.01, 0.05, 0.1, 0.5, 1.0, 5.0];
+
+/// A real Prometheus histogram: fixed finite upper bounds plus the
+/// implicit `+Inf` overflow bucket, exposed in cumulative
+/// `_bucket`/`_sum`/`_count` form. Unlike the windowed quantile
+/// summaries ([`ServeMetrics::prometheus_text`]), bucket counts are
+/// lifetime-monotonic, so quantiles survive scrape resets and can be
+/// aggregated across instances.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Histogram {
+    /// Finite upper bounds, ascending and deduplicated.
+    bounds: Vec<f64>,
+    /// Per-bucket (non-cumulative) counts; `counts[bounds.len()]` = +Inf.
+    counts: Vec<u64>,
+    sum: f64,
+    count: u64,
+}
+
+impl Histogram {
+    pub fn with_bounds(bounds: &[f64]) -> Histogram {
+        let mut b: Vec<f64> = bounds.iter().copied().filter(|v| v.is_finite()).collect();
+        b.sort_by(|x, y| x.partial_cmp(y).expect("finite bounds"));
+        b.dedup();
+        Histogram { counts: vec![0; b.len() + 1], bounds: b, sum: 0.0, count: 0 }
+    }
+
+    /// Integer buckets `0, 1, ..., gamma` for accepted-drafts-per-block
+    /// depth (a block can accept anywhere in `0..=gamma`).
+    pub fn accept_depth(gamma: usize) -> Histogram {
+        let bounds: Vec<f64> = (0..=gamma).map(|i| i as f64).collect();
+        Histogram::with_bounds(&bounds)
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        self.observe_n(v, 1);
+    }
+
+    /// Record `n` observations of the same value in O(1) (pre-bucketed
+    /// sources like [`crate::coordinator::Response::depth_counts`]).
+    pub fn observe_n(&mut self, v: f64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        if self.counts.is_empty() {
+            self.counts = vec![0; self.bounds.len() + 1];
+        }
+        let i = self.bounds.iter().position(|b| v <= *b).unwrap_or(self.bounds.len());
+        self.counts[i] += n;
+        self.sum += v * n as f64;
+        self.count += n;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Fold another histogram in. Identical layouts add bucket-wise; an
+    /// uninitialized side adopts the other's layout; mismatched layouts
+    /// (shouldn't happen within one process) re-bucket the other side's
+    /// counts at their upper bounds so nothing is silently dropped.
+    pub fn merge(&mut self, other: &Histogram) {
+        if other.count == 0 && other.bounds.is_empty() {
+            return;
+        }
+        if self.bounds.is_empty() && self.count == 0 {
+            *self = other.clone();
+            return;
+        }
+        if self.counts.is_empty() {
+            self.counts = vec![0; self.bounds.len() + 1];
+        }
+        if self.bounds == other.bounds {
+            for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+                *a += b;
+            }
+        } else {
+            for (i, &c) in other.counts.iter().enumerate() {
+                if c == 0 {
+                    continue;
+                }
+                let v = other.bounds.get(i).copied().unwrap_or(f64::INFINITY);
+                let j = self.bounds.iter().position(|b| v <= *b).unwrap_or(self.bounds.len());
+                self.counts[j] += c;
+            }
+        }
+        self.sum += other.sum;
+        self.count += other.count;
+    }
+
+    /// Emit this histogram's sample lines for an already-headed family.
+    /// `label` is a ready label pair like `phase="verify"` (must contain
+    /// no spaces) or `""` for an unlabeled series.
+    fn render_series(&self, out: &mut String, name: &str, label: &str) {
+        let sep = if label.is_empty() { "" } else { "," };
+        let mut cum = 0u64;
+        for (i, b) in self.bounds.iter().enumerate() {
+            cum += self.counts.get(i).copied().unwrap_or(0);
+            out.push_str(&format!("{name}_bucket{{{label}{sep}le=\"{b}\"}} {cum}\n"));
+        }
+        out.push_str(&format!("{name}_bucket{{{label}{sep}le=\"+Inf\"}} {}\n", self.count));
+        if label.is_empty() {
+            out.push_str(&format!("{name}_sum {}\n{name}_count {}\n", self.sum, self.count));
+        } else {
+            out.push_str(&format!("{name}_sum{{{label}}} {}\n", self.sum));
+            out.push_str(&format!("{name}_count{{{label}}} {}\n", self.count));
+        }
+    }
+}
+
+/// Emit one Prometheus histogram family: one HELP/TYPE header, then one
+/// series of `_bucket`/`_sum`/`_count` lines per `(label, histogram)`
+/// pair (label `""` = unlabeled).
+pub fn prom_histogram(out: &mut String, name: &str, help: &str, series: &[(&str, &Histogram)]) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} histogram\n"));
+    for (label, h) in series {
+        h.render_series(out, name, label);
+    }
+}
+
 /// Latency/throughput aggregation for the serving benchmark.
 #[derive(Debug, Default)]
 pub struct ServeMetrics {
@@ -184,6 +316,16 @@ pub struct ServeMetrics {
     /// Windowed per-request queue-wait samples, seconds (enqueue → the
     /// request's prefill starting).
     pub queue_wait: Vec<f64>,
+    /// Accepted drafts per speculation block (0..=γ integer buckets) —
+    /// the per-position acceptance view behind `specd_accept_depth`.
+    pub accept_depth: Histogram,
+    /// Per-iteration engine-phase wall seconds (`specd_block_seconds`).
+    pub block_draft_sync: Histogram,
+    pub block_propose: Histogram,
+    pub block_verify: Histogram,
+    /// Unwindowed queue-wait histogram: unlike the [`Self::queue_wait`]
+    /// summary window, bucket counts survive scrape resets.
+    pub queue_wait_hist: Histogram,
 }
 
 impl ServeMetrics {
@@ -288,6 +430,11 @@ impl ServeMetrics {
         self.prefill_dispatches += other.prefill_dispatches;
         self.prefill_tokens += other.prefill_tokens;
         self.phase_prefill_seconds += other.phase_prefill_seconds;
+        self.accept_depth.merge(&other.accept_depth);
+        self.block_draft_sync.merge(&other.block_draft_sync);
+        self.block_propose.merge(&other.block_propose);
+        self.block_verify.merge(&other.block_verify);
+        self.queue_wait_hist.merge(&other.queue_wait_hist);
     }
 
     /// Render in Prometheus text exposition format (`GET /metrics`).
@@ -363,7 +510,29 @@ impl ServeMetrics {
                          self.phase_prefill_seconds);
             prom_gauge(&mut s, "specd_prefill_mean_wave_lanes",
                        "Mean lanes per fused admission wave.", self.mean_wave_lanes());
+            prom_histogram(
+                &mut s,
+                "specd_block_seconds",
+                "Per-iteration engine-phase wall seconds.",
+                &[
+                    ("phase=\"draft_sync\"", &self.block_draft_sync),
+                    ("phase=\"propose\"", &self.block_propose),
+                    ("phase=\"verify\"", &self.block_verify),
+                ],
+            );
         }
+        prom_histogram(
+            &mut s,
+            "specd_accept_depth",
+            "Accepted draft tokens per speculation block.",
+            &[("", &self.accept_depth)],
+        );
+        prom_histogram(
+            &mut s,
+            "specd_queue_wait_seconds",
+            "Admission-queue wait (enqueue to prefill start), unwindowed.",
+            &[("", &self.queue_wait_hist)],
+        );
 
         let mut summary = |name: &str, help: &str, stats: &Option<Stats>| {
             s.push_str(&format!("# HELP {name} {help}\n# TYPE {name} summary\n"));
@@ -474,6 +643,8 @@ pub struct DistillMetrics {
     pub prefill_tokens: usize,
     pub phase_prefill_seconds: f64,
     pub spec: SpecStats,
+    /// Accepted drafts per speculation block (0..=γ integer buckets).
+    pub accept_depth: Histogram,
 }
 
 impl DistillMetrics {
@@ -544,6 +715,12 @@ impl DistillMetrics {
                    "Response-token generation throughput.", self.tokens_per_sec());
         prom_gauge(&mut s, "specd_distill_capture_overhead",
                    "Fraction of wall time spent in top-k capture.", self.capture_overhead());
+        prom_histogram(
+            &mut s,
+            "specd_distill_accept_depth",
+            "Accepted draft tokens per speculation block.",
+            &[("", &self.accept_depth)],
+        );
         s
     }
 
@@ -1019,6 +1196,125 @@ mod tests {
             assert!(line.starts_with("specd_distill_"), "bad family: {line}");
             assert_eq!(line.split_whitespace().count(), 2, "bad line: {line}");
         }
+    }
+
+    #[test]
+    fn histogram_buckets_cumulatively_and_exposes() {
+        let mut h = Histogram::with_bounds(&[0.01, 0.1, 1.0]);
+        for v in [0.005, 0.01, 0.05, 0.5, 2.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.sum() - 2.565).abs() < 1e-12);
+        let mut s = String::new();
+        prom_histogram(&mut s, "t_seconds", "help.", &[("", &h)]);
+        assert!(s.contains("# TYPE t_seconds histogram"), "{s}");
+        // Cumulative: 0.01 holds both the below-bound and the exact-bound
+        // sample (le is inclusive).
+        assert!(s.contains("t_seconds_bucket{le=\"0.01\"} 2"), "{s}");
+        assert!(s.contains("t_seconds_bucket{le=\"0.1\"} 3"), "{s}");
+        assert!(s.contains("t_seconds_bucket{le=\"1\"} 4"), "{s}");
+        assert!(s.contains("t_seconds_bucket{le=\"+Inf\"} 5"), "{s}");
+        assert!(s.contains("t_seconds_sum 2.565"), "{s}");
+        assert!(s.contains("t_seconds_count 5"), "{s}");
+        // Exposition invariant: every non-comment line is `name value`.
+        for line in s.lines().filter(|l| !l.starts_with('#')) {
+            assert_eq!(line.split_whitespace().count(), 2, "bad line: {line}");
+        }
+    }
+
+    #[test]
+    fn histogram_accept_depth_has_integer_buckets() {
+        let gamma = 3;
+        let mut h = Histogram::accept_depth(gamma);
+        for depth in [0, 1, 1, 3, 3, 3, 2] {
+            h.observe(depth as f64);
+        }
+        assert_eq!(h.count(), 7);
+        assert_eq!(h.sum(), 13.0, "sum must equal total accepted tokens");
+        let mut s = String::new();
+        prom_histogram(&mut s, "specd_accept_depth", "help.", &[("", &h)]);
+        assert!(s.contains("specd_accept_depth_bucket{le=\"0\"} 1"), "{s}");
+        assert!(s.contains("specd_accept_depth_bucket{le=\"1\"} 3"), "{s}");
+        assert!(s.contains("specd_accept_depth_bucket{le=\"2\"} 4"), "{s}");
+        assert!(s.contains("specd_accept_depth_bucket{le=\"3\"} 7"), "{s}");
+        assert!(s.contains("specd_accept_depth_bucket{le=\"+Inf\"} 7"), "{s}");
+    }
+
+    #[test]
+    fn histogram_merge_adds_and_adopts() {
+        let mut a = Histogram::default(); // uninitialized side
+        let mut b = Histogram::accept_depth(2);
+        b.observe(0.0);
+        b.observe(2.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        let mut c = Histogram::accept_depth(2);
+        c.observe(1.0);
+        a.merge(&c);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.sum(), 3.0);
+        let mut s = String::new();
+        prom_histogram(&mut s, "d", "help.", &[("", &a)]);
+        assert!(s.contains("d_bucket{le=\"1\"} 2"), "{s}");
+        // Mismatched layouts: counts land at their upper bounds, nothing lost.
+        let mut other = Histogram::with_bounds(&[0.5]);
+        other.observe(0.25);
+        other.observe(9.0); // +Inf bucket
+        a.merge(&other);
+        assert_eq!(a.count(), 5);
+        let mut s = String::new();
+        prom_histogram(&mut s, "d", "help.", &[("", &a)]);
+        assert!(s.contains("d_bucket{le=\"+Inf\"} 5"), "{s}");
+    }
+
+    #[test]
+    fn histogram_phase_labels_render_one_family() {
+        let mut ds = Histogram::with_bounds(&BLOCK_SECONDS_BOUNDS);
+        let mut v = Histogram::with_bounds(&BLOCK_SECONDS_BOUNDS);
+        ds.observe(0.002);
+        v.observe(0.02);
+        let mut s = String::new();
+        prom_histogram(
+            &mut s,
+            "specd_block_seconds",
+            "help.",
+            &[("phase=\"draft_sync\"", &ds), ("phase=\"verify\"", &v)],
+        );
+        assert_eq!(s.matches("# TYPE specd_block_seconds histogram").count(), 1);
+        assert!(s.contains("specd_block_seconds_bucket{phase=\"draft_sync\",le=\"0.0025\"} 1"),
+                "{s}");
+        assert!(s.contains("specd_block_seconds_bucket{phase=\"verify\",le=\"+Inf\"} 1"), "{s}");
+        assert!(s.contains("specd_block_seconds_sum{phase=\"verify\"} 0.02"), "{s}");
+        assert!(s.contains("specd_block_seconds_count{phase=\"draft_sync\"} 1"), "{s}");
+        // Labels carry no spaces: the 2-field exposition invariant holds.
+        for line in s.lines().filter(|l| !l.starts_with('#')) {
+            assert_eq!(line.split_whitespace().count(), 2, "bad line: {line}");
+        }
+    }
+
+    #[test]
+    fn serve_metrics_render_new_histogram_families() {
+        let mut m = ServeMetrics::default();
+        m.accept_depth = Histogram::accept_depth(3);
+        m.accept_depth.observe(2.0);
+        m.queue_wait_hist = Histogram::with_bounds(&QUEUE_WAIT_BOUNDS);
+        m.queue_wait_hist.observe(0.03);
+        m.batch_iterations = 1;
+        m.block_verify = Histogram::with_bounds(&BLOCK_SECONDS_BOUNDS);
+        m.block_verify.observe(0.004);
+        let text = m.prometheus_text();
+        assert!(text.contains("# TYPE specd_accept_depth histogram"), "{text}");
+        assert!(text.contains("specd_accept_depth_bucket{le=\"3\"} 1"), "{text}");
+        assert!(text.contains("specd_queue_wait_seconds_bucket{le=\"0.05\"} 1"), "{text}");
+        assert!(text.contains("specd_block_seconds_bucket{phase=\"verify\",le=\"0.005\"} 1"),
+                "{text}");
+        // The live HTTP aggregate (no scheduler fields) still renders the
+        // request-scoped histograms but not the phase family.
+        let empty = ServeMetrics::default().prometheus_text();
+        assert!(empty.contains("specd_accept_depth_bucket{le=\"+Inf\"} 0"), "{empty}");
+        assert!(empty.contains("specd_queue_wait_seconds_count 0"), "{empty}");
+        assert!(!empty.contains("specd_block_seconds"), "{empty}");
     }
 
     #[test]

@@ -613,9 +613,16 @@ impl Model {
             return Err(Error::KvCache(format!("pack into dead arena lane {lane}")));
         }
         let client = &self.arch.rt.client;
+        let tr0 = crate::trace::begin();
         let lane_buf = client.buffer_from_host_buffer::<i32>(&[lane as i32], &[], None)?;
         let mut out = bx.pack.execute_b(&[&arena.states, &buf, &lane_buf])?;
         self.count_dispatch();
+        crate::trace::dispatch(
+            tr0,
+            crate::trace::DispatchKind::Pack,
+            1,
+            (self.arch.arch.state_len * 4) as u64,
+        );
         let new_states = out
             .get_mut(0)
             .and_then(|r| (!r.is_empty()).then(|| r.remove(0)))
@@ -645,6 +652,7 @@ impl Model {
             .ok_or_else(|| Error::msg("no batched entry points in this bundle"))?;
         let block = self.arch.block(entry);
         let (b, sl, kvn) = (bx.batch, self.arch.arch.state_len, self.arch.arch.kv_len);
+        let tr0 = crate::trace::begin();
         arena.staging.stage(calls, block, self.arch.arch.max_seq, &arena.ledger)?;
         let client = &self.arch.rt.client;
         let tok_buf = client.buffer_from_host_buffer::<i32>(
@@ -664,6 +672,13 @@ impl Model {
 
         let mut out = bx.exe(entry).execute_b(&args)?;
         self.count_dispatch();
+        // Staged host->device bytes: [B, block] i32 tokens + [B] pos + [B] mask.
+        crate::trace::dispatch(
+            tr0,
+            crate::trace::DispatchKind::from_entry(entry.name()),
+            1,
+            (4 * (b * block + 2 * b)) as u64,
+        );
         let new_states = out
             .get_mut(0)
             .and_then(|r| (!r.is_empty()).then(|| r.remove(0)))
@@ -674,8 +689,16 @@ impl Model {
         // off when the avoided copy is large.
         let use_extract = sl > EXTRACT_THRESHOLD_ELEMS;
         if let Some(extract) = bx.extract.as_ref().filter(|_| use_extract) {
+            let tr0 = crate::trace::begin();
             let mut out = extract.execute_b(&[&new_states])?;
             self.count_dispatch();
+            // Read-back bytes: [B, state_len - kv_len] f32 logits regions.
+            crate::trace::dispatch(
+                tr0,
+                crate::trace::DispatchKind::Extract,
+                1,
+                (4 * b * (sl - kvn)) as u64,
+            );
             let lbuf = out
                 .get_mut(0)
                 .and_then(|r| (!r.is_empty()).then(|| r.remove(0)))
@@ -749,6 +772,7 @@ impl Model {
             )));
         }
         let client = &self.arch.rt.client;
+        let tr0 = crate::trace::begin();
         let tok_buf = {
             let mut staging = self.tok_staging.borrow_mut();
             staging[..block].fill(0);
@@ -767,6 +791,13 @@ impl Model {
 
         let mut exec_out = self.arch.exe(entry).execute_b(&args)?;
         self.count_dispatch();
+        // Staged host->device bytes: [block] i32 tokens + the pos scalar.
+        crate::trace::dispatch(
+            tr0,
+            crate::trace::DispatchKind::from_entry(entry.name()),
+            1,
+            (4 * (block + 1)) as u64,
+        );
         let buf = exec_out
             .get_mut(0)
             .and_then(|r| (!r.is_empty()).then(|| r.remove(0)))
@@ -783,8 +814,15 @@ impl Model {
         let use_extract = self.arch.arch.state_len > EXTRACT_THRESHOLD_ELEMS;
         out.clear();
         if let Some(extract) = self.arch.extract.as_ref().filter(|_| use_extract) {
+            let tr0 = crate::trace::begin();
             let mut eo = extract.execute_b(&[&buf])?;
             self.count_dispatch();
+            crate::trace::dispatch(
+                tr0,
+                crate::trace::DispatchKind::Extract,
+                1,
+                (4 * (self.arch.arch.state_len - self.arch.arch.kv_len)) as u64,
+            );
             let lbuf = eo
                 .get_mut(0)
                 .and_then(|r| (!r.is_empty()).then(|| r.remove(0)))

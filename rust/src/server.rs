@@ -81,6 +81,11 @@ pub struct ServerConfig {
     /// shared with the scheduler thread and appended to `GET /metrics`
     /// when present.
     pub scheduler_gauges: Option<Arc<SchedulerGauges>>,
+    /// Expose `GET /debug/trace` (flight-recorder ring as Chrome trace
+    /// JSON) and `GET /debug/requests/<id>` (one request's lifecycle
+    /// timeline). Off by default: the endpoints 404 unless the operator
+    /// opts in (`--debug-endpoints`).
+    pub debug_endpoints: bool,
 }
 
 impl Default for ServerConfig {
@@ -95,6 +100,7 @@ impl Default for ServerConfig {
             keep_alive_idle: Duration::from_secs(10),
             scheduler_wait: Duration::from_secs(120),
             scheduler_gauges: None,
+            debug_endpoints: false,
         }
     }
 }
@@ -352,6 +358,23 @@ fn route(
             respond(&inner.state, w, 200, "text/plain; version=0.0.4", text.as_bytes(), keep, &[])
         }
         ("POST", "/v1/generate") => generate(req, keep, w, inner, req_tx),
+        // Debug endpoints 404 (fall through to the catch-all) unless the
+        // operator opted in: trace rings leak prompts' shape and timing.
+        ("GET", "/debug/trace") if inner.cfg.debug_endpoints => {
+            let body = crate::trace::chrome_trace_json();
+            respond(&inner.state, w, 200, "application/json", body.as_bytes(), keep, &[])
+        }
+        ("GET", p) if inner.cfg.debug_endpoints && p.starts_with("/debug/requests/") => {
+            let seg = &p["/debug/requests/".len()..];
+            let timeline = crate::trace::resolve_request_id(seg)
+                .and_then(crate::trace::request_timeline_json);
+            match timeline {
+                Some(body) => {
+                    respond(&inner.state, w, 200, "application/json", body.as_bytes(), keep, &[])
+                }
+                None => respond_error(&inner.state, w, 404, keep, "unknown request"),
+            }
+        }
         (_, "/healthz" | "/metrics" | "/v1/generate") => {
             respond_error(&inner.state, w, 405, keep, "method not allowed")
         }
@@ -454,14 +477,23 @@ fn generate(
     req_tx: &Sender<Request>,
 ) -> bool {
     let id = inner.state.next_id.fetch_add(1, Ordering::Relaxed);
+    // Client-facing request ID, minted at the HTTP edge: honor a
+    // reasonable `X-Request-Id` so client-side correlation survives,
+    // otherwise derive one from the internal id. Echoed on every response
+    // (header + error bodies + SSE preamble) and mapped into the trace.
+    let rid = match req.header("x-request-id") {
+        Some(h) if !h.is_empty() && h.len() <= crate::trace::MAX_RID_LEN => h.to_string(),
+        _ => format!("req-{id}"),
+    };
+    crate::trace::register_rid(id, &rid);
     let spec = match parse_gen_spec(req, inner, id) {
         Ok(s) => s,
-        Err(msg) => return respond_error(&inner.state, w, 400, keep, &msg),
+        Err(msg) => return respond_error_rid(&inner.state, w, 400, keep, &msg, &rid),
     };
     // Chunked transfer encoding doesn't exist in HTTP/1.0; refuse rather
     // than feed the client framing it cannot parse.
     if spec.stream && !req.http11 {
-        return respond_error(&inner.state, w, 400, keep, "streaming requires HTTP/1.1");
+        return respond_error_rid(&inner.state, w, 400, keep, "streaming requires HTTP/1.1", &rid);
     }
 
     // Channel sized so the scheduler never blocks on a slow client:
@@ -484,19 +516,22 @@ fn generate(
         Err(TrySendError::Full(_)) => {
             return respond_with(
                 &inner.state, w, 429, keep,
-                ObjWriter::new().str("error", "server busy: admission queue full").finish(),
-                &[("retry-after", "1")],
+                ObjWriter::new()
+                    .str("error", "server busy: admission queue full")
+                    .str("request_id", &rid)
+                    .finish(),
+                &[("retry-after", "1"), ("x-request-id", &rid)],
             );
         }
         Err(TrySendError::Closed(_)) => {
-            return respond_error(&inner.state, w, 503, keep, "scheduler offline");
+            return respond_error_rid(&inner.state, w, 503, keep, "scheduler offline", &rid);
         }
     }
 
     if spec.stream {
-        stream_response(id, keep, w, inner, &ev_rx)
+        stream_response(id, keep, w, inner, &ev_rx, &rid)
     } else {
-        unary_response(id, keep, w, inner, &ev_rx)
+        unary_response(id, keep, w, inner, &ev_rx, &rid)
     }
 }
 
@@ -507,6 +542,7 @@ fn unary_response(
     w: &mut TcpStream,
     inner: &Inner,
     ev_rx: &exec::Receiver<Delta>,
+    rid: &str,
 ) -> bool {
     let mut admitted = false;
     let mut drain_waited = Duration::ZERO;
@@ -527,6 +563,7 @@ fn unary_response(
                 let text = inner.tokenizer.decode(&r.tokens);
                 let mut o = ObjWriter::new()
                     .num("id", id as f64)
+                    .str("request_id", rid)
                     .u32_arr("tokens", &r.tokens)
                     .str("text", &text)
                     .num("latency_s", r.latency)
@@ -535,7 +572,8 @@ fn unary_response(
                 if let Some(e) = &r.error {
                     o = o.str("error", e);
                 }
-                return respond_with(&inner.state, w, code, keep, o.finish(), &[]);
+                let hdrs = [("x-request-id", rid)];
+                return respond_with(&inner.state, w, code, keep, o.finish(), &hdrs);
             }
             Err(RecvTimeoutError::Timeout) => {
                 // Still queued: not a stall — admission-queue wait is
@@ -548,17 +586,18 @@ fn unary_response(
                     if inner.shutdown.load(Ordering::SeqCst) {
                         drain_waited += ADMIT_TICK;
                         if drain_waited >= inner.cfg.scheduler_wait {
-                            return respond_error(&inner.state, w, 503, false,
-                                                 "server shutting down");
+                            return respond_error_rid(&inner.state, w, 503, false,
+                                                     "server shutting down", rid);
                         }
                     }
                     continue;
                 }
                 // Dropping ev_rx after this cancels the sequence server-side.
-                return respond_error(&inner.state, w, 504, false, "scheduler stalled");
+                return respond_error_rid(&inner.state, w, 504, false, "scheduler stalled", rid);
             }
             Err(RecvTimeoutError::Closed) => {
-                return respond_error(&inner.state, w, 500, false, "scheduler dropped request");
+                return respond_error_rid(&inner.state, w, 500, false,
+                                         "scheduler dropped request", rid);
             }
         }
     }
@@ -571,11 +610,20 @@ fn stream_response(
     w: &mut TcpStream,
     inner: &Inner,
     ev_rx: &exec::Receiver<Delta>,
+    rid: &str,
 ) -> bool {
     inner.state.count_status(200);
-    let Ok(mut cw) = ChunkedWriter::start(w, 200, "text/event-stream", keep) else {
+    let hdrs = [("x-request-id", rid)];
+    let Ok(mut cw) = ChunkedWriter::start(w, 200, "text/event-stream", keep, &hdrs) else {
         return false;
     };
+    // Stream preamble: the request ID arrives before any token event, so
+    // a client can correlate the stream with server logs and
+    // `/debug/requests/<id>` from the first byte.
+    let preamble = ObjWriter::new().str("request_id", rid).finish();
+    if cw.chunk(format!("data: {preamble}\n\n").as_bytes()).is_err() {
+        return false;
+    }
     let mut admitted = false;
     let mut drain_waited = Duration::ZERO;
     loop {
@@ -600,6 +648,7 @@ fn stream_response(
                 let mut o = ObjWriter::new()
                     .bool("done", true)
                     .num("id", id as f64)
+                    .str("request_id", rid)
                     .num("tokens_total", r.tokens.len() as f64)
                     .str("text", &inner.tokenizer.decode(&r.tokens))
                     .num("latency_s", r.latency)
@@ -644,6 +693,16 @@ fn stream_response(
 /// One completed request folded into the live aggregate.
 fn completed_metrics(r: &crate::coordinator::Response) -> ServeMetrics {
     let mut m = ServeMetrics::default();
+    // Acceptance-depth counts cover every block the request decoded, even
+    // when it later timed out — the live `specd_accept_depth` histogram
+    // sums to the aggregate `SpecStats.accepted` (pinned in
+    // rust/tests/server_integration.rs).
+    if !r.depth_counts.is_empty() {
+        m.accept_depth = crate::metrics::Histogram::accept_depth(r.depth_counts.len() - 1);
+        for (depth, &blocks) in r.depth_counts.iter().enumerate() {
+            m.accept_depth.observe_n(depth as f64, blocks as u64);
+        }
+    }
     match r.error.as_deref() {
         None => {
             m.total_requests = 1;
@@ -701,6 +760,20 @@ fn respond_with(
 
 fn respond_error(state: &ServerState, w: &mut impl Write, code: u16, keep: bool, msg: &str) -> bool {
     respond_with(state, w, code, keep, ObjWriter::new().str("error", msg).finish(), &[])
+}
+
+/// Error response that carries the request ID in both the `x-request-id`
+/// header and the JSON body, so failed requests stay correlatable.
+fn respond_error_rid(
+    state: &ServerState,
+    w: &mut impl Write,
+    code: u16,
+    keep: bool,
+    msg: &str,
+    rid: &str,
+) -> bool {
+    let body = ObjWriter::new().str("error", msg).str("request_id", rid).finish();
+    respond_with(state, w, code, keep, body, &[("x-request-id", rid)])
 }
 
 #[cfg(test)]

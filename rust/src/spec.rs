@@ -174,6 +174,9 @@ pub struct SpecSession {
     pub finished: bool,
     /// Target top-k capture sink; `None` (the serving default) costs nothing.
     pub capture: Option<LogitCapture>,
+    /// Flight-recorder request ID for per-block trace marks (0 = untraced;
+    /// the coordinator/datagen set it after adopting the session).
+    pub trace_id: u64,
 }
 
 impl SpecSession {
@@ -324,6 +327,7 @@ impl<'a> SpecDecoder<'a> {
             stats,
             finished: false,
             capture: None,
+            trace_id: 0,
         })
     }
 
@@ -528,6 +532,7 @@ impl<'a> SpecDecoder<'a> {
             stats,
             finished: false,
             capture: None,
+            trace_id: 0,
         })
     }
 
@@ -785,6 +790,9 @@ impl<'a> SpecDecoder<'a> {
             cap.seconds += t0.elapsed().as_secs_f64();
         }
         s.seq.extend_from_slice(&emitted);
+        if s.trace_id != 0 && crate::trace::enabled() {
+            crate::trace::req_block(s.trace_id, k as u64, emitted.len() as u64);
+        }
         Ok(emitted)
     }
 

@@ -1,0 +1,813 @@
+//! Flight-recorder tracing: bounded ring of spans from HTTP accept down to
+//! individual PJRT dispatches.
+//!
+//! The recorder is a process-global (like the `log` crate's facade) so the
+//! hook sites in [`crate::runtime`], [`crate::batch`], [`crate::spec`] and
+//! [`crate::coordinator`] don't have to thread a handle through every
+//! signature. Disabled tracing costs one relaxed atomic load per site:
+//! [`begin`] returns the sentinel `0` and every recording call bails on it
+//! before taking a timestamp or the ring lock (the dispatch microbench
+//! hard-asserts this stays under 1% of a token's budget).
+//!
+//! Three consumers share the ring:
+//!
+//! 1. `--trace-out <path>` writes Chrome trace-event JSON ([`write_chrome_trace`];
+//!    loadable in Perfetto / `chrome://tracing`). Scheduler work (iterations,
+//!    waves, phases, dispatches) lands on one track as nested `ph:"X"`
+//!    duration events; request lifecycle marks (queued, admitted, per-block
+//!    acceptance, terminal) are `ph:"i"` instants on a second track.
+//! 2. `/debug/trace` and `/debug/requests/<id>` snapshot the ring for a live
+//!    server ([`chrome_trace_json`], [`request_timeline_json`]).
+//! 3. `--log-requests` emits one structured JSON access-log line per request
+//!    terminal on stderr ([`access_log`]).
+//!
+//! Request IDs are the coordinator's `u64`s; the client-facing string IDs
+//! (honored `X-Request-Id` or generated `req-<n>`) live in a bounded side
+//! map ([`register_rid`]) so the wire strings never enter the fixed-size
+//! [`Event`].
+
+use std::collections::VecDeque;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::json::ObjWriter;
+
+/// Default ring capacity: ~3 MB of events, minutes of serving at typical
+/// dispatch rates.
+pub const DEFAULT_CAPACITY: usize = 65_536;
+
+/// Client-facing request-id strings are clipped to this many bytes.
+pub const MAX_RID_LEN: usize = 128;
+
+/// At most this many request-id strings are retained (oldest evicted).
+const MAX_RIDS: usize = 4096;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static RECORDER: Mutex<Option<Recorder>> = Mutex::new(None);
+
+// ---------------------------------------------------------------------------
+// Event model
+// ---------------------------------------------------------------------------
+
+/// Engine phase within one batch step (see `batch::BatchStep::run`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    DraftSync,
+    Propose,
+    Verify,
+}
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::DraftSync => "draft_sync",
+            Phase::Propose => "propose",
+            Phase::Verify => "verify",
+        }
+    }
+}
+
+/// What a PJRT dispatch was for (entry point or staging helper).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DispatchKind {
+    Prefill,
+    Decode,
+    Verify,
+    Pack,
+    Extract,
+}
+
+impl DispatchKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            DispatchKind::Prefill => "prefill",
+            DispatchKind::Decode => "decode",
+            DispatchKind::Verify => "verify",
+            DispatchKind::Pack => "pack",
+            DispatchKind::Extract => "extract",
+        }
+    }
+
+    /// Map a runtime entry name ("prefill"/"verify"/"decode") to a kind.
+    pub fn from_entry(name: &str) -> DispatchKind {
+        match name {
+            "prefill" => DispatchKind::Prefill,
+            "verify" => DispatchKind::Verify,
+            _ => DispatchKind::Decode,
+        }
+    }
+}
+
+/// Why a request reached its terminal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Reason {
+    Ok,
+    Deadline,
+    Disconnect,
+    Error,
+}
+
+impl Reason {
+    pub fn name(self) -> &'static str {
+        match self {
+            Reason::Ok => "ok",
+            Reason::Deadline => "deadline",
+            Reason::Disconnect => "disconnect",
+            Reason::Error => "error",
+        }
+    }
+
+    /// Classify a terminal `Response::error` string.
+    pub fn from_error(err: Option<&str>) -> Reason {
+        match err {
+            None => Reason::Ok,
+            Some(crate::coordinator::ERR_DEADLINE) => Reason::Deadline,
+            Some(crate::coordinator::ERR_DISCONNECT) => Reason::Disconnect,
+            Some(_) => Reason::Error,
+        }
+    }
+
+    /// The HTTP status class this terminal maps to (499 = client hung up,
+    /// following the nginx convention; used by the access log where the
+    /// real wire status is out of reach).
+    pub fn status(self) -> u16 {
+        match self {
+            Reason::Ok => 200,
+            Reason::Deadline => 408,
+            Reason::Disconnect => 499,
+            Reason::Error => 500,
+        }
+    }
+}
+
+/// Discriminates what an [`Event`]'s payload words mean.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// Scheduler iteration span; a = lane-steps (occupancy), b = dispatches.
+    Iteration,
+    /// Prefill admission wave span; a = lanes, b = prompt tokens.
+    Wave,
+    /// Engine phase span; a = lanes stepped.
+    Phase(Phase),
+    /// PJRT dispatch span; a = executable launches, b = bytes staged.
+    Dispatch(DispatchKind),
+    /// Request entered the admission queue.
+    ReqQueued,
+    /// Request admitted to a decode slot; a = queue wait in µs.
+    ReqAdmitted,
+    /// One speculative block finished; a = accepted drafts, b = tokens emitted.
+    ReqBlock,
+    /// Request terminal; a = total tokens delivered.
+    ReqTerminal(Reason),
+}
+
+/// One fixed-size ring entry. `req` is 0 for scheduler-scoped events.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Event {
+    pub ts_us: u64,
+    pub dur_us: u64,
+    pub kind: Kind,
+    pub req: u64,
+    pub a: u64,
+    pub b: u64,
+}
+
+// ---------------------------------------------------------------------------
+// Recorder (behind the global mutex)
+// ---------------------------------------------------------------------------
+
+struct Recorder {
+    buf: Vec<Event>,
+    head: u64, // total events ever pushed; buf index = head % cap
+    cap: usize,
+    rids: VecDeque<(u64, String)>,
+}
+
+impl Recorder {
+    fn new(cap: usize) -> Recorder {
+        let cap = cap.max(16);
+        Recorder { buf: Vec::with_capacity(cap.min(4096)), head: 0, cap, rids: VecDeque::new() }
+    }
+
+    fn push(&mut self, ev: Event) {
+        let i = (self.head % self.cap as u64) as usize;
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[i] = ev;
+        }
+        self.head += 1;
+    }
+
+    /// Retained events, oldest first (push order).
+    fn snapshot(&self) -> Vec<Event> {
+        if self.buf.len() < self.cap {
+            self.buf.clone()
+        } else {
+            let i = (self.head % self.cap as u64) as usize;
+            let mut out = Vec::with_capacity(self.cap);
+            out.extend_from_slice(&self.buf[i..]);
+            out.extend_from_slice(&self.buf[..i]);
+            out
+        }
+    }
+}
+
+fn lock_recorder() -> std::sync::MutexGuard<'static, Option<Recorder>> {
+    RECORDER.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn record(ev: Event) {
+    if let Some(r) = lock_recorder().as_mut() {
+        r.push(ev);
+    }
+}
+
+fn now_us() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+// ---------------------------------------------------------------------------
+// Control surface
+// ---------------------------------------------------------------------------
+
+/// The per-site fast path: one relaxed load.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn the recorder on with a fresh ring of `cap` events (min 16).
+pub fn enable(cap: usize) {
+    let _ = EPOCH.get_or_init(Instant::now);
+    *lock_recorder() = Some(Recorder::new(cap));
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Stop recording. The ring is retained for late exports/snapshots.
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+/// Open a span: the starting timestamp, or `0` when tracing is disabled
+/// (every span-closing call treats `0` as "don't record").
+#[inline]
+pub fn begin() -> u64 {
+    if !enabled() {
+        return 0;
+    }
+    now_us().max(1)
+}
+
+fn span(t0: u64, kind: Kind, req: u64, a: u64, b: u64) {
+    if t0 == 0 || !enabled() {
+        return;
+    }
+    let end = now_us();
+    record(Event { ts_us: t0, dur_us: end.saturating_sub(t0), kind, req, a, b });
+}
+
+fn instant(kind: Kind, req: u64, a: u64, b: u64) {
+    if !enabled() {
+        return;
+    }
+    record(Event { ts_us: now_us(), dur_us: 0, kind, req, a, b });
+}
+
+// ---------------------------------------------------------------------------
+// Recording hooks (called from the serving stack)
+// ---------------------------------------------------------------------------
+
+/// Close a scheduler-iteration span (`lane_steps` = occupancy that step).
+pub fn iteration(t0: u64, lane_steps: u64, dispatches: u64) {
+    span(t0, Kind::Iteration, 0, lane_steps, dispatches);
+}
+
+/// Close a prefill admission-wave span.
+pub fn wave(t0: u64, lanes: u64, tokens: u64) {
+    span(t0, Kind::Wave, 0, lanes, tokens);
+}
+
+/// Close an engine-phase span.
+pub fn phase(t0: u64, which: Phase, lanes: u64) {
+    span(t0, Kind::Phase(which), 0, lanes, 0);
+}
+
+/// Close a PJRT dispatch span (`calls` executable launches, `bytes` staged
+/// host->device for compute dispatches / read back for extracts).
+pub fn dispatch(t0: u64, kind: DispatchKind, calls: u64, bytes: u64) {
+    span(t0, Kind::Dispatch(kind), 0, calls, bytes);
+}
+
+/// Request entered the admission queue.
+pub fn req_queued(id: u64) {
+    instant(Kind::ReqQueued, id, 0, 0);
+}
+
+/// Request left the queue for a decode slot.
+pub fn req_admitted(id: u64, queue_wait_us: u64) {
+    instant(Kind::ReqAdmitted, id, queue_wait_us, 0);
+}
+
+/// One speculative block finished for this request.
+pub fn req_block(id: u64, accepted: u64, emitted: u64) {
+    instant(Kind::ReqBlock, id, accepted, emitted);
+}
+
+/// Request reached its terminal.
+pub fn req_terminal(id: u64, reason: Reason, tokens_out: u64) {
+    instant(Kind::ReqTerminal(reason), id, tokens_out, 0);
+}
+
+/// Remember the client-facing string ID for a request (bounded; oldest
+/// evicted; clipped to [`MAX_RID_LEN`] bytes). No-op while disabled.
+pub fn register_rid(id: u64, rid: &str) {
+    if !enabled() {
+        return;
+    }
+    let rid = if rid.len() > MAX_RID_LEN {
+        let mut cut = MAX_RID_LEN;
+        while !rid.is_char_boundary(cut) {
+            cut -= 1;
+        }
+        &rid[..cut]
+    } else {
+        rid
+    };
+    if let Some(r) = lock_recorder().as_mut() {
+        if let Some(slot) = r.rids.iter_mut().find(|(i, _)| *i == id) {
+            slot.1 = rid.to_string();
+            return;
+        }
+        if r.rids.len() >= MAX_RIDS {
+            r.rids.pop_front();
+        }
+        r.rids.push_back((id, rid.to_string()));
+    }
+}
+
+/// Look up a request's string ID (works even after [`disable`]).
+pub fn rid_of(id: u64) -> Option<String> {
+    lock_recorder()
+        .as_ref()
+        .and_then(|r| r.rids.iter().find(|(i, _)| *i == id).map(|(_, s)| s.clone()))
+}
+
+/// Retained ring contents, oldest first. Empty when never enabled.
+pub fn snapshot() -> Vec<Event> {
+    lock_recorder().as_ref().map(|r| r.snapshot()).unwrap_or_default()
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace-event export
+// ---------------------------------------------------------------------------
+
+const PID: u64 = 1;
+const TID_SCHED: u64 = 1; // scheduler thread: iterations/waves/phases/dispatches
+const TID_REQS: u64 = 2; // request lifecycle instants
+
+fn event_json(ev: &Event) -> String {
+    let mut w = ObjWriter::new().num("pid", PID as f64);
+    match ev.kind {
+        Kind::Iteration => {
+            w = w
+                .num("tid", TID_SCHED as f64)
+                .str("ph", "X")
+                .str("name", "iteration")
+                .str("cat", "sched")
+                .num("ts", ev.ts_us as f64)
+                .num("dur", ev.dur_us as f64)
+                .raw(
+                    "args",
+                    &ObjWriter::new()
+                        .num("lane_steps", ev.a as f64)
+                        .num("dispatches", ev.b as f64)
+                        .finish(),
+                );
+        }
+        Kind::Wave => {
+            w = w
+                .num("tid", TID_SCHED as f64)
+                .str("ph", "X")
+                .str("name", "wave")
+                .str("cat", "sched")
+                .num("ts", ev.ts_us as f64)
+                .num("dur", ev.dur_us as f64)
+                .raw(
+                    "args",
+                    &ObjWriter::new()
+                        .num("lanes", ev.a as f64)
+                        .num("prompt_tokens", ev.b as f64)
+                        .finish(),
+                );
+        }
+        Kind::Phase(p) => {
+            w = w
+                .num("tid", TID_SCHED as f64)
+                .str("ph", "X")
+                .str("name", p.name())
+                .str("cat", "phase")
+                .num("ts", ev.ts_us as f64)
+                .num("dur", ev.dur_us as f64)
+                .raw("args", &ObjWriter::new().num("lanes", ev.a as f64).finish());
+        }
+        Kind::Dispatch(k) => {
+            w = w
+                .num("tid", TID_SCHED as f64)
+                .str("ph", "X")
+                .str("name", k.name())
+                .str("cat", "dispatch")
+                .num("ts", ev.ts_us as f64)
+                .num("dur", ev.dur_us as f64)
+                .raw(
+                    "args",
+                    &ObjWriter::new()
+                        .num("calls", ev.a as f64)
+                        .num("bytes", ev.b as f64)
+                        .finish(),
+                );
+        }
+        Kind::ReqQueued => {
+            w = w
+                .num("tid", TID_REQS as f64)
+                .str("ph", "i")
+                .str("s", "t")
+                .str("name", "req_queued")
+                .str("cat", "req")
+                .num("ts", ev.ts_us as f64)
+                .raw("args", &ObjWriter::new().num("req", ev.req as f64).finish());
+        }
+        Kind::ReqAdmitted => {
+            w = w
+                .num("tid", TID_REQS as f64)
+                .str("ph", "i")
+                .str("s", "t")
+                .str("name", "req_admitted")
+                .str("cat", "req")
+                .num("ts", ev.ts_us as f64)
+                .raw(
+                    "args",
+                    &ObjWriter::new()
+                        .num("req", ev.req as f64)
+                        .num("queue_wait_us", ev.a as f64)
+                        .finish(),
+                );
+        }
+        Kind::ReqBlock => {
+            w = w
+                .num("tid", TID_REQS as f64)
+                .str("ph", "i")
+                .str("s", "t")
+                .str("name", "req_block")
+                .str("cat", "req")
+                .num("ts", ev.ts_us as f64)
+                .raw(
+                    "args",
+                    &ObjWriter::new()
+                        .num("req", ev.req as f64)
+                        .num("accepted", ev.a as f64)
+                        .num("emitted", ev.b as f64)
+                        .finish(),
+                );
+        }
+        Kind::ReqTerminal(reason) => {
+            w = w
+                .num("tid", TID_REQS as f64)
+                .str("ph", "i")
+                .str("s", "t")
+                .str("name", "req_terminal")
+                .str("cat", "req")
+                .num("ts", ev.ts_us as f64)
+                .raw(
+                    "args",
+                    &ObjWriter::new()
+                        .num("req", ev.req as f64)
+                        .str("reason", reason.name())
+                        .num("tokens_out", ev.a as f64)
+                        .finish(),
+                );
+        }
+    }
+    w.finish()
+}
+
+fn thread_meta(tid: u64, name: &str) -> String {
+    ObjWriter::new()
+        .num("pid", PID as f64)
+        .num("tid", tid as f64)
+        .str("ph", "M")
+        .str("name", "thread_name")
+        .raw("args", &ObjWriter::new().str("name", name).finish())
+        .finish()
+}
+
+/// The whole retained ring as Chrome trace-event JSON (`{"traceEvents":[...]}`),
+/// events sorted by timestamp so consumers see a monotonic stream.
+pub fn chrome_trace_json() -> String {
+    let mut events = snapshot();
+    events.sort_by_key(|e| e.ts_us);
+    let mut out = String::with_capacity(events.len() * 160 + 64);
+    out.push_str("{\"traceEvents\":[");
+    out.push_str(&thread_meta(TID_SCHED, "scheduler"));
+    out.push(',');
+    out.push_str(&thread_meta(TID_REQS, "requests"));
+    for ev in &events {
+        out.push(',');
+        out.push_str(&event_json(ev));
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Write [`chrome_trace_json`] to `path`.
+pub fn write_chrome_trace(path: &str) -> crate::Result<()> {
+    std::fs::write(path, chrome_trace_json())
+        .map_err(|e| crate::Error::msg(format!("trace-out {path}: {e}")))
+}
+
+/// One request's lifecycle timeline as JSON, or `None` if the ring holds
+/// nothing for it (-> 404 on the debug endpoint).
+pub fn request_timeline_json(id: u64) -> Option<String> {
+    let events: Vec<Event> =
+        snapshot().into_iter().filter(|e| e.req == id && matches!(
+            e.kind,
+            Kind::ReqQueued | Kind::ReqAdmitted | Kind::ReqBlock | Kind::ReqTerminal(_)
+        )).collect();
+    let rid = rid_of(id);
+    if events.is_empty() && rid.is_none() {
+        return None;
+    }
+    let mut arr = String::from("[");
+    for (i, ev) in events.iter().enumerate() {
+        if i > 0 {
+            arr.push(',');
+        }
+        arr.push_str(&event_json(ev));
+    }
+    arr.push(']');
+    let mut w = ObjWriter::new().num("id", id as f64);
+    if let Some(rid) = rid {
+        w = w.str("request_id", &rid);
+    }
+    Some(w.raw("events", &arr).finish())
+}
+
+/// Resolve `/debug/requests/<id>` path segments: a numeric coordinator ID
+/// or a registered string ID.
+pub fn resolve_request_id(segment: &str) -> Option<u64> {
+    if let Ok(n) = segment.parse::<u64>() {
+        return Some(n);
+    }
+    lock_recorder()
+        .as_ref()
+        .and_then(|r| r.rids.iter().find(|(_, s)| s == segment).map(|(i, _)| *i))
+}
+
+// ---------------------------------------------------------------------------
+// Structured access log
+// ---------------------------------------------------------------------------
+
+/// Everything one access-log line carries.
+pub struct AccessRecord<'a> {
+    pub id: u64,
+    pub status: u16,
+    pub tokens_in: usize,
+    pub tokens_out: usize,
+    pub ttft_s: f64,
+    pub latency_s: f64,
+    pub accept_rate: f64,
+    pub reason: &'a str,
+}
+
+/// Render one access-log line (parseable JSON object).
+pub fn access_line(rec: &AccessRecord) -> String {
+    let rid = rid_of(rec.id).unwrap_or_else(|| {
+        let mut s = String::from("req-");
+        let _ = write!(s, "{}", rec.id);
+        s
+    });
+    ObjWriter::new()
+        .str("request_id", &rid)
+        .num("status", rec.status as f64)
+        .num("tokens_in", rec.tokens_in as f64)
+        .num("tokens_out", rec.tokens_out as f64)
+        .num("ttft_s", rec.ttft_s)
+        .num("latency_s", rec.latency_s)
+        .num("accept_rate", rec.accept_rate)
+        .str("reason", rec.reason)
+        .finish()
+}
+
+/// Emit one access-log line on stderr.
+pub fn access_log(rec: &AccessRecord) {
+    eprintln!("{}", access_line(rec));
+}
+
+// ---------------------------------------------------------------------------
+// Tests (serialized: the recorder is process-global and `cargo test` runs
+// lib unit tests in one process)
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::Value;
+
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    #[test]
+    fn disabled_sites_are_noops() {
+        let _g = guard();
+        enable(16);
+        disable();
+        assert_eq!(begin(), 0, "disabled begin() must return the sentinel");
+        // None of these may reach the ring while disabled.
+        iteration(123, 1, 1);
+        phase(123, Phase::Verify, 1);
+        dispatch(123, DispatchKind::Decode, 1, 64);
+        req_queued(7);
+        req_terminal(7, Reason::Ok, 3);
+        register_rid(7, "client-id");
+        assert!(snapshot().is_empty(), "disabled hooks leaked into the ring");
+        assert_eq!(rid_of(7), None);
+        // Span-closing calls must also ignore the 0 sentinel when enabled.
+        enable(16);
+        dispatch(0, DispatchKind::Decode, 1, 64);
+        assert!(snapshot().is_empty(), "t0==0 must be a no-op");
+        disable();
+    }
+
+    #[test]
+    fn ring_wraps_and_keeps_newest() {
+        let _g = guard();
+        enable(16); // cap floor
+        for i in 0..40u64 {
+            req_queued(i);
+        }
+        let evs = snapshot();
+        assert_eq!(evs.len(), 16, "ring must stay bounded");
+        let ids: Vec<u64> = evs.iter().map(|e| e.req).collect();
+        let want: Vec<u64> = (24..40).collect();
+        assert_eq!(ids, want, "oldest events must be evicted in order");
+        disable();
+    }
+
+    #[test]
+    fn chrome_export_parses_and_orders_timestamps() {
+        let _g = guard();
+        enable(64);
+        let t_it = begin();
+        let t_ph = begin();
+        dispatch(begin(), DispatchKind::Verify, 1, 4096);
+        phase(t_ph, Phase::Verify, 2);
+        iteration(t_it, 2, 7);
+        req_queued(3);
+        req_admitted(3, 120);
+        req_block(3, 2, 3);
+        req_terminal(3, Reason::Ok, 3);
+        let text = chrome_trace_json();
+        disable();
+        let v = Value::parse(&text).expect("chrome trace must be valid JSON");
+        let evs = v.get("traceEvents").as_arr().expect("traceEvents array");
+        // 2 thread-name metadata records + 8 events above.
+        assert_eq!(evs.len(), 10, "got: {text}");
+        let mut last_ts = 0.0f64;
+        for e in evs {
+            assert_eq!(e.get("pid").as_usize(), Some(1));
+            let ph = e.get("ph").as_str().unwrap();
+            if ph == "M" {
+                continue;
+            }
+            let ts = e.get("ts").as_f64().unwrap();
+            assert!(ts >= last_ts, "timestamps must be sorted: {ts} < {last_ts}");
+            last_ts = ts;
+            if ph == "X" {
+                assert!(e.get("dur").as_f64().unwrap() >= 0.0);
+            } else {
+                assert_eq!(ph, "i");
+                assert_eq!(e.get("s").as_str(), Some("t"));
+            }
+        }
+        // The verify dispatch must sit inside the verify phase span, which
+        // sits inside the iteration span (containment = Perfetto nesting).
+        let find = |name: &str, cat: &str| {
+            evs.iter()
+                .find(|e| {
+                    e.get("name").as_str() == Some(name) && e.get("cat").as_str() == Some(cat)
+                })
+                .unwrap_or_else(|| panic!("missing {cat}/{name}: {text}"))
+        };
+        let it = find("iteration", "sched");
+        let phv = find("verify", "phase");
+        let d = find("verify", "dispatch");
+        let span = |e: &Value| {
+            let ts = e.get("ts").as_f64().unwrap();
+            (ts, ts + e.get("dur").as_f64().unwrap())
+        };
+        let (i0, i1) = span(it);
+        let (p0, p1) = span(phv);
+        let (d0, d1) = span(d);
+        assert!(i0 <= p0 && p1 <= i1, "phase not nested in iteration");
+        assert!(p0 <= d0 && d1 <= p1, "dispatch not nested in phase");
+    }
+
+    #[test]
+    fn rid_map_is_bounded_and_clipped() {
+        let _g = guard();
+        enable(16);
+        let long = "x".repeat(MAX_RID_LEN + 40);
+        register_rid(1, &long);
+        assert_eq!(rid_of(1).unwrap().len(), MAX_RID_LEN);
+        register_rid(1, "client-abc"); // re-register replaces
+        assert_eq!(rid_of(1).as_deref(), Some("client-abc"));
+        for i in 0..(MAX_RIDS as u64 + 50) {
+            register_rid(1000 + i, "r");
+        }
+        let held = lock_recorder().as_ref().unwrap().rids.len();
+        assert!(held <= MAX_RIDS, "rid map grew unbounded: {held}");
+        assert_eq!(rid_of(1), None, "oldest rid must be evicted");
+        assert_eq!(resolve_request_id("42"), Some(42));
+        register_rid(77, "claimable");
+        assert_eq!(resolve_request_id("claimable"), Some(77));
+        assert_eq!(resolve_request_id("unknown-rid"), None);
+        disable();
+    }
+
+    #[test]
+    fn reason_classification_matches_coordinator_errors() {
+        assert_eq!(Reason::from_error(None), Reason::Ok);
+        assert_eq!(
+            Reason::from_error(Some(crate::coordinator::ERR_DEADLINE)),
+            Reason::Deadline
+        );
+        assert_eq!(
+            Reason::from_error(Some(crate::coordinator::ERR_DISCONNECT)),
+            Reason::Disconnect
+        );
+        assert_eq!(Reason::from_error(Some("pool exhausted")), Reason::Error);
+        assert_eq!(Reason::Ok.status(), 200);
+        assert_eq!(Reason::Deadline.status(), 408);
+    }
+
+    #[test]
+    fn access_line_is_parseable_json() {
+        let _g = guard();
+        enable(16);
+        register_rid(9, "cli-9");
+        let line = access_line(&AccessRecord {
+            id: 9,
+            status: 200,
+            tokens_in: 12,
+            tokens_out: 34,
+            ttft_s: 0.05,
+            latency_s: 0.5,
+            accept_rate: 0.75,
+            reason: "ok",
+        });
+        let v = Value::parse(&line).unwrap();
+        assert_eq!(v.get("request_id").as_str(), Some("cli-9"));
+        assert_eq!(v.get("status").as_usize(), Some(200));
+        assert_eq!(v.get("tokens_out").as_usize(), Some(34));
+        assert_eq!(v.get("reason").as_str(), Some("ok"));
+        disable();
+        // Without a registered rid the line falls back to req-<id>.
+        let line = access_line(&AccessRecord {
+            id: 123456,
+            status: 408,
+            tokens_in: 1,
+            tokens_out: 0,
+            ttft_s: 0.0,
+            latency_s: 1.0,
+            accept_rate: 0.0,
+            reason: "deadline",
+        });
+        assert_eq!(Value::parse(&line).unwrap().get("request_id").as_str(), Some("req-123456"));
+    }
+
+    #[test]
+    fn request_timeline_filters_one_request() {
+        let _g = guard();
+        enable(64);
+        req_queued(5);
+        req_queued(6);
+        req_admitted(5, 10);
+        iteration(begin(), 1, 2); // scheduler event: req==0, excluded
+        req_block(5, 3, 4);
+        req_terminal(5, Reason::Ok, 4);
+        let v = Value::parse(&request_timeline_json(5).unwrap()).unwrap();
+        assert_eq!(v.get("id").as_usize(), Some(5));
+        let evs = v.get("events").as_arr().unwrap();
+        assert_eq!(evs.len(), 4);
+        let names: Vec<&str> = evs.iter().map(|e| e.get("name").as_str().unwrap()).collect();
+        assert_eq!(names, ["req_queued", "req_admitted", "req_block", "req_terminal"]);
+        assert!(request_timeline_json(999).is_none(), "unknown request -> None -> 404");
+        disable();
+    }
+}

@@ -299,6 +299,82 @@ fn near_capacity_shrinks_gamma_and_fills_the_context() {
 }
 
 #[test]
+fn one_terminal_per_request_across_exits() {
+    require_artifacts!();
+    // Regression (ISSUE 6 satellite): every coordinator exit path — normal
+    // completion, pre-admission deadline expiry, validation failure,
+    // disconnected client — must emit exactly one terminal each: one trace
+    // ReqTerminal, one Delta::Done (when the client still listens) and one
+    // Response. All exits route through `Coordinator::terminal`, which this
+    // test pins.
+    use specd::coordinator::Delta;
+    use specd::trace;
+    let f = common::Fixture::load();
+    let draft = f.default_draft();
+    let ex = &f.suite.take("dolly", 1).unwrap()[0];
+    // Ids far above anything other tests in this binary use: the trace
+    // ring is process-global and `cargo test` runs tests concurrently.
+    const BASE: u64 = 0x7e57_0000_0000;
+    trace::enable(16_384);
+
+    let mk = |i: u64, prompt: Vec<u32>| Request::new(BASE + i, prompt, 8, SamplingConfig::greedy());
+    let mut ok = mk(0, ex.prompt.clone());
+    let (ok_tx, ok_rx) = exec::bounded(64);
+    ok.events = Some(ok_tx);
+    let mut late = mk(1, ex.prompt.clone());
+    late.deadline = Some(std::time::Duration::from_millis(1));
+    late.submitted = Some(std::time::Instant::now() - std::time::Duration::from_secs(1));
+    let (late_tx, late_rx) = exec::bounded(64);
+    late.events = Some(late_tx);
+    let mut bad = mk(2, Vec::new());
+    let (bad_tx, bad_rx) = exec::bounded(64);
+    bad.events = Some(bad_tx);
+    let mut gone = mk(3, ex.prompt.clone());
+    let (gone_tx, gone_rx) = exec::bounded::<Delta>(64);
+    drop(gone_rx); // client hung up while the request sat in the queue
+    gone.events = Some(gone_tx);
+
+    // run_requests already asserts exactly one Response per request.
+    let (responses, _) = run_requests(&f, &draft, vec![ok, late, bad, gone], 2);
+    let by_id: BTreeMap<u64, &Response> = responses.iter().map(|r| (r.id, r)).collect();
+    assert_eq!(by_id.len(), 4, "distinct response per request");
+    assert!(by_id[&BASE].error.is_none());
+    assert_eq!(by_id[&(BASE + 1)].error.as_deref(), Some(specd::coordinator::ERR_DEADLINE));
+    assert!(by_id[&(BASE + 2)].error.is_some(), "empty prompt must fail");
+    assert_eq!(by_id[&(BASE + 3)].error.as_deref(), Some(specd::coordinator::ERR_DISCONNECT));
+
+    // Exactly one Done delta on every still-listening events channel.
+    let dones = |rx: &exec::Receiver<Delta>| {
+        let mut n = 0usize;
+        while let Some(d) = rx.try_recv() {
+            if matches!(d, Delta::Done(_)) {
+                n += 1;
+            }
+        }
+        n
+    };
+    assert_eq!(dones(&ok_rx), 1, "normal completion");
+    assert_eq!(dones(&late_rx), 1, "deadline exit");
+    assert_eq!(dones(&bad_rx), 1, "validation-failure exit");
+
+    // Exactly one trace terminal per request, regardless of exit path.
+    let mut terminals: BTreeMap<u64, usize> = BTreeMap::new();
+    for ev in trace::snapshot() {
+        if matches!(ev.kind, trace::Kind::ReqTerminal(_)) && ev.req >= BASE {
+            *terminals.entry(ev.req).or_insert(0) += 1;
+        }
+    }
+    trace::disable();
+    for i in 0..4u64 {
+        assert_eq!(
+            terminals.get(&(BASE + i)).copied(),
+            Some(1),
+            "request {i} must emit exactly one trace terminal"
+        );
+    }
+}
+
+#[test]
 fn disconnected_client_cancelled_before_spending_decode() {
     require_artifacts!();
     // The events channel is probed at admission and every iteration: a

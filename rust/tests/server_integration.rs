@@ -77,20 +77,31 @@ fn spawn_mock_scheduler(
                 }
                 sent = hi;
             }
+            // depth_counts[k] = blocks that accepted exactly k drafts: every
+            // full block counts at depth `block`, the remainder at its own
+            // depth, so the weighted sum equals `accepted` (the invariant the
+            // accept-depth metrics test pins).
+            let b = block.max(1);
+            let mut depth_counts = vec![0u32; b + 1];
+            depth_counts[b] = (sent / b) as u32;
+            if sent % b > 0 {
+                depth_counts[sent % b] += 1;
+            }
             let resp = Response {
                 id: req.id,
                 tokens: out[..sent].to_vec(),
                 stats: specd::metrics::SpecStats {
-                    blocks: sent.div_ceil(block.max(1)),
+                    blocks: sent.div_ceil(b),
                     drafted: sent,
                     accepted: sent,
                     generated: sent,
                     draft_calls: sent,
-                    target_calls: sent.div_ceil(block.max(1)),
+                    target_calls: sent.div_ceil(b),
                 },
                 latency: enq.elapsed().as_secs_f64(),
                 ttft: 0.001,
                 error: expired.then(|| ERR_DEADLINE.to_string()),
+                depth_counts,
             };
             let _ = events.send(Delta::Done(resp));
         }
@@ -287,22 +298,30 @@ fn streaming_chunks_accumulate_to_final() {
 
     let mut streamed: Vec<usize> = Vec::new();
     let mut done: Option<Value> = None;
+    let mut preamble: Option<Value> = None;
+    let mut events_seen = 0usize;
     let mut chunks = http::ChunkedReader::new(&mut rd);
     while let Some(chunk) = chunks.next_chunk().unwrap() {
         let text = String::from_utf8(chunk).unwrap();
         for event in text.split("\n\n").filter(|e| !e.is_empty()) {
             let payload = event.strip_prefix("data: ").expect("SSE framing");
             let v = Value::parse(payload).unwrap();
+            events_seen += 1;
             if v.get("done").as_bool() == Some(true) {
                 done = Some(v);
-            } else {
+            } else if let Some(toks) = v.get("tokens").as_arr() {
                 assert!(done.is_none(), "tokens after done event");
-                streamed
-                    .extend(v.get("tokens").as_arr().unwrap().iter().map(|t| t.as_usize().unwrap()));
+                streamed.extend(toks.iter().map(|t| t.as_usize().unwrap()));
+            } else {
+                assert_eq!(events_seen, 1, "preamble must be the stream's first event");
+                assert!(v.get("request_id").as_str().is_some(), "preamble: {payload}");
+                preamble = Some(v);
             }
         }
     }
     let done = done.expect("terminal done event");
+    let preamble = preamble.expect("stream must open with a request-id preamble");
+    assert_eq!(done.get("request_id").as_str(), preamble.get("request_id").as_str());
     assert_eq!(streamed, vec![5, 6, 7, 8, 9]);
     assert_eq!(done.get("tokens_total").as_usize(), Some(5));
     assert_eq!(done.get("error"), &Value::Null);
@@ -461,6 +480,106 @@ fn expired_deadline_maps_to_408() {
 }
 
 #[test]
+fn request_ids_are_honored_and_echoed() {
+    let rig = Rig::fast();
+    let body = r#"{"tokens": [5, 6], "max_new": 4}"#;
+    // A client-supplied X-Request-Id comes back on the wire and in the body.
+    let r = roundtrip(
+        &rig.addr(),
+        &format!(
+            "POST /v1/generate HTTP/1.1\r\nhost: t\r\nx-request-id: cli-77\r\n\
+             content-length: {}\r\n\r\n{body}",
+            body.len()
+        ),
+    );
+    assert_eq!(r.code, 200, "body: {}", r.body_str());
+    assert_eq!(r.header("x-request-id"), Some("cli-77"));
+    let v = Value::parse(&r.body_str()).unwrap();
+    assert_eq!(v.get("request_id").as_str(), Some("cli-77"));
+
+    // Without the header the server mints a req-<n> id.
+    let r = post_generate(&rig.addr(), body, "");
+    let rid = r.header("x-request-id").expect("generated id echoed").to_string();
+    assert!(rid.starts_with("req-"), "generated ids are req-<n>: {rid}");
+    assert_eq!(Value::parse(&r.body_str()).unwrap().get("request_id").as_str(), Some(rid.as_str()));
+
+    // Error bodies carry the id too.
+    let bad = roundtrip(
+        &rig.addr(),
+        "POST /v1/generate HTTP/1.1\r\nhost: t\r\nx-request-id: cli-bad\r\n\
+         content-length: 7\r\n\r\n{not js",
+    );
+    assert_eq!(bad.code, 400);
+    assert_eq!(bad.header("x-request-id"), Some("cli-bad"));
+    assert_eq!(Value::parse(&bad.body_str()).unwrap().get("request_id").as_str(), Some("cli-bad"));
+    rig.stop();
+}
+
+#[test]
+fn accept_depth_histogram_tracks_accepted_totals() {
+    // 5 echoed tokens in blocks of 2: two depth-2 blocks + one depth-1
+    // block. The histogram's weighted sum must equal stats.accepted and
+    // its count the block total (ISSUE 6 acceptance criterion).
+    let rig = Rig::fast(); // block = 2
+    let r = post_generate(&rig.addr(), r#"{"tokens": [5, 6, 7, 8, 9], "max_new": 5}"#, "");
+    assert_eq!(r.code, 200, "body: {}", r.body_str());
+    let v = Value::parse(&r.body_str()).unwrap();
+    assert_eq!(v.get("stats").get("accepted").as_usize(), Some(5));
+
+    let m = roundtrip(&rig.addr(), "GET /metrics HTTP/1.1\r\nhost: t\r\n\r\n");
+    let text = m.body_str().to_string();
+    assert!(text.contains("# TYPE specd_accept_depth histogram"), "{text}");
+    assert!(text.contains("specd_accept_depth_bucket{le=\"0\"} 0\n"), "{text}");
+    assert!(text.contains("specd_accept_depth_bucket{le=\"1\"} 1\n"), "{text}");
+    assert!(text.contains("specd_accept_depth_bucket{le=\"2\"} 3\n"), "{text}");
+    assert!(text.contains("specd_accept_depth_bucket{le=\"+Inf\"} 3\n"), "{text}");
+    assert!(text.contains("specd_accept_depth_sum 5\n"), "sum must equal accepted: {text}");
+    assert!(text.contains("specd_accept_depth_count 3\n"), "{text}");
+    rig.stop();
+}
+
+#[test]
+fn debug_endpoints_gated_behind_flag() {
+    // Off (the default): /debug/* is indistinguishable from unknown paths.
+    let off = Rig::fast();
+    assert_eq!(roundtrip(&off.addr(), "GET /debug/trace HTTP/1.1\r\nhost: t\r\n\r\n").code, 404);
+    assert_eq!(
+        roundtrip(&off.addr(), "GET /debug/requests/1 HTTP/1.1\r\nhost: t\r\n\r\n").code,
+        404
+    );
+    off.stop();
+
+    // On: the ring snapshot parses as Chrome trace JSON and a served
+    // request's string id resolves to its lifecycle timeline.
+    specd::trace::enable(4096);
+    let on = Rig::start(16, 2, Duration::from_millis(1), |cfg| cfg.debug_endpoints = true);
+    let body = r#"{"tokens": [5, 6], "max_new": 4}"#;
+    let r = roundtrip(
+        &on.addr(),
+        &format!(
+            "POST /v1/generate HTTP/1.1\r\nhost: t\r\nx-request-id: dbg-1\r\n\
+             content-length: {}\r\n\r\n{body}",
+            body.len()
+        ),
+    );
+    assert_eq!(r.code, 200, "body: {}", r.body_str());
+
+    let t = roundtrip(&on.addr(), "GET /debug/trace HTTP/1.1\r\nhost: t\r\n\r\n");
+    assert_eq!(t.code, 200);
+    let v = Value::parse(&t.body_str()).unwrap();
+    assert!(v.get("traceEvents").as_arr().is_some(), "{}", t.body_str());
+
+    let tl = roundtrip(&on.addr(), "GET /debug/requests/dbg-1 HTTP/1.1\r\nhost: t\r\n\r\n");
+    assert_eq!(tl.code, 200, "body: {}", tl.body_str());
+    assert_eq!(Value::parse(&tl.body_str()).unwrap().get("request_id").as_str(), Some("dbg-1"));
+
+    let miss = roundtrip(&on.addr(), "GET /debug/requests/ghost HTTP/1.1\r\nhost: t\r\n\r\n");
+    assert_eq!(miss.code, 404, "unknown rids must 404");
+    on.stop();
+    specd::trace::disable();
+}
+
+#[test]
 fn sixteen_concurrent_clients_smoke() {
     let rig = Rig::start(64, 2, Duration::from_millis(1), |cfg| cfg.n_workers = 16);
     let addr = rig.addr();
@@ -581,10 +700,10 @@ fn full_stack_generate_and_stream_with_artifacts() {
             if v.get("done").as_bool() == Some(true) {
                 saw_done = true;
                 assert_eq!(v.get("error"), &Value::Null);
-            } else {
-                streamed
-                    .extend(v.get("tokens").as_arr().unwrap().iter().map(|t| t.as_usize().unwrap()));
-            }
+            } else if let Some(toks) = v.get("tokens").as_arr() {
+                streamed.extend(toks.iter().map(|t| t.as_usize().unwrap()));
+            } // else: the request-id preamble event
+
         }
     }
     assert!(saw_done);

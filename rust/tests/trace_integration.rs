@@ -1,0 +1,165 @@
+//! End-to-end flight-recorder tests: artifact-free (no PJRT, no models),
+//! driving the public `specd::trace` API the way the coordinator and the
+//! HTTP layer do, then validating the exported Chrome trace JSON with the
+//! in-repo parser — the same checks `python/tests/test_trace_export.py`
+//! runs against a replay-produced trace.
+//!
+//! The recorder is process-global, so every test serializes on a local
+//! lock (integration tests in one binary share the process).
+
+use std::sync::Mutex;
+
+use specd::json::Value;
+use specd::trace;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn guard() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Emit one synthetic scheduler iteration (nested spans) plus a full
+/// request lifecycle for `req`.
+fn emit_iteration(req: u64) {
+    trace::req_queued(req);
+    trace::req_admitted(req, 1500);
+    let t_it = trace::begin();
+    let t_ph = trace::begin();
+    let t_d = trace::begin();
+    std::thread::sleep(std::time::Duration::from_millis(2));
+    trace::dispatch(t_d, trace::DispatchKind::Verify, 1, 256);
+    trace::phase(t_ph, trace::Phase::Verify, 2);
+    trace::iteration(t_it, 2, 8);
+    trace::req_block(req, 2, 3);
+    trace::req_terminal(req, trace::Reason::Ok, 3);
+}
+
+#[test]
+fn chrome_trace_export_round_trips_and_nests() {
+    let _g = guard();
+    trace::enable(256);
+    emit_iteration(7);
+    let path = std::env::temp_dir().join(format!("specd_trace_it_{}.json", std::process::id()));
+    trace::write_chrome_trace(path.to_str().unwrap()).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    trace::disable();
+
+    let v = Value::parse(&text).expect("trace file must be valid JSON");
+    let events = v.get("traceEvents").as_arr().expect("traceEvents array");
+    assert!(!events.is_empty());
+
+    // Metadata names the two tracks; every non-metadata event carries
+    // pid/tid/ts and a known phase letter.
+    let metas: Vec<&Value> =
+        events.iter().filter(|e| e.get("ph").as_str() == Some("M")).collect();
+    assert!(metas.iter().any(|m| m.get("args").get("name").as_str() == Some("scheduler")));
+    assert!(metas.iter().any(|m| m.get("args").get("name").as_str() == Some("requests")));
+
+    let mut last_ts = -1.0f64;
+    let (mut durs, mut instants) = (Vec::new(), 0usize);
+    for e in events.iter().filter(|e| e.get("ph").as_str() != Some("M")) {
+        let ph = e.get("ph").as_str().unwrap();
+        let ts = e.get("ts").as_f64().expect("every event has ts");
+        assert!(ts >= last_ts, "events must be sorted by timestamp");
+        last_ts = ts;
+        assert!(e.get("pid").as_usize().is_some() && e.get("tid").as_usize().is_some());
+        match ph {
+            "X" => durs.push((
+                e.get("cat").as_str().unwrap().to_string(),
+                e.get("name").as_str().unwrap().to_string(),
+                ts,
+                e.get("dur").as_f64().expect("duration events have dur"),
+            )),
+            "i" => instants += 1,
+            other => panic!("unexpected phase {other:?}"),
+        }
+    }
+    assert_eq!(instants, 4, "queued + admitted + block + terminal");
+
+    // Span nesting: dispatch within phase within iteration (ts/dur
+    // containment on the scheduler track is what makes Perfetto render
+    // them as a stack).
+    let find = |cat: &str, name: &str| {
+        durs.iter().find(|(c, n, _, _)| c == cat && n == name).unwrap().clone()
+    };
+    let (_, _, it_ts, it_dur) = find("sched", "iteration");
+    let (_, _, ph_ts, ph_dur) = find("phase", "verify");
+    let (_, _, d_ts, d_dur) = find("dispatch", "verify");
+    assert!(it_ts <= ph_ts && ph_ts + ph_dur <= it_ts + it_dur, "phase inside iteration");
+    assert!(ph_ts <= d_ts && d_ts + d_dur <= ph_ts + ph_dur, "dispatch inside phase");
+    assert!(it_dur >= 2_000.0, "the 2ms sleep must be visible in the iteration span");
+}
+
+#[test]
+fn ring_capacity_keeps_newest_events() {
+    let _g = guard();
+    trace::enable(64);
+    for req in 0..100u64 {
+        trace::req_queued(req);
+    }
+    let snap = trace::snapshot();
+    assert_eq!(snap.len(), 64, "ring must cap at its capacity");
+    trace::disable();
+}
+
+#[test]
+fn request_timeline_filters_and_resolves_rids() {
+    let _g = guard();
+    trace::enable(256);
+    trace::register_rid(21, "client-abc");
+    emit_iteration(21);
+    emit_iteration(22);
+
+    let timeline = trace::request_timeline_json(21).expect("known request");
+    let v = Value::parse(&timeline).unwrap();
+    assert_eq!(v.get("request_id").as_str(), Some("client-abc"));
+    let evs = v.get("events").as_arr().unwrap();
+    assert_eq!(evs.len(), 4, "queued/admitted/block/terminal, nothing from request 22");
+    assert!(evs.iter().all(|e| e.get("ts").as_f64().is_some()));
+
+    // String-or-numeric resolution, the `/debug/requests/<id>` contract.
+    assert_eq!(trace::resolve_request_id("client-abc"), Some(21));
+    assert_eq!(trace::resolve_request_id("22"), Some(22));
+    assert_eq!(trace::resolve_request_id("nope"), None);
+    assert!(trace::request_timeline_json(404).is_none(), "unknown request is a 404");
+    trace::disable();
+}
+
+#[test]
+fn access_log_lines_are_structured_json() {
+    let _g = guard();
+    trace::enable(64);
+    trace::register_rid(3, "abc-123");
+    let line = trace::access_line(&trace::AccessRecord {
+        id: 3,
+        status: 408,
+        tokens_in: 12,
+        tokens_out: 4,
+        ttft_s: 0.25,
+        latency_s: 0.25,
+        accept_rate: 0.5,
+        reason: trace::Reason::Deadline.name(),
+    });
+    let v = Value::parse(&line).unwrap();
+    assert_eq!(v.get("request_id").as_str(), Some("abc-123"));
+    assert_eq!(v.get("status").as_usize(), Some(408));
+    assert_eq!(v.get("tokens_in").as_usize(), Some(12));
+    assert_eq!(v.get("tokens_out").as_usize(), Some(4));
+    assert_eq!(v.get("reason").as_str(), Some("deadline"));
+    assert_eq!(v.get("accept_rate").as_f64(), Some(0.5));
+    trace::disable();
+}
+
+#[test]
+fn disabled_recorder_records_nothing() {
+    let _g = guard();
+    trace::disable();
+    assert_eq!(trace::begin(), 0, "disabled begin is the zero sentinel");
+    emit_iteration(99);
+    // A fresh enable starts from an empty ring: nothing emitted while
+    // disabled may appear.
+    trace::enable(64);
+    assert!(trace::snapshot().is_empty());
+    trace::disable();
+}
