@@ -1,0 +1,373 @@
+"""specd-lint rule contract: one violating + one clean fixture per rule,
+the escape/marker grammar, the Rust line-scanner edge cases, and — last —
+the end-to-end gate: the real repo must lint clean, because CI fails the
+build on any violation.
+
+Runs without cargo or any Rust toolchain: the analyzer is stdlib-only
+Python over `rust/src/**`.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+sys.path.insert(0, os.path.join(REPO, "python"))
+
+from tools.specd_lint.config import Config
+from tools.specd_lint.model import parse_rust
+from tools.specd_lint.rules import (
+    Repo,
+    rule_hot_path_alloc,
+    rule_lock_order,
+    rule_metrics_doc,
+    rule_no_panic,
+    rule_one_terminal,
+    rule_trace_pairing,
+    run_rules,
+)
+
+
+def repo_of(sources, docs=None, cfg=None):
+    """Build a Repo from {filename: rust_source} fixtures."""
+    files = [parse_rust(name, text) for name, text in sources.items()]
+    return Repo(files=files, docs=docs or {}, cfg=cfg or Config())
+
+
+# ---------------------------------------------------------------------------
+# Scanner / model
+# ---------------------------------------------------------------------------
+
+
+class TestScanner:
+    def test_strings_and_comments_are_blanked(self):
+        rf = parse_rust(
+            "spec.rs",
+            'fn f() {\n'
+            '    let s = "x.unwrap()"; // .unwrap() in comment\n'
+            '    /* .unwrap() */\n'
+            '}\n',
+        )
+        assert not any(".unwrap()" in line for line in rf.code)
+
+    def test_raw_strings_and_char_literals(self):
+        rf = parse_rust(
+            "spec.rs",
+            'fn f() {\n'
+            '    let r = r#"panic!("in raw string")"#;\n'
+            "    let c = '\\n';\n"
+            "    let lt: &'static str = \"lifetime is not a char\";\n"
+            '}\n',
+        )
+        assert not any("panic!" in line for line in rf.code)
+        # The lifetime tick must not swallow the rest of the line as a
+        # char literal.
+        assert any("&'static str" in line for line in rf.code)
+
+    def test_cfg_test_region_is_masked(self):
+        rf = parse_rust(
+            "spec.rs",
+            "fn hot() {}\n"
+            "#[cfg(test)]\n"
+            "mod tests {\n"
+            "    #[test]\n"
+            "    fn t() { x.unwrap(); }\n"
+            "}\n",
+        )
+        flagged = [i for i, t in enumerate(rf.is_test) if t]
+        assert flagged, "test region must be detected"
+        assert not rf.is_test[0], "non-test code stays unmasked"
+
+    def test_function_spans_and_enclosing(self):
+        rf = parse_rust(
+            "x.rs",
+            "fn alpha() {\n    body();\n}\n\nfn beta() {\n    body();\n}\n",
+        )
+        names = [n for n, _, _ in rf.functions]
+        assert names == ["alpha", "beta"]
+        assert rf.enclosing_function(2) == "alpha"
+        assert rf.enclosing_function(6) == "beta"
+
+
+# ---------------------------------------------------------------------------
+# no-panic
+# ---------------------------------------------------------------------------
+
+
+class TestNoPanic:
+    def test_unwrap_in_hot_module_flagged(self):
+        repo = repo_of({"spec.rs": "fn f() { x.unwrap(); }\n"})
+        v = rule_no_panic(repo)
+        assert len(v) == 1 and v[0].rule == "no-panic" and v[0].line == 1
+
+    def test_cold_module_and_test_code_are_exempt(self):
+        repo = repo_of(
+            {
+                "eval.rs": "fn f() { x.unwrap(); }\n",  # not a hot module
+                "spec.rs": "#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\n",
+            }
+        )
+        assert rule_no_panic(repo) == []
+
+    def test_allow_escape_with_reason_suppresses(self):
+        repo = repo_of(
+            {
+                "spec.rs": "fn f() {\n"
+                "    // lint: allow(no-panic, guarded by alloc above)\n"
+                "    x.unwrap();\n"
+                "}\n"
+            }
+        )
+        assert rule_no_panic(repo) == []
+
+    def test_allow_escape_without_reason_is_itself_flagged(self):
+        repo = repo_of(
+            {"spec.rs": "fn f() {\n    // lint: allow(no-panic, )\n    x.unwrap();\n}\n"}
+        )
+        v = rule_no_panic(repo)
+        assert len(v) == 1
+        assert "reason" in v[0].message
+
+    def test_every_panic_macro_is_caught(self):
+        for mac in ["panic!(\"x\")", "unreachable!()", "todo!()", "unimplemented!()"]:
+            repo = repo_of({"spec.rs": f"fn f() {{ {mac}; }}\n"})
+            assert rule_no_panic(repo), f"{mac} must be flagged"
+
+
+# ---------------------------------------------------------------------------
+# hot-path-alloc
+# ---------------------------------------------------------------------------
+
+
+class TestHotPathAlloc:
+    def test_alloc_inside_region_flagged(self):
+        repo = repo_of(
+            {
+                "spec.rs": "fn f() {\n"
+                "    // lint: hot-path\n"
+                "    let v = Vec::new();\n"
+                "    // lint: end-hot-path\n"
+                "    let w = Vec::new();\n"  # outside: fine
+                "}\n"
+            }
+        )
+        v = rule_hot_path_alloc(repo)
+        assert len(v) == 1 and v[0].line == 3
+
+    def test_unterminated_region_is_a_violation(self):
+        repo = repo_of({"spec.rs": "fn f() {\n    // lint: hot-path\n}\n"})
+        v = rule_hot_path_alloc(repo)
+        assert len(v) == 1 and "never closed" in v[0].message
+
+    def test_allow_escape_inside_region(self):
+        repo = repo_of(
+            {
+                "spec.rs": "fn f() {\n"
+                "    // lint: hot-path\n"
+                "    // lint: allow(hot-path-alloc, cold error path)\n"
+                "    let v = Vec::new();\n"
+                "    // lint: end-hot-path\n"
+                "}\n"
+            }
+        )
+        assert rule_hot_path_alloc(repo) == []
+
+
+# ---------------------------------------------------------------------------
+# one-terminal
+# ---------------------------------------------------------------------------
+
+COORD_OK = """\
+impl Coordinator {
+    fn terminal(&self) {
+        tx.send(Delta::Done);
+    }
+    fn other(&self) {
+        self.terminal();
+    }
+}
+"""
+
+COORD_BAD = """\
+impl Coordinator {
+    fn terminal(&self) {
+        tx.send(Delta::Done);
+    }
+    fn sneaky_exit(&self) {
+        tx.send(Delta::Done);
+    }
+}
+"""
+
+
+class TestOneTerminal:
+    def test_chokepoint_token_outside_terminal_flagged(self):
+        v = rule_one_terminal(repo_of({"coordinator.rs": COORD_BAD}))
+        assert v and all(x.rule == "one-terminal" for x in v)
+        assert any("sneaky_exit" in x.message for x in v)
+
+    def test_tokens_inside_terminal_are_fine(self):
+        assert rule_one_terminal(repo_of({"coordinator.rs": COORD_OK})) == []
+
+
+# ---------------------------------------------------------------------------
+# metrics-doc
+# ---------------------------------------------------------------------------
+
+
+def metrics_repo(defs, doc):
+    return repo_of(
+        {"metrics.rs": defs, "server.rs": "fn nothing() {}\n"},
+        docs={"docs/METRICS.md": doc},
+    )
+
+
+class TestMetricsDoc:
+    def test_defined_but_undocumented(self):
+        repo = metrics_repo('fn r() { c(&mut s, "specd_orphan_total"); }\n', "| none |\n")
+        v = rule_metrics_doc(repo)
+        assert any("specd_orphan_total" in x.message and "missing" in x.message for x in v)
+
+    def test_documented_but_not_defined(self):
+        repo = metrics_repo(
+            'fn r() { c(&mut s, "specd_real_total"); }\n',
+            "| specd_real_total | | |\n| specd_ghost_total | | |\n",
+        )
+        v = rule_metrics_doc(repo)
+        assert any("specd_ghost_total" in x.message for x in v)
+        assert not any("specd_real_total" in x.message for x in v)
+
+    def test_doc_glob_row_covers_prefixed_families(self):
+        repo = metrics_repo(
+            'fn r() { c(&mut s, "specd_sched_pool_live"); }\n',
+            "| specd_sched_pool_* | | |\n",
+        )
+        assert rule_metrics_doc(repo) == []
+
+    def test_stale_reference_in_other_module_flagged(self):
+        repo = repo_of(
+            {
+                "metrics.rs": 'fn r() { c(&mut s, "specd_real_total"); }\n',
+                "server.rs": "fn nothing() {}\n",
+                "batch.rs": "// bumps specd_imaginary_total\nfn f() {}\n",
+            },
+            docs={"docs/METRICS.md": "| specd_real_total | | |\n"},
+        )
+        v = rule_metrics_doc(repo)
+        assert any("specd_imaginary_total" in x.message for x in v)
+
+
+# ---------------------------------------------------------------------------
+# trace-pairing
+# ---------------------------------------------------------------------------
+
+
+class TestTracePairing:
+    def test_unclosed_span_flagged(self):
+        repo = repo_of({"batch.rs": "fn f() {\n    let t0 = trace::begin();\n}\n"})
+        v = rule_trace_pairing(repo)
+        assert len(v) == 1 and "t0" in v[0].message
+
+    def test_closed_span_ok(self):
+        repo = repo_of(
+            {
+                "batch.rs": "fn f() {\n"
+                "    let t0 = trace::begin();\n"
+                "    trace::phase(t0, Phase::Draft, 1);\n"
+                "}\n"
+            }
+        )
+        assert rule_trace_pairing(repo) == []
+
+    def test_discarded_begin_flagged(self):
+        repo = repo_of({"batch.rs": "fn f() {\n    trace::begin();\n}\n"})
+        v = rule_trace_pairing(repo)
+        assert len(v) == 1 and "discarded" in v[0].message
+
+
+# ---------------------------------------------------------------------------
+# lock-order
+# ---------------------------------------------------------------------------
+
+
+class TestLockOrder:
+    def test_inverted_acquisition_flagged(self):
+        repo = repo_of(
+            {
+                "server.rs": "fn f() {\n"
+                "    let a = agg.lock();\n"
+                "    let q = queue.lock();\n"
+                "}\n"
+            }
+        )
+        v = rule_lock_order(repo)
+        assert len(v) == 1 and "queue -> agg" in v[0].message
+
+    def test_configured_order_ok(self):
+        repo = repo_of(
+            {
+                "server.rs": "fn f() {\n"
+                "    let q = queue.lock();\n"
+                "    let a = agg.lock();\n"
+                "}\n"
+            }
+        )
+        assert rule_lock_order(repo) == []
+
+    def test_single_lock_functions_ignored(self):
+        repo = repo_of({"server.rs": "fn f() { agg.lock(); }\nfn g() { queue.lock(); }\n"})
+        assert rule_lock_order(repo) == []
+
+
+# ---------------------------------------------------------------------------
+# run_rules plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_run_rules_filters_and_sorts():
+    repo = repo_of(
+        {"spec.rs": "fn f() {\n    x.unwrap();\n    let t0 = trace::begin();\n}\n"}
+    )
+    both = run_rules(repo)
+    assert [v.rule for v in both] == ["no-panic", "trace-pairing"]
+    only = run_rules(repo, only=["no-panic"])
+    assert [v.rule for v in only] == ["no-panic"]
+
+
+# ---------------------------------------------------------------------------
+# End to end: the real repo lints clean, and the CLI exit codes hold
+# ---------------------------------------------------------------------------
+
+
+def lint_cli(*args):
+    return subprocess.run(
+        [sys.executable, os.path.join(REPO, "scripts", "lint_specd.py"), *args],
+        capture_output=True,
+        text=True,
+    )
+
+
+def test_repo_is_clean_end_to_end():
+    r = lint_cli()
+    assert r.returncode == 0, f"repo must lint clean:\n{r.stdout}{r.stderr}"
+    assert "specd-lint: OK" in r.stdout
+
+
+def test_cli_fails_on_fixture_violation(tmp_path):
+    bad = tmp_path / "rust" / "src"
+    bad.mkdir(parents=True)
+    (tmp_path / "Cargo.toml").write_text("[package]\nname = 'fixture'\n")
+    (bad / "spec.rs").write_text("fn f() { x.unwrap(); }\n")
+    r = lint_cli("--root", str(tmp_path))
+    assert r.returncode == 1
+    assert "no-panic" in r.stdout
+
+
+def test_cli_list_rules():
+    r = lint_cli("--list-rules")
+    assert r.returncode == 0
+    for rule in ["no-panic", "hot-path-alloc", "one-terminal", "metrics-doc",
+                 "trace-pairing", "lock-order"]:
+        assert rule in r.stdout

@@ -1,0 +1,26 @@
+"""specd-lint: a toolchain-independent invariant analyzer for rust/src.
+
+The serving stack's correctness rests on hand-maintained invariants
+(one-terminal-per-request, the hot-path allocation purge, trace span
+pairing) that `cargo` cannot check -- and most growth containers have no
+Rust toolchain at all.  This package is a stdlib-only analyzer that
+parses the Rust sources directly, so the invariants gate every container.
+
+Entry points:
+  scripts/lint_specd.py        repo-facing CLI wrapper
+  python -m tools.specd_lint   equivalent module invocation
+"""
+
+from .model import RustFile, Directive
+from .rules import ALL_RULES, Violation, run_rules
+from .config import Config, default_config
+
+__all__ = [
+    "RustFile",
+    "Directive",
+    "ALL_RULES",
+    "Violation",
+    "run_rules",
+    "Config",
+    "default_config",
+]

@@ -1,0 +1,115 @@
+"""Command-line driver: walk rust/src, run every rule, report, exit 1.
+
+Usage (from anywhere inside the repo):
+
+    python3 scripts/lint_specd.py            # lint the repo
+    python3 scripts/lint_specd.py --rules no-panic,one-terminal
+    python3 scripts/lint_specd.py --dump-metrics   # exported families
+
+Needs nothing beyond the Python standard library -- this is the Rust
+gate for containers without a Rust toolchain.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List
+
+from .config import default_config
+from .model import parse_rust
+from .rules import ALL_RULES, Repo, run_rules
+
+
+def find_repo_root(start: str) -> str:
+    d = os.path.abspath(start)
+    while True:
+        if os.path.exists(os.path.join(d, "Cargo.toml")):
+            return d
+        parent = os.path.dirname(d)
+        if parent == d:
+            raise SystemExit("specd-lint: no Cargo.toml above " + start)
+        d = parent
+
+
+def load_repo(root: str) -> Repo:
+    cfg = default_config()
+    files = []
+    src = os.path.join(root, "rust", "src")
+    for dirpath, _, names in os.walk(src):
+        for name in sorted(names):
+            if not name.endswith(".rs"):
+                continue
+            path = os.path.join(dirpath, name)
+            with open(path, encoding="utf-8") as fh:
+                text = fh.read()
+            files.append(parse_rust(os.path.relpath(path, root), text))
+    docs = {}
+    for rel in cfg.metrics_doc_files:
+        path = os.path.join(root, rel)
+        if os.path.exists(path):
+            with open(path, encoding="utf-8") as fh:
+                docs[rel] = fh.read()
+    return Repo(files=files, docs=docs, cfg=cfg)
+
+
+def main(argv: List[str] = None) -> int:
+    ap = argparse.ArgumentParser(prog="specd-lint", description=__doc__)
+    ap.add_argument("--root", default=None, help="repo root (default: auto-detect)")
+    ap.add_argument(
+        "--rules",
+        default=None,
+        help="comma-separated subset of rules to run (default: all)",
+    )
+    ap.add_argument(
+        "--list-rules", action="store_true", help="list rule names and exit"
+    )
+    ap.add_argument(
+        "--dump-metrics",
+        action="store_true",
+        help="print the exported specd_* metric families and exit "
+        "(source for the docs/METRICS.md table)",
+    )
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for name in ALL_RULES:
+            print(name)
+        return 0
+
+    root = args.root or find_repo_root(os.getcwd())
+    repo = load_repo(root)
+
+    if args.dump_metrics:
+        from .rules import _defined_families
+
+        for fam in sorted(_defined_families(repo)):
+            print(fam)
+        return 0
+
+    only = args.rules.split(",") if args.rules else None
+    if only:
+        unknown = [r for r in only if r not in ALL_RULES]
+        if unknown:
+            print(f"specd-lint: unknown rule(s): {', '.join(unknown)}", file=sys.stderr)
+            return 2
+
+    violations = run_rules(repo, only=only)
+    for v in violations:
+        print(v.render())
+    n_files = len(repo.files)
+    n_rules = len(only) if only else len(ALL_RULES)
+    if violations:
+        print(
+            f"specd-lint: {len(violations)} violation(s) across {n_files} files "
+            f"({n_rules} rules)",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"specd-lint: OK ({n_files} files, {n_rules} rules)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

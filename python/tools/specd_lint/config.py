@@ -1,0 +1,116 @@
+"""Rule configuration for specd-lint.
+
+Everything repo-specific lives here so the rules themselves stay generic
+and fixture-testable.  The defaults encode this repo's invariants:
+
+  * hot-path modules: the scheduler/engine files where a panic takes the
+    whole serving loop (and every in-flight request) down with it.
+  * chokepoints: PR 6's one-terminal-per-request invariant -- the listed
+    tokens may only appear inside the named function.
+  * metrics: `specd_*` family names defined in metrics.rs must match the
+    documented tables (docs/METRICS.md + README.md) exactly, and every
+    reference elsewhere in the tree must resolve to a defined family.
+  * lock order: configured mutex pairs; within one function the first
+    name must be locked before the second is ever locked.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+
+@dataclass
+class Config:
+    # ---- no-panic ---------------------------------------------------------
+    # Modules where unwrap/expect/panic in non-test code is forbidden.
+    hot_path_modules: List[str] = field(
+        default_factory=lambda: [
+            "runtime.rs",
+            "batch.rs",
+            "spec.rs",
+            "coordinator.rs",
+            "datagen.rs",
+            "trace.rs",
+        ]
+    )
+    panic_patterns: List[Tuple[str, str]] = field(
+        default_factory=lambda: [
+            (r"\.unwrap\(\)", ".unwrap()"),
+            (r"\.expect\s*\(", ".expect(…)"),
+            (r"(?:^|[^\w:])panic!\s*[\(\{]", "panic!"),
+            (r"(?:^|[^\w:])unreachable!\s*[\(\{]", "unreachable!"),
+            (r"(?:^|[^\w:])todo!\s*[\(\{]", "todo!"),
+            (r"(?:^|[^\w:])unimplemented!\s*[\(\{]", "unimplemented!"),
+        ]
+    )
+
+    # ---- hot-path-alloc ---------------------------------------------------
+    # Allocation idioms banned inside `// lint: hot-path` regions (the
+    # PR 4 host-allocation purge: staging buffers are reused, never grown
+    # per dispatch).
+    alloc_patterns: List[Tuple[str, str]] = field(
+        default_factory=lambda: [
+            (r"Vec::new\s*\(", "Vec::new()"),
+            (r"Vec::with_capacity\s*\(", "Vec::with_capacity()"),
+            (r"(?:^|[^\w:])vec!\s*\[", "vec![]"),
+            (r"\.to_vec\(\)", ".to_vec()"),
+            (r"(?:^|[^\w:])format!\s*\(", "format!()"),
+            (r"String::from\s*\(", "String::from()"),
+            (r"String::new\s*\(", "String::new()"),
+            (r"\.to_string\(\)", ".to_string()"),
+            (r"\.clone\(\)", ".clone()"),
+            (r"Box::new\s*\(", "Box::new()"),
+            (r"\.collect\s*(?:::<[^>]*>\s*)?\(", ".collect()"),
+        ]
+    )
+
+    # ---- one-terminal (structural chokepoints) ----------------------------
+    # file -> (function, tokens): each token may appear in non-test code of
+    # that file only inside the named function.  Enforces that every
+    # coordinator exit path flows through `Coordinator::terminal()`.
+    chokepoints: Dict[str, Tuple[str, List[str]]] = field(
+        default_factory=lambda: {
+            "coordinator.rs": ("terminal", [r"\btx\s*\.\s*send\s*\(", r"Delta::Done"]),
+        }
+    )
+
+    # ---- metrics-doc ------------------------------------------------------
+    # Files whose non-test string literals *define* metric families
+    # (metrics.rs renders the engine families, server.rs the HTTP-layer
+    # counters).  Everything else only *references* them.
+    metrics_def_files: List[str] = field(
+        default_factory=lambda: ["metrics.rs", "server.rs"]
+    )
+    metrics_doc_files: List[str] = field(
+        default_factory=lambda: ["docs/METRICS.md", "README.md"]
+    )
+    metrics_prefix: str = "specd_"
+    # Reference tokens that are not metric families (temp file names, the
+    # linter's own name inside `test_specd_lint.py` mentions).
+    metrics_ignore: List[str] = field(
+        default_factory=lambda: ["specd_bench_json_test", "specd_lint"]
+    )
+
+    # ---- trace-pairing ----------------------------------------------------
+    trace_begin: str = r"(?:crate::|specd::)?trace::begin\s*\(\s*\)"
+    trace_closers: List[str] = field(
+        default_factory=lambda: ["phase", "iteration", "wave", "dispatch"]
+    )
+
+    # ---- lock-order -------------------------------------------------------
+    # (first, second): when both appear in one function, `first.lock()`
+    # must come before `second.lock()`.  The pairs fix a global order for
+    # the three long-lived mutexes (channel queue -> trace recorder ->
+    # metrics aggregate) so new code cannot introduce an inversion.
+    lock_order: List[Tuple[str, str]] = field(
+        default_factory=lambda: [
+            ("queue", "RECORDER"),
+            ("RECORDER", "agg"),
+            ("queue", "agg"),
+        ]
+    )
+
+
+def default_config() -> Config:
+    return Config()

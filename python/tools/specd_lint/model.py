@@ -1,0 +1,304 @@
+"""Lexical model of one Rust source file, stdlib-only.
+
+Not a parser: a line-oriented scanner that is exact about the three
+things the rules need and deliberately naive about everything else.
+
+  * ``code[i]``     -- line i with comments and string/char literal
+                       *contents* blanked (structure preserved), so regex
+                       rules never fire inside strings or comments.
+  * ``strings[i]``  -- the string-literal contents that were blanked
+                       (the metrics rule reads family names from these).
+  * ``is_test[i]``  -- inside a ``#[cfg(test)]`` module / ``#[test]`` fn.
+  * ``functions``   -- (name, first_line, last_line) spans via brace
+                       matching on the blanked code.
+  * ``directives``  -- parsed ``// lint: ...`` markers (see grammar in
+                       README §Static analysis & invariants).
+
+Handles ``//`` and nesting ``/* */`` comments, ordinary strings with
+escapes, raw strings ``r"…"`` / ``r#"…"#``, and char literals without
+tripping over lifetimes (``'a``).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+_LINT_RE = re.compile(
+    r"//\s*lint:\s*(allow\(\s*([a-z0-9-]+)\s*,\s*([^)]*)\)|hot-path|end-hot-path)"
+)
+_FN_RE = re.compile(r"(?:^|[^\w])fn\s+(\w+)\s*[(<]")
+_CFG_TEST_RE = re.compile(r"#\s*\[\s*cfg\s*\(\s*test\s*\)\s*\]")
+_TEST_ATTR_RE = re.compile(r"#\s*\[\s*test\s*\]")
+
+
+@dataclass
+class Directive:
+    """One ``// lint:`` marker."""
+
+    kind: str  # "allow" | "hot-path" | "end-hot-path"
+    line: int  # 1-based
+    rule: str = ""  # for allow
+    reason: str = ""  # for allow
+
+
+@dataclass
+class RustFile:
+    path: str  # path as given (used in diagnostics)
+    name: str  # basename, e.g. "spec.rs"
+    raw: List[str] = field(default_factory=list)
+    code: List[str] = field(default_factory=list)
+    strings: List[List[str]] = field(default_factory=list)
+    is_test: List[bool] = field(default_factory=list)
+    functions: List[Tuple[str, int, int]] = field(default_factory=list)
+    directives: List[Directive] = field(default_factory=list)
+    hot_ranges: List[Tuple[int, int]] = field(default_factory=list)
+    unterminated_hot: Optional[int] = None  # line of a hot-path with no end
+
+    # -- queries -----------------------------------------------------------
+
+    def allowed(self, rule: str, line: int) -> bool:
+        """An ``allow(rule, …)`` on this line or the line above escapes it."""
+        for d in self.directives:
+            if d.kind == "allow" and d.rule == rule and d.line in (line, line - 1):
+                return True
+        return False
+
+    def in_hot_range(self, line: int) -> bool:
+        return any(a < line < b for a, b in self.hot_ranges)
+
+    def enclosing_function(self, line: int) -> Optional[str]:
+        best = None
+        for name, a, b in self.functions:
+            if a <= line <= b:
+                # innermost (latest-starting) span wins for nested fns
+                if best is None or a >= best[1]:
+                    best = (name, a)
+        return best[0] if best else None
+
+    def code_lines(self, include_tests: bool = False):
+        """Yield (1-based line number, blanked code) for rule scans."""
+        for i, text in enumerate(self.code):
+            if not include_tests and self.is_test[i]:
+                continue
+            yield i + 1, text
+
+
+def parse_rust(path: str, text: str) -> RustFile:
+    rf = RustFile(path=path, name=path.rsplit("/", 1)[-1])
+    rf.raw = text.splitlines()
+    _scan(rf)
+    _mark_tests(rf)
+    _find_functions(rf)
+    _collect_directives(rf)
+    return rf
+
+
+# ---------------------------------------------------------------------------
+# pass 1: blank comments and literals, collect // lint: directives
+# ---------------------------------------------------------------------------
+
+
+def _scan(rf: RustFile) -> None:
+    in_block = 0  # /* */ nesting depth
+    raw_hashes: Optional[int] = None  # inside r#"…"# with this many #
+    for lineno, line in enumerate(rf.raw):
+        out: List[str] = []
+        strings: List[str] = []
+        i, n = 0, len(line)
+        while i < n:
+            c = line[i]
+            if raw_hashes is not None:
+                close = '"' + "#" * raw_hashes
+                j = line.find(close, i)
+                if j < 0:
+                    out.append(" " * (n - i))
+                    i = n
+                else:
+                    out.append(" " * (j - i) + '"' + "#" * raw_hashes)
+                    raw_hashes = None
+                    i = j + len(close)
+                continue
+            if in_block:
+                if line.startswith("*/", i):
+                    in_block -= 1
+                    out.append("  ")
+                    i += 2
+                elif line.startswith("/*", i):
+                    in_block += 1
+                    out.append("  ")
+                    i += 2
+                else:
+                    out.append(" ")
+                    i += 1
+                continue
+            if line.startswith("//", i):
+                # keep // lint: markers findable from raw; code is blanked
+                out.append(" " * (n - i))
+                i = n
+                continue
+            if line.startswith("/*", i):
+                in_block += 1
+                out.append("  ")
+                i += 2
+                continue
+            m = re.match(r'r(#*)"', line[i:])
+            if m:
+                raw_hashes = len(m.group(1))
+                out.append("r" + m.group(1) + '"')
+                i += len(m.group(0))
+                continue
+            if c == '"':
+                j, buf = i + 1, []
+                while j < n:
+                    if line[j] == "\\":
+                        j += 2
+                        continue
+                    if line[j] == '"':
+                        break
+                    buf.append(line[j])
+                    j += 1
+                if j >= n:  # multi-line plain strings don't occur here;
+                    out.append(" " * (n - i))  # blank defensively
+                    strings.append("".join(buf))
+                    i = n
+                else:
+                    strings.append("".join(buf))
+                    out.append('"' + " " * (j - i - 1) + '"')
+                    i = j + 1
+                continue
+            if c == "'":
+                # char literal iff it closes within a few chars; else lifetime
+                m2 = re.match(r"'(\\.|[^'\\])'", line[i:])
+                if m2:
+                    out.append("'" + " " * (len(m2.group(0)) - 2) + "'")
+                    i += len(m2.group(0))
+                    continue
+                out.append(c)
+                i += 1
+                continue
+            out.append(c)
+            i += 1
+        rf.code.append("".join(out))
+        rf.strings.append(strings)
+
+
+# ---------------------------------------------------------------------------
+# pass 2: test regions (attribute + brace depth over blanked code)
+# ---------------------------------------------------------------------------
+
+
+def _mark_tests(rf: RustFile) -> None:
+    rf.is_test = [False] * len(rf.code)
+    pending = False  # saw #[cfg(test)] / #[test], waiting for the item
+    depth_end = 0  # while > 0 we are inside a test item
+    depth = 0
+    for i, text in enumerate(rf.code):
+        opens = text.count("{")
+        closes = text.count("}")
+        if depth_end:
+            rf.is_test[i] = True
+            depth += opens - closes
+            if depth < depth_end:
+                depth_end = 0
+            continue
+        if pending:
+            rf.is_test[i] = True
+            if "{" in text:
+                depth += opens - closes
+                if opens > closes:  # body continues past this line
+                    depth_end = depth  # closes when depth drops below
+                pending = False
+            elif text.strip().endswith(";") or _CFG_TEST_RE.search(rf.raw[i]):
+                # item ended on one line, or another attribute stacked
+                pending = not text.strip().endswith(";")
+            continue
+        if _CFG_TEST_RE.search(text_attr(rf, i)) or _TEST_ATTR_RE.search(
+            text_attr(rf, i)
+        ):
+            rf.is_test[i] = True
+            pending = True
+            depth += opens - closes
+            continue
+        depth += opens - closes
+
+
+def text_attr(rf: RustFile, i: int) -> str:
+    """Attributes survive blanking (no strings/comments inside the ones we
+    match), but read from blanked code so commented-out attrs don't count."""
+    return rf.code[i]
+
+
+# ---------------------------------------------------------------------------
+# pass 3: function spans
+# ---------------------------------------------------------------------------
+
+
+def _find_functions(rf: RustFile) -> None:
+    n = len(rf.code)
+    for i in range(n):
+        m = _FN_RE.search(rf.code[i])
+        if not m:
+            continue
+        name = m.group(1)
+        # find the opening brace of the body (skip `;` trait decls)
+        j = i
+        col = m.end()
+        depth = 0
+        opened = False
+        end = None
+        while j < n:
+            text = rf.code[j]
+            for k in range(col if j == i else 0, len(text)):
+                ch = text[k]
+                if ch == ";" and not opened and depth == 0:
+                    j = n  # declaration without body
+                    break
+                if ch == "{":
+                    depth += 1
+                    opened = True
+                elif ch == "}":
+                    depth -= 1
+                    if opened and depth == 0:
+                        end = j
+                        break
+            if end is not None or j >= n:
+                break
+            j += 1
+        if end is not None:
+            rf.functions.append((name, i + 1, end + 1))
+
+
+# ---------------------------------------------------------------------------
+# pass 4: // lint: directives and hot-path ranges
+# ---------------------------------------------------------------------------
+
+
+def _collect_directives(rf: RustFile) -> None:
+    open_hot: Optional[int] = None
+    for i, line in enumerate(rf.raw):
+        m = _LINT_RE.search(line)
+        if not m:
+            continue
+        lineno = i + 1
+        if m.group(1).startswith("allow"):
+            rf.directives.append(
+                Directive(
+                    kind="allow",
+                    line=lineno,
+                    rule=m.group(2),
+                    reason=m.group(3).strip(),
+                )
+            )
+        elif m.group(1) == "hot-path":
+            if open_hot is None:
+                open_hot = lineno
+            rf.directives.append(Directive(kind="hot-path", line=lineno))
+        else:  # end-hot-path
+            if open_hot is not None:
+                rf.hot_ranges.append((open_hot, lineno))
+                open_hot = None
+            rf.directives.append(Directive(kind="end-hot-path", line=lineno))
+    if open_hot is not None:
+        rf.unterminated_hot = open_hot

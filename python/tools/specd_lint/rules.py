@@ -1,0 +1,406 @@
+"""The six rule families specd-lint enforces over ``rust/src``.
+
+Every rule is a pure function ``(repo: Repo) -> List[Violation]`` so the
+test suite can feed it single-file fixtures.  Escapes: a
+``// lint: allow(<rule>, <reason>)`` comment on the offending line or the
+line directly above suppresses that one finding; the reason is mandatory
+(empty reasons are themselves a violation).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+from .config import Config
+from .model import RustFile
+
+
+@dataclass
+class Violation:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+@dataclass
+class Repo:
+    """Everything the rules look at: parsed sources + raw doc files."""
+
+    files: List[RustFile]
+    docs: Dict[str, str] = field(default_factory=dict)  # path -> text
+    cfg: Config = field(default_factory=Config)
+
+    def file(self, name: str):
+        for f in self.files:
+            if f.name == name:
+                return f
+        return None
+
+
+def _check_allow(rf: RustFile, rule: str, line: int, out: List[Violation]) -> bool:
+    """True when an allow() escape covers (rule, line); flags empty reasons."""
+    for d in rf.directives:
+        if d.kind == "allow" and d.rule == rule and d.line in (line, line - 1):
+            if not d.reason:
+                out.append(
+                    Violation(
+                        rule,
+                        rf.path,
+                        d.line,
+                        "allow() escape needs a non-empty reason",
+                    )
+                )
+            return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# Rule 1: no-panic -- unwrap/expect/panic in hot-path modules
+# ---------------------------------------------------------------------------
+
+
+def rule_no_panic(repo: Repo) -> List[Violation]:
+    out: List[Violation] = []
+    pats = [(re.compile(p), label) for p, label in repo.cfg.panic_patterns]
+    for rf in repo.files:
+        if rf.name not in repo.cfg.hot_path_modules:
+            continue
+        for lineno, text in rf.code_lines():
+            for pat, label in pats:
+                if not pat.search(text):
+                    continue
+                if _check_allow(rf, "no-panic", lineno, out):
+                    continue
+                out.append(
+                    Violation(
+                        "no-panic",
+                        rf.path,
+                        lineno,
+                        f"{label} in hot-path module {rf.name}: a panic here "
+                        "kills the scheduler and every in-flight request; "
+                        "return a crate::error::Error instead",
+                    )
+                )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Rule 2: hot-path-alloc -- allocation idioms inside `// lint: hot-path`
+# ---------------------------------------------------------------------------
+
+
+def rule_hot_path_alloc(repo: Repo) -> List[Violation]:
+    out: List[Violation] = []
+    pats = [(re.compile(p), label) for p, label in repo.cfg.alloc_patterns]
+    for rf in repo.files:
+        if rf.unterminated_hot is not None:
+            out.append(
+                Violation(
+                    "hot-path-alloc",
+                    rf.path,
+                    rf.unterminated_hot,
+                    "`// lint: hot-path` region is never closed "
+                    "(missing `// lint: end-hot-path`)",
+                )
+            )
+        if not rf.hot_ranges:
+            continue
+        for lineno, text in rf.code_lines():
+            if not rf.in_hot_range(lineno):
+                continue
+            for pat, label in pats:
+                if not pat.search(text):
+                    continue
+                if _check_allow(rf, "hot-path-alloc", lineno, out):
+                    continue
+                out.append(
+                    Violation(
+                        "hot-path-alloc",
+                        rf.path,
+                        lineno,
+                        f"{label} inside a hot-path region: the PR-4 purge "
+                        "keeps per-dispatch staging allocation-free -- reuse "
+                        "a scratch buffer",
+                    )
+                )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Rule 3: one-terminal -- structural chokepoints
+# ---------------------------------------------------------------------------
+
+
+def rule_one_terminal(repo: Repo) -> List[Violation]:
+    out: List[Violation] = []
+    for fname, (func, tokens) in repo.cfg.chokepoints.items():
+        rf = repo.file(fname)
+        if rf is None:
+            continue
+        pats = [re.compile(t) for t in tokens]
+        for lineno, text in rf.code_lines():
+            for pat in pats:
+                if not pat.search(text):
+                    continue
+                enclosing = rf.enclosing_function(lineno)
+                if enclosing == func:
+                    continue
+                if _check_allow(rf, "one-terminal", lineno, out):
+                    continue
+                out.append(
+                    Violation(
+                        "one-terminal",
+                        rf.path,
+                        lineno,
+                        f"`{pat.pattern}` outside fn {func}() "
+                        f"(in {enclosing or 'module scope'}): every request "
+                        f"exit must route through {func}() exactly once",
+                    )
+                )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Rule 4: metrics-doc -- specd_* families vs the documented tables
+# ---------------------------------------------------------------------------
+
+_FAMILY_RE = re.compile(r"^specd_[a-z0-9_]+$")
+
+
+def _defined_families(repo: Repo) -> Dict[str, Tuple[str, int]]:
+    """Family -> (file, first definition line), from string literals in the
+    configured definition files' non-test code (`prom_counter("specd_…")`
+    and histogram renders)."""
+    fams: Dict[str, Tuple[str, int]] = {}
+    for name in repo.cfg.metrics_def_files:
+        rf = repo.file(name)
+        if rf is None:
+            continue
+        for i, strings in enumerate(rf.strings):
+            if rf.is_test[i]:
+                continue
+            for s in strings:
+                if _FAMILY_RE.match(s):
+                    fams.setdefault(s, (name, i + 1))
+    return fams
+
+
+def _doc_tokens(text: str) -> List[str]:
+    return re.findall(r"specd_[a-z0-9_]+\*?", text)
+
+
+def rule_metrics_doc(repo: Repo) -> List[Violation]:
+    out: List[Violation] = []
+    cfg = repo.cfg
+    defined = _defined_families(repo)
+    if not defined and all(repo.file(n) is None for n in cfg.metrics_def_files):
+        return out  # fixture runs without any definition file
+
+    doc_tokens: List[Tuple[str, str]] = []  # (token, doc path)
+    for path, text in repo.docs.items():
+        for tok in _doc_tokens(text):
+            doc_tokens.append((tok, path))
+    doc_exact = {t for t, _ in doc_tokens if not t.endswith(("*", "_"))}
+    doc_prefix = {t.rstrip("*_") for t, _ in doc_tokens if t.endswith(("*", "_"))}
+
+    # (a) every defined family is documented (exactly or via a glob row)
+    for fam, (def_name, line) in sorted(defined.items()):
+        if fam in doc_exact or any(fam.startswith(p) for p in doc_prefix):
+            continue
+        def_file = repo.file(def_name)
+        if def_file is not None and _check_allow(def_file, "metrics-doc", line, out):
+            continue
+        out.append(
+            Violation(
+                "metrics-doc",
+                def_file.path if def_file else def_name,
+                line,
+                f"metric family `{fam}` is exported but missing from the "
+                f"documented tables ({', '.join(cfg.metrics_doc_files)})",
+            )
+        )
+
+    # (b) every documented token resolves to a defined family
+    for tok, path in sorted(set(doc_tokens)):
+        if tok in cfg.metrics_ignore or tok.rstrip("*_") in cfg.metrics_ignore:
+            continue
+        if tok.endswith(("*", "_")):
+            prefix = tok.rstrip("*_")
+            if any(f.startswith(prefix) for f in defined):
+                continue
+            out.append(
+                Violation(
+                    "metrics-doc",
+                    path,
+                    0,
+                    f"documented glob `{tok}` matches no exported family",
+                )
+            )
+        elif tok not in defined:
+            out.append(
+                Violation(
+                    "metrics-doc",
+                    path,
+                    0,
+                    f"documented family `{tok}` is not exported by "
+                    f"{' / '.join(cfg.metrics_def_files)}",
+                )
+            )
+
+    # (c) every reference in the sources resolves to a defined family
+    #     (comments included: stale names in doc comments mislead operators)
+    ref_re = re.compile(r"specd_[a-z0-9_]+\*?")
+    for rf in repo.files:
+        if rf.name in cfg.metrics_def_files:
+            continue
+        for i, line in enumerate(rf.raw):
+            if rf.is_test[i]:
+                continue
+            for tok in ref_re.findall(line):
+                base = tok.rstrip("*_")
+                if tok in cfg.metrics_ignore or base in cfg.metrics_ignore:
+                    continue
+                ok = (
+                    tok in defined
+                    if not tok.endswith(("*", "_"))
+                    else any(f.startswith(base) for f in defined)
+                )
+                if ok:
+                    continue
+                if _check_allow(rf, "metrics-doc", i + 1, out):
+                    continue
+                out.append(
+                    Violation(
+                        "metrics-doc",
+                        rf.path,
+                        i + 1,
+                        f"reference to `{tok}` matches no exported metric "
+                        "family (stale name?)",
+                    )
+                )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Rule 5: trace-pairing -- every trace::begin() feeds a span closer
+# ---------------------------------------------------------------------------
+
+
+def rule_trace_pairing(repo: Repo) -> List[Violation]:
+    out: List[Violation] = []
+    cfg = repo.cfg
+    begin_let = re.compile(r"let\s+(?:mut\s+)?(\w+)\s*=\s*" + cfg.trace_begin)
+    begin_any = re.compile(cfg.trace_begin)
+    closers = "|".join(cfg.trace_closers)
+    for rf in repo.files:
+        for name, a, b in rf.functions:
+            lines = [
+                (i + 1, rf.code[i])
+                for i in range(a - 1, b)
+                if not rf.is_test[i]
+            ]
+            if not lines:
+                continue
+            body = "\n".join(t for _, t in lines)
+            for lineno, text in lines:
+                for m in begin_any.finditer(text):
+                    lm = begin_let.search(text)
+                    if lm is None or lm.end() < m.end():
+                        # begin() not bound to a variable at this site
+                        if _check_allow(rf, "trace-pairing", lineno, out):
+                            continue
+                        out.append(
+                            Violation(
+                                "trace-pairing",
+                                rf.path,
+                                lineno,
+                                "trace::begin() result discarded: bind it and "
+                                "close the span with "
+                                f"trace::{{{closers}}}(t0, …)",
+                            )
+                        )
+                        continue
+                    var = lm.group(1)
+                    closer = re.compile(
+                        r"trace::(?:" + closers + r")\s*\(\s*" + re.escape(var) + r"\b",
+                        re.S,
+                    )
+                    if closer.search(body):
+                        continue
+                    if _check_allow(rf, "trace-pairing", lineno, out):
+                        continue
+                    out.append(
+                        Violation(
+                            "trace-pairing",
+                            rf.path,
+                            lineno,
+                            f"span opened as `{var}` in fn {name}() is never "
+                            f"closed by trace::{{{closers}}}({var}, …) -- the "
+                            "ring would record an unterminated span",
+                        )
+                    )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Rule 6: lock-order -- configured mutex acquisition order
+# ---------------------------------------------------------------------------
+
+
+def rule_lock_order(repo: Repo) -> List[Violation]:
+    out: List[Violation] = []
+    for rf in repo.files:
+        for name, a, b in rf.functions:
+            first_at: Dict[str, int] = {}
+            for lock_name in {n for pair in repo.cfg.lock_order for n in pair}:
+                pat = re.compile(r"(?:^|[^\w])" + re.escape(lock_name) + r"\s*\.\s*lock\s*\(")
+                for i in range(a - 1, b):
+                    if rf.is_test[i]:
+                        continue
+                    if pat.search(rf.code[i]):
+                        first_at[lock_name] = i + 1
+                        break
+            for first, second in repo.cfg.lock_order:
+                if first in first_at and second in first_at:
+                    if first_at[second] < first_at[first]:
+                        lineno = first_at[second]
+                        if _check_allow(rf, "lock-order", lineno, out):
+                            continue
+                        out.append(
+                            Violation(
+                                "lock-order",
+                                rf.path,
+                                lineno,
+                                f"`{second}.lock()` acquired before "
+                                f"`{first}.lock()` in fn {name}(): the "
+                                f"configured order is {first} -> {second} "
+                                "(deadlock risk on the inverse nesting)",
+                            )
+                        )
+    return out
+
+
+ALL_RULES = {
+    "no-panic": rule_no_panic,
+    "hot-path-alloc": rule_hot_path_alloc,
+    "one-terminal": rule_one_terminal,
+    "metrics-doc": rule_metrics_doc,
+    "trace-pairing": rule_trace_pairing,
+    "lock-order": rule_lock_order,
+}
+
+
+def run_rules(repo: Repo, only: List[str] = None) -> List[Violation]:
+    out: List[Violation] = []
+    for name, rule in ALL_RULES.items():
+        if only and name not in only:
+            continue
+        out.extend(rule(repo))
+    out.sort(key=lambda v: (v.path, v.line, v.rule))
+    return out

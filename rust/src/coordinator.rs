@@ -456,7 +456,7 @@ impl<'a> Coordinator<'a> {
                 && wave.is_none()
                 && (!wave_capable || !batched.as_ref().is_some_and(|c| c.available() > 0))
             {
-                let p = pending.pop_front().expect("checked non-empty");
+                let Some(p) = pending.pop_front() else { break };
                 if let Some(ev) = &p.req.events {
                     let _ = ev.send(Delta::Started);
                 }

@@ -12,12 +12,27 @@
 //!   scheduler.
 //!
 //! Everything is std-only: `Mutex` + `Condvar` underneath.
+//!
+//! Under `RUSTFLAGS="--cfg loom"` the sync primitives swap to `loom`'s
+//! models so `rust/tests/loom_models.rs` can explore interleavings of the
+//! channel and pool; default builds are untouched (see
+//! `rust/vendor/loom/src/lib.rs` for the offline substitution contract).
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+#[cfg(loom)]
+use loom::sync::atomic::{AtomicBool, Ordering};
+#[cfg(loom)]
+use loom::sync::{Arc, Condvar, Mutex, MutexGuard};
+#[cfg(loom)]
+use loom::thread::JoinHandle;
+#[cfg(not(loom))]
+use std::sync::atomic::{AtomicBool, Ordering};
+#[cfg(not(loom))]
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+#[cfg(not(loom))]
+use std::thread::JoinHandle;
 
 // ---------------------------------------------------------------------------
 // Bounded channel
@@ -27,6 +42,18 @@ struct ChannelInner<T> {
     queue: Mutex<ChannelState<T>>,
     not_full: Condvar,
     not_empty: Condvar,
+}
+
+impl<T> ChannelInner<T> {
+    /// Poison-tolerant lock. A connection thread that panics while holding
+    /// the queue mutex must not wedge every other producer and the
+    /// scheduler behind a `PoisonError`: the channel state is only mutated
+    /// by single push/pop/counter steps, so the state a panicking holder
+    /// leaves behind is always internally consistent. Same idiom as
+    /// `trace::lock_recorder`.
+    fn lock_state(&self) -> MutexGuard<'_, ChannelState<T>> {
+        self.queue.lock().unwrap_or_else(|p| p.into_inner())
+    }
 }
 
 struct ChannelState<T> {
@@ -84,14 +111,14 @@ pub fn bounded<T>(capacity: usize) -> (Sender<T>, Receiver<T>) {
 
 impl<T> Clone for Sender<T> {
     fn clone(&self) -> Self {
-        self.0.queue.lock().unwrap().senders += 1;
+        self.0.lock_state().senders += 1;
         Sender(self.0.clone())
     }
 }
 
 impl<T> Drop for Sender<T> {
     fn drop(&mut self) {
-        let mut st = self.0.queue.lock().unwrap();
+        let mut st = self.0.lock_state();
         st.senders -= 1;
         if st.senders == 0 {
             self.0.not_empty.notify_all();
@@ -101,7 +128,7 @@ impl<T> Drop for Sender<T> {
 
 impl<T> Drop for Receiver<T> {
     fn drop(&mut self) {
-        self.0.queue.lock().unwrap().receiver_alive = false;
+        self.0.lock_state().receiver_alive = false;
         self.0.not_full.notify_all();
     }
 }
@@ -109,7 +136,7 @@ impl<T> Drop for Receiver<T> {
 impl<T> Sender<T> {
     /// Blocking send — this is the admission backpressure.
     pub fn send(&self, item: T) -> Result<(), Closed> {
-        let mut st = self.0.queue.lock().unwrap();
+        let mut st = self.0.lock_state();
         loop {
             if !st.receiver_alive {
                 return Err(Closed);
@@ -119,7 +146,7 @@ impl<T> Sender<T> {
                 self.0.not_empty.notify_one();
                 return Ok(());
             }
-            st = self.0.not_full.wait(st).unwrap();
+            st = self.0.not_full.wait(st).unwrap_or_else(|p| p.into_inner());
         }
     }
 
@@ -129,12 +156,12 @@ impl<T> Sender<T> {
     /// budget, capacity-finished block) — previously such sequences held
     /// their slot until natural completion.
     pub fn is_connected(&self) -> bool {
-        self.0.queue.lock().unwrap().receiver_alive
+        self.0.lock_state().receiver_alive
     }
 
     /// Non-blocking send; gives the item back when full.
     pub fn try_send(&self, item: T) -> Result<(), TrySendError<T>> {
-        let mut st = self.0.queue.lock().unwrap();
+        let mut st = self.0.lock_state();
         if !st.receiver_alive {
             return Err(TrySendError::Closed(item));
         }
@@ -156,7 +183,7 @@ pub enum TrySendError<T> {
 impl<T> Receiver<T> {
     /// Blocking receive; Err(Closed) after all senders dropped and drained.
     pub fn recv(&self) -> Result<T, Closed> {
-        let mut st = self.0.queue.lock().unwrap();
+        let mut st = self.0.lock_state();
         loop {
             if let Some(item) = st.items.pop_front() {
                 self.0.not_full.notify_one();
@@ -165,7 +192,7 @@ impl<T> Receiver<T> {
             if st.senders == 0 {
                 return Err(Closed);
             }
-            st = self.0.not_empty.wait(st).unwrap();
+            st = self.0.not_empty.wait(st).unwrap_or_else(|p| p.into_inner());
         }
     }
 
@@ -174,7 +201,7 @@ impl<T> Receiver<T> {
     /// a connection thread forever.
     pub fn recv_timeout(&self, timeout: Duration) -> Result<T, RecvTimeoutError> {
         let deadline = Instant::now() + timeout;
-        let mut st = self.0.queue.lock().unwrap();
+        let mut st = self.0.lock_state();
         loop {
             if let Some(item) = st.items.pop_front() {
                 self.0.not_full.notify_one();
@@ -187,7 +214,11 @@ impl<T> Receiver<T> {
             if now >= deadline {
                 return Err(RecvTimeoutError::Timeout);
             }
-            let (guard, res) = self.0.not_empty.wait_timeout(st, deadline - now).unwrap();
+            let (guard, res) = self
+                .0
+                .not_empty
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(|p| p.into_inner());
             st = guard;
             if res.timed_out() && st.items.is_empty() {
                 if st.senders == 0 {
@@ -200,7 +231,7 @@ impl<T> Receiver<T> {
 
     /// Non-blocking receive.
     pub fn try_recv(&self) -> Option<T> {
-        let mut st = self.0.queue.lock().unwrap();
+        let mut st = self.0.lock_state();
         let item = st.items.pop_front();
         if item.is_some() {
             self.0.not_full.notify_one();
@@ -210,7 +241,7 @@ impl<T> Receiver<T> {
 
     /// Drain whatever is currently queued (scheduler batch pickup).
     pub fn drain(&self) -> Vec<T> {
-        let mut st = self.0.queue.lock().unwrap();
+        let mut st = self.0.lock_state();
         let out: Vec<T> = st.items.drain(..).collect();
         if !out.is_empty() {
             self.0.not_full.notify_all();
@@ -219,7 +250,7 @@ impl<T> Receiver<T> {
     }
 
     pub fn len(&self) -> usize {
-        self.0.queue.lock().unwrap().items.len()
+        self.0.lock_state().items.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -232,6 +263,21 @@ impl<T> Receiver<T> {
 // ---------------------------------------------------------------------------
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Worker spawn, split on `cfg(loom)`: real loom's `thread` module has no
+/// `Builder`, so the named-thread nicety only exists on default builds.
+#[cfg(not(loom))]
+fn spawn_worker(i: usize, body: impl FnOnce() + Send + 'static) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("specd-worker-{i}"))
+        .spawn(body)
+        .expect("spawn worker")
+}
+
+#[cfg(loom)]
+fn spawn_worker(_i: usize, body: impl FnOnce() + Send + 'static) -> JoinHandle<()> {
+    loom::thread::spawn(body)
+}
 
 /// Fixed-size worker pool with graceful shutdown on drop.
 pub struct ThreadPool {
@@ -248,14 +294,11 @@ impl ThreadPool {
         let workers = (0..n_workers.max(1))
             .map(|i| {
                 let rx = rx.clone();
-                std::thread::Builder::new()
-                    .name(format!("specd-worker-{i}"))
-                    .spawn(move || {
-                        while let Ok(job) = rx.recv() {
-                            job();
-                        }
-                    })
-                    .expect("spawn worker")
+                spawn_worker(i, move || {
+                    while let Ok(job) = rx.recv() {
+                        job();
+                    }
+                })
             })
             .collect();
         ThreadPool { tx: Some(tx), workers, shutting_down }
@@ -286,22 +329,22 @@ impl ThreadPool {
             let done = done.clone();
             self.execute(move || {
                 let r = f(item);
-                results.lock().unwrap()[i] = Some(r);
+                results.lock().unwrap_or_else(|p| p.into_inner())[i] = Some(r);
                 let (lock, cv) = &*done;
-                *lock.lock().unwrap() += 1;
+                *lock.lock().unwrap_or_else(|p| p.into_inner()) += 1;
                 cv.notify_one();
             });
         }
         let (lock, cv) = &*done;
-        let mut count = lock.lock().unwrap();
+        let mut count = lock.lock().unwrap_or_else(|p| p.into_inner());
         while *count < n {
-            count = cv.wait(count).unwrap();
+            count = cv.wait(count).unwrap_or_else(|p| p.into_inner());
         }
         drop(count);
         Arc::try_unwrap(results)
             .unwrap_or_else(|_| panic!("map results still shared"))
             .into_inner()
-            .unwrap()
+            .unwrap_or_else(|p| p.into_inner())
             .into_iter()
             .map(|r| r.expect("job completed"))
             .collect()
@@ -456,6 +499,52 @@ mod tests {
         }
         assert_eq!(rx.drain(), vec![0, 1, 2, 3, 4]);
         assert!(rx.is_empty());
+    }
+
+    #[test]
+    fn channel_survives_poisoned_lock() {
+        // Regression for the specd-lint no-panic sweep: a producer that
+        // panicked while holding the queue mutex used to poison it, after
+        // which every send/recv on the channel panicked too. The channel
+        // must stay fully usable.
+        let (tx, rx) = bounded::<i32>(4);
+        let tx2 = tx.clone();
+        let _ = std::thread::spawn(move || {
+            let _st = tx2.0.queue.lock().unwrap();
+            panic!("poison the channel lock");
+        })
+        .join();
+        assert!(tx.0.queue.is_poisoned(), "test setup: lock must be poisoned");
+        tx.send(1).unwrap();
+        tx.try_send(2).unwrap();
+        assert!(tx.is_connected());
+        assert_eq!(rx.len(), 2);
+        assert_eq!(rx.recv(), Ok(1));
+        assert_eq!(rx.try_recv(), Some(2));
+        assert_eq!(
+            rx.recv_timeout(Duration::from_millis(5)),
+            Err(RecvTimeoutError::Timeout)
+        );
+        drop(tx);
+        assert_eq!(rx.drain(), Vec::<i32>::new());
+        assert_eq!(rx.recv(), Err(Closed));
+    }
+
+    #[test]
+    fn pool_map_survives_panicking_job() {
+        // A panicking job unwinds (and kills) the worker that ran it, and
+        // the shared channel lock it touched on the way down must not end
+        // up poisoned for the remaining workers: a later map() over the
+        // same pool still has to complete.
+        let pool = ThreadPool::new(2, 16);
+        let (tx, rx) = bounded::<()>(1);
+        pool.execute(move || {
+            let _tx = tx; // dropped on unwind => rx observes Closed
+            panic!("poison the pool's shared state");
+        });
+        assert_eq!(rx.recv(), Err(Closed));
+        let out = pool.map(vec![1usize, 2, 3], |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
     }
 
     #[test]

@@ -235,7 +235,7 @@ impl Runtime {
             )));
         }
         let path = manifest.weights_path(model_name)?;
-        let wf = WeightsFile::load(path.to_str().unwrap())?;
+        let wf = WeightsFile::load(utf8_path(&path)?)?;
         wf.check_order(&arch.arch.param_order)?;
         let mut weight_bufs = Vec::with_capacity(wf.len());
         for t in wf.tensors_in_order() {
@@ -245,7 +245,7 @@ impl Runtime {
                 None,
             )?);
         }
-        let max_block = *arch.blocks.iter().max().expect("entry blocks");
+        let max_block = arch.blocks.iter().copied().fold(0, usize::max);
         Ok(Model {
             name: model_name.to_string(),
             arch: arch.clone(),
@@ -258,6 +258,14 @@ impl Runtime {
             dispatches: Cell::new(0),
         })
     }
+}
+
+/// A path as `&str`, or [`Error::Weights`] when it is not valid UTF-8 —
+/// the loader APIs take `&str`, and a panic on an exotic path would take
+/// down the whole runtime rather than failing the one load.
+fn utf8_path(path: &std::path::Path) -> Result<&str> {
+    path.to_str()
+        .ok_or_else(|| Error::Weights(format!("non-UTF-8 weights path: {}", path.display())))
 }
 
 /// The compiled executables of one architecture's batched `[B, T]` entry
@@ -456,20 +464,25 @@ impl BatchStaging {
         ledger: &LaneLedger,
     ) -> Result<()> {
         let batch = ledger.batch();
+        // lint: hot-path
         self.tok[..batch * block].fill(0);
         self.pos[..batch].fill(0);
         self.mask[..batch].fill(0);
         for c in calls {
             if c.lane >= batch {
+                // lint: allow(hot-path-alloc, cold validation error path)
                 return Err(Error::msg(format!("lane {} out of range (batch {batch})", c.lane)));
             }
             if !ledger.is_live(c.lane) {
+                // lint: allow(hot-path-alloc, cold validation error path)
                 return Err(Error::KvCache(format!("dispatch to dead arena lane {}", c.lane)));
             }
             if self.mask[c.lane] != 0 {
+                // lint: allow(hot-path-alloc, cold validation error path)
                 return Err(Error::msg(format!("duplicate lane {} in one dispatch", c.lane)));
             }
             if c.tokens.is_empty() || c.tokens.len() > block {
+                // lint: allow(hot-path-alloc, cold validation error path)
                 return Err(Error::msg(format!(
                     "lane {}: got {} tokens for block {block}",
                     c.lane,
@@ -477,6 +490,7 @@ impl BatchStaging {
                 )));
             }
             if c.pos + c.tokens.len() > max_seq {
+                // lint: allow(hot-path-alloc, cold validation error path)
                 return Err(Error::KvCache(format!(
                     "lane {}: sequence overflow: pos {} + {} > max_seq {max_seq}",
                     c.lane,
@@ -490,6 +504,7 @@ impl BatchStaging {
             self.pos[c.lane] = c.pos as i32;
             self.mask[c.lane] = 1;
         }
+        // lint: end-hot-path
         Ok(())
     }
 }
@@ -581,7 +596,7 @@ impl Model {
         let zeros = vec![0f32; bx.batch * sl];
         let states =
             self.arch.rt.client.buffer_from_host_buffer::<f32>(&zeros, &[bx.batch, sl], None)?;
-        let max_block = *self.arch.blocks.iter().max().expect("entry blocks");
+        let max_block = self.arch.blocks.iter().copied().fold(0, usize::max);
         Ok(StateArena {
             states,
             ledger: LaneLedger::new(bx.batch),
@@ -652,6 +667,7 @@ impl Model {
             .ok_or_else(|| Error::msg("no batched entry points in this bundle"))?;
         let block = self.arch.block(entry);
         let (b, sl, kvn) = (bx.batch, self.arch.arch.state_len, self.arch.arch.kv_len);
+        // lint: hot-path
         let tr0 = crate::trace::begin();
         arena.staging.stage(calls, block, self.arch.arch.max_seq, &arena.ledger)?;
         let client = &self.arch.rt.client;
@@ -663,6 +679,7 @@ impl Model {
         let pos_buf = client.buffer_from_host_buffer::<i32>(&arena.staging.pos, &[b], None)?;
         let mask_buf = client.buffer_from_host_buffer::<i32>(&arena.staging.mask, &[b], None)?;
 
+        // lint: allow(hot-path-alloc, arg vec borrows per-dispatch device buffers and cannot outlive them)
         let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.weight_bufs.len() + 4);
         args.extend(self.weight_bufs.iter());
         args.push(&arena.states);
@@ -715,6 +732,7 @@ impl Model {
             lit.copy_raw_to::<f32>(&mut arena.scratch[..b * sl])?;
         }
         arena.states = new_states;
+        // lint: end-hot-path
         Ok(())
     }
 
@@ -1054,6 +1072,19 @@ mod tests {
     #[test]
     fn seq_state_lane_accessor() {
         assert_eq!(SeqState::Lane(3).lane(), Some(3));
+    }
+
+    #[test]
+    fn utf8_path_rejects_non_utf8_instead_of_panicking() {
+        // Regression for the `path.to_str().unwrap()` that used to live in
+        // `load_model`: a weights path with non-UTF-8 bytes must surface
+        // as Error::Weights, not a panic.
+        use std::ffi::OsStr;
+        use std::os::unix::ffi::OsStrExt;
+        let bad = std::path::PathBuf::from(OsStr::from_bytes(b"weights/\xff\xfe.bin"));
+        let err = utf8_path(&bad).expect_err("non-UTF-8 path must be an error");
+        assert!(err.to_string().contains("non-UTF-8 weights path"));
+        assert_eq!(utf8_path(std::path::Path::new("a/b.bin")).ok(), Some("a/b.bin"));
     }
     // Integration tests that exercise real PJRT execution live in
     // rust/tests/runtime_integration.rs and rust/tests/batched_integration.rs

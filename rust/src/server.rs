@@ -140,17 +140,25 @@ impl ServerState {
         .fetch_add(1, Ordering::Relaxed);
     }
 
+    /// The metrics aggregate, poison-tolerant: a handler thread that
+    /// panicked while holding the lock must not take every later
+    /// request's metrics merge (and the /metrics endpoint) down with it.
+    /// Same idiom as `trace::lock_recorder`.
+    fn agg(&self) -> std::sync::MutexGuard<'_, ServeMetrics> {
+        self.agg.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
     fn merge_completed(&self, m: &ServeMetrics) {
-        self.agg.lock().unwrap().merge(m);
+        self.agg().merge(m);
     }
 
     /// Snapshot of the generation aggregate (tests / final report).
     pub fn aggregate_report(&self) -> String {
-        self.agg.lock().unwrap().report()
+        self.agg().report()
     }
 
     pub fn completed_requests(&self) -> usize {
-        self.agg.lock().unwrap().total_requests
+        self.agg().total_requests
     }
 
     /// Full Prometheus exposition: HTTP-layer counters + the generation
@@ -171,7 +179,7 @@ impl ServerState {
                      self.timeouts_408.load(Ordering::Relaxed) as f64);
         prom_gauge(&mut s, "specd_http_in_flight", "Requests currently being handled.",
                    self.in_flight.load(Ordering::Relaxed) as f64);
-        s.push_str(&self.agg.lock().unwrap().prometheus_text());
+        s.push_str(&self.agg().prometheus_text());
         s
     }
 }
@@ -797,6 +805,27 @@ mod tests {
         let prom = st.prometheus();
         assert!(prom.contains("specd_http_rejected_busy_total 1"));
         assert!(prom.contains("specd_requests_total 0"));
+    }
+
+    #[test]
+    fn metrics_aggregate_survives_poisoned_lock() {
+        // Regression for the specd-lint no-panic sweep: a handler thread
+        // that dies while holding `agg` used to poison the mutex, turning
+        // every later merge/report/scrape into a panic.
+        let st = std::sync::Arc::new(ServerState::default());
+        let st2 = st.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = st2.agg.lock().unwrap();
+            panic!("poison the aggregate lock");
+        })
+        .join();
+        assert!(st.agg.is_poisoned(), "test setup: lock must be poisoned");
+        let mut m = ServeMetrics::default();
+        m.total_requests = 1;
+        st.merge_completed(&m);
+        assert_eq!(st.completed_requests(), 1);
+        assert!(st.prometheus().contains("specd_requests_total 1"));
+        assert!(!st.aggregate_report().is_empty());
     }
 
     #[test]

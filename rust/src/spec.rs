@@ -358,8 +358,14 @@ impl<'a> SpecDecoder<'a> {
         if ctx.available() == 0 {
             return Ok(false);
         }
-        let dl = ctx.draft.ledger.alloc().expect("free draft lane checked");
-        let tl = ctx.target.ledger.alloc().expect("free target lane checked");
+        // `available()` said both arenas have room, but if the ledgers ever
+        // disagree (asymmetric release bug) degrade to per-lane serving
+        // instead of panicking the scheduler mid-batch.
+        let Some(dl) = ctx.draft.ledger.alloc() else { return Ok(false) };
+        let Some(tl) = ctx.target.ledger.alloc() else {
+            let _ = ctx.draft.ledger.free(dl);
+            return Ok(false);
+        };
         let packed = (|| -> Result<()> {
             let st = s.d_cache.take_state()?;
             let st = self.draft.pack_lane(&mut ctx.draft, dl, st)?;
@@ -381,15 +387,15 @@ impl<'a> SpecDecoder<'a> {
     /// (called on every scheduler exit path — finish, eviction, failure).
     /// A no-op on owned sessions; tolerant of half-adopted sessions.
     pub fn release(&self, ctx: &mut BatchedCtx, s: &mut SpecSession) {
-        if matches!(s.d_cache.state, Some(SeqState::Lane(_))) {
-            if let Some(st) = s.d_cache.state.take() {
-                let _ = ctx.draft.ledger.free(st.lane().expect("matched lane"));
-            }
+        if let Some(SeqState::Lane(l)) = &s.d_cache.state {
+            let l = *l;
+            s.d_cache.state = None;
+            let _ = ctx.draft.ledger.free(l);
         }
-        if matches!(s.t_cache.state, Some(SeqState::Lane(_))) {
-            if let Some(st) = s.t_cache.state.take() {
-                let _ = ctx.target.ledger.free(st.lane().expect("matched lane"));
-            }
+        if let Some(SeqState::Lane(l)) = &s.t_cache.state {
+            let l = *l;
+            s.t_cache.state = None;
+            let _ = ctx.target.ledger.free(l);
         }
     }
 
@@ -443,15 +449,34 @@ impl<'a> SpecDecoder<'a> {
         for p in &prompts {
             self.validate_prompt(p)?;
         }
-        let max_len = prompts.iter().map(Vec::len).max().expect("non-empty wave");
-        let entries = prompts
-            .into_iter()
-            .map(|prompt| WaveEntry {
-                prompt,
-                d_lane: ctx.draft.ledger.alloc().expect("wave capacity checked"),
-                t_lane: ctx.target.ledger.alloc().expect("wave capacity checked"),
-            })
-            .collect();
+        let max_len = prompts.iter().map(Vec::len).fold(0, usize::max);
+        // The capacity check above makes allocation failure unreachable in
+        // a consistent ledger; if it happens anyway, roll back every lane
+        // this wave took so "fails allocating nothing" still holds.
+        let mut entries: Vec<WaveEntry> = Vec::with_capacity(prompts.len());
+        for prompt in prompts {
+            match (ctx.draft.ledger.alloc(), ctx.target.ledger.alloc()) {
+                (Some(d_lane), Some(t_lane)) => {
+                    entries.push(WaveEntry { prompt, d_lane, t_lane })
+                }
+                (d, t) => {
+                    if let Some(l) = d {
+                        let _ = ctx.draft.ledger.free(l);
+                    }
+                    if let Some(l) = t {
+                        let _ = ctx.target.ledger.free(l);
+                    }
+                    for e in &entries {
+                        let _ = ctx.draft.ledger.free(e.d_lane);
+                        let _ = ctx.target.ledger.free(e.t_lane);
+                    }
+                    return Err(Error::Scheduler(
+                        "arena lane allocation failed mid-wave after the capacity check"
+                            .into(),
+                    ));
+                }
+            }
+        }
         Ok(PrefillWave { entries, pos: 0, max_len, block })
     }
 
@@ -838,6 +863,7 @@ impl<'a> SpecDecoder<'a> {
             if d_len < s.seq.len() {
                 syncs.push(Sync {
                     i,
+                    // lint: allow(no-panic, lane_mode() at the loop top guarantees a draft lane)
                     lane: s.d_lane().expect("lane-mode session has a draft lane"),
                     pending: s.seq[d_len..].to_vec(),
                     pos: d_len,
@@ -919,6 +945,7 @@ impl<'a> SpecDecoder<'a> {
             if b.drafted.len() < b.gamma {
                 decs.push(Dec {
                     i,
+                    // lint: allow(no-panic, lane_mode() at the loop top guarantees a draft lane)
                     lane: lane.session.d_lane().expect("lane-mode session has a draft lane"),
                     tok: t,
                     pos: lane.session.d_cache.len(),
@@ -937,6 +964,7 @@ impl<'a> SpecDecoder<'a> {
         for c in &decs {
             let s = &mut *lanes[c.i].session;
             let rows = ctx.draft.lane_logits(c.lane, 1, v);
+            // lint: allow(no-panic, decs only holds lanes whose block was set this phase)
             let b = blocks[c.i].as_mut().expect("drafting lane has a block");
             b.basis.clear();
             b.basis.extend_from_slice(&rows[..v]);
@@ -983,6 +1011,7 @@ impl<'a> SpecDecoder<'a> {
             debug_assert!(fed.len() <= self.target.arch.block(Entry::Verify));
             vers.push(Ver {
                 i,
+                // lint: allow(no-panic, lane_mode() at the loop top guarantees a target lane)
                 lane: s.t_lane().expect("lane-mode session has a target lane"),
                 fed,
                 pos: t_len,
@@ -1000,6 +1029,7 @@ impl<'a> SpecDecoder<'a> {
         drop(calls);
         for c in &vers {
             let Lane { session, sampling, rng } = &mut lanes[c.i];
+            // lint: allow(no-panic, vers only holds lanes whose block survived the propose phase)
             let b = blocks[c.i].take().expect("verified lane has a block");
             let rows = ctx.target.lane_logits(c.lane, c.fed.len(), v);
             let done = match session.t_cache.advance(c.fed.len()) {

@@ -2,7 +2,7 @@
 //! skip-if-absent guard (the tests need `make artifacts` to have run).
 #![allow(dead_code)] // each test binary uses a different fixture subset
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use specd::artifacts::Manifest;
 use specd::runtime::{CompiledArch, Model, Runtime};
@@ -54,6 +54,17 @@ impl Fixture {
             .expect("at least one draft model");
         self.draft(pick)
     }
+}
+
+/// The flight recorder is process-global, so tests that enable/disable it
+/// serialize on this lock (integration tests in one binary share the
+/// process). Poison-tolerant: one failing test must not wedge the rest of
+/// the binary behind a `PoisonError`. Shared here so every test binary
+/// uses the same lock discipline instead of growing its own copy.
+static TRACE_TEST_LOCK: Mutex<()> = Mutex::new(());
+
+pub fn trace_guard() -> MutexGuard<'static, ()> {
+    TRACE_TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner())
 }
 
 /// Macro: skip the test (with a note) when artifacts are missing.

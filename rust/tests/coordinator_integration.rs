@@ -315,6 +315,7 @@ fn one_terminal_per_request_across_exits() {
     // Ids far above anything other tests in this binary use: the trace
     // ring is process-global and `cargo test` runs tests concurrently.
     const BASE: u64 = 0x7e57_0000_0000;
+    let _g = common::trace_guard();
     trace::enable(16_384);
 
     let mk = |i: u64, prompt: Vec<u32>| Request::new(BASE + i, prompt, 8, SamplingConfig::greedy());

@@ -550,7 +550,9 @@ fn debug_endpoints_gated_behind_flag() {
     off.stop();
 
     // On: the ring snapshot parses as Chrome trace JSON and a served
-    // request's string id resolves to its lifecycle timeline.
+    // request's string id resolves to its lifecycle timeline. The recorder
+    // is process-global, so hold the shared trace lock around it.
+    let _g = common::trace_guard();
     specd::trace::enable(4096);
     let on = Rig::start(16, 2, Duration::from_millis(1), |cfg| cfg.debug_endpoints = true);
     let body = r#"{"tokens": [5, 6], "max_new": 4}"#;

@@ -4,19 +4,16 @@
 //! in-repo parser — the same checks `python/tests/test_trace_export.py`
 //! runs against a replay-produced trace.
 //!
-//! The recorder is process-global, so every test serializes on a local
-//! lock (integration tests in one binary share the process).
+//! The recorder is process-global, so every test serializes on the shared
+//! `common::trace_guard()` lock (integration tests in one binary share the
+//! process).
 
-use std::sync::Mutex;
+mod common;
+
+use common::trace_guard as guard;
 
 use specd::json::Value;
 use specd::trace;
-
-static LOCK: Mutex<()> = Mutex::new(());
-
-fn guard() -> std::sync::MutexGuard<'static, ()> {
-    LOCK.lock().unwrap_or_else(|p| p.into_inner())
-}
 
 /// Emit one synthetic scheduler iteration (nested spans) plus a full
 /// request lifecycle for `req`.

@@ -12,11 +12,23 @@ cd "$(dirname "$0")/.."
 run_fmt=1
 [[ "${1:-}" == "--no-fmt" ]] && run_fmt=0
 
+# Toolchain-independent invariant analysis first: it needs only python3,
+# so a broken invariant fails the run before any compile time is spent.
+echo "== specd-lint (static invariants, no toolchain needed) =="
+python3 scripts/lint_specd.py
+
 echo "== cargo build --release =="
 cargo build --release
 
 echo "== cargo test -q =="
 cargo test -q
+
+echo "== loom concurrency models =="
+# Rebuilds the crate with exec's sync primitives aliased to loom's. The
+# vendored stub (rust/vendor/loom) runs each model once as a concurrency
+# smoke test; substituting the real crate turns the same models into
+# exhaustive interleaving checks (see the stub's docs).
+RUSTFLAGS="--cfg loom" cargo test -q --test loom_models
 
 echo "== batched golden probes (artifact-gated) =="
 if compgen -G "artifacts/hlo/*/verify.b*.hlo.txt" > /dev/null; then
@@ -40,12 +52,12 @@ if command -v python3 >/dev/null 2>&1 && python3 -c "import pytest" 2>/dev/null;
         cargo run --release --quiet -- replay --artifacts artifacts \
             --requests 4 --max-new 8 --trace-out trace.json
         (cd python && SPECD_TRACE_JSON="$PWD/../trace.json" \
-            python3 -m pytest tests/test_trace_export.py -q)
+            python3 -m pytest tests/test_trace_export.py tests/test_specd_lint.py -q)
     else
-        (cd python && python3 -m pytest tests/test_trace_export.py -q)
+        (cd python && python3 -m pytest tests/test_trace_export.py tests/test_specd_lint.py -q)
     fi
 else
-    echo "pytest unavailable; skipping python trace-export validation"
+    echo "pytest unavailable; skipping python trace-export/lint validation"
 fi
 
 echo "== cargo clippy (deny warnings) =="
@@ -53,6 +65,23 @@ if cargo clippy --version >/dev/null 2>&1; then
     cargo clippy --all-targets -- -D warnings
 else
     echo "clippy component not installed; skipping (install with: rustup component add clippy)"
+fi
+
+echo "== cargo clippy pedantic subset (advisory) =="
+# Thresholds live in clippy.toml. Advisory by design: findings print but
+# never fail the run — the hard gate above stays `-D warnings` on the
+# default lint set.
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- \
+        -W clippy::pedantic \
+        -A clippy::missing-errors-doc \
+        -A clippy::missing-panics-doc \
+        -A clippy::module-name-repetitions \
+        -A clippy::must-use-candidate \
+        -A clippy::cast-precision-loss \
+        -A clippy::cast-possible-truncation \
+        -A clippy::cast-sign-loss \
+        || echo "pedantic findings above are advisory (not a gate)"
 fi
 
 if [[ "$run_fmt" == 1 ]]; then

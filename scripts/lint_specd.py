@@ -1,0 +1,20 @@
+#!/usr/bin/env python3
+"""Repo-facing entry point for specd-lint (see python/tools/specd_lint/).
+
+Stdlib-only: runs in containers with no Rust toolchain and no pip
+packages, which is exactly why it exists -- `scripts/check.sh` runs it
+first, before anything that needs cargo.
+
+    python3 scripts/lint_specd.py [--rules ...] [--dump-metrics]
+"""
+
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO_ROOT, "python"))
+
+from tools.specd_lint.cli import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main(["--root", REPO_ROOT] + sys.argv[1:]))
