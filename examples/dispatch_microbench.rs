@@ -195,6 +195,46 @@ fn assert_trace_overhead(rows: &[Row]) -> (f64, f64) {
     (ns_per_site, worst)
 }
 
+/// Telemetry-off overhead gate (hard-asserted), the mirror of the tracing
+/// gate above: with the snapshot ring disabled every feed site costs one
+/// relaxed atomic load and an early return. Measure that disabled-path
+/// cost, bill it at the scheduler's site density (one `on_block` per
+/// emitted block, one `on_iteration` per step, one `on_ttft` per lane)
+/// and require the delta to stay under 1% of each row's wall time.
+/// Returns (ns_per_site, worst_fraction) for the bench artifact.
+fn assert_telemetry_overhead(rows: &[Row]) -> (f64, f64) {
+    let tl = specd::telemetry::Telemetry::off();
+    assert!(!tl.enabled(), "microbench needs the disabled telemetry handle");
+    let reps: u64 = 2_000_000;
+    let sample = specd::telemetry::IterSample::default();
+    let t0 = Instant::now();
+    for i in 0..reps {
+        tl.on_block(0, 2, 3, 3, None);
+        std::hint::black_box(i);
+        tl.on_iteration(&sample);
+    }
+    // Two site calls per rep (one block feed + one iteration feed).
+    let ns_per_site = t0.elapsed().as_nanos() as f64 / (2 * reps) as f64;
+    let mut worst = 0.0f64;
+    for r in rows {
+        if r.wall == 0.0 {
+            continue;
+        }
+        let calls = r.lane_steps as f64 + r.steps as f64 + r.lanes as f64;
+        let frac = calls * ns_per_site / (r.wall * 1e9);
+        assert!(
+            frac <= 0.01,
+            "telemetry-off sites cost {:.3}% of {} lanes={} wall time (> 1% gate; \
+             {ns_per_site:.1} ns/site x {calls:.0} calls)",
+            frac * 100.0,
+            r.mode,
+            r.lanes,
+        );
+        worst = worst.max(frac);
+    }
+    (ns_per_site, worst)
+}
+
 fn main() -> specd::Result<()> {
     let args = Args::new("dispatch_microbench", "per-lane vs fused-batched dispatch microbench")
         .opt("artifacts", "artifacts", "artifact bundle directory")
@@ -278,6 +318,12 @@ fn main() -> specd::Result<()> {
         "trace overhead gate: {trace_ns_per_site:.1} ns/site disabled, worst {:.4}% of wall (<= 1%)",
         trace_worst_frac * 100.0
     );
+    let (telemetry_ns_per_site, telemetry_worst_frac) = assert_telemetry_overhead(&all_rows);
+    println!(
+        "telemetry overhead gate: {telemetry_ns_per_site:.1} ns/site disabled, \
+         worst {:.4}% of wall (<= 1%)",
+        telemetry_worst_frac * 100.0
+    );
 
     let artifact = Value::obj(vec![
         ("bench", Value::Str("dispatch_microbench".to_string())),
@@ -287,6 +333,8 @@ fn main() -> specd::Result<()> {
         ("batched_available", Value::Bool(batched_available)),
         ("trace_ns_per_site_disabled", Value::Num(trace_ns_per_site)),
         ("trace_overhead_worst_frac", Value::Num(trace_worst_frac)),
+        ("telemetry_ns_per_site_disabled", Value::Num(telemetry_ns_per_site)),
+        ("telemetry_overhead_worst_frac", Value::Num(telemetry_worst_frac)),
         (
             "batch_size",
             decoder.draft.batch_size().map(|b| Value::Num(b as f64)).unwrap_or(Value::Null),

@@ -57,6 +57,10 @@ fn main() -> specd::Result<()> {
         .opt("timeout-ms", "0", "per-request deadline sent to the server (0 = none)")
         .opt("seed", "0", "arrival-schedule seed")
         .flag("stream", "use ?stream=1 chunked streaming")
+        .flag("watch-stats",
+              "follow the server's SSE telemetry stream (/debug/stats?stream=1) and \
+               print one accept-rate/tokens-per-sec line per sealed window; with \
+               --requests 0 this is a pure watch session (no load fired)")
         .parse()?;
 
     let addr = args.str("addr").to_string();
@@ -135,6 +139,15 @@ fn main() -> specd::Result<()> {
         args.usize("clients")?
     );
 
+    // Optional live telemetry view: one line per sealed snapshot window,
+    // printed while the load runs. The SSE stream never ends on its own,
+    // so in mixed mode the thread dies with the process at exit; with
+    // --requests 0 we join it instead (watch until the server goes away).
+    let watcher = args.flag("watch-stats").then(|| {
+        let addr = addr.clone();
+        std::thread::spawn(move || watch_stats(&addr))
+    });
+
     let cursor = Arc::new(AtomicUsize::new(0));
     let outcomes: Arc<Mutex<Vec<Outcome>>> = Arc::new(Mutex::new(Vec::with_capacity(n)));
     let t0 = Instant::now();
@@ -210,7 +223,72 @@ fn main() -> specd::Result<()> {
         }
         None => println!("server /metrics scrape failed (server gone?)"),
     }
+    if let Some(w) = watcher {
+        if n == 0 {
+            let _ = w.join();
+        }
+    }
     Ok(())
+}
+
+/// Follow `/debug/stats?stream=1` (SSE over chunked transfer) and print a
+/// compact per-window line per `data:` event. Returns when the server
+/// closes the stream or the transport fails.
+fn watch_stats(addr: &str) {
+    let Ok(mut conn) = TcpStream::connect(addr) else {
+        eprintln!("watch-stats: connect {addr} failed");
+        return;
+    };
+    let ok = write!(
+        conn,
+        "GET /debug/stats?stream=1 HTTP/1.1\r\nhost: {addr}\r\nconnection: close\r\n\r\n"
+    )
+    .and_then(|_| conn.flush());
+    if ok.is_err() {
+        eprintln!("watch-stats: request failed");
+        return;
+    }
+    let mut rd = BufReader::new(conn);
+    let head = match http::read_response_head(&mut rd) {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("watch-stats: bad response: {e}");
+            return;
+        }
+    };
+    if head.code != 200 {
+        eprintln!(
+            "watch-stats: HTTP {} (server needs --debug-endpoints and telemetry on)",
+            head.code
+        );
+        return;
+    }
+    let mut chunks = http::ChunkedReader::new(&mut rd);
+    let mut buf = String::new();
+    while let Ok(Some(chunk)) = chunks.next_chunk() {
+        buf.push_str(&String::from_utf8_lossy(&chunk));
+        // SSE events are \n\n-delimited; keep any trailing partial event.
+        while let Some(end) = buf.find("\n\n") {
+            let event: String = buf.drain(..end + 2).collect();
+            let Some(payload) = event.lines().find_map(|l| l.strip_prefix("data: ")) else {
+                continue; // keepalive comment
+            };
+            let Ok(v) = Value::parse(payload.trim()) else { continue };
+            let f = |k: &str| v.get(k).as_f64().unwrap_or(0.0);
+            let drift = v.get("health").get("drift_active").as_bool().unwrap_or(false);
+            println!(
+                "stats: seq={} accept={:.1}% depth={:.2} tok/s={:.1} disp/s={:.1} \
+                 queue={} drift={}",
+                f("seq") as u64,
+                f("accept_rate") * 100.0,
+                f("mean_accept_depth"),
+                f("tokens_per_sec"),
+                f("dispatches_per_sec"),
+                f("queue_depth") as u64,
+                if drift { "ACTIVE" } else { "quiet" },
+            );
+        }
+    }
 }
 
 /// GET /metrics on a fresh connection; None on any failure.

@@ -52,7 +52,13 @@ def load_trace(text):
             durs.append(e)
         elif ph == "i":
             assert e.get("s") == "t", f"instants must be thread-scoped: {e}"
-            assert e["name"] in REQ_NAMES, f"unknown request instant: {e}"
+            if e["name"] == "drift":
+                # Speculation-health drift marker: scheduler-track instant,
+                # not bound to any single request.
+                assert e["cat"] == "health", f"drift instants carry cat=health: {e}"
+                assert {"score_milli", "accept_rate_milli"} <= set(e.get("args", {})), e
+            else:
+                assert e["name"] in REQ_NAMES, f"unknown request instant: {e}"
             instants.append(e)
         else:
             raise AssertionError(f"unexpected phase {ph!r}: {e}")
@@ -101,6 +107,8 @@ def assert_request_lifecycles(instants):
     there is exactly one terminal."""
     by_req = {}
     for e in instants:
+        if e["name"] == "drift":
+            continue  # health instant, carries no request id
         by_req.setdefault(e["args"]["req"], []).append(e)
     assert by_req, "no request lifecycle instants in trace"
     for req, evs in by_req.items():
@@ -153,6 +161,11 @@ def synthetic_trace():
         _ev("verify", "phase", 260, 200, lanes=1),
         _ev("verify", "dispatch", 270, 180, calls=1, bytes=512),
         _inst("req_block", 505, req=1, accepted=2, emitted=3),
+        {
+            "pid": 1, "tid": 1, "ph": "i", "s": "t", "name": "drift",
+            "cat": "health", "ts": 507,
+            "args": {"score_milli": 180, "accept_rate_milli": 520},
+        },
         _inst("req_terminal", 510, req=1, reason="ok", tokens_out=3),
     ]
     events.sort(key=lambda e: e.get("ts", -1))
@@ -162,7 +175,7 @@ def synthetic_trace():
 def test_synthetic_trace_validates():
     durs, instants = validate(synthetic_trace())
     assert len(durs) == 7
-    assert len(instants) == 4
+    assert len(instants) == 5
 
 
 def test_validator_rejects_broken_nesting():

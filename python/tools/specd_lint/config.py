@@ -32,6 +32,7 @@ class Config:
             "coordinator.rs",
             "datagen.rs",
             "trace.rs",
+            "telemetry.rs",
         ]
     )
     panic_patterns: List[Tuple[str, str]] = field(
@@ -78,9 +79,10 @@ class Config:
     # ---- metrics-doc ------------------------------------------------------
     # Files whose non-test string literals *define* metric families
     # (metrics.rs renders the engine families, server.rs the HTTP-layer
-    # counters).  Everything else only *references* them.
+    # counters, telemetry.rs the specd_health_* speculation-health
+    # family).  Everything else only *references* them.
     metrics_def_files: List[str] = field(
-        default_factory=lambda: ["metrics.rs", "server.rs"]
+        default_factory=lambda: ["metrics.rs", "server.rs", "telemetry.rs"]
     )
     metrics_doc_files: List[str] = field(
         default_factory=lambda: ["docs/METRICS.md", "README.md"]

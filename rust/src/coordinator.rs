@@ -104,12 +104,24 @@ pub struct Request {
     /// channel should be sized so the scheduler never blocks
     /// (`max_new + 3` suffices: every block emits at least one token).
     pub events: Option<Sender<Delta>>,
+    /// Task-mix tag for telemetry slicing (e.g. the workload task name or
+    /// a client-supplied label); interned once at admission.
+    pub tag: Option<String>,
 }
 
 impl Request {
     /// A plain request with no deadline and no streaming sink.
     pub fn new(id: u64, prompt: Vec<u32>, max_new: usize, sampling: SamplingConfig) -> Request {
-        Request { id, prompt, max_new, sampling, deadline: None, submitted: None, events: None }
+        Request {
+            id,
+            prompt,
+            max_new,
+            sampling,
+            deadline: None,
+            submitted: None,
+            events: None,
+            tag: None,
+        }
     }
 }
 
@@ -152,6 +164,10 @@ pub struct Response {
     /// Feeds the `specd_accept_depth` Prometheus histogram; its weighted
     /// sum equals `stats.accepted` before `max_new` clipping.
     pub depth_counts: Vec<u32>,
+    /// Per-token inter-token gaps, seconds (`tokens.len() - 1` entries at
+    /// most; a block's gap is averaged across the tokens it emitted).
+    /// Feeds the `specd_itl_seconds` histogram in both aggregates.
+    pub itl: Vec<f64>,
 }
 
 struct Active {
@@ -172,6 +188,12 @@ struct Active {
     /// Per-request acceptance-depth counts (`len == γ + 1`), indexed by
     /// accepted-token count per block; snapshotted into the [`Response`].
     depth_counts: Vec<u32>,
+    /// Interned telemetry tag slot (0 = untagged).
+    tag_slot: u16,
+    /// Seconds-from-enqueue of the previous emit (ITL measurement).
+    last_emit: Option<f64>,
+    /// Per-token inter-token gaps accumulated so far.
+    itl: Vec<f64>,
 }
 
 impl Active {
@@ -214,18 +236,27 @@ pub struct Coordinator<'a> {
     decoder: SpecDecoder<'a>,
     cfg: RunConfig,
     gauges: Option<Arc<SchedulerGauges>>,
+    telemetry: Option<Arc<crate::telemetry::Telemetry>>,
     log_requests: bool,
 }
 
 impl<'a> Coordinator<'a> {
     pub fn new(decoder: SpecDecoder<'a>, cfg: RunConfig) -> Result<Self> {
         cfg.validate()?;
-        Ok(Coordinator { decoder, cfg, gauges: None, log_requests: false })
+        Ok(Coordinator { decoder, cfg, gauges: None, telemetry: None, log_requests: false })
     }
 
     /// Attach live gauges (shared with the HTTP `/metrics` handler).
     pub fn with_gauges(mut self, gauges: Arc<SchedulerGauges>) -> Self {
         self.gauges = Some(gauges);
+        self
+    }
+
+    /// Attach the windowed telemetry ring (shared with `/debug/stats`).
+    /// The scheduler feeds it per block and per iteration; a disabled
+    /// handle costs one relaxed load per site.
+    pub fn with_telemetry(mut self, telemetry: Arc<crate::telemetry::Telemetry>) -> Self {
+        self.telemetry = Some(telemetry);
         self
     }
 
@@ -252,6 +283,8 @@ impl<'a> Coordinator<'a> {
             crate::metrics::Histogram::with_bounds(&crate::metrics::BLOCK_SECONDS_BOUNDS);
         metrics.queue_wait_hist =
             crate::metrics::Histogram::with_bounds(&crate::metrics::QUEUE_WAIT_BOUNDS);
+        metrics.ttft_hist = crate::metrics::Histogram::with_bounds(&crate::metrics::TTFT_BOUNDS);
+        metrics.itl_hist = crate::metrics::Histogram::with_bounds(&crate::metrics::ITL_BOUNDS);
         // Fused-dispatch arenas, when the bundle exports batched entry
         // points. Admitted sessions are adopted into them (arena-capacity
         // permitting) so every lockstep phase is one PJRT dispatch;
@@ -397,9 +430,8 @@ impl<'a> Coordinator<'a> {
                                                 slot_cap,
                                                 session.prompt_len,
                                             ) {
-                                                Ok(slot) => active.push(Self::make_active(
-                                                    p, session, slot, &self.cfg,
-                                                )),
+                                                Ok(slot) => active
+                                                    .push(self.make_active(p, session, slot)),
                                                 Err(e) => {
                                                     // Per-request failure:
                                                     // free the lanes, keep
@@ -481,9 +513,7 @@ impl<'a> Coordinator<'a> {
                         admit_tokens += session.prompt_len;
                         match Self::claim_slot(&mut pool, p.req.id, slot_cap, session.prompt_len)
                         {
-                            Ok(slot) => {
-                                active.push(Self::make_active(p, session, slot, &self.cfg))
-                            }
+                            Ok(slot) => active.push(self.make_active(p, session, slot)),
                             Err(e) => {
                                 // Per-request pool failure (was scheduler-
                                 // fatal `?` before): release and report.
@@ -529,6 +559,17 @@ impl<'a> Coordinator<'a> {
                 if !rx_open && wave.is_none() && pending.is_empty() {
                     break;
                 }
+                // Keep the telemetry clock and queue-depth gauge advancing
+                // while the scheduler spins on admission (deferral phases
+                // would otherwise stall the snapshot cadence).
+                if let Some(tl) = &self.telemetry {
+                    tl.on_iteration(&crate::telemetry::IterSample {
+                        queue_depth: (rx.len() + pending.len()) as u64,
+                        pool_live: pool.live() as u64,
+                        pool_max: pool.max_slots() as u64,
+                        ..Default::default()
+                    });
+                }
                 continue;
             }
 
@@ -558,11 +599,14 @@ impl<'a> Coordinator<'a> {
 
             // --- one scheduling iteration: a lockstep batch step ---------
             let tr_it = crate::trace::begin();
-            // Per-lane accepted-counter snapshot: the post-step delta is
-            // this block's acceptance depth (0..=γ), feeding the
-            // `specd_accept_depth` histogram and the per-request counts.
-            let accepted_pre: Vec<usize> =
-                active.iter().map(|a| a.session.stats.accepted).collect();
+            // Per-lane (accepted, drafted) snapshot: the post-step deltas
+            // are this block's acceptance depth (0..=γ) and proposal
+            // count, feeding the `specd_accept_depth` histogram, the
+            // per-request counts and the telemetry per-block stream.
+            let pre_counters: Vec<(usize, usize)> = active
+                .iter()
+                .map(|a| (a.session.stats.accepted, a.session.stats.drafted))
+                .collect();
             let (outcomes, timings) = {
                 let mut lanes: Vec<Lane<'_>> = active
                     .iter_mut()
@@ -587,16 +631,45 @@ impl<'a> Coordinator<'a> {
             crate::trace::iteration(tr_it, timings.lanes as u64, timings.dispatches);
 
             let mut survivors = Vec::with_capacity(active.len());
+            let mut iter_tokens = 0u64;
             for (i, (mut a, outcome)) in active.drain(..).zip(outcomes).enumerate() {
                 match outcome {
                     LaneOutcome::Emitted(emitted) => {
-                        let depth = (a.session.stats.accepted - accepted_pre[i])
+                        let depth = (a.session.stats.accepted - pre_counters[i].0)
                             .min(a.depth_counts.len() - 1);
+                        let drafted = a.session.stats.drafted - pre_counters[i].1;
                         metrics.accept_depth.observe(depth as f64);
                         a.depth_counts[depth] += 1;
                         pool.get_mut(a.slot)?.advance(emitted.len())?;
+                        iter_tokens += emitted.len() as u64;
+                        let now_s = a.enqueued.elapsed().as_secs_f64();
+                        // ITL: this block's emit gap, averaged across its
+                        // tokens. The first emit is TTFT, not a gap.
+                        let mut itl_gap = None;
+                        if let Some(prev) = a.last_emit {
+                            if !emitted.is_empty() {
+                                let gap = ((now_s - prev) / emitted.len() as f64).max(0.0);
+                                itl_gap = Some((gap, emitted.len() as u32));
+                                for _ in 0..emitted.len() {
+                                    a.itl.push(gap);
+                                }
+                            }
+                        }
+                        a.last_emit = Some(now_s);
                         if a.first_token.is_none() {
-                            a.first_token = Some(a.enqueued.elapsed().as_secs_f64());
+                            a.first_token = Some(now_s);
+                            if let Some(tl) = &self.telemetry {
+                                tl.on_ttft(now_s);
+                            }
+                        }
+                        if let Some(tl) = &self.telemetry {
+                            tl.on_block(
+                                a.tag_slot,
+                                depth as u64,
+                                drafted as u64,
+                                emitted.len() as u64,
+                                itl_gap,
+                            );
                         }
                         // Stream the block's tokens, clipped to max_new.
                         let mut hung_up = false;
@@ -651,6 +724,16 @@ impl<'a> Coordinator<'a> {
                 g.queue_depth.store(rx.len() + pending.len(), Ordering::Relaxed);
                 g.record_iteration(&timings);
             }
+            if let Some(tl) = &self.telemetry {
+                tl.on_iteration(&crate::telemetry::IterSample {
+                    tokens: iter_tokens,
+                    dispatches: timings.dispatches,
+                    lanes: timings.lanes as u64,
+                    queue_depth: (rx.len() + pending.len()) as u64,
+                    pool_live: pool.live() as u64,
+                    pool_max: pool.max_slots() as u64,
+                });
+            }
         }
         metrics.pool_peak_slots = pool.peak_live;
         metrics.wall_seconds = wall0.elapsed().as_secs_f64();
@@ -689,19 +772,29 @@ impl<'a> Coordinator<'a> {
         Ok(slot)
     }
 
+    /// Intern the request's telemetry tag (slot 0 when untagged or when
+    /// telemetry is off). Once per request, at admission.
+    fn intern_tag(&self, req: &Request) -> u16 {
+        match (&self.telemetry, &req.tag) {
+            (Some(tl), Some(tag)) => tl.intern(tag),
+            _ => 0,
+        }
+    }
+
     /// Promote an admitted (prefilled, slot-claimed) request to an active
     /// scheduler lane.
-    fn make_active(p: Pending, mut session: SpecSession, slot: SlotId, cfg: &RunConfig) -> Active {
+    fn make_active(&self, p: Pending, mut session: SpecSession, slot: SlotId) -> Active {
         // Thread the request ID into the engine so per-block trace instants
         // ([`crate::trace::req_block`]) attribute to this request.
         session.trace_id = p.req.id;
+        let tag_slot = self.intern_tag(&p.req);
         Active {
             id: p.req.id,
             session,
             sampling: p.req.sampling,
             // Engine-side ceiling: the configured budget bounds every
             // admitted request (the HTTP edge clamps too).
-            max_new: p.req.max_new.min(cfg.max_new_tokens),
+            max_new: p.req.max_new.min(self.cfg.max_new_tokens),
             rng: Pcg64::with_stream(p.req.sampling.seed ^ p.req.id, 0x5e0e),
             enqueued: p.enqueued,
             first_token: None,
@@ -709,7 +802,10 @@ impl<'a> Coordinator<'a> {
             events: p.req.events,
             streamed: 0,
             slot,
-            depth_counts: vec![0; cfg.gamma + 1],
+            depth_counts: vec![0; self.cfg.gamma + 1],
+            tag_slot,
+            last_emit: None,
+            itl: Vec::new(),
         }
     }
 
@@ -725,6 +821,7 @@ impl<'a> Coordinator<'a> {
             ttft: latency,
             error: Some(error),
             depth_counts: Vec::new(),
+            itl: Vec::new(),
         }
     }
 
@@ -737,6 +834,10 @@ impl<'a> Coordinator<'a> {
         let mut stats = a.session.stats;
         stats.clip_to_delivered(tokens.len());
         let latency = a.enqueued.elapsed().as_secs_f64();
+        // Gaps beyond the delivered tokens (clipped bonus emissions) are
+        // dropped: at most one gap per delivered token after the first.
+        let mut itl = a.itl.clone();
+        itl.truncate(tokens.len().saturating_sub(1));
         Response {
             id: a.id,
             tokens,
@@ -745,6 +846,7 @@ impl<'a> Coordinator<'a> {
             ttft: a.first_token.unwrap_or(latency),
             error,
             depth_counts: a.depth_counts.clone(),
+            itl,
         }
     }
 
@@ -797,6 +899,11 @@ impl<'a> Coordinator<'a> {
         metrics.total_new_tokens += resp.tokens.len();
         metrics.request_latency.push(resp.latency);
         metrics.ttft.push(resp.ttft);
+        metrics.ttft_hist.observe(resp.ttft);
+        metrics.itl.extend_from_slice(&resp.itl);
+        for &gap in &resp.itl {
+            metrics.itl_hist.observe(gap);
+        }
         metrics.spec.merge(&resp.stats);
         self.terminal(tx, &a.events, a.session.prompt_len, resp);
     }

@@ -33,6 +33,7 @@
 //! (a skipped seed would desynchronize the resume stream).
 
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::batch::{BatchStep, Lane, LaneOutcome};
@@ -134,6 +135,8 @@ struct GenLane {
     sampling: SamplingConfig,
     rng: Pcg64,
     slot: SlotId,
+    /// Interned telemetry tag slot for the lane's seed task (0 = untagged).
+    tag_slot: u16,
 }
 
 /// Run bulk generation until the token budget is met and all lanes drain.
@@ -143,6 +146,19 @@ pub fn run_distill(
     decoder: &SpecDecoder<'_>,
     suite: &EvalSuite,
     cfg: &DistillConfig,
+) -> Result<DistillMetrics> {
+    run_distill_with(decoder, suite, cfg, None)
+}
+
+/// [`run_distill`] with an attached telemetry ring: each batch iteration
+/// and per-block acceptance outcome feeds the windowed snapshot stream
+/// (sliced by seed task), so a long distill run gets the same drift
+/// detection and `--stats-out` dump as the serving path.
+pub fn run_distill_with(
+    decoder: &SpecDecoder<'_>,
+    suite: &EvalSuite,
+    cfg: &DistillConfig,
+    telemetry: Option<&Arc<crate::telemetry::Telemetry>>,
 ) -> Result<DistillMetrics> {
     cfg.validate()?;
     let topk = cfg.topk.min(decoder.target.vocab_size());
@@ -238,7 +254,9 @@ pub fn run_distill(
                             seed: sp.sampling_seed,
                         };
                         let rng = Pcg64::with_stream(sp.sampling_seed, 0xd157);
-                        active.push(GenLane { sp, session, sampling, rng, slot });
+                        let tag_slot =
+                            telemetry.map(|t| t.intern(&sp.task)).unwrap_or(0);
+                        active.push(GenLane { sp, session, sampling, rng, slot, tag_slot });
                     }
                 } else {
                     wave = Some((w, sps));
@@ -268,7 +286,8 @@ pub fn run_distill(
                 seed: sp.sampling_seed,
             };
             let rng = Pcg64::with_stream(sp.sampling_seed, 0xd157);
-            active.push(GenLane { sp, session, sampling, rng, slot });
+            let tag_slot = telemetry.map(|t| t.intern(&sp.task)).unwrap_or(0);
+            active.push(GenLane { sp, session, sampling, rng, slot, tag_slot });
         }
         metrics.prefill_tokens += admit_tokens;
         metrics.prefill_dispatches += decoder.dispatch_count() - disp0;
@@ -283,8 +302,13 @@ pub fn run_distill(
 
         // --- one lockstep batch step across all lanes --------------------
         let tr_it = crate::trace::begin();
-        let accepted_pre: Vec<usize> =
-            active.iter().map(|l| l.session.stats.accepted).collect();
+        // Per-lane (accepted, drafted) snapshot: post-step deltas are this
+        // block's acceptance depth and proposal count, feeding both the
+        // accept-depth histogram and the telemetry per-block stream.
+        let pre_counters: Vec<(usize, usize)> = active
+            .iter()
+            .map(|l| (l.session.stats.accepted, l.session.stats.drafted))
+            .collect();
         let (outcomes, timings) = {
             let mut lanes: Vec<Lane<'_>> = active
                 .iter_mut()
@@ -302,12 +326,24 @@ pub fn run_distill(
         metrics.batched_lane_steps += timings.batched_lanes;
 
         let mut survivors = Vec::with_capacity(active.len());
+        let mut iter_tokens = 0u64;
         for (i, (mut lane, outcome)) in active.drain(..).zip(outcomes).enumerate() {
             match outcome {
                 LaneOutcome::Emitted(emitted) => {
-                    let depth = lane.session.stats.accepted - accepted_pre[i];
+                    let depth = lane.session.stats.accepted - pre_counters[i].0;
+                    let drafted = lane.session.stats.drafted - pre_counters[i].1;
                     metrics.accept_depth.observe(depth as f64);
                     pool.get_mut(lane.slot)?.advance(emitted.len())?;
+                    iter_tokens += emitted.len() as u64;
+                    if let Some(tl) = telemetry {
+                        tl.on_block(
+                            lane.tag_slot,
+                            depth as u64,
+                            drafted as u64,
+                            emitted.len() as u64,
+                            None,
+                        );
+                    }
                     if lane.session.finished || lane.session.generated().len() >= cfg.max_new {
                         retire(decoder, &mut batched, &mut pool, &mut lane)?;
                         total_tokens += commit(&mut writer, &mut metrics, &mut lane, cfg.max_new)?;
@@ -328,6 +364,17 @@ pub fn run_distill(
             }
         }
         active = survivors;
+
+        if let Some(tl) = telemetry {
+            tl.on_iteration(&crate::telemetry::IterSample {
+                tokens: iter_tokens,
+                dispatches: timings.dispatches,
+                lanes: timings.lanes as u64,
+                queue_depth: 0,
+                pool_live: pool.live() as u64,
+                pool_max: pool.max_slots() as u64,
+            });
+        }
     }
 
     metrics.pool_peak_slots = pool.peak_live;

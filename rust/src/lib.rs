@@ -29,6 +29,7 @@
 //! | [`http`] | HTTP/1.1 wire layer: parser, chunked/streaming writers |
 //! | [`server`] | TCP front end (L4): `/v1/generate`, `/healthz`, `/metrics` |
 //! | [`metrics`] | block efficiency, MBSU, token rate, latency histograms |
+//! | [`telemetry`] | windowed snapshot ring + acceptance-drift detection |
 //! | [`trace`] | flight recorder: spans, Chrome-trace export, access log |
 //! | [`workload`] | synthetic task generators (dolly/xsum/cnndm/wmt) |
 //! | [`eval`] | figure/table harness used by `rust/benches/` |
@@ -60,6 +61,7 @@ pub mod runtime;
 pub mod sampling;
 pub mod server;
 pub mod spec;
+pub mod telemetry;
 pub mod tensor;
 pub mod tokenizer;
 pub mod trace;

@@ -9,12 +9,16 @@
 //!   distill   bulk-generate a sharded distillation dataset from the target
 //!             (throughput mode; captures target top-k logits per position)
 //!   eval      evaluate one (draft, task, gamma) figure cell
+//!   top       live operator dashboard: poll a running server's
+//!             GET /debug/stats and redraw windowed speculation-health rates
+//!             (needs no artifact bundle; pure HTTP client)
 //!
 //! Examples:
 //!   specd info --artifacts artifacts
 //!   specd generate --draft draft_tvdpp_ckpt4 --task dolly --gamma 5
 //!   specd serve --addr 127.0.0.1:8080 --max-slots 4 --gamma 3
 //!   specd replay --requests 32 --rate 2.0 --max-slots 4
+//!   specd top --addr 127.0.0.1:8080 --interval-ms 1000
 //!   specd distill --task-mix dolly:0.5,cnndm:0.3,xsum:0.2 \
 //!                 --tokens 1e6 --topk 8 --out shards/
 //!   specd eval --draft draft_kld_ckpt4 --task xsum --gamma 3
@@ -27,7 +31,7 @@ use specd::artifacts::Manifest;
 use specd::cli::Args;
 use specd::config::{RunConfig, SamplingConfig};
 use specd::coordinator::{Coordinator, Request, Response};
-use specd::datagen::{run_distill, DistillConfig};
+use specd::datagen::{run_distill_with, DistillConfig};
 use specd::error::Result;
 use specd::eval::{eval_cell, render_cells, ArBaselineCache, EvalOptions};
 use specd::exec;
@@ -66,7 +70,7 @@ fn run() -> Result<()> {
               (0 = unbounded; bounding interleaves chunked prefill with decode)")
         .opt("len-mix", "",
              "replay: len:weight prompt-length mixture (e.g. 8:0.7,96:0.3; '' = natural)")
-        .opt("addr", "127.0.0.1:8080", "serve: HTTP bind address")
+        .opt("addr", "127.0.0.1:8080", "serve: HTTP bind address; top: server to poll")
         .opt("http-workers", "8", "serve: connection handler threads")
         .opt("timeout-ms", "0", "serve: default per-request deadline (0 = none)")
         .opt("task-mix", "dolly:0.5,cnndm:0.3,xsum:0.2",
@@ -81,14 +85,29 @@ fn run() -> Result<()> {
         .opt("trace-out", "",
              "serve/replay/distill: write the flight-recorder ring as Chrome \
               trace-event JSON to this path on exit ('' = off; load in Perfetto)")
+        .opt("telemetry-window", "1.0",
+             "serve/replay/distill: speculation-health snapshot cadence, seconds (0 = off)")
+        .opt("telemetry-ring", "240",
+             "serve/replay/distill: snapshots retained in the telemetry ring")
+        .opt("stats-out", "",
+             "serve/replay/distill: write the telemetry snapshot ring as JSON to \
+              this path on exit ('' = off)")
+        .opt("interval-ms", "1000", "top: poll interval in milliseconds")
         .flag("baseline", "generate: use autoregressive decoding instead")
         .flag("log-requests",
               "serve/replay: one structured JSON access-log line per request terminal on stderr")
         .flag("debug-endpoints",
-              "serve: expose GET /debug/trace and /debug/requests/<id> (404 otherwise)")
+              "serve: expose GET /debug/trace, /debug/requests/<id> and \
+               /debug/stats (404 otherwise)")
+        .flag("once", "top: print one frame and exit (no screen redraw)")
         .parse()?;
 
     let command = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
+    // `top` is a pure HTTP client against a running server; it must not
+    // require an artifact bundle, so dispatch it before the manifest loads.
+    if command == "top" {
+        return top(&args);
+    }
     let manifest = Manifest::load(args.str("artifacts"))?;
 
     match command {
@@ -99,7 +118,7 @@ fn run() -> Result<()> {
         "distill" => distill(&manifest, &args),
         "eval" => eval(&manifest, &args),
         other => Err(specd::Error::Cli(format!(
-            "unknown command '{other}' (expected info|generate|serve|replay|distill|eval)"
+            "unknown command '{other}' (expected info|generate|serve|replay|distill|eval|top)"
         ))),
     }
 }
@@ -145,6 +164,27 @@ fn export_trace(trace_out: &str) -> Result<()> {
     if !trace_out.is_empty() {
         specd::trace::write_chrome_trace(trace_out)?;
         println!("trace: {trace_out} (chrome://tracing or https://ui.perfetto.dev)");
+    }
+    Ok(())
+}
+
+/// Build the shared speculation-health telemetry handle from the
+/// `--telemetry-*` knobs (`--telemetry-window 0` yields a permanently-off
+/// handle whose feed sites reduce to one relaxed load each).
+fn make_telemetry(args: &specd::cli::Parsed) -> Result<Arc<specd::telemetry::Telemetry>> {
+    Ok(specd::telemetry::Telemetry::new(specd::telemetry::TelemetryConfig {
+        window: args.f64("telemetry-window")?,
+        ring: args.usize("telemetry-ring")?,
+        ..Default::default()
+    }))
+}
+
+/// Dump the telemetry snapshot ring if `--stats-out` was given.
+fn export_stats(telemetry: &specd::telemetry::Telemetry, args: &specd::cli::Parsed) -> Result<()> {
+    let out = args.str("stats-out");
+    if !out.is_empty() {
+        telemetry.write_stats_json(out)?;
+        println!("stats: {out} (telemetry snapshot ring)");
     }
     Ok(())
 }
@@ -232,6 +272,9 @@ fn serve_http(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
     // Shared with the scheduler thread: pool occupancy + per-phase timing
     // surfaced live on GET /metrics.
     let gauges = Arc::new(SchedulerGauges::default());
+    // Shared with the scheduler thread AND the server: the scheduler feeds
+    // windowed snapshots, `/debug/stats` and `/metrics` read them.
+    let telemetry = make_telemetry(args)?;
 
     let (req_tx, req_rx) = exec::bounded::<Request>(run_cfg.queue_depth);
     let (resp_tx, resp_rx) = exec::bounded::<Response>(run_cfg.queue_depth.max(16));
@@ -243,6 +286,7 @@ fn serve_http(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
 
     let sched_cfg = run_cfg.clone();
     let sched_gauges = gauges.clone();
+    let sched_telemetry = telemetry.clone();
     let scheduler = std::thread::Builder::new()
         .name("specd-scheduler".to_string())
         .spawn(move || -> Result<ServeMetrics> {
@@ -251,6 +295,7 @@ fn serve_http(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
             let decoder = SpecDecoder::new(&l.draft, &l.target, sched_cfg.gamma)?;
             let coord = Coordinator::new(decoder, sched_cfg.clone())?
                 .with_gauges(sched_gauges)
+                .with_telemetry(sched_telemetry)
                 .with_access_log(log_requests);
             coord.serve(req_rx, resp_tx)
         })
@@ -265,6 +310,7 @@ fn serve_http(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
         max_new_ceiling: run_cfg.max_new_tokens,
         default_deadline: args.ms_opt("timeout-ms")?,
         scheduler_gauges: Some(gauges),
+        telemetry: Some(telemetry.clone()),
         debug_endpoints: args.flag("debug-endpoints"),
         ..ServerConfig::default()
     };
@@ -276,6 +322,7 @@ fn serve_http(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
     println!("  GET  /healthz | /metrics   liveness | Prometheus");
     if debug_endpoints {
         println!("  GET  /debug/trace | /debug/requests/<id>  flight recorder");
+        println!("  GET  /debug/stats[?stream=1]  telemetry snapshots (JSON | SSE)");
     }
 
     // The scheduler only returns when the admission queue closes (the
@@ -290,6 +337,7 @@ fn serve_http(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
     let metrics = result?;
     println!("{}", metrics.report());
     export_trace(&trace_out)?;
+    export_stats(&telemetry, args)?;
     Ok(())
 }
 
@@ -324,8 +372,10 @@ fn replay(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
     let trace = build_trace(&l.suite, &trace_cfg)?;
 
     let decoder = SpecDecoder::new(&l.draft, &l.target, run_cfg.gamma)?;
-    let coord =
-        Coordinator::new(decoder, run_cfg.clone())?.with_access_log(args.flag("log-requests"));
+    let telemetry = make_telemetry(args)?;
+    let coord = Coordinator::new(decoder, run_cfg.clone())?
+        .with_telemetry(telemetry.clone())
+        .with_access_log(args.flag("log-requests"));
     let (req_tx, req_rx) = exec::bounded::<Request>(run_cfg.queue_depth);
     let (resp_tx, resp_rx) = exec::bounded(run_cfg.queue_depth);
 
@@ -336,12 +386,16 @@ fn replay(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
             if let Some(wait) = r.arrival.checked_sub(t0.elapsed()) {
                 std::thread::sleep(wait);
             }
-            let _ = req_tx.send(Request::new(
+            let mut rq = Request::new(
                 i as u64,
                 r.prompt,
                 r.max_new,
                 SamplingConfig::for_task(&r.task, i as u64),
-            ));
+            );
+            // Tag the request with its workload task so the telemetry
+            // snapshots carry per-task acceptance slices.
+            rq.tag = Some(r.task);
+            let _ = req_tx.send(rq);
         }
     });
 
@@ -358,6 +412,7 @@ fn replay(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
         println!("errors: {errors}");
     }
     export_trace(&trace_out)?;
+    export_stats(&telemetry, args)?;
     Ok(())
 }
 
@@ -396,7 +451,8 @@ fn distill(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
         seed: args.u64("seed")?,
         out_dir: args.str("out").to_string(),
     };
-    let metrics = run_distill(&decoder, &l.suite, &cfg)?;
+    let telemetry = make_telemetry(args)?;
+    let metrics = run_distill_with(&decoder, &l.suite, &cfg, Some(&telemetry))?;
     println!("{}", metrics.report());
     // Textfile-collector exposition next to the dataset (there is no live
     // endpoint in a batch run), so the specd_distill_* families land in
@@ -405,6 +461,7 @@ fn distill(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
     std::fs::write(&prom, metrics.prometheus_text()).map_err(specd::Error::Io)?;
     println!("dataset: {}  (metrics: {})", cfg.out_dir, prom.display());
     export_trace(&trace_out)?;
+    export_stats(&telemetry, args)?;
     Ok(())
 }
 
@@ -427,4 +484,141 @@ fn eval(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
     )?;
     render_cells("eval cell", &[cell], true);
     Ok(())
+}
+
+/// `specd top` — live operator view. Polls a running server's
+/// `GET /debug/stats` (exposed by `serve --debug-endpoints`) and redraws a
+/// compact terminal dashboard from the latest telemetry snapshot;
+/// `--once` prints a single frame without clearing the screen (useful for
+/// scripts and smoke tests).
+fn top(args: &specd::cli::Parsed) -> Result<()> {
+    let addr = args.str("addr");
+    let interval = std::time::Duration::from_millis(args.u64("interval-ms")?.max(100));
+    let once = args.flag("once");
+    loop {
+        match fetch_stats(addr) {
+            Ok(stats) => {
+                if !once {
+                    // ANSI clear + home: redraw in place like top(1).
+                    print!("\x1b[2J\x1b[H");
+                }
+                render_top(addr, &stats);
+            }
+            Err(e) => {
+                if once {
+                    return Err(e);
+                }
+                println!("specd top: {addr}: {e} (retrying)");
+            }
+        }
+        {
+            use std::io::Write as _;
+            let _ = std::io::stdout().flush();
+        }
+        if once {
+            return Ok(());
+        }
+        std::thread::sleep(interval);
+    }
+}
+
+/// One `GET /debug/stats` round trip on a fresh connection.
+fn fetch_stats(addr: &str) -> Result<specd::json::Value> {
+    use std::io::Write as _;
+    let mut conn = std::net::TcpStream::connect(addr).map_err(specd::Error::Io)?;
+    conn.set_read_timeout(Some(std::time::Duration::from_secs(5)))
+        .map_err(specd::Error::Io)?;
+    write!(conn, "GET /debug/stats HTTP/1.1\r\nhost: {addr}\r\nconnection: close\r\n\r\n")
+        .map_err(specd::Error::Io)?;
+    conn.flush().map_err(specd::Error::Io)?;
+    let mut rd = std::io::BufReader::new(conn);
+    let resp = specd::http::read_response(&mut rd)
+        .map_err(|e| specd::Error::msg(format!("/debug/stats: {e}")))?;
+    if resp.code != 200 {
+        return Err(specd::Error::msg(format!(
+            "HTTP {} from /debug/stats (is the server running with --debug-endpoints?)",
+            resp.code
+        )));
+    }
+    specd::json::Value::parse(&resp.body_str())
+}
+
+/// Render one dashboard frame from a `/debug/stats` payload.
+fn render_top(addr: &str, stats: &specd::json::Value) {
+    let f = |v: &specd::json::Value, k: &str| v.get(k).as_f64().unwrap_or(0.0);
+    let latest = stats.get("latest");
+    println!("specd top — {addr}  (window {:.1}s, ring {}/{})",
+             f(stats, "window_s"),
+             stats.get("ring").as_arr().map(|a| a.len()).unwrap_or(0),
+             f(stats, "ring_capacity") as u64);
+    if latest.as_obj().is_none() {
+        println!("  no sealed snapshot yet (server idle or telemetry off)");
+        return;
+    }
+    println!(
+        "  throughput  {:8.1} tok/s   {:8.1} disp/s   occupancy {:4.0}%   queue {:>3}",
+        f(latest, "tokens_per_sec"),
+        f(latest, "dispatches_per_sec"),
+        f(latest, "occupancy") * 100.0,
+        f(latest, "queue_depth") as u64,
+    );
+    println!(
+        "  speculation accept {:5.1}%   mean depth {:4.2}   blocks {:>6}   pool {}/{}",
+        f(latest, "accept_rate") * 100.0,
+        f(latest, "mean_accept_depth"),
+        f(latest, "blocks") as u64,
+        f(latest, "pool_live") as u64,
+        f(latest, "pool_max") as u64,
+    );
+    println!(
+        "  latency     ttft p50 {:6.1}ms p90 {:6.1}ms   itl p50 {:6.2}ms p90 {:6.2}ms",
+        f(latest, "ttft_p50") * 1e3,
+        f(latest, "ttft_p90") * 1e3,
+        f(latest, "itl_p50") * 1e3,
+        f(latest, "itl_p90") * 1e3,
+    );
+    let health = latest.get("health");
+    let active = health.get("drift_active").as_bool().unwrap_or(false);
+    println!(
+        "  drift       {}   score {:6.3}   baseline {:5.1}%   events {}{}",
+        if active { "ACTIVE " } else { "quiet  " },
+        f(health, "score"),
+        f(health, "baseline") * 100.0,
+        f(health, "drift_events") as u64,
+        if health.get("retune_advised").as_bool().unwrap_or(false) {
+            "   << retrain/retune advised"
+        } else {
+            ""
+        },
+    );
+    if let Some(slices) = latest.get("slices").as_arr() {
+        for sl in slices {
+            let drafted = f(sl, "drafted");
+            let rate = if drafted > 0.0 { f(sl, "accepted") / drafted } else { 0.0 };
+            println!(
+                "    task {:<10} accept {:5.1}%   blocks {:>6}   tokens {:>7}",
+                sl.get("tag").as_str().unwrap_or("?"),
+                rate * 100.0,
+                f(sl, "blocks") as u64,
+                f(sl, "tokens") as u64,
+            );
+        }
+    }
+    // Accept-rate trend over the retained ring, newest at the right.
+    if let Some(ring) = stats.get("ring").as_arr() {
+        const GLYPHS: [char; 5] = [' ', '.', ':', '|', '#'];
+        let trend: String = ring
+            .iter()
+            .rev()
+            .take(60)
+            .collect::<Vec<_>>()
+            .into_iter()
+            .rev()
+            .map(|s| {
+                let r = f(s, "accept_rate").clamp(0.0, 1.0);
+                GLYPHS[((r * (GLYPHS.len() - 1) as f64).round() as usize).min(GLYPHS.len() - 1)]
+            })
+            .collect();
+        println!("  accept trend [{trend}]");
+    }
 }

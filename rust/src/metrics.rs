@@ -139,6 +139,12 @@ pub const BLOCK_SECONDS_BOUNDS: [f64; 8] =
 /// Upper bounds for the admission queue-wait histogram (seconds).
 pub const QUEUE_WAIT_BOUNDS: [f64; 8] = [0.001, 0.005, 0.01, 0.05, 0.1, 0.5, 1.0, 5.0];
 
+/// Upper bounds for the time-to-first-token histogram (seconds).
+pub const TTFT_BOUNDS: [f64; 10] = [0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0];
+
+/// Upper bounds for the inter-token-latency histogram (seconds).
+pub const ITL_BOUNDS: [f64; 10] = [0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0];
+
 /// A real Prometheus histogram: fixed finite upper bounds plus the
 /// implicit `+Inf` overflow bucket, exposed in cumulative
 /// `_bucket`/`_sum`/`_count` form. Unlike the windowed quantile
@@ -326,6 +332,14 @@ pub struct ServeMetrics {
     /// Unwindowed queue-wait histogram: unlike the [`Self::queue_wait`]
     /// summary window, bucket counts survive scrape resets.
     pub queue_wait_hist: Histogram,
+    /// Windowed inter-token-latency samples: the mean gap between
+    /// consecutive emitted tokens (after the first) per block.
+    pub itl: Vec<f64>,
+    /// Unwindowed TTFT histogram (`specd_ttft_seconds`); quantiles
+    /// survive scrape resets, unlike the old summary view.
+    pub ttft_hist: Histogram,
+    /// Unwindowed inter-token-latency histogram (`specd_itl_seconds`).
+    pub itl_hist: Histogram,
 }
 
 impl ServeMetrics {
@@ -405,7 +419,10 @@ impl ServeMetrics {
         self.request_latency.extend_from_slice(&other.request_latency);
         self.ttft.extend_from_slice(&other.ttft);
         self.queue_wait.extend_from_slice(&other.queue_wait);
-        for v in [&mut self.request_latency, &mut self.ttft, &mut self.queue_wait] {
+        self.itl.extend_from_slice(&other.itl);
+        for v in
+            [&mut self.request_latency, &mut self.ttft, &mut self.queue_wait, &mut self.itl]
+        {
             if v.len() > LATENCY_WINDOW {
                 v.drain(..v.len() - LATENCY_WINDOW);
             }
@@ -435,6 +452,8 @@ impl ServeMetrics {
         self.block_propose.merge(&other.block_propose);
         self.block_verify.merge(&other.block_verify);
         self.queue_wait_hist.merge(&other.queue_wait_hist);
+        self.ttft_hist.merge(&other.ttft_hist);
+        self.itl_hist.merge(&other.itl_hist);
     }
 
     /// Render in Prometheus text exposition format (`GET /metrics`).
@@ -533,6 +552,18 @@ impl ServeMetrics {
             "Admission-queue wait (enqueue to prefill start), unwindowed.",
             &[("", &self.queue_wait_hist)],
         );
+        prom_histogram(
+            &mut s,
+            "specd_ttft_seconds",
+            "Time to first token, unwindowed.",
+            &[("", &self.ttft_hist)],
+        );
+        prom_histogram(
+            &mut s,
+            "specd_itl_seconds",
+            "Inter-token latency (gap between consecutive streamed tokens), unwindowed.",
+            &[("", &self.itl_hist)],
+        );
 
         let mut summary = |name: &str, help: &str, stats: &Option<Stats>| {
             s.push_str(&format!("# HELP {name} {help}\n# TYPE {name} summary\n"));
@@ -548,7 +579,6 @@ impl ServeMetrics {
         };
         summary("specd_request_latency_seconds", "End-to-end request latency.",
                 &self.latency_stats());
-        summary("specd_ttft_seconds", "Time to first token.", &self.ttft_stats());
         summary("specd_prefill_queue_wait_seconds",
                 "Admission-queue wait (enqueue to prefill start).", &self.queue_wait_stats());
         s
@@ -1300,6 +1330,10 @@ mod tests {
         m.accept_depth.observe(2.0);
         m.queue_wait_hist = Histogram::with_bounds(&QUEUE_WAIT_BOUNDS);
         m.queue_wait_hist.observe(0.03);
+        m.ttft_hist = Histogram::with_bounds(&TTFT_BOUNDS);
+        m.ttft_hist.observe(0.08);
+        m.itl_hist = Histogram::with_bounds(&ITL_BOUNDS);
+        m.itl_hist.observe(0.004);
         m.batch_iterations = 1;
         m.block_verify = Histogram::with_bounds(&BLOCK_SECONDS_BOUNDS);
         m.block_verify.observe(0.004);
@@ -1309,11 +1343,20 @@ mod tests {
         assert!(text.contains("specd_queue_wait_seconds_bucket{le=\"0.05\"} 1"), "{text}");
         assert!(text.contains("specd_block_seconds_bucket{phase=\"verify\",le=\"0.005\"} 1"),
                 "{text}");
+        // TTFT/ITL are real histograms now (not summaries): quantile
+        // state survives scrape resets and merges across instances.
+        assert!(text.contains("# TYPE specd_ttft_seconds histogram"), "{text}");
+        assert!(text.contains("specd_ttft_seconds_bucket{le=\"0.1\"} 1"), "{text}");
+        assert!(text.contains("# TYPE specd_itl_seconds histogram"), "{text}");
+        assert!(text.contains("specd_itl_seconds_bucket{le=\"0.005\"} 1"), "{text}");
+        assert!(!text.contains("# TYPE specd_ttft_seconds summary"), "{text}");
         // The live HTTP aggregate (no scheduler fields) still renders the
         // request-scoped histograms but not the phase family.
         let empty = ServeMetrics::default().prometheus_text();
         assert!(empty.contains("specd_accept_depth_bucket{le=\"+Inf\"} 0"), "{empty}");
         assert!(empty.contains("specd_queue_wait_seconds_count 0"), "{empty}");
+        assert!(empty.contains("specd_ttft_seconds_count 0"), "{empty}");
+        assert!(empty.contains("specd_itl_seconds_count 0"), "{empty}");
         assert!(!empty.contains("specd_block_seconds"), "{empty}");
     }
 

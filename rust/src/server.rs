@@ -24,6 +24,9 @@
 //!   per speculation block, then a terminal `data: {"done":true,...}`.
 //! * `GET /healthz` — liveness probe.
 //! * `GET /metrics` — Prometheus text format, live server-side aggregate.
+//! * `GET /debug/stats` — latest telemetry snapshot + the windowed ring
+//!   as JSON; `?stream=1` upgrades to an SSE stream pushing each newly
+//!   sealed snapshot (requires `--debug-endpoints` and telemetry on).
 //!
 //! Status mapping: invalid request 400, unknown path 404, wrong method
 //! 405, deadline exceeded 408 ([`crate::coordinator::ERR_DEADLINE`]),
@@ -86,6 +89,10 @@ pub struct ServerConfig {
     /// timeline). Off by default: the endpoints 404 unless the operator
     /// opts in (`--debug-endpoints`).
     pub debug_endpoints: bool,
+    /// Windowed telemetry ring shared with the scheduler thread. Serves
+    /// `GET /debug/stats` (+ SSE) and appends the `specd_health_*`
+    /// families to `GET /metrics` when present.
+    pub telemetry: Option<Arc<crate::telemetry::Telemetry>>,
 }
 
 impl Default for ServerConfig {
@@ -101,6 +108,7 @@ impl Default for ServerConfig {
             scheduler_wait: Duration::from_secs(120),
             scheduler_gauges: None,
             debug_endpoints: false,
+            telemetry: None,
         }
     }
 }
@@ -363,6 +371,9 @@ fn route(
             if let Some(g) = &inner.cfg.scheduler_gauges {
                 text.push_str(&g.prometheus_text());
             }
+            if let Some(t) = &inner.cfg.telemetry {
+                text.push_str(&t.prometheus_text());
+            }
             respond(&inner.state, w, 200, "text/plain; version=0.0.4", text.as_bytes(), keep, &[])
         }
         ("POST", "/v1/generate") => generate(req, keep, w, inner, req_tx),
@@ -372,6 +383,14 @@ fn route(
             let body = crate::trace::chrome_trace_json();
             respond(&inner.state, w, 200, "application/json", body.as_bytes(), keep, &[])
         }
+        ("GET", "/debug/stats") if inner.cfg.debug_endpoints => match &inner.cfg.telemetry {
+            Some(t) if req.query_flag("stream") => stream_stats(keep, w, inner, t),
+            Some(t) => {
+                let body = t.stats_json();
+                respond(&inner.state, w, 200, "application/json", body.as_bytes(), keep, &[])
+            }
+            None => respond_error(&inner.state, w, 404, keep, "telemetry disabled"),
+        },
         ("GET", p) if inner.cfg.debug_endpoints && p.starts_with("/debug/requests/") => {
             let seg = &p["/debug/requests/".len()..];
             let timeline = crate::trace::resolve_request_id(seg)
@@ -400,6 +419,8 @@ struct GenSpec {
     sampling: SamplingConfig,
     deadline: Option<Duration>,
     stream: bool,
+    /// Telemetry task tag (the request's `"task"` field, when present).
+    tag: Option<String>,
 }
 
 /// Parse and validate the request body; Err(message) maps to 400.
@@ -474,7 +495,8 @@ fn parse_gen_spec(
         None => inner.cfg.default_deadline,
     };
     let stream = req.query_flag("stream") || body.get("stream").as_bool().unwrap_or(false);
-    Ok(GenSpec { prompt, max_new, sampling, deadline, stream })
+    let tag = body.get("task").as_str().map(|t| t.to_string());
+    Ok(GenSpec { prompt, max_new, sampling, deadline, stream, tag })
 }
 
 fn generate(
@@ -516,6 +538,7 @@ fn generate(
         deadline: spec.deadline,
         submitted: Some(Instant::now()),
         events: Some(ev_tx),
+        tag: spec.tag,
     };
 
     // Admission control: never block the HTTP thread on a full queue.
@@ -698,6 +721,65 @@ fn stream_response(
     }
 }
 
+/// SSE poll cadence for `/debug/stats?stream=1`: how quickly a newly
+/// sealed snapshot reaches subscribed clients.
+const STATS_TICK: Duration = Duration::from_millis(250);
+/// Idle ticks between SSE keepalive comments (dead-client detection when
+/// the scheduler seals no new snapshots).
+const STATS_KEEPALIVE_TICKS: u32 = 20;
+
+/// `GET /debug/stats?stream=1`: push each newly sealed snapshot as one
+/// SSE event over the chunked writer. The first event replays the latest
+/// snapshot (if any) so clients render without waiting a full window.
+fn stream_stats(
+    keep: bool,
+    w: &mut TcpStream,
+    inner: &Inner,
+    t: &Arc<crate::telemetry::Telemetry>,
+) -> bool {
+    inner.state.count_status(200);
+    let Ok(mut cw) = ChunkedWriter::start(w, 200, "text/event-stream", keep, &[]) else {
+        return false;
+    };
+    let mut last_seq = 0u64;
+    if let Some(s) = t.latest() {
+        last_seq = s.seq;
+        if cw.chunk(format!("data: {}\n\n", s.to_json()).as_bytes()).is_err() {
+            return false;
+        }
+    }
+    let mut idle_ticks = 0u32;
+    while !inner.shutdown.load(Ordering::SeqCst) {
+        std::thread::sleep(STATS_TICK);
+        // Lock-free news check: the scheduler is never contended by idle
+        // subscribers.
+        if t.seq() == last_seq {
+            idle_ticks += 1;
+            if idle_ticks >= STATS_KEEPALIVE_TICKS {
+                idle_ticks = 0;
+                // SSE comment line: ignored by clients, surfaces dead
+                // connections as a write error.
+                if cw.chunk(b": keepalive\n\n").is_err() {
+                    return false;
+                }
+            }
+            continue;
+        }
+        idle_ticks = 0;
+        for s in t.ring() {
+            if s.seq <= last_seq {
+                continue;
+            }
+            last_seq = s.seq;
+            if cw.chunk(format!("data: {}\n\n", s.to_json()).as_bytes()).is_err() {
+                return false;
+            }
+        }
+    }
+    let _ = cw.finish();
+    false
+}
+
 /// One completed request folded into the live aggregate.
 fn completed_metrics(r: &crate::coordinator::Response) -> ServeMetrics {
     let mut m = ServeMetrics::default();
@@ -717,6 +799,15 @@ fn completed_metrics(r: &crate::coordinator::Response) -> ServeMetrics {
             m.total_new_tokens = r.tokens.len();
             m.request_latency.push(r.latency);
             m.ttft.push(r.ttft);
+            m.ttft_hist = crate::metrics::Histogram::with_bounds(&crate::metrics::TTFT_BOUNDS);
+            m.ttft_hist.observe(r.ttft);
+            if !r.itl.is_empty() {
+                m.itl_hist = crate::metrics::Histogram::with_bounds(&crate::metrics::ITL_BOUNDS);
+                for &gap in &r.itl {
+                    m.itl_hist.observe(gap);
+                }
+                m.itl.extend_from_slice(&r.itl);
+            }
             m.spec.merge(&r.stats);
         }
         Some(ERR_DEADLINE) => m.timeouts = 1,

@@ -1,0 +1,1025 @@
+//! Speculation-health telemetry: a bounded ring of windowed [`Snapshot`]s
+//! plus streaming acceptance-drift detection.
+//!
+//! The Prometheus surface ([`crate::metrics`]) exposes *cumulative*
+//! counters — good for dashboards, useless for "did draft quality decay
+//! in the last minute?". This module closes that gap with a fixed-cadence
+//! time series captured on the scheduler thread: every `window` seconds of
+//! scheduler activity the current accumulators are sealed into a
+//! [`Snapshot`] (windowed rates, accept-rate, mean accept depth, TTFT/ITL
+//! quantiles over per-window reservoirs, occupancy, queue depth, per-tag
+//! slices) and pushed into a bounded ring.
+//!
+//! On top of the per-window acceptance rate sits a streaming drift
+//! detector ([`Drift`]): an EWMA baseline plus a two-sided CUSUM /
+//! Page–Hinkley statistic with hysteresis. When the statistic crosses the
+//! firing threshold the detector latches "drift active", emits a
+//! structured [`crate::trace::drift`] instant into the flight-recorder
+//! ring, bumps `specd_health_drift_events_total` and raises the
+//! machine-readable *retune advised* flag — the input signal for the
+//! ROADMAP's adaptive-γ controller and the `/v1/reload-draft` hot-swap
+//! loop. While active the EWMA baseline is frozen so a persistent shift
+//! cannot be absorbed into the baseline; the flag clears only after the
+//! statistic stays below the lower hysteresis threshold for
+//! `clear_windows` consecutive windows.
+//!
+//! Consumers: `GET /debug/stats` (latest + ring as JSON), `GET
+//! /debug/stats?stream=1` (SSE snapshot stream), `specd top` (terminal
+//! dashboard polling either), `--stats-out` (replay dump validated by
+//! `python/tests/test_stats_stream.py`), and the `specd_health_*` gauge
+//! families appended to `/metrics`.
+//!
+//! Overhead discipline matches the trace ring: a disabled handle
+//! ([`TelemetryConfig::disabled`], `--telemetry-window 0`) costs one
+//! relaxed atomic load per feed site (hard-asserted ≤1% of wall time by
+//! `examples/dispatch_microbench.rs`). Enabled, the scheduler takes one
+//! short mutex per block and per iteration — microseconds against
+//! millisecond-scale dispatches.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+use crate::json::ObjWriter;
+use crate::metrics::{prom_counter, prom_gauge};
+
+/// Per-window TTFT samples retained (reservoir cap; oldest kept — a
+/// window is short, so first-N is representative and allocation-bounded).
+const TTFT_RESERVOIR: usize = 512;
+/// Per-window inter-token-latency samples retained.
+const ITL_RESERVOIR: usize = 2048;
+/// Interned task-tag table bound (slot 0 is the untagged catch-all).
+pub const MAX_TAGS: usize = 16;
+
+// ---------------------------------------------------------------------------
+// Configuration
+// ---------------------------------------------------------------------------
+
+/// Telemetry knobs (`--telemetry-window` / `--telemetry-ring`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TelemetryConfig {
+    /// Snapshot cadence in seconds; `<= 0` disables the subsystem.
+    pub window: f64,
+    /// Snapshots retained in the ring; `0` disables the subsystem.
+    pub ring: usize,
+    /// Drift-detector tuning.
+    pub drift: DriftConfig,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig { window: 1.0, ring: 240, drift: DriftConfig::default() }
+    }
+}
+
+impl TelemetryConfig {
+    /// A config whose [`Telemetry`] handle is permanently off (every feed
+    /// site reduces to one relaxed load).
+    pub fn disabled() -> Self {
+        TelemetryConfig { window: 0.0, ring: 0, ..TelemetryConfig::default() }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.window > 0.0 && self.ring > 0
+    }
+}
+
+/// Tuning for the acceptance-drift detector.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DriftConfig {
+    /// EWMA smoothing factor for the acceptance baseline.
+    pub alpha: f64,
+    /// Windows observed before the detector may fire (baseline settling).
+    pub warmup: u32,
+    /// Per-window slack subtracted from the deviation (Page–Hinkley δ):
+    /// drifts smaller than this never accumulate.
+    pub slack: f64,
+    /// Firing threshold for the CUSUM statistic (hysteresis upper bound).
+    pub fire_at: f64,
+    /// Clearing threshold (hysteresis lower bound, `< fire_at`).
+    pub clear_at: f64,
+    /// Consecutive windows the statistic must stay below `clear_at`
+    /// before an active drift flag clears.
+    pub clear_windows: u32,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        DriftConfig {
+            alpha: 0.2,
+            warmup: 5,
+            slack: 0.02,
+            fire_at: 0.15,
+            clear_at: 0.05,
+            clear_windows: 3,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Drift detector
+// ---------------------------------------------------------------------------
+
+/// What one [`Drift::observe`] call did to the latched flag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DriftEdge {
+    /// No state change this window.
+    None,
+    /// The statistic crossed `fire_at`: drift is now active.
+    Fired,
+    /// The statistic stayed below `clear_at` long enough: flag cleared.
+    Cleared,
+}
+
+/// Streaming change detector over per-window acceptance rates: EWMA
+/// baseline + two-sided CUSUM (Page–Hinkley form) with hysteresis.
+#[derive(Debug, Clone)]
+pub struct Drift {
+    cfg: DriftConfig,
+    /// EWMA acceptance baseline (frozen while `active`).
+    pub baseline: f64,
+    /// Windows observed so far.
+    pub observed: u32,
+    /// One-sided statistic: acceptance fell below baseline.
+    pub cusum_down: f64,
+    /// One-sided statistic: acceptance rose above baseline.
+    pub cusum_up: f64,
+    /// Latched drift flag (this IS the "retune advised" signal).
+    pub active: bool,
+    /// Lifetime count of fire edges.
+    pub events: u64,
+    below_clear: u32,
+}
+
+impl Drift {
+    pub fn new(cfg: DriftConfig) -> Drift {
+        Drift {
+            cfg,
+            baseline: 0.0,
+            observed: 0,
+            cusum_down: 0.0,
+            cusum_up: 0.0,
+            active: false,
+            events: 0,
+            below_clear: 0,
+        }
+    }
+
+    /// The decision statistic: the larger one-sided CUSUM.
+    pub fn score(&self) -> f64 {
+        self.cusum_down.max(self.cusum_up)
+    }
+
+    /// Feed one window's acceptance rate; returns the flag edge.
+    pub fn observe(&mut self, x: f64) -> DriftEdge {
+        if self.observed == 0 {
+            self.baseline = x;
+        }
+        self.observed += 1;
+        if self.observed <= self.cfg.warmup {
+            // Baseline settling: track the EWMA, accumulate nothing.
+            self.baseline += self.cfg.alpha * (x - self.baseline);
+            return DriftEdge::None;
+        }
+        self.cusum_down = (self.cusum_down + (self.baseline - x) - self.cfg.slack).max(0.0);
+        self.cusum_up = (self.cusum_up + (x - self.baseline) - self.cfg.slack).max(0.0);
+        let score = self.score();
+        if !self.active {
+            if score > self.cfg.fire_at {
+                // Latch. The baseline freezes here: a persistent shift
+                // keeps the flag up until the operator acts (or the rate
+                // genuinely recovers toward the old baseline).
+                self.active = true;
+                self.events += 1;
+                self.below_clear = 0;
+                return DriftEdge::Fired;
+            }
+            self.baseline += self.cfg.alpha * (x - self.baseline);
+        } else if score < self.cfg.clear_at {
+            self.below_clear += 1;
+            if self.below_clear >= self.cfg.clear_windows {
+                self.active = false;
+                self.below_clear = 0;
+                self.cusum_down = 0.0;
+                self.cusum_up = 0.0;
+                return DriftEdge::Cleared;
+            }
+        } else {
+            self.below_clear = 0;
+        }
+        DriftEdge::None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Snapshots
+// ---------------------------------------------------------------------------
+
+/// Windowed per-tag activity (task-mix slice of one window).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Slice {
+    pub tag: String,
+    pub blocks: u64,
+    pub drafted: u64,
+    pub accepted: u64,
+    pub tokens: u64,
+}
+
+/// One sealed telemetry window.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Snapshot {
+    /// Monotone 1-based snapshot index.
+    pub seq: u64,
+    /// Wall-clock stamp (milliseconds since the Unix epoch).
+    pub unix_ms: u64,
+    /// Process-relative seal time, seconds.
+    pub uptime_s: f64,
+    /// Actual span this window covered (>= the configured cadence; a
+    /// stalled scheduler widens the window rather than dropping data, so
+    /// counter deltas stay consistent across the ring).
+    pub window_s: f64,
+    // -- window deltas ------------------------------------------------------
+    pub tokens: u64,
+    pub blocks: u64,
+    pub drafted: u64,
+    pub accepted: u64,
+    pub dispatches: u64,
+    pub iterations: u64,
+    pub lane_steps: u64,
+    // -- windowed rates -----------------------------------------------------
+    pub tokens_per_sec: f64,
+    pub dispatches_per_sec: f64,
+    /// accepted / drafted over this window (0 with no drafts).
+    pub accept_rate: f64,
+    /// accepted / blocks over this window (0 with no blocks).
+    pub mean_accept_depth: f64,
+    /// lane_steps / iterations over this window.
+    pub occupancy: f64,
+    // -- instantaneous gauges (as of the seal) ------------------------------
+    pub queue_depth: u64,
+    pub pool_live: u64,
+    pub pool_max: u64,
+    // -- windowed latency quantiles (0 with no samples) ---------------------
+    pub ttft_p50: f64,
+    pub ttft_p90: f64,
+    pub itl_p50: f64,
+    pub itl_p90: f64,
+    // -- per-tag task-mix slices (only tags active this window) -------------
+    pub slices: Vec<Slice>,
+    // -- drift-detector state after this window -----------------------------
+    pub baseline: f64,
+    pub drift_score: f64,
+    pub drift_active: bool,
+    pub retune_advised: bool,
+    pub drift_events: u64,
+}
+
+impl Snapshot {
+    /// JSON object for `/debug/stats`, the SSE stream and `--stats-out`.
+    pub fn to_json(&self) -> String {
+        let mut slices = String::from("[");
+        for (i, sl) in self.slices.iter().enumerate() {
+            if i > 0 {
+                slices.push(',');
+            }
+            slices.push_str(
+                &ObjWriter::new()
+                    .str("tag", &sl.tag)
+                    .num("blocks", sl.blocks as f64)
+                    .num("drafted", sl.drafted as f64)
+                    .num("accepted", sl.accepted as f64)
+                    .num("tokens", sl.tokens as f64)
+                    .finish(),
+            );
+        }
+        slices.push(']');
+        let health = ObjWriter::new()
+            .num("baseline", self.baseline)
+            .num("score", self.drift_score)
+            .bool("drift_active", self.drift_active)
+            .bool("retune_advised", self.retune_advised)
+            .num("drift_events", self.drift_events as f64)
+            .finish();
+        ObjWriter::new()
+            .num("seq", self.seq as f64)
+            .num("unix_ms", self.unix_ms as f64)
+            .num("uptime_s", self.uptime_s)
+            .num("window_s", self.window_s)
+            .num("tokens", self.tokens as f64)
+            .num("blocks", self.blocks as f64)
+            .num("drafted", self.drafted as f64)
+            .num("accepted", self.accepted as f64)
+            .num("dispatches", self.dispatches as f64)
+            .num("iterations", self.iterations as f64)
+            .num("lane_steps", self.lane_steps as f64)
+            .num("tokens_per_sec", self.tokens_per_sec)
+            .num("dispatches_per_sec", self.dispatches_per_sec)
+            .num("accept_rate", self.accept_rate)
+            .num("mean_accept_depth", self.mean_accept_depth)
+            .num("occupancy", self.occupancy)
+            .num("queue_depth", self.queue_depth as f64)
+            .num("pool_live", self.pool_live as f64)
+            .num("pool_max", self.pool_max as f64)
+            .num("ttft_p50", self.ttft_p50)
+            .num("ttft_p90", self.ttft_p90)
+            .num("itl_p50", self.itl_p50)
+            .num("itl_p90", self.itl_p90)
+            .raw("slices", &slices)
+            .raw("health", &health)
+            .finish()
+    }
+}
+
+/// One scheduler iteration's feed (cumulative-free: deltas for this
+/// iteration plus the instantaneous gauges).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IterSample {
+    /// New tokens emitted this iteration (post-clip not required; the
+    /// window rate is an engine-side throughput signal).
+    pub tokens: u64,
+    /// PJRT launches this iteration.
+    pub dispatches: u64,
+    /// Lanes that emitted this iteration.
+    pub lanes: u64,
+    pub queue_depth: u64,
+    pub pool_live: u64,
+    pub pool_max: u64,
+}
+
+// ---------------------------------------------------------------------------
+// The telemetry handle
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Default)]
+struct TagAcc {
+    blocks: u64,
+    drafted: u64,
+    accepted: u64,
+    tokens: u64,
+}
+
+impl TagAcc {
+    fn is_idle(&self) -> bool {
+        self.blocks == 0 && self.tokens == 0
+    }
+}
+
+#[derive(Debug, Default)]
+struct WindowAcc {
+    tokens: u64,
+    blocks: u64,
+    drafted: u64,
+    accepted: u64,
+    dispatches: u64,
+    iterations: u64,
+    lane_steps: u64,
+    ttft: Vec<f64>,
+    itl: Vec<f64>,
+    per_tag: Vec<TagAcc>,
+}
+
+impl WindowAcc {
+    fn reset(&mut self) {
+        self.tokens = 0;
+        self.blocks = 0;
+        self.drafted = 0;
+        self.accepted = 0;
+        self.dispatches = 0;
+        self.iterations = 0;
+        self.lane_steps = 0;
+        self.ttft.clear();
+        self.itl.clear();
+        for t in &mut self.per_tag {
+            *t = TagAcc::default();
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Inner {
+    cfg: TelemetryConfig,
+    /// Uptime second the open window started at.
+    window_start: f64,
+    acc: WindowAcc,
+    ring: VecDeque<Snapshot>,
+    /// Interned tag table; index = the `tag` handed to [`Telemetry::on_block`].
+    tags: Vec<String>,
+    drift: Drift,
+    /// Gauges carried from the most recent [`IterSample`].
+    queue_depth: u64,
+    pool_live: u64,
+    pool_max: u64,
+}
+
+/// Shared telemetry handle: the scheduler thread feeds it, the HTTP
+/// server and dump paths read it. Clone the [`Arc`] freely.
+#[derive(Debug)]
+pub struct Telemetry {
+    enabled: AtomicBool,
+    /// Mirror of the latest sealed snapshot's `seq` (lock-free SSE poll).
+    seq: AtomicU64,
+    t0: Instant,
+    epoch_ms: u64,
+    inner: Mutex<Inner>,
+}
+
+fn unix_ms_now() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// Percentile over an unsorted sample; 0.0 when empty.
+fn pctl(xs: &mut [f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let i = ((xs.len() - 1) as f64 * q).round() as usize;
+    xs[i.min(xs.len() - 1)]
+}
+
+impl Telemetry {
+    pub fn new(cfg: TelemetryConfig) -> Arc<Telemetry> {
+        let on = cfg.is_enabled();
+        Arc::new(Telemetry {
+            enabled: AtomicBool::new(on),
+            seq: AtomicU64::new(0),
+            t0: Instant::now(),
+            epoch_ms: unix_ms_now(),
+            inner: Mutex::new(Inner {
+                drift: Drift::new(cfg.drift),
+                cfg,
+                window_start: 0.0,
+                acc: WindowAcc { per_tag: vec![TagAcc::default()], ..WindowAcc::default() },
+                ring: VecDeque::new(),
+                tags: vec!["untagged".to_string()],
+                queue_depth: 0,
+                pool_live: 0,
+                pool_max: 0,
+            }),
+        })
+    }
+
+    /// A permanently-off handle (every feed site is one relaxed load).
+    pub fn off() -> Arc<Telemetry> {
+        Telemetry::new(TelemetryConfig::disabled())
+    }
+
+    /// The per-site fast path: one relaxed load.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Latest sealed snapshot's `seq` (0 = none yet). Lock-free, so SSE
+    /// writers can poll for news without contending the scheduler.
+    #[inline]
+    pub fn seq(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Intern a task tag, returning the slot to hand to [`Self::on_block`].
+    /// Bounded at [`MAX_TAGS`]; overflow and empty names intern to slot 0
+    /// ("untagged"). Call once per request at admission, not per block.
+    pub fn intern(&self, tag: &str) -> u16 {
+        if !self.enabled() || tag.is_empty() {
+            return 0;
+        }
+        let mut inner = self.lock();
+        if let Some(i) = inner.tags.iter().position(|t| t == tag) {
+            return i as u16;
+        }
+        if inner.tags.len() >= MAX_TAGS {
+            return 0;
+        }
+        inner.tags.push(tag.to_string());
+        let slot = inner.tags.len() - 1;
+        inner.acc.per_tag.push(TagAcc::default());
+        slot as u16
+    }
+
+    /// Feed one finished speculation block: its acceptance (`accepted` of
+    /// `drafted` proposals), tokens emitted, and optionally the lane's
+    /// inter-token gap for this block (`(seconds_per_token, tokens)`).
+    pub fn on_block(
+        &self,
+        tag: u16,
+        accepted: u64,
+        drafted: u64,
+        tokens: u64,
+        itl: Option<(f64, u32)>,
+    ) {
+        if !self.enabled() {
+            return;
+        }
+        let mut inner = self.lock();
+        let acc = &mut inner.acc;
+        acc.blocks += 1;
+        acc.drafted += drafted;
+        acc.accepted += accepted;
+        if let Some(t) = acc.per_tag.get_mut(tag as usize) {
+            t.blocks += 1;
+            t.drafted += drafted;
+            t.accepted += accepted;
+            t.tokens += tokens;
+        }
+        if let Some((gap, n)) = itl {
+            let room = ITL_RESERVOIR.saturating_sub(acc.itl.len());
+            for _ in 0..(n as usize).min(room) {
+                acc.itl.push(gap);
+            }
+        }
+    }
+
+    /// Feed one request's time-to-first-token sample.
+    pub fn on_ttft(&self, seconds: f64) {
+        if !self.enabled() {
+            return;
+        }
+        let mut inner = self.lock();
+        if inner.acc.ttft.len() < TTFT_RESERVOIR {
+            inner.acc.ttft.push(seconds);
+        }
+    }
+
+    /// Feed one scheduler iteration; seals a [`Snapshot`] when the open
+    /// window's cadence has elapsed. Call from the scheduler thread at the
+    /// end of each loop iteration.
+    pub fn on_iteration(&self, s: &IterSample) {
+        if !self.enabled() {
+            return;
+        }
+        self.step_at(self.t0.elapsed().as_secs_f64(), s);
+    }
+
+    /// Explicit-clock variant of [`Self::on_iteration`] (deterministic
+    /// cadence in tests and trace replays). `now` is uptime seconds.
+    pub fn step_at(&self, now: f64, s: &IterSample) {
+        if !self.enabled() {
+            return;
+        }
+        let mut inner = self.lock();
+        inner.acc.tokens += s.tokens;
+        inner.acc.dispatches += s.dispatches;
+        inner.acc.iterations += 1;
+        inner.acc.lane_steps += s.lanes;
+        inner.queue_depth = s.queue_depth;
+        inner.pool_live = s.pool_live;
+        inner.pool_max = s.pool_max;
+        if now - inner.window_start >= inner.cfg.window {
+            let snap = Self::seal(&mut inner, now, self.epoch_ms, self.seq.load(Ordering::Relaxed));
+            self.seq.store(snap.seq, Ordering::Relaxed);
+            if inner.ring.len() >= inner.cfg.ring {
+                inner.ring.pop_front();
+            }
+            inner.ring.push_back(snap);
+        }
+    }
+
+    /// Seal the open window into a snapshot and reset the accumulators.
+    fn seal(inner: &mut Inner, now: f64, epoch_ms: u64, prev_seq: u64) -> Snapshot {
+        let span = (now - inner.window_start).max(1e-9);
+        let acc = &inner.acc;
+        let accept_rate =
+            if acc.drafted > 0 { acc.accepted as f64 / acc.drafted as f64 } else { 0.0 };
+        let mut slices = Vec::new();
+        for (i, t) in acc.per_tag.iter().enumerate() {
+            if t.is_idle() {
+                continue;
+            }
+            slices.push(Slice {
+                tag: inner.tags.get(i).cloned().unwrap_or_default(),
+                blocks: t.blocks,
+                drafted: t.drafted,
+                accepted: t.accepted,
+                tokens: t.tokens,
+            });
+        }
+        // Drift observes only windows that actually verified blocks: an
+        // idle window says nothing about draft quality and must not walk
+        // the statistic.
+        let edge = if acc.drafted > 0 { inner.drift.observe(accept_rate) } else { DriftEdge::None };
+        if edge == DriftEdge::Fired {
+            crate::trace::drift((inner.drift.score() * 1e3) as u64, (accept_rate * 1e3) as u64);
+        }
+        let mut ttft = std::mem::take(&mut inner.acc.ttft);
+        let mut itl = std::mem::take(&mut inner.acc.itl);
+        let acc = &inner.acc;
+        let snap = Snapshot {
+            seq: prev_seq + 1,
+            unix_ms: epoch_ms.saturating_add((now * 1e3) as u64),
+            uptime_s: now,
+            window_s: span,
+            tokens: acc.tokens,
+            blocks: acc.blocks,
+            drafted: acc.drafted,
+            accepted: acc.accepted,
+            dispatches: acc.dispatches,
+            iterations: acc.iterations,
+            lane_steps: acc.lane_steps,
+            tokens_per_sec: acc.tokens as f64 / span,
+            dispatches_per_sec: acc.dispatches as f64 / span,
+            accept_rate,
+            mean_accept_depth: if acc.blocks > 0 {
+                acc.accepted as f64 / acc.blocks as f64
+            } else {
+                0.0
+            },
+            occupancy: if acc.iterations > 0 {
+                acc.lane_steps as f64 / acc.iterations as f64
+            } else {
+                0.0
+            },
+            queue_depth: inner.queue_depth,
+            pool_live: inner.pool_live,
+            pool_max: inner.pool_max,
+            ttft_p50: pctl(&mut ttft, 0.50),
+            ttft_p90: pctl(&mut ttft, 0.90),
+            itl_p50: pctl(&mut itl, 0.50),
+            itl_p90: pctl(&mut itl, 0.90),
+            slices,
+            baseline: inner.drift.baseline,
+            drift_score: inner.drift.score(),
+            drift_active: inner.drift.active,
+            retune_advised: inner.drift.active,
+            drift_events: inner.drift.events,
+        };
+        // Reservoirs were taken above; hand the (cleared) buffers back so
+        // steady state reuses their capacity.
+        ttft.clear();
+        itl.clear();
+        inner.acc.ttft = ttft;
+        inner.acc.itl = itl;
+        inner.acc.reset();
+        inner.window_start = now;
+        snap
+    }
+
+    // -- readers ------------------------------------------------------------
+
+    /// The most recent sealed snapshot, if any.
+    pub fn latest(&self) -> Option<Snapshot> {
+        self.lock().ring.back().cloned()
+    }
+
+    /// The retained ring, oldest first.
+    pub fn ring(&self) -> Vec<Snapshot> {
+        self.lock().ring.iter().cloned().collect()
+    }
+
+    /// Whether the drift flag is currently latched.
+    pub fn drift_active(&self) -> bool {
+        self.lock().drift.active
+    }
+
+    /// Machine-readable "retrain/retune the draft" advisory — the hook the
+    /// adaptive-γ controller and the reload-draft loop consume.
+    pub fn retune_advised(&self) -> bool {
+        self.drift_active()
+    }
+
+    /// The full `/debug/stats` payload: config + latest + ring.
+    pub fn stats_json(&self) -> String {
+        let inner = self.lock();
+        let mut ring = String::from("[");
+        for (i, s) in inner.ring.iter().enumerate() {
+            if i > 0 {
+                ring.push(',');
+            }
+            ring.push_str(&s.to_json());
+        }
+        ring.push(']');
+        let mut w = ObjWriter::new()
+            .bool("enabled", self.enabled())
+            .num("window_s", inner.cfg.window)
+            .num("ring_capacity", inner.cfg.ring as f64)
+            .num("seq", self.seq() as f64)
+            .bool("drift_active", inner.drift.active)
+            .bool("retune_advised", inner.drift.active)
+            .num("drift_events", inner.drift.events as f64);
+        w = match inner.ring.back() {
+            Some(s) => w.raw("latest", &s.to_json()),
+            None => w.raw("latest", "null"),
+        };
+        w.raw("ring", &ring).finish()
+    }
+
+    /// Render the `specd_health_*` families (appended to `/metrics` and
+    /// `metrics.prom` next to the cumulative families).
+    pub fn prometheus_text(&self) -> String {
+        let inner = self.lock();
+        let last = inner.ring.back();
+        let mut s = String::new();
+        prom_counter(&mut s, "specd_health_snapshots_total",
+                     "Telemetry windows sealed into the snapshot ring.",
+                     self.seq() as f64);
+        prom_gauge(&mut s, "specd_health_window_seconds",
+                   "Configured telemetry snapshot cadence.", inner.cfg.window);
+        prom_gauge(&mut s, "specd_health_accept_rate",
+                   "Draft-token acceptance rate over the last sealed window.",
+                   last.map(|l| l.accept_rate).unwrap_or(0.0));
+        prom_gauge(&mut s, "specd_health_accept_baseline",
+                   "EWMA acceptance baseline the drift detector tracks.",
+                   inner.drift.baseline);
+        prom_gauge(&mut s, "specd_health_mean_accept_depth",
+                   "Mean accepted drafts per block over the last sealed window.",
+                   last.map(|l| l.mean_accept_depth).unwrap_or(0.0));
+        prom_gauge(&mut s, "specd_health_tokens_per_sec",
+                   "Token throughput over the last sealed window.",
+                   last.map(|l| l.tokens_per_sec).unwrap_or(0.0));
+        prom_gauge(&mut s, "specd_health_drift_score",
+                   "CUSUM/Page-Hinkley acceptance-drift statistic.",
+                   inner.drift.score());
+        prom_gauge(&mut s, "specd_health_drift_active",
+                   "1 while acceptance drift is latched (hysteresis applies).",
+                   if inner.drift.active { 1.0 } else { 0.0 });
+        prom_counter(&mut s, "specd_health_drift_events_total",
+                     "Drift-detector fire edges since startup.",
+                     inner.drift.events as f64);
+        prom_gauge(&mut s, "specd_health_retune_advised",
+                   "1 while the detector advises retraining/retuning the draft.",
+                   if inner.drift.active { 1.0 } else { 0.0 });
+        s
+    }
+
+    /// Write [`Self::stats_json`] to `path` (`--stats-out`).
+    pub fn write_stats_json(&self, path: &str) -> crate::Result<()> {
+        std::fs::write(path, self.stats_json())
+            .map_err(|e| crate::Error::msg(format!("stats-out {path}: {e}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::Value;
+    use crate::rng::Pcg64;
+
+    fn iter(tokens: u64, dispatches: u64, lanes: u64) -> IterSample {
+        IterSample { tokens, dispatches, lanes, queue_depth: 2, pool_live: 3, pool_max: 4 }
+    }
+
+    #[test]
+    fn disabled_feeds_are_noops() {
+        let t = Telemetry::off();
+        assert!(!t.enabled());
+        t.on_block(0, 2, 3, 3, Some((0.01, 3)));
+        t.on_ttft(0.05);
+        t.on_iteration(&iter(3, 8, 1));
+        t.step_at(100.0, &iter(3, 8, 1));
+        assert_eq!(t.seq(), 0);
+        assert!(t.latest().is_none());
+        assert!(t.ring().is_empty());
+        assert_eq!(t.intern("dolly"), 0, "disabled intern goes to slot 0");
+        let v = Value::parse(&t.stats_json()).unwrap();
+        assert_eq!(v.get("enabled").as_bool(), Some(false));
+        assert_eq!(v.get("latest"), &Value::Null);
+    }
+
+    #[test]
+    fn ring_seals_on_cadence_and_wraps() {
+        let cfg = TelemetryConfig { window: 1.0, ring: 4, ..TelemetryConfig::default() };
+        let t = Telemetry::new(cfg);
+        // Sub-cadence feeds accumulate without sealing.
+        t.step_at(0.4, &iter(10, 4, 2));
+        t.step_at(0.8, &iter(10, 4, 2));
+        assert_eq!(t.seq(), 0);
+        // Cadence elapsed: one snapshot holding both iterations' deltas.
+        t.step_at(1.25, &iter(10, 4, 2));
+        assert_eq!(t.seq(), 1);
+        let s = t.latest().unwrap();
+        assert_eq!(s.tokens, 30);
+        assert_eq!(s.dispatches, 12);
+        assert_eq!(s.iterations, 3);
+        assert_eq!(s.lane_steps, 6);
+        assert!((s.window_s - 1.25).abs() < 1e-9);
+        assert!((s.tokens_per_sec - 30.0 / 1.25).abs() < 1e-9);
+        assert!((s.occupancy - 2.0).abs() < 1e-9);
+        assert_eq!(s.queue_depth, 2);
+        assert_eq!(s.pool_live, 3);
+        assert_eq!(s.pool_max, 4);
+        // Next window starts empty: deltas reset between snapshots.
+        t.step_at(2.5, &iter(7, 3, 1));
+        let s2 = t.latest().unwrap();
+        assert_eq!(s2.seq, 2);
+        assert_eq!(s2.tokens, 7);
+        assert!((s2.window_s - 1.25).abs() < 1e-9, "span measured from the last seal");
+        // Ring stays bounded at capacity, keeping the newest snapshots.
+        for i in 0..10u64 {
+            t.step_at(3.5 + i as f64, &iter(1, 1, 1));
+        }
+        let ring = t.ring();
+        assert_eq!(ring.len(), 4, "ring must stay bounded");
+        let seqs: Vec<u64> = ring.iter().map(|s| s.seq).collect();
+        assert_eq!(seqs, vec![9, 10, 11, 12], "oldest evicted, order kept");
+        assert_eq!(t.seq(), 12);
+    }
+
+    #[test]
+    fn window_deltas_match_hand_computed_counters() {
+        let cfg = TelemetryConfig { window: 1.0, ring: 8, ..TelemetryConfig::default() };
+        let t = Telemetry::new(cfg);
+        // Window 1: 3 blocks, 9 drafted, 6 accepted, 8 tokens.
+        for _ in 0..3 {
+            t.on_block(0, 2, 3, 8 / 3, None);
+        }
+        t.on_ttft(0.05);
+        t.on_ttft(0.15);
+        t.step_at(1.0, &iter(8, 10, 3));
+        // Window 2: 1 block, fully rejected.
+        t.on_block(0, 0, 3, 1, Some((0.02, 1)));
+        t.step_at(2.0, &iter(1, 6, 1));
+        let ring = t.ring();
+        assert_eq!(ring.len(), 2);
+        assert_eq!(ring[0].blocks, 3);
+        assert_eq!(ring[0].drafted, 9);
+        assert_eq!(ring[0].accepted, 6);
+        assert!((ring[0].accept_rate - 6.0 / 9.0).abs() < 1e-12);
+        assert!((ring[0].mean_accept_depth - 2.0).abs() < 1e-12);
+        assert!((ring[0].ttft_p50 - 0.05).abs() < 1e-12);
+        assert!((ring[0].ttft_p90 - 0.15).abs() < 1e-12);
+        assert_eq!(ring[1].blocks, 1);
+        assert_eq!(ring[1].accepted, 0);
+        assert_eq!(ring[1].accept_rate, 0.0);
+        assert!((ring[1].itl_p50 - 0.02).abs() < 1e-12);
+        // Ring-wide delta consistency: totals across snapshots add up.
+        let total_tokens: u64 = ring.iter().map(|s| s.tokens).sum();
+        assert_eq!(total_tokens, 9);
+    }
+
+    #[test]
+    fn tag_slices_intern_and_bound() {
+        let t = Telemetry::new(TelemetryConfig::default());
+        let dolly = t.intern("dolly");
+        let xsum = t.intern("xsum");
+        assert_ne!(dolly, 0);
+        assert_ne!(xsum, dolly);
+        assert_eq!(t.intern("dolly"), dolly, "interning is idempotent");
+        // The table is bounded: overflow tags collapse into slot 0.
+        for i in 0..(MAX_TAGS + 5) {
+            let _ = t.intern(&format!("tag-{i}"));
+        }
+        assert_eq!(t.intern("one-more"), 0);
+        t.on_block(dolly, 2, 3, 3, None);
+        t.on_block(dolly, 1, 3, 2, None);
+        t.on_block(xsum, 3, 3, 4, None);
+        t.step_at(2.0, &iter(9, 6, 3));
+        let s = t.latest().unwrap();
+        assert_eq!(s.slices.len(), 2, "idle tags are omitted");
+        let d = s.slices.iter().find(|sl| sl.tag == "dolly").unwrap();
+        assert_eq!((d.blocks, d.drafted, d.accepted, d.tokens), (2, 6, 3, 5));
+        let x = s.slices.iter().find(|sl| sl.tag == "xsum").unwrap();
+        assert_eq!((x.blocks, x.accepted), (1, 3));
+    }
+
+    #[test]
+    fn drift_stays_quiet_under_seeded_noise() {
+        let mut d = Drift::new(DriftConfig::default());
+        let mut rng = Pcg64::with_stream(7, 0x7e1e);
+        for _ in 0..400 {
+            let x = 0.7 + 0.03 * rng.next_normal();
+            assert_eq!(d.observe(x), DriftEdge::None, "noise alone must not fire");
+        }
+        assert!(!d.active);
+        assert_eq!(d.events, 0);
+        assert!((d.baseline - 0.7).abs() < 0.05, "baseline tracks the mean");
+    }
+
+    #[test]
+    fn drift_fires_within_windows_of_injected_step() {
+        let mut d = Drift::new(DriftConfig::default());
+        let mut rng = Pcg64::with_stream(11, 0x7e1e);
+        for _ in 0..40 {
+            assert_eq!(d.observe(0.7 + 0.02 * rng.next_normal()), DriftEdge::None);
+        }
+        // Injected step: acceptance collapses 0.7 -> 0.5.
+        let mut fired_after = None;
+        for i in 0..8 {
+            if d.observe(0.5 + 0.02 * rng.next_normal()) == DriftEdge::Fired {
+                fired_after = Some(i + 1);
+                break;
+            }
+        }
+        let n = fired_after.expect("step change must fire the detector");
+        assert!(n <= 3, "must fire within 3 windows of the step, took {n}");
+        assert!(d.active);
+        assert_eq!(d.events, 1);
+        // Baseline froze near the pre-step level (the retrain signal
+        // references what quality USED to be).
+        assert!(d.baseline > 0.6, "baseline must not absorb the shift");
+    }
+
+    #[test]
+    fn drift_hysteresis_prevents_flapping_and_clears_on_recovery() {
+        let cfg = DriftConfig::default();
+        let mut d = Drift::new(cfg);
+        for _ in 0..20 {
+            d.observe(0.7);
+        }
+        // Fire on a collapse.
+        let mut edges = Vec::new();
+        for _ in 0..6 {
+            edges.push(d.observe(0.45));
+        }
+        assert_eq!(edges.iter().filter(|e| **e == DriftEdge::Fired).count(), 1,
+                   "latched flag must not re-fire while active: {edges:?}");
+        assert!(d.active);
+        // Partial recovery hovering above clear_at: stays latched.
+        for _ in 0..10 {
+            // score stays >= clear_at because baseline is frozen at ~0.7
+            // and 0.6 keeps feeding the statistic.
+            assert_eq!(d.observe(0.6), DriftEdge::None);
+        }
+        assert!(d.active, "hysteresis holds the flag between thresholds");
+        // Full recovery: the down-statistic decays (x > baseline - slack),
+        // and after clear_windows quiet windows the flag drops exactly once.
+        let mut cleared = 0;
+        for _ in 0..30 {
+            if d.observe(0.72) == DriftEdge::Cleared {
+                cleared += 1;
+            }
+        }
+        assert_eq!(cleared, 1, "exactly one clear edge");
+        assert!(!d.active);
+        assert_eq!(d.events, 1, "clearing does not mint new fire events");
+    }
+
+    #[test]
+    fn sealed_snapshot_reports_drift_and_retune_flag() {
+        let cfg = TelemetryConfig {
+            window: 1.0,
+            ring: 64,
+            drift: DriftConfig { warmup: 2, ..DriftConfig::default() },
+        };
+        let t = Telemetry::new(cfg);
+        let mut now = 0.0;
+        // Healthy phase: accept 7 of 10 per window.
+        for _ in 0..10 {
+            now += 1.0;
+            t.on_block(0, 7, 10, 8, None);
+            t.step_at(now, &iter(8, 5, 1));
+        }
+        assert!(!t.drift_active());
+        assert!(!t.retune_advised());
+        // Collapse phase: accept 2 of 10.
+        for _ in 0..4 {
+            now += 1.0;
+            t.on_block(0, 2, 10, 3, None);
+            t.step_at(now, &iter(3, 5, 1));
+        }
+        assert!(t.drift_active(), "collapse must latch the drift flag");
+        assert!(t.retune_advised());
+        let s = t.latest().unwrap();
+        assert!(s.drift_active && s.retune_advised);
+        assert!(s.drift_events >= 1);
+        assert!(s.baseline > 0.5, "baseline remembers the healthy phase");
+    }
+
+    #[test]
+    fn stats_json_round_trips() {
+        let t = Telemetry::new(TelemetryConfig { window: 0.5, ring: 8, ..Default::default() });
+        let tag = t.intern("wmt");
+        t.on_block(tag, 2, 3, 3, Some((0.015, 3)));
+        t.on_ttft(0.08);
+        t.step_at(0.75, &iter(3, 8, 1));
+        let v = Value::parse(&t.stats_json()).expect("stats JSON must parse");
+        assert_eq!(v.get("enabled").as_bool(), Some(true));
+        assert_eq!(v.get("seq").as_usize(), Some(1));
+        assert_eq!(v.get("drift_active").as_bool(), Some(false));
+        let latest = v.get("latest");
+        assert_eq!(latest.get("tokens").as_usize(), Some(3));
+        assert_eq!(latest.get("blocks").as_usize(), Some(1));
+        assert!((latest.get("accept_rate").as_f64().unwrap() - 2.0 / 3.0).abs() < 1e-9);
+        assert_eq!(latest.get("slices").idx(0).get("tag").as_str(), Some("wmt"));
+        let ring = v.get("ring").as_arr().unwrap();
+        assert_eq!(ring.len(), 1);
+        assert_eq!(ring[0].get("seq").as_usize(), Some(1));
+        assert_eq!(
+            ring[0].get("health").get("retune_advised").as_bool(),
+            Some(false)
+        );
+    }
+
+    #[test]
+    fn health_families_render_and_stay_disjoint() {
+        let t = Telemetry::new(TelemetryConfig::default());
+        t.on_block(0, 3, 4, 4, None);
+        t.step_at(1.5, &iter(4, 6, 1));
+        let text = t.prometheus_text();
+        assert!(text.contains("specd_health_snapshots_total 1"), "{text}");
+        assert!(text.contains("specd_health_accept_rate 0.75"), "{text}");
+        assert!(text.contains("specd_health_drift_active 0"), "{text}");
+        assert!(text.contains("specd_health_retune_advised 0"), "{text}");
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert!(line.starts_with("specd_health_"), "bad family: {line}");
+            assert_eq!(line.split_whitespace().count(), 2, "bad line: {line}");
+        }
+    }
+}

@@ -162,6 +162,9 @@ pub enum Kind {
     ReqBlock,
     /// Request terminal; a = total tokens delivered.
     ReqTerminal(Reason),
+    /// Acceptance-drift detector fired; a = CUSUM score (milli-units),
+    /// b = window accept-rate (milli-units).
+    Drift,
 }
 
 /// One fixed-size ring entry. `req` is 0 for scheduler-scoped events.
@@ -320,6 +323,12 @@ pub fn req_block(id: u64, accepted: u64, emitted: u64) {
 /// Request reached its terminal.
 pub fn req_terminal(id: u64, reason: Reason, tokens_out: u64) {
     instant(Kind::ReqTerminal(reason), id, tokens_out, 0);
+}
+
+/// The telemetry layer's acceptance-drift detector fired. Values are in
+/// milli-units (×1000) so they ride the ring's integer payload slots.
+pub fn drift(score_milli: u64, accept_rate_milli: u64) {
+    instant(Kind::Drift, 0, score_milli, accept_rate_milli);
 }
 
 /// Remember the client-facing string ID for a request (bounded; oldest
@@ -487,6 +496,22 @@ fn event_json(ev: &Event) -> String {
                         .num("req", ev.req as f64)
                         .str("reason", reason.name())
                         .num("tokens_out", ev.a as f64)
+                        .finish(),
+                );
+        }
+        Kind::Drift => {
+            w = w
+                .num("tid", TID_SCHED as f64)
+                .str("ph", "i")
+                .str("s", "t")
+                .str("name", "drift")
+                .str("cat", "health")
+                .num("ts", ev.ts_us as f64)
+                .raw(
+                    "args",
+                    &ObjWriter::new()
+                        .num("score_milli", ev.a as f64)
+                        .num("accept_rate_milli", ev.b as f64)
                         .finish(),
                 );
         }

@@ -100,6 +100,9 @@ fn spawn_mock_scheduler(
                 },
                 latency: enq.elapsed().as_secs_f64(),
                 ttft: 0.001,
+                // One scripted 2ms gap per post-first token, like the real
+                // coordinator's per-block emit gaps.
+                itl: vec![0.002; sent.saturating_sub(1)],
                 error: expired.then(|| ERR_DEADLINE.to_string()),
                 depth_counts,
             };
@@ -579,6 +582,121 @@ fn debug_endpoints_gated_behind_flag() {
     assert_eq!(miss.code, 404, "unknown rids must 404");
     on.stop();
     specd::trace::disable();
+}
+
+/// Read SSE frames until one complete `data:` event accumulates
+/// (keepalive comment events are skipped).
+fn next_sse_event<R: std::io::BufRead>(chunks: &mut http::ChunkedReader<'_, R>) -> Value {
+    let mut buf = String::new();
+    while let Some(chunk) = chunks.next_chunk().unwrap() {
+        buf.push_str(&String::from_utf8(chunk).unwrap());
+        while let Some(end) = buf.find("\n\n") {
+            let event: String = buf.drain(..end + 2).collect();
+            if let Some(payload) = event.lines().find_map(|l| l.strip_prefix("data: ")) {
+                return Value::parse(payload).unwrap();
+            }
+        }
+    }
+    panic!("stream ended without an SSE data event");
+}
+
+#[test]
+fn debug_stats_json_and_sse_share_snapshot_data() {
+    use specd::telemetry::{IterSample, Telemetry, TelemetryConfig};
+
+    // Seed one sealed window via the explicit-clock seam: one block with
+    // 2-of-3 drafts accepted and 3 tokens emitted.
+    let tl = Telemetry::new(TelemetryConfig::default());
+    tl.on_block(0, 2, 3, 3, None);
+    tl.step_at(
+        1.5,
+        &IterSample { tokens: 3, dispatches: 4, lanes: 1, queue_depth: 0, pool_live: 1, pool_max: 4 },
+    );
+    let t2 = tl.clone();
+    let rig = Rig::start(16, 2, Duration::from_millis(1), move |cfg| {
+        cfg.debug_endpoints = true;
+        cfg.telemetry = Some(t2);
+    });
+
+    // JSON shape: config + latest + ring, with hand-computed window rates.
+    let r = roundtrip(&rig.addr(), "GET /debug/stats HTTP/1.1\r\nhost: t\r\n\r\n");
+    assert_eq!(r.code, 200, "body: {}", r.body_str());
+    assert_eq!(r.header("content-type"), Some("application/json"));
+    let v = Value::parse(&r.body_str()).unwrap();
+    assert_eq!(v.get("enabled").as_bool(), Some(true));
+    assert_eq!(v.get("drift_active").as_bool(), Some(false));
+    let latest = v.get("latest");
+    assert_eq!(latest.get("seq").as_usize(), Some(1));
+    assert_eq!(latest.get("tokens").as_usize(), Some(3));
+    assert!((latest.get("accept_rate").as_f64().unwrap() - 2.0 / 3.0).abs() < 1e-9);
+    let ring = v.get("ring").as_arr().unwrap();
+    assert_eq!(ring.len(), 1);
+    assert_eq!(v.get("ring").idx(0).to_string(), latest.to_string());
+
+    // The health families ride on /metrics next to the HTTP aggregate.
+    let m = roundtrip(&rig.addr(), "GET /metrics HTTP/1.1\r\nhost: t\r\n\r\n");
+    let text = m.body_str().to_string();
+    assert!(text.contains("# TYPE specd_health_accept_rate gauge"), "{text}");
+    assert!(text.contains("specd_health_snapshots_total"), "{text}");
+    assert!(text.contains("specd_requests_total"), "{text}");
+
+    // SSE: the stream opens by replaying the latest sealed snapshot, and
+    // the payload must be identical to the JSON endpoint's `latest`.
+    let mut conn = connect(&rig.addr());
+    write!(conn, "GET /debug/stats?stream=1 HTTP/1.1\r\nhost: t\r\n\r\n").unwrap();
+    conn.flush().unwrap();
+    let mut rd = BufReader::new(conn);
+    let head = http::read_response_head(&mut rd).unwrap();
+    assert_eq!(head.code, 200);
+    assert!(head.chunked());
+    assert_eq!(head.header("content-type"), Some("text/event-stream"));
+    let mut chunks = http::ChunkedReader::new(&mut rd);
+    let first = next_sse_event(&mut chunks);
+    assert_eq!(first.to_string(), latest.to_string());
+
+    // A newly sealed window is pushed to the live stream.
+    tl.on_block(0, 1, 3, 2, None);
+    tl.step_at(3.0, &IterSample { tokens: 2, dispatches: 2, lanes: 1, ..Default::default() });
+    let second = next_sse_event(&mut chunks);
+    assert_eq!(second.get("seq").as_usize(), Some(2));
+    assert!((second.get("accept_rate").as_f64().unwrap() - 1.0 / 3.0).abs() < 1e-9);
+    drop(chunks);
+    rig.stop();
+}
+
+#[test]
+fn debug_stats_gated_behind_flag_and_telemetry() {
+    // debug-endpoints off: /debug/stats is indistinguishable from an
+    // unknown path even with a telemetry handle attached.
+    let tl = specd::telemetry::Telemetry::new(specd::telemetry::TelemetryConfig::default());
+    let off = Rig::start(16, 2, Duration::from_millis(1), move |cfg| {
+        cfg.telemetry = Some(tl);
+    });
+    assert_eq!(roundtrip(&off.addr(), "GET /debug/stats HTTP/1.1\r\nhost: t\r\n\r\n").code, 404);
+    off.stop();
+
+    // debug-endpoints on but no telemetry handle: a specific 404.
+    let on = Rig::start(16, 2, Duration::from_millis(1), |cfg| cfg.debug_endpoints = true);
+    let r = roundtrip(&on.addr(), "GET /debug/stats HTTP/1.1\r\nhost: t\r\n\r\n");
+    assert_eq!(r.code, 404);
+    assert!(r.body_str().contains("telemetry"), "body: {}", r.body_str());
+    on.stop();
+}
+
+#[test]
+fn latency_histograms_render_on_metrics() {
+    let rig = Rig::fast();
+    let r = post_generate(&rig.addr(), r#"{"tokens": [5, 6, 7, 8, 9], "max_new": 5}"#, "");
+    assert_eq!(r.code, 200, "body: {}", r.body_str());
+    let m = roundtrip(&rig.addr(), "GET /metrics HTTP/1.1\r\nhost: t\r\n\r\n");
+    let text = m.body_str().to_string();
+    assert!(text.contains("# TYPE specd_ttft_seconds histogram"), "{text}");
+    assert!(!text.contains("# TYPE specd_ttft_seconds summary"), "promoted: {text}");
+    assert!(text.contains("# TYPE specd_itl_seconds histogram"), "{text}");
+    // Mock scripts ttft=1ms and four 2ms inter-token gaps for 5 tokens.
+    assert!(text.contains("specd_ttft_seconds_count 1"), "{text}");
+    assert!(text.contains("specd_itl_seconds_count 4"), "{text}");
+    rig.stop();
 }
 
 #[test]

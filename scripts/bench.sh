@@ -35,3 +35,20 @@ cargo run --release --example serve_benchmark -- \
     --artifacts "$ART" --bench-json BENCH_serve.json "$@"
 
 echo "bench artifacts: BENCH_pr4.json BENCH_pr5.json BENCH_serve.json"
+
+# Regression gate: when a baseline bundle is available (previous run's
+# artifacts, e.g. restored by CI into bench_baseline/), diff against it.
+BASE="${BENCH_BASELINE_DIR:-bench_baseline}"
+if [[ -d "$BASE" ]]; then
+    status=0
+    for f in BENCH_pr4.json BENCH_pr5.json BENCH_serve.json; do
+        if [[ -f "$BASE/$f" && -f "$f" ]]; then
+            echo "== bench compare: $f vs $BASE/$f =="
+            python3 scripts/bench_compare.py "$BASE/$f" "$f" \
+                --report "BENCH_compare_${f%.json}.md" || status=1
+        fi
+    done
+    exit $status
+else
+    echo "no baseline dir at $BASE; skipping bench_compare"
+fi

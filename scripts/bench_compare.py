@@ -1,0 +1,154 @@
+#!/usr/bin/env python3
+"""Diff two BENCH_*.json perf artifacts and gate on regressions.
+
+Usage:
+    scripts/bench_compare.py BASELINE.json CANDIDATE.json \
+        [--max-regress 0.10] [--metric tokens_per_sec=0.05] [--report out.md]
+
+Rows are matched by their identity keys (mode, lanes, budget, ...); every
+shared numeric metric with a known direction is compared as a fractional
+delta against the baseline. A metric regresses when it moves in the bad
+direction by more than the threshold (default --max-regress, overridable
+per metric with repeated --metric NAME=FRAC).
+
+Exit codes: 0 all metrics within thresholds, 1 at least one regression,
+2 usage / unreadable artifact. New or vanished rows are reported but are
+not failures (lane sweeps legitimately change between PRs).
+"""
+
+import argparse
+import json
+import sys
+
+# Keys that identify a row within an artifact (whichever subset is present).
+ID_KEYS = ("bench", "mode", "lanes", "budget", "prefill_budget", "batch", "config", "name")
+
+HIGHER_BETTER = {
+    "tokens_per_sec", "batch_occupancy", "accept_rate", "block_efficiency",
+    "mean_accept_depth", "requests_per_sec",
+}
+LOWER_BETTER = {
+    "dispatches_per_block", "dispatches_per_step", "wall_seconds",
+    "ttft_p50", "ttft_p90", "ttft_p99", "itl_p50", "itl_p90",
+    "latency_p50", "latency_p90", "latency_p99",
+    "trace_ns_per_site_disabled", "trace_overhead_worst_frac",
+    "telemetry_ns_per_site_disabled", "telemetry_overhead_worst_frac",
+}
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"bench_compare: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+
+
+def row_id(row):
+    return tuple((k, row[k]) for k in ID_KEYS if k in row)
+
+
+def fmt_id(rid):
+    return " ".join(f"{k}={v}" for k, v in rid) or "(top-level)"
+
+
+def numeric_metrics(obj):
+    out = {}
+    for k, v in obj.items():
+        if isinstance(v, bool) or not isinstance(v, (int, float)):
+            continue
+        if k in HIGHER_BETTER or k in LOWER_BETTER:
+            out[k] = float(v)
+    return out
+
+
+def compare_metrics(rid, base, cand, threshold_for, results):
+    bm, cm = numeric_metrics(base), numeric_metrics(cand)
+    for name in sorted(bm.keys() & cm.keys()):
+        b, c = bm[name], cm[name]
+        if abs(b) < 1e-12:
+            continue  # no meaningful baseline to regress against
+        frac = (c - b) / abs(b)
+        thr = threshold_for(name)
+        if name in HIGHER_BETTER:
+            bad = frac < -thr
+        else:
+            bad = frac > thr
+        results.append({
+            "row": fmt_id(rid), "metric": name, "base": b, "cand": c,
+            "delta_frac": frac, "threshold": thr,
+            "status": "REGRESSION" if bad else "ok",
+        })
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline")
+    ap.add_argument("candidate")
+    ap.add_argument("--max-regress", type=float, default=0.10,
+                    help="default allowed bad-direction fractional move (0.10 = 10%%)")
+    ap.add_argument("--metric", action="append", default=[], metavar="NAME=FRAC",
+                    help="per-metric threshold override, repeatable")
+    ap.add_argument("--report", default="", help="also write a markdown report here")
+    args = ap.parse_args()
+
+    overrides = {}
+    for spec in args.metric:
+        name, _, frac = spec.partition("=")
+        if not frac:
+            ap.error(f"--metric wants NAME=FRAC, got {spec!r}")
+        overrides[name] = float(frac)
+
+    def threshold_for(name):
+        return overrides.get(name, args.max_regress)
+
+    base, cand = load(args.baseline), load(args.candidate)
+    results, notes = [], []
+
+    # Top-level scalars (overhead gates etc.) compare like a row of their own.
+    compare_metrics((), base, cand, threshold_for, results)
+
+    base_rows = {row_id(r): r for r in base.get("rows", []) if isinstance(r, dict)}
+    cand_rows = {row_id(r): r for r in cand.get("rows", []) if isinstance(r, dict)}
+    for rid in sorted(base_rows.keys() | cand_rows.keys()):
+        if rid not in cand_rows:
+            notes.append(f"row vanished from candidate: {fmt_id(rid)}")
+        elif rid not in base_rows:
+            notes.append(f"new row (no baseline): {fmt_id(rid)}")
+        else:
+            compare_metrics(rid, base_rows[rid], cand_rows[rid], threshold_for, results)
+
+    regressions = [r for r in results if r["status"] == "REGRESSION"]
+
+    lines = [
+        f"# bench compare: {args.candidate} vs baseline {args.baseline}",
+        "",
+        f"{len(results)} metric comparisons, {len(regressions)} regression(s), "
+        f"default threshold {args.max_regress:.0%}",
+        "",
+        "| row | metric | baseline | candidate | delta | status |",
+        "|---|---|---:|---:|---:|---|",
+    ]
+    for r in sorted(results, key=lambda r: (r["status"] != "REGRESSION", r["row"], r["metric"])):
+        lines.append(
+            f"| {r['row']} | {r['metric']} | {r['base']:.4g} | {r['cand']:.4g} "
+            f"| {r['delta_frac']:+.1%} | {r['status']} |"
+        )
+    for n in notes:
+        lines.append(f"\n- note: {n}")
+    report = "\n".join(lines) + "\n"
+
+    if args.report:
+        with open(args.report, "w") as f:
+            f.write(report)
+    print(report, end="")
+
+    if regressions:
+        print(f"bench_compare: {len(regressions)} regression(s) beyond threshold", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -41,23 +41,28 @@ else
     echo "no batched artifact bundle; skipping (export with: cd python && python -m compile.aot)"
 fi
 
-echo "== tracing suites =="
+echo "== tracing + telemetry suites =="
 # Flight-recorder contract: ring wraparound, Chrome-trace export shape,
 # request timelines, access-log lines (artifact-free), plus the python
-# validator for the exported JSON. With an artifact bundle present, also
-# produce a real replay trace and validate it end to end.
+# validators for the exported trace and telemetry snapshot-ring JSON.
+# With an artifact bundle present, also produce a real replay trace and
+# stats dump and validate both end to end.
 cargo test -q --test trace_integration
 if command -v python3 >/dev/null 2>&1 && python3 -c "import pytest" 2>/dev/null; then
     if [[ -f artifacts/manifest.json ]]; then
         cargo run --release --quiet -- replay --artifacts artifacts \
-            --requests 4 --max-new 8 --trace-out trace.json
+            --requests 4 --max-new 8 --trace-out trace.json \
+            --telemetry-window 0.05 --stats-out stats.json
         (cd python && SPECD_TRACE_JSON="$PWD/../trace.json" \
-            python3 -m pytest tests/test_trace_export.py tests/test_specd_lint.py -q)
+            SPECD_STATS_JSON="$PWD/../stats.json" \
+            python3 -m pytest tests/test_trace_export.py tests/test_stats_stream.py \
+                tests/test_specd_lint.py -q)
     else
-        (cd python && python3 -m pytest tests/test_trace_export.py tests/test_specd_lint.py -q)
+        (cd python && python3 -m pytest tests/test_trace_export.py \
+            tests/test_stats_stream.py tests/test_specd_lint.py -q)
     fi
 else
-    echo "pytest unavailable; skipping python trace-export/lint validation"
+    echo "pytest unavailable; skipping python trace-export/stats/lint validation"
 fi
 
 echo "== cargo clippy (deny warnings) =="
