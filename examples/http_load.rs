@@ -39,6 +39,31 @@ struct Outcome {
     /// Client-observed time to first streamed chunk (stream mode only).
     ttft: Option<f64>,
     tokens: usize,
+    /// Backpressure retries burned before this outcome (429/503 with the
+    /// server's `Retry-After` hint honored).
+    retries: usize,
+}
+
+/// Give up on a request after this many backpressure retries; the final
+/// 429/503 is then reported as the request's outcome.
+const RETRY_CAP: usize = 5;
+
+/// One request with well-behaved backpressure handling: on 429/503 sleep
+/// for the server's `Retry-After` hint scaled by uniform jitter in
+/// [0.5, 1.0] (so a burst of rejected clients spreads out instead of
+/// stampeding back in lockstep when the hint expires), then re-fire.
+fn fire_with_retry(addr: &str, body: &str, stream: bool, jrng: &mut Pcg64) -> Option<Outcome> {
+    let mut retries = 0usize;
+    loop {
+        let (out, retry_after) = fire(addr, body, stream)?;
+        if !matches!(out.code, 429 | 503) || retries >= RETRY_CAP {
+            return Some(Outcome { retries, ..out });
+        }
+        retries += 1;
+        let hint = retry_after.unwrap_or(1.0).clamp(0.05, 60.0);
+        let wait = hint * (0.5 + 0.5 * jrng.next_f64());
+        std::thread::sleep(Duration::from_secs_f64(wait));
+    }
 }
 
 fn main() -> specd::Result<()> {
@@ -152,9 +177,13 @@ fn main() -> specd::Result<()> {
     let outcomes: Arc<Mutex<Vec<Outcome>>> = Arc::new(Mutex::new(Vec::with_capacity(n)));
     let t0 = Instant::now();
     let mut workers = Vec::new();
-    for _ in 0..args.usize("clients")?.max(1) {
+    let seed = args.u64("seed")?;
+    for widx in 0..args.usize("clients")?.max(1) {
         let (addr, bodies, schedule, cursor, outcomes) =
             (addr.clone(), bodies.clone(), schedule.clone(), cursor.clone(), outcomes.clone());
+        // Per-worker jitter stream for backoff so retrying clients
+        // desynchronize even when rejected at the same instant.
+        let mut jrng = Pcg64::with_stream(seed, 0xbac0 + widx as u64);
         workers.push(std::thread::spawn(move || loop {
             let i = cursor.fetch_add(1, Ordering::SeqCst);
             if i >= schedule.len() {
@@ -163,12 +192,8 @@ fn main() -> specd::Result<()> {
             if let Some(wait) = schedule[i].checked_sub(t0.elapsed()) {
                 std::thread::sleep(wait);
             }
-            let out = fire(&addr, &bodies[i % bodies.len()], stream).unwrap_or(Outcome {
-                code: 0,
-                latency: 0.0,
-                ttft: None,
-                tokens: 0,
-            });
+            let out = fire_with_retry(&addr, &bodies[i % bodies.len()], stream, &mut jrng)
+                .unwrap_or(Outcome { code: 0, latency: 0.0, ttft: None, tokens: 0, retries: 0 });
             outcomes.lock().unwrap().push(out);
         }));
     }
@@ -187,6 +212,14 @@ fn main() -> specd::Result<()> {
     let ok: Vec<&Outcome> = outcomes.iter().filter(|o| o.code == 200).collect();
     let total_tokens: usize = ok.iter().map(|o| o.tokens).sum();
     println!("status: [{}]  wall={wall:.2}s", codes.join(" "));
+    let total_retries: usize = outcomes.iter().map(|o| o.retries).sum();
+    if total_retries > 0 {
+        let retried = outcomes.iter().filter(|o| o.retries > 0).count();
+        println!(
+            "backpressure: {total_retries} retries across {retried} requests \
+             (Retry-After honored with jitter, cap {RETRY_CAP})"
+        );
+    }
     println!(
         "throughput: {:.1} tok/s, {:.2} ok-req/s",
         total_tokens as f64 / wall,
@@ -303,7 +336,9 @@ fn scrape_metrics(addr: &str) -> Option<String> {
 }
 
 /// One request on a fresh connection; returns None on transport failure.
-fn fire(addr: &str, body: &str, stream: bool) -> Option<Outcome> {
+/// The second element is the server's `Retry-After` hint in seconds, when
+/// the response carried one.
+fn fire(addr: &str, body: &str, stream: bool) -> Option<(Outcome, Option<f64>)> {
     let start = Instant::now();
     let mut conn = TcpStream::connect(addr).ok()?;
     conn.set_nodelay(true).ok();
@@ -320,6 +355,7 @@ fn fire(addr: &str, body: &str, stream: bool) -> Option<Outcome> {
 
     let mut rd = BufReader::new(conn);
     let head = http::read_response_head(&mut rd).ok()?;
+    let retry_after = head.header("retry-after").and_then(|v| v.trim().parse::<f64>().ok());
     if head.chunked() {
         // Streamed: count tokens per event, timestamp the first chunk.
         let mut ttft = None;
@@ -337,7 +373,14 @@ fn fire(addr: &str, body: &str, stream: bool) -> Option<Outcome> {
                 }
             }
         }
-        Some(Outcome { code: head.code, latency: start.elapsed().as_secs_f64(), ttft, tokens })
+        let out = Outcome {
+            code: head.code,
+            latency: start.elapsed().as_secs_f64(),
+            ttft,
+            tokens,
+            retries: 0,
+        };
+        Some((out, retry_after))
     } else {
         let mut head = head;
         http::read_body(&mut rd, &mut head).ok()?;
@@ -345,6 +388,13 @@ fn fire(addr: &str, body: &str, stream: bool) -> Option<Outcome> {
             .ok()
             .and_then(|v| v.get("tokens").as_arr().map(|a| a.len()))
             .unwrap_or(0);
-        Some(Outcome { code: head.code, latency: start.elapsed().as_secs_f64(), ttft: None, tokens })
+        let out = Outcome {
+            code: head.code,
+            latency: start.elapsed().as_secs_f64(),
+            ttft: None,
+            tokens,
+            retries: 0,
+        };
+        Some((out, retry_after))
     }
 }

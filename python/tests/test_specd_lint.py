@@ -20,6 +20,7 @@ from tools.specd_lint.config import Config
 from tools.specd_lint.model import parse_rust
 from tools.specd_lint.rules import (
     Repo,
+    rule_fault_site,
     rule_hot_path_alloc,
     rule_lock_order,
     rule_metrics_doc,
@@ -257,6 +258,60 @@ class TestMetricsDoc:
         )
         v = rule_metrics_doc(repo)
         assert any("specd_imaginary_total" in x.message for x in v)
+
+
+# ---------------------------------------------------------------------------
+# fault-site
+# ---------------------------------------------------------------------------
+
+
+class TestFaultSite:
+    def test_unmarked_inject_flagged(self):
+        repo = repo_of(
+            {"runtime.rs": "fn f() {\n    crate::faults::inject(Site::RunLanes)?;\n}\n"}
+        )
+        v = rule_fault_site(repo)
+        assert len(v) == 1 and "without a" in v[0].message
+
+    def test_marked_inject_ok(self):
+        repo = repo_of(
+            {
+                "runtime.rs": "fn f() {\n"
+                "    // lint: fault-site(dispatch-run-lanes)\n"
+                "    crate::faults::inject(Site::RunLanes)?;\n"
+                "}\n"
+            }
+        )
+        assert rule_fault_site(repo) == []
+
+    def test_duplicate_id_flagged(self):
+        repo = repo_of(
+            {
+                "runtime.rs": "fn f() {\n"
+                "    // lint: fault-site(dup)\n"
+                "    crate::faults::inject(Site::RunLanes)?;\n"
+                "}\n",
+                "exec.rs": "fn g() {\n"
+                "    // lint: fault-site(dup)\n"
+                "    crate::faults::inject(Site::ExecSend)?;\n"
+                "}\n",
+            }
+        )
+        v = rule_fault_site(repo)
+        assert len(v) == 1 and "unique repo-wide" in v[0].message
+
+    def test_stale_marker_flagged(self):
+        repo = repo_of(
+            {"runtime.rs": "fn f() {\n    // lint: fault-site(gone)\n    other();\n}\n"}
+        )
+        v = rule_fault_site(repo)
+        assert len(v) == 1 and "stale" in v[0].message
+
+    def test_faults_module_itself_exempt(self):
+        repo = repo_of(
+            {"faults.rs": "pub fn inject(s: Site) { faults::inject(s); }\n"}
+        )
+        assert rule_fault_site(repo) == []
 
 
 # ---------------------------------------------------------------------------

@@ -33,6 +33,7 @@ class Config:
             "datagen.rs",
             "trace.rs",
             "telemetry.rs",
+            "faults.rs",
         ]
     )
     panic_patterns: List[Tuple[str, str]] = field(
@@ -82,7 +83,7 @@ class Config:
     # counters, telemetry.rs the specd_health_* speculation-health
     # family).  Everything else only *references* them.
     metrics_def_files: List[str] = field(
-        default_factory=lambda: ["metrics.rs", "server.rs", "telemetry.rs"]
+        default_factory=lambda: ["metrics.rs", "server.rs", "telemetry.rs", "faults.rs"]
     )
     metrics_doc_files: List[str] = field(
         default_factory=lambda: ["docs/METRICS.md", "README.md"]
@@ -93,6 +94,14 @@ class Config:
     metrics_ignore: List[str] = field(
         default_factory=lambda: ["specd_bench_json_test", "specd_lint"]
     )
+
+    # ---- fault-site -------------------------------------------------------
+    # Every call of this pattern in non-test code is a deterministic fault
+    # injection point and must carry a `// lint: fault-site(<id>)` marker
+    # (same line or the line above); ids are unique repo-wide and stale
+    # markers (no call underneath) are violations.  The marker inventory is
+    # the operator-facing catalogue of what `--fault-plan` can hit.
+    fault_inject_pattern: str = r"(?:crate::|specd::)?faults::inject\s*\("
 
     # ---- trace-pairing ----------------------------------------------------
     trace_begin: str = r"(?:crate::|specd::)?trace::begin\s*\(\s*\)"

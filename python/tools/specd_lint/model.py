@@ -26,7 +26,8 @@ from dataclasses import dataclass, field
 from typing import List, Optional, Tuple
 
 _LINT_RE = re.compile(
-    r"//\s*lint:\s*(allow\(\s*([a-z0-9-]+)\s*,\s*([^)]*)\)|hot-path|end-hot-path)"
+    r"//\s*lint:\s*(allow\(\s*([a-z0-9-]+)\s*,\s*([^)]*)\)|hot-path|end-hot-path"
+    r"|fault-site\(\s*([a-z0-9_:-]+)\s*\))"
 )
 _FN_RE = re.compile(r"(?:^|[^\w])fn\s+(\w+)\s*[(<]")
 _CFG_TEST_RE = re.compile(r"#\s*\[\s*cfg\s*\(\s*test\s*\)\s*\]")
@@ -37,9 +38,9 @@ _TEST_ATTR_RE = re.compile(r"#\s*\[\s*test\s*\]")
 class Directive:
     """One ``// lint:`` marker."""
 
-    kind: str  # "allow" | "hot-path" | "end-hot-path"
+    kind: str  # "allow" | "hot-path" | "end-hot-path" | "fault-site"
     line: int  # 1-based
-    rule: str = ""  # for allow
+    rule: str = ""  # for allow; the site id for fault-site
     reason: str = ""  # for allow
 
 
@@ -290,6 +291,10 @@ def _collect_directives(rf: RustFile) -> None:
                     rule=m.group(2),
                     reason=m.group(3).strip(),
                 )
+            )
+        elif m.group(1).startswith("fault-site"):
+            rf.directives.append(
+                Directive(kind="fault-site", line=lineno, rule=m.group(4))
             )
         elif m.group(1) == "hot-path":
             if open_hot is None:

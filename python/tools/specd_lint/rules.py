@@ -1,4 +1,4 @@
-"""The six rule families specd-lint enforces over ``rust/src``.
+"""The seven rule families specd-lint enforces over ``rust/src``.
 
 Every rule is a pure function ``(repo: Repo) -> List[Violation]`` so the
 test suite can feed it single-file fixtures.  Escapes: a
@@ -288,7 +288,73 @@ def rule_metrics_doc(repo: Repo) -> List[Violation]:
 
 
 # ---------------------------------------------------------------------------
-# Rule 5: trace-pairing -- every trace::begin() feeds a span closer
+# Rule 5: fault-site -- every faults::inject() call is marked and unique
+# ---------------------------------------------------------------------------
+
+
+def rule_fault_site(repo: Repo) -> List[Violation]:
+    out: List[Violation] = []
+    inject = re.compile(repo.cfg.fault_inject_pattern)
+    seen_ids: Dict[str, Tuple[str, int]] = {}  # id -> (path, line)
+    for rf in repo.files:
+        if rf.name == "faults.rs":
+            continue  # the machinery itself, not an injection point
+        markers = {d.line: d for d in rf.directives if d.kind == "fault-site"}
+        call_lines = set()
+        for lineno, text in rf.code_lines():
+            if not inject.search(text):
+                continue
+            call_lines.add(lineno)
+            d = markers.get(lineno) or markers.get(lineno - 1)
+            if d is None:
+                if _check_allow(rf, "fault-site", lineno, out):
+                    continue
+                out.append(
+                    Violation(
+                        "fault-site",
+                        rf.path,
+                        lineno,
+                        "faults::inject() call without a "
+                        "`// lint: fault-site(<id>)` marker: every injection "
+                        "point must be named so --fault-plan coverage is "
+                        "auditable",
+                    )
+                )
+                continue
+            prev = seen_ids.get(d.rule)
+            if prev is not None:
+                out.append(
+                    Violation(
+                        "fault-site",
+                        rf.path,
+                        d.line,
+                        f"fault-site id `{d.rule}` already used at "
+                        f"{prev[0]}:{prev[1]}: ids are unique repo-wide",
+                    )
+                )
+            else:
+                seen_ids[d.rule] = (rf.path, d.line)
+        # stale markers: a named site whose injection call went away would
+        # silently shrink --fault-plan coverage
+        for d in sorted(markers.values(), key=lambda d: d.line):
+            if d.line in call_lines or (d.line + 1) in call_lines:
+                continue
+            if _check_allow(rf, "fault-site", d.line, out):
+                continue
+            out.append(
+                Violation(
+                    "fault-site",
+                    rf.path,
+                    d.line,
+                    f"stale `// lint: fault-site({d.rule})` marker: no "
+                    "faults::inject() call on this line or the next",
+                )
+            )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Rule 6: trace-pairing -- every trace::begin() feeds a span closer
 # ---------------------------------------------------------------------------
 
 
@@ -349,7 +415,7 @@ def rule_trace_pairing(repo: Repo) -> List[Violation]:
 
 
 # ---------------------------------------------------------------------------
-# Rule 6: lock-order -- configured mutex acquisition order
+# Rule 7: lock-order -- configured mutex acquisition order
 # ---------------------------------------------------------------------------
 
 
@@ -391,6 +457,7 @@ ALL_RULES = {
     "hot-path-alloc": rule_hot_path_alloc,
     "one-terminal": rule_one_terminal,
     "metrics-doc": rule_metrics_doc,
+    "fault-site": rule_fault_site,
     "trace-pairing": rule_trace_pairing,
     "lock-order": rule_lock_order,
 }

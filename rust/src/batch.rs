@@ -67,6 +67,13 @@ pub enum LaneOutcome {
     Idle,
     /// A phase failed; the sequence must be evicted.
     Failed(Error),
+    /// A shared fused dispatch failed mid-block: the lane's device state
+    /// is no longer trusted, but its host-side sequence is intact and
+    /// its RNG has been rewound to the block start. The driver should
+    /// salvage it (release the arena lanes, re-prefill from the
+    /// sequence, resume) instead of evicting — see
+    /// [`crate::coordinator`]'s lane-salvage path.
+    Suspect(Error),
 }
 
 /// Wall-clock seconds spent in each lockstep phase of one batch step,
@@ -107,6 +114,13 @@ impl BatchStep {
         let mut blocks: Vec<Option<BlockState>> = (0..n).map(|_| None).collect();
         let mut failed: Vec<Option<Error>> = (0..n).map(|_| None).collect();
         let mut emitted: Vec<Option<Vec<u32>>> = (0..n).map(|_| None).collect();
+        let mut suspect: Vec<Option<Error>> = (0..n).map(|_| None).collect();
+        // RNG snapshots at the block start: a quarantined lane's RNG is
+        // rewound so the salvaged re-run of this block draws the same
+        // sample sequence as a fault-free run would have.
+        let rng0: Vec<Pcg64> = if fused { lanes.iter().map(|l| l.rng.clone()).collect() } else {
+            Vec::new()
+        };
         // A lane runs fused iff its session was adopted into the arenas.
         let is_fused = |lane: &Lane<'_>| fused && lane.session.lane_mode();
 
@@ -115,7 +129,7 @@ impl BatchStep {
         let tr0 = crate::trace::begin();
         if let Some(c) = ctx.as_deref_mut() {
             if let Err(e) = decoder.begin_block_batch(c, lanes, &mut blocks, &mut failed) {
-                Self::fail_fused(lanes, &mut blocks, &mut failed, &e);
+                Self::quarantine_fused(lanes, &mut blocks, &emitted, &mut suspect, &rng0, &e);
             }
         }
         for (i, lane) in lanes.iter_mut().enumerate() {
@@ -139,7 +153,7 @@ impl BatchStep {
         for _round in 0..rounds {
             if let Some(c) = ctx.as_deref_mut() {
                 if let Err(e) = decoder.propose_round_batch(c, lanes, &mut blocks, &mut failed) {
-                    Self::fail_fused(lanes, &mut blocks, &mut failed, &e);
+                    Self::quarantine_fused(lanes, &mut blocks, &emitted, &mut suspect, &rng0, &e);
                 }
             }
             for (i, lane) in lanes.iter_mut().enumerate() {
@@ -166,7 +180,7 @@ impl BatchStep {
             if let Err(e) =
                 decoder.commit_block_batch(c, lanes, &mut blocks, &mut failed, &mut emitted)
             {
-                Self::fail_fused(lanes, &mut blocks, &mut failed, &e);
+                Self::quarantine_fused(lanes, &mut blocks, &emitted, &mut suspect, &rng0, &e);
             }
         }
         for (i, lane) in lanes.iter_mut().enumerate() {
@@ -187,6 +201,8 @@ impl BatchStep {
         for (i, lane) in lanes.iter().enumerate() {
             let outcome = if let Some(e) = failed[i].take() {
                 LaneOutcome::Failed(e)
+            } else if let Some(e) = suspect[i].take() {
+                LaneOutcome::Suspect(e)
             } else if let Some(tokens) = emitted[i].take() {
                 timings.lanes += 1;
                 if is_fused(lane) {
@@ -202,20 +218,30 @@ impl BatchStep {
         (outcomes, timings)
     }
 
-    /// A shared fused dispatch failed: every adopted lane that has not
-    /// already resolved dies with it (the per-lane fallback lanes are
-    /// unaffected and keep running).
-    fn fail_fused(
-        lanes: &[Lane<'_>],
+    /// A shared fused dispatch failed: QUARANTINE every adopted lane
+    /// with a block still in flight instead of killing it (the old
+    /// `fail_fused` mass-terminal). The lane's host sequence is intact;
+    /// its RNG is rewound to the block start so the salvaged re-run
+    /// draws the same samples a fault-free run would have. Lanes that
+    /// already resolved this step (emitted/failed) and per-lane fallback
+    /// lanes are untouched.
+    fn quarantine_fused(
+        lanes: &mut [Lane<'_>],
         blocks: &mut [Option<BlockState>],
-        failed: &mut [Option<Error>],
+        emitted: &[Option<Vec<u32>>],
+        suspect: &mut [Option<Error>],
+        rng0: &[Pcg64],
         e: &Error,
     ) {
-        for (i, lane) in lanes.iter().enumerate() {
-            if lane.session.lane_mode() && failed[i].is_none() {
-                failed[i] = Some(Error::msg(format!("fused batched dispatch failed: {e}")));
-                blocks[i] = None;
+        for (i, lane) in lanes.iter_mut().enumerate() {
+            if !lane.session.lane_mode() || suspect[i].is_some() || emitted[i].is_some() {
+                continue;
             }
+            if blocks[i].take().is_none() {
+                continue;
+            }
+            *lane.rng = rng0[i].clone();
+            suspect[i] = Some(Error::msg(format!("fused batched dispatch failed: {e}")));
         }
     }
 }

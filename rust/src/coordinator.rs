@@ -86,6 +86,11 @@ use crate::spec::{PrefillWave, SpecDecoder, SpecSession};
 pub const ERR_DEADLINE: &str = "deadline exceeded";
 /// `Response::error` value for client-disconnect cancellations.
 pub const ERR_DISCONNECT: &str = "client disconnected";
+/// Lane-salvage rounds one request may consume before it is evicted —
+/// each round re-prefills the suspect sequence into fresh arena lanes,
+/// so a lane that keeps getting quarantined has a persistent fault
+/// behind it, not bad luck.
+pub const SALVAGE_CAP: u32 = 3;
 
 /// A generation request.
 #[derive(Debug, Clone)]
@@ -194,6 +199,9 @@ struct Active {
     last_emit: Option<f64>,
     /// Per-token inter-token gaps accumulated so far.
     itl: Vec<f64>,
+    /// Lane-salvage rounds this request has consumed (capped at
+    /// [`SALVAGE_CAP`]; a request quarantined beyond that is evicted).
+    salvages: u32,
 }
 
 impl Active {
@@ -567,6 +575,7 @@ impl<'a> Coordinator<'a> {
                         queue_depth: (rx.len() + pending.len()) as u64,
                         pool_live: pool.live() as u64,
                         pool_max: pool.max_slots() as u64,
+                        degraded: self.degraded(),
                         ..Default::default()
                     });
                 }
@@ -631,6 +640,7 @@ impl<'a> Coordinator<'a> {
             crate::trace::iteration(tr_it, timings.lanes as u64, timings.dispatches);
 
             let mut survivors = Vec::with_capacity(active.len());
+            let mut suspects: Vec<(Active, crate::error::Error)> = Vec::new();
             let mut iter_tokens = 0u64;
             for (i, (mut a, outcome)) in active.drain(..).zip(outcomes).enumerate() {
                 match outcome {
@@ -713,9 +723,19 @@ impl<'a> Coordinator<'a> {
                         let resp = Self::terminal_response(&a, Some(e.to_string()));
                         self.terminal(&tx, &a.events, a.session.prompt_len, resp);
                     }
+                    LaneOutcome::Suspect(e) => {
+                        // Quarantined by a fused dispatch failure: the
+                        // request is salvaged after the outcome sweep
+                        // (slot kept, arena lanes released, sequence
+                        // re-prefilled) instead of evicted.
+                        suspects.push((a, e));
+                    }
                 }
             }
             active = survivors;
+            if !suspects.is_empty() {
+                self.salvage(&mut batched, &mut pool, &tx, suspects, &mut active)?;
+            }
 
             if let Some(g) = &self.gauges {
                 g.pool_live.store(pool.live(), Ordering::Relaxed);
@@ -732,12 +752,22 @@ impl<'a> Coordinator<'a> {
                     queue_depth: (rx.len() + pending.len()) as u64,
                     pool_live: pool.live() as u64,
                     pool_max: pool.max_slots() as u64,
+                    degraded: self.degraded(),
                 });
             }
         }
         metrics.pool_peak_slots = pool.peak_live;
         metrics.wall_seconds = wall0.elapsed().as_secs_f64();
         Ok(metrics)
+    }
+
+    /// Whether the stack is serving in target-only degraded mode right
+    /// now: a draft circuit breaker is attached and not Closed.
+    fn degraded(&self) -> bool {
+        self.decoder
+            .draft
+            .breaker()
+            .is_some_and(|b| b.state() != crate::faults::BreakerState::Closed)
     }
 
     /// Return any fused-arena lanes a departing session holds (next to
@@ -750,6 +780,95 @@ impl<'a> Coordinator<'a> {
         if let Some(c) = batched.as_mut() {
             self.decoder.release(c, session);
         }
+    }
+
+    /// Lane salvage: a fused dispatch failure quarantined these requests —
+    /// device state untrusted, host sequence intact, RNG rewound to the
+    /// block start ([`crate::batch::LaneOutcome::Suspect`]). Their arena
+    /// lanes go back to the free lists (the pool slot is KEPT: the
+    /// request stays admitted), then every suspect sequence
+    /// (prompt ++ emitted tokens) is re-prefilled in ONE admission wave
+    /// and generation resumes mid-stream: streaming offsets, stats,
+    /// capture and the acceptance-depth counts all carry over, so
+    /// clients see no duplicated or lost deltas and `terminal()` still
+    /// fires exactly once per request. Each wave attempt burns one of a
+    /// request's [`SALVAGE_CAP`] tries; requests over the cap fail
+    /// terminally with the quarantine error.
+    fn salvage(
+        &self,
+        batched: &mut Option<crate::spec::BatchedCtx>,
+        pool: &mut SlotPool<u64>,
+        tx: &Sender<Response>,
+        suspects: Vec<(Active, crate::error::Error)>,
+        active: &mut Vec<Active>,
+    ) -> Result<()> {
+        let mut members: Vec<(Active, crate::error::Error)> = Vec::with_capacity(suspects.len());
+        for (mut a, e) in suspects {
+            self.release_lanes(batched, &mut a.session);
+            members.push((a, e));
+        }
+        while !members.is_empty() {
+            let mut ready: Vec<(Active, crate::error::Error)> = Vec::with_capacity(members.len());
+            for (a, e) in members {
+                if a.salvages >= SALVAGE_CAP {
+                    pool.free(a.slot)?;
+                    let resp =
+                        Self::terminal_response(&a, Some(format!("lane salvage exhausted: {e}")));
+                    self.terminal(tx, &a.events, a.session.prompt_len, resp);
+                } else {
+                    ready.push((a, e));
+                }
+            }
+            if ready.is_empty() {
+                return Ok(());
+            }
+            let Some(ctx) = batched.as_mut() else {
+                // Unreachable (suspects only arise from fused dispatch),
+                // kept defensive: without arenas there is nothing to
+                // re-prefill into.
+                for (a, e) in ready {
+                    pool.free(a.slot)?;
+                    let resp = Self::terminal_response(&a, Some(e.to_string()));
+                    self.terminal(tx, &a.events, a.session.prompt_len, resp);
+                }
+                return Ok(());
+            };
+            for (a, _) in ready.iter_mut() {
+                a.salvages += 1;
+            }
+            let seqs: Vec<Vec<u32>> = ready.iter().map(|(a, _)| a.session.seq.clone()).collect();
+            match self.decoder.admit_wave(ctx, seqs) {
+                Ok(sessions) => {
+                    for ((mut a, _), mut fresh) in ready.into_iter().zip(sessions) {
+                        // Transplant the request's bookkeeping onto the
+                        // rebuilt session; decoding resumes exactly
+                        // where the quarantined block started.
+                        fresh.prompt_len = a.session.prompt_len;
+                        fresh.trace_id = a.id;
+                        fresh.capture = a.session.capture.take();
+                        let mut stats = a.session.stats;
+                        stats.merge(&fresh.stats);
+                        fresh.stats = stats;
+                        crate::faults::add_salvaged(1);
+                        crate::trace::salvage(a.id, fresh.seq.len() as u64);
+                        a.session = fresh;
+                        active.push(a);
+                    }
+                    return Ok(());
+                }
+                Err(we) => {
+                    // admit_wave released every wave lane on failure.
+                    // Burn the try and retry the survivors with the
+                    // fresher cause (the runtime retry layer already
+                    // absorbed transient faults — this one persisted).
+                    members = ready;
+                    for (_, e) in members.iter_mut() {
+                        *e = crate::error::Error::msg(format!("salvage re-prefill failed: {we}"));
+                    }
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Allocate a pool slot for a freshly prefilled session and mirror its
@@ -806,6 +925,7 @@ impl<'a> Coordinator<'a> {
             tag_slot,
             last_emit: None,
             itl: Vec::new(),
+            salvages: 0,
         }
     }
 

@@ -361,6 +361,13 @@ pub fn run_distill_with(
                     retire(decoder, &mut batched, &mut pool, &mut lane)?;
                     return Err(e); // fail fast; resume regenerates the tail
                 }
+                LaneOutcome::Suspect(e) => {
+                    // Datagen has no salvage path: fail fast like Failed.
+                    // The resume stream regenerates the tail, so losing the
+                    // quarantined block costs nothing but a re-run.
+                    retire(decoder, &mut batched, &mut pool, &mut lane)?;
+                    return Err(e);
+                }
             }
         }
         active = survivors;
@@ -373,6 +380,8 @@ pub fn run_distill_with(
                 queue_depth: 0,
                 pool_live: pool.live() as u64,
                 pool_max: pool.max_slots() as u64,
+                // Datagen fail-fasts on draft errors instead of degrading.
+                degraded: false,
             });
         }
     }

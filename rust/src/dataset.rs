@@ -438,20 +438,26 @@ impl DatasetWriter {
 /// reject, bricking resume for the whole dataset.
 fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
     use std::io::Write;
-    let tmp = path.with_extension("tmp");
-    let mut f = std::fs::File::create(&tmp)?;
-    f.write_all(bytes)?;
-    f.sync_all()?;
-    drop(f);
-    std::fs::rename(&tmp, path)?;
-    if let Some(dir) = path.parent() {
-        // Persist the rename itself (directory entry). Directories can't
-        // be fsynced on some platforms (e.g. Windows); best effort there.
-        if let Ok(d) = std::fs::File::open(dir) {
-            let _ = d.sync_all();
+    // Retry wrapper: the tmp + rename protocol is idempotent, so a
+    // transient failure (injected or real) can simply run again.
+    crate::faults::dispatch(crate::faults::Site::IoWrite, None, || {
+        // lint: fault-site(io-write)
+        crate::faults::inject(crate::faults::Site::IoWrite)?;
+        let tmp = path.with_extension("tmp");
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+        drop(f);
+        std::fs::rename(&tmp, path)?;
+        if let Some(dir) = path.parent() {
+            // Persist the rename itself (directory entry). Directories can't
+            // be fsynced on some platforms (e.g. Windows); best effort there.
+            if let Ok(d) = std::fs::File::open(dir) {
+                let _ = d.sync_all();
+            }
         }
-    }
-    Ok(())
+        Ok(())
+    })
 }
 
 /// Reader for a dataset directory: manifest + checksum-verified shards.
@@ -465,6 +471,8 @@ pub struct DatasetReader {
 
 impl DatasetReader {
     pub fn open(dir: &Path) -> Result<DatasetReader> {
+        // lint: fault-site(io-read-manifest)
+        crate::faults::inject(crate::faults::Site::IoRead)?;
         let path = dir.join(MANIFEST_NAME);
         let text = std::fs::read_to_string(&path)
             .map_err(|e| Error::Manifest(format!("cannot read {}: {e}", path.display())))?;
@@ -509,6 +517,8 @@ impl DatasetReader {
             .get(i)
             .ok_or_else(|| Error::Manifest(format!("no shard index {i}")))?;
         let path = self.dir.join(&info.file);
+        // lint: fault-site(io-read-shard)
+        crate::faults::inject(crate::faults::Site::IoRead)?;
         let bytes = std::fs::read(&path)
             .map_err(|e| Error::Manifest(format!("cannot read {}: {e}", path.display())))?;
         if bytes.len() as u64 != info.bytes {

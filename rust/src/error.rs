@@ -15,6 +15,12 @@ pub enum Error {
     KvCache(String),
     Scheduler(String),
     Cli(String),
+    /// A thread-pool worker job panicked; the panic payload (stringified)
+    /// is delivered to the waiter instead of stranding it.
+    Worker(String),
+    /// Deterministic fault injected by an armed [`crate::faults`] plan.
+    /// `transient` drives the retry/breaker taxonomy split.
+    Fault { transient: bool, msg: String },
     Msg(String),
 }
 
@@ -32,6 +38,11 @@ impl fmt::Display for Error {
             Error::KvCache(m) => write!(f, "kv cache: {m}"),
             Error::Scheduler(m) => write!(f, "scheduler: {m}"),
             Error::Cli(m) => write!(f, "cli: {m}"),
+            Error::Worker(m) => write!(f, "worker panic: {m}"),
+            Error::Fault { transient, msg } => {
+                let kind = if *transient { "transient" } else { "permanent" };
+                write!(f, "injected fault ({kind}): {msg}")
+            }
             Error::Msg(m) => write!(f, "{m}"),
         }
     }
@@ -63,6 +74,16 @@ impl Error {
     pub fn msg(m: impl Into<String>) -> Self {
         Error::Msg(m.into())
     }
+
+    /// Transient errors are worth retrying: backend/IO hiccups and faults
+    /// injected in transient mode. Everything else (bad manifests, logic
+    /// errors, permanent faults) fails fast — retrying cannot help.
+    pub fn is_transient(&self) -> bool {
+        matches!(
+            self,
+            Error::Fault { transient: true, .. } | Error::Xla(_) | Error::Io(_)
+        )
+    }
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
@@ -85,5 +106,20 @@ mod tests {
     fn io_errors_convert() {
         let e: Error = std::io::Error::new(std::io::ErrorKind::Other, "gone").into();
         assert!(e.to_string().starts_with("io: "));
+    }
+
+    #[test]
+    fn transient_taxonomy() {
+        assert!(Error::Fault { transient: true, msg: "x".into() }.is_transient());
+        assert!(!Error::Fault { transient: false, msg: "x".into() }.is_transient());
+        let io: Error = std::io::Error::new(std::io::ErrorKind::Other, "gone").into();
+        assert!(io.is_transient());
+        assert!(!Error::Scheduler("down".into()).is_transient());
+        assert!(!Error::Worker("boom".into()).is_transient());
+        assert!(
+            Error::Fault { transient: false, msg: "disk".into() }
+                .to_string()
+                .contains("permanent")
+        );
     }
 }

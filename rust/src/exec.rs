@@ -136,6 +136,17 @@ impl<T> Drop for Receiver<T> {
 impl<T> Sender<T> {
     /// Blocking send — this is the admission backpressure.
     pub fn send(&self, item: T) -> Result<(), Closed> {
+        // lint: fault-site(exec-send)
+        if let Err(e) = crate::faults::inject(crate::faults::Site::ExecSend) {
+            if e.is_transient() {
+                // Transient intake glitch: absorbed by one backoff step —
+                // the channel is lossless, the item just goes in late.
+                crate::trace::retry(crate::faults::Site::ExecSend as u64, 1);
+                std::thread::sleep(Duration::from_millis(1));
+            } else {
+                return Err(Closed);
+            }
+        }
         let mut st = self.0.lock_state();
         loop {
             if !st.receiver_alive {
@@ -161,6 +172,17 @@ impl<T> Sender<T> {
 
     /// Non-blocking send; gives the item back when full.
     pub fn try_send(&self, item: T) -> Result<(), TrySendError<T>> {
+        // lint: fault-site(exec-try-send)
+        if let Err(e) = crate::faults::inject(crate::faults::Site::ExecSend) {
+            // Transient faults surface as backpressure (`Full`): the item
+            // comes back and the caller's retry path (429 + Retry-After)
+            // takes over. Permanent faults read as a dead receiver.
+            return Err(if e.is_transient() {
+                TrySendError::Full(item)
+            } else {
+                TrySendError::Closed(item)
+            });
+        }
         let mut st = self.0.lock_state();
         if !st.receiver_alive {
             return Err(TrySendError::Closed(item));
@@ -171,6 +193,16 @@ impl<T> Sender<T> {
         st.items.push_back(item);
         self.0.not_empty.notify_one();
         Ok(())
+    }
+
+    /// Items currently queued (the HTTP layer derives `Retry-After`
+    /// hints from this depth).
+    pub fn len(&self) -> usize {
+        self.0.lock_state().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 }
 
@@ -296,7 +328,12 @@ impl ThreadPool {
                 let rx = rx.clone();
                 spawn_worker(i, move || {
                     while let Ok(job) = rx.recv() {
-                        job();
+                        // A panicking job must not unwind the worker: the
+                        // pool would silently shrink and, once the last
+                        // worker died, every queued job (and its waiter)
+                        // would strand. Job-level delivery of the panic is
+                        // handled by `submit`/`map`; here we only contain it.
+                        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
                     }
                 })
             })
@@ -328,8 +365,13 @@ impl ThreadPool {
             let results = results.clone();
             let done = done.clone();
             self.execute(move || {
-                let r = f(item);
-                results.lock().unwrap_or_else(|p| p.into_inner())[i] = Some(r);
+                // The done counter must advance even when `f` panics, or
+                // the waiter below blocks forever on a job that will never
+                // report (the pre-catch_unwind stranded-waiter bug).
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(item)));
+                if let Ok(v) = r {
+                    results.lock().unwrap_or_else(|p| p.into_inner())[i] = Some(v);
+                }
                 let (lock, cv) = &*done;
                 *lock.lock().unwrap_or_else(|p| p.into_inner()) += 1;
                 cv.notify_one();
@@ -346,8 +388,58 @@ impl ThreadPool {
             .into_inner()
             .unwrap_or_else(|p| p.into_inner())
             .into_iter()
-            .map(|r| r.expect("job completed"))
+            .map(|r| r.expect("map job panicked (see worker stderr)"))
             .collect()
+    }
+
+    /// Submit one job and get a handle to its result. Unlike [`execute`]
+    /// (fire-and-forget) the waiter always learns the outcome: a panic in
+    /// `f` is caught and delivered as [`crate::Error::Worker`], and a job
+    /// dropped unrun (pool shutdown) reads as a lost worker instead of a
+    /// hang.
+    ///
+    /// [`execute`]: ThreadPool::execute
+    pub fn submit<R, F>(&self, f: F) -> JobHandle<R>
+    where
+        R: Send + 'static,
+        F: FnOnce() -> R + Send + 'static,
+    {
+        let (tx, rx) = bounded::<Result<R, String>>(1);
+        self.execute(move || {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f))
+                .map_err(|p| panic_message(p.as_ref()));
+            let _ = tx.send(r);
+        });
+        JobHandle { rx }
+    }
+}
+
+/// Best-effort stringification of a panic payload (`&str` and `String`
+/// payloads — the overwhelmingly common cases — survive verbatim).
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Waiter half of [`ThreadPool::submit`].
+pub struct JobHandle<R> {
+    rx: Receiver<Result<R, String>>,
+}
+
+impl<R> JobHandle<R> {
+    /// Block until the job finishes. `Err(Error::Worker)` when the job
+    /// panicked or was dropped unrun (pool shutdown / dead worker).
+    pub fn wait(self) -> crate::Result<R> {
+        match self.rx.recv() {
+            Ok(Ok(v)) => Ok(v),
+            Ok(Err(msg)) => Err(crate::Error::Worker(msg)),
+            Err(Closed) => Err(crate::Error::Worker("job lost before running".to_string())),
+        }
     }
 }
 
@@ -532,10 +624,10 @@ mod tests {
 
     #[test]
     fn pool_map_survives_panicking_job() {
-        // A panicking job unwinds (and kills) the worker that ran it, and
+        // A panicking job is contained by the worker's catch_unwind, and
         // the shared channel lock it touched on the way down must not end
-        // up poisoned for the remaining workers: a later map() over the
-        // same pool still has to complete.
+        // up poisoned for the workers: a later map() over the same pool
+        // still has to complete.
         let pool = ThreadPool::new(2, 16);
         let (tx, rx) = bounded::<()>(1);
         pool.execute(move || {
@@ -545,6 +637,53 @@ mod tests {
         assert_eq!(rx.recv(), Err(Closed));
         let out = pool.map(vec![1usize, 2, 3], |x| x + 1);
         assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn pool_submit_delivers_panic_and_stays_alive() {
+        // The stranded-waiter regression: before the catch_unwind fix a
+        // panicking job unwound its worker before any completion signal
+        // fired, so the waiter blocked forever. Now the panic is caught,
+        // delivered as Error::Worker, and the SAME pool (same workers)
+        // must keep serving subsequent jobs.
+        let pool = ThreadPool::new(1, 16); // one worker: it must survive
+        let err = pool.submit(|| panic!("boom in job")).wait();
+        match err {
+            Err(crate::Error::Worker(msg)) => {
+                assert!(msg.contains("boom in job"), "payload lost: {msg}")
+            }
+            other => panic!("expected Error::Worker, got {other:?}"),
+        }
+        assert_eq!(pool.submit(|| 21 * 2).wait().unwrap(), 42);
+        // map() after a panic on the single worker also still completes.
+        assert_eq!(pool.map(vec![1, 2], |x| x + 1), vec![2, 3]);
+    }
+
+    #[test]
+    fn pool_map_counts_panicked_jobs_as_done() {
+        // map()'s waiter must not hang when some jobs panic; the panic
+        // surfaces on the caller (via the result expect), not as a hang.
+        let pool = ThreadPool::new(2, 16);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.map(vec![0usize, 1, 2], |x| {
+                assert!(x != 1, "injected job panic");
+                x
+            })
+        }));
+        assert!(caught.is_err(), "panicked job must propagate, not hang");
+        // Pool still serves after the partial map.
+        assert_eq!(pool.submit(|| 7).wait().unwrap(), 7);
+    }
+
+    #[test]
+    fn sender_len_tracks_queue_depth() {
+        let (tx, rx) = bounded(4);
+        assert!(tx.is_empty());
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        assert_eq!(tx.len(), 2);
+        assert_eq!(rx.recv(), Ok(1));
+        assert_eq!(tx.len(), 1);
     }
 
     #[test]

@@ -1,0 +1,866 @@
+//! Fault-domain layer: deterministic fault injection, transient-error
+//! retry with bounded exponential backoff, and per-model circuit
+//! breakers.
+//!
+//! Speculative decoding is a lossless accelerator — the target verify
+//! pass is ground truth — so a draft-side failure should cost throughput,
+//! never availability or correctness. This module gives the serving stack
+//! the machinery to hold that line:
+//!
+//!   * [`FaultPlan`]: a seeded, deterministic injection plan armed from
+//!     the CLI (`--fault-plan "seed=7;dispatch:run_lanes:every=97"`).
+//!     Injection sites in the runtime dispatch paths, the exec channel,
+//!     and dataset IO call [`inject`], which is one relaxed atomic load
+//!     when no plan is armed — the same disabled-path discipline as
+//!     trace/telemetry.
+//!   * [`dispatch`]: wraps a fallible dispatch closure in a bounded
+//!     exponential-backoff retry loop. Only errors classified transient
+//!     by [`Error::is_transient`] are retried; the attempt budget and
+//!     backoff schedule are fixed so a permanently failing backend fails
+//!     fast.
+//!   * [`Breaker`]: a closed → open → half-open circuit breaker, one per
+//!     model. The engine consults the *draft* breaker to drop into
+//!     target-only (γ=0) decoding while the draft backend is unhealthy,
+//!     and probes back to speculation through the half-open state.
+//!
+//! Grammar for `--fault-plan` (rules separated by `;` or `,`):
+//!
+//! ```text
+//! seed=N                          plan-wide RNG seed (default 0)
+//! <domain>:<op>:<mode>[:burst=K][:permanent]
+//!   domain:op  dispatch:run_lanes | dispatch:run_into |
+//!              dispatch:pack_lane | exec:send | io:read | io:write
+//!   mode       every=N   fire on every Nth passage of the site
+//!              after=N   fire once at the Nth passage
+//!              p=F       fire with probability F (per-rule rng.rs stream)
+//!   burst=K    each trigger fires on K consecutive passages (default 1;
+//!              use K > the retry budget to defeat retries and trip the
+//!              breaker)
+//!   permanent  injected errors are permanent (not retried); default
+//!              transient
+//! ```
+//!
+//! All counters are process-global atomics surfaced as the
+//! `specd_faults_injected_total` / `specd_dispatch_retries_total` /
+//! `specd_lanes_salvaged_total` / `specd_breaker_state` /
+//! `specd_degraded_mode` Prometheus families via
+//! [`Resilience::prometheus_text`].
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+#[cfg(loom)]
+use loom::sync::atomic::{AtomicU64 as BreakerAtomicU64, Ordering as BreakerOrdering};
+#[cfg(not(loom))]
+use std::sync::atomic::{AtomicU64 as BreakerAtomicU64, Ordering as BreakerOrdering};
+
+use crate::error::{Error, Result};
+use crate::metrics::{prom_counter, prom_gauge};
+use crate::rng::Pcg64;
+use crate::trace;
+
+// ---- injection sites ------------------------------------------------------
+
+/// One instrumented failure point. The numeric value is the `a` field of
+/// the corresponding trace instants.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Site {
+    /// Fused batched decode dispatch (`runtime::Model::run_lanes`).
+    RunLanes = 0,
+    /// Per-lane decode/prefill dispatch (`runtime::Model::run_into`).
+    RunInto = 1,
+    /// Lane compaction dispatch (`runtime::Model::pack_lane`).
+    PackLane = 2,
+    /// Bounded-channel send in `exec` (scheduler intake path).
+    ExecSend = 3,
+    /// Dataset shard/manifest read.
+    IoRead = 4,
+    /// Dataset shard/manifest write.
+    IoWrite = 5,
+}
+
+impl Site {
+    /// `domain:op` spelling used by the plan grammar and trace export.
+    pub fn name(self) -> &'static str {
+        match self {
+            Site::RunLanes => "dispatch:run_lanes",
+            Site::RunInto => "dispatch:run_into",
+            Site::PackLane => "dispatch:pack_lane",
+            Site::ExecSend => "exec:send",
+            Site::IoRead => "io:read",
+            Site::IoWrite => "io:write",
+        }
+    }
+
+    /// Reverse of the trace `a` field encoding; `None` for out-of-range.
+    pub fn from_index(i: u64) -> Option<Site> {
+        match i {
+            0 => Some(Site::RunLanes),
+            1 => Some(Site::RunInto),
+            2 => Some(Site::PackLane),
+            3 => Some(Site::ExecSend),
+            4 => Some(Site::IoRead),
+            5 => Some(Site::IoWrite),
+            _ => None,
+        }
+    }
+
+    fn parse(domain: &str, op: &str) -> Option<Site> {
+        match (domain, op) {
+            ("dispatch", "run_lanes") => Some(Site::RunLanes),
+            ("dispatch", "run_into") => Some(Site::RunInto),
+            ("dispatch", "pack_lane") => Some(Site::PackLane),
+            ("exec", "send") => Some(Site::ExecSend),
+            ("io", "read") => Some(Site::IoRead),
+            ("io", "write") => Some(Site::IoWrite),
+            _ => None,
+        }
+    }
+}
+
+// ---- fault plan -----------------------------------------------------------
+
+#[derive(Clone, Copy, Debug)]
+enum Mode {
+    /// Fire on every Nth passage of the site.
+    Every(u64),
+    /// Fire once, at the Nth passage.
+    After(u64),
+    /// Fire with probability `p` per passage (deterministic per-rule
+    /// rng stream, so a seeded plan replays identically).
+    Prob(f64),
+}
+
+#[derive(Debug)]
+struct Rule {
+    site: Site,
+    mode: Mode,
+    /// Consecutive passages that fail per trigger (default 1).
+    burst: u32,
+    transient: bool,
+    /// Passages of `site` seen by this rule.
+    hits: u64,
+    /// Remaining forced failures from an active burst.
+    remaining: u32,
+    rng: Pcg64,
+}
+
+impl Rule {
+    /// Advance this rule past one site passage; true means inject now.
+    fn fire(&mut self) -> bool {
+        self.hits += 1;
+        if self.remaining > 0 {
+            self.remaining -= 1;
+            return true;
+        }
+        let trigger = match self.mode {
+            Mode::Every(n) => n > 0 && self.hits % n == 0,
+            Mode::After(n) => self.hits == n,
+            Mode::Prob(p) => self.rng.next_f64() < p,
+        };
+        if trigger {
+            self.remaining = self.burst.saturating_sub(1);
+        }
+        trigger
+    }
+}
+
+/// A parsed, seeded fault-injection plan. Deterministic: the same spec
+/// string replays the same fault sequence at the same site passages.
+#[derive(Debug)]
+pub struct FaultPlan {
+    rules: Vec<Rule>,
+    /// The seed the plan was parsed with (spec `seed=N`).
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    /// Parse a plan from the `--fault-plan` grammar (module docs).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut seed = 0u64;
+        let mut raw_rules: Vec<&str> = Vec::new();
+        for tok in spec.split([';', ',']).map(str::trim).filter(|t| !t.is_empty()) {
+            if let Some(v) = tok.strip_prefix("seed=") {
+                seed = v
+                    .parse()
+                    .map_err(|_| Error::Cli(format!("fault-plan: bad seed '{v}'")))?;
+            } else {
+                raw_rules.push(tok);
+            }
+        }
+        let mut rules = Vec::with_capacity(raw_rules.len());
+        for (i, tok) in raw_rules.iter().enumerate() {
+            rules.push(Self::parse_rule(tok, seed, i as u64)?);
+        }
+        if rules.is_empty() {
+            return Err(Error::Cli(format!("fault-plan: no rules in '{spec}'")));
+        }
+        Ok(FaultPlan { rules, seed })
+    }
+
+    fn parse_rule(tok: &str, seed: u64, index: u64) -> Result<Rule> {
+        let bad = |why: &str| Error::Cli(format!("fault-plan rule '{tok}': {why}"));
+        let parts: Vec<&str> = tok.split(':').collect();
+        if parts.len() < 3 {
+            return Err(bad("want domain:op:mode[:burst=K][:permanent]"));
+        }
+        let site = Site::parse(parts[0], parts[1])
+            .ok_or_else(|| bad("unknown site (see --help for the list)"))?;
+        let mode = if let Some(v) = parts[2].strip_prefix("every=") {
+            Mode::Every(v.parse().map_err(|_| bad("bad every=N"))?)
+        } else if let Some(v) = parts[2].strip_prefix("after=") {
+            Mode::After(v.parse().map_err(|_| bad("bad after=N"))?)
+        } else if let Some(v) = parts[2].strip_prefix("p=") {
+            let p: f64 = v.parse().map_err(|_| bad("bad p=F"))?;
+            if !(0.0..=1.0).contains(&p) {
+                return Err(bad("p must be in [0,1]"));
+            }
+            Mode::Prob(p)
+        } else {
+            return Err(bad("mode must be every=N, after=N or p=F"));
+        };
+        let mut burst = 1u32;
+        let mut transient = true;
+        for extra in &parts[3..] {
+            if let Some(v) = extra.strip_prefix("burst=") {
+                burst = v.parse().map_err(|_| bad("bad burst=K"))?;
+                if burst == 0 {
+                    return Err(bad("burst must be >= 1"));
+                }
+            } else if *extra == "permanent" {
+                transient = false;
+            } else {
+                return Err(bad("unknown modifier"));
+            }
+        }
+        Ok(Rule {
+            site,
+            mode,
+            burst,
+            transient,
+            hits: 0,
+            remaining: 0,
+            rng: Pcg64::with_stream(seed, 0xfa17 ^ index),
+        })
+    }
+}
+
+// ---- global plan state ----------------------------------------------------
+
+/// Fast-path flag: one relaxed load decides "no plan armed" without
+/// touching the plan mutex (trace/telemetry discipline).
+static ARMED: AtomicBool = AtomicBool::new(false);
+static PLAN: Mutex<Option<FaultPlan>> = Mutex::new(None);
+
+/// Process-global observability counters (monotonic; tests take deltas).
+static INJECTED: AtomicU64 = AtomicU64::new(0);
+static RETRIES: AtomicU64 = AtomicU64::new(0);
+static SALVAGED: AtomicU64 = AtomicU64::new(0);
+
+fn plan_lock() -> MutexGuard<'static, Option<FaultPlan>> {
+    match PLAN.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+/// Arm a plan process-wide. Replaces any previously armed plan.
+pub fn arm(plan: FaultPlan) {
+    *plan_lock() = Some(plan);
+    ARMED.store(true, Ordering::Release);
+}
+
+/// Parse `spec` and arm the resulting plan.
+pub fn arm_from_spec(spec: &str) -> Result<()> {
+    arm(FaultPlan::parse(spec)?);
+    Ok(())
+}
+
+/// Disarm injection; [`inject`] reverts to the one-load fast path.
+pub fn disarm() {
+    ARMED.store(false, Ordering::Release);
+    *plan_lock() = None;
+}
+
+/// True while a plan is armed (one relaxed load).
+#[inline]
+pub fn enabled() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// The injection probe. Call at each instrumented site, before the real
+/// operation; returns `Err(Error::Fault { .. })` when the armed plan says
+/// this passage fails. Disabled cost: one relaxed atomic load.
+#[inline]
+pub fn inject(site: Site) -> Result<()> {
+    if !enabled() {
+        return Ok(());
+    }
+    inject_slow(site)
+}
+
+#[cold]
+fn inject_slow(site: Site) -> Result<()> {
+    let mut guard = plan_lock();
+    let Some(plan) = guard.as_mut() else { return Ok(()) };
+    for rule in plan.rules.iter_mut().filter(|r| r.site == site) {
+        if rule.fire() {
+            let transient = rule.transient;
+            drop(guard);
+            INJECTED.fetch_add(1, Ordering::Relaxed);
+            trace::fault(site as u64, transient);
+            return Err(Error::Fault { transient, msg: site.name().into() });
+        }
+    }
+    Ok(())
+}
+
+/// Lifetime injected-fault count (`specd_faults_injected_total`).
+pub fn injected() -> u64 {
+    INJECTED.load(Ordering::Relaxed)
+}
+
+/// Lifetime dispatch-retry count (`specd_dispatch_retries_total`).
+pub fn retries() -> u64 {
+    RETRIES.load(Ordering::Relaxed)
+}
+
+/// Lifetime salvaged-lane count (`specd_lanes_salvaged_total`).
+pub fn salvaged() -> u64 {
+    SALVAGED.load(Ordering::Relaxed)
+}
+
+/// Record `n` lanes re-prefilled back to life after a suspect fused
+/// dispatch (called by the coordinator's salvage path).
+pub fn add_salvaged(n: u64) {
+    SALVAGED.fetch_add(n, Ordering::Relaxed);
+}
+
+// ---- retry wrapper --------------------------------------------------------
+
+/// Attempt budget for one logical dispatch (1 initial + 3 retries).
+pub const RETRY_ATTEMPTS: u32 = 4;
+/// First backoff step; doubles per retry (1ms, 2ms, 4ms).
+const RETRY_BASE: Duration = Duration::from_millis(1);
+
+/// Run `f` with bounded exponential-backoff retry on transient errors,
+/// recording the outcome of the *logical* call (not each attempt) on
+/// `breaker` when one is attached.
+///
+/// Permanent errors ([`Error::is_transient`] false) and budget exhaustion
+/// propagate to the caller after a single failure record.
+pub fn dispatch<T>(
+    site: Site,
+    breaker: Option<&Breaker>,
+    mut f: impl FnMut() -> Result<T>,
+) -> Result<T> {
+    let mut attempt = 0u32;
+    loop {
+        match f() {
+            Ok(v) => {
+                if let Some(b) = breaker {
+                    b.record_success();
+                }
+                return Ok(v);
+            }
+            Err(e) => {
+                attempt += 1;
+                if attempt >= RETRY_ATTEMPTS || !e.is_transient() {
+                    if let Some(b) = breaker {
+                        b.record_failure();
+                    }
+                    return Err(e);
+                }
+                RETRIES.fetch_add(1, Ordering::Relaxed);
+                trace::retry(site as u64, attempt as u64);
+                std::thread::sleep(RETRY_BASE * (1 << (attempt - 1)));
+            }
+        }
+    }
+}
+
+// ---- circuit breaker ------------------------------------------------------
+
+/// Breaker states; the numeric value is the `specd_breaker_state` gauge
+/// sample and the trace `b` field.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum BreakerState {
+    Closed = 0,
+    Open = 1,
+    HalfOpen = 2,
+}
+
+/// Per-model circuit breaker: `threshold` consecutive failed logical
+/// dispatches open the circuit; after `cooldown` one probe is granted
+/// (half-open); a probe success closes, a probe failure reopens.
+///
+/// Lock-free (CAS on a single state word) so [`dispatch`] can record
+/// outcomes from the scheduler hot path, and loom-aliasable so the state
+/// machine is checkable under `--cfg loom`.
+pub struct Breaker {
+    /// 0 closed / 1 open / 2 half-open.
+    state: BreakerAtomicU64,
+    /// Consecutive logical-dispatch failures while closed.
+    failures: BreakerAtomicU64,
+    /// Microseconds since `epoch` when the circuit last opened.
+    opened_at_us: BreakerAtomicU64,
+    /// Completed open → half-open → closed recovery cycles.
+    cycles: BreakerAtomicU64,
+    /// Times the circuit opened (first open and half-open reopens).
+    opens: BreakerAtomicU64,
+    threshold: u64,
+    cooldown: Duration,
+    epoch: Instant,
+    name: &'static str,
+    /// Trace `a` field (0 draft, 1 target).
+    id: u64,
+}
+
+impl Breaker {
+    pub fn new(name: &'static str, id: u64, threshold: u32, cooldown: Duration) -> Breaker {
+        Breaker {
+            state: BreakerAtomicU64::new(BreakerState::Closed as u64),
+            failures: BreakerAtomicU64::new(0),
+            opened_at_us: BreakerAtomicU64::new(0),
+            cycles: BreakerAtomicU64::new(0),
+            opens: BreakerAtomicU64::new(0),
+            threshold: threshold.max(1) as u64,
+            cooldown,
+            epoch: Instant::now(),
+            name,
+            id,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    pub fn state(&self) -> BreakerState {
+        match self.state.load(BreakerOrdering::Acquire) {
+            0 => BreakerState::Closed,
+            1 => BreakerState::Open,
+            _ => BreakerState::HalfOpen,
+        }
+    }
+
+    /// Completed open → half-open → closed recovery cycles.
+    pub fn cycles(&self) -> u64 {
+        self.cycles.load(BreakerOrdering::Relaxed)
+    }
+
+    /// Times the circuit has opened (including half-open reopens).
+    pub fn opens(&self) -> u64 {
+        self.opens.load(BreakerOrdering::Relaxed)
+    }
+
+    /// May the caller attempt a dispatch through this circuit?
+    ///
+    /// Closed: always. Open: false until `cooldown` has elapsed, then the
+    /// first caller to win the open → half-open CAS is granted the single
+    /// probe. Half-open: false (a probe is already in flight).
+    pub fn allow(&self) -> bool {
+        match self.state() {
+            BreakerState::Closed => true,
+            BreakerState::HalfOpen => false,
+            BreakerState::Open => {
+                let now_us = self.epoch.elapsed().as_micros() as u64;
+                let opened = self.opened_at_us.load(BreakerOrdering::Acquire);
+                if now_us.saturating_sub(opened) < self.cooldown.as_micros() as u64 {
+                    return false;
+                }
+                let won = self
+                    .state
+                    .compare_exchange(
+                        BreakerState::Open as u64,
+                        BreakerState::HalfOpen as u64,
+                        BreakerOrdering::AcqRel,
+                        BreakerOrdering::Acquire,
+                    )
+                    .is_ok();
+                if won {
+                    trace::breaker(self.id, BreakerState::HalfOpen as u64);
+                }
+                won
+            }
+        }
+    }
+
+    /// Record a successful logical dispatch. Closes the circuit from
+    /// half-open (completing a recovery cycle) and clears the consecutive
+    /// failure streak. A success observed while the circuit is still open
+    /// also closes it: not every caller consults [`Breaker::allow`] (the
+    /// target path dispatches unconditionally), and a completed dispatch
+    /// is direct evidence the backend is healthy again — it just does not
+    /// count as a probe-driven recovery cycle.
+    pub fn record_success(&self) {
+        if self
+            .state
+            .compare_exchange(
+                BreakerState::HalfOpen as u64,
+                BreakerState::Closed as u64,
+                BreakerOrdering::AcqRel,
+                BreakerOrdering::Acquire,
+            )
+            .is_ok()
+        {
+            self.cycles.fetch_add(1, BreakerOrdering::AcqRel);
+            trace::breaker(self.id, BreakerState::Closed as u64);
+        } else if self
+            .state
+            .compare_exchange(
+                BreakerState::Open as u64,
+                BreakerState::Closed as u64,
+                BreakerOrdering::AcqRel,
+                BreakerOrdering::Acquire,
+            )
+            .is_ok()
+        {
+            trace::breaker(self.id, BreakerState::Closed as u64);
+        }
+        self.failures.store(0, BreakerOrdering::Release);
+    }
+
+    /// Record a failed logical dispatch (post-retry). A half-open probe
+    /// failure reopens immediately; while closed, `threshold` consecutive
+    /// failures open the circuit.
+    pub fn record_failure(&self) {
+        if self
+            .state
+            .compare_exchange(
+                BreakerState::HalfOpen as u64,
+                BreakerState::Open as u64,
+                BreakerOrdering::AcqRel,
+                BreakerOrdering::Acquire,
+            )
+            .is_ok()
+        {
+            self.reopened();
+            return;
+        }
+        let streak = self.failures.fetch_add(1, BreakerOrdering::AcqRel) + 1;
+        if streak >= self.threshold
+            && self
+                .state
+                .compare_exchange(
+                    BreakerState::Closed as u64,
+                    BreakerState::Open as u64,
+                    BreakerOrdering::AcqRel,
+                    BreakerOrdering::Acquire,
+                )
+                .is_ok()
+        {
+            self.reopened();
+        }
+    }
+
+    fn reopened(&self) {
+        self.opened_at_us
+            .store(self.epoch.elapsed().as_micros() as u64, BreakerOrdering::Release);
+        self.opens.fetch_add(1, BreakerOrdering::AcqRel);
+        trace::breaker(self.id, BreakerState::Open as u64);
+    }
+}
+
+// ---- resilience bundle ----------------------------------------------------
+
+/// Default consecutive-failure threshold before a circuit opens.
+pub const DEFAULT_BREAKER_THRESHOLD: u32 = 3;
+/// Default open-circuit cooldown before a half-open probe is granted.
+pub const DEFAULT_BREAKER_COOLDOWN: Duration = Duration::from_millis(1000);
+
+/// The per-model breakers for one serving/decoding process, shared
+/// between the scheduler thread (records outcomes, consults the draft
+/// circuit for degraded mode) and the HTTP server (renders gauges).
+pub struct Resilience {
+    pub draft: Arc<Breaker>,
+    pub target: Arc<Breaker>,
+}
+
+impl Resilience {
+    pub fn new(threshold: u32, cooldown: Duration) -> Resilience {
+        Resilience {
+            draft: Arc::new(Breaker::new("draft", 0, threshold, cooldown)),
+            target: Arc::new(Breaker::new("target", 1, threshold, cooldown)),
+        }
+    }
+
+    /// True while the engine is in target-only degraded mode (draft
+    /// circuit not closed).
+    pub fn degraded(&self) -> bool {
+        self.draft.state() != BreakerState::Closed
+    }
+
+    /// Render the fault/resilience Prometheus families.
+    pub fn prometheus_text(&self) -> String {
+        let mut out = String::new();
+        prom_counter(
+            &mut out,
+            "specd_faults_injected_total",
+            "Faults injected by the armed fault plan.",
+            injected() as f64,
+        );
+        prom_counter(
+            &mut out,
+            "specd_dispatch_retries_total",
+            "Transient dispatch failures absorbed by backoff retry.",
+            retries() as f64,
+        );
+        prom_counter(
+            &mut out,
+            "specd_lanes_salvaged_total",
+            "Lanes re-prefilled back to life after a suspect fused dispatch.",
+            salvaged() as f64,
+        );
+        let fam = "specd_breaker_state";
+        out.push_str(&format!(
+            "# HELP {fam} Circuit state per model (0 closed, 1 open, 2 half-open).\n\
+             # TYPE {fam} gauge\n"
+        ));
+        for b in [&self.draft, &self.target] {
+            out.push_str(&format!("{fam}{{model=\"{}\"}} {}\n", b.name(), b.state() as u64));
+        }
+        prom_gauge(
+            &mut out,
+            "specd_degraded_mode",
+            "1 while serving target-only (draft circuit not closed).",
+            u64::from(self.degraded()) as f64,
+        );
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Plan state is process-global; tests that arm plans serialize here.
+    static PLAN_TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn with_plan<T>(spec: &str, f: impl FnOnce() -> T) -> T {
+        let _g = PLAN_TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        arm_from_spec(spec).unwrap();
+        let out = f();
+        disarm();
+        out
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultPlan::parse("").is_err());
+        assert!(FaultPlan::parse("seed=1").is_err());
+        assert!(FaultPlan::parse("dispatch:run_lanes").is_err());
+        assert!(FaultPlan::parse("dispatch:run_lanes:sometimes").is_err());
+        assert!(FaultPlan::parse("nope:run_lanes:every=2").is_err());
+        assert!(FaultPlan::parse("dispatch:run_lanes:p=1.5").is_err());
+        assert!(FaultPlan::parse("dispatch:run_lanes:every=2:burst=0").is_err());
+        assert!(FaultPlan::parse("dispatch:run_lanes:every=2:wat").is_err());
+    }
+
+    #[test]
+    fn parse_accepts_full_grammar() {
+        let p = FaultPlan::parse(
+            "seed=9; dispatch:run_lanes:every=97, exec:send:after=500;\
+             io:read:p=0.25:burst=2:permanent",
+        )
+        .unwrap();
+        assert_eq!(p.seed, 9);
+        assert_eq!(p.rules.len(), 3);
+        assert_eq!(p.rules[2].burst, 2);
+        assert!(!p.rules[2].transient);
+    }
+
+    #[test]
+    fn every_mode_fires_deterministically() {
+        with_plan("dispatch:run_lanes:every=3", || {
+            let fired: Vec<bool> =
+                (0..9).map(|_| inject(Site::RunLanes).is_err()).collect();
+            assert_eq!(
+                fired,
+                [false, false, true, false, false, true, false, false, true]
+            );
+            // Other sites unaffected.
+            assert!(inject(Site::RunInto).is_ok());
+        });
+    }
+
+    #[test]
+    fn after_mode_fires_once_with_burst() {
+        with_plan("exec:send:after=2:burst=3", || {
+            let fired: Vec<bool> =
+                (0..7).map(|_| inject(Site::ExecSend).is_err()).collect();
+            assert_eq!(fired, [false, true, true, true, false, false, false]);
+        });
+    }
+
+    #[test]
+    fn prob_mode_is_seed_deterministic() {
+        let run = || {
+            with_plan("seed=42;io:write:p=0.5", || {
+                (0..32).map(|_| inject(Site::IoWrite).is_err()).collect::<Vec<_>>()
+            })
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a, b);
+        assert!(a.iter().any(|&f| f), "p=0.5 over 32 draws should fire");
+        assert!(!a.iter().all(|&f| f));
+    }
+
+    #[test]
+    fn permanent_modifier_reaches_error() {
+        with_plan("io:read:after=1:permanent", || {
+            let e = inject(Site::IoRead).unwrap_err();
+            assert!(!e.is_transient());
+        });
+    }
+
+    #[test]
+    fn disarmed_is_silent() {
+        let _g = PLAN_TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        disarm();
+        assert!(!enabled());
+        for _ in 0..100 {
+            assert!(inject(Site::RunLanes).is_ok());
+        }
+    }
+
+    #[test]
+    fn dispatch_retries_transient_then_succeeds() {
+        let mut calls = 0;
+        let out = dispatch(Site::RunLanes, None, || {
+            calls += 1;
+            if calls < 3 {
+                Err(Error::Fault { transient: true, msg: "flaky".into() })
+            } else {
+                Ok(7)
+            }
+        });
+        assert_eq!(out.unwrap(), 7);
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn dispatch_fails_fast_on_permanent() {
+        let mut calls = 0;
+        let out: Result<()> = dispatch(Site::RunInto, None, || {
+            calls += 1;
+            Err(Error::Fault { transient: false, msg: "dead".into() })
+        });
+        assert!(out.is_err());
+        assert_eq!(calls, 1);
+    }
+
+    #[test]
+    fn dispatch_exhausts_budget() {
+        let mut calls = 0;
+        let out: Result<()> = dispatch(Site::RunLanes, None, || {
+            calls += 1;
+            Err(Error::Fault { transient: true, msg: "flaky".into() })
+        });
+        assert!(out.is_err());
+        assert_eq!(calls, RETRY_ATTEMPTS);
+    }
+
+    #[test]
+    fn breaker_full_cycle() {
+        let b = Breaker::new("draft", 0, 2, Duration::from_millis(5));
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.allow());
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Closed);
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.opens(), 1);
+        assert!(!b.allow(), "cooldown not elapsed");
+        std::thread::sleep(Duration::from_millis(8));
+        assert!(b.allow(), "first caller after cooldown gets the probe");
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert!(!b.allow(), "probe already in flight");
+        b.record_success();
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_eq!(b.cycles(), 1);
+    }
+
+    #[test]
+    fn breaker_probe_failure_reopens() {
+        let b = Breaker::new("draft", 0, 1, Duration::from_millis(2));
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        std::thread::sleep(Duration::from_millis(4));
+        assert!(b.allow());
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.opens(), 2);
+        assert_eq!(b.cycles(), 0);
+    }
+
+    #[test]
+    fn breaker_ungated_success_closes_open_circuit() {
+        let b = Breaker::new("target", 1, 1, Duration::from_millis(50));
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        // The target path never consults allow(); a dispatch that
+        // completed while the circuit was open proves the backend is
+        // healthy. The close is not a probe-driven recovery cycle.
+        b.record_success();
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_eq!(b.cycles(), 0);
+    }
+
+    #[test]
+    fn breaker_success_resets_streak() {
+        let b = Breaker::new("target", 1, 2, Duration::from_millis(50));
+        b.record_failure();
+        b.record_success();
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Closed, "streak reset by success");
+    }
+
+    #[test]
+    fn dispatch_records_on_breaker() {
+        let b = Breaker::new("draft", 0, 1, Duration::from_millis(50));
+        let _: Result<()> = dispatch(Site::RunLanes, Some(&b), || {
+            Err(Error::Fault { transient: false, msg: "dead".into() })
+        });
+        assert_eq!(b.state(), BreakerState::Open);
+    }
+
+    #[test]
+    fn resilience_renders_all_families() {
+        let r = Resilience::new(3, Duration::from_millis(100));
+        let text = r.prometheus_text();
+        for fam in [
+            "specd_faults_injected_total",
+            "specd_dispatch_retries_total",
+            "specd_lanes_salvaged_total",
+            "specd_breaker_state",
+            "specd_degraded_mode",
+        ] {
+            assert!(text.contains(&format!("# TYPE {fam}")), "missing {fam}");
+        }
+        assert!(text.contains("specd_breaker_state{model=\"draft\"} 0"));
+        assert!(text.contains("specd_breaker_state{model=\"target\"} 0"));
+        assert!(text.contains("specd_degraded_mode 0"));
+        r.draft.record_failure();
+        r.draft.record_failure();
+        r.draft.record_failure();
+        assert!(r.degraded());
+        assert!(r.prometheus_text().contains("specd_degraded_mode 1"));
+    }
+
+    #[test]
+    fn site_roundtrip() {
+        for s in [
+            Site::RunLanes,
+            Site::RunInto,
+            Site::PackLane,
+            Site::ExecSend,
+            Site::IoRead,
+            Site::IoWrite,
+        ] {
+            assert_eq!(Site::from_index(s as u64), Some(s));
+        }
+        assert_eq!(Site::from_index(99), None);
+    }
+}

@@ -29,6 +29,7 @@
 //! | [`http`] | HTTP/1.1 wire layer: parser, chunked/streaming writers |
 //! | [`server`] | TCP front end (L4): `/v1/generate`, `/healthz`, `/metrics` |
 //! | [`metrics`] | block efficiency, MBSU, token rate, latency histograms |
+//! | [`faults`] | fault injection, dispatch retry, per-model circuit breakers |
 //! | [`telemetry`] | windowed snapshot ring + acceptance-drift detection |
 //! | [`trace`] | flight recorder: spans, Chrome-trace export, access log |
 //! | [`workload`] | synthetic task generators (dolly/xsum/cnndm/wmt) |
@@ -51,6 +52,7 @@ pub mod dataset;
 pub mod error;
 pub mod eval;
 pub mod exec;
+pub mod faults;
 pub mod http;
 pub mod json;
 pub mod kvcache;

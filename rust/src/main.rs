@@ -93,6 +93,13 @@ fn run() -> Result<()> {
              "serve/replay/distill: write the telemetry snapshot ring as JSON to \
               this path on exit ('' = off)")
         .opt("interval-ms", "1000", "top: poll interval in milliseconds")
+        .opt("fault-plan", "",
+             "serve/replay/distill: deterministic fault-injection plan, e.g. \
+              'seed=7;dispatch:run_lanes:every=97;exec:send:p=0.01' ('' = off)")
+        .opt("breaker-threshold", "3",
+             "serve/replay: consecutive dispatch failures that open a model's circuit breaker")
+        .opt("breaker-cooldown-ms", "1000",
+             "serve/replay: open-breaker cooldown before a half-open probe is allowed")
         .flag("baseline", "generate: use autoregressive decoding instead")
         .flag("log-requests",
               "serve/replay: one structured JSON access-log line per request terminal on stderr")
@@ -166,6 +173,43 @@ fn export_trace(trace_out: &str) -> Result<()> {
         println!("trace: {trace_out} (chrome://tracing or https://ui.perfetto.dev)");
     }
     Ok(())
+}
+
+/// Arm the deterministic fault injector when `--fault-plan` was given.
+/// Parse errors surface before any model loads; an empty spec leaves the
+/// process-wide injector disabled (one relaxed load per potential site).
+fn arm_faults(args: &specd::cli::Parsed) -> Result<()> {
+    let spec = args.str("fault-plan");
+    if !spec.is_empty() {
+        specd::faults::arm_from_spec(spec)?;
+        eprintln!("[specd] fault plan armed: {spec}");
+    }
+    Ok(())
+}
+
+/// Build the per-model circuit breakers + fault counters for the serving
+/// paths from the `--breaker-*` knobs.
+fn make_resilience(args: &specd::cli::Parsed) -> Result<Arc<specd::faults::Resilience>> {
+    Ok(Arc::new(specd::faults::Resilience::new(
+        args.usize("breaker-threshold")? as u32,
+        std::time::Duration::from_millis(args.u64("breaker-cooldown-ms")?),
+    )))
+}
+
+/// One-line operator summary of the fault-domain counters after a run
+/// (only printed when something actually fired, so fault-free runs keep
+/// their familiar report).
+fn report_faults(resilience: &specd::faults::Resilience) {
+    let (injected, retries, salvaged) =
+        (specd::faults::injected(), specd::faults::retries(), specd::faults::salvaged());
+    let cycles = resilience.draft.cycles() + resilience.target.cycles();
+    let opens = resilience.draft.opens() + resilience.target.opens();
+    if injected + retries + salvaged + opens > 0 {
+        println!(
+            "faults: {injected} injected, {retries} dispatch retries, {salvaged} lanes \
+             salvaged, breaker opens {opens} (recovery cycles {cycles})"
+        );
+    }
 }
 
 /// Build the shared speculation-health telemetry handle from the
@@ -254,6 +298,8 @@ fn generate(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
 /// comes back over its own delta channel.
 fn serve_http(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
     let trace_out = arm_trace(args);
+    arm_faults(args)?;
+    let resilience = make_resilience(args)?;
     let log_requests = args.flag("log-requests");
     let tokenizer = Arc::new(Tokenizer::load(&manifest.vocab_path())?);
     let run_cfg = RunConfig {
@@ -287,11 +333,17 @@ fn serve_http(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
     let sched_cfg = run_cfg.clone();
     let sched_gauges = gauges.clone();
     let sched_telemetry = telemetry.clone();
+    let sched_resilience = resilience.clone();
     let scheduler = std::thread::Builder::new()
         .name("specd-scheduler".to_string())
         .spawn(move || -> Result<ServeMetrics> {
             let manifest = Manifest::load(&sched_cfg.artifacts_dir)?;
-            let l = load(&manifest, &sched_cfg.draft_model, &sched_cfg.target_model)?;
+            let mut l = load(&manifest, &sched_cfg.draft_model, &sched_cfg.target_model)?;
+            // Per-model circuit breakers: every logical dispatch records
+            // on them, and an open draft breaker flips the engine into
+            // degraded target-only decoding instead of failing requests.
+            l.draft.set_breaker(sched_resilience.draft.clone());
+            l.target.set_breaker(sched_resilience.target.clone());
             let decoder = SpecDecoder::new(&l.draft, &l.target, sched_cfg.gamma)?;
             let coord = Coordinator::new(decoder, sched_cfg.clone())?
                 .with_gauges(sched_gauges)
@@ -312,6 +364,7 @@ fn serve_http(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
         scheduler_gauges: Some(gauges),
         telemetry: Some(telemetry.clone()),
         debug_endpoints: args.flag("debug-endpoints"),
+        resilience: Some(resilience.clone()),
         ..ServerConfig::default()
     };
     let debug_endpoints = srv_cfg.debug_endpoints;
@@ -336,6 +389,7 @@ fn serve_http(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
     let _ = drainer.join();
     let metrics = result?;
     println!("{}", metrics.report());
+    report_faults(&resilience);
     export_trace(&trace_out)?;
     export_stats(&telemetry, args)?;
     Ok(())
@@ -345,7 +399,11 @@ fn serve_http(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
 /// harness; still the cleanest way to benchmark the coordinator alone).
 fn replay(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
     let trace_out = arm_trace(args);
-    let l = load(manifest, args.str("draft"), args.str("target"))?;
+    arm_faults(args)?;
+    let resilience = make_resilience(args)?;
+    let mut l = load(manifest, args.str("draft"), args.str("target"))?;
+    l.draft.set_breaker(resilience.draft.clone());
+    l.target.set_breaker(resilience.target.clone());
     let run_cfg = RunConfig {
         artifacts_dir: args.str("artifacts").to_string(),
         draft_model: args.str("draft").to_string(),
@@ -411,6 +469,7 @@ fn replay(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
     if errors > 0 {
         println!("errors: {errors}");
     }
+    report_faults(&resilience);
     export_trace(&trace_out)?;
     export_stats(&telemetry, args)?;
     Ok(())
@@ -424,6 +483,9 @@ fn replay(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
 /// complete shard without duplicating records.
 fn distill(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
     let trace_out = arm_trace(args);
+    // Distill gets the injector (its IO sites exercise shard-write
+    // retries) but no breakers: throughput mode fail-fasts and resumes.
+    arm_faults(args)?;
     let l = load(manifest, args.str("draft"), args.str("target"))?;
     let decoder = SpecDecoder::new(&l.draft, &l.target, args.usize("gamma")?)?;
     let temperatures = args
@@ -591,6 +653,9 @@ fn render_top(addr: &str, stats: &specd::json::Value) {
             ""
         },
     );
+    if health.get("degraded").as_bool().unwrap_or(false) {
+        println!("  DEGRADED    target-only decoding (draft circuit open; block efficiency 1.0)");
+    }
     if let Some(slices) = latest.get("slices").as_arr() {
         for sl in slices {
             let drafted = f(sl, "drafted");

@@ -256,6 +256,7 @@ impl Runtime {
             tok_staging: RefCell::new(vec![0i32; max_block]),
             zero_state: vec![0f32; arch.arch.state_len],
             dispatches: Cell::new(0),
+            breaker: None,
         })
     }
 }
@@ -349,6 +350,12 @@ pub struct Model {
     /// batched, extract and pack alike) — the scheduler's dispatch-count
     /// metric reads deltas of this.
     dispatches: Cell<u64>,
+    /// Circuit breaker recording the outcome of every logical dispatch
+    /// through this model (post-retry). `None` (the default) keeps the
+    /// historical fail-hard behavior; serving attaches one per model so
+    /// the engine can degrade to target-only decoding when the draft
+    /// backend is unhealthy.
+    breaker: Option<Arc<crate::faults::Breaker>>,
 }
 
 /// Device-resident per-sequence state: either a privately owned buffer
@@ -568,6 +575,18 @@ impl Model {
         self.dispatches.set(self.dispatches.get() + 1);
     }
 
+    /// Attach a circuit breaker; every logical dispatch through this
+    /// model records success/failure on it from here on.
+    pub fn set_breaker(&mut self, breaker: Arc<crate::faults::Breaker>) {
+        self.breaker = Some(breaker);
+    }
+
+    /// The attached breaker, if any (the engine consults the draft
+    /// model's breaker to decide degraded target-only decoding).
+    pub fn breaker(&self) -> Option<&crate::faults::Breaker> {
+        self.breaker.as_deref()
+    }
+
     /// Batch size of this arch's batched entry points (`None` on bundles
     /// without them — the caller serves per-lane).
     pub fn batch_size(&self) -> Option<usize> {
@@ -628,21 +647,28 @@ impl Model {
             return Err(Error::KvCache(format!("pack into dead arena lane {lane}")));
         }
         let client = &self.arch.rt.client;
-        let tr0 = crate::trace::begin();
-        let lane_buf = client.buffer_from_host_buffer::<i32>(&[lane as i32], &[], None)?;
-        let mut out = bx.pack.execute_b(&[&arena.states, &buf, &lane_buf])?;
-        self.count_dispatch();
-        crate::trace::dispatch(
-            tr0,
-            crate::trace::DispatchKind::Pack,
-            1,
-            (self.arch.arch.state_len * 4) as u64,
-        );
-        let new_states = out
-            .get_mut(0)
-            .and_then(|r| (!r.is_empty()).then(|| r.remove(0)))
-            .ok_or_else(|| Error::msg("pack returned no output"))?;
-        arena.states = new_states;
+        // Retry-safe: `arena.states` is only replaced after a successful
+        // execute, so a failed attempt leaves the arena untouched.
+        crate::faults::dispatch(crate::faults::Site::PackLane, self.breaker.as_deref(), || {
+            // lint: fault-site(dispatch-pack-lane)
+            crate::faults::inject(crate::faults::Site::PackLane)?;
+            let tr0 = crate::trace::begin();
+            let lane_buf = client.buffer_from_host_buffer::<i32>(&[lane as i32], &[], None)?;
+            let mut out = bx.pack.execute_b(&[&arena.states, &buf, &lane_buf])?;
+            self.count_dispatch();
+            crate::trace::dispatch(
+                tr0,
+                crate::trace::DispatchKind::Pack,
+                1,
+                (self.arch.arch.state_len * 4) as u64,
+            );
+            let new_states = out
+                .get_mut(0)
+                .and_then(|r| (!r.is_empty()).then(|| r.remove(0)))
+                .ok_or_else(|| Error::msg("pack returned no output"))?;
+            arena.states = new_states;
+            Ok(())
+        })?;
         Ok(SeqState::Lane(lane))
     }
 
@@ -668,70 +694,81 @@ impl Model {
         let block = self.arch.block(entry);
         let (b, sl, kvn) = (bx.batch, self.arch.arch.state_len, self.arch.arch.kv_len);
         // lint: hot-path
-        let tr0 = crate::trace::begin();
         arena.staging.stage(calls, block, self.arch.arch.max_seq, &arena.ledger)?;
         let client = &self.arch.rt.client;
-        let tok_buf = client.buffer_from_host_buffer::<i32>(
-            &arena.staging.tok[..b * block],
-            &[b, block],
-            None,
-        )?;
-        let pos_buf = client.buffer_from_host_buffer::<i32>(&arena.staging.pos, &[b], None)?;
-        let mask_buf = client.buffer_from_host_buffer::<i32>(&arena.staging.mask, &[b], None)?;
-
-        // lint: allow(hot-path-alloc, arg vec borrows per-dispatch device buffers and cannot outlive them)
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.weight_bufs.len() + 4);
-        args.extend(self.weight_bufs.iter());
-        args.push(&arena.states);
-        args.push(&tok_buf);
-        args.push(&pos_buf);
-        args.push(&mask_buf);
-
-        let mut out = bx.exe(entry).execute_b(&args)?;
-        self.count_dispatch();
-        // Staged host->device bytes: [B, block] i32 tokens + [B] pos + [B] mask.
-        crate::trace::dispatch(
-            tr0,
-            crate::trace::DispatchKind::from_entry(entry.name()),
-            1,
-            (4 * (b * block + 2 * b)) as u64,
-        );
-        let new_states = out
-            .get_mut(0)
-            .and_then(|r| (!r.is_empty()).then(|| r.remove(0)))
-            .ok_or_else(|| Error::msg("batched executable returned no output"))?;
-
-        // Readback: one download covers every called lane. Same extract
-        // heuristic as the single-lane path — the extra dispatch only pays
-        // off when the avoided copy is large.
-        let use_extract = sl > EXTRACT_THRESHOLD_ELEMS;
-        if let Some(extract) = bx.extract.as_ref().filter(|_| use_extract) {
+        // Retry-safe: staging is filled once above and `arena.states` is
+        // only replaced after a fully successful attempt, so a transient
+        // failure anywhere in the closure leaves the arena resumable.
+        crate::faults::dispatch(crate::faults::Site::RunLanes, self.breaker.as_deref(), || {
+            // lint: fault-site(dispatch-run-lanes)
+            crate::faults::inject(crate::faults::Site::RunLanes)?;
             let tr0 = crate::trace::begin();
-            let mut out = extract.execute_b(&[&new_states])?;
+            let tok_buf = client.buffer_from_host_buffer::<i32>(
+                &arena.staging.tok[..b * block],
+                &[b, block],
+                None,
+            )?;
+            let pos_buf =
+                client.buffer_from_host_buffer::<i32>(&arena.staging.pos, &[b], None)?;
+            let mask_buf =
+                client.buffer_from_host_buffer::<i32>(&arena.staging.mask, &[b], None)?;
+
+            // lint: allow(hot-path-alloc, arg vec borrows per-dispatch device buffers and cannot outlive them)
+            let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.weight_bufs.len() + 4);
+            args.extend(self.weight_bufs.iter());
+            args.push(&arena.states);
+            args.push(&tok_buf);
+            args.push(&pos_buf);
+            args.push(&mask_buf);
+
+            let mut out = bx.exe(entry).execute_b(&args)?;
             self.count_dispatch();
-            // Read-back bytes: [B, state_len - kv_len] f32 logits regions.
+            // Staged host->device bytes: [B, block] i32 tokens + [B] pos + [B] mask.
             crate::trace::dispatch(
                 tr0,
-                crate::trace::DispatchKind::Extract,
+                crate::trace::DispatchKind::from_entry(entry.name()),
                 1,
-                (4 * b * (sl - kvn)) as u64,
+                (4 * (b * block + 2 * b)) as u64,
             );
-            let lbuf = out
+            drop(args);
+            let new_states = out
                 .get_mut(0)
                 .and_then(|r| (!r.is_empty()).then(|| r.remove(0)))
-                .ok_or_else(|| Error::msg("batched extract returned no output"))?;
-            let lit = lbuf.to_literal_sync()?;
-            let stride = sl - kvn;
-            arena.stride = stride;
-            arena.logits_off = 0;
-            lit.copy_raw_to::<f32>(&mut arena.scratch[..b * stride])?;
-        } else {
-            let lit = new_states.to_literal_sync()?;
-            arena.stride = sl;
-            arena.logits_off = kvn;
-            lit.copy_raw_to::<f32>(&mut arena.scratch[..b * sl])?;
-        }
-        arena.states = new_states;
+                .ok_or_else(|| Error::msg("batched executable returned no output"))?;
+
+            // Readback: one download covers every called lane. Same extract
+            // heuristic as the single-lane path — the extra dispatch only pays
+            // off when the avoided copy is large.
+            let use_extract = sl > EXTRACT_THRESHOLD_ELEMS;
+            if let Some(extract) = bx.extract.as_ref().filter(|_| use_extract) {
+                let tr0 = crate::trace::begin();
+                let mut out = extract.execute_b(&[&new_states])?;
+                self.count_dispatch();
+                // Read-back bytes: [B, state_len - kv_len] f32 logits regions.
+                crate::trace::dispatch(
+                    tr0,
+                    crate::trace::DispatchKind::Extract,
+                    1,
+                    (4 * b * (sl - kvn)) as u64,
+                );
+                let lbuf = out
+                    .get_mut(0)
+                    .and_then(|r| (!r.is_empty()).then(|| r.remove(0)))
+                    .ok_or_else(|| Error::msg("batched extract returned no output"))?;
+                let lit = lbuf.to_literal_sync()?;
+                let stride = sl - kvn;
+                arena.stride = stride;
+                arena.logits_off = 0;
+                lit.copy_raw_to::<f32>(&mut arena.scratch[..b * stride])?;
+            } else {
+                let lit = new_states.to_literal_sync()?;
+                arena.stride = sl;
+                arena.logits_off = kvn;
+                lit.copy_raw_to::<f32>(&mut arena.scratch[..b * sl])?;
+            }
+            arena.states = new_states;
+            Ok(())
+        })?;
         // lint: end-hot-path
         Ok(())
     }
@@ -790,36 +827,48 @@ impl Model {
             )));
         }
         let client = &self.arch.rt.client;
-        let tr0 = crate::trace::begin();
-        let tok_buf = {
-            let mut staging = self.tok_staging.borrow_mut();
-            staging[..block].fill(0);
-            for (i, &t) in tokens.iter().enumerate() {
-                staging[i] = t as i32;
-            }
-            client.buffer_from_host_buffer::<i32>(&staging[..block], &[block], None)?
-        };
-        let pos_buf = client.buffer_from_host_buffer::<i32>(&[pos as i32], &[], None)?;
+        // Retry-safe: `state_buf` stays bound across attempts (device
+        // buffers are read-only inputs), so a transient failure retries
+        // against the exact same pre-dispatch state.
+        let buf = crate::faults::dispatch(
+            crate::faults::Site::RunInto,
+            self.breaker.as_deref(),
+            || {
+                // lint: fault-site(dispatch-run-into)
+                crate::faults::inject(crate::faults::Site::RunInto)?;
+                let tr0 = crate::trace::begin();
+                let tok_buf = {
+                    let mut staging = self.tok_staging.borrow_mut();
+                    staging[..block].fill(0);
+                    for (i, &t) in tokens.iter().enumerate() {
+                        staging[i] = t as i32;
+                    }
+                    client.buffer_from_host_buffer::<i32>(&staging[..block], &[block], None)?
+                };
+                let pos_buf = client.buffer_from_host_buffer::<i32>(&[pos as i32], &[], None)?;
 
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.weight_bufs.len() + 3);
-        args.extend(self.weight_bufs.iter());
-        args.push(&state_buf);
-        args.push(&tok_buf);
-        args.push(&pos_buf);
+                let mut args: Vec<&xla::PjRtBuffer> =
+                    Vec::with_capacity(self.weight_bufs.len() + 3);
+                args.extend(self.weight_bufs.iter());
+                args.push(&state_buf);
+                args.push(&tok_buf);
+                args.push(&pos_buf);
 
-        let mut exec_out = self.arch.exe(entry).execute_b(&args)?;
-        self.count_dispatch();
-        // Staged host->device bytes: [block] i32 tokens + the pos scalar.
-        crate::trace::dispatch(
-            tr0,
-            crate::trace::DispatchKind::from_entry(entry.name()),
-            1,
-            (4 * (block + 1)) as u64,
-        );
-        let buf = exec_out
-            .get_mut(0)
-            .and_then(|r| (!r.is_empty()).then(|| r.remove(0)))
-            .ok_or_else(|| Error::msg("executable returned no output"))?;
+                let mut exec_out = self.arch.exe(entry).execute_b(&args)?;
+                self.count_dispatch();
+                // Staged host->device bytes: [block] i32 tokens + the pos scalar.
+                crate::trace::dispatch(
+                    tr0,
+                    crate::trace::DispatchKind::from_entry(entry.name()),
+                    1,
+                    (4 * (block + 1)) as u64,
+                );
+                exec_out
+                    .get_mut(0)
+                    .and_then(|r| (!r.is_empty()).then(|| r.remove(0)))
+                    .ok_or_else(|| Error::msg("executable returned no output"))
+            },
+        )?;
 
         // Read the logits region. The returned device buffer itself is kept
         // and threaded into the next call. Fast path: a 2-op on-device

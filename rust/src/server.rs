@@ -93,6 +93,12 @@ pub struct ServerConfig {
     /// `GET /debug/stats` (+ SSE) and appends the `specd_health_*`
     /// families to `GET /metrics` when present.
     pub telemetry: Option<Arc<crate::telemetry::Telemetry>>,
+    /// Fault-domain resilience state (per-model circuit breakers, fault
+    /// and salvage counters), shared with the scheduler thread; appends
+    /// the `specd_breaker_state` / `specd_degraded_mode` /
+    /// `specd_faults_injected_total` / `specd_dispatch_retries_total` /
+    /// `specd_lanes_salvaged_total` families to `GET /metrics`.
+    pub resilience: Option<Arc<crate::faults::Resilience>>,
 }
 
 impl Default for ServerConfig {
@@ -109,6 +115,7 @@ impl Default for ServerConfig {
             scheduler_gauges: None,
             debug_endpoints: false,
             telemetry: None,
+            resilience: None,
         }
     }
 }
@@ -374,6 +381,9 @@ fn route(
             if let Some(t) = &inner.cfg.telemetry {
                 text.push_str(&t.prometheus_text());
             }
+            if let Some(r) = &inner.cfg.resilience {
+                text.push_str(&r.prometheus_text());
+            }
             respond(&inner.state, w, 200, "text/plain; version=0.0.4", text.as_bytes(), keep, &[])
         }
         ("POST", "/v1/generate") => generate(req, keep, w, inner, req_tx),
@@ -545,17 +555,19 @@ fn generate(
     match req_tx.try_send(request) {
         Ok(()) => {}
         Err(TrySendError::Full(_)) => {
+            let ra = retry_after_secs(inner).to_string();
             return respond_with(
                 &inner.state, w, 429, keep,
                 ObjWriter::new()
                     .str("error", "server busy: admission queue full")
                     .str("request_id", &rid)
                     .finish(),
-                &[("retry-after", "1"), ("x-request-id", &rid)],
+                &[("retry-after", &ra), ("x-request-id", &rid)],
             );
         }
         Err(TrySendError::Closed(_)) => {
-            return respond_error_rid(&inner.state, w, 503, keep, "scheduler offline", &rid);
+            return respond_error_retry(&inner.state, w, 503, keep, "scheduler offline", &rid,
+                                       DRAIN_RETRY_AFTER_SECS);
         }
     }
 
@@ -617,8 +629,9 @@ fn unary_response(
                     if inner.shutdown.load(Ordering::SeqCst) {
                         drain_waited += ADMIT_TICK;
                         if drain_waited >= inner.cfg.scheduler_wait {
-                            return respond_error_rid(&inner.state, w, 503, false,
-                                                     "server shutting down", rid);
+                            return respond_error_retry(&inner.state, w, 503, false,
+                                                       "server shutting down", rid,
+                                                       DRAIN_RETRY_AFTER_SECS);
                         }
                     }
                     continue;
@@ -859,6 +872,48 @@ fn respond_with(
 
 fn respond_error(state: &ServerState, w: &mut impl Write, code: u16, keep: bool, msg: &str) -> bool {
     respond_with(state, w, code, keep, ObjWriter::new().str("error", msg).finish(), &[])
+}
+
+/// Ceiling on the queue-depth-derived `Retry-After` hint: even a deeply
+/// backlogged server should not push clients out more than half a minute.
+const MAX_RETRY_AFTER_SECS: u64 = 30;
+
+/// `Retry-After` hint while the server is draining or the scheduler is
+/// offline: long enough to land after a restart, short enough that a
+/// supervisor-managed replacement picks the retry up promptly.
+const DRAIN_RETRY_AFTER_SECS: u64 = 5;
+
+/// `Retry-After` (seconds) for backpressure rejections, derived from the
+/// live admission-queue depth and drain state: an empty queue clears
+/// within an iteration or two (1 s floor); a deep queue scales the hint
+/// so well-behaved clients spread their retries instead of stampeding
+/// the instant the first 429 expires.
+fn retry_after_secs(inner: &Inner) -> u64 {
+    if inner.shutdown.load(Ordering::SeqCst) {
+        return DRAIN_RETRY_AFTER_SECS;
+    }
+    let depth = inner
+        .cfg
+        .scheduler_gauges
+        .as_ref()
+        .map_or(0, |g| g.queue_depth.load(Ordering::Relaxed));
+    (1 + depth as u64 / 8).min(MAX_RETRY_AFTER_SECS)
+}
+
+/// Retryable-error response (429/503): the request ID plus a
+/// `Retry-After` hint, so clients back off instead of hammering.
+fn respond_error_retry(
+    state: &ServerState,
+    w: &mut impl Write,
+    code: u16,
+    keep: bool,
+    msg: &str,
+    rid: &str,
+    retry_after: u64,
+) -> bool {
+    let ra = retry_after.to_string();
+    let body = ObjWriter::new().str("error", msg).str("request_id", rid).finish();
+    respond_with(state, w, code, keep, body, &[("x-request-id", rid), ("retry-after", &ra)])
 }
 
 /// Error response that carries the request ID in both the `x-request-id`

@@ -60,12 +60,27 @@
 //! blocks for resident lanes (Sarathi-style chunked prefill: the
 //! TTFT-vs-ITL trade-off becomes an explicit knob).
 //!
+//! ## Degraded target-only decoding
+//!
+//! When the draft model carries a circuit breaker
+//! ([`crate::runtime::Model::set_breaker`]) and the circuit is open, the
+//! engine keeps serving with γ = 0 blocks: no draft work, one exact
+//! target sample per block ([`sampling::verify_block`] with an empty
+//! draft set degenerates to plain sampling from q_0, so the output
+//! distribution is unchanged — only the block efficiency drops to 1.0).
+//! A half-open circuit grants one block a probe; on success the draft
+//! cache catches up one verify-block of backlog per block (bounded
+//! per-block dispatch cost) with γ = 0 blocks covering the gap, then
+//! speculation resumes. Without a breaker, draft failures propagate
+//! exactly as before.
+//!
 //! The engine is single-sequence; the [`crate::coordinator`] interleaves
 //! many sessions over it (iteration-level scheduling).
 
 use crate::batch::Lane;
 use crate::config::SamplingConfig;
 use crate::error::{Error, Result};
+use crate::faults::BreakerState;
 use crate::kvcache::SeqCache;
 use crate::metrics::SpecStats;
 use crate::rng::Pcg64;
@@ -119,6 +134,13 @@ pub struct BlockState {
 }
 
 impl BlockState {
+    /// A γ = 0 target-only block: no draft work, one exact target
+    /// sample. Used while the draft circuit is open or the draft cache
+    /// is still catching up after a degraded stretch.
+    fn degraded() -> BlockState {
+        BlockState { gamma: 0, basis: Vec::new(), drafted: Vec::new(), draft_probs: Vec::new() }
+    }
+
     /// The per-block (possibly shrunken) draft length.
     pub fn gamma(&self) -> usize {
         self.gamma
@@ -611,18 +633,23 @@ impl<'a> SpecDecoder<'a> {
         self.finish_wave(ctx, wave)
     }
 
-    /// Feed the draft everything it hasn't processed and return its last
-    /// logits row (the proposal-0 basis). At most one model call; zero
-    /// right after prefill, when the stored prefill row is the basis.
-    fn sync_draft(&self, s: &mut SpecSession) -> Result<Vec<f32>> {
+    /// Feed the draft up to one verify-block of tokens it hasn't
+    /// processed (at most one model call; zero right after prefill, when
+    /// the stored prefill row is the basis) and report whether it
+    /// reached the sequence tip. In normal operation the draft is at
+    /// most 1-2 tokens behind and one chunk always reaches the tip;
+    /// after a degraded (target-only) stretch the backlog can exceed the
+    /// verify block, and the caller keeps the block at γ = 0 until
+    /// catch-up completes so per-block dispatch cost stays bounded.
+    fn sync_draft_chunk(&self, s: &mut SpecSession) -> Result<bool> {
         let l = s.seq.len();
         let d_len = s.d_cache.len();
         if d_len == l {
-            return Ok(s.d_last_logits.clone());
+            return Ok(true);
         }
-        let pending = &s.seq[d_len..l];
         let vb = self.draft.arch.block(Entry::Verify);
-        debug_assert!(pending.len() <= vb, "draft pending {} > verify block {vb}", pending.len());
+        let end = l.min(d_len + vb);
+        let pending = &s.seq[d_len..end];
         let entry = if pending.len() == 1 { Entry::Decode } else { Entry::Verify };
         let state = s.d_cache.take_state()?;
         let mut buf = std::mem::take(&mut s.d_logits_buf);
@@ -635,7 +662,22 @@ impl<'a> SpecDecoder<'a> {
         s.d_last_logits.clear();
         s.d_last_logits.extend_from_slice(&buf[off..off + v]);
         s.d_logits_buf = buf;
-        Ok(s.d_last_logits.clone())
+        Ok(end == l)
+    }
+
+    /// Rebuild a session's draft cache after its device state was lost
+    /// to a failed dispatch (per-lane `run_into` consumes the state):
+    /// re-prefill the whole sequence into a fresh state. Only reached
+    /// with a draft breaker attached — without one the original failure
+    /// already evicted the session.
+    fn rebuild_draft_state(&self, s: &mut SpecSession) -> Result<()> {
+        let (state, logits) = self.draft.prefill_prompt(&s.seq)?;
+        let mut d_cache = SeqCache::new(state, self.draft.max_seq());
+        d_cache.advance(s.seq.len())?;
+        s.d_cache = d_cache;
+        s.d_last_logits = logits;
+        s.stats.draft_calls += s.seq.len().div_ceil(self.draft.arch.block(Entry::Prefill));
+        Ok(())
     }
 
     /// This session's per-block draft length right now (0 = at capacity).
@@ -655,7 +697,9 @@ impl<'a> SpecDecoder<'a> {
     /// Phase 1 — draft sync. Picks the per-block draft length (shrunk near
     /// the context cap) and feeds the draft everything it hasn't processed.
     /// Returns `None` — and marks the session finished — when not even a
-    /// γ_eff = 1 block fits (or the session already finished).
+    /// γ_eff = 1 block fits (or the session already finished). With a
+    /// draft circuit breaker attached, draft unavailability degrades the
+    /// block to γ = 0 (target-only) instead of failing the session.
     pub fn begin_block(&self, s: &mut SpecSession) -> Result<Option<BlockState>> {
         if s.finished {
             return Ok(None);
@@ -665,13 +709,51 @@ impl<'a> SpecDecoder<'a> {
             s.finished = true;
             return Ok(None);
         }
-        let basis = self.sync_draft(s)?;
-        Ok(Some(BlockState {
-            gamma,
-            basis,
-            drafted: Vec::with_capacity(gamma),
-            draft_probs: Vec::with_capacity(gamma),
-        }))
+        let breaker = self.draft.breaker();
+        if let Some(br) = breaker {
+            if !br.allow() {
+                return Ok(Some(BlockState::degraded()));
+            }
+            if s.d_cache.state.is_none() && self.rebuild_draft_state(s).is_err() {
+                // Re-prefill dispatch failures were recorded by the
+                // retry wrapper; un-stick a consumed probe for
+                // non-dispatch errors, then serve target-only.
+                if br.state() == BreakerState::HalfOpen {
+                    br.record_failure();
+                }
+                return Ok(Some(BlockState::degraded()));
+            }
+        }
+        match self.sync_draft_chunk(s) {
+            Ok(true) => {
+                // A granted half-open probe that needed no dispatch
+                // (draft already at the tip) resolves vacuously — the
+                // next real draft call re-tests the circuit.
+                if let Some(br) = breaker {
+                    if br.state() == BreakerState::HalfOpen {
+                        br.record_success();
+                    }
+                }
+                Ok(Some(BlockState {
+                    gamma,
+                    basis: s.d_last_logits.clone(),
+                    drafted: Vec::with_capacity(gamma),
+                    draft_probs: Vec::with_capacity(gamma),
+                }))
+            }
+            // Catch-up in progress: the draft advanced one verify-block
+            // toward the tip; this block runs target-only.
+            Ok(false) => Ok(Some(BlockState::degraded())),
+            Err(e) => {
+                let Some(br) = breaker else { return Err(e) };
+                // Dispatch failures were recorded by the retry wrapper;
+                // un-stick a consumed probe for non-dispatch errors.
+                if br.state() == BreakerState::HalfOpen {
+                    br.record_failure();
+                }
+                Ok(Some(BlockState::degraded()))
+            }
+        }
     }
 
     /// Phase 2 — one proposal round: sample draft token j from the current
@@ -724,6 +806,15 @@ impl<'a> SpecDecoder<'a> {
         let np = l - t_len;
         let mut fed: Vec<u32> = s.seq[t_len..l].to_vec();
         fed.extend_from_slice(&b.drafted);
+        if fed.is_empty() {
+            // γ = 0 degraded block with the target already at the tip
+            // (right after a prefill or a lane salvage): nothing to
+            // feed — sample straight from the stored last target row.
+            let rows = std::mem::take(&mut s.t_logits_buf);
+            let out = self.finish_block(s, b, 0, &rows, cfg, rng);
+            s.t_logits_buf = rows;
+            return out;
+        }
         debug_assert!(fed.len() <= self.target.arch.block(Entry::Verify));
         let state = s.t_cache.take_state()?;
         let mut rows = std::mem::take(&mut s.t_logits_buf);
@@ -739,6 +830,7 @@ impl<'a> SpecDecoder<'a> {
             s.t_logits_buf = rows;
             return Err(e);
         }
+        s.stats.target_calls += 1;
         let out = self.finish_block(s, b, np, &rows, cfg, rng);
         s.t_logits_buf = rows;
         out
@@ -761,7 +853,6 @@ impl<'a> SpecDecoder<'a> {
         let l = s.seq.len();
         let v = self.target.vocab_size();
         s.stats.drafted += gamma;
-        s.stats.target_calls += 1;
         s.stats.blocks += 1;
 
         // Assemble q_0..q_gamma.
@@ -783,9 +874,11 @@ impl<'a> SpecDecoder<'a> {
 
         // Valid processed positions: target saw pending + all gamma drafted,
         // but only the first k drafted survive; the draft processed only the
-        // first gamma-1 drafted tokens.
+        // first gamma-1 drafted tokens. During degraded (γ = 0) stretches
+        // the draft cache lags the sequence, so its rollback clamps to the
+        // positions it actually holds.
         s.t_cache.rollback_to(l + k)?;
-        s.d_cache.rollback_to(l + k.min(gamma.saturating_sub(1)))?;
+        s.d_cache.rollback_to(s.d_cache.len().min(l + k.min(gamma.saturating_sub(1))))?;
 
         let mut emitted: Vec<u32> = drafted[..k].to_vec();
         emitted.push(out.next_token);
@@ -836,6 +929,9 @@ impl<'a> SpecDecoder<'a> {
         failed: &mut [Option<Error>],
     ) -> Result<()> {
         let v = self.draft.vocab_size();
+        let vb = self.draft.arch.block(Entry::Verify);
+        let breaker = self.draft.breaker();
+        let draft_ok = breaker.map_or(true, |br| br.allow());
         struct Sync {
             i: usize,
             lane: usize,
@@ -853,38 +949,67 @@ impl<'a> SpecDecoder<'a> {
                 s.finished = true;
                 continue;
             }
-            blocks[i] = Some(BlockState {
-                gamma,
-                basis: Vec::new(),
-                drafted: Vec::with_capacity(gamma),
-                draft_probs: Vec::with_capacity(gamma),
-            });
+            // Draft circuit open: every lane runs a target-only block.
+            if !draft_ok {
+                blocks[i] = Some(BlockState::degraded());
+                continue;
+            }
             let d_len = s.d_cache.len();
-            if d_len < s.seq.len() {
+            // Catch-up is capped at one verify-block per iteration; a
+            // lane still behind after its chunk runs target-only.
+            let end = s.seq.len().min(d_len + vb);
+            blocks[i] = Some(if end < s.seq.len() {
+                BlockState::degraded()
+            } else {
+                BlockState {
+                    gamma,
+                    basis: Vec::new(),
+                    drafted: Vec::with_capacity(gamma),
+                    draft_probs: Vec::with_capacity(gamma),
+                }
+            });
+            if d_len < end {
                 syncs.push(Sync {
                     i,
                     // lint: allow(no-panic, lane_mode() at the loop top guarantees a draft lane)
                     lane: s.d_lane().expect("lane-mode session has a draft lane"),
-                    pending: s.seq[d_len..].to_vec(),
+                    pending: s.seq[d_len..end].to_vec(),
                     pos: d_len,
                 });
             }
         }
-        // Same entry selection as `sync_draft`: decode for one pending
-        // token, verify otherwise — one fused dispatch per entry in use.
+        // Same entry selection as the per-lane sync: decode for one
+        // pending token, verify otherwise — one fused dispatch per entry
+        // in use. `draft_down` absorbs a failed draft dispatch when a
+        // breaker is attached: the failing group and every group not yet
+        // run degrade to target-only blocks (their arena states are
+        // untouched — `run_lanes` leaves lane state intact on error — so
+        // catch-up resumes once the circuit closes).
+        let mut draft_down = false;
         for want_decode in [true, false] {
-            let calls: Vec<LaneCall<'_>> = syncs
-                .iter()
-                .filter(|c| (c.pending.len() == 1) == want_decode)
-                .map(|c| LaneCall { lane: c.lane, tokens: &c.pending, pos: c.pos })
-                .collect();
-            if calls.is_empty() {
-                continue;
+            let in_group = |c: &&Sync| (c.pending.len() == 1) == want_decode;
+            if !draft_down {
+                let calls: Vec<LaneCall<'_>> = syncs
+                    .iter()
+                    .filter(in_group)
+                    .map(|c| LaneCall { lane: c.lane, tokens: &c.pending, pos: c.pos })
+                    .collect();
+                if calls.is_empty() {
+                    continue;
+                }
+                let entry = if want_decode { Entry::Decode } else { Entry::Verify };
+                match self.draft.run_lanes(entry, &mut ctx.draft, &calls) {
+                    Ok(()) => {}
+                    Err(_) if breaker.is_some() => draft_down = true,
+                    Err(e) => return Err(e),
+                }
+                drop(calls);
             }
-            let entry = if want_decode { Entry::Decode } else { Entry::Verify };
-            self.draft.run_lanes(entry, &mut ctx.draft, &calls)?;
-            drop(calls);
-            for c in syncs.iter().filter(|c| (c.pending.len() == 1) == want_decode) {
+            for c in syncs.iter().filter(in_group) {
+                if draft_down {
+                    blocks[c.i] = Some(BlockState::degraded());
+                    continue;
+                }
                 let s = &mut *lanes[c.i].session;
                 let rows = ctx.draft.lane_logits(c.lane, c.pending.len(), v);
                 let off = (c.pending.len() - 1) * v;
@@ -895,6 +1020,13 @@ impl<'a> SpecDecoder<'a> {
                     failed[c.i] = Some(e);
                     blocks[c.i] = None;
                 }
+            }
+        }
+        // A granted half-open probe with nothing to sync resolves
+        // vacuously — the next real draft call re-tests the circuit.
+        if let Some(br) = breaker {
+            if draft_ok && syncs.is_empty() && br.state() == BreakerState::HalfOpen {
+                br.record_success();
             }
         }
         // Proposal-0 basis: the (now fresh) last draft row of every lane
@@ -959,7 +1091,24 @@ impl<'a> SpecDecoder<'a> {
             .iter()
             .map(|c| LaneCall { lane: c.lane, tokens: std::slice::from_ref(&c.tok), pos: c.pos })
             .collect();
-        self.draft.run_lanes(Entry::Decode, &mut ctx.draft, &calls)?;
+        if let Err(e) = self.draft.run_lanes(Entry::Decode, &mut ctx.draft, &calls) {
+            if self.draft.breaker().is_none() {
+                return Err(e);
+            }
+            drop(calls);
+            // Draft died mid-block (failure recorded by the retry
+            // wrapper): truncate every drafting lane's block to what it
+            // proposed so far — commit verifies the shorter block, and
+            // the breaker decides whether the next block runs degraded.
+            // Draft caches were not advanced (`run_lanes` leaves arena
+            // state intact on error), so they stay consistent.
+            for c in &decs {
+                if let Some(b) = blocks[c.i].as_mut() {
+                    b.gamma = b.drafted.len();
+                }
+            }
+            return Ok(());
+        }
         drop(calls);
         for c in &decs {
             let s = &mut *lanes[c.i].session;
@@ -998,6 +1147,7 @@ impl<'a> SpecDecoder<'a> {
             np: usize,
         }
         let mut vers: Vec<Ver> = Vec::new();
+        let mut empties: Vec<usize> = Vec::new();
         for (i, lane) in lanes.iter_mut().enumerate() {
             if !lane.session.lane_mode() || failed[i].is_some() {
                 continue;
@@ -1008,6 +1158,13 @@ impl<'a> SpecDecoder<'a> {
             let t_len = s.t_cache.len();
             let mut fed: Vec<u32> = s.seq[t_len..].to_vec();
             fed.extend_from_slice(&b.drafted);
+            if fed.is_empty() {
+                // γ = 0 degraded block with the target already at the
+                // tip (right after a prefill or a lane salvage): nothing
+                // to feed — finish from the stored last target row.
+                empties.push(i);
+                continue;
+            }
             debug_assert!(fed.len() <= self.target.arch.block(Entry::Verify));
             vers.push(Ver {
                 i,
@@ -1017,6 +1174,15 @@ impl<'a> SpecDecoder<'a> {
                 pos: t_len,
                 np: s.seq.len() - t_len,
             });
+        }
+        for &i in &empties {
+            let Lane { session, sampling, rng } = &mut lanes[i];
+            // lint: allow(no-panic, empties only holds lanes whose block was set this phase)
+            let b = blocks[i].take().expect("empty-fed lane has a block");
+            match self.finish_block(session, b, 0, &[], sampling, rng) {
+                Ok(tokens) => emitted[i] = Some(tokens),
+                Err(e) => failed[i] = Some(e),
+            }
         }
         if vers.is_empty() {
             return Ok(());
@@ -1033,7 +1199,10 @@ impl<'a> SpecDecoder<'a> {
             let b = blocks[c.i].take().expect("verified lane has a block");
             let rows = ctx.target.lane_logits(c.lane, c.fed.len(), v);
             let done = match session.t_cache.advance(c.fed.len()) {
-                Ok(()) => self.finish_block(session, b, c.np, rows, sampling, rng),
+                Ok(()) => {
+                    session.stats.target_calls += 1;
+                    self.finish_block(session, b, c.np, rows, sampling, rng)
+                }
                 Err(e) => Err(e),
             };
             match done {
@@ -1059,7 +1228,16 @@ impl<'a> SpecDecoder<'a> {
             return Ok(Vec::new());
         };
         for _ in 0..b.gamma {
-            self.propose_round(s, &mut b, cfg, rng)?;
+            if let Err(e) = self.propose_round(s, &mut b, cfg, rng) {
+                if self.draft.breaker().is_none() {
+                    return Err(e);
+                }
+                // Draft died mid-block (failure recorded by the retry
+                // wrapper): verify only what was proposed so far; the
+                // breaker decides whether the next block runs degraded.
+                b.gamma = b.drafted.len();
+                break;
+            }
         }
         self.commit_block(s, b, cfg, rng)
     }

@@ -260,6 +260,9 @@ pub struct Snapshot {
     pub queue_depth: u64,
     pub pool_live: u64,
     pub pool_max: u64,
+    /// Target-only degraded mode active at the seal (draft circuit not
+    /// closed). Orthogonal to `retune_advised`.
+    pub degraded: bool,
     // -- windowed latency quantiles (0 with no samples) ---------------------
     pub ttft_p50: f64,
     pub ttft_p90: f64,
@@ -299,6 +302,7 @@ impl Snapshot {
             .num("score", self.drift_score)
             .bool("drift_active", self.drift_active)
             .bool("retune_advised", self.retune_advised)
+            .bool("degraded", self.degraded)
             .num("drift_events", self.drift_events as f64)
             .finish();
         ObjWriter::new()
@@ -345,6 +349,11 @@ pub struct IterSample {
     pub queue_depth: u64,
     pub pool_live: u64,
     pub pool_max: u64,
+    /// Whether the serving stack is in degraded target-only mode (draft
+    /// circuit not closed) as of this iteration. Orthogonal to the
+    /// acceptance-drift `retune_advised` signal: degraded says the draft
+    /// is UNAVAILABLE, drift says it is available but mis-tuned.
+    pub degraded: bool,
 }
 
 // ---------------------------------------------------------------------------
@@ -410,6 +419,7 @@ struct Inner {
     queue_depth: u64,
     pool_live: u64,
     pool_max: u64,
+    degraded: bool,
 }
 
 /// Shared telemetry handle: the scheduler thread feeds it, the HTTP
@@ -459,6 +469,7 @@ impl Telemetry {
                 queue_depth: 0,
                 pool_live: 0,
                 pool_max: 0,
+                degraded: false,
             }),
         })
     }
@@ -573,6 +584,7 @@ impl Telemetry {
         inner.queue_depth = s.queue_depth;
         inner.pool_live = s.pool_live;
         inner.pool_max = s.pool_max;
+        inner.degraded = s.degraded;
         if now - inner.window_start >= inner.cfg.window {
             let snap = Self::seal(&mut inner, now, self.epoch_ms, self.seq.load(Ordering::Relaxed));
             self.seq.store(snap.seq, Ordering::Relaxed);
@@ -640,6 +652,7 @@ impl Telemetry {
             queue_depth: inner.queue_depth,
             pool_live: inner.pool_live,
             pool_max: inner.pool_max,
+            degraded: inner.degraded,
             ttft_p50: pctl(&mut ttft, 0.50),
             ttft_p90: pctl(&mut ttft, 0.90),
             itl_p50: pctl(&mut itl, 0.50),
@@ -703,6 +716,7 @@ impl Telemetry {
             .num("seq", self.seq() as f64)
             .bool("drift_active", inner.drift.active)
             .bool("retune_advised", inner.drift.active)
+            .bool("degraded", inner.degraded)
             .num("drift_events", inner.drift.events as f64);
         w = match inner.ring.back() {
             Some(s) => w.raw("latest", &s.to_json()),
@@ -763,7 +777,15 @@ mod tests {
     use crate::rng::Pcg64;
 
     fn iter(tokens: u64, dispatches: u64, lanes: u64) -> IterSample {
-        IterSample { tokens, dispatches, lanes, queue_depth: 2, pool_live: 3, pool_max: 4 }
+        IterSample {
+            tokens,
+            dispatches,
+            lanes,
+            queue_depth: 2,
+            pool_live: 3,
+            pool_max: 4,
+            degraded: false,
+        }
     }
 
     #[test]

@@ -165,6 +165,18 @@ pub enum Kind {
     /// Acceptance-drift detector fired; a = CUSUM score (milli-units),
     /// b = window accept-rate (milli-units).
     Drift,
+    /// Fault injected by the armed plan; a = site index
+    /// (`faults::Site`), b = 1 transient / 0 permanent.
+    Fault,
+    /// Transient dispatch failure absorbed by backoff retry; a = site
+    /// index, b = attempt number.
+    Retry,
+    /// Lane re-prefilled after a suspect fused dispatch; a = tokens
+    /// replayed (prompt + already-emitted).
+    Salvage,
+    /// Circuit-breaker transition; a = model (0 draft, 1 target),
+    /// b = new state (0 closed, 1 open, 2 half-open).
+    Breaker,
 }
 
 /// One fixed-size ring entry. `req` is 0 for scheduler-scoped events.
@@ -329,6 +341,26 @@ pub fn req_terminal(id: u64, reason: Reason, tokens_out: u64) {
 /// milli-units (×1000) so they ride the ring's integer payload slots.
 pub fn drift(score_milli: u64, accept_rate_milli: u64) {
     instant(Kind::Drift, 0, score_milli, accept_rate_milli);
+}
+
+/// A fault was injected at `site` (see `faults::Site` for the index).
+pub fn fault(site: u64, transient: bool) {
+    instant(Kind::Fault, 0, site, u64::from(transient));
+}
+
+/// A transient dispatch failure is being retried (attempt N of budget).
+pub fn retry(site: u64, attempt: u64) {
+    instant(Kind::Retry, 0, site, attempt);
+}
+
+/// A quarantined lane was re-prefilled and resumed mid-stream.
+pub fn salvage(id: u64, tokens_replayed: u64) {
+    instant(Kind::Salvage, id, tokens_replayed, 0);
+}
+
+/// A circuit breaker changed state (model 0 draft / 1 target).
+pub fn breaker(model: u64, state: u64) {
+    instant(Kind::Breaker, 0, model, state);
 }
 
 /// Remember the client-facing string ID for a request (bounded; oldest
@@ -515,8 +547,93 @@ fn event_json(ev: &Event) -> String {
                         .finish(),
                 );
         }
+        Kind::Fault => {
+            w = w
+                .num("tid", TID_SCHED as f64)
+                .str("ph", "i")
+                .str("s", "t")
+                .str("name", "fault")
+                .str("cat", "fault")
+                .num("ts", ev.ts_us as f64)
+                .raw(
+                    "args",
+                    &ObjWriter::new()
+                        .str("site", site_name(ev.a))
+                        .bool("transient", ev.b == 1)
+                        .finish(),
+                );
+        }
+        Kind::Retry => {
+            w = w
+                .num("tid", TID_SCHED as f64)
+                .str("ph", "i")
+                .str("s", "t")
+                .str("name", "retry")
+                .str("cat", "fault")
+                .num("ts", ev.ts_us as f64)
+                .raw(
+                    "args",
+                    &ObjWriter::new()
+                        .str("site", site_name(ev.a))
+                        .num("attempt", ev.b as f64)
+                        .finish(),
+                );
+        }
+        Kind::Salvage => {
+            w = w
+                .num("tid", TID_REQS as f64)
+                .str("ph", "i")
+                .str("s", "t")
+                .str("name", "salvage")
+                .str("cat", "fault")
+                .num("ts", ev.ts_us as f64)
+                .raw(
+                    "args",
+                    &ObjWriter::new()
+                        .num("req", ev.req as f64)
+                        .num("tokens_replayed", ev.a as f64)
+                        .finish(),
+                );
+        }
+        Kind::Breaker => {
+            w = w
+                .num("tid", TID_SCHED as f64)
+                .str("ph", "i")
+                .str("s", "t")
+                .str("name", "breaker")
+                .str("cat", "fault")
+                .num("ts", ev.ts_us as f64)
+                .raw(
+                    "args",
+                    &ObjWriter::new()
+                        .str("model", if ev.a == 0 { "draft" } else { "target" })
+                        .str(
+                            "state",
+                            match ev.b {
+                                0 => "closed",
+                                1 => "open",
+                                _ => "half_open",
+                            },
+                        )
+                        .finish(),
+                );
+        }
     }
     w.finish()
+}
+
+/// `faults::Site` index -> grammar spelling for trace export (kept here so
+/// the exporter has no dependency on the faults module's types).
+fn site_name(i: u64) -> &'static str {
+    match i {
+        0 => "dispatch:run_lanes",
+        1 => "dispatch:run_into",
+        2 => "dispatch:pack_lane",
+        3 => "exec:send",
+        4 => "io:read",
+        5 => "io:write",
+        _ => "unknown",
+    }
 }
 
 fn thread_meta(tid: u64, name: &str) -> String {
@@ -560,6 +677,7 @@ pub fn request_timeline_json(id: u64) -> Option<String> {
         snapshot().into_iter().filter(|e| e.req == id && matches!(
             e.kind,
             Kind::ReqQueued | Kind::ReqAdmitted | Kind::ReqBlock | Kind::ReqTerminal(_)
+                | Kind::Salvage
         )).collect();
     let rid = rid_of(id);
     if events.is_empty() && rid.is_none() {
@@ -741,6 +859,50 @@ mod tests {
         let (d0, d1) = span(d);
         assert!(i0 <= p0 && p1 <= i1, "phase not nested in iteration");
         assert!(p0 <= d0 && d1 <= p1, "dispatch not nested in phase");
+    }
+
+    #[test]
+    fn fault_instants_export_with_fault_category() {
+        let _g = guard();
+        enable(64);
+        fault(0, true);
+        retry(0, 1);
+        salvage(9, 37);
+        breaker(0, 1);
+        breaker(0, 2);
+        breaker(0, 0);
+        let text = chrome_trace_json();
+        disable();
+        let v = Value::parse(&text).expect("chrome trace must be valid JSON");
+        let evs = v.get("traceEvents").as_arr().expect("traceEvents array");
+        let find = |name: &str| {
+            evs.iter()
+                .find(|e| {
+                    e.get("name").as_str() == Some(name)
+                        && e.get("cat").as_str() == Some("fault")
+                })
+                .unwrap_or_else(|| panic!("missing fault/{name}: {text}"))
+        };
+        let f = find("fault");
+        assert_eq!(f.get("args").get("site").as_str(), Some("dispatch:run_lanes"));
+        assert_eq!(f.get("args").get("transient").as_bool(), Some(true));
+        let r = find("retry");
+        assert_eq!(r.get("args").get("attempt").as_usize(), Some(1));
+        let s = find("salvage");
+        assert_eq!(s.get("args").get("req").as_usize(), Some(9));
+        assert_eq!(s.get("args").get("tokens_replayed").as_usize(), Some(37));
+        let states: Vec<&str> = evs
+            .iter()
+            .filter(|e| e.get("name").as_str() == Some("breaker"))
+            .filter_map(|e| e.get("args").get("state").as_str())
+            .collect();
+        assert_eq!(states, ["open", "half_open", "closed"]);
+        // Salvage instants are request-scoped: they join the timeline view.
+        enable(64);
+        salvage(9, 37);
+        let tl = request_timeline_json(9).expect("salvage alone yields a timeline");
+        disable();
+        assert!(tl.contains("salvage"), "timeline missing salvage: {tl}");
     }
 
     #[test]

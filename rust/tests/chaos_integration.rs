@@ -1,0 +1,326 @@
+//! Chaos integration: seeded fault sweeps across the dispatch / exec / IO
+//! fault domains, in both transient and permanent flavors.
+//!
+//! The chaos gate this file enforces (ISSUE 9):
+//!
+//! - a transient-only plan must be invisible at the request level: no hang,
+//!   no slot/lane leak, exactly one terminal per request, and byte-identical
+//!   greedy output vs a fault-free run;
+//! - a burst plan that defeats the retry budget must be absorbed by the
+//!   resilience layer instead: failed fused dispatches salvage their lanes
+//!   (zero request-level errors) and a draft-side failure drives a full
+//!   breaker open → half-open → closed recovery cycle.
+//!
+//! Fault-plan state is process-global, so every test here serializes on
+//! [`FAULT_TEST_LOCK`] and disarms before returning. (The unit tests inside
+//! `faults.rs` hold their own lock — different binary, no interference.)
+
+mod common;
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+use specd::config::{RunConfig, SamplingConfig};
+use specd::coordinator::{Coordinator, Request, Response};
+use specd::dataset::{DatasetMeta, DatasetReader, DatasetWriter, DistillRecord};
+use specd::exec;
+use specd::faults::{self, Resilience};
+use specd::runtime::Model;
+use specd::spec::SpecDecoder;
+
+static FAULT_TEST_LOCK: Mutex<()> = Mutex::new(());
+
+/// Hold for the whole test body of anything that arms a plan.
+fn fault_guard() -> MutexGuard<'static, ()> {
+    match FAULT_TEST_LOCK.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+/// Arm `spec`, run `f`, always disarm (even on assertion panic the next
+/// guard holder re-arms its own plan, but a clean disarm keeps the
+/// fast-path flag honest for non-chaos tests in this binary).
+fn with_plan<T>(spec: &str, f: impl FnOnce() -> T) -> T {
+    faults::arm_from_spec(spec).unwrap();
+    let out = f();
+    faults::disarm();
+    out
+}
+
+// ---- serving harness ------------------------------------------------------
+
+/// Serve `prompts` greedily through a bounded-channel coordinator and
+/// return one response per request. Mirrors the coordinator_integration
+/// harness; greedy sampling makes output invariant to batching, degraded
+/// (target-only) blocks, and salvage re-prefills — any token difference
+/// vs a fault-free run is a real correctness bug, not rng drift.
+fn serve_greedy(
+    draft: &Model,
+    target: &Model,
+    prompts: &[Vec<u32>],
+    max_new: usize,
+    max_slots: usize,
+) -> Vec<Response> {
+    let cfg = RunConfig { max_slots, ..RunConfig::default() };
+    let decoder = SpecDecoder::new(draft, target, cfg.gamma).unwrap();
+    let coord = Coordinator::new(decoder, cfg).unwrap();
+    let n = prompts.len();
+    let sampling = SamplingConfig::greedy();
+    let reqs: Vec<Request> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| Request::new(i as u64, p.clone(), max_new, sampling))
+        .collect();
+    let (req_tx, req_rx) = exec::bounded::<Request>(n.max(1));
+    let (resp_tx, resp_rx) = exec::bounded::<Response>(64);
+    let feeder = std::thread::spawn(move || {
+        for r in reqs {
+            req_tx.send(r).unwrap();
+        }
+    });
+    let _metrics = coord.serve(req_rx, resp_tx).unwrap();
+    feeder.join().unwrap();
+    let mut out = Vec::new();
+    while let Some(r) = resp_rx.try_recv() {
+        out.push(r);
+    }
+    assert_eq!(out.len(), n, "exactly one terminal per admitted request");
+    out
+}
+
+fn tokens_by_id(responses: &[Response]) -> BTreeMap<u64, Vec<u32>> {
+    let map: BTreeMap<u64, Vec<u32>> =
+        responses.iter().map(|r| (r.id, r.tokens.clone())).collect();
+    assert_eq!(map.len(), responses.len(), "duplicate terminal for a request id");
+    map
+}
+
+fn assert_no_errors(responses: &[Response], ctx: &str) {
+    for r in responses {
+        assert!(r.error.is_none(), "{ctx}: request {} failed: {:?}", r.id, r.error);
+    }
+}
+
+// ---- exec + io domains (no model artifacts needed) ------------------------
+
+#[test]
+fn exec_send_transient_absorbed_permanent_reads_closed() {
+    let _g = fault_guard();
+    faults::disarm();
+
+    // Transient intake glitch: the channel is lossless, the item goes in
+    // late but it goes in.
+    let (tx, rx) = exec::bounded::<u32>(4);
+    with_plan("seed=1;exec:send:after=1", || {
+        tx.send(7).unwrap();
+    });
+    assert_eq!(rx.recv(), Ok(7));
+
+    // Permanent exec fault reads as a dead receiver.
+    let (tx2, rx2) = exec::bounded::<u32>(4);
+    with_plan("seed=1;exec:send:after=1:permanent", || {
+        assert!(tx2.send(9).is_err(), "permanent exec fault must surface");
+        // One-shot rule: the channel itself is fine afterwards.
+        tx2.send(10).unwrap();
+    });
+    assert_eq!(rx2.recv(), Ok(10));
+}
+
+fn io_meta() -> DatasetMeta {
+    DatasetMeta {
+        topk: 0,
+        seed: 7,
+        mix: vec![("dolly".into(), 1.0)],
+        temperatures: vec![0.0],
+        top_p: 0.95,
+        max_new: 8,
+        records_per_shard: 2,
+        gamma: 3,
+        draft_model: "draft".into(),
+        target_model: "target".into(),
+    }
+}
+
+fn io_rec(i: u64) -> DistillRecord {
+    DistillRecord {
+        seq_index: i,
+        task: "dolly".into(),
+        temperature: 0.0,
+        prompt: vec![1, 2, 3 + i as u32],
+        response: vec![10, 11, 12 + i as u32],
+        topk: Vec::new(),
+    }
+}
+
+#[test]
+fn io_transient_writes_retry_permanent_reads_surface() {
+    let _g = fault_guard();
+    faults::disarm();
+    let dir = std::env::temp_dir().join(format!("specd-chaos-io-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // Transient write faults are absorbed by write_atomic's retry wrapper
+    // (tmp + rename is idempotent): the dataset still lands complete.
+    let (injected0, retries0) = (faults::injected(), faults::retries());
+    let summary = with_plan("seed=3;io:write:every=3", || {
+        let mut w = DatasetWriter::open_or_create(&dir, io_meta()).unwrap();
+        for i in 0..6 {
+            w.append(io_rec(i)).unwrap();
+        }
+        w.finish().unwrap()
+    });
+    assert_eq!(summary.records_total, 6);
+    assert!(faults::injected() > injected0, "the write plan must actually fire");
+    assert!(faults::retries() > retries0, "absorbed write faults count as retries");
+
+    // The complete dataset reads back intact once faults stop.
+    let all = DatasetReader::open(&dir).unwrap().read_all().unwrap();
+    assert_eq!(all.len(), 6);
+
+    // Permanent read faults surface as errors (reads have no retry
+    // wrapper: the caller decides whether re-reading makes sense).
+    with_plan("seed=3;io:read:after=1:permanent", || {
+        assert!(DatasetReader::open(&dir).is_err(), "permanent io:read must surface");
+        // One-shot rule: the very next open succeeds.
+        assert!(DatasetReader::open(&dir).is_ok());
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- dispatch domain (model artifacts required) ---------------------------
+
+#[test]
+fn transient_fault_sweep_is_invisible() {
+    require_artifacts!();
+    let _g = fault_guard();
+    faults::disarm();
+    let f = common::Fixture::load();
+    let draft = f.default_draft();
+    let prompts: Vec<Vec<u32>> = f
+        .suite
+        .take("xsum", 3)
+        .unwrap()
+        .iter()
+        .map(|e| e.prompt.clone())
+        .collect();
+
+    let baseline = tokens_by_id(&serve_greedy(&draft, &f.target, &prompts, 16, 2));
+
+    // One plan per fault domain plus a multi-rule plan; every rule is
+    // transient with burst=1, which a single retry (or, for exec:send, a
+    // single delayed re-send) absorbs. every=N with N>=2 never fires on
+    // the immediate retry passage, so no logical dispatch can fail.
+    let plans = [
+        "seed=11;dispatch:run_lanes:every=3",
+        "seed=11;dispatch:run_into:every=5",
+        "seed=11;dispatch:pack_lane:every=7",
+        "seed=11;exec:send:every=2",
+        "seed=11;dispatch:run_lanes:every=9;dispatch:run_into:every=7;exec:send:every=5",
+    ];
+    let injected0 = faults::injected();
+    for plan in plans {
+        let out = with_plan(plan, || serve_greedy(&draft, &f.target, &prompts, 16, 2));
+        assert_no_errors(&out, plan);
+        assert_eq!(
+            tokens_by_id(&out),
+            baseline,
+            "transient-only plan '{plan}' changed greedy output"
+        );
+    }
+    assert!(
+        faults::injected() > injected0,
+        "the sweep never fired a fault — plans are not reaching the serve path"
+    );
+}
+
+#[test]
+fn burst_faults_salvage_and_breaker_cycle() {
+    require_artifacts!();
+    let _g = fault_guard();
+    faults::disarm();
+    let f = common::Fixture::load();
+
+    // Salvage semantics only exist on the fused batched path: a per-lane
+    // target failure is that request's error by design, while a fused
+    // dispatch failure quarantines and re-prefills the lanes it took down.
+    {
+        let draft = f.default_draft();
+        let probe = SpecDecoder::new(&draft, &f.target, 3).unwrap();
+        if probe.batched_ctx().unwrap().is_none() {
+            eprintln!("skipping burst_faults_salvage_and_breaker_cycle: no batched bundle");
+            return;
+        }
+    }
+
+    let prompts: Vec<Vec<u32>> = f
+        .suite
+        .take("cnndm", 2)
+        .unwrap()
+        .iter()
+        .map(|e| e.prompt.clone())
+        .collect();
+
+    let make_models = |r: &Resilience| -> (Model, Model) {
+        let mut draft = f.default_draft();
+        let mut target = f.rt.load_model(&f.manifest, &f.target_arch, "target").unwrap();
+        draft.set_breaker(r.draft.clone());
+        target.set_breaker(r.target.clone());
+        (draft, target)
+    };
+
+    // Fault-free baseline through the identical construction (breakers
+    // attached, nothing armed).
+    let baseline = {
+        let r = Resilience::new(1, Duration::ZERO);
+        let (draft, target) = make_models(&r);
+        let out = serve_greedy(&draft, &target, &prompts, 24, 2);
+        assert_no_errors(&out, "baseline");
+        assert_eq!(r.draft.opens() + r.target.opens(), 0, "baseline must be fault-free");
+        tokens_by_id(&out)
+    };
+
+    // Sweep the one-shot burst over consecutive run_lanes passages.
+    // burst=4 defeats the whole retry budget (RETRY_ATTEMPTS = 4) so
+    // exactly one logical dispatch fails per run; which phase it lands in
+    // (draft decode -> degraded + breaker cycle, fused target verify ->
+    // quarantine + salvage) depends on K, so accumulate evidence across
+    // the sweep and stop once both behaviors have been observed. K starts
+    // past the admission wave's passages (2 requests <= 2 waves <= 4
+    // passages) so admission itself never eats the burst.
+    let mut salvaged = 0u64;
+    let mut cycles = 0u64;
+    for k in 5..=40u64 {
+        let r = Resilience::new(1, Duration::ZERO);
+        let (draft, target) = make_models(&r);
+        let salvaged0 = faults::salvaged();
+        let plan = format!("seed=7;dispatch:run_lanes:after={k}:burst=4");
+        let out = with_plan(&plan, || serve_greedy(&draft, &target, &prompts, 24, 2));
+        assert_no_errors(&out, &plan);
+        assert_eq!(
+            tokens_by_id(&out),
+            baseline,
+            "burst plan '{plan}' changed greedy output"
+        );
+        salvaged += faults::salvaged() - salvaged0;
+        cycles += r.draft.cycles();
+        // A breaker that opened must not be stuck open at run end: either
+        // the half-open probe closed it (cycle) or an ungated success did.
+        for b in [&r.draft, &r.target] {
+            if b.opens() > 0 {
+                assert_ne!(
+                    b.state(),
+                    specd::faults::BreakerState::Open,
+                    "{plan}: breaker wedged open after a healthy run"
+                );
+            }
+        }
+        if salvaged >= 1 && cycles >= 1 {
+            break;
+        }
+    }
+    assert!(salvaged >= 1, "no fused failure was salvaged anywhere in the sweep");
+    assert!(cycles >= 1, "no draft breaker completed an open->half-open->closed cycle");
+}

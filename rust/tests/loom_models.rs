@@ -18,7 +18,10 @@ use loom::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use loom::sync::{Arc, Mutex};
 use loom::thread;
 
+use std::time::Duration;
+
 use specd::exec::{bounded, Closed, ThreadPool, TrySendError};
+use specd::faults::{Breaker, BreakerState};
 use specd::kvcache::SlotPool;
 
 // ---------------------------------------------------------------------------
@@ -157,6 +160,49 @@ fn slot_pool_ids_never_alias_while_live() {
         let b = t.join().unwrap();
         assert_ne!(a, b, "both slots live => distinct ids");
         assert_eq!(pool.lock().unwrap().live(), 2);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// faults::Breaker -- circuit transitions under racing dispatchers
+// ---------------------------------------------------------------------------
+
+#[test]
+fn breaker_grants_exactly_one_half_open_probe() {
+    // Two callers hit allow() on an open breaker whose cooldown has
+    // elapsed: the Open -> HalfOpen CAS admits exactly one probe, the
+    // loser backs off (degraded mode continues) under every interleaving.
+    loom::model(|| {
+        let b = Arc::new(Breaker::new("draft", 0, 1, Duration::ZERO));
+        b.record_failure(); // threshold 1: Closed -> Open, probe due at once
+        let b2 = b.clone();
+        let t = thread::spawn(move || b2.allow());
+        let here = b.allow();
+        let there = t.join().unwrap();
+        assert!(here ^ there, "exactly one racing caller may own the probe");
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+    });
+}
+
+#[test]
+fn breaker_probe_outcome_race_always_resolves() {
+    // The half-open probe's success racing another dispatcher's failure.
+    // Any interleaving must leave the circuit in a decided state — Closed
+    // (probe won, or the ungated success closed a reopened circuit) or
+    // Open (a stale failure streak conservatively re-tripped it) — never
+    // wedged in HalfOpen, never more than one completed recovery cycle.
+    loom::model(|| {
+        let b = Arc::new(Breaker::new("draft", 0, 2, Duration::ZERO));
+        b.record_failure();
+        b.record_failure(); // streak 2 >= threshold: Open
+        assert!(b.allow(), "cooldown elapsed: this caller owns the probe");
+        let b2 = b.clone();
+        let t = thread::spawn(move || b2.record_failure());
+        b.record_success();
+        t.join().unwrap();
+        assert_ne!(b.state(), BreakerState::HalfOpen, "probe must resolve");
+        assert!(b.cycles() <= 1);
+        assert!(b.opens() >= 1 && b.opens() <= 2);
     });
 }
 

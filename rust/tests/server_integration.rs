@@ -610,7 +610,15 @@ fn debug_stats_json_and_sse_share_snapshot_data() {
     tl.on_block(0, 2, 3, 3, None);
     tl.step_at(
         1.5,
-        &IterSample { tokens: 3, dispatches: 4, lanes: 1, queue_depth: 0, pool_live: 1, pool_max: 4 },
+        &IterSample {
+            tokens: 3,
+            dispatches: 4,
+            lanes: 1,
+            queue_depth: 0,
+            pool_live: 1,
+            pool_max: 4,
+            degraded: false,
+        },
     );
     let t2 = tl.clone();
     let rig = Rig::start(16, 2, Duration::from_millis(1), move |cfg| {

@@ -30,6 +30,13 @@ echo "== loom concurrency models =="
 # exhaustive interleaving checks (see the stub's docs).
 RUSTFLAGS="--cfg loom" cargo test -q --test loom_models
 
+echo "== chaos suite (seeded fault injection) =="
+# Fault-domain gate: transient plans invisible (byte-identical greedy
+# output, zero request errors), burst plans absorbed by lane salvage +
+# breaker recovery. The io/exec-domain tests run artifact-free; the
+# dispatch-domain sweeps self-skip without a model bundle.
+cargo test -q --test chaos_integration
+
 echo "== batched golden probes (artifact-gated) =="
 if compgen -G "artifacts/hlo/*/verify.b*.hlo.txt" > /dev/null; then
     # Bundle exports batched [B, T] entry points: run the fused-dispatch
