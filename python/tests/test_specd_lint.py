@@ -212,6 +212,23 @@ class TestOneTerminal:
     def test_tokens_inside_terminal_are_fine(self):
         assert rule_one_terminal(repo_of({"coordinator.rs": COORD_OK})) == []
 
+    def test_chokepoint_accepts_a_list_of_functions(self):
+        # PR 10: the supervisor's stranded-request terminal is a second
+        # legitimate chokepoint alongside Coordinator::terminal().
+        src = (
+            "fn terminal() { tx.send(Delta::Done); }\n"
+            "pub fn strand_terminal() { tx.send(Delta::Done); }\n"
+        )
+        assert rule_one_terminal(repo_of({"coordinator.rs": src})) == []
+
+    def test_empty_function_list_bans_tokens_outright(self):
+        # lifecycle.rs must never send a terminal behind the
+        # coordinator's back: its chokepoint list is empty.
+        src = "fn helper() { tx.send(x); }\n"
+        v = rule_one_terminal(repo_of({"lifecycle.rs": src}))
+        assert v and all(x.rule == "one-terminal" for x in v)
+        assert any("helper" in x.message for x in v)
+
 
 # ---------------------------------------------------------------------------
 # metrics-doc

@@ -24,6 +24,15 @@ import pytest
 
 SCHED_CATS = {"sched", "phase", "dispatch"}
 REQ_NAMES = {"req_queued", "req_admitted", "req_block", "req_terminal"}
+# Scheduler-track instants not bound to a single request: name -> the arg
+# keys the exporter must carry for that event.
+SCHED_INSTANTS = {
+    "drift": {"score_milli", "accept_rate_milli"},
+    "fault": {"site"},
+    "draft_swap": {"generation", "outcome"},
+    "draft_rollback": {"generation", "trigger"},
+    "sched_restart": {"count", "readmitted"},
+}
 
 
 def load_trace(text):
@@ -52,11 +61,11 @@ def load_trace(text):
             durs.append(e)
         elif ph == "i":
             assert e.get("s") == "t", f"instants must be thread-scoped: {e}"
-            if e["name"] == "drift":
-                # Speculation-health drift marker: scheduler-track instant,
-                # not bound to any single request.
-                assert e["cat"] == "health", f"drift instants carry cat=health: {e}"
-                assert {"score_milli", "accept_rate_milli"} <= set(e.get("args", {})), e
+            if e["name"] in SCHED_INSTANTS:
+                # Scheduler-track instant (drift/fault/lifecycle), not
+                # bound to any single request.
+                assert e["cat"] in {"health", "fault"}, f"bad scheduler instant cat: {e}"
+                assert SCHED_INSTANTS[e["name"]] <= set(e.get("args", {})), e
             else:
                 assert e["name"] in REQ_NAMES, f"unknown request instant: {e}"
             instants.append(e)
@@ -107,8 +116,8 @@ def assert_request_lifecycles(instants):
     there is exactly one terminal."""
     by_req = {}
     for e in instants:
-        if e["name"] == "drift":
-            continue  # health instant, carries no request id
+        if e["name"] in SCHED_INSTANTS:
+            continue  # scheduler-track instant, carries no request id
         by_req.setdefault(e["args"]["req"], []).append(e)
     assert by_req, "no request lifecycle instants in trace"
     for req, evs in by_req.items():
@@ -167,6 +176,16 @@ def synthetic_trace():
             "args": {"score_milli": 180, "accept_rate_milli": 520},
         },
         _inst("req_terminal", 510, req=1, reason="ok", tokens_out=3),
+        {
+            "pid": 1, "tid": 1, "ph": "i", "s": "t", "name": "draft_swap",
+            "cat": "health", "ts": 512,
+            "args": {"generation": 2, "outcome": "adopted"},
+        },
+        {
+            "pid": 1, "tid": 1, "ph": "i", "s": "t", "name": "sched_restart",
+            "cat": "health", "ts": 514,
+            "args": {"count": 1, "readmitted": 2},
+        },
     ]
     events.sort(key=lambda e: e.get("ts", -1))
     return json.dumps({"traceEvents": events})
@@ -175,7 +194,7 @@ def synthetic_trace():
 def test_synthetic_trace_validates():
     durs, instants = validate(synthetic_trace())
     assert len(durs) == 7
-    assert len(instants) == 5
+    assert len(instants) == 7
 
 
 def test_validator_rejects_broken_nesting():

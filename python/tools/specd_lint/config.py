@@ -34,6 +34,7 @@ class Config:
             "trace.rs",
             "telemetry.rs",
             "faults.rs",
+            "lifecycle.rs",
         ]
     )
     panic_patterns: List[Tuple[str, str]] = field(
@@ -68,12 +69,20 @@ class Config:
     )
 
     # ---- one-terminal (structural chokepoints) ----------------------------
-    # file -> (function, tokens): each token may appear in non-test code of
-    # that file only inside the named function.  Enforces that every
-    # coordinator exit path flows through `Coordinator::terminal()`.
-    chokepoints: Dict[str, Tuple[str, List[str]]] = field(
+    # file -> (functions, tokens): each token may appear in non-test code
+    # of that file only inside one of the named functions (a bare string
+    # names exactly one; an empty list bans the tokens outright).  Enforces
+    # that every coordinator exit path flows through `terminal()` -- or,
+    # for requests orphaned by a scheduler death, the supervisor's
+    # `strand_terminal()` -- and that the lifecycle supervisor itself never
+    # sends a terminal behind the coordinator's back.
+    chokepoints: Dict[str, Tuple[object, List[str]]] = field(
         default_factory=lambda: {
-            "coordinator.rs": ("terminal", [r"\btx\s*\.\s*send\s*\(", r"Delta::Done"]),
+            "coordinator.rs": (
+                ["terminal", "strand_terminal"],
+                [r"\btx\s*\.\s*send\s*\(", r"Delta::Done"],
+            ),
+            "lifecycle.rs": ([], [r"\btx\s*\.\s*send\s*\(", r"Delta::Done"]),
         }
     )
 
@@ -83,7 +92,13 @@ class Config:
     # counters, telemetry.rs the specd_health_* speculation-health
     # family).  Everything else only *references* them.
     metrics_def_files: List[str] = field(
-        default_factory=lambda: ["metrics.rs", "server.rs", "telemetry.rs", "faults.rs"]
+        default_factory=lambda: [
+            "metrics.rs",
+            "server.rs",
+            "telemetry.rs",
+            "faults.rs",
+            "lifecycle.rs",
+        ]
     )
     metrics_doc_files: List[str] = field(
         default_factory=lambda: ["docs/METRICS.md", "README.md"]

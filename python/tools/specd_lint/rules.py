@@ -143,24 +143,30 @@ def rule_one_terminal(repo: Repo) -> List[Violation]:
         rf = repo.file(fname)
         if rf is None:
             continue
+        # A chokepoint may name one function or a list of them (e.g. the
+        # coordinator's normal `terminal` plus the supervisor's
+        # `strand_terminal` for requests orphaned by a scheduler death).
+        # An empty list means the tokens may not appear in the file at all.
+        funcs = [func] if isinstance(func, str) else list(func)
         pats = [re.compile(t) for t in tokens]
         for lineno, text in rf.code_lines():
             for pat in pats:
                 if not pat.search(text):
                     continue
                 enclosing = rf.enclosing_function(lineno)
-                if enclosing == func:
+                if enclosing in funcs:
                     continue
                 if _check_allow(rf, "one-terminal", lineno, out):
                     continue
+                allowed = ", ".join(f"{f}()" for f in funcs) or "<no function>"
                 out.append(
                     Violation(
                         "one-terminal",
                         rf.path,
                         lineno,
-                        f"`{pat.pattern}` outside fn {func}() "
+                        f"`{pat.pattern}` outside {allowed} "
                         f"(in {enclosing or 'module scope'}): every request "
-                        f"exit must route through {func}() exactly once",
+                        f"exit must route through a terminal chokepoint exactly once",
                     )
                 )
     return out

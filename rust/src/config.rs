@@ -64,6 +64,20 @@ pub struct RunConfig {
     /// speculation blocks, trading TTFT for resident-lane ITL
     /// (Sarathi-style chunked-prefill scheduling).
     pub prefill_budget: usize,
+    /// Lifecycle: post-swap guard window, in speculation blocks. While the
+    /// window is open a drift-CUSUM fire, an accept rate below
+    /// `swap_accept_floor`, or a draft-breaker open rolls the swap back to
+    /// the last-known-good bundle. `0` adopts unguarded.
+    pub swap_guard_blocks: usize,
+    /// Lifecycle: minimum in-guard acceptance rate for a freshly swapped
+    /// draft (evaluated once enough guard blocks have accumulated).
+    /// `0.0` disables the floor.
+    pub swap_accept_floor: f64,
+    /// Scheduler: consecutive clean (non-quarantined) blocks after which a
+    /// lane's salvage count resets, so transient faults spread over a long
+    /// stream's lifetime cannot accumulate to the eviction cap. `0` keeps
+    /// the pre-lifecycle behaviour (salvages never reset).
+    pub salvage_reset_blocks: u32,
 }
 
 impl Default for RunConfig {
@@ -78,6 +92,9 @@ impl Default for RunConfig {
             max_slots: 4,
             queue_depth: 64,
             prefill_budget: 0,
+            swap_guard_blocks: 64,
+            swap_accept_floor: 0.0,
+            salvage_reset_blocks: 64,
         }
     }
 }
@@ -101,6 +118,12 @@ impl RunConfig {
         }
         if self.sampling.temperature < 0.0 {
             return Err(Error::msg("temperature must be >= 0"));
+        }
+        if !(0.0..=1.0).contains(&self.swap_accept_floor) {
+            return Err(Error::msg(format!(
+                "swap_accept_floor={} not in [0,1]",
+                self.swap_accept_floor
+            )));
         }
         Ok(())
     }
@@ -132,6 +155,19 @@ impl RunConfig {
                 .unwrap_or(d.max_slots),
             queue_depth: v.get("queue_depth").as_usize().unwrap_or(d.queue_depth),
             prefill_budget: v.get("prefill_budget").as_usize().unwrap_or(d.prefill_budget),
+            swap_guard_blocks: v
+                .get("swap_guard_blocks")
+                .as_usize()
+                .unwrap_or(d.swap_guard_blocks),
+            swap_accept_floor: v
+                .get("swap_accept_floor")
+                .as_f64()
+                .unwrap_or(d.swap_accept_floor),
+            salvage_reset_blocks: v
+                .get("salvage_reset_blocks")
+                .as_usize()
+                .map(|n| n as u32)
+                .unwrap_or(d.salvage_reset_blocks),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -198,6 +234,27 @@ mod tests {
         assert_eq!(c.prefill_budget, 64);
         let c = RunConfig::from_json(&Value::parse("{}").unwrap()).unwrap();
         assert_eq!(c.prefill_budget, 0, "default: unbounded admission prefill");
+    }
+
+    #[test]
+    fn lifecycle_knobs_parse_and_validate() {
+        let c = RunConfig::from_json(
+            &Value::parse(
+                r#"{"swap_guard_blocks": 16, "swap_accept_floor": 0.25, "salvage_reset_blocks": 8}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.swap_guard_blocks, 16);
+        assert!((c.swap_accept_floor - 0.25).abs() < 1e-9);
+        assert_eq!(c.salvage_reset_blocks, 8);
+        let d = RunConfig::from_json(&Value::parse("{}").unwrap()).unwrap();
+        assert_eq!(d.swap_guard_blocks, 64);
+        assert_eq!(d.swap_accept_floor, 0.0, "floor off by default");
+        assert_eq!(d.salvage_reset_blocks, 64);
+        let mut bad = RunConfig::default();
+        bad.swap_accept_floor = 1.5;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

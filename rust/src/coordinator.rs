@@ -67,6 +67,19 @@
 //! `submitted` (or admission when unset). Expired sequences are evicted
 //! with [`ERR_DEADLINE`] in `Response::error`, which the HTTP server maps
 //! to `408 Request Timeout`.
+//!
+//! Lifecycle (PR 10): with a [`crate::lifecycle::Lifecycle`] handle
+//! attached, [`Coordinator::serve_supervised`] runs ONE serving *segment*
+//! — it can exit early at a block boundary for a validated draft swap or
+//! a guarded-adoption rollback, carrying every resident request out as a
+//! [`ResumeState`] (sequence, RNG, streaming offset, deadline, stats).
+//! The supervisor ([`crate::lifecycle::run_supervised`]) owns the models
+//! across segments, re-admits residents into the next one (re-prefill +
+//! bookkeeping transplant — the same machinery as lane salvage, so
+//! emitted prefixes stay token-identical and `terminal()` still fires
+//! exactly once per request), and `catch_unwind`s the whole segment so a
+//! scheduler panic becomes a supervised restart instead of a dead
+//! process.
 
 use std::collections::VecDeque;
 use std::sync::atomic::Ordering;
@@ -78,9 +91,10 @@ use crate::config::{RunConfig, SamplingConfig};
 use crate::error::Result;
 use crate::exec::{Receiver, Sender};
 use crate::kvcache::{SlotId, SlotPool};
-use crate::metrics::{SchedulerGauges, ServeMetrics};
+use crate::lifecycle::{Lifecycle, ReloadSpec, State as LcState};
+use crate::metrics::{SchedulerGauges, ServeMetrics, SpecStats};
 use crate::rng::Pcg64;
-use crate::spec::{PrefillWave, SpecDecoder, SpecSession};
+use crate::spec::{LogitCapture, PrefillWave, SpecDecoder, SpecSession};
 
 /// `Response::error` value for deadline-evicted requests (HTTP 408).
 pub const ERR_DEADLINE: &str = "deadline exceeded";
@@ -175,6 +189,87 @@ pub struct Response {
     pub itl: Vec<f64>,
 }
 
+/// Everything needed to rebuild one resident request in a different
+/// serving segment (draft swap, rollback, or supervised restart).
+/// Sequence, sampling state, streaming offset and deadline are exact —
+/// re-admission re-prefills `seq` (prompt ++ emitted) and decoding
+/// resumes mid-stream with no duplicated or lost deltas. Records built
+/// by [`Coordinator::serve_supervised`]'s dismantle path carry full
+/// latency bookkeeping too; records rebuilt from the panic-survival
+/// registry ([`crate::lifecycle::Lifecycle::drain_registry`]) restart
+/// the timing fields (documented fidelity loss — tokens never drift).
+pub struct ResumeState {
+    pub id: u64,
+    /// prompt ++ emitted tokens — the exact sequence to re-prefill.
+    pub seq: Vec<u32>,
+    pub prompt_len: usize,
+    pub sampling: SamplingConfig,
+    pub max_new: usize,
+    /// RNG mid-stream snapshot: sampled continuations stay on the draw
+    /// sequence they would have followed without the interruption.
+    pub rng: Pcg64,
+    pub enqueued: Instant,
+    pub first_token: Option<f64>,
+    pub deadline_at: Option<Instant>,
+    pub events: Option<Sender<Delta>>,
+    /// Tokens already streamed (max_new clipping continues from here).
+    pub streamed: usize,
+    pub depth_counts: Vec<u32>,
+    /// Telemetry tag (re-interned in the new segment — slots don't
+    /// survive a coordinator).
+    pub tag: Option<String>,
+    pub last_emit: Option<f64>,
+    pub itl: Vec<f64>,
+    pub salvages: u32,
+    pub clean_blocks: u32,
+    pub stats: SpecStats,
+    pub capture: Option<LogitCapture>,
+    /// Whether admission was ever announced (`Delta::Started`): started
+    /// residents re-prefill + transplant, unstarted ones re-queue through
+    /// normal admission (which sends `Started` for the first time).
+    pub started: bool,
+}
+
+/// Why a supervised serving segment returned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Exit {
+    /// Request channel closed and all work drained (terminal exit).
+    Drained,
+    /// A staged draft bundle passed validation; the supervisor should
+    /// install it and resume the residents.
+    Swap,
+    /// A guard trigger fired; reason uses the trace encoding
+    /// (0 drift, 1 accept floor, 2 breaker open).
+    Rollback(u64),
+}
+
+/// What a supervised serving segment hands back to the supervisor.
+pub struct ServeOutcome {
+    pub metrics: ServeMetrics,
+    pub exit: Exit,
+    /// Residents to re-admit into the next segment (empty on `Drained`).
+    pub residents: Vec<ResumeState>,
+}
+
+/// Post-swap probation window: baselines captured at adoption so the
+/// triggers fire on what the NEW draft does, not inherited conditions.
+#[derive(Debug, Clone, Copy)]
+pub struct GuardSpec {
+    /// Window length in speculation blocks (summed across lanes).
+    pub guard_blocks: usize,
+    /// Minimum in-guard acceptance rate; `0.0` disables the floor.
+    pub accept_floor: f64,
+    /// Whether the drift CUSUM was already firing at adoption (rollback
+    /// triggers on the rising edge only).
+    pub drift_at_entry: bool,
+    /// Draft-breaker open count at adoption.
+    pub opens_at_entry: u64,
+}
+
+/// Minimum in-guard blocks before the acceptance floor is evaluated:
+/// an unlucky first block or two must not condemn a healthy draft.
+pub const GUARD_FLOOR_MIN_BLOCKS: u64 = 16;
+
 struct Active {
     id: u64,
     session: SpecSession,
@@ -202,6 +297,13 @@ struct Active {
     /// Lane-salvage rounds this request has consumed (capped at
     /// [`SALVAGE_CAP`]; a request quarantined beyond that is evicted).
     salvages: u32,
+    /// Consecutive clean (non-quarantined) blocks since the last salvage;
+    /// at `salvage_reset_blocks` the salvage count resets so transient
+    /// faults spread over a long stream cannot accumulate to eviction.
+    clean_blocks: u32,
+    /// Telemetry tag retained as a string so a resumed request can
+    /// re-intern it in a different segment's telemetry.
+    tag: Option<String>,
 }
 
 impl Active {
@@ -246,12 +348,20 @@ pub struct Coordinator<'a> {
     gauges: Option<Arc<SchedulerGauges>>,
     telemetry: Option<Arc<crate::telemetry::Telemetry>>,
     log_requests: bool,
+    lifecycle: Option<Arc<Lifecycle>>,
 }
 
 impl<'a> Coordinator<'a> {
     pub fn new(decoder: SpecDecoder<'a>, cfg: RunConfig) -> Result<Self> {
         cfg.validate()?;
-        Ok(Coordinator { decoder, cfg, gauges: None, telemetry: None, log_requests: false })
+        Ok(Coordinator {
+            decoder,
+            cfg,
+            gauges: None,
+            telemetry: None,
+            log_requests: false,
+            lifecycle: None,
+        })
     }
 
     /// Attach live gauges (shared with the HTTP `/metrics` handler).
@@ -275,9 +385,38 @@ impl<'a> Coordinator<'a> {
         self
     }
 
+    /// Attach the shared lifecycle handle: enables the reload mailbox,
+    /// the panic-survival registry feed and the chaos panic trip. Without
+    /// it the scheduler behaves exactly as before PR 10.
+    pub fn with_lifecycle(mut self, lifecycle: Arc<Lifecycle>) -> Self {
+        self.lifecycle = Some(lifecycle);
+        self
+    }
+
     /// Serve until the request channel closes and all work drains.
     /// Returns aggregate metrics.
     pub fn serve(&self, rx: Receiver<Request>, tx: Sender<Response>) -> Result<ServeMetrics> {
+        self.serve_supervised(&rx, &tx, Vec::new(), None, None).map(|o| o.metrics)
+    }
+
+    /// Run ONE supervised serving segment: serve until the channel drains
+    /// (like [`Self::serve`]), a validated draft swap quiesces the
+    /// segment, or a guard trigger demands a rollback — the latter two
+    /// exit at a block boundary with every resident request dismantled
+    /// into [`ResumeState`]s for the supervisor to re-admit.
+    ///
+    /// `stager` runs on this (scheduler) thread when a reload is pending:
+    /// it stages + validates the candidate bundle and parks the staged
+    /// model supervisor-side; a staging error rejects the reload with
+    /// zero serving impact. `guard` arms the post-swap probation window.
+    pub fn serve_supervised(
+        &self,
+        rx: &Receiver<Request>,
+        tx: &Sender<Response>,
+        resume: Vec<ResumeState>,
+        mut stager: Option<&mut dyn FnMut(&ReloadSpec) -> Result<()>>,
+        guard: Option<GuardSpec>,
+    ) -> Result<ServeOutcome> {
         let mut metrics = ServeMetrics::default();
         // Histogram families with fixed bounds, so merged/scraped quantiles
         // survive aggregation (and scrape resets — the micro-fix for the
@@ -321,7 +460,130 @@ impl<'a> Coordinator<'a> {
         let mut rx_open = true;
         let wall0 = Instant::now();
 
+        // --- resume: re-admit residents carried over from the previous
+        // segment (draft swap, rollback, or supervised restart). Started
+        // residents re-prefill + transplant mid-stream; unstarted ones
+        // re-queue through normal admission (first Delta::Started).
+        if !resume.is_empty() {
+            let mut started: Vec<ResumeState> = Vec::new();
+            for r in resume {
+                if r.started {
+                    started.push(r);
+                } else {
+                    let mut prompt = r.seq;
+                    prompt.truncate(r.prompt_len);
+                    pending.push_back(Pending {
+                        enqueued: r.enqueued,
+                        deadline_at: r.deadline_at,
+                        req: Request {
+                            id: r.id,
+                            prompt,
+                            max_new: r.max_new,
+                            sampling: r.sampling,
+                            deadline: None,
+                            submitted: Some(r.enqueued),
+                            events: r.events,
+                            tag: r.tag,
+                        },
+                    });
+                }
+            }
+            self.readmit(&mut batched, &mut pool, tx, started, &mut active, slot_cap);
+        }
+
+        // Guard-window accounting (post-swap probation): blocks and
+        // accept counts accumulated while the guard is armed.
+        let mut guard = guard;
+        let (mut guard_blocks, mut guard_accepted, mut guard_drafted) = (0u64, 0u64, 0u64);
+
         loop {
+            // --- lifecycle checks, at a block boundary ---------------
+            if let Some(lc) = &self.lifecycle {
+                if lc.take_panic_trip() {
+                    // lint: allow(no-panic, chaos hook: deliberately exercises the supervised restart path)
+                    panic!("scheduler panic tripped via lifecycle chaos hook");
+                }
+                if let Some(spec) = lc.take_reload() {
+                    match stager.as_mut() {
+                        Some(st) => match (*st)(&spec) {
+                            Ok(()) => {
+                                // Candidate staged + validated: quiesce
+                                // this segment so the supervisor can
+                                // install it. Zero-drop: every resident
+                                // leaves as a ResumeState.
+                                lc.set_state(LcState::Quiescing);
+                                let residents = self.dismantle(
+                                    &mut batched,
+                                    std::mem::take(&mut active),
+                                    wave.take(),
+                                    std::mem::take(&mut pending),
+                                );
+                                metrics.pool_peak_slots = pool.peak_live;
+                                metrics.wall_seconds = wall0.elapsed().as_secs_f64();
+                                return Ok(ServeOutcome {
+                                    metrics,
+                                    exit: Exit::Swap,
+                                    residents,
+                                });
+                            }
+                            Err(e) => lc.record_rejected(&spec.model, &e.to_string()),
+                        },
+                        None => lc.record_rejected(
+                            &spec.model,
+                            "reload requested but this serve call has no stager attached",
+                        ),
+                    }
+                }
+            }
+            if let Some(g) = &guard {
+                let mut trigger: Option<u64> = None;
+                if let Some(tl) = &self.telemetry {
+                    // Rising edge only: drift already active at adoption
+                    // was the OLD draft's problem.
+                    if !g.drift_at_entry && tl.drift_active() {
+                        trigger = Some(0);
+                    }
+                }
+                if trigger.is_none()
+                    && g.accept_floor > 0.0
+                    && guard_blocks >= GUARD_FLOOR_MIN_BLOCKS
+                    && (guard_accepted as f64) < g.accept_floor * (guard_drafted as f64)
+                {
+                    trigger = Some(1);
+                }
+                if trigger.is_none() {
+                    if let Some(b) = self.decoder.draft.breaker() {
+                        if b.opens() > g.opens_at_entry {
+                            trigger = Some(2);
+                        }
+                    }
+                }
+                if let Some(reason) = trigger {
+                    if let Some(lc) = &self.lifecycle {
+                        lc.set_state(LcState::Quiescing);
+                    }
+                    let residents = self.dismantle(
+                        &mut batched,
+                        std::mem::take(&mut active),
+                        wave.take(),
+                        std::mem::take(&mut pending),
+                    );
+                    metrics.pool_peak_slots = pool.peak_live;
+                    metrics.wall_seconds = wall0.elapsed().as_secs_f64();
+                    return Ok(ServeOutcome {
+                        metrics,
+                        exit: Exit::Rollback(reason),
+                        residents,
+                    });
+                }
+                if guard_blocks >= g.guard_blocks as u64 {
+                    // Probation passed: the adoption sticks.
+                    guard = None;
+                    if let Some(lc) = &self.lifecycle {
+                        lc.set_state(LcState::Serving);
+                    }
+                }
+            }
             // --- intake: accept queued requests into the pending set -----
             // Bounded by max_slots so the channel keeps providing
             // backpressure further upstream.
@@ -343,6 +605,11 @@ impl<'a> Coordinator<'a> {
                 let enqueued = req.submitted.unwrap_or_else(Instant::now);
                 let deadline_at = req.deadline.map(|d| enqueued + d);
                 crate::trace::req_queued(req.id);
+                if let Some(lc) = &self.lifecycle {
+                    // Panic-survival ledger: the request is resumable from
+                    // here until its terminal fires (unregister).
+                    lc.register(&req, enqueued, deadline_at);
+                }
                 pending.push_back(Pending { req, enqueued, deadline_at });
             }
 
@@ -355,12 +622,12 @@ impl<'a> Coordinator<'a> {
                 if p.deadline_at.is_some_and(|d| now >= d) {
                     metrics.timeouts += 1;
                     let resp = Self::pending_error(p, ERR_DEADLINE.to_string());
-                    self.terminal(&tx, &p.req.events, p.req.prompt.len(), resp);
+                    self.terminal(tx, &p.req.events, p.req.prompt.len(), resp);
                     false
                 } else if p.disconnected() {
                     metrics.cancelled += 1;
                     let resp = Self::pending_error(p, ERR_DISCONNECT.to_string());
-                    self.terminal(&tx, &p.req.events, p.req.prompt.len(), resp);
+                    self.terminal(tx, &p.req.events, p.req.prompt.len(), resp);
                     false
                 } else {
                     true
@@ -385,7 +652,7 @@ impl<'a> Coordinator<'a> {
                         // that request's failure, never the wave's.
                         if let Err(e) = self.decoder.validate_prompt(&p.req.prompt) {
                             let resp = Self::pending_error(&p, e.to_string());
-                            self.terminal(&tx, &p.req.events, p.req.prompt.len(), resp);
+                            self.terminal(tx, &p.req.events, p.req.prompt.len(), resp);
                             continue;
                         }
                         if let Some(ev) = &p.req.events {
@@ -395,6 +662,9 @@ impl<'a> Coordinator<'a> {
                         metrics.queue_wait.push(wait);
                         metrics.queue_wait_hist.observe(wait);
                         crate::trace::req_admitted(p.req.id, (wait * 1e6) as u64);
+                        if let Some(lc) = &self.lifecycle {
+                            lc.note_started(p.req.id);
+                        }
                         prompts.push(p.req.prompt.clone());
                         members.push(p);
                     }
@@ -411,7 +681,7 @@ impl<'a> Coordinator<'a> {
                                 // begin_wave allocates nothing on failure.
                                 for p in members {
                                     let resp = Self::pending_error(&p, e.to_string());
-                                    self.terminal(&tx, &p.req.events, p.req.prompt.len(), resp);
+                                    self.terminal(tx, &p.req.events, p.req.prompt.len(), resp);
                                 }
                             }
                         }
@@ -448,7 +718,7 @@ impl<'a> Coordinator<'a> {
                                                     let resp =
                                                         Self::pending_error(&p, e.to_string());
                                                     self.terminal(
-                                                        &tx,
+                                                        tx,
                                                         &p.req.events,
                                                         p.req.prompt.len(),
                                                         resp,
@@ -462,7 +732,7 @@ impl<'a> Coordinator<'a> {
                                         for p in wf.members {
                                             let resp = Self::pending_error(&p, e.to_string());
                                             self.terminal(
-                                                &tx,
+                                                tx,
                                                 &p.req.events,
                                                 p.req.prompt.len(),
                                                 resp,
@@ -480,7 +750,7 @@ impl<'a> Coordinator<'a> {
                             self.decoder.abort_wave(ctx, wf.wave);
                             for p in wf.members {
                                 let resp = Self::pending_error(&p, e.to_string());
-                                self.terminal(&tx, &p.req.events, p.req.prompt.len(), resp);
+                                self.terminal(tx, &p.req.events, p.req.prompt.len(), resp);
                             }
                         }
                     }
@@ -504,6 +774,9 @@ impl<'a> Coordinator<'a> {
                 metrics.queue_wait.push(wait);
                 metrics.queue_wait_hist.observe(wait);
                 crate::trace::req_admitted(p.req.id, (wait * 1e6) as u64);
+                if let Some(lc) = &self.lifecycle {
+                    lc.note_started(p.req.id);
+                }
                 // Prefill (owned state), then pack into the fused arenas
                 // if a lane freed meanwhile. An adopt failure poisons only
                 // this session — report it like a start failure.
@@ -527,13 +800,13 @@ impl<'a> Coordinator<'a> {
                                 // fatal `?` before): release and report.
                                 self.release_lanes(&mut batched, &mut session);
                                 let resp = Self::pending_error(&p, e.to_string());
-                                self.terminal(&tx, &p.req.events, p.req.prompt.len(), resp);
+                                self.terminal(tx, &p.req.events, p.req.prompt.len(), resp);
                             }
                         }
                     }
                     Err(e) => {
                         let resp = Self::pending_error(&p, e.to_string());
-                        self.terminal(&tx, &p.req.events, p.req.prompt.len(), resp);
+                        self.terminal(tx, &p.req.events, p.req.prompt.len(), resp);
                     }
                 }
             }
@@ -590,13 +863,13 @@ impl<'a> Coordinator<'a> {
                     pool.free(a.slot)?;
                     self.release_lanes(&mut batched, &mut a.session);
                     let resp = Self::terminal_response(&a, Some(ERR_DEADLINE.to_string()));
-                    self.terminal(&tx, &a.events, a.session.prompt_len, resp);
+                    self.terminal(tx, &a.events, a.session.prompt_len, resp);
                 } else if a.disconnected() {
                     metrics.cancelled += 1;
                     pool.free(a.slot)?;
                     self.release_lanes(&mut batched, &mut a.session);
                     let resp = Self::terminal_response(&a, Some(ERR_DISCONNECT.to_string()));
-                    self.terminal(&tx, &a.events, a.session.prompt_len, resp);
+                    self.terminal(tx, &a.events, a.session.prompt_len, resp);
                 } else {
                     survivors.push(a);
                 }
@@ -650,6 +923,21 @@ impl<'a> Coordinator<'a> {
                         let drafted = a.session.stats.drafted - pre_counters[i].1;
                         metrics.accept_depth.observe(depth as f64);
                         a.depth_counts[depth] += 1;
+                        // A clean block: decay the salvage count once the
+                        // configured run completes, so transient faults
+                        // spread over a long stream never accumulate to
+                        // the eviction cap (PR 10 bugfix).
+                        a.clean_blocks = a.clean_blocks.saturating_add(1);
+                        a.salvages = Self::salvage_decay(
+                            a.salvages,
+                            a.clean_blocks,
+                            self.cfg.salvage_reset_blocks,
+                        );
+                        if guard.is_some() {
+                            guard_blocks += 1;
+                            guard_accepted += depth as u64;
+                            guard_drafted += drafted as u64;
+                        }
                         pool.get_mut(a.slot)?.advance(emitted.len())?;
                         iter_tokens += emitted.len() as u64;
                         let now_s = a.enqueued.elapsed().as_secs_f64();
@@ -694,17 +982,23 @@ impl<'a> Coordinator<'a> {
                                 }
                             }
                         }
+                        if let Some(lc) = &self.lifecycle {
+                            // Post-block snapshot: emitted tokens, the RNG
+                            // as left after this block's draws, and the
+                            // streamed offset — the resume point.
+                            lc.note_block(a.id, &emitted, &a.rng, a.streamed);
+                        }
                         if hung_up {
                             metrics.cancelled += 1;
                             pool.free(a.slot)?;
                             self.release_lanes(&mut batched, &mut a.session);
                             let resp =
                                 Self::terminal_response(&a, Some(ERR_DISCONNECT.to_string()));
-                            self.terminal(&tx, &a.events, a.session.prompt_len, resp);
+                            self.terminal(tx, &a.events, a.session.prompt_len, resp);
                         } else if a.session.finished || a.session.generated().len() >= a.max_new {
                             pool.free(a.slot)?;
                             self.release_lanes(&mut batched, &mut a.session);
-                            self.finish(&mut metrics, &tx, &a);
+                            self.finish(&mut metrics, tx, &a);
                         } else {
                             survivors.push(a);
                         }
@@ -715,13 +1009,13 @@ impl<'a> Coordinator<'a> {
                         // successful completion.
                         pool.free(a.slot)?;
                         self.release_lanes(&mut batched, &mut a.session);
-                        self.finish(&mut metrics, &tx, &a);
+                        self.finish(&mut metrics, tx, &a);
                     }
                     LaneOutcome::Failed(e) => {
                         pool.free(a.slot)?;
                         self.release_lanes(&mut batched, &mut a.session);
                         let resp = Self::terminal_response(&a, Some(e.to_string()));
-                        self.terminal(&tx, &a.events, a.session.prompt_len, resp);
+                        self.terminal(tx, &a.events, a.session.prompt_len, resp);
                     }
                     LaneOutcome::Suspect(e) => {
                         // Quarantined by a fused dispatch failure: the
@@ -734,7 +1028,7 @@ impl<'a> Coordinator<'a> {
             }
             active = survivors;
             if !suspects.is_empty() {
-                self.salvage(&mut batched, &mut pool, &tx, suspects, &mut active)?;
+                self.salvage(&mut batched, &mut pool, tx, suspects, &mut active)?;
             }
 
             if let Some(g) = &self.gauges {
@@ -758,7 +1052,7 @@ impl<'a> Coordinator<'a> {
         }
         metrics.pool_peak_slots = pool.peak_live;
         metrics.wall_seconds = wall0.elapsed().as_secs_f64();
-        Ok(metrics)
+        Ok(ServeOutcome { metrics, exit: Exit::Drained, residents: Vec::new() })
     }
 
     /// Whether the stack is serving in target-only degraded mode right
@@ -779,6 +1073,275 @@ impl<'a> Coordinator<'a> {
     ) {
         if let Some(c) = batched.as_mut() {
             self.decoder.release(c, session);
+        }
+    }
+
+    /// Dismantle the current segment for a swap or rollback exit: every
+    /// resident request (active lanes, the admission wave in flight, the
+    /// pending queue) becomes a [`ResumeState`]. Arena lanes are returned
+    /// (the arena and slot pool are segment-locals and drop with it); NO
+    /// terminals fire — the requests are still live, just migrating to
+    /// the next segment.
+    fn dismantle(
+        &self,
+        batched: &mut Option<crate::spec::BatchedCtx>,
+        active: Vec<Active>,
+        wave: Option<WaveInFlight>,
+        pending: VecDeque<Pending>,
+    ) -> Vec<ResumeState> {
+        let mut out = Vec::with_capacity(active.len() + pending.len() + 4);
+        for mut a in active {
+            self.release_lanes(batched, &mut a.session);
+            out.push(ResumeState {
+                id: a.id,
+                seq: a.session.seq.clone(),
+                prompt_len: a.session.prompt_len,
+                sampling: a.sampling,
+                max_new: a.max_new,
+                rng: a.rng,
+                enqueued: a.enqueued,
+                first_token: a.first_token,
+                deadline_at: a.deadline_at,
+                events: a.events,
+                streamed: a.streamed,
+                depth_counts: a.depth_counts,
+                tag: a.tag,
+                last_emit: a.last_emit,
+                itl: a.itl,
+                salvages: a.salvages,
+                clean_blocks: a.clean_blocks,
+                stats: a.session.stats,
+                capture: a.session.capture.take(),
+                started: true,
+            });
+        }
+        if let Some(wf) = wave {
+            if let Some(ctx) = batched.as_mut() {
+                self.decoder.abort_wave(ctx, wf.wave);
+            }
+            for p in wf.members {
+                // Delta::Started already went out for wave members, so
+                // they resume as started (re-prefill + transplant) and
+                // the stream protocol never repeats Started.
+                out.push(Self::requeue_state(p, true, self.cfg.gamma));
+            }
+        }
+        for p in pending {
+            out.push(Self::requeue_state(p, false, self.cfg.gamma));
+        }
+        out
+    }
+
+    /// [`ResumeState`] for a resident that owns no session yet (admission
+    /// wave member or queued pending request). The RNG is recomputed from
+    /// the seed — nothing has drawn from it.
+    fn requeue_state(p: Pending, started: bool, gamma: usize) -> ResumeState {
+        let prompt_len = p.req.prompt.len();
+        ResumeState {
+            id: p.req.id,
+            seq: p.req.prompt,
+            prompt_len,
+            sampling: p.req.sampling,
+            max_new: p.req.max_new,
+            rng: Pcg64::with_stream(p.req.sampling.seed ^ p.req.id, 0x5e0e),
+            enqueued: p.enqueued,
+            first_token: None,
+            deadline_at: p.deadline_at,
+            events: p.req.events,
+            streamed: 0,
+            depth_counts: vec![0; gamma + 1],
+            tag: p.req.tag,
+            last_emit: None,
+            itl: Vec::new(),
+            salvages: 0,
+            clean_blocks: 0,
+            stats: Default::default(),
+            capture: None,
+            started,
+        }
+    }
+
+    /// Re-admit started residents into this segment: each chunk is ONE
+    /// admission wave over the full sequences (prompt ++ emitted), then
+    /// the engine bookkeeping is transplanted exactly like lane salvage —
+    /// decoding resumes mid-stream, token-identical for everything
+    /// already emitted. Failures are per-request terminals ("resume
+    /// re-prefill failed"), never a scheduler error: the fresh segment
+    /// must come up even when some residents cannot.
+    fn readmit(
+        &self,
+        batched: &mut Option<crate::spec::BatchedCtx>,
+        pool: &mut SlotPool<u64>,
+        tx: &Sender<Response>,
+        residents: Vec<ResumeState>,
+        active: &mut Vec<Active>,
+        slot_cap: usize,
+    ) {
+        let mut queue: VecDeque<ResumeState> = residents.into();
+        // Fused path: wave-sized chunks bounded by lane + slot capacity.
+        while !queue.is_empty() {
+            let cap = match batched.as_mut() {
+                Some(ctx) => ctx.available().min(pool.available()),
+                None => 0,
+            };
+            if cap == 0 {
+                break;
+            }
+            let take = queue.len().min(cap);
+            let mut chunk: Vec<ResumeState> = Vec::with_capacity(take);
+            for _ in 0..take {
+                if let Some(r) = queue.pop_front() {
+                    chunk.push(r);
+                }
+            }
+            let mut attempts = 0u32;
+            loop {
+                attempts += 1;
+                // lint: fault-site(swap-readmit)
+                let waved = crate::faults::inject(crate::faults::Site::SwapReadmit).and_then(
+                    |()| match batched.as_mut() {
+                        Some(ctx) => {
+                            let seqs: Vec<Vec<u32>> =
+                                chunk.iter().map(|r| r.seq.clone()).collect();
+                            self.decoder.admit_wave(ctx, seqs)
+                        }
+                        None => Err(crate::error::Error::msg("fused arenas unavailable")),
+                    },
+                );
+                match waved {
+                    Ok(sessions) => {
+                        for (r, fresh) in chunk.into_iter().zip(sessions) {
+                            self.adopt_resumed(batched, pool, tx, r, fresh, slot_cap, active);
+                        }
+                        break;
+                    }
+                    Err(we) => {
+                        // One bounded retry (admit_wave released its
+                        // lanes), then fail the chunk per-request.
+                        if attempts < 2 {
+                            continue;
+                        }
+                        for r in chunk {
+                            let resp = Self::resume_error(
+                                &r,
+                                format!("resume re-prefill failed: {we}"),
+                            );
+                            self.terminal(tx, &r.events, r.prompt_len, resp);
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+        // Per-sequence fallback: pre-batched bundles (or capacity beyond
+        // the arenas) re-prefill into owned state, like admission does.
+        while let Some(r) = queue.pop_front() {
+            if pool.available() == 0 {
+                let resp = Self::resume_error(
+                    &r,
+                    "resume re-admission failed: no slot capacity".to_string(),
+                );
+                self.terminal(tx, &r.events, r.prompt_len, resp);
+                continue;
+            }
+            match self.decoder.start(&r.seq) {
+                Ok(fresh) => self.adopt_resumed(batched, pool, tx, r, fresh, slot_cap, active),
+                Err(e) => {
+                    let resp = Self::resume_error(&r, format!("resume re-prefill failed: {e}"));
+                    self.terminal(tx, &r.events, r.prompt_len, resp);
+                }
+            }
+        }
+    }
+
+    /// Transplant a resumed request's bookkeeping onto its freshly
+    /// re-prefilled session and promote it to an active lane — the
+    /// salvage transplant plus the cross-segment fields (streaming
+    /// offset, latency clocks, tag re-interning).
+    #[allow(clippy::too_many_arguments)]
+    fn adopt_resumed(
+        &self,
+        batched: &mut Option<crate::spec::BatchedCtx>,
+        pool: &mut SlotPool<u64>,
+        tx: &Sender<Response>,
+        r: ResumeState,
+        mut fresh: SpecSession,
+        slot_cap: usize,
+        active: &mut Vec<Active>,
+    ) {
+        let slot = match Self::claim_slot(pool, r.id, slot_cap, r.seq.len()) {
+            Ok(slot) => slot,
+            Err(e) => {
+                self.release_lanes(batched, &mut fresh);
+                let resp = Self::resume_error(&r, e.to_string());
+                self.terminal(tx, &r.events, r.prompt_len, resp);
+                return;
+            }
+        };
+        fresh.prompt_len = r.prompt_len;
+        fresh.trace_id = r.id;
+        fresh.capture = r.capture;
+        let mut stats = r.stats;
+        stats.merge(&fresh.stats);
+        fresh.stats = stats;
+        let tag_slot = match (&self.telemetry, &r.tag) {
+            (Some(tl), Some(tag)) => tl.intern(tag),
+            _ => 0,
+        };
+        let mut depth_counts = r.depth_counts;
+        depth_counts.resize(self.cfg.gamma + 1, 0);
+        active.push(Active {
+            id: r.id,
+            session: fresh,
+            sampling: r.sampling,
+            max_new: r.max_new.min(self.cfg.max_new_tokens),
+            rng: r.rng,
+            enqueued: r.enqueued,
+            first_token: r.first_token,
+            deadline_at: r.deadline_at,
+            events: r.events,
+            streamed: r.streamed,
+            slot,
+            depth_counts,
+            tag_slot,
+            last_emit: r.last_emit,
+            itl: r.itl,
+            salvages: r.salvages,
+            clean_blocks: r.clean_blocks,
+            tag: r.tag,
+        });
+    }
+
+    /// Terminal [`Response`] for a resident that could not be re-admitted
+    /// into a fresh segment: delivered tokens preserved, error attached.
+    fn resume_error(r: &ResumeState, error: String) -> Response {
+        let mut tokens = r.seq[r.prompt_len..].to_vec();
+        tokens.truncate(r.max_new);
+        let mut stats = r.stats;
+        stats.clip_to_delivered(tokens.len());
+        let latency = r.enqueued.elapsed().as_secs_f64();
+        let mut itl = r.itl.clone();
+        itl.truncate(tokens.len().saturating_sub(1));
+        Response {
+            id: r.id,
+            tokens,
+            stats,
+            latency,
+            ttft: r.first_token.unwrap_or(latency),
+            error: Some(error),
+            depth_counts: r.depth_counts.clone(),
+            itl,
+        }
+    }
+
+    /// Pure decay rule for the salvage counter: after `reset_after`
+    /// consecutive clean blocks a request's salvage history is forgiven.
+    /// `reset_after == 0` keeps the pre-lifecycle behaviour (never).
+    fn salvage_decay(salvages: u32, clean_blocks: u32, reset_after: u32) -> u32 {
+        if reset_after > 0 && salvages > 0 && clean_blocks >= reset_after {
+            0
+        } else {
+            salvages
         }
     }
 
@@ -835,6 +1398,9 @@ impl<'a> Coordinator<'a> {
             };
             for (a, _) in ready.iter_mut() {
                 a.salvages += 1;
+                // A salvage interrupts the clean-block run that would
+                // otherwise forgive earlier salvages.
+                a.clean_blocks = 0;
             }
             let seqs: Vec<Vec<u32>> = ready.iter().map(|(a, _)| a.session.seq.clone()).collect();
             match self.decoder.admit_wave(ctx, seqs) {
@@ -926,6 +1492,8 @@ impl<'a> Coordinator<'a> {
             last_emit: None,
             itl: Vec::new(),
             salvages: 0,
+            clean_blocks: 0,
+            tag: p.req.tag,
         }
     }
 
@@ -984,6 +1552,11 @@ impl<'a> Coordinator<'a> {
         tokens_in: usize,
         resp: Response,
     ) {
+        // The lifecycle registry tracks only live requests; a terminated
+        // request must never be re-admitted after a scheduler restart.
+        if let Some(lc) = &self.lifecycle {
+            lc.unregister(resp.id);
+        }
         let reason = crate::trace::Reason::from_error(resp.error.as_deref());
         crate::trace::req_terminal(resp.id, reason, resp.tokens.len() as u64);
         if self.log_requests {
@@ -1029,6 +1602,39 @@ impl<'a> Coordinator<'a> {
     }
 }
 
+/// Terminal for a request stranded by a scheduler failure the supervisor
+/// could not absorb: delivered tokens are preserved, the error names the
+/// cause, and BOTH the per-request delta stream and the response channel
+/// observe exactly one terminal. Called by [`crate::lifecycle`] outside
+/// any [`Coordinator`] (the panicked segment's coordinator is gone), so
+/// it cannot route through [`Coordinator::terminal`]; the one-terminal
+/// lint tracks it as a second chokepoint.
+pub fn strand_terminal(tx: &Sender<Response>, r: &ResumeState, error: &str) {
+    let mut tokens = r.seq[r.prompt_len.min(r.seq.len())..].to_vec();
+    tokens.truncate(r.max_new);
+    let mut stats = r.stats;
+    stats.clip_to_delivered(tokens.len());
+    let latency = r.enqueued.elapsed().as_secs_f64();
+    let mut itl = r.itl.clone();
+    itl.truncate(tokens.len().saturating_sub(1));
+    let resp = Response {
+        id: r.id,
+        tokens,
+        stats,
+        latency,
+        ttft: r.first_token.unwrap_or(latency),
+        error: Some(error.to_string()),
+        depth_counts: r.depth_counts.clone(),
+        itl,
+    };
+    let reason = crate::trace::Reason::from_error(resp.error.as_deref());
+    crate::trace::req_terminal(resp.id, reason, resp.tokens.len() as u64);
+    if let Some(ev) = &r.events {
+        let _ = ev.send(Delta::Done(resp.clone()));
+    }
+    let _ = tx.send(resp);
+}
+
 #[cfg(test)]
 mod tests {
     // The coordinator requires compiled artifacts; its end-to-end behaviour
@@ -1067,5 +1673,22 @@ mod tests {
         assert!(Coordinator::claim_slot(&mut pool, 8, 16, 1).is_err());
         assert_eq!(pool.live(), 1);
         assert_eq!(pool.get(slot).unwrap().len(), 10);
+    }
+
+    /// Salvage forgiveness (PR 10 satellite): the eviction counter resets
+    /// after a configurable run of clean blocks so one rough patch early
+    /// in a long stream doesn't put the request one fault from eviction
+    /// forever. `reset_after == 0` preserves the old never-reset policy.
+    #[test]
+    fn salvage_decay_resets_after_clean_run() {
+        // Disabled: counter sticks no matter how clean the run.
+        assert_eq!(Coordinator::salvage_decay(2, 1000, 0), 2);
+        // Below the threshold: unchanged.
+        assert_eq!(Coordinator::salvage_decay(2, 63, 64), 2);
+        // At/above the threshold: forgiven.
+        assert_eq!(Coordinator::salvage_decay(2, 64, 64), 0);
+        assert_eq!(Coordinator::salvage_decay(1, 65, 64), 0);
+        // Nothing to forgive stays nothing.
+        assert_eq!(Coordinator::salvage_decay(0, 64, 64), 0);
     }
 }

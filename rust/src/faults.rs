@@ -29,7 +29,8 @@
 //! seed=N                          plan-wide RNG seed (default 0)
 //! <domain>:<op>:<mode>[:burst=K][:permanent]
 //!   domain:op  dispatch:run_lanes | dispatch:run_into |
-//!              dispatch:pack_lane | exec:send | io:read | io:write
+//!              dispatch:pack_lane | exec:send | io:read | io:write |
+//!              swap:stage | swap:readmit
 //!   mode       every=N   fire on every Nth passage of the site
 //!              after=N   fire once at the Nth passage
 //!              p=F       fire with probability F (per-rule rng.rs stream)
@@ -78,6 +79,14 @@ pub enum Site {
     IoRead = 4,
     /// Dataset shard/manifest write.
     IoWrite = 5,
+    /// Draft-lifecycle: staged candidate-bundle load + validation
+    /// (`runtime::stage_draft`). A hit rejects the reload; serving is
+    /// untouched.
+    SwapStage = 6,
+    /// Draft-lifecycle: resident-lane re-admission after a swap or a
+    /// supervisor restart (`coordinator` resume path). A hit exercises
+    /// the salvage-style retry, then the stranded-request terminal.
+    SwapReadmit = 7,
 }
 
 impl Site {
@@ -90,6 +99,8 @@ impl Site {
             Site::ExecSend => "exec:send",
             Site::IoRead => "io:read",
             Site::IoWrite => "io:write",
+            Site::SwapStage => "swap:stage",
+            Site::SwapReadmit => "swap:readmit",
         }
     }
 
@@ -102,6 +113,8 @@ impl Site {
             3 => Some(Site::ExecSend),
             4 => Some(Site::IoRead),
             5 => Some(Site::IoWrite),
+            6 => Some(Site::SwapStage),
+            7 => Some(Site::SwapReadmit),
             _ => None,
         }
     }
@@ -114,6 +127,8 @@ impl Site {
             ("exec", "send") => Some(Site::ExecSend),
             ("io", "read") => Some(Site::IoRead),
             ("io", "write") => Some(Site::IoWrite),
+            ("swap", "stage") => Some(Site::SwapStage),
+            ("swap", "readmit") => Some(Site::SwapReadmit),
             _ => None,
         }
     }
@@ -858,6 +873,8 @@ mod tests {
             Site::ExecSend,
             Site::IoRead,
             Site::IoWrite,
+            Site::SwapStage,
+            Site::SwapReadmit,
         ] {
             assert_eq!(Site::from_index(s as u64), Some(s));
         }

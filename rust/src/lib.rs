@@ -30,6 +30,7 @@
 //! | [`server`] | TCP front end (L4): `/v1/generate`, `/healthz`, `/metrics` |
 //! | [`metrics`] | block efficiency, MBSU, token rate, latency histograms |
 //! | [`faults`] | fault injection, dispatch retry, per-model circuit breakers |
+//! | [`lifecycle`] | draft-bundle hot swap, guarded adoption, scheduler supervision |
 //! | [`telemetry`] | windowed snapshot ring + acceptance-drift detection |
 //! | [`trace`] | flight recorder: spans, Chrome-trace export, access log |
 //! | [`workload`] | synthetic task generators (dolly/xsum/cnndm/wmt) |
@@ -56,6 +57,7 @@ pub mod faults;
 pub mod http;
 pub mod json;
 pub mod kvcache;
+pub mod lifecycle;
 pub mod metrics;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,804 @@
+//! Supervised draft lifecycle: validated hot bundle swaps, guarded
+//! adoption with automatic rollback, and scheduler-panic supervision.
+//!
+//! The paper's premise is that draft quality is a moving target: drafts
+//! are cheap to retrain (§4 trains to convergence in hours on one node)
+//! and acceptance rate — not draft loss — is the serving objective. This
+//! module closes the loop operationally: a freshly distilled bundle can
+//! be adopted by a *running* server without dropping a request, and a
+//! bundle that looks fine offline but collapses acceptance online is
+//! rolled back automatically.
+//!
+//! ```text
+//!   POST /v1/admin/reload-draft
+//!        │ (mailbox arm)
+//!        ▼
+//!   scheduler loop, at a block boundary:
+//!        stage:   load candidate into a staging Model on the scheduler
+//!                 thread (manifest compat + weights parse + golden
+//!                 probes — runtime::stage_draft). Failure → rejected,
+//!                 serving untouched.
+//!        quiesce: dismantle the serving segment — every resident
+//!                 sequence (prompt ++ emitted) becomes a ResumeState.
+//!        swap:    supervisor installs the staged model, keeps the old
+//!                 one as last-known-good, re-admits every resident via
+//!                 the normal admission wave (re-prefill + transplant:
+//!                 token-identical emitted prefixes, no duplicate or
+//!                 lost deltas, terminal() still fires exactly once).
+//!        guard:   for `swap_guard_blocks` blocks the new draft is on
+//!                 probation: an acceptance-drift CUSUM fire, an accept
+//!                 rate below `swap_accept_floor`, or the draft breaker
+//!                 opening rolls back to last-known-good the same way.
+//! ```
+//!
+//! Separately, the supervisor wraps every serving segment in
+//! `catch_unwind`: a scheduler panic no longer kills the process — the
+//! in-flight requests recorded in the [`Lifecycle`] registry are either
+//! re-admitted into a fresh loop (fresh `BatchedCtx`, fresh slot pool)
+//! or, for a crash-looping scheduler, stranded with exactly one terminal
+//! error each ([`crate::coordinator::strand_terminal`]).
+//!
+//! Exported metric families (all defined here, documented in
+//! docs/METRICS.md): `specd_draft_generation`,
+//! `specd_draft_swaps_total{outcome}`, `specd_scheduler_restarts_total`.
+
+use std::collections::BTreeMap;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use crate::config::RunConfig;
+use crate::coordinator::{self, Coordinator, Exit, GuardSpec, Request, Response, ResumeState};
+use crate::error::{Error, Result};
+use crate::exec::{Receiver, Sender};
+use crate::metrics::{prom_counter, prom_gauge, ServeMetrics};
+use crate::rng::Pcg64;
+use crate::runtime::{CompiledArch, Model, Runtime};
+use crate::spec::SpecDecoder;
+
+/// More scheduler panics than this inside [`RESTART_STORM_WINDOW`] is a
+/// crash loop, not a transient: the supervisor stops resuscitating,
+/// strands the registry and fails the serve call.
+pub const RESTART_STORM_CAP: usize = 3;
+/// Sliding window for the restart-storm detector.
+pub const RESTART_STORM_WINDOW: Duration = Duration::from_secs(60);
+
+/// Serving state surfaced by `/readyz` and the admin status endpoint.
+/// Stored as a u64 in [`Lifecycle`] so readers never take a lock.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum State {
+    /// Process boot: models loading, scheduler not yet serving.
+    Starting = 0,
+    /// Steady state.
+    Serving = 1,
+    /// A staged swap is dismantling the current segment (brief).
+    Quiescing = 2,
+    /// Post-swap probation window; rollback triggers are armed.
+    Guarding = 3,
+    /// The scheduler panicked and the supervisor is rebuilding the loop.
+    Restarting = 4,
+    /// SIGTERM received: admission closed, residents draining.
+    Draining = 5,
+}
+
+impl State {
+    pub fn name(self) -> &'static str {
+        match self {
+            State::Starting => "starting",
+            State::Serving => "serving",
+            State::Quiescing => "quiescing",
+            State::Guarding => "guarding",
+            State::Restarting => "restarting",
+            State::Draining => "draining",
+        }
+    }
+
+    fn from_u64(x: u64) -> State {
+        match x {
+            1 => State::Serving,
+            2 => State::Quiescing,
+            3 => State::Guarding,
+            4 => State::Restarting,
+            5 => State::Draining,
+            _ => State::Starting,
+        }
+    }
+
+    /// May `/readyz` report ready? Only the states where the scheduler is
+    /// actually decoding: a quiesce or restart is usually shorter than a
+    /// probe interval, but load balancers that do catch it should steer
+    /// new work elsewhere until the segment is back.
+    pub fn ready(self) -> bool {
+        matches!(self, State::Serving | State::Guarding)
+    }
+}
+
+/// An operator's reload request (the admin endpoint's mailbox payload).
+#[derive(Clone, Debug)]
+pub struct ReloadSpec {
+    /// Manifest model name to stage (usually the serving name, re-exported
+    /// in place by the training pipeline).
+    pub model: String,
+}
+
+/// Outcome record of the most recent swap attempt, for the status surface.
+#[derive(Clone, Debug)]
+pub struct SwapRecord {
+    pub model: String,
+    /// "adopted" | "rejected" | "rolled_back".
+    pub outcome: &'static str,
+    /// Failure cause or rollback trigger; empty for clean adoptions.
+    pub detail: String,
+    /// Serving generation after the attempt resolved.
+    pub generation: u64,
+}
+
+/// What is serving right now.
+#[derive(Clone, Debug)]
+struct ServingInfo {
+    model: String,
+    fingerprint: u64,
+    params: usize,
+}
+
+/// Per-request resume record, fed by the coordinator while a lifecycle
+/// handle is attached. This is the panic-survival ledger: everything
+/// needed to rebuild a request in a fresh scheduler loop, kept OUTSIDE
+/// the loop that can die. Fidelity is correctness-first: sequence,
+/// sampling state, streaming offset and deadline are exact; latency
+/// bookkeeping (TTFT instant, ITL gaps, depth histogram) restarts, so a
+/// restarted request's timing metrics undercount — never its tokens.
+struct RegEntry {
+    prompt: Vec<u32>,
+    emitted: Vec<u32>,
+    sampling: crate::config::SamplingConfig,
+    max_new: usize,
+    enqueued: Instant,
+    deadline_at: Option<Instant>,
+    events: Option<Sender<crate::coordinator::Delta>>,
+    tag: Option<String>,
+    started: bool,
+    streamed: usize,
+    /// RNG snapshot from the end of the last completed block; `None`
+    /// until the first block (recomputed from the seed — no draws yet).
+    rng: Option<Pcg64>,
+}
+
+/// Shared lifecycle handle: the admin endpoints, the scheduler loop and
+/// the supervisor all hold one `Arc<Lifecycle>`.
+pub struct Lifecycle {
+    state: AtomicU64,
+    /// Monotonic count of serving-draft changes (adoptions + rollbacks),
+    /// starting at 1 for the boot bundle. The `specd_draft_generation`
+    /// gauge.
+    generation: AtomicU64,
+    /// Fast-path flag for the mailbox: one relaxed load per scheduler
+    /// iteration when no reload is pending.
+    reload_armed: AtomicBool,
+    reload: Mutex<Option<ReloadSpec>>,
+    serving: Mutex<ServingInfo>,
+    last_swap: Mutex<Option<SwapRecord>>,
+    swaps_adopted: AtomicU64,
+    swaps_rejected: AtomicU64,
+    swaps_rolled_back: AtomicU64,
+    scheduler_restarts: AtomicU64,
+    /// Chaos hook: the next scheduler iteration panics (tests the
+    /// supervisor restart path end to end).
+    panic_trip: AtomicBool,
+    registry: Mutex<BTreeMap<u64, RegEntry>>,
+}
+
+impl Lifecycle {
+    pub fn new(model: &str, fingerprint: u64, params: usize) -> Lifecycle {
+        Lifecycle {
+            state: AtomicU64::new(State::Starting as u64),
+            generation: AtomicU64::new(1),
+            reload_armed: AtomicBool::new(false),
+            reload: Mutex::new(None),
+            serving: Mutex::new(ServingInfo {
+                model: model.to_string(),
+                fingerprint,
+                params,
+            }),
+            last_swap: Mutex::new(None),
+            swaps_adopted: AtomicU64::new(0),
+            swaps_rejected: AtomicU64::new(0),
+            swaps_rolled_back: AtomicU64::new(0),
+            scheduler_restarts: AtomicU64::new(0),
+            panic_trip: AtomicBool::new(false),
+            registry: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    fn lock<'l, T>(m: &'l Mutex<T>) -> MutexGuard<'l, T> {
+        m.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    pub fn state(&self) -> State {
+        State::from_u64(self.state.load(Ordering::Acquire))
+    }
+
+    pub fn set_state(&self, s: State) {
+        self.state.store(s as u64, Ordering::Release);
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Relaxed)
+    }
+
+    /// (model, weights fingerprint, parameter count) serving right now.
+    pub fn serving(&self) -> (String, u64, usize) {
+        let s = Self::lock(&self.serving);
+        (s.model.clone(), s.fingerprint, s.params)
+    }
+
+    /// Fill in the serving identity without touching the generation
+    /// counter (boot-time: the handle is created before models load).
+    pub fn set_serving(&self, model: &str, fingerprint: u64, params: usize) {
+        *Self::lock(&self.serving) = ServingInfo {
+            model: model.to_string(),
+            fingerprint,
+            params,
+        };
+    }
+
+    pub fn last_swap(&self) -> Option<SwapRecord> {
+        Self::lock(&self.last_swap).clone()
+    }
+
+    /// (adopted, rejected, rolled_back, scheduler_restarts).
+    pub fn counters(&self) -> (u64, u64, u64, u64) {
+        (
+            self.swaps_adopted.load(Ordering::Relaxed),
+            self.swaps_rejected.load(Ordering::Relaxed),
+            self.swaps_rolled_back.load(Ordering::Relaxed),
+            self.scheduler_restarts.load(Ordering::Relaxed),
+        )
+    }
+
+    // ---- reload mailbox ---------------------------------------------------
+
+    /// Arm a reload. Returns `false` (HTTP 409) when one is already
+    /// pending — the mailbox holds exactly one spec.
+    pub fn request_reload(&self, spec: ReloadSpec) -> bool {
+        let mut slot = Self::lock(&self.reload);
+        if slot.is_some() {
+            return false;
+        }
+        *slot = Some(spec);
+        self.reload_armed.store(true, Ordering::Release);
+        true
+    }
+
+    pub fn pending_reload(&self) -> Option<String> {
+        Self::lock(&self.reload).as_ref().map(|s| s.model.clone())
+    }
+
+    /// Scheduler-side: claim the pending reload, if any. One relaxed load
+    /// on the hot path when the mailbox is empty.
+    pub fn take_reload(&self) -> Option<ReloadSpec> {
+        if !self.reload_armed.load(Ordering::Relaxed) {
+            return None;
+        }
+        let spec = Self::lock(&self.reload).take();
+        self.reload_armed.store(false, Ordering::Release);
+        spec
+    }
+
+    // ---- swap/restart accounting (trace instants live here so the
+    //      counters and the flight recorder cannot drift apart) ----------
+
+    pub fn record_adopted(&self, model: &str, fingerprint: u64, params: usize, guarded: bool) {
+        let generation = self.generation.fetch_add(1, Ordering::Relaxed) + 1;
+        *Self::lock(&self.serving) = ServingInfo {
+            model: model.to_string(),
+            fingerprint,
+            params,
+        };
+        self.swaps_adopted.fetch_add(1, Ordering::Relaxed);
+        *Self::lock(&self.last_swap) = Some(SwapRecord {
+            model: model.to_string(),
+            outcome: "adopted",
+            detail: String::new(),
+            generation,
+        });
+        self.set_state(if guarded { State::Guarding } else { State::Serving });
+        crate::trace::swap(generation, 0);
+    }
+
+    pub fn record_rejected(&self, model: &str, error: &str) {
+        self.swaps_rejected.fetch_add(1, Ordering::Relaxed);
+        let generation = self.generation();
+        *Self::lock(&self.last_swap) = Some(SwapRecord {
+            model: model.to_string(),
+            outcome: "rejected",
+            detail: error.to_string(),
+            generation,
+        });
+        crate::trace::swap(generation, 1);
+    }
+
+    /// `reason` uses the trace encoding: 0 drift, 1 accept floor,
+    /// 2 breaker open.
+    pub fn record_rolled_back(&self, restored_model: &str, fingerprint: u64, params: usize, reason: u64) {
+        let generation = self.generation.fetch_add(1, Ordering::Relaxed) + 1;
+        *Self::lock(&self.serving) = ServingInfo {
+            model: restored_model.to_string(),
+            fingerprint,
+            params,
+        };
+        self.swaps_rolled_back.fetch_add(1, Ordering::Relaxed);
+        let detail = match reason {
+            0 => "drift",
+            1 => "accept_floor",
+            _ => "breaker_open",
+        };
+        *Self::lock(&self.last_swap) = Some(SwapRecord {
+            model: restored_model.to_string(),
+            outcome: "rolled_back",
+            detail: detail.to_string(),
+            generation,
+        });
+        self.set_state(State::Serving);
+        crate::trace::rollback(generation, reason);
+    }
+
+    pub fn record_restart(&self, readmitted: u64) {
+        let n = self.scheduler_restarts.fetch_add(1, Ordering::Relaxed) + 1;
+        crate::trace::sched_restart(n, readmitted);
+    }
+
+    // ---- chaos hook -------------------------------------------------------
+
+    /// Make the next scheduler iteration panic (supervision test hook;
+    /// wired to the debug endpoints, never to normal operation).
+    pub fn trip_scheduler_panic(&self) {
+        self.panic_trip.store(true, Ordering::Release);
+    }
+
+    pub fn take_panic_trip(&self) -> bool {
+        self.panic_trip.swap(false, Ordering::AcqRel)
+    }
+
+    // ---- resume registry --------------------------------------------------
+
+    pub fn register(&self, req: &Request, enqueued: Instant, deadline_at: Option<Instant>) {
+        Self::lock(&self.registry).insert(
+            req.id,
+            RegEntry {
+                prompt: req.prompt.clone(),
+                emitted: Vec::new(),
+                sampling: req.sampling,
+                max_new: req.max_new,
+                enqueued,
+                deadline_at,
+                events: req.events.clone(),
+                tag: req.tag.clone(),
+                started: false,
+                streamed: 0,
+                rng: None,
+            },
+        );
+    }
+
+    pub fn note_started(&self, id: u64) {
+        if let Some(e) = Self::lock(&self.registry).get_mut(&id) {
+            e.started = true;
+        }
+    }
+
+    /// Record one completed block: tokens appended to the resume sequence,
+    /// the post-block RNG snapshot, and the streamed offset.
+    pub fn note_block(&self, id: u64, emitted: &[u32], rng: &Pcg64, streamed: usize) {
+        if let Some(e) = Self::lock(&self.registry).get_mut(&id) {
+            e.emitted.extend_from_slice(emitted);
+            e.rng = Some(rng.clone());
+            e.streamed = streamed;
+        }
+    }
+
+    /// A terminal fired for this request — it no longer needs resuming.
+    pub fn unregister(&self, id: u64) {
+        Self::lock(&self.registry).remove(&id);
+    }
+
+    pub fn registry_len(&self) -> usize {
+        Self::lock(&self.registry).len()
+    }
+
+    /// Consume the registry into resume records (ascending id, so restart
+    /// re-admission order is deterministic). Used only on the panic path;
+    /// clean swap exits carry full-fidelity state out of the loop instead.
+    pub fn drain_registry(&self) -> Vec<ResumeState> {
+        let map = std::mem::take(&mut *Self::lock(&self.registry));
+        map.into_iter()
+            .map(|(id, e)| {
+                let rng = e
+                    .rng
+                    .unwrap_or_else(|| Pcg64::with_stream(e.sampling.seed ^ id, 0x5e0e));
+                let mut seq = e.prompt;
+                let prompt_len = seq.len();
+                seq.extend_from_slice(&e.emitted);
+                ResumeState {
+                    id,
+                    seq,
+                    prompt_len,
+                    sampling: e.sampling,
+                    max_new: e.max_new,
+                    rng,
+                    enqueued: e.enqueued,
+                    first_token: None,
+                    deadline_at: e.deadline_at,
+                    events: e.events,
+                    streamed: e.streamed,
+                    depth_counts: Vec::new(),
+                    tag: e.tag,
+                    last_emit: None,
+                    itl: Vec::new(),
+                    salvages: 0,
+                    clean_blocks: 0,
+                    stats: Default::default(),
+                    capture: None,
+                    started: e.started,
+                }
+            })
+            .collect()
+    }
+
+    // ---- metrics ----------------------------------------------------------
+
+    /// Lifecycle Prometheus families, appended to the `/metrics` scrape.
+    pub fn prometheus_text(&self) -> String {
+        let mut out = String::new();
+        prom_gauge(
+            &mut out,
+            "specd_draft_generation",
+            "Serving-draft generation: bumps on every adoption and rollback (boot bundle = 1).",
+            self.generation() as f64,
+        );
+        let fam = "specd_draft_swaps_total";
+        out.push_str(&format!(
+            "# HELP {fam} Draft-bundle swap attempts by outcome.\n# TYPE {fam} counter\n"
+        ));
+        for (outcome, v) in [
+            ("adopted", &self.swaps_adopted),
+            ("rejected", &self.swaps_rejected),
+            ("rolled_back", &self.swaps_rolled_back),
+        ] {
+            out.push_str(&format!(
+                "{fam}{{outcome=\"{outcome}\"}} {}\n",
+                v.load(Ordering::Relaxed)
+            ));
+        }
+        prom_counter(
+            &mut out,
+            "specd_scheduler_restarts_total",
+            "Supervisor restarts of the scheduler loop after a panic.",
+            self.scheduler_restarts.load(Ordering::Relaxed) as f64,
+        );
+        out
+    }
+}
+
+// ---- supervisor ------------------------------------------------------------
+
+/// Everything the supervisor needs besides the models: where to stage
+/// candidate bundles from and what to attach to each serving segment's
+/// coordinator.
+pub struct SupervisorCtx<'a> {
+    pub rt: &'a Runtime,
+    /// Artifact directory reloads re-read their manifest from.
+    pub artifacts_dir: &'a str,
+    /// The serving draft's compiled architecture — staged bundles reuse
+    /// its executables, so they must match it exactly.
+    pub draft_arch: &'a Arc<CompiledArch>,
+    /// Serving vocabulary hash; staged bundles must match.
+    pub vocab_hash: &'a str,
+    pub target: &'a Model,
+    pub cfg: &'a RunConfig,
+    pub lifecycle: &'a Arc<Lifecycle>,
+    /// Re-bound onto every adopted draft so degraded-mode detection and
+    /// the breaker-open rollback trigger survive swaps.
+    pub draft_breaker: Option<Arc<crate::faults::Breaker>>,
+    pub gauges: Option<Arc<crate::metrics::SchedulerGauges>>,
+    pub telemetry: Option<Arc<crate::telemetry::Telemetry>>,
+    pub log_requests: bool,
+}
+
+/// Serve until the request channel closes, supervising the scheduler
+/// loop: each iteration of this outer loop is one serving *segment*
+/// (one `Coordinator::serve_supervised` call) ending in a drain, a
+/// draft swap, a rollback, or a panic. Models are owned HERE, outside
+/// the loop that can die, so a panic or a swap never loses them.
+pub fn run_supervised(
+    ctx: &SupervisorCtx<'_>,
+    mut draft: Model,
+    rx: &Receiver<Request>,
+    tx: &Sender<Response>,
+) -> Result<ServeMetrics> {
+    let mut merged = ServeMetrics::default();
+    // Last-known-good: the previous serving draft, retained across a
+    // guarded adoption so rollback is a swap back, not a reload.
+    let mut lkg: Option<Model> = None;
+    let mut resume: Vec<ResumeState> = Vec::new();
+    let mut guard: Option<GuardSpec> = None;
+    let mut restarts: Vec<Instant> = Vec::new();
+    // The supervisor is the first code that sees the loaded draft, so it
+    // fills in the serving identity (the lifecycle handle is created at
+    // the HTTP edge before any model loads).
+    ctx.lifecycle.set_serving(&draft.name, draft.fingerprint, draft.params);
+    if ctx.lifecycle.state() == State::Starting {
+        ctx.lifecycle.set_state(State::Serving);
+    }
+    loop {
+        // The staged model is parked here by the stager closure, which
+        // runs ON the scheduler thread (PJRT handles are not Send) but
+        // must outlive the segment that staged it.
+        let mut staged: Option<Model> = None;
+        let mut staged_name = String::new();
+        let outcome = {
+            let decoder = SpecDecoder::new(&draft, ctx.target, ctx.cfg.gamma)?;
+            let mut coord = Coordinator::new(decoder, ctx.cfg.clone())?
+                .with_lifecycle(ctx.lifecycle.clone())
+                .with_access_log(ctx.log_requests);
+            if let Some(g) = &ctx.gauges {
+                coord = coord.with_gauges(g.clone());
+            }
+            if let Some(t) = &ctx.telemetry {
+                coord = coord.with_telemetry(t.clone());
+            }
+            let seg_resume = std::mem::take(&mut resume);
+            let seg_guard = guard.take();
+            let mut stager = |spec: &ReloadSpec| -> Result<()> {
+                let m = ctx.rt.stage_draft(
+                    ctx.artifacts_dir,
+                    ctx.draft_arch,
+                    ctx.vocab_hash,
+                    &spec.model,
+                )?;
+                staged_name = spec.model.clone();
+                staged = Some(m);
+                Ok(())
+            };
+            std::panic::catch_unwind(AssertUnwindSafe(|| {
+                coord.serve_supervised(rx, tx, seg_resume, Some(&mut stager), seg_guard)
+            }))
+        };
+        match outcome {
+            Ok(Ok(out)) => {
+                merged.merge(&out.metrics);
+                match out.exit {
+                    Exit::Drained => return Ok(merged),
+                    Exit::Swap => {
+                        let Some(mut adopted) = staged else {
+                            // Defensive: a swap exit without a staged
+                            // model resumes on the current draft.
+                            resume = out.residents;
+                            continue;
+                        };
+                        if let Some(b) = &ctx.draft_breaker {
+                            adopted.set_breaker(b.clone());
+                        }
+                        // Guard baselines are captured at adoption so the
+                        // triggers fire on what the NEW draft does, not on
+                        // conditions it inherited.
+                        let drift_at_entry =
+                            ctx.telemetry.as_ref().is_some_and(|t| t.drift_active());
+                        let opens_at_entry =
+                            ctx.draft_breaker.as_ref().map(|b| b.opens()).unwrap_or(0);
+                        let fingerprint = adopted.fingerprint;
+                        let params = adopted.params;
+                        lkg = Some(std::mem::replace(&mut draft, adopted));
+                        let guarded = ctx.cfg.swap_guard_blocks > 0;
+                        ctx.lifecycle.record_adopted(&staged_name, fingerprint, params, guarded);
+                        if guarded {
+                            guard = Some(GuardSpec {
+                                guard_blocks: ctx.cfg.swap_guard_blocks,
+                                accept_floor: ctx.cfg.swap_accept_floor,
+                                drift_at_entry,
+                                opens_at_entry,
+                            });
+                        }
+                        resume = out.residents;
+                    }
+                    Exit::Rollback(reason) => {
+                        if let Some(prev) = lkg.take() {
+                            draft = prev;
+                        }
+                        ctx.lifecycle.record_rolled_back(
+                            &draft.name,
+                            draft.fingerprint,
+                            draft.params,
+                            reason,
+                        );
+                        resume = out.residents;
+                    }
+                }
+            }
+            Ok(Err(e)) => {
+                // Scheduler-fatal error (not a panic): requests that never
+                // reached their terminal are stranded with exactly one
+                // error terminal each, then the failure propagates.
+                let stranded = ctx.lifecycle.drain_registry();
+                for r in &stranded {
+                    coordinator::strand_terminal(tx, r, &format!("scheduler failed: {e}"));
+                }
+                return Err(e);
+            }
+            Err(_panic) => {
+                let now = Instant::now();
+                restarts.retain(|t| now.duration_since(*t) < RESTART_STORM_WINDOW);
+                restarts.push(now);
+                ctx.lifecycle.set_state(State::Restarting);
+                if restarts.len() > RESTART_STORM_CAP {
+                    let stranded = ctx.lifecycle.drain_registry();
+                    ctx.lifecycle.record_restart(0);
+                    for r in &stranded {
+                        coordinator::strand_terminal(
+                            tx,
+                            r,
+                            "scheduler restart storm: crash loop, request stranded",
+                        );
+                    }
+                    return Err(Error::Scheduler(format!(
+                        "scheduler panicked {} times inside {:?}; giving up",
+                        restarts.len(),
+                        RESTART_STORM_WINDOW
+                    )));
+                }
+                // Rebuild the loop from the registry: a fresh segment gets
+                // a fresh BatchedCtx and slot pool, and every registered
+                // request is re-admitted (started ones re-prefill + resume
+                // mid-stream, queued ones go back to pending).
+                resume = ctx.lifecycle.drain_registry();
+                ctx.lifecycle.record_restart(resume.len() as u64);
+                eprintln!(
+                    "specd: scheduler panicked; restarting with {} resident request(s)",
+                    resume.len()
+                );
+                // A panic mid-guard loses the guard's block counters;
+                // the conservative choice is to keep serving the new
+                // draft unguarded rather than roll back on partial data.
+                guard = None;
+                ctx.lifecycle.set_state(State::Serving);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SamplingConfig;
+
+    fn lc() -> Lifecycle {
+        Lifecycle::new("draft_a", 0xfeed, 1234)
+    }
+
+    #[test]
+    fn state_roundtrip_and_readiness() {
+        let l = lc();
+        assert_eq!(l.state(), State::Starting);
+        assert!(!l.state().ready());
+        for s in [
+            State::Serving,
+            State::Quiescing,
+            State::Guarding,
+            State::Restarting,
+            State::Draining,
+        ] {
+            l.set_state(s);
+            assert_eq!(l.state(), s);
+            assert_eq!(State::from_u64(s as u64), s);
+        }
+        assert!(State::Serving.ready() && State::Guarding.ready());
+        assert!(!State::Quiescing.ready() && !State::Restarting.ready() && !State::Draining.ready());
+    }
+
+    #[test]
+    fn reload_mailbox_holds_exactly_one() {
+        let l = lc();
+        assert!(l.take_reload().is_none());
+        assert!(l.request_reload(ReloadSpec { model: "draft_b".into() }));
+        assert_eq!(l.pending_reload().as_deref(), Some("draft_b"));
+        assert!(!l.request_reload(ReloadSpec { model: "draft_c".into() }), "409 while pending");
+        let spec = l.take_reload().expect("armed");
+        assert_eq!(spec.model, "draft_b");
+        assert!(l.take_reload().is_none(), "mailbox drained");
+        assert!(l.pending_reload().is_none());
+        assert!(l.request_reload(ReloadSpec { model: "draft_c".into() }), "re-armable");
+    }
+
+    #[test]
+    fn swap_accounting_generation_and_counters() {
+        let l = lc();
+        assert_eq!(l.generation(), 1);
+        l.record_rejected("draft_bad", "golden probe mismatch");
+        assert_eq!(l.generation(), 1, "rejection never bumps the generation");
+        l.record_adopted("draft_b", 0xbeef, 999, true);
+        assert_eq!(l.generation(), 2);
+        assert_eq!(l.state(), State::Guarding);
+        assert_eq!(l.serving().0, "draft_b");
+        assert_eq!(l.serving().1, 0xbeef);
+        l.record_rolled_back("draft_a", 0xfeed, 1234, 1);
+        assert_eq!(l.generation(), 3, "rollback is a serving change too");
+        assert_eq!(l.state(), State::Serving);
+        assert_eq!(l.serving().0, "draft_a");
+        let (adopted, rejected, rolled_back, restarts) = l.counters();
+        assert_eq!((adopted, rejected, rolled_back, restarts), (1, 1, 1, 0));
+        let last = l.last_swap().expect("recorded");
+        assert_eq!(last.outcome, "rolled_back");
+        assert_eq!(last.detail, "accept_floor");
+        l.record_restart(2);
+        assert_eq!(l.counters().3, 1);
+    }
+
+    #[test]
+    fn panic_trip_fires_once() {
+        let l = lc();
+        assert!(!l.take_panic_trip());
+        l.trip_scheduler_panic();
+        assert!(l.take_panic_trip());
+        assert!(!l.take_panic_trip(), "one trip, one panic");
+    }
+
+    #[test]
+    fn registry_roundtrip_and_drain() {
+        let l = lc();
+        let mut req = Request::new(9, vec![1, 2, 3], 8, SamplingConfig::greedy());
+        req.tag = Some("xsum".into());
+        let now = Instant::now();
+        l.register(&req, now, None);
+        // A second, never-started request drains as re-queueable.
+        l.register(&Request::new(4, vec![7], 2, SamplingConfig::greedy()), now, None);
+        assert_eq!(l.registry_len(), 2);
+        l.note_started(9);
+        let rng = Pcg64::with_stream(9, 0x5e0e);
+        l.note_block(9, &[5, 6], &rng, 2);
+        let drained = l.drain_registry();
+        assert_eq!(l.registry_len(), 0, "drain consumes the registry");
+        assert_eq!(drained.len(), 2);
+        assert_eq!(drained[0].id, 4, "ascending id order");
+        assert!(!drained[0].started);
+        assert_eq!(drained[0].seq, vec![7]);
+        let r = &drained[1];
+        assert!(r.started);
+        assert_eq!(r.seq, vec![1, 2, 3, 5, 6], "seq = prompt ++ emitted");
+        assert_eq!(r.prompt_len, 3);
+        assert_eq!(r.streamed, 2);
+        assert_eq!(r.tag.as_deref(), Some("xsum"));
+    }
+
+    #[test]
+    fn unregister_removes_terminated_requests() {
+        let l = lc();
+        let now = Instant::now();
+        l.register(&Request::new(1, vec![1], 4, SamplingConfig::greedy()), now, None);
+        l.register(&Request::new(2, vec![2], 4, SamplingConfig::greedy()), now, None);
+        l.unregister(1);
+        let drained = l.drain_registry();
+        assert_eq!(drained.len(), 1);
+        assert_eq!(drained[0].id, 2);
+    }
+
+    #[test]
+    fn prometheus_families_render() {
+        let l = lc();
+        l.record_adopted("draft_b", 1, 2, false);
+        l.record_rejected("draft_c", "bad magic");
+        let text = l.prometheus_text();
+        for fam in [
+            "specd_draft_generation",
+            "specd_draft_swaps_total",
+            "specd_scheduler_restarts_total",
+        ] {
+            assert!(text.contains(&format!("# TYPE {fam}")), "missing {fam}");
+        }
+        assert!(text.contains("specd_draft_generation 2"));
+        assert!(text.contains("specd_draft_swaps_total{outcome=\"adopted\"} 1"));
+        assert!(text.contains("specd_draft_swaps_total{outcome=\"rejected\"} 1"));
+        assert!(text.contains("specd_draft_swaps_total{outcome=\"rolled_back\"} 0"));
+        assert!(text.contains("specd_scheduler_restarts_total 0"));
+    }
+}

@@ -4,7 +4,8 @@
 //!   info      print the artifact manifest summary (models, ratios, arch)
 //!   generate  run one prompt through speculative decoding (or --baseline)
 //!   serve     run the HTTP serving subsystem (POST /v1/generate, streaming,
-//!             /healthz, /metrics) over the continuous-batching coordinator
+//!             /healthz, /readyz, /metrics, optional draft-lifecycle admin
+//!             endpoints) over the supervised continuous-batching coordinator
 //!   replay    run a Poisson serving trace through the coordinator in-process
 //!   distill   bulk-generate a sharded distillation dataset from the target
 //!             (throughput mode; captures target top-k logits per position)
@@ -42,6 +43,54 @@ use specd::server::{Server, ServerConfig};
 use specd::spec::SpecDecoder;
 use specd::tokenizer::Tokenizer;
 use specd::workload::{build_trace, EvalSuite, TraceConfig};
+
+/// Graceful-drain signal handling for `specd serve`, std-only: a raw
+/// `signal(2)` registration flipping one atomic. The handler body is
+/// async-signal-safe (an atomic swap, and `_exit` on the second signal
+/// when the operator insists on immediate death).
+#[cfg(unix)]
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    pub static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+        fn _exit(code: i32) -> !;
+    }
+
+    extern "C" fn on_signal(_signum: i32) {
+        if SHUTDOWN.swap(true, Ordering::SeqCst) {
+            // Second signal while draining: exit now, nonzero.
+            unsafe { _exit(130) }
+        }
+    }
+
+    /// Install the drain handler for SIGTERM and SIGINT.
+    pub fn install() {
+        let h: extern "C" fn(i32) = on_signal;
+        unsafe {
+            signal(SIGTERM, h as usize);
+            signal(SIGINT, h as usize);
+        }
+    }
+
+    pub fn requested() -> bool {
+        SHUTDOWN.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod sig {
+    pub fn install() {}
+
+    pub fn requested() -> bool {
+        false
+    }
+}
 
 fn main() {
     if let Err(e) = run() {
@@ -100,12 +149,27 @@ fn run() -> Result<()> {
              "serve/replay: consecutive dispatch failures that open a model's circuit breaker")
         .opt("breaker-cooldown-ms", "1000",
              "serve/replay: open-breaker cooldown before a half-open probe is allowed")
+        .opt("swap-guard-blocks", "64",
+             "serve/replay: post-swap probation window in scheduler blocks before a new \
+              draft bundle is trusted (0 = adopt unguarded, no auto-rollback)")
+        .opt("swap-accept-floor", "0",
+             "serve/replay: acceptance-rate floor inside the guard window; falling below \
+              it rolls the swap back (0 = disabled)")
+        .opt("salvage-reset-blocks", "64",
+             "serve/replay: consecutive clean blocks after which a request's salvage \
+              count resets (0 = never reset)")
+        .opt("drain-deadline-ms", "30000",
+             "serve: max milliseconds to wait for in-flight requests after SIGTERM \
+              before exiting nonzero")
         .flag("baseline", "generate: use autoregressive decoding instead")
         .flag("log-requests",
               "serve/replay: one structured JSON access-log line per request terminal on stderr")
         .flag("debug-endpoints",
               "serve: expose GET /debug/trace, /debug/requests/<id> and \
                /debug/stats (404 otherwise)")
+        .flag("admin-endpoints",
+              "serve: expose POST /v1/admin/reload-draft and GET /v1/admin/draft \
+               (404 otherwise)")
         .flag("once", "top: print one frame and exit (no screen redraw)")
         .parse()?;
 
@@ -312,8 +376,20 @@ fn serve_http(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
         max_slots: args.usize("max-slots")?,
         queue_depth: args.usize("queue-depth")?,
         prefill_budget: args.usize("prefill-budget")?,
+        swap_guard_blocks: args.usize("swap-guard-blocks")?,
+        swap_accept_floor: args.f64("swap-accept-floor")?,
+        salvage_reset_blocks: args.usize("salvage-reset-blocks")? as u32,
     };
     run_cfg.validate()?;
+    // SIGTERM/SIGINT start a graceful drain instead of killing the
+    // process mid-request (second signal exits immediately).
+    sig::install();
+
+    // Draft-lifecycle control plane, shared between the supervisor (swap
+    // bookkeeping, request registry) and the server (/readyz, admin
+    // endpoints, /metrics). The serving identity is filled in by the
+    // supervisor once the model loads.
+    let lifecycle = Arc::new(specd::lifecycle::Lifecycle::new(args.str("draft"), 0, 0));
 
     // Shared with the scheduler thread: pool occupancy + per-phase timing
     // surfaced live on GET /metrics.
@@ -334,22 +410,39 @@ fn serve_http(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
     let sched_gauges = gauges.clone();
     let sched_telemetry = telemetry.clone();
     let sched_resilience = resilience.clone();
+    let sched_lifecycle = lifecycle.clone();
     let scheduler = std::thread::Builder::new()
         .name("specd-scheduler".to_string())
         .spawn(move || -> Result<ServeMetrics> {
             let manifest = Manifest::load(&sched_cfg.artifacts_dir)?;
-            let mut l = load(&manifest, &sched_cfg.draft_model, &sched_cfg.target_model)?;
+            let rt = Runtime::new()?;
+            eprintln!("[specd] PJRT platform: {}", rt.platform());
+            let draft_arch = rt.load_arch(&manifest, "draft")?;
+            let target_arch = rt.load_arch(&manifest, "target")?;
+            let mut draft = rt.load_model(&manifest, &draft_arch, &sched_cfg.draft_model)?;
+            let mut target = rt.load_model(&manifest, &target_arch, &sched_cfg.target_model)?;
             // Per-model circuit breakers: every logical dispatch records
             // on them, and an open draft breaker flips the engine into
             // degraded target-only decoding instead of failing requests.
-            l.draft.set_breaker(sched_resilience.draft.clone());
-            l.target.set_breaker(sched_resilience.target.clone());
-            let decoder = SpecDecoder::new(&l.draft, &l.target, sched_cfg.gamma)?;
-            let coord = Coordinator::new(decoder, sched_cfg.clone())?
-                .with_gauges(sched_gauges)
-                .with_telemetry(sched_telemetry)
-                .with_access_log(log_requests);
-            coord.serve(req_rx, resp_tx)
+            draft.set_breaker(sched_resilience.draft.clone());
+            target.set_breaker(sched_resilience.target.clone());
+            // The supervisor owns the models across serving segments: a
+            // hot draft swap, a guarded rollback or a scheduler panic
+            // replaces the segment, never the process.
+            let ctx = specd::lifecycle::SupervisorCtx {
+                rt: &rt,
+                artifacts_dir: &sched_cfg.artifacts_dir,
+                draft_arch: &draft_arch,
+                vocab_hash: &manifest.vocab_hash,
+                target: &target,
+                cfg: &sched_cfg,
+                lifecycle: &sched_lifecycle,
+                draft_breaker: Some(sched_resilience.draft.clone()),
+                gauges: Some(sched_gauges),
+                telemetry: Some(sched_telemetry),
+                log_requests,
+            };
+            specd::lifecycle::run_supervised(&ctx, draft, &req_rx, &resp_tx)
         })
         .map_err(specd::Error::Io)?;
 
@@ -365,25 +458,50 @@ fn serve_http(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
         telemetry: Some(telemetry.clone()),
         debug_endpoints: args.flag("debug-endpoints"),
         resilience: Some(resilience.clone()),
+        lifecycle: Some(lifecycle.clone()),
+        admin_endpoints: args.flag("admin-endpoints"),
         ..ServerConfig::default()
     };
     let debug_endpoints = srv_cfg.debug_endpoints;
-    let server = Server::start(srv_cfg, tokenizer, req_tx)?;
+    let admin_endpoints = srv_cfg.admin_endpoints;
+    let mut server = Server::start(srv_cfg, tokenizer, req_tx)?;
     println!("specd: serving on http://{}", server.addr());
     println!("  POST /v1/generate          generate (JSON in/out)");
     println!("  POST /v1/generate?stream=1 chunked per-block token stream");
-    println!("  GET  /healthz | /metrics   liveness | Prometheus");
+    println!("  GET  /healthz | /readyz | /metrics   liveness | readiness | Prometheus");
     if debug_endpoints {
         println!("  GET  /debug/trace | /debug/requests/<id>  flight recorder");
         println!("  GET  /debug/stats[?stream=1]  telemetry snapshots (JSON | SSE)");
     }
+    if admin_endpoints {
+        println!("  POST /v1/admin/reload-draft  stage + hot-swap the draft bundle");
+        println!("  GET  /v1/admin/draft         bundle-generation status");
+    }
 
-    // The scheduler only returns when the admission queue closes (the
-    // server stopping) or on startup failure. std-only means no signal
-    // handling, so in normal operation this process runs until killed;
-    // the join's practical job is surfacing startup errors (bad
-    // artifacts, bad config) as a clean nonzero exit instead of a
-    // listener that 503s forever.
+    // The scheduler returns on its own when the admission queue closes
+    // (the server stopping) or on startup failure (bad artifacts, bad
+    // config — surfaced as a clean nonzero exit instead of a listener
+    // that 503s forever). SIGTERM/SIGINT starts a graceful drain bounded
+    // by --drain-deadline-ms.
+    let drain_deadline = std::time::Duration::from_millis(args.u64("drain-deadline-ms")?);
+    while !scheduler.is_finished() && !sig::requested() {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    if sig::requested() && !scheduler.is_finished() {
+        eprintln!("[specd] shutdown signal: draining (deadline {drain_deadline:?})");
+        lifecycle.set_state(specd::lifecycle::State::Draining);
+        // Stop accepting, finish in-flight HTTP, close the admission
+        // queue; the scheduler then drains its residents and returns.
+        server.shutdown();
+        let drain_start = std::time::Instant::now();
+        while !scheduler.is_finished() {
+            if drain_start.elapsed() > drain_deadline {
+                eprintln!("[specd] drain deadline exceeded with requests in flight; exiting");
+                std::process::exit(1);
+            }
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        }
+    }
     let result = scheduler.join().expect("scheduler thread");
     drop(server); // graceful drain; also closes the admission queue
     let _ = drainer.join();
@@ -414,6 +532,9 @@ fn replay(manifest: &Manifest, args: &specd::cli::Parsed) -> Result<()> {
         max_slots: args.usize("max-slots")?,
         queue_depth: args.usize("queue-depth")?,
         prefill_budget: args.usize("prefill-budget")?,
+        swap_guard_blocks: args.usize("swap-guard-blocks")?,
+        swap_accept_floor: args.f64("swap-accept-floor")?,
+        salvage_reset_blocks: args.usize("salvage-reset-blocks")? as u32,
     };
     let trace_cfg = TraceConfig {
         rate: args.f64("rate")?,

@@ -237,6 +237,7 @@ impl Runtime {
         let path = manifest.weights_path(model_name)?;
         let wf = WeightsFile::load(utf8_path(&path)?)?;
         wf.check_order(&arch.arch.param_order)?;
+        let fingerprint = wf.fingerprint();
         let mut weight_bufs = Vec::with_capacity(wf.len());
         for t in wf.tensors_in_order() {
             weight_bufs.push(self.client.buffer_from_host_buffer::<f32>(
@@ -252,6 +253,7 @@ impl Runtime {
             weight_bufs,
             params: info.params,
             c_ratio: info.c_ratio,
+            fingerprint,
             scratch: RefCell::new(vec![0f32; arch.arch.state_len]),
             tok_staging: RefCell::new(vec![0i32; max_block]),
             zero_state: vec![0f32; arch.arch.state_len],
@@ -259,6 +261,169 @@ impl Runtime {
             breaker: None,
         })
     }
+}
+
+impl Runtime {
+    /// Stage a candidate draft bundle for a hot swap. Re-reads the
+    /// manifest from disk (the bundle is typically re-exported while
+    /// serving), then gates the candidate on:
+    ///
+    ///   1. vocabulary identity with the serving bundle (a draft trained
+    ///      against a different tokenizer can never be adopted);
+    ///   2. architecture compatibility, field by field, against the
+    ///      SERVING draft arch — the staged model reuses the serving
+    ///      executables, nothing is recompiled, so every shape must
+    ///      match exactly;
+    ///   3. a byte-level weights load (`SPCD1` magic, truncation,
+    ///      trailing bytes, canonical tensor order, manifest
+    ///      `param_order`);
+    ///   4. the bundle's own golden probes ([`validate_golden`]), so a
+    ///      well-formed file holding garbage numerics is still rejected.
+    ///
+    /// Any failure rejects the candidate with zero serving impact; `Ok`
+    /// returns a device-resident model ready for adoption at a block
+    /// boundary.
+    pub fn stage_draft(
+        &self,
+        artifacts_dir: &str,
+        serving_arch: &Arc<CompiledArch>,
+        expected_vocab_hash: &str,
+        model_name: &str,
+    ) -> Result<Model> {
+        // lint: fault-site(swap-stage)
+        crate::faults::inject(crate::faults::Site::SwapStage)?;
+        let manifest = Manifest::load(artifacts_dir)?;
+        if manifest.vocab_hash != expected_vocab_hash {
+            return Err(Error::Manifest(format!(
+                "staged bundle vocab hash {} != serving {expected_vocab_hash}",
+                manifest.vocab_hash
+            )));
+        }
+        let info = manifest.model(model_name)?;
+        let cand_arch = manifest.arch(&info.arch)?;
+        arch_compatible(&serving_arch.arch, cand_arch)?;
+        let model = self.load_model(&manifest, serving_arch, model_name)?;
+        validate_golden(&model, &manifest.root)?;
+        Ok(model)
+    }
+}
+
+/// Field-by-field compatibility between the serving draft architecture
+/// and a staged candidate's. Named-field errors so a rejected reload
+/// tells the operator exactly which dimension drifted.
+fn arch_compatible(serving: &ArchInfo, cand: &ArchInfo) -> Result<()> {
+    let differ = |field: &str| {
+        Err(Error::Manifest(format!(
+            "staged arch '{}' incompatible with serving arch '{}': {field} differs",
+            cand.name, serving.name
+        )))
+    };
+    if cand.n_layers != serving.n_layers {
+        return differ("n_layers");
+    }
+    if cand.n_heads != serving.n_heads {
+        return differ("n_heads");
+    }
+    if cand.hidden != serving.hidden {
+        return differ("hidden");
+    }
+    if cand.head_dim != serving.head_dim {
+        return differ("head_dim");
+    }
+    if cand.max_seq != serving.max_seq {
+        return differ("max_seq");
+    }
+    if cand.vocab_size != serving.vocab_size {
+        return differ("vocab_size");
+    }
+    if cand.kv_len != serving.kv_len {
+        return differ("kv_len");
+    }
+    if cand.state_len != serving.state_len {
+        return differ("state_len");
+    }
+    if cand.param_order != serving.param_order {
+        return differ("param_order");
+    }
+    if cand.batch_sizes != serving.batch_sizes {
+        return differ("batch_sizes");
+    }
+    Ok(())
+}
+
+/// Replay the bundle's own golden probes against a freshly staged model:
+/// two chained verify-block calls checked row-by-row against the
+/// python-exported logits, same tolerance as the runtime integration
+/// suite. A bundle without `golden.json`, or whose file has no probe for
+/// this model, passes — probes gate a swap when they exist, they are not
+/// required to exist (the integration suite separately asserts coverage).
+fn validate_golden(model: &Model, bundle_root: &std::path::Path) -> Result<()> {
+    let path = bundle_root.join("golden.json");
+    if !path.exists() {
+        return Ok(());
+    }
+    let bad = |what: String| Error::Manifest(format!("golden probe for {}: {what}", model.name));
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| bad(format!("cannot read golden.json: {e}")))?;
+    let golden =
+        crate::json::Value::parse(&text).map_err(|e| bad(format!("golden.json: {e}")))?;
+    let probe = golden.get(&model.name);
+    if probe.as_obj().is_none() {
+        return Ok(());
+    }
+    let toks = |key: &str| -> Result<Vec<u32>> {
+        probe
+            .get(key)
+            .as_arr()
+            .ok_or_else(|| bad(format!("missing '{key}'")))?
+            .iter()
+            .map(|x| {
+                x.as_usize().map(|t| t as u32).ok_or_else(|| bad(format!("bad token in '{key}'")))
+            })
+            .collect()
+    };
+    let tokens = toks("tokens")?;
+    let tokens2 = toks("tokens2")?;
+    let verify_block = model.arch.block(Entry::Verify);
+    if tokens.len() != verify_block || tokens2.len() != verify_block {
+        return Err(bad(format!(
+            "probe token length {} != verify block {verify_block}",
+            tokens.len()
+        )));
+    }
+    let v = model.vocab_size();
+    // Call 1 at pos 0, call 2 continuing at pos = block (cache reuse) —
+    // the same chained pair the integration suite pins, so a staged
+    // bundle passes exactly when the committed numerics would.
+    let state = model.new_state()?;
+    let (state, logits1) = model.run(Entry::Verify, state, &tokens, 0)?;
+    let (_state, logits2) = model.run(Entry::Verify, state, &tokens2, tokens.len())?;
+    for (key, logits) in [("logits_head", &logits1), ("logits2_head", &logits2)] {
+        let rows = probe.get(key).as_arr().ok_or_else(|| bad(format!("missing '{key}'")))?;
+        for (r, row) in rows.iter().enumerate() {
+            let cols = row.as_arr().ok_or_else(|| bad(format!("bad row in '{key}'")))?;
+            for (c, want) in cols.iter().enumerate() {
+                let want = want.as_f64().ok_or_else(|| bad(format!("bad cell in '{key}'")))?;
+                let got = logits.get(r * v + c).copied().unwrap_or(f32::NAN) as f64;
+                if !((got - want).abs() < 2e-3 + 1e-3 * want.abs()) {
+                    return Err(bad(format!(
+                        "{key}[{r}][{c}]: staged {got} vs golden {want}"
+                    )));
+                }
+            }
+        }
+    }
+    for (key, logits, len) in [
+        ("logits_last_argmax", &logits1, tokens.len()),
+        ("logits2_last_argmax", &logits2, tokens2.len()),
+    ] {
+        let want = probe.get(key).as_usize().ok_or_else(|| bad(format!("missing '{key}'")))?;
+        let got = crate::tensor::argmax(&logits[(len - 1) * v..len * v]);
+        if got != want {
+            return Err(bad(format!("{key}: staged argmax {got} vs golden {want}")));
+        }
+    }
+    Ok(())
 }
 
 /// A path as `&str`, or [`Error::Weights`] when it is not valid UTF-8 —
@@ -333,6 +498,10 @@ pub struct Model {
     weight_bufs: Vec<xla::PjRtBuffer>,
     pub params: usize,
     pub c_ratio: f64,
+    /// FNV-1a fingerprint of the raw weights file this model was loaded
+    /// from — the draft-lifecycle status surface reports it so operators
+    /// can tell which bundle bytes are actually serving.
+    pub fingerprint: u64,
     /// Host staging buffer for reading logits out of the state vector.
     /// The TFRT CPU PJRT client does not implement partial raw reads
     /// (`CopyRawToHost`), so each call materializes the output literal and

@@ -22,7 +22,15 @@
 //!   With `?stream=1` (or `"stream": true`) the response is
 //!   `Transfer-Encoding: chunked`, SSE-style: one `data: {...}\n\n` event
 //!   per speculation block, then a terminal `data: {"done":true,...}`.
-//! * `GET /healthz` — liveness probe.
+//! * `GET /healthz` — liveness probe (process up; always 200).
+//! * `GET /readyz` — readiness probe: 200 only while the scheduler is
+//!   actually decoding; 503 with a JSON reason while draining, during a
+//!   swap quiesce, or while the supervisor rebuilds a panicked scheduler.
+//! * `POST /v1/admin/reload-draft` — stage + hot-swap the draft bundle
+//!   (202 accepted, 409 when a reload is already pending); requires
+//!   `--admin-endpoints`, else 404.
+//! * `GET /v1/admin/draft` — bundle-generation status: serving model,
+//!   weights fingerprint, generation counter, swap/restart history.
 //! * `GET /metrics` — Prometheus text format, live server-side aggregate.
 //! * `GET /debug/stats` — latest telemetry snapshot + the windowed ring
 //!   as JSON; `?stream=1` upgrades to an SSE stream pushing each newly
@@ -99,6 +107,15 @@ pub struct ServerConfig {
     /// `specd_faults_injected_total` / `specd_dispatch_retries_total` /
     /// `specd_lanes_salvaged_total` families to `GET /metrics`.
     pub resilience: Option<Arc<crate::faults::Resilience>>,
+    /// Draft-lifecycle control plane shared with the supervisor thread:
+    /// drives `/readyz`, the admin reload/status endpoints, and appends
+    /// the `specd_draft_generation` / `specd_draft_swaps_total` /
+    /// `specd_scheduler_restarts_total` families to `GET /metrics`.
+    pub lifecycle: Option<Arc<crate::lifecycle::Lifecycle>>,
+    /// Expose the mutating `POST /v1/admin/reload-draft` endpoint (and
+    /// the status surface). Off by default: the endpoints 404 unless the
+    /// operator opts in (`--admin-endpoints`).
+    pub admin_endpoints: bool,
 }
 
 impl Default for ServerConfig {
@@ -116,6 +133,8 @@ impl Default for ServerConfig {
             debug_endpoints: false,
             telemetry: None,
             resilience: None,
+            lifecycle: None,
+            admin_endpoints: false,
         }
     }
 }
@@ -373,6 +392,11 @@ fn route(
         ("GET", "/healthz") => {
             respond(&inner.state, w, 200, "text/plain", b"ok\n", keep, &[])
         }
+        ("GET", "/readyz") => readyz(keep, w, inner),
+        ("POST", "/v1/admin/reload-draft") if inner.cfg.admin_endpoints => {
+            admin_reload(req, keep, w, inner)
+        }
+        ("GET", "/v1/admin/draft") if inner.cfg.admin_endpoints => admin_status(keep, w, inner),
         ("GET", "/metrics") => {
             let mut text = inner.state.prometheus();
             if let Some(g) = &inner.cfg.scheduler_gauges {
@@ -383,6 +407,9 @@ fn route(
             }
             if let Some(r) = &inner.cfg.resilience {
                 text.push_str(&r.prometheus_text());
+            }
+            if let Some(lc) = &inner.cfg.lifecycle {
+                text.push_str(&lc.prometheus_text());
             }
             respond(&inner.state, w, 200, "text/plain; version=0.0.4", text.as_bytes(), keep, &[])
         }
@@ -412,11 +439,120 @@ fn route(
                 None => respond_error(&inner.state, w, 404, keep, "unknown request"),
             }
         }
-        (_, "/healthz" | "/metrics" | "/v1/generate") => {
+        (_, "/healthz" | "/readyz" | "/metrics" | "/v1/generate") => {
+            respond_error(&inner.state, w, 405, keep, "method not allowed")
+        }
+        (_, "/v1/admin/reload-draft" | "/v1/admin/draft") if inner.cfg.admin_endpoints => {
             respond_error(&inner.state, w, 405, keep, "method not allowed")
         }
         _ => respond_error(&inner.state, w, 404, keep, "not found"),
     }
+}
+
+// ---------------------------------------------------------------------------
+// /readyz + draft-lifecycle admin surface
+// ---------------------------------------------------------------------------
+
+/// `GET /readyz`: 200 while the scheduler is decoding, 503 with a JSON
+/// reason otherwise. Distinct from `/healthz` (pure liveness) so rolling
+/// restarts and swap quiesces steer traffic without killing the process.
+fn readyz(keep: bool, w: &mut TcpStream, inner: &Inner) -> bool {
+    let reason = if inner.shutdown.load(Ordering::SeqCst) {
+        Some("draining")
+    } else {
+        match &inner.cfg.lifecycle {
+            Some(lc) => {
+                let st = lc.state();
+                if st.ready() {
+                    None
+                } else {
+                    Some(st.name())
+                }
+            }
+            // No lifecycle attached (tests, bench harnesses): readiness
+            // degenerates to liveness.
+            None => None,
+        }
+    };
+    match reason {
+        None => respond(&inner.state, w, 200, "text/plain", b"ready\n", keep, &[]),
+        Some(r) => {
+            let body = ObjWriter::new().bool("ready", false).str("reason", r).finish();
+            respond_with(&inner.state, w, 503, keep, body, &[("retry-after", "1")])
+        }
+    }
+}
+
+/// `POST /v1/admin/reload-draft`: arm the one-deep reload mailbox. The
+/// scheduler picks it up at the next block boundary; staging, validation
+/// and the swap all happen off the HTTP path, so this answers 202
+/// (accepted, in progress) — poll `GET /v1/admin/draft` for the outcome.
+fn admin_reload(req: &HttpRequest, keep: bool, w: &mut TcpStream, inner: &Inner) -> bool {
+    let Some(lc) = &inner.cfg.lifecycle else {
+        return respond_error(&inner.state, w, 503, keep, "lifecycle control plane not attached");
+    };
+    // Optional JSON body: {"model": "<manifest name>"}. Default: re-stage
+    // the serving model's name (in-place bundle re-export).
+    let model = if req.body.is_empty() {
+        None
+    } else {
+        match Value::parse(&req.body_str()) {
+            Ok(v) => match v.get("model") {
+                Value::Null => None,
+                m => match m.as_str() {
+                    Some(s) => Some(s.to_string()),
+                    None => {
+                        return respond_error(&inner.state, w, 400, keep, "'model' must be a string")
+                    }
+                },
+            },
+            Err(e) => {
+                return respond_error(&inner.state, w, 400, keep, &format!("invalid json: {e}"))
+            }
+        }
+    };
+    let model = model.unwrap_or_else(|| lc.serving().0);
+    if !lc.request_reload(crate::lifecycle::ReloadSpec { model: model.clone() }) {
+        return respond_error(&inner.state, w, 409, keep, "a reload is already pending");
+    }
+    let body = ObjWriter::new()
+        .bool("accepted", true)
+        .str("model", &model)
+        .num("generation", lc.generation() as f64)
+        .finish();
+    respond_with(&inner.state, w, 202, keep, body, &[])
+}
+
+/// `GET /v1/admin/draft`: the bundle-generation status surface.
+fn admin_status(keep: bool, w: &mut TcpStream, inner: &Inner) -> bool {
+    let Some(lc) = &inner.cfg.lifecycle else {
+        return respond_error(&inner.state, w, 503, keep, "lifecycle control plane not attached");
+    };
+    let (model, fingerprint, params) = lc.serving();
+    let (adopted, rejected, rolled_back, restarts) = lc.counters();
+    let mut o = ObjWriter::new()
+        .str("state", lc.state().name())
+        .num("generation", lc.generation() as f64)
+        .str("model", &model)
+        .str("fingerprint", &format!("{fingerprint:016x}"))
+        .num("params", params as f64)
+        .num("swaps_adopted", adopted as f64)
+        .num("swaps_rejected", rejected as f64)
+        .num("swaps_rolled_back", rolled_back as f64)
+        .num("scheduler_restarts", restarts as f64);
+    if let Some(p) = lc.pending_reload() {
+        o = o.str("pending_reload", &p);
+    }
+    if let Some(s) = lc.last_swap() {
+        let swap = ObjWriter::new()
+            .str("model", &s.model)
+            .str("outcome", s.outcome)
+            .str("detail", &s.detail)
+            .num("generation", s.generation as f64)
+            .finish();
+        o = o.raw("last_swap", &swap);
+    }
+    respond_with(&inner.state, w, 200, keep, o.finish(), &[])
 }
 
 // ---------------------------------------------------------------------------

@@ -177,6 +177,16 @@ pub enum Kind {
     /// Circuit-breaker transition; a = model (0 draft, 1 target),
     /// b = new state (0 closed, 1 open, 2 half-open).
     Breaker,
+    /// Draft-bundle swap attempt resolved; a = serving generation after
+    /// the attempt, b = outcome (0 adopted, 1 rejected).
+    Swap,
+    /// Guarded adoption rolled back to last-known-good; a = serving
+    /// generation after rollback, b = trigger (0 drift, 1 accept floor,
+    /// 2 breaker open).
+    Rollback,
+    /// Supervisor restarted the scheduler loop after a panic; a = restart
+    /// count, b = residents re-admitted into the fresh loop.
+    SchedRestart,
 }
 
 /// One fixed-size ring entry. `req` is 0 for scheduler-scoped events.
@@ -361,6 +371,22 @@ pub fn salvage(id: u64, tokens_replayed: u64) {
 /// A circuit breaker changed state (model 0 draft / 1 target).
 pub fn breaker(model: u64, state: u64) {
     instant(Kind::Breaker, 0, model, state);
+}
+
+/// A draft-bundle swap attempt resolved (outcome 0 adopted / 1 rejected).
+pub fn swap(generation: u64, outcome: u64) {
+    instant(Kind::Swap, 0, generation, outcome);
+}
+
+/// A guarded adoption rolled back to the last-known-good draft
+/// (reason 0 drift / 1 accept floor / 2 breaker open).
+pub fn rollback(generation: u64, reason: u64) {
+    instant(Kind::Rollback, 0, generation, reason);
+}
+
+/// The supervisor restarted the scheduler loop after a panic.
+pub fn sched_restart(count: u64, readmitted: u64) {
+    instant(Kind::SchedRestart, 0, count, readmitted);
 }
 
 /// Remember the client-facing string ID for a request (bounded; oldest
@@ -618,6 +644,61 @@ fn event_json(ev: &Event) -> String {
                         .finish(),
                 );
         }
+        Kind::Swap => {
+            w = w
+                .num("tid", TID_SCHED as f64)
+                .str("ph", "i")
+                .str("s", "t")
+                .str("name", "draft_swap")
+                .str("cat", "health")
+                .num("ts", ev.ts_us as f64)
+                .raw(
+                    "args",
+                    &ObjWriter::new()
+                        .num("generation", ev.a as f64)
+                        .str("outcome", if ev.b == 0 { "adopted" } else { "rejected" })
+                        .finish(),
+                );
+        }
+        Kind::Rollback => {
+            w = w
+                .num("tid", TID_SCHED as f64)
+                .str("ph", "i")
+                .str("s", "t")
+                .str("name", "draft_rollback")
+                .str("cat", "health")
+                .num("ts", ev.ts_us as f64)
+                .raw(
+                    "args",
+                    &ObjWriter::new()
+                        .num("generation", ev.a as f64)
+                        .str(
+                            "trigger",
+                            match ev.b {
+                                0 => "drift",
+                                1 => "accept_floor",
+                                _ => "breaker_open",
+                            },
+                        )
+                        .finish(),
+                );
+        }
+        Kind::SchedRestart => {
+            w = w
+                .num("tid", TID_SCHED as f64)
+                .str("ph", "i")
+                .str("s", "t")
+                .str("name", "sched_restart")
+                .str("cat", "health")
+                .num("ts", ev.ts_us as f64)
+                .raw(
+                    "args",
+                    &ObjWriter::new()
+                        .num("count", ev.a as f64)
+                        .num("readmitted", ev.b as f64)
+                        .finish(),
+                );
+        }
     }
     w.finish()
 }
@@ -632,6 +713,8 @@ fn site_name(i: u64) -> &'static str {
         3 => "exec:send",
         4 => "io:read",
         5 => "io:write",
+        6 => "swap:stage",
+        7 => "swap:readmit",
         _ => "unknown",
     }
 }

@@ -25,6 +25,7 @@ const MAGIC: &[u8; 6] = b"SPCD1\x00";
 pub struct WeightsFile {
     names: Vec<String>,
     tensors: Vec<Tensor>,
+    fingerprint: u64,
 }
 
 impl WeightsFile {
@@ -38,6 +39,7 @@ impl WeightsFile {
     }
 
     pub fn parse(bytes: &[u8]) -> Result<WeightsFile> {
+        let fingerprint = fnv1a(bytes);
         let mut r = Cursor { bytes, pos: 0 };
         let magic = r.take(6)?;
         if magic != MAGIC {
@@ -74,7 +76,14 @@ impl WeightsFile {
         if !names.windows(2).all(|w| w[0] < w[1]) {
             return Err(Error::Weights("tensor names not in sorted order".into()));
         }
-        Ok(WeightsFile { names, tensors })
+        Ok(WeightsFile { names, tensors, fingerprint })
+    }
+
+    /// FNV-1a over the raw serialized bytes — a cheap content identity for
+    /// the draft-lifecycle status surface (two bundles with the same
+    /// fingerprint are byte-identical files; not a cryptographic digest).
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
     }
 
     pub fn len(&self) -> usize {
@@ -113,6 +122,15 @@ impl WeightsFile {
         }
         Ok(())
     }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
 }
 
 struct Cursor<'a> {
@@ -193,6 +211,20 @@ mod tests {
         assert_eq!(wf.get("a.norm").unwrap().data(), &[0.5, -0.5, 7.0]);
         assert_eq!(wf.get("b.w").unwrap().shape(), &[2, 2]);
         assert_eq!(wf.param_count(), 7);
+    }
+
+    #[test]
+    fn fingerprint_is_content_identity() {
+        let bytes = write(&sample());
+        let a = WeightsFile::parse(&bytes).unwrap().fingerprint();
+        let b = WeightsFile::parse(&bytes).unwrap().fingerprint();
+        assert_eq!(a, b, "same bytes, same fingerprint");
+        let mut flipped = bytes.clone();
+        let last = flipped.len() - 1;
+        flipped[last] ^= 0x01;
+        if let Ok(wf) = WeightsFile::parse(&flipped) {
+            assert_ne!(wf.fingerprint(), a, "bit flip must change the fingerprint");
+        }
     }
 
     #[test]

@@ -324,3 +324,138 @@ fn burst_faults_salvage_and_breaker_cycle() {
     assert!(salvaged >= 1, "no fused failure was salvaged anywhere in the sweep");
     assert!(cycles >= 1, "no draft breaker completed an open->half-open->closed cycle");
 }
+
+// ---- swap domain (ISSUE 10: reload under fire) ----------------------------
+
+/// Serve through the lifecycle supervisor with a reload armed mid-stream
+/// (after request 0's first emitted block) and return the responses plus
+/// the lifecycle handle for outcome assertions.
+fn serve_supervised_reload(
+    f: &common::Fixture,
+    prompts: &[Vec<u32>],
+    max_new: usize,
+) -> (Vec<Response>, std::sync::Arc<specd::lifecycle::Lifecycle>) {
+    use specd::coordinator::Delta;
+    use specd::exec::RecvTimeoutError;
+    use specd::lifecycle::{run_supervised, Lifecycle, ReloadSpec, SupervisorCtx};
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    let cfg = RunConfig { max_slots: 2, swap_guard_blocks: 0, ..RunConfig::default() };
+    let artifacts = common::artifacts_dir();
+    let lc = Arc::new(Lifecycle::new("boot", 0, 0));
+    let draft = f.default_draft();
+    let ctx = SupervisorCtx {
+        rt: f.rt.as_ref(),
+        artifacts_dir: &artifacts,
+        draft_arch: &f.draft_arch,
+        vocab_hash: &f.manifest.vocab_hash,
+        target: &f.target,
+        cfg: &cfg,
+        lifecycle: &lc,
+        draft_breaker: None,
+        gauges: None,
+        telemetry: None,
+        log_requests: false,
+    };
+    let sampling = SamplingConfig::greedy();
+    let mut reqs: Vec<Request> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| Request::new(i as u64, p.clone(), max_new, sampling))
+        .collect();
+    let (ev_tx, ev_rx) = exec::bounded::<Delta>(256);
+    reqs[0].events = Some(ev_tx);
+    let (req_tx, req_rx) = exec::bounded::<Request>(prompts.len().max(1));
+    let (resp_tx, resp_rx) = exec::bounded::<Response>(64);
+    let lc2 = lc.clone();
+    let feeder = std::thread::spawn(move || {
+        for r in reqs {
+            req_tx.send(r).unwrap();
+        }
+        // Arm the reload at request 0's first block, then keep the delta
+        // stream drained to its terminal (a dropped receiver reads as a
+        // client hang-up and would cancel the request).
+        let mut armed = false;
+        let deadline = Instant::now() + Duration::from_secs(120);
+        loop {
+            match ev_rx.recv_timeout(Duration::from_secs(1)) {
+                Ok(Delta::Tokens(_)) if !armed => {
+                    let model = lc2.serving().0;
+                    assert!(lc2.request_reload(ReloadSpec { model }), "reload mailbox busy");
+                    armed = true;
+                }
+                Ok(Delta::Done(_)) | Err(RecvTimeoutError::Closed) => break,
+                Ok(_) => {}
+                Err(RecvTimeoutError::Timeout) => {
+                    assert!(Instant::now() < deadline, "request 0 delta stream stalled");
+                }
+            }
+        }
+        assert!(armed, "request 0 terminated before emitting a block");
+    });
+    let _metrics = run_supervised(&ctx, draft, &req_rx, &resp_tx).unwrap();
+    feeder.join().unwrap();
+    let mut out = Vec::new();
+    while let Some(r) = resp_rx.try_recv() {
+        out.push(r);
+    }
+    assert_eq!(out.len(), prompts.len(), "exactly one terminal per request");
+    (out, lc)
+}
+
+#[test]
+fn mid_stream_reload_under_transient_faults_is_invisible() {
+    require_artifacts!();
+    let _g = fault_guard();
+    faults::disarm();
+    let f = common::Fixture::load();
+    let prompts: Vec<Vec<u32>> = f
+        .suite
+        .take("xsum", 3)
+        .unwrap()
+        .iter()
+        .map(|e| e.prompt.clone())
+        .collect();
+
+    let baseline = {
+        let draft = f.default_draft();
+        tokens_by_id(&serve_greedy(&draft, &f.target, &prompts, 16, 2))
+    };
+
+    // (plan, expected reload outcome): a transient readmit fault must be
+    // absorbed by the swap path's retry (the reload still adopts), while
+    // a staging fault must resolve as a clean rejection that the serving
+    // side never notices. Either way: zero request errors, byte-identical
+    // greedy output vs the unsupervised fault-free run.
+    let cases = [
+        ("", "adopted"),
+        ("seed=13;swap:readmit:after=1", "adopted"),
+        ("seed=13;swap:stage:after=1", "rejected"),
+        ("seed=13;dispatch:run_lanes:every=7;swap:readmit:after=1", "adopted"),
+    ];
+    let injected0 = faults::injected();
+    for (plan, expect) in cases {
+        let (out, lc) = if plan.is_empty() {
+            serve_supervised_reload(&f, &prompts, 16)
+        } else {
+            with_plan(plan, || serve_supervised_reload(&f, &prompts, 16))
+        };
+        assert_no_errors(&out, plan);
+        assert_eq!(
+            tokens_by_id(&out),
+            baseline,
+            "mid-stream reload under plan '{plan}' changed greedy output"
+        );
+        let last = lc.last_swap().expect("the armed reload must resolve");
+        assert_eq!(last.outcome, expect, "plan '{plan}'");
+        let (adopted, rejected, rolled_back, restarts) = lc.counters();
+        assert_eq!(adopted, u64::from(expect == "adopted"), "plan '{plan}'");
+        assert_eq!(rejected, u64::from(expect == "rejected"), "plan '{plan}'");
+        assert_eq!((rolled_back, restarts), (0, 0), "plan '{plan}'");
+    }
+    assert!(
+        faults::injected() > injected0,
+        "the swap-path plans never fired a fault"
+    );
+}

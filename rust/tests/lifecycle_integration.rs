@@ -1,0 +1,701 @@
+//! Lifecycle integration: validated hot draft-bundle swaps, guarded
+//! adoption with automatic rollback, and scheduler-panic supervision,
+//! end to end against the real artifact bundle (ISSUE 10).
+//!
+//! Greedy sampling makes every assertion exact: the emitted tokens equal
+//! the target's greedy decode regardless of which draft (or no draft at
+//! all) proposed them, so a mid-stream swap, a rollback, or a supervised
+//! restart must reproduce the undisturbed run byte for byte — any
+//! divergence is a real bug in the dismantle / re-admit machinery, not
+//! rng drift.
+//!
+//! The tests drive a live supervisor from a second thread: the scheduler
+//! (and all PJRT state) stays on the test thread inside
+//! [`run_supervised`], while a driver thread feeds requests, arms
+//! reloads, trips chaos hooks, and forces guard triggers through the
+//! shared [`Lifecycle`] / breaker / telemetry handles.
+
+mod common;
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use specd::config::{RunConfig, SamplingConfig};
+use specd::coordinator::{Delta, Request, Response};
+use specd::exec::{self, RecvTimeoutError, Receiver, Sender};
+use specd::faults::Resilience;
+use specd::lifecycle::{
+    run_supervised, Lifecycle, ReloadSpec, State, SupervisorCtx, RESTART_STORM_CAP,
+};
+use specd::telemetry::{IterSample, Telemetry, TelemetryConfig};
+
+/// Hard edge on every polling wait: a broken supervisor must fail the
+/// test loudly instead of hanging CI.
+const WAIT: Duration = Duration::from_secs(120);
+
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !cond() {
+        assert!(t0.elapsed() < WAIT, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+fn greedy_reqs(prompts: &[Vec<u32>], max_new: usize) -> Vec<Request> {
+    prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| Request::new(i as u64, p.clone(), max_new, SamplingConfig::greedy()))
+        .collect()
+}
+
+fn tokens_by_id(responses: &[Response]) -> BTreeMap<u64, Vec<u32>> {
+    let map: BTreeMap<u64, Vec<u32>> =
+        responses.iter().map(|r| (r.id, r.tokens.clone())).collect();
+    assert_eq!(map.len(), responses.len(), "duplicate terminal for a request id");
+    map
+}
+
+fn assert_no_errors(responses: &[Response], ctx: &str) {
+    for r in responses {
+        assert!(r.error.is_none(), "{ctx}: request {} failed: {:?}", r.id, r.error);
+    }
+}
+
+struct Run {
+    result: specd::Result<specd::metrics::ServeMetrics>,
+    responses: Vec<Response>,
+}
+
+/// Run the supervisor on this thread (PJRT state is thread-bound) while
+/// `driver` pushes requests and pokes lifecycle handles from a second
+/// thread. The driver owns the request sender: the channel closes — and
+/// the supervisor drains — when the driver returns.
+#[allow(clippy::too_many_arguments)]
+fn run_lifecycle(
+    f: &common::Fixture,
+    artifacts_dir: &str,
+    cfg: &RunConfig,
+    lc: &Arc<Lifecycle>,
+    telemetry: Option<Arc<Telemetry>>,
+    resilience: Option<&Resilience>,
+    reqs: Vec<Request>,
+    driver: impl FnOnce(Sender<Request>) + Send + 'static,
+) -> Run {
+    let mut draft = f.default_draft();
+    let draft_breaker = resilience.map(|r| r.draft.clone());
+    if let Some(b) = &draft_breaker {
+        draft.set_breaker(b.clone());
+    }
+    let ctx = SupervisorCtx {
+        rt: f.rt.as_ref(),
+        artifacts_dir,
+        draft_arch: &f.draft_arch,
+        vocab_hash: &f.manifest.vocab_hash,
+        target: &f.target,
+        cfg,
+        lifecycle: lc,
+        draft_breaker,
+        gauges: None,
+        telemetry,
+        log_requests: false,
+    };
+    let (req_tx, req_rx) = exec::bounded::<Request>(64);
+    let (resp_tx, resp_rx) = exec::bounded::<Response>(64);
+    let feeder = std::thread::spawn(move || {
+        for r in reqs {
+            req_tx.send(r).unwrap();
+        }
+        driver(req_tx);
+    });
+    let result = run_supervised(&ctx, draft, &req_rx, &resp_tx);
+    feeder.join().expect("driver thread");
+    let mut responses = Vec::new();
+    while let Some(r) = resp_rx.try_recv() {
+        responses.push(r);
+    }
+    Run { result, responses }
+}
+
+/// Drain a request's delta stream until its terminal, calling `on_tokens`
+/// at every emitted block. Keeps the channel connected (a dropped
+/// receiver reads as a client hang-up) and prevents the bounded stream
+/// from backpressuring the scheduler.
+fn drain_deltas(ev_rx: &Receiver<Delta>, mut on_tokens: impl FnMut()) {
+    let deadline = Instant::now() + WAIT;
+    loop {
+        match ev_rx.recv_timeout(Duration::from_secs(1)) {
+            Ok(Delta::Tokens(_)) => on_tokens(),
+            Ok(Delta::Done(_)) | Err(RecvTimeoutError::Closed) => return,
+            Ok(_) => {}
+            Err(RecvTimeoutError::Timeout) => {
+                assert!(Instant::now() < deadline, "timed out draining the delta stream");
+            }
+        }
+    }
+}
+
+fn xsum_prompts(f: &common::Fixture, n: usize) -> Vec<Vec<u32>> {
+    f.suite.take("xsum", n).unwrap().iter().map(|e| e.prompt.clone()).collect()
+}
+
+// ---- bundle cloning (corrupt-candidate construction) ----------------------
+
+static CLONE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Clone the serving bundle's manifest + golden probes + ONE model's
+/// weights into a temp dir, passing the weight bytes through `mutate`.
+/// `stage_draft` reads nothing else, so this is a complete staging
+/// candidate.
+fn clone_bundle(f: &common::Fixture, model: &str, mutate: impl FnOnce(&mut Vec<u8>)) -> PathBuf {
+    let n = CLONE_SEQ.fetch_add(1, Ordering::Relaxed);
+    let dir =
+        std::env::temp_dir().join(format!("specd-lifecycle-{}-{n}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let src = PathBuf::from(common::artifacts_dir());
+    std::fs::copy(src.join("manifest.json"), dir.join("manifest.json")).unwrap();
+    if src.join("golden.json").exists() {
+        std::fs::copy(src.join("golden.json"), dir.join("golden.json")).unwrap();
+    }
+    let rel = f.manifest.model(model).unwrap().weights_rel.clone();
+    let mut bytes = std::fs::read(f.manifest.weights_path(model).unwrap()).unwrap();
+    mutate(&mut bytes);
+    let dst = dir.join(&rel);
+    if let Some(parent) = dst.parent() {
+        std::fs::create_dir_all(parent).unwrap();
+    }
+    std::fs::write(dst, bytes).unwrap();
+    dir
+}
+
+// ---- staged validation (direct) -------------------------------------------
+
+#[test]
+fn staging_rejects_corrupt_and_incompatible_bundles() {
+    require_artifacts!();
+    let f = common::Fixture::load();
+    let name = f.default_draft().name;
+    let artifacts = common::artifacts_dir();
+
+    // Control: a pristine clone must stage (the rejections below are then
+    // attributable to the corruption, not to the cloning).
+    let clean = clone_bundle(&f, &name, |_| {});
+    f.rt
+        .stage_draft(clean.to_str().unwrap(), &f.draft_arch, &f.manifest.vocab_hash, &name)
+        .expect("pristine bundle clone must stage");
+
+    // Vocabulary identity is a hard gate.
+    assert!(
+        f.rt.stage_draft(&artifacts, &f.draft_arch, "not-the-serving-hash", &name).is_err(),
+        "mismatched vocab hash must reject"
+    );
+    // Unknown candidate name.
+    assert!(f
+        .rt
+        .stage_draft(&artifacts, &f.draft_arch, &f.manifest.vocab_hash, "no_such_model")
+        .is_err());
+
+    // Truncated weights: the byte-level load fails.
+    let truncated = clone_bundle(&f, &name, |b| {
+        let keep = b.len().saturating_sub(16);
+        b.truncate(keep);
+    });
+    assert!(
+        f.rt.stage_draft(
+            truncated.to_str().unwrap(),
+            &f.draft_arch,
+            &f.manifest.vocab_hash,
+            &name
+        )
+        .is_err(),
+        "truncated weights must reject"
+    );
+
+    // Corrupt header: not an SPCD1 file at all.
+    let bad_magic = clone_bundle(&f, &name, |b| b[0] ^= 0xff);
+    assert!(f
+        .rt
+        .stage_draft(bad_magic.to_str().unwrap(), &f.draft_arch, &f.manifest.vocab_hash, &name)
+        .is_err());
+
+    // Well-formed file, garbage numerics: sign/exponent bits flipped
+    // across the back half of the file (tensor data). Only the bundle's
+    // own golden probes can catch this class of corruption.
+    let golden = std::fs::read_to_string(PathBuf::from(&artifacts).join("golden.json"))
+        .unwrap_or_default();
+    if golden.contains(&format!("\"{name}\"")) {
+        let flipped = clone_bundle(&f, &name, |b| {
+            let mut i = b.len() / 2;
+            while i < b.len() {
+                b[i] ^= 0x80;
+                i += 4093;
+            }
+        });
+        assert!(
+            f.rt.stage_draft(
+                flipped.to_str().unwrap(),
+                &f.draft_arch,
+                &f.manifest.vocab_hash,
+                &name
+            )
+            .is_err(),
+            "bit-flipped weights must fail the golden probes"
+        );
+        let _ = std::fs::remove_dir_all(&flipped);
+    } else {
+        eprintln!("no golden probe for {name}; skipping the numeric-garbage case");
+    }
+    for d in [clean, truncated, bad_magic] {
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}
+
+// ---- hot swap --------------------------------------------------------------
+
+#[test]
+fn mid_stream_swap_is_zero_drop_and_token_identical() {
+    require_artifacts!();
+    let f = common::Fixture::load();
+    let prompts = xsum_prompts(&f, 3);
+    let max_new = 32;
+    let cfg = RunConfig { max_slots: 2, swap_guard_blocks: 0, ..RunConfig::default() };
+    let artifacts = common::artifacts_dir();
+
+    // Undisturbed supervised run = the byte-identity reference.
+    let base_lc = Arc::new(Lifecycle::new("boot", 0, 0));
+    let base = run_lifecycle(
+        &f,
+        &artifacts,
+        &cfg,
+        &base_lc,
+        None,
+        None,
+        greedy_reqs(&prompts, max_new),
+        |_tx| {},
+    );
+    base.result.expect("baseline serve");
+    assert_no_errors(&base.responses, "baseline");
+    let baseline = tokens_by_id(&base.responses);
+    assert_eq!(baseline.len(), prompts.len());
+
+    // Swap run: request 0 streams deltas; the driver arms the reload only
+    // after the first emitted block, so the swap is provably mid-stream.
+    let lc = Arc::new(Lifecycle::new("boot", 0, 0));
+    let (ev_tx, ev_rx) = exec::bounded::<Delta>(256);
+    let mut reqs = greedy_reqs(&prompts, max_new);
+    reqs[0].events = Some(ev_tx);
+    let lc2 = lc.clone();
+    let run = run_lifecycle(&f, &artifacts, &cfg, &lc, None, None, reqs, move |_tx| {
+        let mut armed = false;
+        drain_deltas(&ev_rx, || {
+            if !armed {
+                let model = lc2.serving().0;
+                assert!(lc2.request_reload(ReloadSpec { model }), "mailbox must be empty");
+                armed = true;
+            }
+        });
+        assert!(armed, "request 0 terminated without emitting a block");
+        // Zero-drop gate: every terminal the swap path owes has fired
+        // before the channel closes.
+        wait_until("post-swap registry drain", || lc2.registry_len() == 0);
+    });
+    run.result.expect("swapped serve");
+    assert_no_errors(&run.responses, "swap run");
+    assert_eq!(
+        tokens_by_id(&run.responses),
+        baseline,
+        "mid-stream swap changed greedy output"
+    );
+    let (adopted, rejected, rolled_back, restarts) = lc.counters();
+    assert_eq!((adopted, rejected, rolled_back, restarts), (1, 0, 0, 0));
+    assert_eq!(lc.generation(), 2, "adoption bumps the generation");
+    assert_eq!(lc.state(), State::Serving, "unguarded adoption returns to serving");
+    let last = lc.last_swap().expect("swap recorded");
+    assert_eq!(last.outcome, "adopted");
+}
+
+#[test]
+fn corrupt_reload_is_rejected_with_zero_serving_impact() {
+    require_artifacts!();
+    let f = common::Fixture::load();
+    let prompts = xsum_prompts(&f, 2);
+    let max_new = 24;
+    let cfg = RunConfig { max_slots: 2, ..RunConfig::default() };
+    let artifacts = common::artifacts_dir();
+    let draft_name = f.default_draft().name;
+
+    let base_lc = Arc::new(Lifecycle::new("boot", 0, 0));
+    let base = run_lifecycle(
+        &f,
+        &artifacts,
+        &cfg,
+        &base_lc,
+        None,
+        None,
+        greedy_reqs(&prompts, max_new),
+        |_tx| {},
+    );
+    base.result.expect("baseline serve");
+    let baseline = tokens_by_id(&base.responses);
+
+    // The supervisor stages reloads from a bundle whose weights are
+    // truncated: the reload must be rejected and serving must not notice.
+    let corrupt = clone_bundle(&f, &draft_name, |b| {
+        let keep = b.len().saturating_sub(32);
+        b.truncate(keep);
+    });
+    let lc = Arc::new(Lifecycle::new("boot", 0, 0));
+    let (ev_tx, ev_rx) = exec::bounded::<Delta>(256);
+    let mut reqs = greedy_reqs(&prompts, max_new);
+    reqs[0].events = Some(ev_tx);
+    let lc2 = lc.clone();
+    let model = draft_name.clone();
+    let run = run_lifecycle(
+        &f,
+        corrupt.to_str().unwrap(),
+        &cfg,
+        &lc,
+        None,
+        None,
+        reqs,
+        move |_tx| {
+            let mut armed = false;
+            drain_deltas(&ev_rx, || {
+                if !armed {
+                    assert!(lc2.request_reload(ReloadSpec { model: model.clone() }));
+                    armed = true;
+                }
+            });
+            assert!(armed, "request 0 terminated without emitting a block");
+        },
+    );
+    run.result.expect("serve with rejected reload");
+    assert_no_errors(&run.responses, "rejected-reload run");
+    assert_eq!(
+        tokens_by_id(&run.responses),
+        baseline,
+        "a rejected reload must not perturb serving output"
+    );
+    let (adopted, rejected, rolled_back, _) = lc.counters();
+    assert_eq!((adopted, rejected, rolled_back), (0, 1, 0));
+    assert_eq!(lc.generation(), 1, "rejection never bumps the generation");
+    let last = lc.last_swap().expect("rejection recorded");
+    assert_eq!(last.outcome, "rejected");
+    assert!(!last.detail.is_empty(), "rejection must carry its cause");
+    let _ = std::fs::remove_dir_all(&corrupt);
+}
+
+// ---- guarded adoption + rollback ------------------------------------------
+
+#[test]
+fn breaker_open_during_guard_rolls_back() {
+    require_artifacts!();
+    let f = common::Fixture::load();
+    let prompts = xsum_prompts(&f, 2);
+    let max_new = 64;
+    // A guard window far longer than the run: only a trigger can end it.
+    let cfg = RunConfig {
+        max_slots: 2,
+        swap_guard_blocks: 100_000,
+        swap_accept_floor: 0.0,
+        ..RunConfig::default()
+    };
+    let artifacts = common::artifacts_dir();
+    let draft_name = f.default_draft().name;
+
+    let base_lc = Arc::new(Lifecycle::new("boot", 0, 0));
+    let base = run_lifecycle(
+        &f,
+        &artifacts,
+        &cfg,
+        &base_lc,
+        None,
+        None,
+        greedy_reqs(&prompts, max_new),
+        |_tx| {},
+    );
+    base.result.expect("baseline serve");
+    let baseline = tokens_by_id(&base.responses);
+
+    let r = Resilience::new(1, Duration::ZERO);
+    let breaker = r.draft.clone();
+    let lc = Arc::new(Lifecycle::new("boot", 0, 0));
+    let lc2 = lc.clone();
+    let ka_prompt = prompts[0].clone();
+    let model = draft_name.clone();
+    let run = run_lifecycle(
+        &f,
+        &artifacts,
+        &cfg,
+        &lc,
+        None,
+        Some(&r),
+        greedy_reqs(&prompts, max_new),
+        move |req_tx| {
+            assert!(lc2.request_reload(ReloadSpec { model }));
+            wait_until("guarded adoption", || lc2.generation() >= 2);
+            // The NEW draft's circuit opens inside the guard window.
+            breaker.record_failure();
+            // Keep the scheduler loop turning until the guard notices
+            // (guard triggers are evaluated at block boundaries only).
+            let mut next_id = 100u64;
+            let t0 = Instant::now();
+            while lc2.counters().2 < 1 {
+                assert!(t0.elapsed() < WAIT, "timed out waiting for rollback");
+                if lc2.registry_len() == 0 {
+                    req_tx
+                        .send(Request::new(
+                            next_id,
+                            ka_prompt.clone(),
+                            4,
+                            SamplingConfig::greedy(),
+                        ))
+                        .unwrap();
+                    next_id += 1;
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        },
+    );
+    run.result.expect("rollback serve");
+    assert_no_errors(&run.responses, "rollback run");
+    let by_id = tokens_by_id(&run.responses);
+    for (id, toks) in &baseline {
+        assert_eq!(by_id.get(id), Some(toks), "request {id} diverged across swap+rollback");
+    }
+    let (adopted, rejected, rolled_back, restarts) = lc.counters();
+    assert_eq!((adopted, rejected, rolled_back, restarts), (1, 0, 1, 0));
+    assert_eq!(lc.generation(), 3, "adoption + rollback are two serving changes");
+    let last = lc.last_swap().expect("rollback recorded");
+    assert_eq!(last.outcome, "rolled_back");
+    assert_eq!(last.detail, "breaker_open");
+    assert_eq!(lc.state(), State::Serving);
+}
+
+#[test]
+fn drift_fire_during_guard_rolls_back() {
+    require_artifacts!();
+    let f = common::Fixture::load();
+    let prompts = xsum_prompts(&f, 2);
+    let max_new = 64;
+    let cfg = RunConfig {
+        max_slots: 2,
+        swap_guard_blocks: 100_000,
+        swap_accept_floor: 0.0,
+        ..RunConfig::default()
+    };
+    let artifacts = common::artifacts_dir();
+    let draft_name = f.default_draft().name;
+
+    // A 1e5-second window means the scheduler's real-clock feeds (uptime
+    // seconds) can never seal a window; only the driver's far-future
+    // synthetic clock does, so the drift statistic advances exactly when
+    // the driver says so and the CUSUM sequence is deterministic.
+    let telemetry = Telemetry::new(TelemetryConfig {
+        window: 1e5,
+        ring: 16,
+        ..TelemetryConfig::default()
+    });
+    let lc = Arc::new(Lifecycle::new("boot", 0, 0));
+    let lc2 = lc.clone();
+    let tl = telemetry.clone();
+    let ka_prompt = prompts[0].clone();
+    let model = draft_name.clone();
+    let run = run_lifecycle(
+        &f,
+        &artifacts,
+        &cfg,
+        &lc,
+        Some(telemetry.clone()),
+        None,
+        greedy_reqs(&prompts, max_new),
+        move |req_tx| {
+            assert!(lc2.request_reload(ReloadSpec { model }));
+            wait_until("guarded adoption", || lc2.generation() >= 2);
+            // Establish a healthy acceptance baseline (the synthetic
+            // volume dwarfs the real per-window counts), then collapse
+            // it: the CUSUM fires within one window.
+            let sample = IterSample::default();
+            for k in 1..=8u32 {
+                tl.on_block(0, 9_000, 10_000, 1_000, None);
+                tl.step_at(1e6 * f64::from(k), &sample);
+            }
+            assert!(!tl.drift_active(), "baseline windows must not fire drift");
+            tl.on_block(0, 0, 1_000_000, 0, None);
+            tl.step_at(9e6, &sample);
+            assert!(tl.drift_active(), "acceptance collapse must fire the CUSUM");
+            let mut next_id = 100u64;
+            let t0 = Instant::now();
+            while lc2.counters().2 < 1 {
+                assert!(t0.elapsed() < WAIT, "timed out waiting for drift rollback");
+                if lc2.registry_len() == 0 {
+                    req_tx
+                        .send(Request::new(
+                            next_id,
+                            ka_prompt.clone(),
+                            4,
+                            SamplingConfig::greedy(),
+                        ))
+                        .unwrap();
+                    next_id += 1;
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        },
+    );
+    run.result.expect("drift-rollback serve");
+    assert_no_errors(&run.responses, "drift-rollback run");
+    let (adopted, rejected, rolled_back, _) = lc.counters();
+    assert_eq!((adopted, rejected, rolled_back), (1, 0, 1));
+    let last = lc.last_swap().expect("rollback recorded");
+    assert_eq!(last.outcome, "rolled_back");
+    assert_eq!(last.detail, "drift");
+    assert_eq!(lc.state(), State::Serving);
+}
+
+// ---- scheduler supervision -------------------------------------------------
+
+#[test]
+fn scheduler_panic_restart_preserves_every_request() {
+    require_artifacts!();
+    let f = common::Fixture::load();
+    let prompts = xsum_prompts(&f, 3);
+    let max_new = 32;
+    let cfg = RunConfig { max_slots: 2, swap_guard_blocks: 0, ..RunConfig::default() };
+    let artifacts = common::artifacts_dir();
+
+    let base_lc = Arc::new(Lifecycle::new("boot", 0, 0));
+    let base = run_lifecycle(
+        &f,
+        &artifacts,
+        &cfg,
+        &base_lc,
+        None,
+        None,
+        greedy_reqs(&prompts, max_new),
+        |_tx| {},
+    );
+    base.result.expect("baseline serve");
+    let baseline = tokens_by_id(&base.responses);
+
+    let lc = Arc::new(Lifecycle::new("boot", 0, 0));
+    let (ev_tx, ev_rx) = exec::bounded::<Delta>(256);
+    let mut reqs = greedy_reqs(&prompts, max_new);
+    reqs[0].events = Some(ev_tx);
+    let lc2 = lc.clone();
+    let run = run_lifecycle(&f, &artifacts, &cfg, &lc, None, None, reqs, move |_tx| {
+        let mut tripped = false;
+        drain_deltas(&ev_rx, || {
+            if !tripped {
+                // Mid-stream: request 0 has emitted at least one block.
+                lc2.trip_scheduler_panic();
+                tripped = true;
+            }
+        });
+        assert!(tripped);
+    });
+    run.result.expect("supervised restart serve");
+    assert_no_errors(&run.responses, "restart run");
+    assert_eq!(
+        tokens_by_id(&run.responses),
+        baseline,
+        "a supervised restart changed greedy output"
+    );
+    assert_eq!(lc.counters().3, 1, "exactly one supervised restart");
+    assert_eq!(lc.state(), State::Serving);
+    assert_eq!(lc.registry_len(), 0, "every request reached its terminal");
+}
+
+#[test]
+fn restart_storm_strands_each_request_exactly_once() {
+    require_artifacts!();
+    let f = common::Fixture::load();
+    let prompts = xsum_prompts(&f, 2);
+    // Long enough that the resident requests cannot finish between the
+    // storm's panics.
+    let max_new = 96;
+    let cfg = RunConfig {
+        max_slots: 2,
+        max_new_tokens: 128,
+        swap_guard_blocks: 0,
+        ..RunConfig::default()
+    };
+    let artifacts = common::artifacts_dir();
+
+    let lc = Arc::new(Lifecycle::new("boot", 0, 0));
+    let lc2 = lc.clone();
+    let ka_prompt = prompts[0].clone();
+    let n_main = prompts.len() as u64;
+    let run = run_lifecycle(
+        &f,
+        &artifacts,
+        &cfg,
+        &lc,
+        None,
+        None,
+        greedy_reqs(&prompts, max_new),
+        move |req_tx| {
+            let mut next_id = 100u64;
+            // CAP panics restart; the (CAP+1)th inside the window is a
+            // crash loop and must strand the registry instead.
+            for _ in 0..=RESTART_STORM_CAP {
+                if lc2.registry_len() == 0 {
+                    // Residents finished between trips: seed a fresh
+                    // long-running request so there is something to
+                    // strand/resume (admission also wakes an idle loop).
+                    let _ = req_tx.send(Request::new(
+                        next_id,
+                        ka_prompt.clone(),
+                        64,
+                        SamplingConfig::greedy(),
+                    ));
+                    next_id += 1;
+                }
+                wait_until("a resident request", || lc2.registry_len() > 0);
+                let before = lc2.counters().3;
+                lc2.trip_scheduler_panic();
+                let t0 = Instant::now();
+                while lc2.counters().3 <= before {
+                    assert!(t0.elapsed() < WAIT, "timed out waiting for a restart");
+                    if lc2.registry_len() == 0 {
+                        // Scheduler went idle with the trip still armed:
+                        // wake it so the next block boundary fires.
+                        let _ = req_tx.send(Request::new(
+                            next_id,
+                            ka_prompt.clone(),
+                            64,
+                            SamplingConfig::greedy(),
+                        ));
+                        next_id += 1;
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            }
+        },
+    );
+    assert!(run.result.is_err(), "a crash-looping scheduler must fail the serve call");
+    // One-terminal invariant under the worst case: ids are unique across
+    // every response, and each main request got exactly one terminal.
+    let mut seen: BTreeMap<u64, u32> = BTreeMap::new();
+    for r in &run.responses {
+        *seen.entry(r.id).or_insert(0) += 1;
+    }
+    for (id, count) in &seen {
+        assert_eq!(*count, 1, "request {id} received {count} terminals");
+    }
+    for id in 0..n_main {
+        assert!(seen.contains_key(&id), "main request {id} never got a terminal");
+    }
+    assert!(
+        run.responses
+            .iter()
+            .any(|r| r.error.as_deref().is_some_and(|e| e.contains("restart storm"))),
+        "at least one resident must be stranded by the storm"
+    );
+    assert_eq!(lc.registry_len(), 0, "the storm path must drain the registry");
+    assert_eq!(lc.counters().3 as usize, RESTART_STORM_CAP + 1);
+}

@@ -37,6 +37,14 @@ echo "== chaos suite (seeded fault injection) =="
 # dispatch-domain sweeps self-skip without a model bundle.
 cargo test -q --test chaos_integration
 
+echo "== lifecycle suite (hot swap / rollback / supervision) =="
+# Draft-lifecycle gate: mid-stream bundle swap byte-identical with zero
+# drops, corrupt/incompatible candidates rejected with zero serving
+# impact, breaker- and drift-triggered rollbacks, scheduler-panic
+# recovery with exactly one terminal per request, and the restart-storm
+# backstop. All tests self-skip without a model bundle.
+cargo test -q --test lifecycle_integration
+
 echo "== batched golden probes (artifact-gated) =="
 if compgen -G "artifacts/hlo/*/verify.b*.hlo.txt" > /dev/null; then
     # Bundle exports batched [B, T] entry points: run the fused-dispatch
